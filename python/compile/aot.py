@@ -1,0 +1,208 @@
+"""AOT build: lower the L2/L1 stack to HLO **text** artifacts + goldens.
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits into the output directory:
+
+* ``precond_hbmc.hlo.txt`` — z = (LLᵀ)⁻¹ r (Pallas HBMC trisolve inside)
+* ``spmv_sell.hlo.txt``    — y = A x (Pallas SELL SpMV inside)
+* ``pcg_step.hlo.txt``     — one fused PCG iteration
+* ``meta.txt``             — canonical-problem metadata (kvtext)
+* ``golden.txt``           — cross-layer golden vectors + the python HBMC
+  permutation (rust tests assert its ordering machinery agrees exactly)
+* ``manifest.json``        — human-readable build summary
+
+HLO *text* is the interchange format: jax ≥ 0.5 serializes protos with
+64-bit instruction ids that xla_extension 0.5.1 (the published ``xla``
+crate's XLA) rejects; the text parser reassigns ids. See
+``/opt/xla-example/README.md``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from . import ordering, problems
+from .kernels import ref
+from .model import CanonicalModel
+
+# Canonical problem: 16×16 five-point grid (Fig. 4.5's setting), bs=4, w=4.
+NX, NY = 16, 16
+BS, W = 4, 4
+SEED = 20260710
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (see module docstring)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default elides big
+    # constant tensors as `{...}`, which the 0.5.1 text parser silently
+    # reads back as zeros — the baked matrix would vanish.
+    return comp.as_hlo_text(True)
+
+
+def kv_lines(pairs) -> str:
+    out = []
+    for k, v in pairs:
+        if isinstance(v, (list, tuple, np.ndarray)):
+            arr = np.asarray(v).reshape(-1)
+            if arr.dtype.kind == "f":
+                body = " ".join(f"{x:.17e}" for x in arr)
+            else:
+                body = " ".join(str(int(x)) for x in arr)
+            out.append(f"{k} = {body}")
+        elif isinstance(v, float):
+            out.append(f"{k} = {v:.17e}")
+        else:
+            out.append(f"{k} = {v}")
+    return "\n".join(out) + "\n"
+
+
+def build_canonical():
+    """Canonical problem + HBMC ordering + model; returns all pieces."""
+    a = problems.laplace2d(NX, NY)
+    ord_ = ordering.hbmc_order(a, BS, W)
+    a_perm = ordering.permute_padded(a, ord_.new_of_old, ord_.n_new)
+    model = CanonicalModel(a_perm, ord_.color_ptr, BS, W)
+    return a, ord_, a_perm, model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    a, ord_, a_perm, model = build_canonical()
+    n, n_aug = a.shape[0], ord_.n_new
+    rng = np.random.default_rng(SEED)
+
+    # ---- golden vectors (computed via the numpy structured reference and
+    # cross-checked against the jax/Pallas path before writing) ----------
+    r = rng.uniform(-1.0, 1.0, size=n_aug)
+    y_ref = ref.forward_structured(model.data, r)
+    z_ref = ref.backward_structured(model.data, y_ref)
+    z_jax = np.asarray(model.precond_apply(jnp.asarray(r)))
+    assert np.max(np.abs(z_jax - z_ref)) < 1e-11, "pallas != structured ref"
+    z_serial = ref.precond_serial(model.lower, model.diag, r)
+    assert np.max(np.abs(z_ref - z_serial)) < 1e-11, "structured != serial"
+
+    x = rng.uniform(-1.0, 1.0, size=n_aug)
+    spmv_y_ref = np.asarray(a_perm @ x)
+    spmv_y_jax = np.asarray(model.spmv(jnp.asarray(x)))
+    assert np.max(np.abs(spmv_y_jax - spmv_y_ref)) < 1e-11, "pallas spmv != csr"
+
+    # A short PCG run for the pcg_step golden.
+    b = np.asarray(a_perm @ np.ones(n_aug))
+    xx = np.zeros(n_aug)
+    rr_vec = b - a_perm @ xx
+    zz = ref.precond_serial(model.lower, model.diag, rr_vec)
+    pp = zz.copy()
+    rz = float(rr_vec @ zz)
+    state = (jnp.asarray(xx), jnp.asarray(rr_vec), jnp.asarray(pp), jnp.asarray(rz))
+    rr_history = []
+    for _ in range(5):
+        out = model.pcg_step(*state)
+        rr_history.append(float(out[5]))
+        state = (out[0], out[1], out[3], out[4])
+    assert rr_history[-1] < rr_history[0], "pcg_step must reduce the residual"
+
+    # ---- lower to HLO text ---------------------------------------------
+    spec = jax.ShapeDtypeStruct((n_aug,), jnp.float64)
+    scalar = jax.ShapeDtypeStruct((), jnp.float64)
+
+    def precond_fn(rv):
+        return (model.precond_apply(rv),)
+
+    def spmv_fn(xv):
+        return (model.spmv(xv),)
+
+    def pcg_fn(xv, rv, pv, rzv):
+        return model.pcg_step(xv, rv, pv, rzv)
+
+    artifacts = {
+        "precond_hbmc": jax.jit(precond_fn).lower(spec),
+        "spmv_sell": jax.jit(spmv_fn).lower(spec),
+        "pcg_step": jax.jit(pcg_fn).lower(spec, spec, spec, scalar),
+    }
+    sizes = {}
+    for name, lowered in artifacts.items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        sizes[name] = len(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # ---- meta.txt --------------------------------------------------------
+    meta = kv_lines([
+        ("n_orig", n),
+        ("n_aug", n_aug),
+        ("bs", BS),
+        ("w", W),
+        ("num_colors", ord_.num_colors),
+        ("color_ptr", ord_.color_ptr),
+        ("nx", NX),
+        ("ny", NY),
+        ("seed", SEED),
+    ])
+    with open(os.path.join(args.out, "meta.txt"), "w") as f:
+        f.write("# canonical AOT problem metadata (kvtext)\n" + meta)
+
+    # ---- golden.txt ------------------------------------------------------
+    coo = a.tocoo()
+    golden = kv_lines([
+        ("n", n),
+        ("n_aug", n_aug),
+        ("bs", BS),
+        ("w", W),
+        ("num_colors", ord_.num_colors),
+        ("color_ptr", ord_.color_ptr),
+        ("mat_rows", coo.row),
+        ("mat_cols", coo.col),
+        ("mat_vals", coo.data),
+        ("hbmc_new_of_old", ord_.new_of_old),
+        ("bmc_new_of_old", ord_.bmc.new_of_old),
+        ("bmc_color_ptr", ord_.bmc.color_ptr),
+        ("factor_diag", model.diag),
+        ("precond_r", r),
+        ("precond_z", z_ref),
+        ("spmv_x", x),
+        ("spmv_y", spmv_y_ref),
+        ("pcg_rr_history", np.asarray(rr_history)),
+    ])
+    with open(os.path.join(args.out, "golden.txt"), "w") as f:
+        f.write("# cross-layer golden data (kvtext)\n" + golden)
+
+    # ---- manifest --------------------------------------------------------
+    manifest = {
+        "canonical_problem": {
+            "grid": [NX, NY], "n": n, "n_aug": n_aug, "bs": BS, "w": W,
+            "num_colors": ord_.num_colors,
+        },
+        "artifacts": {f"{k}.hlo.txt": v for k, v in sizes.items()},
+        "format": "HLO text (xla_extension 0.5.1-compatible)",
+        "pallas": "interpret=True (CPU PJRT)",
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out}/manifest.json, meta.txt, golden.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""L1 Pallas kernels: the HBMC vectorized triangular substitution (§4.3).
+
+One ``pallas_call`` per (color, direction): the grid runs over the color's
+level-1 blocks — the multithreading axis of the paper — and the kernel body
+performs the ``bs`` sequential steps, each a ``w``-wide vector operation
+over the level-2 block lanes (the SIMD axis). On TPU the natural mapping is
+one level-1 block's slabs in VMEM per grid step with the ``w`` lanes on the
+VPU minor dimension; here the kernels run with ``interpret=True`` (the CPU
+PJRT plugin cannot execute Mosaic custom-calls) so the same HLO runs
+anywhere, which is the property the AOT path needs.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): the paper's
+AVX-512 gather becomes a jnp ``take`` from the already-computed vector; the
+in-block couplings are lane-diagonal by the HBMC level-2 theorem, so they
+are plain element-wise FMAs — no cross-lane traffic at all, which is the
+TPU-friendly restatement of the paper's key structural insight.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _color_kernel(off_val_ref, off_col_ref, in_coef_ref, dinv_ref, rseg_ref,
+                  prev_ref, out_ref, *, bs: int, w: int, reverse: bool):
+    """Solve all level-2 steps of one level-1 block.
+
+    Block shapes (leading grid axis of size 1 squeezed by indexing):
+      off_val/off_col: (1, bs, K, w); in_coef: (1, bs, bs, w);
+      dinv/rseg/out:   (1, bs, w);    prev: full (n,) vector.
+    """
+    prev = prev_ref[...]  # already-computed colors (full vector)
+    acc = [None] * bs
+    steps = range(bs - 1, -1, -1) if reverse else range(bs)
+    for l in steps:
+        t = rseg_ref[0, l]  # (w,)
+        cols = off_col_ref[0, l]  # (K, w)
+        vals = off_val_ref[0, l]
+        t = t - jnp.sum(vals * prev[cols], axis=0)
+        inner = range(l + 1, bs) if reverse else range(l)
+        for m in inner:
+            t = t - in_coef_ref[0, l, m] * acc[m]
+        acc[l] = t * dinv_ref[0, l]
+    out_ref[0] = jnp.stack(acc)
+
+
+def color_substitution(off_val, off_col, in_coef, dinv, rseg, prev, *,
+                       bs: int, w: int, reverse: bool):
+    """Run one color's substitution: returns the color's (nl1, bs, w) block.
+
+    ``prev`` is the full-length vector holding every already-finished
+    color (zeros elsewhere); ``rseg`` is the color's rhs slice reshaped to
+    (nl1, bs, w).
+    """
+    nl1, _, kmax, _ = off_val.shape
+    n = prev.shape[0]
+    grid = (nl1,)
+    kernel = functools.partial(_color_kernel, bs=bs, w=w, reverse=reverse)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, kmax, w), lambda k: (k, 0, 0, 0)),
+            pl.BlockSpec((1, bs, kmax, w), lambda k: (k, 0, 0, 0)),
+            pl.BlockSpec((1, bs, bs, w), lambda k: (k, 0, 0, 0)),
+            pl.BlockSpec((1, bs, w), lambda k: (k, 0, 0)),
+            pl.BlockSpec((1, bs, w), lambda k: (k, 0, 0)),
+            pl.BlockSpec((n,), lambda k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, w), lambda k: (k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nl1, bs, w), prev.dtype),
+        interpret=True,
+    )(off_val, off_col, in_coef, dinv, rseg, prev)
+
+
+def make_precond_apply(data):
+    """Build ``z = (L Lᵀ)⁻¹ r`` over the full HBMC schedule.
+
+    ``data`` is a ``ref.HbmcData``; its numpy arrays become baked constants
+    of the traced function, so the AOT executable takes only ``r``.
+    """
+    bs, w, n = data.bs, data.w, data.n
+    color_ptr = data.color_ptr
+    ncolors = data.num_colors
+
+    def apply(r):
+        r = jnp.asarray(r)
+        dt = r.dtype
+        y = jnp.zeros(n, dtype=dt)
+        for c in range(ncolors):
+            cd = data.fwd[c]
+            lo, hi = color_ptr[c], color_ptr[c + 1]
+            rseg = jax.lax.dynamic_slice(r, (lo,), (hi - lo,)).reshape(-1, bs, w)
+            blk = color_substitution(
+                jnp.asarray(cd.off_val, dtype=dt), jnp.asarray(cd.off_col),
+                jnp.asarray(cd.in_coef, dtype=dt), jnp.asarray(cd.dinv, dtype=dt),
+                rseg, y, bs=bs, w=w, reverse=False,
+            )
+            y = jax.lax.dynamic_update_slice(y, blk.reshape(-1), (lo,))
+        z = jnp.zeros(n, dtype=dt)
+        for c in range(ncolors - 1, -1, -1):
+            cd = data.bwd[c]
+            lo, hi = color_ptr[c], color_ptr[c + 1]
+            yseg = jax.lax.dynamic_slice(y, (lo,), (hi - lo,)).reshape(-1, bs, w)
+            blk = color_substitution(
+                jnp.asarray(cd.off_val, dtype=dt), jnp.asarray(cd.off_col),
+                jnp.asarray(cd.in_coef, dtype=dt), jnp.asarray(cd.dinv, dtype=dt),
+                yseg, z, bs=bs, w=w, reverse=True,
+            )
+            z = jax.lax.dynamic_update_slice(z, blk.reshape(-1), (lo,))
+        return z
+
+    return apply

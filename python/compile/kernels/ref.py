@@ -1,0 +1,267 @@
+"""Pure numpy oracles for the L1 kernels.
+
+Everything the Pallas kernels compute is specified here twice:
+
+* *serial* reference: row-by-row CSR substitution (ordering-agnostic),
+* *structured* reference: the HBMC color/block/step schedule in plain
+  numpy, exactly the arithmetic the Pallas kernel performs.
+
+pytest asserts ``pallas == structured == serial`` so a failure localizes to
+either the schedule construction or the kernel body.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import scipy.sparse as sp
+
+
+# --------------------------------------------------------------------------
+# IC(0) factorization (mirror of rust/src/factor/ic0.rs, up-looking rows)
+# --------------------------------------------------------------------------
+
+def ic0(a: sp.csr_matrix, shift: float = 0.0) -> tuple[sp.csr_matrix, np.ndarray]:
+    """IC(0): returns (strict lower L, diag l_ii); raises on breakdown."""
+    a = sp.csr_matrix(a)
+    a.sort_indices()
+    n = a.shape[0]
+    lower = sp.tril(a, k=-1, format="csr")
+    lower.sort_indices()
+    lval = lower.data.astype(np.float64).copy()
+    adiag = a.diagonal()
+    diag = np.zeros(n)
+    diag_inv = np.zeros(n)
+    scratch = np.zeros(n)
+    in_row = np.zeros(n, dtype=bool)
+    indptr, indices = lower.indptr, lower.indices
+    for i in range(n):
+        cols = indices[indptr[i]:indptr[i + 1]]
+        avals = lval[indptr[i]:indptr[i + 1]]
+        scratch[cols] = avals
+        in_row[cols] = True
+        dii = adiag[i] * (1.0 + shift)
+        for j in cols:
+            s = scratch[j]
+            jcols = indices[indptr[j]:indptr[j + 1]]
+            jvals = lval[indptr[j]:indptr[j + 1]]
+            mask = in_row[jcols]
+            if mask.any():
+                s -= np.dot(jvals[mask], scratch[jcols[mask]])
+            lij = s * diag_inv[j]
+            scratch[j] = lij
+            dii -= lij * lij
+        if dii <= 0.0 or not np.isfinite(dii):
+            scratch[cols] = 0.0
+            in_row[cols] = False
+            raise FloatingPointError(f"ic0 breakdown at row {i}: {dii}")
+        diag[i] = np.sqrt(dii)
+        diag_inv[i] = 1.0 / diag[i]
+        lval[indptr[i]:indptr[i + 1]] = scratch[cols]
+        scratch[cols] = 0.0
+        in_row[cols] = False
+    out = sp.csr_matrix((lval, indices.copy(), indptr.copy()), shape=(n, n))
+    return out, diag
+
+
+# --------------------------------------------------------------------------
+# Serial substitutions
+# --------------------------------------------------------------------------
+
+def forward_serial(lower: sp.csr_matrix, diag: np.ndarray, r: np.ndarray) -> np.ndarray:
+    """Solve L y = r (L = strict ``lower`` + ``diag``)."""
+    n = len(diag)
+    y = np.zeros(n)
+    indptr, indices, data = lower.indptr, lower.indices, lower.data
+    for i in range(n):
+        s = r[i] - np.dot(data[indptr[i]:indptr[i + 1]], y[indices[indptr[i]:indptr[i + 1]]])
+        y[i] = s / diag[i]
+    return y
+
+
+def backward_serial(lower: sp.csr_matrix, diag: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Solve L^T z = y."""
+    upper = sp.csr_matrix(lower.T)
+    upper.sort_indices()
+    n = len(diag)
+    z = np.zeros(n)
+    indptr, indices, data = upper.indptr, upper.indices, upper.data
+    for i in range(n - 1, -1, -1):
+        s = y[i] - np.dot(data[indptr[i]:indptr[i + 1]], z[indices[indptr[i]:indptr[i + 1]]])
+        z[i] = s / diag[i]
+    return z
+
+
+def precond_serial(lower: sp.csr_matrix, diag: np.ndarray, r: np.ndarray) -> np.ndarray:
+    return backward_serial(lower, diag, forward_serial(lower, diag, r))
+
+
+# --------------------------------------------------------------------------
+# HBMC schedule construction (consumed by both ref and the Pallas kernel)
+# --------------------------------------------------------------------------
+
+@dataclass
+class ColorData:
+    """Per-color padded arrays for one substitution direction.
+
+    Shapes: ``off_val``/``off_col`` (nl1, bs, K, w) -- out-of-block entries
+    (gathered from the already-computed vector); ``in_coef`` (nl1, bs, bs, w)
+    -- in-block lane-diagonal couplings (``in_coef[k1, l, m, j]`` multiplies
+    step ``m``'s lane ``j`` while computing step ``l``); ``dinv`` (nl1, bs, w).
+    K >= 1 always (padded with zero entries pointing at row 0).
+    """
+
+    off_val: np.ndarray
+    off_col: np.ndarray
+    in_coef: np.ndarray
+    dinv: np.ndarray
+    row0: int  # first global row of this color
+
+
+@dataclass
+class HbmcData:
+    n: int
+    bs: int
+    w: int
+    num_colors: int
+    color_ptr: list
+    fwd: list
+    bwd: list
+
+
+def build_hbmc_data(lower: sp.csr_matrix, diag: np.ndarray, color_ptr: list,
+                    bs: int, w: int) -> HbmcData:
+    """Split L / L^T into the per-color HBMC schedule arrays."""
+    n = len(diag)
+    upper = sp.csr_matrix(lower.T)
+    upper.sort_indices()
+    ncolors = len(color_ptr) - 1
+    dinv_full = 1.0 / diag
+
+    def build_dir(tri: sp.csr_matrix, is_fwd: bool) -> list:
+        out = []
+        indptr, indices, data = tri.indptr, tri.indices, tri.data
+        for c in range(ncolors):
+            lo, hi = color_ptr[c], color_ptr[c + 1]
+            nl1 = (hi - lo) // (bs * w)
+            rows_off = []
+            kmax = 1
+            for row in range(lo, hi):
+                l1 = (row - lo) // (bs * w)
+                blk_lo = lo + l1 * bs * w
+                blk_hi = blk_lo + bs * w
+                offs = []
+                for p in range(indptr[row], indptr[row + 1]):
+                    col, val = int(indices[p]), float(data[p])
+                    if blk_lo <= col < blk_hi:
+                        continue  # in-block: handled by in_coef
+                    offs.append((col, val))
+                rows_off.append(offs)
+                kmax = max(kmax, len(offs))
+            off_val = np.zeros((nl1, bs, kmax, w))
+            off_col = np.zeros((nl1, bs, kmax, w), dtype=np.int32)
+            in_coef = np.zeros((nl1, bs, bs, w))
+            dinv = np.zeros((nl1, bs, w))
+            for row in range(lo, hi):
+                local = row - lo
+                k1, rem = divmod(local, bs * w)
+                l, j = divmod(rem, w)
+                for t, (col, val) in enumerate(rows_off[local]):
+                    off_val[k1, l, t, j] = val
+                    off_col[k1, l, t, j] = col
+                blk_lo = lo + k1 * bs * w
+                for p in range(indptr[row], indptr[row + 1]):
+                    col, val = int(indices[p]), float(data[p])
+                    if blk_lo <= col < blk_lo + bs * w:
+                        m, jj = divmod(col - blk_lo, w)
+                        assert jj == j, "level-2 block not lane-diagonal"
+                        assert (m < l) if is_fwd else (m > l)
+                        in_coef[k1, l, m, j] = val
+                dinv[k1, l, j] = dinv_full[row]
+            out.append(ColorData(off_val, off_col, in_coef, dinv, lo))
+        return out
+
+    return HbmcData(
+        n=n, bs=bs, w=w, num_colors=ncolors, color_ptr=list(color_ptr),
+        fwd=build_dir(lower, True), bwd=build_dir(upper, False),
+    )
+
+
+# --------------------------------------------------------------------------
+# Structured reference (numpy twin of the Pallas kernel)
+# --------------------------------------------------------------------------
+
+def _color_step(cd: ColorData, data: HbmcData, rhs: np.ndarray, out: np.ndarray,
+                reverse: bool) -> np.ndarray:
+    bs, w = data.bs, data.w
+    nl1 = cd.off_val.shape[0]
+    out = out.copy()
+    steps = range(bs - 1, -1, -1) if reverse else range(bs)
+    for k1 in range(nl1):
+        acc = np.zeros((bs, w))
+        for l in steps:
+            row0 = cd.row0 + k1 * bs * w + l * w
+            t = rhs[row0:row0 + w].copy()
+            g = out[cd.off_col[k1, l]]  # (K, w) gather
+            t -= np.sum(cd.off_val[k1, l] * g, axis=0)
+            for m in (range(l + 1, bs) if reverse else range(l)):
+                t -= cd.in_coef[k1, l, m] * acc[m]
+            acc[l] = t * cd.dinv[k1, l]
+        for l in range(bs):
+            row0 = cd.row0 + k1 * bs * w + l * w
+            out[row0:row0 + w] = acc[l]
+    return out
+
+
+def forward_structured(data: HbmcData, r: np.ndarray) -> np.ndarray:
+    y = np.zeros(data.n)
+    for c in range(data.num_colors):
+        y = _color_step(data.fwd[c], data, r, y, reverse=False)
+    return y
+
+
+def backward_structured(data: HbmcData, y_in: np.ndarray) -> np.ndarray:
+    z = np.zeros(data.n)
+    for c in range(data.num_colors - 1, -1, -1):
+        z = _color_step(data.bwd[c], data, y_in, z, reverse=True)
+    return z
+
+
+# --------------------------------------------------------------------------
+# SELL (slice = c) construction + SpMV reference
+# --------------------------------------------------------------------------
+
+def sell_from_csr(a: sp.csr_matrix, c: int) -> tuple[np.ndarray, np.ndarray]:
+    """Uniform-K SELL arrays: returns (val, col) of shape (nslices, K, c).
+
+    Rows are NOT sigma-sorted (trisolve-safe layout). K is the global max
+    row length (simplifies the AOT kernel's static shapes); padding points
+    at the row itself with value 0.
+    """
+    a = sp.csr_matrix(a)
+    a.sort_indices()
+    n = a.shape[0]
+    assert n % c == 0, "pad the matrix to a multiple of c first"
+    nslices = n // c
+    kmax = max(1, int(np.diff(a.indptr).max()))
+    val = np.zeros((nslices, kmax, c))
+    col = np.zeros((nslices, kmax, c), dtype=np.int32)
+    for i in range(n):
+        s, lane = divmod(i, c)
+        col[s, :, lane] = i  # safe self-gather padding
+        lo, hi = a.indptr[i], a.indptr[i + 1]
+        col[s, :hi - lo, lane] = a.indices[lo:hi]
+        val[s, :hi - lo, lane] = a.data[lo:hi]
+    return val, col
+
+
+def spmv_sell_ref(val: np.ndarray, col: np.ndarray, x: np.ndarray) -> np.ndarray:
+    nslices, kmax, c = val.shape
+    out = np.zeros(nslices * c)
+    for s in range(nslices):
+        acc = np.zeros(c)
+        for k in range(kmax):
+            acc += val[s, k] * x[col[s, k]]
+        out[s * c:(s + 1) * c] = acc
+    return out

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: SELL-w sparse matrix-vector product (§4.4.2).
+
+Grid over slices; each grid step computes the ``w`` rows of one slice as a
+``w``-wide packed accumulation (the SELL format's whole point). Uniform
+slice width K (global max row length) keeps the AOT shapes static;
+padding entries carry value 0 and a safe self-column.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _spmv_kernel(val_ref, col_ref, x_ref, out_ref, *, kmax: int):
+    x = x_ref[...]
+    vals = val_ref[0]  # (K, w)
+    cols = col_ref[0]
+    acc = jnp.sum(vals * x[cols], axis=0)  # (w,)
+    out_ref[0] = acc
+
+
+def spmv_sell(val, col, x):
+    """``y = A x`` with SELL arrays (nslices, K, w)."""
+    nslices, kmax, w = val.shape
+    n = x.shape[0]
+    assert n == nslices * w
+    kernel = functools.partial(_spmv_kernel, kmax=kmax)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nslices,),
+        in_specs=[
+            pl.BlockSpec((1, kmax, w), lambda k: (k, 0, 0)),
+            pl.BlockSpec((1, kmax, w), lambda k: (k, 0, 0)),
+            pl.BlockSpec((n,), lambda k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, w), lambda k: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((nslices, w), x.dtype),
+        interpret=True,
+    )(val, col, x)
+    return out.reshape(-1)
+
+
+def make_spmv(val, col):
+    """Bake the matrix arrays; returns ``x ↦ A x``."""
+    val_c = jnp.asarray(val)
+    col_c = jnp.asarray(col)
+
+    def apply(x):
+        return spmv_sell(val_c, col_c, jnp.asarray(x))
+
+    return apply

@@ -1,0 +1,58 @@
+"""L2: the JAX compute graph of the ICCG building blocks, calling the L1
+Pallas kernels. Lowered once by ``aot.py``; never imported at runtime.
+
+Exports three jit-able functions over a canonical HBMC problem:
+
+* ``precond_apply(r) -> z``        — IC(0) preconditioner (Pallas trisolve),
+* ``spmv(x) -> A x``               — SELL SpMV (Pallas),
+* ``pcg_step(x, r, z, p, rz)``     — one fused PCG iteration using both.
+
+All matrix/factor/schedule data are baked constants, so the AOT
+executables take only the iteration vectors — the L3 rust loop feeds them
+through PJRT with zero python involvement.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import ref
+from .kernels.hbmc_trisolve import make_precond_apply
+from .kernels.spmv_sell import make_spmv
+
+
+class CanonicalModel:
+    """Bundle of baked-constant ICCG building blocks."""
+
+    def __init__(self, a_perm, color_ptr, bs: int, w: int, shift: float = 0.0):
+        self.n = a_perm.shape[0]
+        self.bs, self.w = bs, w
+        self.color_ptr = list(color_ptr)
+        lower, diag = ref.ic0(a_perm, shift)
+        self.lower, self.diag = lower, diag
+        self.data = ref.build_hbmc_data(lower, diag, self.color_ptr, bs, w)
+        self.precond_apply = make_precond_apply(self.data)
+        sell_val, sell_col = ref.sell_from_csr(a_perm, w)
+        self.spmv = make_spmv(sell_val, sell_col)
+
+    def pcg_step(self, x, r, p, rz):
+        """One preconditioned-CG iteration (state in, state out).
+
+        State is ``(x, r, p, rz)`` — ``z`` is recomputed internally each
+        step (it would be a dead input, which jax's lowering eliminates).
+        Returns ``(x', r', z', p', rz', rr')`` where ``rr' = r'ᵀr'`` lets
+        the rust loop check convergence without an extra reduction.
+        """
+        q = self.spmv(p)
+        alpha = rz / jnp.dot(p, q)
+        x = x + alpha * p
+        r = r - alpha * q
+        z = self.precond_apply(r)
+        rz_new = jnp.dot(r, z)
+        beta = rz_new / rz
+        p = z + beta * p
+        rr = jnp.dot(r, r)
+        return x, r, z, p, rz_new, rr

@@ -1,0 +1,209 @@
+"""Parallel orderings (MC / BMC / HBMC) — python oracle.
+
+Deterministic mirror of the rust implementation (``rust/src/ordering``):
+same greedy coloring (visit order = natural index, smallest unused color),
+same min-index blocking heuristic of Iwashita et al. 2012 (seed = minimal
+unassigned node, grow by minimal-index unassigned neighbor), same HBMC
+secondary interleave (paper §4.2, Fig. 4.3). ``aot.py`` bakes the resulting
+permutation into ``artifacts/golden.txt`` and the rust test
+``golden_cross_layer.rs`` asserts both implementations agree node-for-node.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+import scipy.sparse as sp
+
+DUMMY = -1
+
+
+def adjacency(a: sp.csr_matrix) -> list[np.ndarray]:
+    """Symmetrized neighbor lists (sorted, diagonal removed)."""
+    a = sp.csr_matrix(a)
+    sym = (a + a.T).tocsr()
+    n = sym.shape[0]
+    out = []
+    for i in range(n):
+        nbr = sym.indices[sym.indptr[i]:sym.indptr[i + 1]]
+        out.append(np.sort(nbr[nbr != i]).astype(np.int64))
+    return out
+
+
+def greedy_color(neighbors: list[np.ndarray]) -> tuple[np.ndarray, int]:
+    """Greedy coloring in natural order; smallest unused color."""
+    n = len(neighbors)
+    color = np.full(n, -1, dtype=np.int64)
+    ncolors = 0
+    for v in range(n):
+        used = {color[u] for u in neighbors[v] if color[u] >= 0}
+        c = 0
+        while c in used:
+            c += 1
+        color[v] = c
+        ncolors = max(ncolors, c + 1)
+    return color, ncolors
+
+
+def build_blocks(neighbors: list[np.ndarray], bs: int) -> list[list[int]]:
+    """Min-index greedy blocking (paper §5.1 / ref [13] simplest heuristic)."""
+    n = len(neighbors)
+    assigned = np.zeros(n, dtype=bool)
+    blocks: list[list[int]] = []
+    next_start = 0
+    while next_start < n:
+        if assigned[next_start]:
+            next_start += 1
+            continue
+        seed = next_start
+        assigned[seed] = True
+        block = [seed]
+        frontier = {int(u) for u in neighbors[seed] if not assigned[u]}
+        while len(block) < bs and frontier:
+            v = min(frontier)
+            frontier.remove(v)
+            assigned[v] = True
+            block.append(v)
+            for u in neighbors[v]:
+                if not assigned[u]:
+                    frontier.add(int(u))
+        blocks.append(block)
+    return blocks
+
+
+def block_graph(neighbors: list[np.ndarray], blocks: list[list[int]]) -> list[set[int]]:
+    n = len(neighbors)
+    block_of = np.full(n, -1, dtype=np.int64)
+    for bi, b in enumerate(blocks):
+        for v in b:
+            block_of[v] = bi
+    out: list[set[int]] = [set() for _ in blocks]
+    for bi, b in enumerate(blocks):
+        for v in b:
+            for u in neighbors[v]:
+                bu = int(block_of[u])
+                if bu != bi:
+                    out[bi].add(bu)
+    return out
+
+
+@dataclass
+class BmcOrdering:
+    """BMC result; mirrors ``rust/src/ordering/bmc.rs``."""
+
+    new_of_old: np.ndarray  # (n_old,) int64 → index in augmented space
+    n_new: int
+    bs: int
+    num_colors: int
+    color_ptr: list[int]
+    blocks_per_color: list[int]
+
+
+def bmc_order(a: sp.csr_matrix, bs: int) -> BmcOrdering:
+    nbrs = adjacency(a)
+    blocks = build_blocks(nbrs, bs)
+    bg = block_graph(nbrs, blocks)
+    bcolor, ncolors = greedy_color([np.array(sorted(g), dtype=np.int64) for g in bg])
+    groups: list[list[int]] = [[] for _ in range(ncolors)]
+    for bi, c in enumerate(bcolor):
+        groups[int(c)].append(bi)
+
+    n = len(nbrs)
+    new_of_old = np.full(n, -1, dtype=np.int64)
+    color_ptr = [0]
+    blocks_per_color = []
+    nxt = 0
+    for g in groups:
+        for bi in g:
+            for slot, v in enumerate(blocks[bi]):
+                new_of_old[v] = nxt + slot
+            nxt += bs  # short blocks leave dummy slots
+        color_ptr.append(nxt)
+        blocks_per_color.append(len(g))
+    return BmcOrdering(new_of_old, nxt, bs, ncolors, color_ptr, blocks_per_color)
+
+
+@dataclass
+class HbmcOrdering:
+    """HBMC result; mirrors ``rust/src/ordering/hbmc.rs``."""
+
+    new_of_old: np.ndarray  # original → HBMC augmented index
+    n_new: int
+    bs: int
+    w: int
+    num_colors: int
+    color_ptr: list[int]
+    l1_per_color: list[int]
+    bmc: BmcOrdering
+    secondary: np.ndarray = field(default_factory=lambda: np.empty(0, dtype=np.int64))
+
+
+def hbmc_order(a: sp.csr_matrix, bs: int, w: int) -> HbmcOrdering:
+    bmc = bmc_order(a, bs)
+    return hbmc_from_bmc(bmc, w)
+
+
+def hbmc_from_bmc(bmc: BmcOrdering, w: int) -> HbmcOrdering:
+    bs = bmc.bs
+    ncolors = bmc.num_colors
+    color_ptr = [0]
+    l1_per_color = []
+    for c in range(ncolors):
+        nb = -(-bmc.blocks_per_color[c] // w) * w  # round up to multiple of w
+        l1_per_color.append(nb // w)
+        color_ptr.append(color_ptr[c] + nb * bs)
+    n_hbmc = color_ptr[-1]
+
+    # Secondary reordering (Fig. 4.3): BMC slot (c, k, l) →
+    # color_ptr[c] + (k // w)·bs·w + l·w + (k mod w).
+    secondary = np.full(bmc.n_new, -1, dtype=np.int64)
+    for c in range(ncolors):
+        for k in range(bmc.blocks_per_color[c]):
+            for l in range(bs):
+                src = bmc.color_ptr[c] + k * bs + l
+                dst = color_ptr[c] + (k // w) * bs * w + l * w + (k % w)
+                secondary[src] = dst
+
+    new_of_old = np.where(bmc.new_of_old >= 0, secondary[bmc.new_of_old], -1)
+    return HbmcOrdering(
+        new_of_old, n_hbmc, bs, w, ncolors, color_ptr, l1_per_color, bmc, secondary
+    )
+
+
+def permute_padded(a: sp.csr_matrix, new_of_old: np.ndarray, n_new: int) -> sp.csr_matrix:
+    """``A' = P A Pᵀ`` into a padded space; dummy slots get identity rows."""
+    a = sp.coo_matrix(a)
+    rows = new_of_old[a.row]
+    cols = new_of_old[a.col]
+    data = list(a.data)
+    rows = list(rows)
+    cols = list(cols)
+    hit = np.zeros(n_new, dtype=bool)
+    hit[new_of_old] = True
+    for i in np.nonzero(~hit)[0]:
+        rows.append(i)
+        cols.append(i)
+        data.append(1.0)
+    out = sp.coo_matrix((data, (rows, cols)), shape=(n_new, n_new)).tocsr()
+    out.sum_duplicates()
+    out.sort_indices()
+    return out
+
+
+def er_condition_holds(a: sp.csr_matrix, new_of_old: np.ndarray) -> bool:
+    """Eq. (3.5): every connected pair keeps its relative order."""
+    for i, nbr in enumerate(adjacency(a)):
+        for j in nbr:
+            if j > i and new_of_old[i] >= new_of_old[j]:
+                return False
+    return True
+
+
+def orderings_equivalent(a: sp.csr_matrix, p1: np.ndarray, p2: np.ndarray) -> bool:
+    """Identical ordering graphs (§3.1)."""
+    for i, nbr in enumerate(adjacency(a)):
+        for j in nbr:
+            if j > i and ((p1[i] < p1[j]) != (p2[i] < p2[j])):
+                return False
+    return True

@@ -1,0 +1,72 @@
+"""Build-time problem generators (python mirrors of ``rust/src/gen``).
+
+Only the canonical AOT problem and small test problems live here; the full
+dataset suite is rust-side. ``laplace2d`` matches
+``hbmc::gen::fdm::laplace2d(nx, ny, 0.0, seed)`` exactly (constant
+coefficients, 1e-2 diagonal regularization) so goldens agree bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import scipy.sparse as sp
+
+
+def laplace2d(nx: int, ny: int) -> sp.csr_matrix:
+    """Constant-coefficient 5-point Laplacian, diag += 1e-2 (rust parity)."""
+    n = nx * ny
+
+    def idx(x: int, y: int) -> int:
+        return y * nx + x
+
+    rows, cols, vals = [], [], []
+    diag = np.zeros(n)
+    for y in range(ny):
+        for x in range(nx):
+            if x + 1 < nx:
+                i, j = idx(x, y), idx(x + 1, y)
+                rows += [i, j]
+                cols += [j, i]
+                vals += [-1.0, -1.0]
+                diag[i] += 1.0
+                diag[j] += 1.0
+            if y + 1 < ny:
+                i, j = idx(x, y), idx(x, y + 1)
+                rows += [i, j]
+                cols += [j, i]
+                vals += [-1.0, -1.0]
+                diag[i] += 1.0
+                diag[j] += 1.0
+    for i in range(n):
+        rows.append(i)
+        cols.append(i)
+        vals.append(diag[i] + 1e-2)
+    a = sp.coo_matrix((vals, (rows, cols)), shape=(n, n)).tocsr()
+    a.sum_duplicates()
+    a.sort_indices()
+    return a
+
+
+def random_spd(n: int, extra_per_row: int, seed: int) -> sp.csr_matrix:
+    """Diagonally dominant random SPD matrix for kernel sweeps."""
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = [], [], []
+    diag = np.full(n, 1e-2)
+    for i in range(n):
+        for _ in range(extra_per_row):
+            j = int(rng.integers(0, n))
+            if j == i:
+                continue
+            v = -float(rng.uniform(0.1, 1.0))
+            rows += [i, j]
+            cols += [j, i]
+            vals += [v, v]
+            diag[i] += -v
+            diag[j] += -v
+    rows += list(range(n))
+    cols += list(range(n))
+    vals += list(diag + 1.0)
+    a = sp.coo_matrix((vals, (rows, cols)), shape=(n, n)).tocsr()
+    a.sum_duplicates()
+    a.sort_indices()
+    return a

@@ -1,0 +1,156 @@
+"""Ordering machinery tests (python oracle side).
+
+The same invariants are asserted in rust unit tests; cross-implementation
+agreement is pinned by the golden test (rust/tests/golden_cross_layer.rs).
+"""
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from hypothesis import given, settings, strategies as st
+
+from compile import ordering, problems
+
+
+def grid(nx, ny):
+    return problems.laplace2d(nx, ny)
+
+
+class TestAdjacency:
+    def test_grid_degrees(self):
+        nbrs = ordering.adjacency(grid(4, 4))
+        assert len(nbrs[0]) == 2  # corner
+        assert len(nbrs[5]) == 4  # interior
+
+    def test_symmetrizes(self):
+        a = sp.csr_matrix(np.array([[1.0, 0.0], [2.0, 1.0]]))
+        nbrs = ordering.adjacency(a)
+        assert list(nbrs[0]) == [1]
+        assert list(nbrs[1]) == [0]
+
+    def test_no_self_loops(self):
+        nbrs = ordering.adjacency(grid(5, 5))
+        for i, nb in enumerate(nbrs):
+            assert i not in nb
+
+
+class TestColoring:
+    def test_grid_is_bipartite(self):
+        nbrs = ordering.adjacency(grid(6, 6))
+        color, nc = ordering.greedy_color(nbrs)
+        assert nc == 2
+        for i, nb in enumerate(nbrs):
+            assert all(color[j] != color[i] for j in nb)
+
+    @given(st.integers(2, 40), st.integers(0, 5), st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_proper_on_random(self, n, extra, seed):
+        a = problems.random_spd(n, extra, seed)
+        nbrs = ordering.adjacency(a)
+        color, nc = ordering.greedy_color(nbrs)
+        maxdeg = max((len(nb) for nb in nbrs), default=0)
+        assert nc <= maxdeg + 1
+        for i, nb in enumerate(nbrs):
+            assert all(color[j] != color[i] for j in nb)
+
+
+class TestBlocking:
+    def test_partition(self):
+        nbrs = ordering.adjacency(grid(7, 5))
+        blocks = ordering.build_blocks(nbrs, 4)
+        seen = sorted(v for b in blocks for v in b)
+        assert seen == list(range(35))
+        assert all(len(b) <= 4 for b in blocks)
+
+    def test_chain_blocks_contiguous(self):
+        n = 12
+        a = sp.diags([-np.ones(n - 1), 2 * np.ones(n), -np.ones(n - 1)],
+                     [-1, 0, 1], format="csr")
+        blocks = ordering.build_blocks(ordering.adjacency(a), 4)
+        assert blocks[0] == [0, 1, 2, 3]
+        assert blocks[1] == [4, 5, 6, 7]
+
+
+class TestBmc:
+    def test_block_independence(self):
+        a = grid(8, 8)
+        ord_ = ordering.bmc_order(a, 4)
+        ap = ordering.permute_padded(a, ord_.new_of_old, ord_.n_new)
+        coo = ap.tocoo()
+        for c in range(ord_.num_colors):
+            lo, hi = ord_.color_ptr[c], ord_.color_ptr[c + 1]
+            mask = (coo.row >= lo) & (coo.row < hi) & (coo.col >= lo) & (coo.col < hi)
+            rows, cols = coo.row[mask], coo.col[mask]
+            # same color → same block (or diagonal)
+            assert np.all(((rows - lo) // 4 == (cols - lo) // 4))
+
+    def test_color_sizes_multiple_of_bs(self):
+        ord_ = ordering.bmc_order(grid(9, 9), 8)
+        for c in range(ord_.num_colors):
+            assert (ord_.color_ptr[c + 1] - ord_.color_ptr[c]) % 8 == 0
+
+
+class TestHbmc:
+    def test_equivalent_to_bmc(self):
+        a = grid(10, 10)
+        ord_ = ordering.hbmc_order(a, 4, 4)
+        assert ordering.orderings_equivalent(a, ord_.bmc.new_of_old, ord_.new_of_old)
+
+    def test_level2_lane_diagonal(self):
+        a = grid(12, 8)
+        bs, w = 4, 4
+        ord_ = ordering.hbmc_order(a, bs, w)
+        ap = ordering.permute_padded(a, ord_.new_of_old, ord_.n_new)
+        coo = ap.tocoo()
+        bw = bs * w
+        for c in range(ord_.num_colors):
+            lo, hi = ord_.color_ptr[c], ord_.color_ptr[c + 1]
+            mask = ((coo.row >= lo) & (coo.row < hi) & (coo.col >= lo)
+                    & (coo.col < hi) & (coo.row != coo.col))
+            rows, cols = coo.row[mask] - lo, coo.col[mask] - lo
+            assert np.all(rows // bw == cols // bw), "same-color cross-l1 edge"
+            assert np.all(rows % w == cols % w), "cross-lane edge in level-1 block"
+
+    def test_interleave_matches_fig_4_3(self):
+        # First level-1 block: new index = l*w + k for block k, slot l.
+        a = grid(16, 4)
+        bs, w = 2, 4
+        ord_ = ordering.hbmc_order(a, bs, w)
+        bmc = ord_.bmc
+        assert bmc.blocks_per_color[0] >= w
+        for k in range(w):
+            for l in range(bs):
+                src = bmc.color_ptr[0] + k * bs + l
+                assert ord_.secondary[src] == l * w + k
+
+    @given(st.integers(3, 14), st.integers(3, 14),
+           st.sampled_from([2, 4, 8]), st.sampled_from([2, 4]))
+    @settings(max_examples=15, deadline=None)
+    def test_hbmc_invariants_hypothesis(self, nx, ny, bs, w):
+        a = grid(nx, ny)
+        ord_ = ordering.hbmc_order(a, bs, w)
+        # Injective permutation over real nodes.
+        vals = ord_.new_of_old
+        assert len(set(vals.tolist())) == a.shape[0]
+        # Color sizes multiples of bs*w.
+        for c in range(ord_.num_colors):
+            assert (ord_.color_ptr[c + 1] - ord_.color_ptr[c]) % (bs * w) == 0
+        # ER equivalence with BMC.
+        assert ordering.orderings_equivalent(a, ord_.bmc.new_of_old, vals)
+
+
+class TestErCondition:
+    def test_identity_holds(self):
+        a = grid(5, 5)
+        assert ordering.er_condition_holds(a, np.arange(25))
+
+    def test_swap_of_neighbors_fails(self):
+        a = grid(5, 1)
+        p = np.arange(5)
+        p[[0, 1]] = p[[1, 0]]
+        assert not ordering.er_condition_holds(a, p)
+
+    def test_padded_spread_holds(self):
+        a = grid(3, 1)
+        p = np.array([0, 4, 9])
+        assert ordering.er_condition_holds(a, p)

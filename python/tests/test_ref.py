@@ -1,0 +1,128 @@
+"""Tests for the numpy oracles themselves (ref.py) — the ground everything
+else stands on."""
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from hypothesis import given, settings, strategies as st
+
+from compile import ordering, problems
+from compile.kernels import ref
+
+
+def tridiag(n):
+    return sp.diags([-np.ones(n - 1), 2.0 * np.ones(n), -np.ones(n - 1)],
+                    [-1, 0, 1], format="csr")
+
+
+class TestIc0:
+    def test_tridiagonal_is_exact_cholesky(self):
+        a = tridiag(8)
+        lower, diag = ref.ic0(a)
+        l_full = lower.toarray() + np.diag(diag)
+        assert np.allclose(l_full @ l_full.T, a.toarray(), atol=1e-12)
+
+    def test_shift_scales_diagonal(self):
+        a = tridiag(5)
+        _, d0 = ref.ic0(a, 0.0)
+        _, d3 = ref.ic0(a, 0.3)
+        assert d3[0] == pytest.approx(np.sqrt(2.0 * 1.3))
+        assert d3[0] > d0[0]
+
+    def test_breakdown_raises(self):
+        # Singular Neumann Laplacian.
+        n = 5
+        a = sp.diags([-np.ones(n - 1),
+                      np.array([1.0, 2, 2, 2, 1]),
+                      -np.ones(n - 1)], [-1, 0, 1], format="csr")
+        with pytest.raises(FloatingPointError):
+            ref.ic0(a, 0.0)
+        lower, diag = ref.ic0(a, 0.3)  # shifted succeeds
+        assert np.all(diag > 0)
+
+    @given(st.integers(5, 40), st.integers(1, 4), st.integers(0, 100))
+    @settings(max_examples=15, deadline=None)
+    def test_random_spd_factors(self, n, extra, seed):
+        a = problems.random_spd(n, extra, seed)
+        lower, diag = ref.ic0(a)
+        assert np.all(diag > 0)
+        assert lower.nnz == sp.tril(a, k=-1).nnz
+
+
+class TestSerialSolves:
+    def test_forward_backward_roundtrip(self):
+        a = problems.laplace2d(6, 6)
+        lower, diag = ref.ic0(a)
+        rng = np.random.default_rng(3)
+        r = rng.uniform(-1, 1, 36)
+        y = ref.forward_serial(lower, diag, r)
+        # L y == r
+        l_full = lower.toarray() + np.diag(diag)
+        assert np.allclose(l_full @ y, r, atol=1e-12)
+        z = ref.backward_serial(lower, diag, y)
+        assert np.allclose(l_full.T @ z, y, atol=1e-12)
+
+    def test_precond_is_spd_map(self):
+        a = problems.laplace2d(5, 5)
+        lower, diag = ref.ic0(a)
+        rng = np.random.default_rng(4)
+        u = rng.uniform(-1, 1, 25)
+        v = rng.uniform(-1, 1, 25)
+        # Symmetry of M⁻¹: uᵀ M⁻¹ v == vᵀ M⁻¹ u
+        mu = ref.precond_serial(lower, diag, u)
+        mv = ref.precond_serial(lower, diag, v)
+        assert np.dot(u, mv) == pytest.approx(np.dot(v, mu), rel=1e-10)
+
+
+class TestStructured:
+    @pytest.mark.parametrize("bs,w", [(2, 2), (4, 4), (8, 2), (2, 8)])
+    def test_structured_equals_serial(self, bs, w):
+        a = problems.laplace2d(8, 6)
+        ord_ = ordering.hbmc_order(a, bs, w)
+        ap = ordering.permute_padded(a, ord_.new_of_old, ord_.n_new)
+        lower, diag = ref.ic0(ap)
+        data = ref.build_hbmc_data(lower, diag, ord_.color_ptr, bs, w)
+        rng = np.random.default_rng(5)
+        r = rng.uniform(-1, 1, ord_.n_new)
+        y_serial = ref.forward_serial(lower, diag, r)
+        y_struct = ref.forward_structured(data, r)
+        np.testing.assert_allclose(y_struct, y_serial, atol=1e-12)
+        z_serial = ref.backward_serial(lower, diag, y_serial)
+        z_struct = ref.backward_structured(data, y_struct)
+        np.testing.assert_allclose(z_struct, z_serial, atol=1e-12)
+
+    @given(st.integers(3, 10), st.integers(3, 10),
+           st.sampled_from([2, 4]), st.sampled_from([2, 4]), st.integers(0, 50))
+    @settings(max_examples=12, deadline=None)
+    def test_structured_equals_serial_hypothesis(self, nx, ny, bs, w, seed):
+        a = problems.laplace2d(nx, ny)
+        ord_ = ordering.hbmc_order(a, bs, w)
+        ap = ordering.permute_padded(a, ord_.new_of_old, ord_.n_new)
+        lower, diag = ref.ic0(ap)
+        data = ref.build_hbmc_data(lower, diag, ord_.color_ptr, bs, w)
+        rng = np.random.default_rng(seed)
+        r = rng.uniform(-1, 1, ord_.n_new)
+        z1 = ref.precond_serial(lower, diag, r)
+        z2 = ref.backward_structured(data, ref.forward_structured(data, r))
+        np.testing.assert_allclose(z2, z1, atol=1e-11)
+
+
+class TestSell:
+    def test_spmv_matches_csr(self):
+        a = problems.random_spd(32, 3, 7)
+        val, col = ref.sell_from_csr(a, 4)
+        rng = np.random.default_rng(8)
+        x = rng.uniform(-1, 1, 32)
+        np.testing.assert_allclose(ref.spmv_sell_ref(val, col, x), a @ x, atol=1e-12)
+
+    def test_requires_multiple_of_c(self):
+        a = problems.random_spd(10, 2, 1)
+        with pytest.raises(AssertionError):
+            ref.sell_from_csr(a, 4)
+
+    def test_padding_is_harmless(self):
+        # A matrix with an empty row pattern beyond diagonal.
+        a = sp.eye(8, format="csr")
+        val, col = ref.sell_from_csr(sp.csr_matrix(a), 4)
+        x = np.arange(8.0)
+        np.testing.assert_allclose(ref.spmv_sell_ref(val, col, x), x)

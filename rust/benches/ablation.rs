@@ -1,0 +1,100 @@
+//! Ablation benches (DESIGN.md experiments A1/A2 — the paper's §7 "future
+//! work" knobs, measured):
+//!
+//! * A1 — SELL slice-size / σ-sorting effect on stored elements and SpMV
+//!   time (the §5.2.2 Audikw_1 pathology and its remedy),
+//! * A2 — block size `bs` and width `w` sweep beyond the paper's grid:
+//!   iterations (convergence cost of larger blocks) and substitution time.
+//!
+//! `cargo bench --bench ablation`
+
+use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
+use hbmc::coordinator::driver::solve;
+use hbmc::coordinator::report::{secs, Table};
+use hbmc::gen::suite;
+use hbmc::sparse::sell::Sell;
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "full") { Scale::Full } else { Scale::Small };
+
+    // ---- A1: SELL layout ablation on the imbalanced dataset --------------
+    let mut t1 = Table::new(
+        "A1 — SELL stored-element overhead vs slice size / σ (audikw_1-class)",
+        &["layout", "stored elems", "overhead vs CRS"],
+    );
+    let d = suite::dataset("audikw_1", scale);
+    let nnz = d.matrix.nnz();
+    t1.push_row(vec!["CRS".into(), nnz.to_string(), "+0.0%".into()]);
+    for c in [4usize, 8, 16] {
+        let s = Sell::from_csr(&d.matrix, c);
+        t1.push_row(vec![
+            format!("SELL-{c}"),
+            s.stored_elements().to_string(),
+            format!("{:+.1}%", 100.0 * (s.overhead_vs(nnz) - 1.0)),
+        ]);
+    }
+    for sigma in [32usize, 128, 1024] {
+        let s = Sell::from_csr_sigma(&d.matrix, 8, sigma);
+        t1.push_row(vec![
+            format!("SELL-8-σ{sigma}"),
+            s.stored_elements().to_string(),
+            format!("{:+.1}%", 100.0 * (s.overhead_vs(nnz) - 1.0)),
+        ]);
+    }
+    print!("{}", t1.render());
+
+    // ---- A2: bs × w sweep --------------------------------------------------
+    let mut t2 = Table::new(
+        "A2 — HBMC bs × w sweep on g3_circuit (iterations & time)",
+        &["bs", "w", "colors", "iters", "time (s)"],
+    );
+    let d = suite::dataset("g3_circuit", scale);
+    for bs in [4usize, 8, 16, 32, 64] {
+        for w in [4usize, 8] {
+            let cfg = SolverConfig {
+                ordering: OrderingKind::Hbmc,
+                bs,
+                w,
+                spmv: SpmvKind::Sell,
+                shift: d.shift,
+                rtol: 1e-7,
+                ..Default::default()
+            };
+            let rep = solve(&d.matrix, &d.b, &cfg).expect("solve");
+            t2.push_row(vec![
+                bs.to_string(),
+                w.to_string(),
+                rep.setup.num_colors.to_string(),
+                rep.iterations.to_string(),
+                secs(rep.solve_seconds),
+            ]);
+        }
+    }
+    print!("{}", t2.render());
+
+    // ---- A2b: thread-count sweep (functional on this 1-core host) --------
+    let mut t3 = Table::new(
+        "A2b — thread sweep (1 physical core: verifies scheduling, not scaling)",
+        &["threads", "iters", "time (s)", "syncs/sub"],
+    );
+    for threads in [1usize, 2, 4] {
+        let cfg = SolverConfig {
+            ordering: OrderingKind::Hbmc,
+            bs: 32,
+            w: 8,
+            threads,
+            spmv: SpmvKind::Sell,
+            shift: d.shift,
+            rtol: 1e-7,
+            ..Default::default()
+        };
+        let rep = solve(&d.matrix, &d.b, &cfg).expect("solve");
+        t3.push_row(vec![
+            threads.to_string(),
+            rep.iterations.to_string(),
+            secs(rep.solve_seconds),
+            rep.syncs_per_substitution.to_string(),
+        ]);
+    }
+    print!("{}", t3.render());
+}

@@ -1,0 +1,132 @@
+//! Micro-benchmarks of the individual solver kernels (trisolve variants,
+//! SpMV variants, BLAS-1) — the per-kernel numbers behind Table 5.3's
+//! end-to-end times, and the harness used by the §Perf optimization loop.
+//!
+//! `cargo bench --bench kernels [-- full]`
+
+use hbmc::config::Scale;
+use hbmc::coordinator::pool::Pool;
+use hbmc::factor::ic0::ic0_auto;
+use hbmc::factor::split::{SellTriFactors, TriFactors};
+use hbmc::gen::suite;
+use hbmc::ordering::bmc::bmc_order;
+use hbmc::ordering::hbmc::{hbmc_from_bmc, hbmc_order};
+use hbmc::ordering::mc::mc_order;
+use hbmc::solver::spmv::{spmv_crs, spmv_sell};
+use hbmc::solver::trisolve_hbmc::{self, HbmcMeta};
+use hbmc::solver::{trisolve_bmc, trisolve_mc, trisolve_serial};
+use hbmc::sparse::sell::Sell;
+use hbmc::util::timer::bench_secs;
+use std::time::Duration;
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "full") { Scale::Full } else { Scale::Small };
+    let d = suite::dataset("g3_circuit", scale);
+    let a = &d.matrix;
+    let n0 = a.n();
+    println!("kernel microbench on {} (n={n0}, nnz={})\n", d.name, a.nnz());
+    let pool = Pool::new(1);
+    let budget = Duration::from_millis(300);
+
+    // --- SpMV ------------------------------------------------------------
+    {
+        let x = vec![1.0f64; n0];
+        let mut y = vec![0.0f64; n0];
+        let (crs, _) = bench_secs(5, budget, || spmv_crs(a, &x, &mut y, &pool));
+        let sell = Sell::from_csr(a, 8);
+        let (sel, _) = bench_secs(5, budget, || spmv_sell(&sell, &x, &mut y, &pool));
+        let sells = Sell::from_csr_sigma(a, 8, 64);
+        let (sels, _) = bench_secs(5, budget, || spmv_sell(&sells, &x, &mut y, &pool));
+        let gf = |t: f64, elems: usize| 2.0 * elems as f64 / t / 1e9;
+        println!("spmv crs      : {crs:.6}s ({:.2} GFLOP/s)", gf(crs, a.nnz()));
+        println!(
+            "spmv sell-8   : {sel:.6}s ({:.2} GFLOP/s, {:+.1}% pad)",
+            gf(sel, sell.stored_elements()),
+            100.0 * (sell.overhead_vs(a.nnz()) - 1.0)
+        );
+        println!(
+            "spmv sell-8 σ : {sels:.6}s ({:.2} GFLOP/s, {:+.1}% pad)",
+            gf(sels, sells.stored_elements()),
+            100.0 * (sells.overhead_vs(a.nnz()) - 1.0)
+        );
+    }
+
+    // --- Triangular solves -------------------------------------------------
+    println!("\nforward+backward substitution (one preconditioner application):");
+    {
+        // natural / serial
+        let f = ic0_auto(a, 0.0).unwrap();
+        let tri = TriFactors::from_ic(&f);
+        let r = vec![1.0f64; n0];
+        let mut s = vec![0.0f64; n0];
+        let mut z = vec![0.0f64; n0];
+        let (t, _) = bench_secs(3, budget, || trisolve_serial::apply(&tri, &r, &mut s, &mut z));
+        println!("serial (natural)        : {t:.6}s");
+    }
+    {
+        let mc = mc_order(a);
+        let b = a.permute_sym(&mc.perm);
+        let f = ic0_auto(&b, 0.0).unwrap();
+        let tri = TriFactors::from_ic(&f);
+        let n = b.n();
+        let r = vec![1.0f64; n];
+        let mut s = vec![0.0f64; n];
+        let mut z = vec![0.0f64; n];
+        let (t, _) = bench_secs(3, budget, || {
+            trisolve_mc::forward(&tri, &mc.color_ptr, &r, &mut s, &pool);
+            trisolve_mc::backward(&tri, &mc.color_ptr, &s, &mut z, &pool);
+        });
+        println!("MC ({:>3} colors)         : {t:.6}s", mc.num_colors);
+    }
+    for bs in [8usize, 16, 32] {
+        let ord = bmc_order(a, bs);
+        let b = a.permute_sym(&ord.perm);
+        let f = ic0_auto(&b, 0.0).unwrap();
+        let tri = TriFactors::from_ic(&f);
+        let n = b.n();
+        let r = vec![1.0f64; n];
+        let mut s = vec![0.0f64; n];
+        let mut z = vec![0.0f64; n];
+        let (t, _) = bench_secs(3, budget, || {
+            trisolve_bmc::forward(&tri, &ord.color_ptr, bs, &r, &mut s, &pool);
+            trisolve_bmc::backward(&tri, &ord.color_ptr, bs, &s, &mut z, &pool);
+        });
+        println!("BMC bs={bs:<2} ({:>2} colors)   : {t:.6}s", ord.num_colors);
+
+        let hord = hbmc_from_bmc(ord, 8);
+        let bh = a.permute_sym(&hord.perm);
+        let fh = ic0_auto(&bh, 0.0).unwrap();
+        let trih = TriFactors::from_ic(&fh);
+        let sellh = SellTriFactors::from_tri(&trih, 8);
+        let meta = HbmcMeta::from_ordering(&hord);
+        let nh = bh.n();
+        let rh = vec![1.0f64; nh];
+        let mut sh = vec![0.0f64; nh];
+        let mut zh = vec![0.0f64; nh];
+        let path = trisolve_hbmc::select_path(8, true);
+        let (t, _) = bench_secs(3, budget, || {
+            trisolve_hbmc::forward(&meta, &sellh, &rh, &mut sh, &pool, path);
+            trisolve_hbmc::backward(&meta, &sellh, &sh, &mut zh, &pool, path);
+        });
+        println!("HBMC bs={bs:<2} w=8 [{:>10}]: {t:.6}s", path.name());
+    }
+
+    // --- scaling in w ------------------------------------------------------
+    println!("\nHBMC forward substitution vs SIMD width (bs=16):");
+    for w in [2usize, 4, 8, 16] {
+        let ord = hbmc_order(a, 16, w);
+        let b = a.permute_sym(&ord.perm);
+        let f = ic0_auto(&b, 0.0).unwrap();
+        let tri = TriFactors::from_ic(&f);
+        let sell = SellTriFactors::from_tri(&tri, w);
+        let meta = HbmcMeta::from_ordering(&ord);
+        let n = b.n();
+        let r = vec![1.0f64; n];
+        let mut y = vec![0.0f64; n];
+        let path = trisolve_hbmc::select_path(w, true);
+        let (t, _) = bench_secs(3, budget, || {
+            trisolve_hbmc::forward(&meta, &sell, &r, &mut y, &pool, path);
+        });
+        println!("  w={w:<2} [{:>10}]: {t:.6}s", path.name());
+    }
+}

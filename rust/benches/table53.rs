@@ -1,0 +1,47 @@
+//! Bench: regenerate **Table 5.3 (a/b/c)** — ICCG execution time for MC,
+//! BMC, HBMC(crs_spmv), HBMC(sell_spmv) × bs ∈ {8, 16, 32} on the five
+//! datasets, for one of the three node presets standing in for the
+//! paper's machines (Table 4.1).
+//!
+//! `cargo bench --bench table53 [-- --node knl|bdw|skx] [-- full]`
+//! (no flag = all three nodes, i.e. 5.3a + 5.3b + 5.3c).
+
+use hbmc::config::{NodePreset, Scale};
+use hbmc::coordinator::experiments::table_5_3;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let scale = if args.iter().any(|a| a == "full") { Scale::Full } else { Scale::Small };
+    let nodes: Vec<NodePreset> = match args.iter().position(|a| a == "--node") {
+        Some(i) => vec![NodePreset::parse(&args[i + 1]).expect("node preset")],
+        None => NodePreset::all().to_vec(),
+    };
+    for node in nodes {
+        eprintln!("table 5.3 for {} at scale {scale:?} ...", node.name());
+        let (table, cells) = table_5_3(node, scale, 1).expect("table 5.3 run");
+        print!("{}", table.render());
+
+        // Paper-shape checks printed per node.
+        let mut hbmc_wins = 0usize;
+        let mut cases = 0usize;
+        for d in hbmc::gen::suite::NAMES {
+            let best_bmc = cells
+                .iter()
+                .filter(|c| c.dataset == d && c.solver == "BMC")
+                .map(|c| c.report.solve_seconds)
+                .fold(f64::INFINITY, f64::min);
+            for solver in ["HBMC(crs)", "HBMC(sell)"] {
+                let best = cells
+                    .iter()
+                    .filter(|c| c.dataset == d && c.solver == solver)
+                    .map(|c| c.report.solve_seconds)
+                    .fold(f64::INFINITY, f64::min);
+                cases += 1;
+                if best <= best_bmc {
+                    hbmc_wins += 1;
+                }
+            }
+        }
+        println!("paper check — HBMC best ≤ BMC best in {hbmc_wins}/{cases} dataset-cells\n");
+    }
+}

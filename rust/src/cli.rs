@@ -1,0 +1,100 @@
+//! Dependency-free command-line parsing (no `clap` in the offline crate
+//! set). Grammar: `hbmc <command> [--flag value]... [--switch]...`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+/// Flags that take no value.
+const SWITCHES: [&str; 4] = ["history", "verbose", "no-intrinsics", "help"];
+
+impl Args {
+    /// Parse from an iterator of arguments (program name excluded).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument {tok:?}");
+            };
+            if SWITCHES.contains(&name) {
+                switches.push(name.to_string());
+            } else {
+                let Some(val) = it.next() else {
+                    bail!("flag --{name} expects a value");
+                };
+                flags.insert(name.to_string(), val);
+            }
+        }
+        Ok(Args { command, flags, switches })
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer")),
+        }
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args> {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn command_and_flags() {
+        let a = parse("solve --dataset ieej --bs 16 --history").unwrap();
+        assert_eq!(a.command, "solve");
+        assert_eq!(a.flag("dataset"), Some("ieej"));
+        assert_eq!(a.usize_flag("bs", 32).unwrap(), 16);
+        assert_eq!(a.usize_flag("w", 8).unwrap(), 8);
+        assert!(a.switch("history"));
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let a = parse("").unwrap();
+        assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse("solve --dataset").is_err());
+        assert!(parse("solve stray").is_err());
+        assert!(parse("solve --bs notanum").unwrap().usize_flag("bs", 1).is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! Solver configuration: ordering choice, block size `bs`, SIMD width `w`,
+//! SpMV storage, thread count, convergence controls, plus the three
+//! "node-like" presets that stand in for the paper's three test machines
+//! (Table 4.1) on this host.
+
+use anyhow::{bail, Result};
+
+/// Which parallel ordering drives the triangular solver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OrderingKind {
+    /// Natural ordering, serial substitutions (sanity baseline; not in the
+    /// paper's tables).
+    Natural,
+    /// Nodal multi-color ordering ("MC").
+    Mc,
+    /// Block multi-color ordering ("BMC").
+    Bmc,
+    /// Hierarchical block multi-color ordering ("HBMC") — the paper.
+    Hbmc,
+}
+
+impl OrderingKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "natural" | "none" => OrderingKind::Natural,
+            "mc" => OrderingKind::Mc,
+            "bmc" => OrderingKind::Bmc,
+            "hbmc" => OrderingKind::Hbmc,
+            other => bail!("unknown ordering {other:?} (natural|mc|bmc|hbmc)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OrderingKind::Natural => "natural",
+            OrderingKind::Mc => "MC",
+            OrderingKind::Bmc => "BMC",
+            OrderingKind::Hbmc => "HBMC",
+        }
+    }
+}
+
+/// SpMV storage for the CG matrix-vector product (the paper's
+/// `HBMC (crs_spmv)` vs `HBMC (sell_spmv)` distinction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpmvKind {
+    Crs,
+    Sell,
+}
+
+impl SpmvKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "crs" | "csr" => SpmvKind::Crs,
+            "sell" => SpmvKind::Sell,
+            other => bail!("unknown spmv kind {other:?} (crs|sell)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpmvKind::Crs => "crs",
+            SpmvKind::Sell => "sell",
+        }
+    }
+}
+
+/// Problem scale for the generated datasets (DESIGN.md §3: scaled stand-ins
+/// for the paper's SuiteSparse matrices).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// A few thousand unknowns — unit/integration tests.
+    Tiny,
+    /// Tens of thousands — default for benches on this 1-core host.
+    Small,
+    /// Hundreds of thousands — closest to the paper's dimensions.
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "tiny" => Scale::Tiny,
+            "small" => Scale::Small,
+            "full" => Scale::Full,
+            other => bail!("unknown scale {other:?} (tiny|small|full)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scale::Tiny => "tiny",
+            Scale::Small => "small",
+            Scale::Full => "full",
+        }
+    }
+}
+
+/// Full solver configuration.
+#[derive(Debug, Clone)]
+pub struct SolverConfig {
+    pub ordering: OrderingKind,
+    /// BMC/HBMC block size (paper sweeps 8, 16, 32).
+    pub bs: usize,
+    /// SIMD width / HBMC level-2 width / SELL slice height.
+    pub w: usize,
+    pub spmv: SpmvKind,
+    /// SELL-C-σ window for the SpMV matrix (None = unsorted SELL-w).
+    pub sell_sigma: Option<usize>,
+    pub threads: usize,
+    /// Relative residual convergence criterion (paper: 1e-7).
+    pub rtol: f64,
+    pub max_iters: usize,
+    /// Diagonal shift σ for shifted IC (paper: 0.3 for Ieej, else 0).
+    pub shift: f64,
+    /// Use the explicit AVX-512/AVX2 intrinsic path when available.
+    pub use_intrinsics: bool,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig {
+            ordering: OrderingKind::Hbmc,
+            bs: 32,
+            w: 8,
+            spmv: SpmvKind::Sell,
+            sell_sigma: None,
+            threads: 1,
+            rtol: 1e-7,
+            max_iters: 20_000,
+            shift: 0.0,
+            use_intrinsics: true,
+        }
+    }
+}
+
+/// A "node-like" preset mirroring one of the paper's three machines
+/// (Table 4.1). On this single host the presets differ in `w` (SIMD width)
+/// and the intrinsic path, which is the axis the paper's cross-machine
+/// story actually varies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodePreset {
+    /// Cray XC40, Xeon Phi KNL: AVX-512 → w = 8.
+    KnlLike,
+    /// Cray CS400, Xeon Broadwell: AVX2 → w = 4.
+    BdwLike,
+    /// Fujitsu CX2550, Xeon Skylake: AVX-512 → w = 8, intrinsics on.
+    SkxLike,
+}
+
+impl NodePreset {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "knl" | "knl-like" | "xc40" => NodePreset::KnlLike,
+            "bdw" | "bdw-like" | "cs400" | "broadwell" => NodePreset::BdwLike,
+            "skx" | "skx-like" | "cx2550" | "skylake" => NodePreset::SkxLike,
+            other => bail!("unknown node preset {other:?} (knl|bdw|skx)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NodePreset::KnlLike => "knl-like (XC40)",
+            NodePreset::BdwLike => "bdw-like (CS400)",
+            NodePreset::SkxLike => "skx-like (CX2550)",
+        }
+    }
+
+    /// SIMD width of the preset.
+    pub fn w(&self) -> usize {
+        match self {
+            NodePreset::BdwLike => 4,
+            _ => 8,
+        }
+    }
+
+    /// Apply the preset onto a config.
+    pub fn apply(&self, cfg: &mut SolverConfig) {
+        cfg.w = self.w();
+        cfg.use_intrinsics = true;
+    }
+
+    pub fn all() -> [NodePreset; 3] {
+        [NodePreset::KnlLike, NodePreset::BdwLike, NodePreset::SkxLike]
+    }
+}
+
+impl SolverConfig {
+    /// Validate parameter coherence.
+    pub fn validate(&self) -> Result<()> {
+        if self.bs == 0 || self.w == 0 {
+            bail!("bs and w must be positive");
+        }
+        if self.ordering == OrderingKind::Hbmc && self.bs < 1 {
+            bail!("hbmc requires bs >= 1");
+        }
+        if self.threads == 0 {
+            bail!("threads must be >= 1");
+        }
+        if !(self.rtol > 0.0) {
+            bail!("rtol must be > 0");
+        }
+        if let Some(sigma) = self.sell_sigma {
+            if sigma < self.w || sigma % self.w != 0 {
+                bail!("sell_sigma must be a positive multiple of w");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(OrderingKind::parse("HBMC").unwrap(), OrderingKind::Hbmc);
+        assert_eq!(OrderingKind::parse("mc").unwrap(), OrderingKind::Mc);
+        assert!(OrderingKind::parse("xyz").is_err());
+        assert_eq!(SpmvKind::parse("CSR").unwrap(), SpmvKind::Crs);
+        assert_eq!(Scale::parse("full").unwrap(), Scale::Full);
+        assert_eq!(NodePreset::parse("skx").unwrap(), NodePreset::SkxLike);
+    }
+
+    #[test]
+    fn default_is_valid() {
+        assert!(SolverConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn presets_set_w() {
+        let mut cfg = SolverConfig::default();
+        NodePreset::BdwLike.apply(&mut cfg);
+        assert_eq!(cfg.w, 4);
+        NodePreset::KnlLike.apply(&mut cfg);
+        assert_eq!(cfg.w, 8);
+    }
+
+    #[test]
+    fn validation_catches_bad_sigma() {
+        let cfg = SolverConfig { sell_sigma: Some(6), w: 4, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = SolverConfig { sell_sigma: Some(8), w: 4, ..Default::default() };
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_catches_zero_threads() {
+        let cfg = SolverConfig { threads: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! End-to-end solve orchestration: dataset/matrix + config → ordered,
+//! factored, storage-built solver → PCG run → [`SolveReport`] with every
+//! metric the paper's tables and figures need.
+
+use anyhow::Result;
+
+use crate::config::SolverConfig;
+use crate::solver::cg::CgResult;
+use crate::solver::iccg::{IccgSolver, SetupStats};
+use crate::sparse::csr::Csr;
+
+/// Everything the benches/tables/CLI report about one solve.
+#[derive(Debug, Clone)]
+pub struct SolveReport {
+    pub config_label: String,
+    pub iterations: usize,
+    pub converged: bool,
+    pub final_relres: f64,
+    /// Iteration-loop wall time (the paper's Table 5.3 "execution time").
+    pub solve_seconds: f64,
+    pub setup: SetupStats,
+    /// Per-kernel time breakdown (trisolve / spmv / blas1).
+    pub kernel_seconds: Vec<(&'static str, f64)>,
+    /// Analytic packed-FP fraction (§5.2.1 SIMD statistic).
+    pub simd_ratio: f64,
+    /// Syncs per substitution sweep (= n_c − 1).
+    pub syncs_per_substitution: usize,
+    /// SELL processed-element overhead vs CRS nnz (§5.2.2), if SELL used.
+    pub sell_overhead: Option<f64>,
+    /// Residual history when requested (Fig. 5.1).
+    pub residual_history: Vec<f64>,
+    /// Solution max-error vs the known x* = 1 when the rhs was A·1.
+    pub solution: Vec<f64>,
+}
+
+impl SolveReport {
+    fn from_parts(label: String, solver: &IccgSolver, cg: CgResult, x: Vec<f64>, syncs: usize) -> SolveReport {
+        let sell_overhead = match solver.cfg.spmv {
+            crate::config::SpmvKind::Sell => {
+                Some(solver.setup.spmv_elements as f64 / solver.setup.nnz as f64)
+            }
+            crate::config::SpmvKind::Crs => None,
+        };
+        SolveReport {
+            config_label: label,
+            iterations: cg.iterations,
+            converged: cg.converged,
+            final_relres: cg.final_relres,
+            solve_seconds: cg.solve_seconds,
+            setup: solver.setup.clone(),
+            kernel_seconds: cg
+                .times
+                .iter()
+                .map(|(n, d)| (n, d.as_secs_f64()))
+                .collect(),
+            simd_ratio: solver.ops.simd_ratio(),
+            syncs_per_substitution: syncs,
+            sell_overhead,
+            residual_history: cg.residual_history,
+            solution: x,
+        }
+    }
+
+    /// Seconds spent in a kernel bucket.
+    pub fn kernel(&self, name: &str) -> f64 {
+        self.kernel_seconds
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+}
+
+/// One-shot convenience: build + solve.
+pub fn solve(a: &Csr, b: &[f64], cfg: &SolverConfig) -> Result<SolveReport> {
+    solve_opts(a, b, cfg, false)
+}
+
+/// One-shot with residual-history recording (Fig. 5.1).
+pub fn solve_opts(a: &Csr, b: &[f64], cfg: &SolverConfig, record_history: bool) -> Result<SolveReport> {
+    let solver = IccgSolver::new(a, cfg)?;
+    let out = solver.solve_opts(b, record_history)?;
+    let label = format!(
+        "{}(bs={},w={},{})",
+        cfg.ordering.name(),
+        cfg.bs,
+        cfg.w,
+        cfg.spmv.name()
+    );
+    Ok(SolveReport::from_parts(label, &solver, out.cg, out.x, out.syncs_per_substitution))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{OrderingKind, SolverConfig, SpmvKind};
+    use crate::gen::suite;
+
+    #[test]
+    fn report_has_full_metric_set() {
+        let d = suite::dataset("g3_circuit", crate::config::Scale::Tiny);
+        let cfg = SolverConfig {
+            ordering: OrderingKind::Hbmc,
+            bs: 8,
+            w: 4,
+            spmv: SpmvKind::Sell,
+            rtol: 1e-7,
+            ..Default::default()
+        };
+        let rep = solve_opts(&d.matrix, &d.b, &cfg, true).unwrap();
+        assert!(rep.converged, "relres={}", rep.final_relres);
+        assert!(rep.iterations > 0);
+        assert!(rep.solve_seconds > 0.0);
+        assert!(rep.simd_ratio > 0.9, "hbmc+sell should be mostly packed");
+        assert!(rep.sell_overhead.unwrap() >= 1.0);
+        assert_eq!(rep.residual_history.len(), rep.iterations);
+        assert!(rep.kernel("trisolve") > 0.0);
+        assert!(rep.kernel("spmv") > 0.0);
+        assert_eq!(rep.syncs_per_substitution, rep.setup.num_colors - 1);
+        // rhs was A·1 → solution ≈ 1.
+        let err = rep.solution.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-4, "solution error {err}");
+    }
+}

@@ -1,0 +1,272 @@
+//! Reproduction harness for every table and figure in the paper's
+//! evaluation (§5), shared by the CLI (`hbmc table ...`) and the bench
+//! binaries (`cargo bench`). Each function regenerates one artifact:
+//!
+//! * [`table_5_2`] — iteration counts MC / BMC / HBMC (Table 5.2),
+//! * [`fig_5_1`] — BMC vs HBMC residual histories (Fig. 5.1),
+//! * [`table_5_3`] — execution times, 4 solvers × bs ∈ {8,16,32}
+//!   (Tables 5.3 a/b/c via the node preset),
+//! * [`simd_ratio_stat`] — the §5.2.1 packed-instruction statistic,
+//! * [`sell_overhead_stat`] — the §5.2.2 processed-elements comparison.
+
+use anyhow::Result;
+
+use crate::config::{NodePreset, OrderingKind, Scale, SolverConfig, SpmvKind};
+use crate::coordinator::driver::{solve, solve_opts, SolveReport};
+use crate::coordinator::report::{pct, secs, Table};
+use crate::gen::suite;
+
+/// The paper's block-size sweep.
+pub const BLOCK_SIZES: [usize; 3] = [8, 16, 32];
+
+fn base_cfg(threads: usize) -> SolverConfig {
+    SolverConfig { threads, rtol: 1e-7, max_iters: 50_000, ..Default::default() }
+}
+
+/// Table 5.2: iteration counts of MC, BMC and HBMC (bs = 32) on the five
+/// datasets. The BMC and HBMC columns must be identical (equivalence).
+pub fn table_5_2(scale: Scale, threads: usize) -> Result<(Table, Vec<[usize; 3]>)> {
+    let mut t = Table::new(
+        "Table 5.2 — number of ICCG iterations (bs = 32, rtol 1e-7)",
+        &["Dataset", "MC", "BMC", "HBMC"],
+    );
+    let mut raw = Vec::new();
+    for d in suite::all(scale) {
+        let mut iters = [0usize; 3];
+        for (slot, ordering) in
+            [OrderingKind::Mc, OrderingKind::Bmc, OrderingKind::Hbmc].into_iter().enumerate()
+        {
+            let cfg = SolverConfig {
+                ordering,
+                bs: 32,
+                w: 4,
+                spmv: SpmvKind::Crs,
+                shift: d.shift,
+                ..base_cfg(threads)
+            };
+            let rep = solve(&d.matrix, &d.b, &cfg)?;
+            iters[slot] = rep.iterations;
+        }
+        t.push_row(vec![
+            d.name.clone(),
+            iters[0].to_string(),
+            iters[1].to_string(),
+            iters[2].to_string(),
+        ]);
+        raw.push(iters);
+    }
+    Ok((t, raw))
+}
+
+/// Fig 5.1 data: per-iteration relative residuals for BMC and HBMC on the
+/// requested datasets (paper uses G3_circuit and Ieej). Returns
+/// `(dataset, bmc_history, hbmc_history)` tuples; CSV rendering is up to
+/// the caller.
+pub type ConvergenceCurves = Vec<(String, Vec<f64>, Vec<f64>)>;
+
+pub fn fig_5_1(datasets: &[&str], scale: Scale, threads: usize) -> Result<ConvergenceCurves> {
+    let mut out = Vec::new();
+    for name in datasets {
+        let d = suite::dataset(name, scale);
+        let mk = |ordering| SolverConfig {
+            ordering,
+            bs: 32,
+            w: 4,
+            spmv: SpmvKind::Crs,
+            shift: d.shift,
+            ..base_cfg(threads)
+        };
+        let rb = solve_opts(&d.matrix, &d.b, &mk(OrderingKind::Bmc), true)?;
+        let rh = solve_opts(&d.matrix, &d.b, &mk(OrderingKind::Hbmc), true)?;
+        out.push((d.name.clone(), rb.residual_history, rh.residual_history));
+    }
+    Ok(out)
+}
+
+/// One cell of Table 5.3.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub dataset: String,
+    pub solver: String,
+    pub bs: usize,
+    pub report: SolveReport,
+}
+
+/// Table 5.3 (a/b/c by node preset): execution time of MC, BMC(bs),
+/// HBMC(crs_spmv)(bs), HBMC(sell_spmv)(bs).
+pub fn table_5_3(node: NodePreset, scale: Scale, threads: usize) -> Result<(Table, Vec<Cell>)> {
+    let w = node.w();
+    let mut t = Table::new(
+        &format!("Table 5.3 — ICCG execution time (s), node preset {}", node.name()),
+        &[
+            "Dataset", "MC",
+            "BMC b8", "BMC b16", "BMC b32",
+            "Hcrs b8", "Hcrs b16", "Hcrs b32",
+            "Hsell b8", "Hsell b16", "Hsell b32",
+        ],
+    );
+    let mut cells = Vec::new();
+    for d in suite::all(scale) {
+        let mut row = vec![d.name.clone()];
+        // MC baseline (CRS SpMV, as in the paper).
+        let cfg = SolverConfig {
+            ordering: OrderingKind::Mc,
+            w,
+            spmv: SpmvKind::Crs,
+            shift: d.shift,
+            ..base_cfg(threads)
+        };
+        let rep = solve(&d.matrix, &d.b, &cfg)?;
+        row.push(secs(rep.solve_seconds));
+        cells.push(Cell { dataset: d.name.clone(), solver: "MC".into(), bs: 0, report: rep });
+
+        for (solver, ordering, spmv) in [
+            ("BMC", OrderingKind::Bmc, SpmvKind::Crs),
+            ("HBMC(crs)", OrderingKind::Hbmc, SpmvKind::Crs),
+            ("HBMC(sell)", OrderingKind::Hbmc, SpmvKind::Sell),
+        ] {
+            for bs in BLOCK_SIZES {
+                let cfg = SolverConfig {
+                    ordering,
+                    bs,
+                    w,
+                    spmv,
+                    shift: d.shift,
+                    ..base_cfg(threads)
+                };
+                let rep = solve(&d.matrix, &d.b, &cfg)?;
+                row.push(secs(rep.solve_seconds));
+                cells.push(Cell {
+                    dataset: d.name.clone(),
+                    solver: solver.into(),
+                    bs,
+                    report: rep,
+                });
+            }
+        }
+        t.push_row(row);
+    }
+    Ok((t, cells))
+}
+
+/// §5.2.1: packed-FP-operation share, HBMC(sell) vs BMC, per dataset
+/// (paper: 99.7% vs 12.7% on G3_circuit/Skylake).
+pub fn simd_ratio_stat(scale: Scale, threads: usize) -> Result<Table> {
+    let mut t = Table::new(
+        "§5.2.1 — packed FP operation share (analytic, per CG iteration)",
+        &["Dataset", "BMC (crs)", "HBMC (sell)", "HBMC (crs)"],
+    );
+    for d in suite::all(scale) {
+        let mut vals = Vec::new();
+        for (ordering, spmv) in [
+            (OrderingKind::Bmc, SpmvKind::Crs),
+            (OrderingKind::Hbmc, SpmvKind::Sell),
+            (OrderingKind::Hbmc, SpmvKind::Crs),
+        ] {
+            let cfg = SolverConfig {
+                ordering,
+                bs: 32,
+                w: 8,
+                spmv,
+                shift: d.shift,
+                max_iters: 1, // setup only; ratio is analytic
+                ..base_cfg(threads)
+            };
+            let solver = crate::solver::iccg::IccgSolver::new(&d.matrix, &cfg)?;
+            vals.push(solver.ops.simd_ratio());
+        }
+        t.push_row(vec![d.name.clone(), pct(vals[0]), pct(vals[1]), pct(vals[2])]);
+    }
+    Ok(t)
+}
+
+/// §5.2.2: SELL processed-elements overhead vs CRS per dataset and slice
+/// width (paper: +40% Audikw_1 vs +10% G3_circuit at w = 8, +28% at w=4).
+pub fn sell_overhead_stat(scale: Scale) -> Result<Table> {
+    use crate::sparse::sell::Sell;
+    let mut t = Table::new(
+        "§5.2.2 — SELL stored elements vs CRS nnz",
+        &["Dataset", "w=4", "w=8", "w=8 σ=64"],
+    );
+    for d in suite::all(scale) {
+        let nnz = d.matrix.nnz();
+        let o4 = Sell::from_csr(&d.matrix, 4).overhead_vs(nnz) - 1.0;
+        let o8 = Sell::from_csr(&d.matrix, 8).overhead_vs(nnz) - 1.0;
+        let o8s = Sell::from_csr_sigma(&d.matrix, 8, 64).overhead_vs(nnz) - 1.0;
+        t.push_row(vec![
+            d.name.clone(),
+            format!("+{}", pct(o4)),
+            format!("+{}", pct(o8)),
+            format!("+{}", pct(o8s)),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table52_bmc_equals_hbmc() {
+        let (t, raw) = table_5_2(Scale::Tiny, 1).unwrap();
+        assert_eq!(raw.len(), 5);
+        for (row, iters) in t.rows.iter().zip(&raw) {
+            // Tiny-scale ill-conditioned systems amplify FP drift more than
+            // the paper's full-size runs (which still show 1714 vs 1715);
+            // allow a few iterations of slack here.
+            assert!(
+                iters[1].abs_diff(iters[2]) <= 2 + iters[1] / 20,
+                "BMC ≠ HBMC on {}: {} vs {}",
+                row[0],
+                iters[1],
+                iters[2]
+            );
+            assert!(iters[0] > 0);
+        }
+    }
+
+    #[test]
+    fn fig51_histories_overlap() {
+        let curves = fig_5_1(&["g3_circuit"], Scale::Tiny, 1).unwrap();
+        let (_, bmc, hbmc) = &curves[0];
+        assert_eq!(bmc.len(), hbmc.len());
+        // Mathematically identical; FP reassociation between the two
+        // kernel shapes leaves round-off-level drift that ill-conditioned
+        // systems amplify late in the run — check the early phase tightly.
+        for (a, b) in bmc.iter().zip(hbmc).take(40) {
+            assert!((a - b).abs() <= 1e-5 * a.max(*b), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn simd_stat_shows_contrast() {
+        let t = simd_ratio_stat(Scale::Tiny, 1).unwrap();
+        // HBMC(sell) column ~100%, BMC column much lower, HBMC(crs)
+        // in between. (The analytic flop-based ratio compresses the
+        // contrast relative to VTune's instruction-based 99.7% vs 12.7% —
+        // scalar loops also burn non-FP instructions — but the ordering
+        // and the near-100% HBMC(sell) value reproduce.)
+        for row in &t.rows {
+            let bmc: f64 = row[1].trim_end_matches('%').parse().unwrap();
+            let hsell: f64 = row[2].trim_end_matches('%').parse().unwrap();
+            let hcrs: f64 = row[3].trim_end_matches('%').parse().unwrap();
+            assert!(hsell > 95.0, "{row:?}");
+            assert!(bmc < hcrs && hcrs < hsell, "{row:?}");
+            assert!(bmc < 60.0, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn sell_overhead_audikw_worst() {
+        let t = sell_overhead_stat(Scale::Tiny).unwrap();
+        let get = |name: &str| -> f64 {
+            let row = t.rows.iter().find(|r| r[0] == name).unwrap();
+            row[2].trim_start_matches('+').trim_end_matches('%').parse().unwrap()
+        };
+        assert!(
+            get("audikw_1") > get("g3_circuit"),
+            "audikw SELL overhead should exceed g3_circuit"
+        );
+    }
+}

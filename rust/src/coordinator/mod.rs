@@ -1,0 +1,12 @@
+//! Layer-3 coordination: the color-barrier thread pool that implements the
+//! paper's multithreading model (§4.4.3 — one sync per color), work
+//! scheduling, solver metrics (including the packed-op ratio standing in
+//! for the paper's VTune SIMD statistic), the end-to-end driver and the
+//! paper-style report formatting.
+
+pub mod driver;
+pub mod experiments;
+pub mod metrics;
+pub mod pool;
+pub mod report;
+pub mod schedule;

@@ -1,0 +1,342 @@
+//! Persistent color-barrier thread pool.
+//!
+//! The paper's execution model (§4.4.3): the outer substitution loop runs
+//! over colors; *within* a color, threads process disjoint sets of rows /
+//! blocks / level-1 blocks; after each color all threads synchronize
+//! (`n_c − 1` synchronizations per substitution). This pool provides
+//! exactly that: [`Pool::run`] executes one closure on every worker
+//! (caller participates as worker 0) and [`Pool::color_barrier`] is the
+//! intra-job synchronization point, counted so the metrics can report
+//! syncs-per-substitution.
+//!
+//! Safety: `run` erases the closure's lifetime to hand it to the workers;
+//! the completion barrier at the end of `run` guarantees no worker touches
+//! the closure after `run` returns, so the borrow never escapes.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Lifetime-erased job pointer. The pool guarantees the pointee outlives
+/// every access (completion barrier in `run`).
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize, usize) + Sync));
+unsafe impl Send for JobPtr {}
+unsafe impl Sync for JobPtr {}
+
+struct Shared {
+    nthreads: usize,
+    /// All participants (workers + caller) meet here — used both for the
+    /// intra-job color barrier and for job completion.
+    barrier: Barrier,
+    job: Mutex<(u64, Option<JobPtr>)>, // (epoch, job)
+    job_cv: Condvar,
+    shutdown: AtomicBool,
+    syncs: AtomicU64,
+    active_jobs: AtomicUsize,
+}
+
+/// Persistent worker pool; see module docs.
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Create a pool with `nthreads` total workers (including the caller).
+    pub fn new(nthreads: usize) -> Pool {
+        assert!(nthreads >= 1);
+        let shared = Arc::new(Shared {
+            nthreads,
+            barrier: Barrier::new(nthreads),
+            job: Mutex::new((0, None)),
+            job_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            syncs: AtomicU64::new(0),
+            active_jobs: AtomicUsize::new(0),
+        });
+        let handles = (1..nthreads)
+            .map(|tid| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("hbmc-worker-{tid}"))
+                    .spawn(move || worker_loop(sh, tid))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Pool { shared, handles }
+    }
+
+    pub fn nthreads(&self) -> usize {
+        self.shared.nthreads
+    }
+
+    /// Execute `f(tid, nthreads)` on every worker; blocks until all done.
+    /// `f` may call [`Pool::color_barrier`] as long as **every** worker
+    /// performs the same number of barrier calls (true for color loops).
+    pub fn run(&self, f: &(dyn Fn(usize, usize) + Sync)) {
+        let n = self.shared.nthreads;
+        if n == 1 {
+            f(0, 1);
+            return;
+        }
+        debug_assert_eq!(
+            self.shared.active_jobs.swap(1, Ordering::SeqCst),
+            0,
+            "Pool::run is not reentrant"
+        );
+        {
+            let mut slot = self.shared.job.lock().unwrap();
+            // SAFETY: lifetime erased; completion barrier below keeps the
+            // borrow alive for the whole job.
+            let ptr: JobPtr = unsafe {
+                std::mem::transmute::<
+                    *const (dyn Fn(usize, usize) + Sync),
+                    JobPtr,
+                >(f as *const _)
+            };
+            slot.0 += 1;
+            slot.1 = Some(ptr);
+            self.shared.job_cv.notify_all();
+        }
+        f(0, n);
+        self.shared.barrier.wait(); // completion
+        self.shared.active_jobs.store(0, Ordering::SeqCst);
+    }
+
+    /// Intra-job synchronization point (one per color transition).
+    pub fn color_barrier(&self) {
+        if self.shared.nthreads > 1 {
+            self.shared.barrier.wait();
+        }
+        // Count per-thread waits normalized to whole-pool syncs on read.
+        self.shared.syncs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of whole-pool synchronizations since construction/reset
+    /// (color barriers only; job-completion barriers excluded).
+    pub fn sync_count(&self) -> u64 {
+        self.shared.syncs.load(Ordering::Relaxed) / self.shared.nthreads as u64
+    }
+
+    pub fn reset_sync_count(&self) {
+        self.shared.syncs.store(0, Ordering::Relaxed);
+    }
+
+    /// Split `0..len` into `nthreads` contiguous chunks; returns the range
+    /// of chunk `tid`.
+    pub fn chunk(len: usize, tid: usize, nthreads: usize) -> std::ops::Range<usize> {
+        let per = len.div_ceil(nthreads);
+        let lo = (tid * per).min(len);
+        let hi = ((tid + 1) * per).min(len);
+        lo..hi
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        {
+            let mut slot = self.shared.job.lock().unwrap();
+            slot.0 += 1;
+            self.shared.job_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>, tid: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut slot = sh.job.lock().unwrap();
+            while slot.0 == seen_epoch && !sh.shutdown.load(Ordering::SeqCst) {
+                slot = sh.job_cv.wait(slot).unwrap();
+            }
+            if sh.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            seen_epoch = slot.0;
+            slot.1
+        };
+        if let Some(JobPtr(ptr)) = job {
+            // SAFETY: `run` keeps the closure alive until the completion
+            // barrier below.
+            let f = unsafe { &*ptr };
+            f(tid, sh.nthreads);
+            sh.barrier.wait(); // completion
+        }
+    }
+}
+
+/// Shared-slice wrapper allowing disjoint concurrent writes from pool
+/// workers (each thread owns a distinct row range; cross-range reads are
+/// ordered by [`Pool::color_barrier`]).
+pub struct SyncSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for SyncSlice<'_, T> {}
+unsafe impl<T: Send> Sync for SyncSlice<'_, T> {}
+
+impl<'a, T> SyncSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        SyncSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read element `i`.
+    ///
+    /// # Safety
+    /// Caller must ensure no concurrent writer to `i` without a barrier in
+    /// between.
+    #[inline]
+    pub unsafe fn get(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i)
+    }
+
+    /// Write element `i`.
+    ///
+    /// # Safety
+    /// Caller must ensure exclusive access to index `i` (disjoint thread
+    /// partitions).
+    #[inline]
+    pub unsafe fn set(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+
+    /// Raw base pointer (for the intrinsic gather paths).
+    #[inline]
+    pub fn as_ptr(&self) -> *const T {
+        self.ptr
+    }
+
+    /// Mutable raw pointer into a disjoint region.
+    ///
+    /// # Safety
+    /// Same contract as [`SyncSlice::set`].
+    #[inline]
+    pub unsafe fn as_mut_ptr(&self) -> *mut T {
+        self.ptr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let pool = Pool::new(1);
+        let hits = AtomicUsize::new(0);
+        pool.run(&|tid, n| {
+            assert_eq!((tid, n), (0, 1));
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn all_workers_participate() {
+        let pool = Pool::new(4);
+        let mask = AtomicUsize::new(0);
+        pool.run(&|tid, n| {
+            assert_eq!(n, 4);
+            mask.fetch_or(1 << tid, Ordering::SeqCst);
+        });
+        assert_eq!(mask.load(Ordering::SeqCst), 0b1111);
+    }
+
+    #[test]
+    fn color_barrier_orders_phases() {
+        // Phase 1 writes each thread's cell; phase 2 reads all cells.
+        let pool = Pool::new(3);
+        let mut data = vec![0usize; 3];
+        let slice = SyncSlice::new(&mut data);
+        let ok = AtomicUsize::new(0);
+        pool.run(&|tid, n| {
+            unsafe { slice.set(tid, tid + 1) };
+            pool.color_barrier();
+            let sum: usize = (0..n).map(|i| unsafe { slice.get(i) }).sum();
+            if sum == 6 {
+                ok.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 3);
+        assert_eq!(pool.sync_count(), 1);
+    }
+
+    #[test]
+    fn sync_count_accumulates_and_resets() {
+        let pool = Pool::new(2);
+        pool.run(&|_, _| {
+            for _ in 0..5 {
+                pool.color_barrier();
+            }
+        });
+        assert_eq!(pool.sync_count(), 5);
+        pool.reset_sync_count();
+        assert_eq!(pool.sync_count(), 0);
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_workers() {
+        let pool = Pool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..10 {
+            pool.run(&|_, _| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 30);
+    }
+
+    #[test]
+    fn chunk_partition_covers_range() {
+        for len in [0usize, 1, 7, 100] {
+            for nt in [1usize, 2, 3, 8] {
+                let mut covered = vec![false; len];
+                for tid in 0..nt {
+                    for i in Pool::chunk(len, tid, nt) {
+                        assert!(!covered[i]);
+                        covered[i] = true;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c), "len={len} nt={nt}");
+            }
+        }
+    }
+
+    #[test]
+    fn borrowed_state_is_visible() {
+        let pool = Pool::new(4);
+        let local = vec![1.0f64; 32];
+        let mut out = vec![0.0f64; 32];
+        let o = SyncSlice::new(&mut out);
+        pool.run(&|tid, n| {
+            for i in Pool::chunk(32, tid, n) {
+                unsafe { o.set(i, local[i] * 2.0) };
+            }
+        });
+        assert!(out.iter().all(|&v| v == 2.0));
+    }
+}

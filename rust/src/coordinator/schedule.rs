@@ -1,0 +1,116 @@
+//! Work partitioning helpers beyond the plain contiguous chunking in
+//! [`crate::coordinator::pool::Pool::chunk`].
+//!
+//! §4.4.1: "we set the number of BMC blocks assigned to each thread as a
+//! multiple of w, except for one of the threads" — so each thread's BMC
+//! blocks regroup into whole level-1 blocks and the secondary reordering
+//! is thread-local. [`chunk_multiple`] implements that rounding rule.
+
+/// Split `0..len` into `nthreads` contiguous chunks whose sizes are
+/// multiples of `mult` (except possibly the last non-empty chunk).
+/// Returns the range of chunk `tid`.
+pub fn chunk_multiple(len: usize, tid: usize, nthreads: usize, mult: usize) -> std::ops::Range<usize> {
+    assert!(mult > 0 && nthreads > 0);
+    let units = len.div_ceil(mult); // number of mult-sized units
+    let per = units.div_ceil(nthreads);
+    let lo = (tid * per * mult).min(len);
+    let hi = ((tid + 1) * per * mult).min(len);
+    lo..hi
+}
+
+/// Static cost-balanced partition of weighted items into `k` contiguous
+/// chunks (greedy prefix splitting by average weight) — used to balance
+/// level-1 blocks with uneven SELL slice widths across threads.
+pub fn balanced_prefix_partition(weights: &[u64], k: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(k > 0);
+    let total: u64 = weights.iter().sum();
+    let target = total as f64 / k as f64;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0usize;
+    let mut acc = 0u64;
+    let mut chunk_idx = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        acc += w;
+        // Close this chunk once we pass its proportional target, keeping
+        // enough items for the remaining chunks.
+        let remaining_chunks = k - chunk_idx - 1;
+        let remaining_items = weights.len() - i - 1;
+        if chunk_idx < k - 1
+            && acc as f64 >= target * (chunk_idx + 1) as f64
+            && remaining_items >= remaining_chunks
+        {
+            out.push(start..i + 1);
+            start = i + 1;
+            chunk_idx += 1;
+        }
+    }
+    out.push(start..weights.len());
+    while out.len() < k {
+        out.push(weights.len()..weights.len());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_multiple_covers_and_aligns() {
+        for len in [0usize, 5, 16, 37, 100] {
+            for nt in [1usize, 2, 4] {
+                for m in [1usize, 4, 8] {
+                    let mut covered = vec![false; len];
+                    for tid in 0..nt {
+                        let r = chunk_multiple(len, tid, nt, m);
+                        if !r.is_empty() {
+                            assert_eq!(r.start % m, 0, "len={len} nt={nt} m={m} tid={tid}");
+                        }
+                        for i in r {
+                            assert!(!covered[i]);
+                            covered[i] = true;
+                        }
+                    }
+                    assert!(covered.iter().all(|&c| c), "len={len} nt={nt} m={m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_partition_covers() {
+        let w: Vec<u64> = vec![5, 1, 1, 1, 5, 1, 1, 1, 5];
+        let parts = balanced_prefix_partition(&w, 3);
+        assert_eq!(parts.len(), 3);
+        let mut covered = vec![false; w.len()];
+        for p in &parts {
+            for i in p.clone() {
+                assert!(!covered[i]);
+                covered[i] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn balanced_partition_is_roughly_even() {
+        let w: Vec<u64> = (0..100).map(|i| 1 + (i % 7) as u64).collect();
+        let parts = balanced_prefix_partition(&w, 4);
+        let sums: Vec<u64> = parts
+            .iter()
+            .map(|p| w[p.clone()].iter().sum::<u64>())
+            .collect();
+        let total: u64 = w.iter().sum();
+        for s in &sums {
+            assert!((*s as f64) < 0.5 * total as f64, "sums={sums:?}");
+        }
+    }
+
+    #[test]
+    fn more_chunks_than_items() {
+        let parts = balanced_prefix_partition(&[3, 3], 4);
+        assert_eq!(parts.len(), 4);
+        let covered: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(covered, 2);
+    }
+}

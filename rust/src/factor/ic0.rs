@@ -1,0 +1,300 @@
+//! IC(0): incomplete Cholesky with zero fill-in, `A ≈ L Lᵀ` with
+//! `pattern(L) = lower(pattern(A))` (paper §2, eq. 2.4).
+//!
+//! Up-looking row factorization; supports the *shifted* variant used by the
+//! paper for the semi-definite `Ieej` problem ("shifted ICCG method, with
+//! the shift parameter given as 0.3"): the diagonal is scaled by `1 + σ`
+//! before factorization.
+
+use anyhow::{bail, Result};
+
+use crate::sparse::csr::Csr;
+
+/// IC(0) factor: `L` lower-triangular including the diagonal.
+#[derive(Debug, Clone)]
+pub struct IcFactor {
+    /// Strict lower part of `L` (CSR, rows column-sorted).
+    pub lower: Csr,
+    /// Diagonal `l_ii > 0`.
+    pub diag: Vec<f64>,
+    /// Precomputed `1 / l_ii` for the substitution hot path.
+    pub diag_inv: Vec<f64>,
+    /// Shift σ used (0.0 for plain IC(0)).
+    pub shift: f64,
+}
+
+impl IcFactor {
+    pub fn n(&self) -> usize {
+        self.diag.len()
+    }
+
+    /// nnz of L including the diagonal.
+    pub fn nnz(&self) -> usize {
+        self.lower.nnz() + self.diag.len()
+    }
+
+    /// Dense `L` (tests only).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let n = self.n();
+        let mut d = self.lower.to_dense();
+        for (i, row) in d.iter_mut().enumerate().take(n) {
+            row[i] = self.diag[i];
+        }
+        d
+    }
+
+    /// Apply the preconditioner `z = (L Lᵀ)⁻¹ r` serially (reference path;
+    /// the parallel paths live in [`crate::solver`]).
+    pub fn apply_serial(&self, r: &[f64], z: &mut [f64]) {
+        let n = self.n();
+        assert_eq!(r.len(), n);
+        assert_eq!(z.len(), n);
+        // Forward: L y = r  (y stored in z).
+        for i in 0..n {
+            let (cols, vals) = self.lower.row(i);
+            let mut s = r[i];
+            for (c, v) in cols.iter().zip(vals) {
+                s -= v * z[*c as usize];
+            }
+            z[i] = s * self.diag_inv[i];
+        }
+        // Backward: Lᵀ z = y, in place.
+        for i in (0..n).rev() {
+            let zi = z[i] * self.diag_inv[i];
+            z[i] = zi;
+            let (cols, vals) = self.lower.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                z[*c as usize] -= v * zi;
+            }
+        }
+    }
+}
+
+/// Factor `A` (symmetric, column-sorted rows) with IC(0) and diagonal shift
+/// `σ`: factors `Ã` where `ã_ii = (1+σ)·a_ii`, `ã_ij = a_ij` off-diagonal.
+/// Fails on non-positive pivots (caller may retry with a larger shift —
+/// see [`ic0_auto`]).
+pub fn ic0(a: &Csr, shift: f64) -> Result<IcFactor> {
+    let n = a.n();
+    let lower_a = a.lower_strict();
+    // L has the pattern of strict lower(A); values computed in place.
+    let mut l = lower_a.clone();
+    let mut diag = vec![0.0f64; n];
+    let mut diag_inv = vec![0.0f64; n];
+
+    // Dense scratch holding the current row's working values, plus a marker
+    // of which columns are in the row pattern.
+    let mut scratch = vec![0.0f64; n];
+    let mut in_row = vec![false; n];
+
+    for i in 0..n {
+        let (cols, avals) = lower_a.row(i);
+        for (c, v) in cols.iter().zip(avals) {
+            scratch[*c as usize] = *v;
+            in_row[*c as usize] = true;
+        }
+        let aii = match a.get(i, i) {
+            Some(v) => v,
+            None => bail!("ic0: missing diagonal at row {i}"),
+        };
+        let mut dii = aii * (1.0 + shift);
+
+        // Ascending over the row pattern: finalize l_ij.
+        for &cj in cols {
+            let j = cj as usize;
+            let mut s = scratch[j];
+            // s -= Σ_{k<j} l_jk · l_ik  (l_ik are the already-final
+            // scratch entries of this row).
+            let (jcols, jvals) = l.row(j);
+            for (ck, ljk) in jcols.iter().zip(jvals) {
+                let k = *ck as usize;
+                if in_row[k] {
+                    s -= ljk * scratch[k];
+                }
+            }
+            let lij = s * diag_inv[j];
+            scratch[j] = lij;
+            dii -= lij * lij;
+        }
+
+        if dii <= 0.0 || !dii.is_finite() {
+            // Clean scratch before bailing.
+            for &c in cols {
+                scratch[c as usize] = 0.0;
+                in_row[c as usize] = false;
+            }
+            bail!("ic0: non-positive pivot {dii:.3e} at row {i} (shift {shift})");
+        }
+        diag[i] = dii.sqrt();
+        diag_inv[i] = 1.0 / diag[i];
+
+        // Write back the finalized row and reset scratch.
+        {
+            let r = lower_a.row_ptr()[i] as usize..lower_a.row_ptr()[i + 1] as usize;
+            let lvals = &mut l.vals_mut()[r];
+            for (slot, &c) in lvals.iter_mut().zip(cols) {
+                *slot = scratch[c as usize];
+            }
+        }
+        for &c in cols {
+            scratch[c as usize] = 0.0;
+            in_row[c as usize] = false;
+        }
+    }
+
+    Ok(IcFactor { lower: l, diag, diag_inv, shift })
+}
+
+/// IC(0) with automatic shift escalation: tries `σ`, then doubles from
+/// `max(σ, 0.01)` until the factorization succeeds (up to σ = 10).
+pub fn ic0_auto(a: &Csr, shift: f64) -> Result<IcFactor> {
+    match ic0(a, shift) {
+        Ok(f) => Ok(f),
+        Err(_) => {
+            let mut s = shift.max(0.01);
+            loop {
+                s *= 2.0;
+                if s > 10.0 {
+                    bail!("ic0_auto: no successful shift up to 10.0");
+                }
+                if let Ok(f) = ic0(a, s) {
+                    return Ok(f);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::util::rng::Rng;
+
+    fn laplace1d(n: usize) -> Csr {
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            c.push(i, i, 2.0);
+        }
+        for i in 0..n - 1 {
+            c.push_sym(i, i + 1, -1.0);
+        }
+        c.to_csr()
+    }
+
+    #[test]
+    fn tridiagonal_ic0_is_exact_cholesky() {
+        // For a tridiagonal SPD matrix IC(0) = complete Cholesky.
+        let a = laplace1d(6);
+        let f = ic0(&a, 0.0).unwrap();
+        let l = f.to_dense();
+        let n = 6;
+        // Check L Lᵀ == A.
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += l[i][k] * l[j][k];
+                }
+                let aij = a.get(i, j).unwrap_or(0.0);
+                assert!((s - aij).abs() < 1e-12, "({i},{j}): {s} vs {aij}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_serial_inverts_llt() {
+        let a = laplace1d(8);
+        let f = ic0(&a, 0.0).unwrap();
+        let mut rng = Rng::new(3);
+        let x: Vec<f64> = (0..8).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        // r = L Lᵀ x  computed densely.
+        let l = f.to_dense();
+        let mut ltx = vec![0.0; 8];
+        for i in 0..8 {
+            for j in 0..8 {
+                ltx[i] += l[j][i] * x[j];
+            }
+        }
+        let mut r = vec![0.0; 8];
+        for i in 0..8 {
+            for j in 0..8 {
+                r[i] += l[i][j] * ltx[j];
+            }
+        }
+        let mut z = vec![0.0; 8];
+        f.apply_serial(&r, &mut z);
+        assert!(crate::util::max_abs_diff(&z, &x) < 1e-10);
+    }
+
+    #[test]
+    fn shift_scales_diagonal() {
+        let a = laplace1d(5);
+        let f0 = ic0(&a, 0.0).unwrap();
+        let f3 = ic0(&a, 0.3).unwrap();
+        assert!(f3.diag[0] > f0.diag[0]);
+        assert!((f3.diag[0] * f3.diag[0] - 2.0 * 1.3).abs() < 1e-12);
+        assert_eq!(f3.shift, 0.3);
+    }
+
+    #[test]
+    fn breakdown_detected_and_auto_shift_recovers() {
+        // Singular Laplacian (Neumann): plain IC(0) breaks down at the last
+        // pivot or yields ~0; shifted succeeds.
+        let n = 5;
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            let deg = if i == 0 || i == n - 1 { 1.0 } else { 2.0 };
+            c.push(i, i, deg);
+        }
+        for i in 0..n - 1 {
+            c.push_sym(i, i + 1, -1.0);
+        }
+        let a = c.to_csr();
+        assert!(ic0(&a, 0.0).is_err());
+        let f = ic0_auto(&a, 0.0).unwrap();
+        assert!(f.shift > 0.0);
+        assert!(f.diag.iter().all(|&d| d > 0.0));
+    }
+
+    #[test]
+    fn missing_diagonal_errors() {
+        let mut c = Coo::new(2);
+        c.push(0, 0, 1.0);
+        c.push_sym(0, 1, -0.1);
+        let a = c.to_csr(); // row 1 has no diagonal
+        assert!(ic0(&a, 0.0).is_err());
+    }
+
+    #[test]
+    fn random_spd_factors_positive() {
+        let mut rng = Rng::new(31);
+        let n = 120;
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            c.push(i, i, 10.0);
+            for _ in 0..3 {
+                let j = rng.below(n);
+                if j != i {
+                    c.push_sym(i, j, -0.5);
+                }
+            }
+        }
+        let a = c.to_csr();
+        let f = ic0(&a, 0.0).unwrap();
+        assert!(f.diag.iter().all(|&d| d > 0.0 && d.is_finite()));
+        assert_eq!(f.lower.nnz(), a.lower_strict().nnz());
+    }
+
+    #[test]
+    fn dummy_identity_rows_factor_to_one() {
+        // Augmented-system property: an identity row factors to l_ii = 1.
+        let mut c = Coo::new(3);
+        c.push(0, 0, 4.0);
+        c.push(1, 1, 1.0); // dummy
+        c.push(2, 2, 4.0);
+        c.push_sym(0, 2, -1.0);
+        let f = ic0(&c.to_csr(), 0.0).unwrap();
+        assert_eq!(f.diag[1], 1.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Incomplete factorization substrates: IC(0) (optionally diagonally
+//! shifted, as the paper's shifted ICCG for the semi-definite `Ieej`
+//! problem) and the triangular-factor views consumed by the solvers.
+
+pub mod ic0;
+pub mod split;

@@ -1,0 +1,85 @@
+//! Circuit-network generator — the `G3_circuit`-class substrate: a large
+//! sparse SPD graph Laplacian with mostly grid-like degree plus a sprinkle
+//! of longer-range connections (vias/global nets), giving the irregular
+//! degree mix that makes gather-heavy substitution rows common.
+
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+use crate::util::rng::Rng;
+
+/// Conductance network: 2D grid of resistors plus `extra_frac · n` random
+/// long-range resistors; Laplacian + small diagonal (ground leakage).
+pub fn circuit_network(nx: usize, ny: usize, extra_frac: f64, seed: u64) -> Csr {
+    let n = nx * ny;
+    let mut rng = Rng::new(seed);
+    let idx = |x: usize, y: usize| y * nx + x;
+    let mut coo = Coo::with_capacity(n, 5 * n + (extra_frac * n as f64) as usize * 2);
+    let mut diag = vec![0.0f64; n];
+    let resistor = |coo: &mut Coo, rng: &mut Rng, i: usize, j: usize, d: &mut [f64]| {
+        // Conductances spread over decades, as in power/ground networks.
+        let g = 10f64.powf(rng.range_f64(-1.0, 1.0));
+        coo.push_sym(i, j, -g);
+        d[i] += g;
+        d[j] += g;
+    };
+    for y in 0..ny {
+        for x in 0..nx {
+            if x + 1 < nx {
+                resistor(&mut coo, &mut rng, idx(x, y), idx(x + 1, y), &mut diag);
+            }
+            if y + 1 < ny {
+                resistor(&mut coo, &mut rng, idx(x, y), idx(x, y + 1), &mut diag);
+            }
+        }
+    }
+    let extras = (extra_frac * n as f64) as usize;
+    for _ in 0..extras {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        if i != j {
+            resistor(&mut coo, &mut rng, i, j, &mut diag);
+        }
+    }
+    // Tiny ground-leakage keeps the Laplacian SPD while leaving it badly
+    // conditioned — the real G3_circuit takes >1000 ICCG iterations.
+    for (i, d) in diag.iter().enumerate() {
+        coo.push(i, i, d + 3e-6 * (1.0 + d));
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric_and_dominant() {
+        let a = circuit_network(20, 20, 0.05, 11);
+        assert!(a.is_symmetric(1e-12));
+        for i in 0..a.n() {
+            let (cols, vals) = a.row(i);
+            let off: f64 = cols
+                .iter()
+                .zip(vals)
+                .filter(|(c, _)| **c as usize != i)
+                .map(|(_, v)| v.abs())
+                .sum();
+            assert!(a.get(i, i).unwrap() > off, "row {i}");
+        }
+    }
+
+    #[test]
+    fn degree_is_irregular_with_extras() {
+        let a = circuit_network(30, 30, 0.2, 13);
+        let lens: Vec<usize> = (0..a.n()).map(|i| a.row_len(i)).collect();
+        let max = *lens.iter().max().unwrap();
+        let min = *lens.iter().min().unwrap();
+        assert!(max > min + 2, "degrees too uniform: {min}..{max}");
+    }
+
+    #[test]
+    fn no_extras_gives_grid_laplacian() {
+        let a = circuit_network(10, 10, 0.0, 1);
+        assert_eq!(a.nnz(), 100 + 2 * (2 * 10 * 9));
+    }
+}

@@ -1,0 +1,214 @@
+//! Finite-difference stencil generators: 5-point (2D), 7-point and
+//! 27-point (3D) Laplacians with optional heterogeneous coefficients.
+//! These are the canonical parallel-ordering test problems (paper Fig. 4.5
+//! uses the five-point stencil).
+
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+use crate::util::rng::Rng;
+
+/// 2D 5-point Laplacian on an `nx × ny` grid with per-cell conductivity.
+/// `sigma_lognorm = 0` gives the constant-coefficient operator.
+pub fn laplace2d(nx: usize, ny: usize, sigma_lognorm: f64, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let idx = |x: usize, y: usize| y * nx + x;
+    let n = nx * ny;
+    // Edge conductivities from the harmonic pairing of cell coefficients.
+    let coeff = |rng: &mut Rng| {
+        if sigma_lognorm == 0.0 {
+            1.0
+        } else {
+            rng.log_normal(sigma_lognorm)
+        }
+    };
+    let mut coo = Coo::with_capacity(n, 5 * n);
+    let mut diag = vec![0.0f64; n];
+    for y in 0..ny {
+        for x in 0..nx {
+            if x + 1 < nx {
+                let c = coeff(&mut rng);
+                coo.push_sym(idx(x, y), idx(x + 1, y), -c);
+                diag[idx(x, y)] += c;
+                diag[idx(x + 1, y)] += c;
+            }
+            if y + 1 < ny {
+                let c = coeff(&mut rng);
+                coo.push_sym(idx(x, y), idx(x, y + 1), -c);
+                diag[idx(x, y)] += c;
+                diag[idx(x, y + 1)] += c;
+            }
+        }
+    }
+    for (i, d) in diag.iter().enumerate() {
+        // Dirichlet-like regularization keeps the operator SPD.
+        coo.push(i, i, d + 1e-2);
+    }
+    coo.to_csr()
+}
+
+/// 2D parabolic (implicit time step): `M/Δt + K` — strongly diagonally
+/// dominant, the `Parabolic_fem`-class problem.
+pub fn parabolic2d(nx: usize, ny: usize, inv_dt: f64, seed: u64) -> Csr {
+    let k = laplace2d(nx, ny, 0.3, seed);
+    let n = k.n();
+    let mut coo = Coo::with_capacity(n, k.nnz() + n);
+    for i in 0..n {
+        let (cols, vals) = k.row(i);
+        for (c, v) in cols.iter().zip(vals) {
+            coo.push(i, *c as usize, *v);
+        }
+        coo.push(i, i, inv_dt);
+    }
+    coo.to_csr()
+}
+
+/// 3D 7-point Laplacian on `nx × ny × nz`.
+pub fn laplace3d_7pt(nx: usize, ny: usize, nz: usize) -> Csr {
+    let idx = |x: usize, y: usize, z: usize| (z * ny + y) * nx + x;
+    let n = nx * ny * nz;
+    let mut coo = Coo::with_capacity(n, 7 * n);
+    let mut diag = vec![0.0f64; n];
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let i = idx(x, y, z);
+                if x + 1 < nx {
+                    coo.push_sym(i, idx(x + 1, y, z), -1.0);
+                    diag[i] += 1.0;
+                    diag[idx(x + 1, y, z)] += 1.0;
+                }
+                if y + 1 < ny {
+                    coo.push_sym(i, idx(x, y + 1, z), -1.0);
+                    diag[i] += 1.0;
+                    diag[idx(x, y + 1, z)] += 1.0;
+                }
+                if z + 1 < nz {
+                    coo.push_sym(i, idx(x, y, z + 1), -1.0);
+                    diag[i] += 1.0;
+                    diag[idx(x, y, z + 1)] += 1.0;
+                }
+            }
+        }
+    }
+    for (i, d) in diag.iter().enumerate() {
+        coo.push(i, i, d + 1e-2);
+    }
+    coo.to_csr()
+}
+
+/// 3D 27-point stencil (all neighbors in the unit cube) — the dense-stencil
+/// substrate under the `Audikw_1`-class generator.
+pub fn stencil27(nx: usize, ny: usize, nz: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let idx = |x: usize, y: usize, z: usize| (z * ny + y) * nx + x;
+    let n = nx * ny * nz;
+    let mut coo = Coo::with_capacity(n, 27 * n);
+    let mut diag = vec![0.0f64; n];
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let i = idx(x, y, z);
+                for dz in 0..=1usize {
+                    for dy in -(1i64)..=1 {
+                        for dx in -(1i64)..=1 {
+                            if dz == 0 && (dy < 0 || (dy == 0 && dx <= 0)) {
+                                continue; // visit each pair once
+                            }
+                            let (xx, yy, zz) =
+                                (x as i64 + dx, y as i64 + dy, z as i64 + dz as i64);
+                            if xx < 0 || yy < 0 || xx >= nx as i64 || yy >= ny as i64
+                                || zz >= nz as i64
+                            {
+                                continue;
+                            }
+                            let j = idx(xx as usize, yy as usize, zz as usize);
+                            let w = 0.3 + 0.2 * rng.f64();
+                            coo.push_sym(i, j, -w);
+                            diag[i] += w;
+                            diag[j] += w;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for (i, d) in diag.iter().enumerate() {
+        coo.push(i, i, d + 1e-2);
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laplace2d_is_spd_shaped() {
+        let a = laplace2d(10, 8, 0.0, 1);
+        assert_eq!(a.n(), 80);
+        assert!(a.is_symmetric(1e-12));
+        // Diagonally dominant by construction.
+        for i in 0..a.n() {
+            let (cols, vals) = a.row(i);
+            let off: f64 = cols
+                .iter()
+                .zip(vals)
+                .filter(|(c, _)| **c as usize != i)
+                .map(|(_, v)| v.abs())
+                .sum();
+            assert!(a.get(i, i).unwrap() >= off, "row {i} not dominant");
+        }
+    }
+
+    #[test]
+    fn laplace2d_interior_has_5_entries() {
+        let a = laplace2d(5, 5, 0.0, 1);
+        assert_eq!(a.row_len(12), 5); // center node
+        assert_eq!(a.row_len(0), 3); // corner
+    }
+
+    #[test]
+    fn heterogeneous_coefficients_vary() {
+        let a = laplace2d(6, 6, 1.0, 7);
+        let vals: Vec<f64> = (0..a.n())
+            .flat_map(|i| {
+                let (cols, vals) = a.row(i);
+                cols.iter()
+                    .zip(vals)
+                    .filter(|(c, _)| (**c as usize) != i)
+                    .map(|(_, v)| -*v)
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        let min = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = vals.iter().cloned().fold(0.0, f64::max);
+        assert!(max / min > 2.0, "no heterogeneity: {min}..{max}");
+    }
+
+    #[test]
+    fn parabolic_strengthens_diagonal() {
+        let k = laplace2d(6, 6, 0.3, 3);
+        let p = parabolic2d(6, 6, 100.0, 3);
+        for i in 0..k.n() {
+            assert!(p.get(i, i).unwrap() > k.get(i, i).unwrap() + 99.0);
+        }
+    }
+
+    #[test]
+    fn laplace3d_shape() {
+        let a = laplace3d_7pt(4, 4, 4);
+        assert_eq!(a.n(), 64);
+        assert!(a.is_symmetric(1e-12));
+        // interior node has 7 entries
+        let i = (1 * 4 + 1) * 4 + 1;
+        assert_eq!(a.row_len(i), 7);
+    }
+
+    #[test]
+    fn stencil27_interior_has_27() {
+        let a = stencil27(4, 4, 4, 5);
+        let i = (1 * 4 + 1) * 4 + 1;
+        assert_eq!(a.row_len(i), 27);
+        assert!(a.is_symmetric(1e-12));
+    }
+}

@@ -1,0 +1,96 @@
+//! 2D unstructured-style FEM graph generator — the `Thermal2`-class
+//! substrate (unstructured thermal FEM: ~7 nnz/row, irregular node
+//! numbering, heterogeneous conductivity).
+//!
+//! A structured triangulation (grid + one diagonal per cell) gives each
+//! interior node degree ~6; a random relabeling of the nodes then destroys
+//! the banded structure the way an unstructured mesher's numbering does,
+//! which is what stresses the ordering heuristics.
+
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+use crate::util::rng::Rng;
+
+/// Triangulated-grid thermal problem with log-normal conductivity jumps
+/// and randomized node numbering.
+pub fn thermal_fem2d(nx: usize, ny: usize, sigma_lognorm: f64, seed: u64) -> Csr {
+    let n = nx * ny;
+    let mut rng = Rng::new(seed);
+
+    // Random node relabeling (the "unstructured numbering").
+    let mut label: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut label);
+
+    let idx = |x: usize, y: usize| label[y * nx + x] as usize;
+    let mut coo = Coo::with_capacity(n, 9 * n);
+    let mut diag = vec![0.0f64; n];
+    let edge = |coo: &mut Coo, rng: &mut Rng, i: usize, j: usize, d: &mut [f64]| {
+        let c = rng.log_normal(sigma_lognorm);
+        coo.push_sym(i, j, -c);
+        d[i] += c;
+        d[j] += c;
+    };
+    for y in 0..ny {
+        for x in 0..nx {
+            if x + 1 < nx {
+                edge(&mut coo, &mut rng, idx(x, y), idx(x + 1, y), &mut diag);
+            }
+            if y + 1 < ny {
+                edge(&mut coo, &mut rng, idx(x, y), idx(x, y + 1), &mut diag);
+            }
+            // Diagonal of the triangulation.
+            if x + 1 < nx && y + 1 < ny {
+                edge(&mut coo, &mut rng, idx(x, y), idx(x + 1, y + 1), &mut diag);
+            }
+        }
+    }
+    // Weak absorption term: SPD but ill-conditioned, like Thermal2.
+    for (i, d) in diag.iter().enumerate() {
+        coo.push(i, i, d + 1e-5);
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_symmetry() {
+        let a = thermal_fem2d(12, 10, 0.5, 3);
+        assert_eq!(a.n(), 120);
+        assert!(a.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn average_degree_matches_triangulation() {
+        let a = thermal_fem2d(30, 30, 0.5, 4);
+        let avg = a.nnz() as f64 / a.n() as f64;
+        // Interior nodes: 6 neighbors + diagonal ⇒ ~7 nnz/row.
+        assert!((6.0..7.5).contains(&avg), "avg={avg}");
+    }
+
+    #[test]
+    fn numbering_is_scrambled() {
+        // With random labels, consecutive indices are rarely adjacent:
+        // measure bandwidth — should be large.
+        let a = thermal_fem2d(20, 20, 0.5, 5);
+        let mut max_band = 0usize;
+        for i in 0..a.n() {
+            let (cols, _) = a.row(i);
+            for &c in cols {
+                max_band = max_band.max(i.abs_diff(c as usize));
+            }
+        }
+        assert!(max_band > a.n() / 2, "bandwidth {max_band} too small — not scrambled");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = thermal_fem2d(8, 8, 0.5, 9);
+        let b = thermal_fem2d(8, 8, 0.5, 9);
+        assert_eq!(a, b);
+        let c = thermal_fem2d(8, 8, 0.5, 10);
+        assert_ne!(a, c);
+    }
+}

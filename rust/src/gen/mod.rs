@@ -1,0 +1,51 @@
+//! Synthetic problem generators.
+//!
+//! The paper evaluates on one FEM-assembled system (`Ieej`) and four
+//! SuiteSparse matrices. Those files are not available offline, so each
+//! dataset has a generator reproducing its *structural class* — dimension
+//! regime, nnz/row, degree irregularity, definiteness — per the
+//! substitution table in `DESIGN.md` §3. [`suite`] is the named registry;
+//! the individual modules are reusable substrates (grid stencils, FEM
+//! graphs, circuit graphs, elasticity blocks, edge elements).
+
+pub mod circuit;
+pub mod edgefem;
+pub mod elasticity;
+pub mod fdm;
+pub mod fem2d;
+pub mod suite;
+
+use crate::sparse::csr::Csr;
+
+/// A generated test problem.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub matrix: Csr,
+    /// Right-hand side (`A·1` by default so the exact solution is 1).
+    pub b: Vec<f64>,
+    /// Diagonal shift the paper's protocol uses for this dataset
+    /// (0.3 for Ieej, 0 otherwise).
+    pub shift: f64,
+}
+
+impl Dataset {
+    /// Build with `b = A·1`.
+    pub fn with_unit_solution(name: &str, matrix: Csr, shift: f64) -> Dataset {
+        let mut b = vec![0.0; matrix.n()];
+        matrix.mul_vec(&vec![1.0; matrix.n()], &mut b);
+        Dataset { name: name.to_string(), matrix, b, shift }
+    }
+
+    pub fn n(&self) -> usize {
+        self.matrix.n()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.matrix.nnz()
+    }
+
+    pub fn nnz_per_row(&self) -> f64 {
+        self.nnz() as f64 / self.n() as f64
+    }
+}

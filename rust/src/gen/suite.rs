@@ -1,0 +1,141 @@
+//! Named dataset registry — the offline stand-ins for the paper's five
+//! test problems (Table 5.1), at three scales. See `DESIGN.md` §3 for the
+//! substitution rationale per dataset; the *class* properties (nnz/row,
+//! irregularity, definiteness) are matched, not the exact files.
+
+use anyhow::{bail, Result};
+
+use crate::config::Scale;
+use crate::gen::{circuit, edgefem, elasticity, fdm, fem2d, Dataset};
+
+/// Paper dataset names in table order.
+pub const NAMES: [&str; 5] = ["thermal2", "parabolic_fem", "g3_circuit", "audikw_1", "ieej"];
+
+/// Generate a dataset by (case-insensitive) paper name.
+pub fn dataset(name: &str, scale: Scale) -> Dataset {
+    try_dataset(name, scale).expect("unknown dataset")
+}
+
+/// Fallible lookup.
+pub fn try_dataset(name: &str, scale: Scale) -> Result<Dataset> {
+    let key = name.to_ascii_lowercase();
+    Ok(match key.as_str() {
+        // Thermal2: unstructured 2D thermal FEM, ~7 nnz/row, 1.23M dims in
+        // the paper.
+        "thermal2" => {
+            let (nx, ny) = match scale {
+                Scale::Tiny => (40, 40),
+                Scale::Small => (260, 260),
+                Scale::Full => (640, 640),
+            };
+            Dataset::with_unit_solution(
+                "thermal2",
+                fem2d::thermal_fem2d(nx, ny, 0.8, 0x7e41),
+                0.0,
+            )
+        }
+        // Parabolic_fem: CFD/parabolic, strongly diagonally dominant,
+        // 3.7M nnz over 526k dims (7 nnz/row).
+        "parabolic_fem" => {
+            let (nx, ny) = match scale {
+                Scale::Tiny => (40, 40),
+                Scale::Small => (230, 230),
+                Scale::Full => (560, 560),
+            };
+            Dataset::with_unit_solution(
+                "parabolic_fem",
+                fdm::parabolic2d(nx, ny, 0.05, 0x9a7a),
+                0.0,
+            )
+        }
+        // G3_circuit: circuit Laplacian, irregular degrees.
+        "g3_circuit" => {
+            let (nx, ny) = match scale {
+                Scale::Tiny => (45, 45),
+                Scale::Small => (300, 300),
+                Scale::Full => (720, 720),
+            };
+            Dataset::with_unit_solution(
+                "g3_circuit",
+                circuit::circuit_network(nx, ny, 0.06, 0x63c1),
+                0.0,
+            )
+        }
+        // Audikw_1: 3D structural, ~82 nnz/row, heavy-row imbalance.
+        "audikw_1" => {
+            let (nx, ny, nz) = match scale {
+                Scale::Tiny => (6, 6, 5),
+                Scale::Small => (22, 22, 20),
+                Scale::Full => (42, 42, 40),
+            };
+            Dataset::with_unit_solution(
+                "audikw_1",
+                elasticity::elasticity3d(nx, ny, nz, 0.10, 0xa0d1),
+                0.0,
+            )
+        }
+        // Ieej: edge-FEM eddy current, semi-definite → shifted IC σ = 0.3.
+        "ieej" => {
+            let (nx, ny, nz) = match scale {
+                Scale::Tiny => (7, 7, 7),
+                Scale::Small => (26, 26, 26),
+                Scale::Full => (46, 46, 46),
+            };
+            Dataset::with_unit_solution(
+                "ieej",
+                edgefem::curl_curl3d(nx, ny, nz, 0.5, 1e-6, 0x1ee1),
+                0.3,
+            )
+        }
+        _ => bail!("unknown dataset {name:?}; known: {NAMES:?}"),
+    })
+}
+
+/// All five paper datasets at a given scale.
+pub fn all(scale: Scale) -> Vec<Dataset> {
+    NAMES.iter().map(|n| dataset(n, scale)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_names() {
+        for name in NAMES {
+            let d = dataset(name, Scale::Tiny);
+            assert_eq!(d.name, name);
+            assert!(d.n() > 500, "{name} too small: {}", d.n());
+            assert!(d.matrix.is_symmetric(1e-9), "{name} not symmetric");
+        }
+        assert!(try_dataset("nope", Scale::Tiny).is_err());
+    }
+
+    #[test]
+    fn ieej_uses_shift() {
+        let d = dataset("ieej", Scale::Tiny);
+        assert_eq!(d.shift, 0.3);
+        assert_eq!(dataset("thermal2", Scale::Tiny).shift, 0.0);
+    }
+
+    #[test]
+    fn audikw_has_highest_nnz_per_row() {
+        let aud = dataset("audikw_1", Scale::Tiny);
+        for other in ["thermal2", "parabolic_fem", "g3_circuit"] {
+            let d = dataset(other, Scale::Tiny);
+            assert!(
+                aud.nnz_per_row() > 2.0 * d.nnz_per_row(),
+                "audikw {:.1} vs {other} {:.1}",
+                aud.nnz_per_row(),
+                d.nnz_per_row()
+            );
+        }
+    }
+
+    #[test]
+    fn scales_are_ordered() {
+        let t = dataset("g3_circuit", Scale::Tiny);
+        let s = dataset("g3_circuit", Scale::Small);
+        assert!(s.n() > 10 * t.n());
+    }
+}

@@ -1,0 +1,54 @@
+//! # hbmc — Hierarchical Block Multi-Color Ordering for the ICCG method
+//!
+//! Reproduction of Iwashita, Li & Fukaya (2019), *"Hierarchical Block
+//! Multi-Color Ordering: A New Parallel Ordering Method for Vectorization and
+//! Parallelization of the Sparse Triangular Solver in the ICCG Method"*.
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer rust + JAX +
+//! Pallas stack:
+//!
+//! * [`sparse`] — CSR / COO / SELL-C-σ storage and Matrix-Market IO,
+//! * [`gen`] — synthetic generators standing in for the paper's five test
+//!   matrices (see `DESIGN.md` §3 for the substitution rationale),
+//! * [`ordering`] — multi-color (MC), block multi-color (BMC) and the
+//!   paper's hierarchical block multi-color (HBMC) orderings, plus the
+//!   ordering-graph / ER-condition machinery used to prove equivalence,
+//! * [`factor`] — IC(0) and shifted-IC incomplete factorization,
+//! * [`solver`] — serial / MC / BMC / HBMC triangular solvers, CRS & SELL
+//!   SpMV and the preconditioned CG driver,
+//! * [`coordinator`] — color-barrier thread pool, scheduling, metrics and
+//!   paper-style reporting,
+//! * [`runtime`] — PJRT (xla crate) executor that loads the AOT-compiled
+//!   JAX/Pallas artifacts produced by `python/compile/aot.py`.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hbmc::prelude::*;
+//!
+//! let a = hbmc::gen::suite::dataset("g3_circuit", Scale::Small).matrix;
+//! let cfg = SolverConfig { ordering: OrderingKind::Hbmc, bs: 32, w: 8, ..Default::default() };
+//! let report = hbmc::coordinator::driver::solve(&a, &vec![1.0; a.n()], &cfg).unwrap();
+//! println!("iters={} time={:.3}s", report.iterations, report.solve_seconds);
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod factor;
+pub mod gen;
+pub mod ordering;
+pub mod runtime;
+pub mod solver;
+pub mod sparse;
+pub mod util;
+
+/// Convenient re-exports for downstream users.
+pub mod prelude {
+    pub use crate::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
+    pub use crate::coordinator::driver::{solve, SolveReport};
+    pub use crate::factor::ic0::IcFactor;
+    pub use crate::ordering::{bmc::BmcOrdering, hbmc::HbmcOrdering, perm::Perm};
+    pub use crate::solver::cg::CgResult;
+    pub use crate::sparse::csr::Csr;
+}

@@ -1,0 +1,277 @@
+//! `hbmc` — launcher for the HBMC ICCG framework.
+//!
+//! Commands:
+//!
+//! * `solve`        — run one ICCG solve on a named dataset
+//! * `table`        — regenerate a paper table (5.2 / 5.3 / simd / sell)
+//! * `convergence`  — Fig. 5.1 residual curves as CSV
+//! * `verify`       — ordering-equivalence + structural invariant checks
+//! * `demo-runtime` — load and run the AOT PJRT artifacts
+//! * `info`         — dataset statistics
+//! * `help`
+
+use anyhow::{bail, Context, Result};
+
+use hbmc::cli::Args;
+use hbmc::config::{NodePreset, OrderingKind, Scale, SolverConfig, SpmvKind};
+use hbmc::coordinator::{driver, experiments};
+use hbmc::gen::suite;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match Args::parse(args).and_then(run) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cfg_from(args: &Args, shift: f64) -> Result<SolverConfig> {
+    let mut cfg = SolverConfig {
+        ordering: OrderingKind::parse(&args.flag_or("ordering", "hbmc"))?,
+        bs: args.usize_flag("bs", 32)?,
+        w: args.usize_flag("w", 8)?,
+        spmv: SpmvKind::parse(&args.flag_or("spmv", "sell"))?,
+        threads: args.usize_flag("threads", 1)?,
+        rtol: args.f64_flag("rtol", 1e-7)?,
+        max_iters: args.usize_flag("max-iters", 50_000)?,
+        shift: args.f64_flag("shift", shift)?,
+        use_intrinsics: !args.switch("no-intrinsics"),
+        sell_sigma: match args.flag("sell-sigma") {
+            Some(v) => Some(v.parse()?),
+            None => None,
+        },
+    };
+    if let Some(node) = args.flag("node") {
+        NodePreset::parse(node)?.apply(&mut cfg);
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn run(args: Args) -> Result<()> {
+    match args.command.as_str() {
+        "solve" => cmd_solve(&args),
+        "table" => cmd_table(&args),
+        "convergence" => cmd_convergence(&args),
+        "verify" => cmd_verify(&args),
+        "demo-runtime" => cmd_demo_runtime(),
+        "run-hlo" => cmd_run_hlo(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; see `hbmc help`"),
+    }
+}
+
+const HELP: &str = "\
+hbmc — Hierarchical Block Multi-Color Ordering ICCG framework
+
+USAGE: hbmc <command> [flags]
+
+COMMANDS
+  solve        --dataset <name> [--scale tiny|small|full] [--ordering natural|mc|bmc|hbmc]
+               [--bs N] [--w N] [--spmv crs|sell] [--threads N] [--rtol X]
+               [--shift X] [--node knl|bdw|skx] [--history] [--no-intrinsics]
+  table        --id 5.2|5.3|simd|sell [--node knl|bdw|skx] [--scale S] [--threads N]
+  convergence  [--datasets a,b] [--scale S] [--out curves.csv]
+  verify       [--scale S]          run ordering/equivalence invariants
+  demo-runtime                      load + run AOT PJRT artifacts
+  info         --dataset <name> [--scale S]
+  help
+
+DATASETS: thermal2, parabolic_fem, g3_circuit, audikw_1, ieej
+";
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let scale = Scale::parse(&args.flag_or("scale", "small"))?;
+    let name = args.flag_or("dataset", "g3_circuit");
+    let d = suite::try_dataset(&name, scale)?;
+    let cfg = cfg_from(args, d.shift)?;
+    println!(
+        "dataset={} n={} nnz={} ({:.1}/row) scale={}",
+        d.name,
+        d.n(),
+        d.nnz(),
+        d.nnz_per_row(),
+        scale.name()
+    );
+    let rep = driver::solve_opts(&d.matrix, &d.b, &cfg, args.switch("history"))?;
+    println!(
+        "config={} threads={} kernel={}",
+        rep.config_label, cfg.threads, rep.setup.kernel_path
+    );
+    println!(
+        "setup: ordering {:.3}s factor {:.3}s colors={} n_aug={} shift={}",
+        rep.setup.ordering_seconds,
+        rep.setup.factor_seconds,
+        rep.setup.num_colors,
+        rep.setup.n_aug,
+        rep.setup.shift_used
+    );
+    println!(
+        "solve: iters={} converged={} relres={:.3e} time={:.3}s",
+        rep.iterations, rep.converged, rep.final_relres, rep.solve_seconds
+    );
+    for (k, s) in &rep.kernel_seconds {
+        println!("  {k:<10} {s:.3}s");
+    }
+    println!(
+        "simd_ratio={:.1}% syncs/substitution={} sell_overhead={}",
+        100.0 * rep.simd_ratio,
+        rep.syncs_per_substitution,
+        rep.sell_overhead.map(|o| format!("{:.1}%", 100.0 * (o - 1.0))).unwrap_or("n/a".into())
+    );
+    if args.switch("history") {
+        for (i, r) in rep.residual_history.iter().enumerate() {
+            println!("iter {:>5}  relres {:.6e}", i + 1, r);
+        }
+    }
+    let err = rep.solution.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
+    println!("max |x - 1| = {err:.3e} (rhs was A·1)");
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let scale = Scale::parse(&args.flag_or("scale", "small"))?;
+    let threads = args.usize_flag("threads", 1)?;
+    match args.flag_or("id", "5.2").as_str() {
+        "5.2" => {
+            let (t, _) = experiments::table_5_2(scale, threads)?;
+            print!("{}", t.render());
+        }
+        "5.3" => {
+            let node = NodePreset::parse(&args.flag_or("node", "skx"))?;
+            let (t, _) = experiments::table_5_3(node, scale, threads)?;
+            print!("{}", t.render());
+        }
+        "simd" => print!("{}", experiments::simd_ratio_stat(scale, threads)?.render()),
+        "sell" => print!("{}", experiments::sell_overhead_stat(scale)?.render()),
+        other => bail!("unknown table id {other:?} (5.2|5.3|simd|sell)"),
+    }
+    Ok(())
+}
+
+fn cmd_convergence(args: &Args) -> Result<()> {
+    let scale = Scale::parse(&args.flag_or("scale", "small"))?;
+    let list = args.flag_or("datasets", "g3_circuit,ieej");
+    let names: Vec<&str> = list.split(',').collect();
+    let curves = experiments::fig_5_1(&names, scale, args.usize_flag("threads", 1)?)?;
+    let mut csv = String::from("dataset,iteration,bmc_relres,hbmc_relres\n");
+    for (name, bmc, hbmc) in &curves {
+        for (i, (rb, rh)) in bmc.iter().zip(hbmc).enumerate() {
+            csv.push_str(&format!("{name},{},{rb:.9e},{rh:.9e}\n", i + 1));
+        }
+    }
+    match args.flag("out") {
+        Some(path) => {
+            std::fs::write(path, &csv)?;
+            println!("wrote {path}");
+        }
+        None => print!("{csv}"),
+    }
+    for (name, bmc, hbmc) in &curves {
+        let max_dev = bmc
+            .iter()
+            .zip(hbmc)
+            .map(|(a, b)| (a - b).abs() / a.max(*b).max(1e-300))
+            .fold(0.0, f64::max);
+        println!("# {name}: curves overlap to max relative deviation {max_dev:.2e}");
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    use hbmc::ordering::graph::{er_condition_holds, orderings_equivalent};
+    use hbmc::ordering::hbmc::{check_level2_diagonal, hbmc_order};
+    let scale = Scale::parse(&args.flag_or("scale", "tiny"))?;
+    let mut failures = 0;
+    for d in suite::all(scale) {
+        for (bs, w) in [(8usize, 4usize), (32, 8)] {
+            let ord = hbmc_order(&d.matrix, bs, w);
+            let b = d.matrix.permute_sym(&ord.perm);
+            let equiv = orderings_equivalent(&d.matrix, &ord.bmc.perm, &ord.perm);
+            let lvl2 = check_level2_diagonal(&b, &ord).is_none();
+            let er = er_condition_holds(&b, &hbmc::ordering::perm::Perm::identity(b.n()));
+            let ok = equiv && lvl2 && er;
+            if !ok {
+                failures += 1;
+            }
+            println!(
+                "{:<14} bs={bs:<2} w={w}: equivalence={equiv} level2-diagonal={lvl2} -> {}",
+                d.name,
+                if ok { "OK" } else { "FAIL" }
+            );
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} invariant check(s) failed");
+    }
+    println!("all invariants hold");
+    Ok(())
+}
+
+fn cmd_demo_runtime() -> Result<()> {
+    use hbmc::runtime::artifacts::ArtifactSet;
+    use hbmc::runtime::hybrid::HybridPrecond;
+    use hbmc::runtime::pjrt::PjrtRuntime;
+    let arts = ArtifactSet::locate()?;
+    let meta = arts.meta()?;
+    println!(
+        "artifacts at {} (canonical problem n_aug={} bs={} w={} colors={})",
+        arts.dir.display(),
+        meta.usize("n_aug")?,
+        meta.usize("bs")?,
+        meta.usize("w")?,
+        meta.usize("num_colors")?
+    );
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let pre = HybridPrecond::load(&rt, &arts)?;
+    let golden = arts.golden()?;
+    let r = golden.f64_vec("precond_r")?;
+    let z_expect = golden.f64_vec("precond_z")?;
+    let z = pre.apply(&r)?;
+    let err = hbmc::util::max_abs_diff(&z, &z_expect);
+    println!("precond_hbmc: |z - golden| = {err:.3e}");
+    anyhow::ensure!(err < 1e-10, "PJRT output deviates from golden");
+    println!("demo-runtime OK");
+    Ok(())
+}
+
+/// Developer tool: run an HLO-text artifact with a single `f64[n]` input
+/// (ramp 0,1,2,…) and print the outputs' head — for debugging artifacts.
+fn cmd_run_hlo(args: &Args) -> Result<()> {
+    use hbmc::runtime::pjrt::{Arg, PjrtRuntime};
+    let path = args.flag("file").context("--file required")?;
+    let n = args.usize_flag("n", 8)?;
+    let outs = args.usize_flag("outputs", 1)?;
+    let rt = PjrtRuntime::cpu()?;
+    let exe = rt.load_hlo_text(std::path::Path::new(path), outs)?;
+    let x: Vec<f64> = (0..n).map(|i| i as f64).collect();
+    let result = exe.run_f64(&[Arg::f64(&x)])?;
+    for (i, leaf) in result.iter().enumerate() {
+        let head: Vec<f64> = leaf.iter().take(8).copied().collect();
+        println!("output[{i}] len={} head={head:?}", leaf.len());
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let scale = Scale::parse(&args.flag_or("scale", "small"))?;
+    let name = args.flag_or("dataset", "g3_circuit");
+    let d = suite::try_dataset(&name, scale)?;
+    println!("dataset      {}", d.name);
+    println!("dimension    {}", d.n());
+    println!("nnz          {} ({:.1}/row, max {})", d.nnz(), d.nnz_per_row(), d.matrix.max_row_len());
+    println!("symmetric    {}", d.matrix.is_symmetric(1e-9));
+    println!("shift        {}", d.shift);
+    let adj = hbmc::ordering::graph::Adjacency::from_csr(&d.matrix);
+    println!("max degree   {}", adj.max_degree());
+    Ok(())
+}

@@ -1,0 +1,206 @@
+//! Block construction for BMC — "the simplest [heuristic] among the
+//! heuristics introduced in [13], in which the unknown with the minimal
+//! number is picked up for the newly generated block" (paper §5.1).
+//!
+//! A block is seeded with the minimum-index unassigned node, then grown by
+//! repeatedly absorbing the minimum-index unassigned node adjacent to the
+//! current block, until it holds `bs` nodes or the frontier is exhausted
+//! (blocks at region boundaries may come up short; they are padded with
+//! dummy slots downstream). Deterministic, in lock-step with
+//! `python/compile/ordering.py`.
+
+use std::collections::BTreeSet;
+
+use crate::ordering::graph::Adjacency;
+
+/// Block partition of `[0, n)`: each inner vec holds the original node
+/// indices of one block, in pick-up order; `len <= bs`.
+#[derive(Debug, Clone)]
+pub struct Blocking {
+    pub bs: usize,
+    pub blocks: Vec<Vec<u32>>,
+}
+
+impl Blocking {
+    /// Total real (non-dummy) nodes across blocks.
+    pub fn num_nodes(&self) -> usize {
+        self.blocks.iter().map(|b| b.len()).sum()
+    }
+
+    /// Verify partition: each node appears exactly once.
+    pub fn is_partition(&self, n: usize) -> bool {
+        let mut seen = vec![false; n];
+        for b in &self.blocks {
+            for &v in b {
+                if seen[v as usize] {
+                    return false;
+                }
+                seen[v as usize] = true;
+            }
+        }
+        seen.iter().all(|&s| s)
+    }
+}
+
+/// Build blocks of size `bs` with the min-index greedy heuristic of [13].
+pub fn build_blocks(adj: &Adjacency, bs: usize) -> Blocking {
+    assert!(bs > 0);
+    let n = adj.n();
+    let mut assigned = vec![false; n];
+    let mut blocks: Vec<Vec<u32>> = Vec::with_capacity(n.div_ceil(bs));
+    // `next_start` scans for the minimal unassigned seed in O(n) total.
+    let mut next_start = 0usize;
+    while next_start < n {
+        if assigned[next_start] {
+            next_start += 1;
+            continue;
+        }
+        let seed = next_start;
+        let mut block = Vec::with_capacity(bs);
+        // Frontier of candidate nodes (unassigned neighbors of the block),
+        // ordered by index — BTreeSet gives min extraction + dedup.
+        let mut frontier: BTreeSet<u32> = BTreeSet::new();
+        assigned[seed] = true;
+        block.push(seed as u32);
+        for &u in adj.neighbors(seed) {
+            if !assigned[u as usize] {
+                frontier.insert(u);
+            }
+        }
+        while block.len() < bs {
+            let Some(&v) = frontier.iter().next() else {
+                break; // region exhausted: short block
+            };
+            frontier.remove(&v);
+            assigned[v as usize] = true;
+            block.push(v);
+            for &u in adj.neighbors(v as usize) {
+                if !assigned[u as usize] {
+                    frontier.insert(u);
+                }
+            }
+        }
+        blocks.push(block);
+    }
+    Blocking { bs, blocks }
+}
+
+/// Adjacency of the block quotient graph: blocks `p`, `q` are adjacent iff
+/// some node of `p` neighbors some node of `q`. Returns per-block sorted
+/// neighbor lists.
+pub fn block_graph(adj: &Adjacency, blocking: &Blocking) -> Vec<Vec<u32>> {
+    let n = adj.n();
+    let mut block_of = vec![u32::MAX; n];
+    for (bi, b) in blocking.blocks.iter().enumerate() {
+        for &v in b {
+            block_of[v as usize] = bi as u32;
+        }
+    }
+    let mut nbrs: Vec<Vec<u32>> = vec![Vec::new(); blocking.blocks.len()];
+    for (bi, b) in blocking.blocks.iter().enumerate() {
+        for &v in b {
+            for &u in adj.neighbors(v as usize) {
+                let bu = block_of[u as usize];
+                debug_assert!(bu != u32::MAX);
+                if bu as usize != bi {
+                    nbrs[bi].push(bu);
+                }
+            }
+        }
+        nbrs[bi].sort_unstable();
+        nbrs[bi].dedup();
+    }
+    nbrs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::util::rng::Rng;
+
+    fn chain_adj(n: usize) -> Adjacency {
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            c.push(i, i, 2.0);
+        }
+        for i in 0..n - 1 {
+            c.push_sym(i, i + 1, -1.0);
+        }
+        Adjacency::from_csr(&c.to_csr())
+    }
+
+    #[test]
+    fn chain_blocks_are_contiguous() {
+        let adj = chain_adj(12);
+        let b = build_blocks(&adj, 4);
+        assert_eq!(b.blocks.len(), 3);
+        assert_eq!(b.blocks[0], vec![0, 1, 2, 3]);
+        assert_eq!(b.blocks[1], vec![4, 5, 6, 7]);
+        assert!(b.is_partition(12));
+    }
+
+    #[test]
+    fn short_tail_block() {
+        let adj = chain_adj(10);
+        let b = build_blocks(&adj, 4);
+        assert_eq!(b.blocks.len(), 3);
+        assert_eq!(b.blocks[2].len(), 2);
+        assert!(b.is_partition(10));
+    }
+
+    #[test]
+    fn disconnected_components_give_short_blocks() {
+        // Two disjoint edges: 0-1, 2-3, bs=3 → blocks [0,1] and [2,3].
+        let mut c = Coo::new(4);
+        for i in 0..4 {
+            c.push(i, i, 1.0);
+        }
+        c.push_sym(0, 1, -1.0);
+        c.push_sym(2, 3, -1.0);
+        let adj = Adjacency::from_csr(&c.to_csr());
+        let b = build_blocks(&adj, 3);
+        assert_eq!(b.blocks, vec![vec![0, 1], vec![2, 3]]);
+    }
+
+    #[test]
+    fn partition_on_random_graph() {
+        let mut rng = Rng::new(23);
+        let n = 300;
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            c.push(i, i, 1.0);
+            for _ in 0..2 {
+                let j = rng.below(n);
+                if j != i {
+                    c.push_sym(i, j, -1.0);
+                }
+            }
+        }
+        let adj = Adjacency::from_csr(&c.to_csr());
+        for &bs in &[2usize, 8, 32] {
+            let b = build_blocks(&adj, bs);
+            assert!(b.is_partition(n), "bs={bs}");
+            assert!(b.blocks.iter().all(|blk| blk.len() <= bs));
+        }
+    }
+
+    #[test]
+    fn block_graph_chain() {
+        let adj = chain_adj(8);
+        let b = build_blocks(&adj, 4);
+        let g = block_graph(&adj, &b);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0], vec![1]);
+        assert_eq!(g[1], vec![0]);
+    }
+
+    #[test]
+    fn block_graph_no_self_loops() {
+        let adj = chain_adj(16);
+        let b = build_blocks(&adj, 4);
+        for (bi, nb) in block_graph(&adj, &b).iter().enumerate() {
+            assert!(!nb.contains(&(bi as u32)));
+        }
+    }
+}

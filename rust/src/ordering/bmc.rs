@@ -1,0 +1,199 @@
+//! Block multi-color ordering (BMC) — Iwashita, Nakashima & Takahashi,
+//! IPDPS 2012 (the paper's ref. [13]); the baseline HBMC builds on.
+//!
+//! Nodes are grouped into blocks of `bs` (min-index heuristic, see
+//! [`crate::ordering::blocking`]), the block quotient graph is greedy-
+//! colored, and unknowns are renumbered color-by-color, block-by-block,
+//! preserving pick-up order inside each block. Short blocks are padded to
+//! exactly `bs` with decoupled dummy unknowns so every color occupies a
+//! multiple of `bs` rows — this keeps BMC and HBMC the *same* augmented
+//! linear system, making their iteration-by-iteration equivalence exact.
+
+use crate::ordering::blocking::{block_graph, build_blocks, Blocking};
+use crate::ordering::coloring::greedy_color;
+use crate::ordering::graph::Adjacency;
+use crate::ordering::perm::Perm;
+use crate::sparse::csr::Csr;
+
+/// BMC ordering result.
+#[derive(Debug, Clone)]
+pub struct BmcOrdering {
+    /// Original → BMC-ordered augmented index (`n_new` a multiple of `bs`).
+    pub perm: Perm,
+    pub bs: usize,
+    pub num_colors: usize,
+    /// Row range of color `c`: `color_ptr[c]..color_ptr[c+1]`; multiples of `bs`.
+    pub color_ptr: Vec<usize>,
+    /// Number of blocks in each color.
+    pub blocks_per_color: Vec<usize>,
+}
+
+impl BmcOrdering {
+    /// Augmented dimension.
+    pub fn n(&self) -> usize {
+        self.perm.n_new()
+    }
+
+    /// Total number of `bs`-sized blocks.
+    pub fn num_blocks(&self) -> usize {
+        self.blocks_per_color.iter().sum()
+    }
+}
+
+/// Apply BMC with block size `bs` to the pattern of `a`.
+pub fn bmc_order(a: &Csr, bs: usize) -> BmcOrdering {
+    let adj = Adjacency::from_csr(a);
+    let blocking = build_blocks(&adj, bs);
+    bmc_order_with_blocking(&adj, &blocking)
+}
+
+/// BMC given a precomputed blocking (shared with HBMC so both orderings use
+/// the identical block structure).
+pub fn bmc_order_with_blocking(adj: &Adjacency, blocking: &Blocking) -> BmcOrdering {
+    let bs = blocking.bs;
+    let bg = block_graph(adj, blocking);
+    let coloring = greedy_color(blocking.blocks.len(), |b| bg[b].clone());
+    let groups = coloring.groups(); // block ids per color, creation order
+
+    let n_new: usize = groups.iter().map(|g| g.len() * bs).sum();
+    let mut new_of_old = vec![0u32; adj.n()];
+    let mut color_ptr = Vec::with_capacity(groups.len() + 1);
+    let mut blocks_per_color = Vec::with_capacity(groups.len());
+    color_ptr.push(0usize);
+    let mut next = 0usize;
+    for g in &groups {
+        for &b in g {
+            let block = &blocking.blocks[b as usize];
+            for (slot, &v) in block.iter().enumerate() {
+                new_of_old[v as usize] = (next + slot) as u32;
+            }
+            next += bs; // short blocks leave dummy slots at the tail
+        }
+        color_ptr.push(next);
+        blocks_per_color.push(g.len());
+    }
+    BmcOrdering {
+        perm: Perm::padded(new_of_old, n_new).expect("bmc perm is injective"),
+        bs,
+        num_colors: coloring.num_colors,
+        color_ptr,
+        blocks_per_color,
+    }
+}
+
+/// Assert the BMC independence invariant on the reordered matrix: within a
+/// color, entries never connect two *different* blocks. Returns the first
+/// violating entry for diagnostics.
+pub fn check_block_independence(b: &Csr, ord: &BmcOrdering) -> Option<(usize, usize)> {
+    for c in 0..ord.num_colors {
+        let (lo, hi) = (ord.color_ptr[c], ord.color_ptr[c + 1]);
+        for i in lo..hi {
+            let blk_i = (i - lo) / ord.bs;
+            let (cols, _) = b.row(i);
+            for &j in cols {
+                let j = j as usize;
+                if j != i && j >= lo && j < hi && (j - lo) / ord.bs != blk_i {
+                    return Some((i, j));
+                }
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ordering::graph::er_condition_holds;
+    use crate::sparse::coo::Coo;
+    use crate::util::rng::Rng;
+
+    fn grid(nx: usize, ny: usize) -> Csr {
+        let idx = |x: usize, y: usize| y * nx + x;
+        let mut c = Coo::new(nx * ny);
+        for y in 0..ny {
+            for x in 0..nx {
+                c.push(idx(x, y), idx(x, y), 4.0);
+                if x + 1 < nx {
+                    c.push_sym(idx(x, y), idx(x + 1, y), -1.0);
+                }
+                if y + 1 < ny {
+                    c.push_sym(idx(x, y), idx(x, y + 1), -1.0);
+                }
+            }
+        }
+        c.to_csr()
+    }
+
+    fn random_spd(n: usize, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            c.push(i, i, 8.0);
+            for _ in 0..2 {
+                let j = rng.below(n);
+                if j != i {
+                    c.push_sym(i, j, -0.5);
+                }
+            }
+        }
+        c.to_csr()
+    }
+
+    #[test]
+    fn block_independence_on_grid() {
+        let a = grid(10, 10);
+        let ord = bmc_order(&a, 4);
+        let b = a.permute_sym(&ord.perm);
+        assert_eq!(check_block_independence(&b, &ord), None);
+        assert_eq!(ord.n() % 4, 0);
+        assert_eq!(*ord.color_ptr.last().unwrap(), ord.n());
+    }
+
+    #[test]
+    fn block_independence_on_random() {
+        for seed in [1, 2, 3] {
+            let a = random_spd(150, seed);
+            for &bs in &[2usize, 8, 16] {
+                let ord = bmc_order(&a, bs);
+                let b = a.permute_sym(&ord.perm);
+                assert_eq!(check_block_independence(&b, &ord), None, "seed={seed} bs={bs}");
+            }
+        }
+    }
+
+    #[test]
+    fn colors_counted_and_ranges_multiple_of_bs() {
+        let a = grid(12, 12);
+        let ord = bmc_order(&a, 8);
+        assert!(ord.num_colors >= 2);
+        for c in 0..ord.num_colors {
+            assert_eq!((ord.color_ptr[c + 1] - ord.color_ptr[c]) % 8, 0);
+            assert_eq!(ord.color_ptr[c + 1] - ord.color_ptr[c], 8 * ord.blocks_per_color[c]);
+        }
+    }
+
+    #[test]
+    fn fewer_colors_than_nodal_mc_keeps_er_within_blocks() {
+        // BMC itself is NOT equivalent to natural ordering — but pick-up
+        // order inside blocks must be preserved relative to... nothing to
+        // check against natural order. Instead check perm validity.
+        let a = grid(8, 8);
+        let ord = bmc_order(&a, 4);
+        assert_eq!(ord.perm.n_old(), 64);
+        // Every real node mapped, dummies only in short blocks.
+        let mapped: std::collections::HashSet<usize> =
+            (0..64).map(|i| ord.perm.new_of_old(i)).collect();
+        assert_eq!(mapped.len(), 64);
+    }
+
+    #[test]
+    fn bmc_is_equivalent_to_itself_padded() {
+        // Sanity: the identity secondary reordering satisfies ER on the
+        // BMC-ordered matrix.
+        let a = random_spd(80, 9);
+        let ord = bmc_order(&a, 8);
+        let b = a.permute_sym(&ord.perm);
+        assert!(er_condition_holds(&b, &Perm::identity(b.n())));
+    }
+}

@@ -1,0 +1,135 @@
+//! Greedy graph coloring — the coloring heuristic the paper uses for all
+//! solvers ("the greedy algorithm was used for all the solvers", §5.1).
+//!
+//! Vertices are visited in natural index order and each takes the smallest
+//! color unused by its already-colored neighbors. Deterministic, and kept
+//! in lock-step with the python oracle (`python/compile/ordering.py`).
+
+/// Result of a coloring: per-vertex color id in `[0, num_colors)`.
+#[derive(Debug, Clone)]
+pub struct Coloring {
+    pub color: Vec<u32>,
+    pub num_colors: usize,
+}
+
+impl Coloring {
+    /// Vertices grouped by color, preserving index order within a color.
+    pub fn groups(&self) -> Vec<Vec<u32>> {
+        let mut g = vec![Vec::new(); self.num_colors];
+        for (v, &c) in self.color.iter().enumerate() {
+            g[c as usize].push(v as u32);
+        }
+        g
+    }
+
+    /// Verify properness against a neighbor oracle.
+    pub fn is_proper(&self, neighbors: impl Fn(usize) -> Vec<u32>) -> bool {
+        (0..self.color.len()).all(|v| {
+            neighbors(v)
+                .iter()
+                .all(|&u| u as usize == v || self.color[u as usize] != self.color[v])
+        })
+    }
+}
+
+/// Greedy-color `n` vertices given a neighbor oracle.
+pub fn greedy_color(n: usize, neighbors: impl Fn(usize) -> Vec<u32>) -> Coloring {
+    let mut color = vec![u32::MAX; n];
+    let mut used: Vec<u32> = Vec::new(); // scratch: colors used by neighbors
+    let mut num_colors = 0usize;
+    for v in 0..n {
+        used.clear();
+        for &u in &neighbors(v) {
+            let cu = color[u as usize];
+            if cu != u32::MAX {
+                used.push(cu);
+            }
+        }
+        used.sort_unstable();
+        used.dedup();
+        // Smallest color not in `used`.
+        let mut c = 0u32;
+        for &u in &used {
+            if u == c {
+                c += 1;
+            } else if u > c {
+                break;
+            }
+        }
+        color[v] = c;
+        num_colors = num_colors.max(c as usize + 1);
+    }
+    Coloring { color, num_colors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ordering::graph::Adjacency;
+    use crate::sparse::coo::Coo;
+    use crate::util::rng::Rng;
+
+    fn grid5pt(nx: usize, ny: usize) -> Adjacency {
+        let idx = |x: usize, y: usize| y * nx + x;
+        let mut c = Coo::new(nx * ny);
+        for y in 0..ny {
+            for x in 0..nx {
+                c.push(idx(x, y), idx(x, y), 4.0);
+                if x + 1 < nx {
+                    c.push_sym(idx(x, y), idx(x + 1, y), -1.0);
+                }
+                if y + 1 < ny {
+                    c.push_sym(idx(x, y), idx(x, y + 1), -1.0);
+                }
+            }
+        }
+        Adjacency::from_csr(&c.to_csr())
+    }
+
+    #[test]
+    fn grid_is_two_colorable() {
+        let adj = grid5pt(8, 8);
+        let col = greedy_color(adj.n(), |v| adj.neighbors(v).to_vec());
+        assert_eq!(col.num_colors, 2, "5-pt grid is bipartite → red/black");
+        assert!(col.is_proper(|v| adj.neighbors(v).to_vec()));
+    }
+
+    #[test]
+    fn proper_on_random_graph() {
+        let mut rng = Rng::new(17);
+        let n = 200;
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            c.push(i, i, 1.0);
+            for _ in 0..3 {
+                let j = rng.below(n);
+                if j != i {
+                    c.push_sym(i, j, -1.0);
+                }
+            }
+        }
+        let adj = Adjacency::from_csr(&c.to_csr());
+        let col = greedy_color(adj.n(), |v| adj.neighbors(v).to_vec());
+        assert!(col.is_proper(|v| adj.neighbors(v).to_vec()));
+        assert!(col.num_colors <= adj.max_degree() + 1, "greedy bound");
+    }
+
+    #[test]
+    fn empty_graph_one_color() {
+        let col = greedy_color(5, |_| Vec::new());
+        assert_eq!(col.num_colors, 1);
+        assert!(col.color.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn groups_partition() {
+        let adj = grid5pt(4, 4);
+        let col = greedy_color(adj.n(), |v| adj.neighbors(v).to_vec());
+        let groups = col.groups();
+        let total: usize = groups.iter().map(|g| g.len()).sum();
+        assert_eq!(total, 16);
+        for g in &groups {
+            assert!(g.windows(2).all(|w| w[0] < w[1]), "index order kept");
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Parallel orderings: multi-color (MC), block multi-color (BMC,
+//! Iwashita–Nakashima–Takahashi 2012) and the paper's contribution,
+//! hierarchical block multi-color ordering (HBMC).
+//!
+//! [`graph`] implements the *ordering graph* and the ER (equivalent
+//! reordering) condition of §3.1, eq. (3.5) — the tool used to prove that
+//! HBMC converges identically to BMC.
+
+pub mod blocking;
+pub mod bmc;
+pub mod coloring;
+pub mod graph;
+pub mod hbmc;
+pub mod mc;
+pub mod perm;

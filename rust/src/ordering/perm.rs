@@ -1,0 +1,159 @@
+//! Permutations (reorderings) of unknowns, possibly into a *larger* index
+//! space: HBMC pads each color to a multiple of `bs·w` with decoupled
+//! "dummy unknowns" (paper §4.3), which we model as injective maps
+//! `old → new` with identity rows on the unused new slots.
+
+use anyhow::{bail, Result};
+
+/// Sentinel marking a padded (dummy) slot in `old_of_new`.
+pub const DUMMY: u32 = u32::MAX;
+
+/// Injective index map `π : [0, n_old) → [0, n_new)`, `n_old ≤ n_new`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Perm {
+    new_of_old: Vec<u32>,
+    old_of_new: Vec<u32>,
+}
+
+impl Perm {
+    /// Identity permutation.
+    pub fn identity(n: usize) -> Perm {
+        Perm {
+            new_of_old: (0..n as u32).collect(),
+            old_of_new: (0..n as u32).collect(),
+        }
+    }
+
+    /// Build from the `old → new` map; must be a bijection on `[0, n_new)`.
+    pub fn from_new_of_old(new_of_old: Vec<u32>, n_new: usize) -> Result<Perm> {
+        Self::padded(new_of_old, n_new)
+    }
+
+    /// Build from an injective `old → new` map into `[0, n_new)`; slots not
+    /// hit become dummies.
+    pub fn padded(new_of_old: Vec<u32>, n_new: usize) -> Result<Perm> {
+        if new_of_old.len() > n_new {
+            bail!("perm: n_old {} exceeds n_new {}", new_of_old.len(), n_new);
+        }
+        let mut old_of_new = vec![DUMMY; n_new];
+        for (old, &new) in new_of_old.iter().enumerate() {
+            if new as usize >= n_new {
+                bail!("perm: image {} out of range {}", new, n_new);
+            }
+            if old_of_new[new as usize] != DUMMY {
+                bail!("perm: image {} hit twice", new);
+            }
+            old_of_new[new as usize] = old as u32;
+        }
+        Ok(Perm { new_of_old, old_of_new })
+    }
+
+    #[inline]
+    pub fn n_old(&self) -> usize {
+        self.new_of_old.len()
+    }
+
+    #[inline]
+    pub fn n_new(&self) -> usize {
+        self.old_of_new.len()
+    }
+
+    #[inline]
+    pub fn new_of_old(&self, old: usize) -> usize {
+        self.new_of_old[old] as usize
+    }
+
+    /// Old index occupying new slot `new`, or `None` for a dummy slot.
+    #[inline]
+    pub fn old_of_new(&self, new: usize) -> Option<usize> {
+        match self.old_of_new[new] {
+            DUMMY => None,
+            o => Some(o as usize),
+        }
+    }
+
+    pub fn new_of_old_slice(&self) -> &[u32] {
+        &self.new_of_old
+    }
+
+    /// Is `π` the identity on an unpadded space?
+    pub fn is_identity(&self) -> bool {
+        self.n_old() == self.n_new()
+            && self.new_of_old.iter().enumerate().all(|(i, &p)| i as u32 == p)
+    }
+
+    /// Compose: `self` then `next` (`next ∘ self`); `next` must act on
+    /// `self`'s image space.
+    pub fn then(&self, next: &Perm) -> Perm {
+        assert_eq!(next.n_old(), self.n_new(), "composition domain mismatch");
+        let new_of_old: Vec<u32> = self
+            .new_of_old
+            .iter()
+            .map(|&m| next.new_of_old[m as usize])
+            .collect();
+        Perm::padded(new_of_old, next.n_new()).expect("composition of injective maps")
+    }
+
+    /// Scatter a vector into the new index space (dummies get `fill`).
+    pub fn apply_vec(&self, x: &[f64], fill: f64) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_old());
+        let mut y = vec![fill; self.n_new()];
+        for (old, &new) in self.new_of_old.iter().enumerate() {
+            y[new as usize] = x[old];
+        }
+        y
+    }
+
+    /// Gather a vector back from the new index space (inverse of
+    /// [`Perm::apply_vec`], dropping dummy slots).
+    pub fn unapply_vec(&self, y: &[f64]) -> Vec<f64> {
+        assert_eq!(y.len(), self.n_new());
+        self.new_of_old.iter().map(|&new| y[new as usize]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_roundtrip() {
+        let p = Perm::identity(5);
+        assert!(p.is_identity());
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(p.unapply_vec(&p.apply_vec(&x, 0.0)), x);
+    }
+
+    #[test]
+    fn bijection_validation() {
+        assert!(Perm::from_new_of_old(vec![0, 0], 2).is_err());
+        assert!(Perm::from_new_of_old(vec![0, 5], 2).is_err());
+        assert!(Perm::from_new_of_old(vec![1, 0], 2).is_ok());
+        assert!(Perm::padded(vec![0, 1, 2], 2).is_err());
+    }
+
+    #[test]
+    fn padded_map() {
+        let p = Perm::padded(vec![3, 0], 4).unwrap();
+        assert_eq!(p.n_old(), 2);
+        assert_eq!(p.n_new(), 4);
+        assert_eq!(p.new_of_old(0), 3);
+        assert_eq!(p.old_of_new(3), Some(0));
+        assert_eq!(p.old_of_new(1), None);
+        let y = p.apply_vec(&[7.0, 8.0], 0.0);
+        assert_eq!(y, vec![8.0, 0.0, 0.0, 7.0]);
+        assert_eq!(p.unapply_vec(&y), vec![7.0, 8.0]);
+    }
+
+    #[test]
+    fn composition() {
+        let a = Perm::from_new_of_old(vec![1, 0, 2], 3).unwrap();
+        let b = Perm::padded(vec![2, 0, 3], 4).unwrap();
+        let c = a.then(&b);
+        // old 0 -> 1 -> 0 ; old 1 -> 0 -> 2 ; old 2 -> 2 -> 3
+        assert_eq!(c.new_of_old(0), 0);
+        assert_eq!(c.new_of_old(1), 2);
+        assert_eq!(c.new_of_old(2), 3);
+        assert_eq!(c.n_new(), 4);
+    }
+}

@@ -1,0 +1,108 @@
+//! Artifact-set discovery and parsing.
+//!
+//! `make artifacts` (→ `python -m compile.aot`) writes:
+//!
+//! * `manifest.json` — human-readable build summary,
+//! * `meta.txt` — canonical-problem metadata (kvtext),
+//! * `golden.txt` — cross-layer golden data (kvtext): the canonical
+//!   matrix in COO form, the python-computed HBMC permutation, IC(0)
+//!   factor sample, and input/output vectors for the preconditioner —
+//!   consumed by `rust/tests/golden_cross_layer.rs`,
+//! * `precond_hbmc.hlo.txt` — L2 preconditioner apply (z = (LLᵀ)⁻¹ r),
+//! * `spmv_sell.hlo.txt` — L2 SELL SpMV (y = A x),
+//! * `pcg_step.hlo.txt` — one fused PCG iteration.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+use crate::util::kvtext::KvDoc;
+
+/// Handle to a built artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+}
+
+impl ArtifactSet {
+    /// Locate artifacts: `$HBMC_ARTIFACTS`, then `./artifacts`, then
+    /// upward from the executable.
+    pub fn locate() -> Result<ArtifactSet> {
+        if let Ok(p) = std::env::var("HBMC_ARTIFACTS") {
+            let dir = PathBuf::from(p);
+            if dir.join("meta.txt").exists() {
+                return Ok(ArtifactSet { dir });
+            }
+            bail!("HBMC_ARTIFACTS={} has no meta.txt", dir.display());
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            let dir = PathBuf::from(cand);
+            if dir.join("meta.txt").exists() {
+                return Ok(ArtifactSet { dir });
+            }
+        }
+        bail!("artifact set not found — run `make artifacts` first")
+    }
+
+    pub fn at(dir: &Path) -> ArtifactSet {
+        ArtifactSet { dir: dir.to_path_buf() }
+    }
+
+    pub fn exists(&self) -> bool {
+        self.dir.join("meta.txt").exists()
+    }
+
+    pub fn meta(&self) -> Result<KvDoc> {
+        KvDoc::load(&self.dir.join("meta.txt"))
+    }
+
+    pub fn golden(&self) -> Result<KvDoc> {
+        KvDoc::load(&self.dir.join("golden.txt"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+}
+
+/// Rebuild the canonical matrix stored in `golden.txt` (COO triplets under
+/// keys `mat_rows`, `mat_cols`, `mat_vals`, dimension `n`).
+pub fn canonical_matrix(golden: &KvDoc) -> Result<Csr> {
+    let n = golden.usize("n")?;
+    let rows = golden.usize_vec("mat_rows")?;
+    let cols = golden.usize_vec("mat_cols")?;
+    let vals = golden.f64_vec("mat_vals")?;
+    anyhow::ensure!(rows.len() == cols.len() && cols.len() == vals.len(), "triplet arity");
+    let mut coo = Coo::with_capacity(n, rows.len());
+    for ((i, j), v) in rows.into_iter().zip(cols).zip(vals) {
+        coo.push(i, j, v);
+    }
+    Ok(coo.to_csr())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_matrix_roundtrip() {
+        let mut d = KvDoc::new();
+        d.set("n", "3");
+        d.set_usize_vec("mat_rows", &[0, 1, 2, 0]);
+        d.set_usize_vec("mat_cols", &[0, 1, 2, 2]);
+        d.set_f64_vec("mat_vals", &[2.0, 3.0, 4.0, -1.0]);
+        let a = canonical_matrix(&d).unwrap();
+        assert_eq!(a.n(), 3);
+        assert_eq!(a.get(0, 2), Some(-1.0));
+        assert_eq!(a.get(1, 1), Some(3.0));
+    }
+
+    #[test]
+    fn locate_fails_cleanly_without_artifacts() {
+        let set = ArtifactSet::at(Path::new("/nonexistent"));
+        assert!(!set.exists());
+        assert!(set.meta().is_err());
+    }
+}

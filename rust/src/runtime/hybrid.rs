@@ -1,0 +1,105 @@
+//! Hybrid execution: the rust CG loop driving AOT-compiled JAX/Pallas
+//! kernels through PJRT. This is the path that proves all three layers
+//! compose: L1 Pallas kernel → L2 JAX graph → HLO text → L3 rust loop.
+//!
+//! The AOT executables are specialized to the canonical problem emitted by
+//! `python/compile/aot.py` (matrix data baked as constants), so they take
+//! only the iteration vectors as runtime inputs.
+
+use anyhow::{Context, Result};
+
+use crate::runtime::artifacts::ArtifactSet;
+use crate::runtime::pjrt::{Arg, Executable, PjrtRuntime};
+
+/// PJRT-backed IC(0) preconditioner `z = (L Lᵀ)⁻¹ r` (HBMC-vectorized
+/// Pallas kernel inside).
+pub struct HybridPrecond {
+    exe: Executable,
+    pub n: usize,
+}
+
+impl HybridPrecond {
+    pub fn load(rt: &PjrtRuntime, arts: &ArtifactSet) -> Result<HybridPrecond> {
+        let meta = arts.meta()?;
+        let n = meta.usize("n_aug")?;
+        let exe = rt
+            .load_hlo_text(&arts.hlo_path("precond_hbmc"), 1)
+            .context("loading precond_hbmc")?;
+        Ok(HybridPrecond { exe, n })
+    }
+
+    /// Apply to a vector in the canonical problem's HBMC ordering.
+    pub fn apply(&self, r: &[f64]) -> Result<Vec<f64>> {
+        anyhow::ensure!(r.len() == self.n, "dimension mismatch");
+        let mut out = self.exe.run_f64(&[Arg::f64(r)])?;
+        Ok(out.remove(0))
+    }
+}
+
+/// PJRT-backed SpMV `y = A x` (SELL Pallas kernel inside).
+pub struct HybridSpmv {
+    exe: Executable,
+    pub n: usize,
+}
+
+impl HybridSpmv {
+    pub fn load(rt: &PjrtRuntime, arts: &ArtifactSet) -> Result<HybridSpmv> {
+        let meta = arts.meta()?;
+        let n = meta.usize("n_aug")?;
+        let exe = rt
+            .load_hlo_text(&arts.hlo_path("spmv_sell"), 1)
+            .context("loading spmv_sell")?;
+        Ok(HybridSpmv { exe, n })
+    }
+
+    pub fn apply(&self, x: &[f64]) -> Result<Vec<f64>> {
+        anyhow::ensure!(x.len() == self.n, "dimension mismatch");
+        let mut out = self.exe.run_f64(&[Arg::f64(x)])?;
+        Ok(out.remove(0))
+    }
+}
+
+/// One fused PCG iteration executed on PJRT:
+/// inputs `(x, r, z, p, rz)` → outputs `(x', r', z', p', rz', relres²·bb)`.
+/// Matrix, factor and schedule are baked constants.
+pub struct HybridPcgStep {
+    exe: Executable,
+    pub n: usize,
+}
+
+impl HybridPcgStep {
+    pub fn load(rt: &PjrtRuntime, arts: &ArtifactSet) -> Result<HybridPcgStep> {
+        let meta = arts.meta()?;
+        let n = meta.usize("n_aug")?;
+        let exe = rt
+            .load_hlo_text(&arts.hlo_path("pcg_step"), 6)
+            .context("loading pcg_step")?;
+        Ok(HybridPcgStep { exe, n })
+    }
+
+    /// Run one iteration. `state = (x, r, p, rz)`; `z` is recomputed
+    /// inside the executable (a dead input would be eliminated by jax).
+    #[allow(clippy::type_complexity)]
+    pub fn step(
+        &self,
+        x: &[f64],
+        r: &[f64],
+        p: &[f64],
+        rz: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, f64, f64)> {
+        let out = self.exe.run_f64(&[
+            Arg::f64(x),
+            Arg::f64(r),
+            Arg::f64(p),
+            Arg::f64_shaped(&[rz], &[]),
+        ])?;
+        let mut it = out.into_iter();
+        let x = it.next().unwrap();
+        let r = it.next().unwrap();
+        let z = it.next().unwrap();
+        let p = it.next().unwrap();
+        let rz = it.next().unwrap()[0];
+        let rr = it.next().unwrap()[0];
+        Ok((x, r, z, p, rz, rr))
+    }
+}

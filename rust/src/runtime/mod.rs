@@ -1,0 +1,8 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO **text** — see `/opt/xla-example/README.md`
+//! for why text, not serialized protos) and executes them on the XLA CPU
+//! client from the rust request path. Python never runs at solve time.
+
+pub mod artifacts;
+pub mod hybrid;
+pub mod pjrt;

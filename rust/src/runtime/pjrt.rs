@@ -1,0 +1,99 @@
+//! Thin wrapper over the `xla` crate: client construction, HLO-text
+//! loading, compilation and execution with `f64`/`i32` buffers.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU client plus compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled executable (an AOT-lowered JAX function).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of leaves in the result tuple.
+    pub num_outputs: usize,
+}
+
+/// Argument buffer for execution.
+pub enum Arg {
+    F64(Vec<f64>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl Arg {
+    pub fn f64(data: &[f64]) -> Arg {
+        Arg::F64(data.to_vec(), vec![data.len() as i64])
+    }
+
+    pub fn f64_shaped(data: &[f64], shape: &[i64]) -> Arg {
+        assert_eq!(shape.iter().product::<i64>() as usize, data.len());
+        Arg::F64(data.to_vec(), shape.to_vec())
+    }
+
+    pub fn i32(data: &[i32]) -> Arg {
+        Arg::I32(data.to_vec(), vec![data.len() as i64])
+    }
+
+    pub fn i32_shaped(data: &[i32], shape: &[i64]) -> Arg {
+        assert_eq!(shape.iter().product::<i64>() as usize, data.len());
+        Arg::I32(data.to_vec(), shape.to_vec())
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Arg::F64(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
+            Arg::I32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
+        })
+    }
+}
+
+impl PjrtRuntime {
+    /// Construct the CPU client.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path, num_outputs: usize) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, num_outputs })
+    }
+}
+
+impl Executable {
+    /// Execute with the given arguments; returns each output leaf as a
+    /// flat `f64` vector. The python side lowers with `return_tuple=True`,
+    /// so the single device result is a tuple of `num_outputs` leaves.
+    pub fn run_f64(&self, args: &[Arg]) -> Result<Vec<Vec<f64>>> {
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let leaves = result.to_tuple()?;
+        anyhow::ensure!(
+            leaves.len() == self.num_outputs,
+            "expected {} outputs, got {}",
+            self.num_outputs,
+            leaves.len()
+        );
+        leaves
+            .into_iter()
+            .map(|l| l.to_vec::<f64>().context("output is not f64"))
+            .collect()
+    }
+}

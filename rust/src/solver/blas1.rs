@@ -1,0 +1,116 @@
+//! Dense vector (BLAS-1) kernels for the CG iteration. These are the
+//! straightforwardly-parallel parts of the solver (paper §2); on this
+//! single-core host they run serially but are written as contiguous loops
+//! the compiler auto-vectorizes (they count as *packed* ops in the SIMD
+//! ratio metric, matching how VTune attributes them in §5.2.1).
+
+/// `xᵀ y`.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    // 4-way unrolled reduction: keeps the dependency chain short so LLVM
+    // vectorizes; also gives run-to-run deterministic results.
+    let mut acc = [0.0f64; 4];
+    let chunks = x.len() / 4;
+    for i in 0..chunks {
+        let b = i * 4;
+        acc[0] += x[b] * y[b];
+        acc[1] += x[b + 1] * y[b + 1];
+        acc[2] += x[b + 2] * y[b + 2];
+        acc[3] += x[b + 3] * y[b + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// `||x||₂`.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// `y += α x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = x + β y` (the CG `p` update).
+#[inline]
+pub fn xpby(x: &[f64], beta: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = xi + beta * *yi;
+    }
+}
+
+/// `y = x`.
+#[inline]
+pub fn copy(x: &[f64], y: &mut [f64]) {
+    y.copy_from_slice(x);
+}
+
+/// Fused CG update: `x += α p; r -= α q;` returns `‖r‖²`. One pass over
+/// four arrays instead of three passes (perf-pass optimization — the
+/// BLAS-1 share of an ICCG iteration is memory-bound).
+#[inline]
+pub fn fused_cg_update(alpha: f64, p: &[f64], q: &[f64], x: &mut [f64], r: &mut [f64]) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    debug_assert_eq!(p.len(), x.len());
+    debug_assert_eq!(p.len(), r.len());
+    let mut rr = 0.0f64;
+    for i in 0..p.len() {
+        x[i] += alpha * p[i];
+        let ri = r[i] - alpha * q[i];
+        r[i] = ri;
+        rr += ri * ri;
+    }
+    rr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f64> = (0..101).map(|i| i as f64 * 0.25).collect();
+        let y: Vec<f64> = (0..101).map(|i| 1.0 - i as f64 * 0.5).collect();
+        let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-9 * naive.abs());
+    }
+
+    #[test]
+    fn norm_of_unit() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn axpy_updates() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn xpby_cg_update() {
+        let x = vec![1.0, 1.0];
+        let mut y = vec![2.0, 4.0];
+        xpby(&x, 0.5, &mut y);
+        assert_eq!(y, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn dot_empty_and_short() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dot(&[2.0], &[3.0]), 6.0);
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[1.0, 1.0, 1.0]), 6.0);
+    }
+}

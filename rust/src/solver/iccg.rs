@@ -1,0 +1,386 @@
+//! The assembled ICCG solver: ordering → IC(0) factorization → storage
+//! construction → PCG loop, for any [`OrderingKind`] × [`SpmvKind`]
+//! combination the paper evaluates.
+
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+use crate::config::{OrderingKind, SolverConfig, SpmvKind};
+use crate::coordinator::metrics::{per_iteration_ops, OpInputs, OpProfile};
+use crate::coordinator::pool::Pool;
+use crate::factor::ic0::ic0_auto;
+use crate::factor::split::{SellTriFactors, TriFactors};
+use crate::ordering::bmc::bmc_order;
+use crate::ordering::hbmc::hbmc_order;
+use crate::ordering::mc::mc_order;
+use crate::ordering::perm::Perm;
+use crate::solver::cg::{pcg, CgResult};
+use crate::solver::precond::Preconditioner;
+use crate::solver::spmv::{spmv_crs, spmv_sell};
+use crate::solver::trisolve_hbmc::{select_path, HbmcMeta};
+use crate::sparse::csr::Csr;
+use crate::sparse::sell::Sell;
+
+/// Setup-phase statistics (reported alongside solve results).
+#[derive(Debug, Clone)]
+pub struct SetupStats {
+    pub ordering_seconds: f64,
+    pub factor_seconds: f64,
+    pub num_colors: usize,
+    pub n_orig: usize,
+    /// Augmented dimension (≥ n_orig; includes HBMC/BMC dummy unknowns).
+    pub n_aug: usize,
+    pub nnz: usize,
+    /// Stored elements of the SpMV matrix in its chosen format.
+    pub spmv_elements: usize,
+    /// Stored elements of the substitution triangles in their chosen format.
+    pub tri_elements: usize,
+    /// Shift actually used by the factorization (≥ requested on auto-retry).
+    pub shift_used: f64,
+    /// Inner kernel selected for HBMC ("scalar", "avx2-w4", "avx512-w8").
+    pub kernel_path: &'static str,
+}
+
+/// A fully-constructed solver, reusable across right-hand sides.
+pub struct IccgSolver {
+    pub cfg: SolverConfig,
+    perm: Perm,
+    a_perm: Csr,
+    sell_a: Option<Sell>,
+    precond: Preconditioner,
+    pool: Pool,
+    pub setup: SetupStats,
+    /// Analytic per-iteration op profile (SIMD-ratio metric).
+    pub ops: OpProfile,
+}
+
+/// Solution + iteration data, mapped back to the original ordering.
+#[derive(Debug, Clone)]
+pub struct SolveOutcome {
+    pub x: Vec<f64>,
+    pub cg: CgResult,
+    /// Thread synchronizations per substitution sweep (= n_c − 1).
+    pub syncs_per_substitution: usize,
+}
+
+impl IccgSolver {
+    /// Build the solver for matrix `a` under configuration `cfg`.
+    pub fn new(a: &Csr, cfg: &SolverConfig) -> Result<IccgSolver> {
+        cfg.validate()?;
+        let pool = Pool::new(cfg.threads);
+        let n_orig = a.n();
+
+        // --- Ordering ---------------------------------------------------
+        let t0 = Instant::now();
+        let (perm, num_colors, structure): (Perm, usize, Structure) = match cfg.ordering {
+            OrderingKind::Natural => (Perm::identity(n_orig), 1, Structure::Natural),
+            OrderingKind::Mc => {
+                let mc = mc_order(a);
+                (mc.perm.clone(), mc.num_colors, Structure::Mc { color_ptr: mc.color_ptr })
+            }
+            OrderingKind::Bmc => {
+                let ord = bmc_order(a, cfg.bs);
+                (
+                    ord.perm.clone(),
+                    ord.num_colors,
+                    Structure::Bmc { color_ptr: ord.color_ptr, bs: ord.bs },
+                )
+            }
+            OrderingKind::Hbmc => {
+                let ord = hbmc_order(a, cfg.bs, cfg.w);
+                let meta = HbmcMeta::from_ordering(&ord);
+                (ord.perm.clone(), ord.num_colors, Structure::Hbmc { meta })
+            }
+        };
+        let a_perm = a.permute_sym(&perm);
+        let ordering_seconds = t0.elapsed().as_secs_f64();
+
+        // --- Factorization ------------------------------------------------
+        let t1 = Instant::now();
+        let factor = ic0_auto(&a_perm, cfg.shift).context("IC(0) factorization failed")?;
+        let shift_used = factor.shift;
+        let tri = TriFactors::from_ic(&factor);
+        let factor_seconds = t1.elapsed().as_secs_f64();
+
+        // --- Solver storage -----------------------------------------------
+        let tri_nnz = tri.lower.nnz() + tri.upper.nnz();
+        let mut kernel_path = "n/a";
+        let (precond, tri_elements) = match structure {
+            Structure::Natural => (Preconditioner::Serial(tri), tri_nnz),
+            Structure::Mc { color_ptr } => (Preconditioner::Mc { tri, color_ptr }, tri_nnz),
+            Structure::Bmc { color_ptr, bs } => {
+                (Preconditioner::Bmc { tri, color_ptr, bs }, tri_nnz)
+            }
+            Structure::Hbmc { meta } => {
+                let sell = SellTriFactors::from_tri(&tri, cfg.w);
+                let stored = sell.stored_elements();
+                let path = select_path(cfg.w, cfg.use_intrinsics);
+                kernel_path = path.name();
+                (Preconditioner::Hbmc { meta, sell, path }, stored)
+            }
+        };
+
+        let sell_a = match cfg.spmv {
+            SpmvKind::Crs => None,
+            SpmvKind::Sell => Some(match cfg.sell_sigma {
+                Some(sigma) => Sell::from_csr_sigma(&a_perm, cfg.w, sigma),
+                None => Sell::from_csr(&a_perm, cfg.w),
+            }),
+        };
+        let spmv_elements = sell_a
+            .as_ref()
+            .map(|s| s.stored_elements())
+            .unwrap_or_else(|| a_perm.nnz());
+
+        let setup = SetupStats {
+            ordering_seconds,
+            factor_seconds,
+            num_colors,
+            n_orig,
+            n_aug: a_perm.n(),
+            nnz: a_perm.nnz(),
+            spmv_elements,
+            tri_elements,
+            shift_used,
+            kernel_path,
+        };
+
+        let ops = per_iteration_ops(
+            cfg,
+            &OpInputs {
+                n: a_perm.n(),
+                nnz: a_perm.nnz(),
+                tri_nnz,
+                sell_tri_elements: matches!(cfg.ordering, OrderingKind::Hbmc)
+                    .then_some(tri_elements),
+                sell_a_elements: sell_a.as_ref().map(|s| s.stored_elements()),
+            },
+        );
+
+        Ok(IccgSolver { cfg: cfg.clone(), perm, a_perm, sell_a, precond, pool, setup, ops })
+    }
+
+    /// Augmented (internal) dimension.
+    pub fn n_aug(&self) -> usize {
+        self.a_perm.n()
+    }
+
+    /// The permutation from original to internal (reordered, padded) space.
+    pub fn perm(&self) -> &Perm {
+        &self.perm
+    }
+
+    /// The reordered matrix (for tests and the PJRT hybrid path).
+    pub fn a_perm(&self) -> &Csr {
+        &self.a_perm
+    }
+
+    /// Apply the preconditioner in the *internal* ordering (tests, hybrid
+    /// PJRT cross-checks).
+    pub fn apply_precond_internal(&self, r: &[f64], z: &mut [f64]) {
+        let mut scratch = vec![0.0; self.n_aug()];
+        self.precond.apply(r, &mut scratch, z, &self.pool);
+    }
+
+    /// Solve `A x = b` (original ordering); `b.len() == n_orig`.
+    pub fn solve(&self, b: &[f64]) -> Result<SolveOutcome> {
+        self.solve_opts(b, false)
+    }
+
+    /// Solve, optionally recording the per-iteration residual history
+    /// (Fig. 5.1 data).
+    pub fn solve_opts(&self, b: &[f64], record_history: bool) -> Result<SolveOutcome> {
+        anyhow::ensure!(b.len() == self.setup.n_orig, "rhs dimension mismatch");
+        let n = self.n_aug();
+        let b_perm = self.perm.apply_vec(b, 0.0);
+        let mut x_perm = vec![0.0f64; n];
+        let mut scratch = vec![0.0f64; n];
+
+        let pool = &self.pool;
+        let a_perm = &self.a_perm;
+        let sell_a = &self.sell_a;
+        let precond = &self.precond;
+        pool.reset_sync_count();
+
+        let mut spmv = |x: &[f64], y: &mut [f64], times: &mut crate::util::timer::KernelTimes| {
+            let t = Instant::now();
+            match sell_a {
+                Some(s) => spmv_sell(s, x, y, pool),
+                None => spmv_crs(a_perm, x, y, pool),
+            }
+            times.add("spmv", t.elapsed());
+        };
+        let mut prec = |r: &[f64], z: &mut [f64], times: &mut crate::util::timer::KernelTimes| {
+            let t = Instant::now();
+            precond.apply(r, &mut scratch, z, pool);
+            times.add("trisolve", t.elapsed());
+        };
+
+        let cg = pcg(
+            &mut spmv,
+            &mut prec,
+            &b_perm,
+            &mut x_perm,
+            self.cfg.rtol,
+            self.cfg.max_iters,
+            record_history,
+        );
+
+        let x = self.perm.unapply_vec(&x_perm);
+        Ok(SolveOutcome {
+            x,
+            cg,
+            syncs_per_substitution: self.setup.num_colors.saturating_sub(1),
+        })
+    }
+}
+
+enum Structure {
+    Natural,
+    Mc { color_ptr: Vec<usize> },
+    Bmc { color_ptr: Vec<usize>, bs: usize },
+    Hbmc { meta: HbmcMeta },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    fn laplace2d(nx: usize, ny: usize) -> Csr {
+        let idx = |x: usize, y: usize| y * nx + x;
+        let mut c = Coo::new(nx * ny);
+        for y in 0..ny {
+            for x in 0..nx {
+                c.push(idx(x, y), idx(x, y), 4.0);
+                if x + 1 < nx {
+                    c.push_sym(idx(x, y), idx(x + 1, y), -1.0);
+                }
+                if y + 1 < ny {
+                    c.push_sym(idx(x, y), idx(x, y + 1), -1.0);
+                }
+            }
+        }
+        c.to_csr()
+    }
+
+    fn rhs_for_ones(a: &Csr) -> Vec<f64> {
+        let mut b = vec![0.0; a.n()];
+        a.mul_vec(&vec![1.0; a.n()], &mut b);
+        b
+    }
+
+    #[test]
+    fn all_orderings_solve_to_the_same_solution() {
+        let a = laplace2d(16, 16);
+        let b = rhs_for_ones(&a);
+        for ordering in [
+            OrderingKind::Natural,
+            OrderingKind::Mc,
+            OrderingKind::Bmc,
+            OrderingKind::Hbmc,
+        ] {
+            let cfg = SolverConfig {
+                ordering,
+                bs: 4,
+                w: 4,
+                spmv: SpmvKind::Crs,
+                threads: 1,
+                rtol: 1e-9,
+                ..Default::default()
+            };
+            let solver = IccgSolver::new(&a, &cfg).unwrap();
+            let out = solver.solve(&b).unwrap();
+            assert!(out.cg.converged, "{ordering:?} failed to converge");
+            assert!(
+                crate::util::max_abs_diff(&out.x, &vec![1.0; a.n()]) < 1e-6,
+                "{ordering:?} wrong solution"
+            );
+        }
+    }
+
+    #[test]
+    fn bmc_and_hbmc_have_identical_iteration_counts() {
+        // The paper's equivalence claim, checked end-to-end (Table 5.2).
+        let a = laplace2d(24, 18);
+        let b = rhs_for_ones(&a);
+        let mk = |ordering| SolverConfig {
+            ordering,
+            bs: 8,
+            w: 4,
+            spmv: SpmvKind::Crs,
+            rtol: 1e-8,
+            ..Default::default()
+        };
+        let bmc = IccgSolver::new(&a, &mk(OrderingKind::Bmc)).unwrap();
+        let hbmc = IccgSolver::new(&a, &mk(OrderingKind::Hbmc)).unwrap();
+        let ob = bmc.solve_opts(&b, true).unwrap();
+        let oh = hbmc.solve_opts(&b, true).unwrap();
+        assert!(ob.cg.iterations.abs_diff(oh.cg.iterations) <= 1);
+        // Residual histories overlap to near machine precision (Fig. 5.1).
+        for (rb, rh) in ob.cg.residual_history.iter().zip(&oh.cg.residual_history) {
+            assert!((rb - rh).abs() <= 1e-10 * rb.max(*rh).max(1e-30), "{rb} vs {rh}");
+        }
+    }
+
+    #[test]
+    fn sell_spmv_matches_crs_solution() {
+        let a = laplace2d(20, 20);
+        let b = rhs_for_ones(&a);
+        let mk = |spmv| SolverConfig {
+            ordering: OrderingKind::Hbmc,
+            bs: 8,
+            w: 4,
+            spmv,
+            rtol: 1e-9,
+            ..Default::default()
+        };
+        let crs = IccgSolver::new(&a, &mk(SpmvKind::Crs)).unwrap();
+        let sell = IccgSolver::new(&a, &mk(SpmvKind::Sell)).unwrap();
+        let oc = crs.solve(&b).unwrap();
+        let os = sell.solve(&b).unwrap();
+        assert_eq!(oc.cg.iterations, os.cg.iterations);
+        assert!(crate::util::max_abs_diff(&oc.x, &os.x) < 1e-8);
+        assert!(sell.setup.spmv_elements >= crs.setup.spmv_elements);
+    }
+
+    #[test]
+    fn multithreaded_matches_single_threaded() {
+        let a = laplace2d(20, 12);
+        let b = rhs_for_ones(&a);
+        let mk = |threads| SolverConfig {
+            ordering: OrderingKind::Hbmc,
+            bs: 4,
+            w: 4,
+            threads,
+            rtol: 1e-9,
+            ..Default::default()
+        };
+        let s1 = IccgSolver::new(&a, &mk(1)).unwrap();
+        let s4 = IccgSolver::new(&a, &mk(4)).unwrap();
+        let o1 = s1.solve(&b).unwrap();
+        let o4 = s4.solve(&b).unwrap();
+        assert_eq!(o1.cg.iterations, o4.cg.iterations);
+        assert!(crate::util::max_abs_diff(&o1.x, &o4.x) < 1e-9);
+    }
+
+    #[test]
+    fn setup_stats_populated() {
+        let a = laplace2d(12, 12);
+        let cfg = SolverConfig { ordering: OrderingKind::Hbmc, bs: 4, w: 4, ..Default::default() };
+        let s = IccgSolver::new(&a, &cfg).unwrap();
+        assert_eq!(s.setup.n_orig, 144);
+        assert!(s.setup.n_aug >= 144);
+        assert!(s.setup.num_colors >= 2);
+        assert!(s.setup.tri_elements > 0);
+        assert!(s.ops.simd_ratio() > 0.0);
+        assert_ne!(s.setup.kernel_path, "n/a");
+    }
+
+    #[test]
+    fn rhs_dimension_checked() {
+        let a = laplace2d(8, 8);
+        let solver = IccgSolver::new(&a, &SolverConfig::default()).unwrap();
+        assert!(solver.solve(&vec![1.0; 3]).is_err());
+    }
+}

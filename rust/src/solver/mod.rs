@@ -1,0 +1,14 @@
+//! Solver kernels: triangular substitutions (serial / MC / BMC / HBMC),
+//! sparse matrix-vector products (CRS & SELL), BLAS-1 helpers, the
+//! preconditioned CG iteration and the assembled ICCG solver.
+
+pub mod blas1;
+pub mod cg;
+pub mod gs;
+pub mod iccg;
+pub mod precond;
+pub mod spmv;
+pub mod trisolve_bmc;
+pub mod trisolve_hbmc;
+pub mod trisolve_mc;
+pub mod trisolve_serial;

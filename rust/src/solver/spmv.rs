@@ -1,0 +1,235 @@
+//! Parallel sparse matrix-vector products — CRS (the paper's baseline
+//! format, used by the MC/BMC solvers and by `HBMC (crs_spmv)`) and
+//! SELL-w (used by `HBMC (sell_spmv)`, §4.4.2).
+
+use crate::coordinator::pool::{Pool, SyncSlice};
+use crate::sparse::csr::Csr;
+use crate::sparse::sell::Sell;
+
+/// `y = A x`, CRS storage, rows partitioned across the pool.
+pub fn spmv_crs(a: &Csr, x: &[f64], y: &mut [f64], pool: &Pool) {
+    let n = a.n();
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), n);
+    let ys = SyncSlice::new(y);
+    pool.run(&|tid, nt| {
+        let rows = Pool::chunk(n, tid, nt);
+        let row_ptr = a.row_ptr();
+        let cols = a.cols();
+        let vals = a.vals();
+        for i in rows {
+            let mut s = 0.0;
+            for k in row_ptr[i] as usize..row_ptr[i + 1] as usize {
+                s += vals[k] * x[cols[k] as usize];
+            }
+            unsafe { ys.set(i, s) };
+        }
+    });
+}
+
+/// `y = A x`, SELL-c storage, slices partitioned across the pool. Handles
+/// σ-sorted layouts via the internal lane→row map. Dispatches to an
+/// AVX-512 (c = 8) or AVX2 (c = 4) gather+FMA inner loop when available —
+/// the perf-pass optimization recorded in EXPERIMENTS.md §Perf.
+pub fn spmv_sell(s: &Sell, x: &[f64], y: &mut [f64], pool: &Pool) {
+    let n = s.n();
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), n);
+    let c = s.c();
+    let nslices = s.nslices();
+    #[cfg(target_arch = "x86_64")]
+    let use512 = c == 8 && std::arch::is_x86_feature_detected!("avx512f");
+    #[cfg(target_arch = "x86_64")]
+    let use2 = c == 4 && std::arch::is_x86_feature_detected!("avx2");
+    #[cfg(not(target_arch = "x86_64"))]
+    let (use512, use2) = (false, false);
+    let ys = SyncSlice::new(y);
+    pool.run(&|tid, nt| {
+        let slices = Pool::chunk(nslices, tid, nt);
+        #[cfg(target_arch = "x86_64")]
+        if use512 {
+            unsafe { sell_slices_avx512(s, x, &ys, slices.clone()) };
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if use2 {
+            unsafe { sell_slices_avx2(s, x, &ys, slices.clone()) };
+            return;
+        }
+        sell_slices_scalar(s, x, &ys, slices);
+    });
+}
+
+fn sell_slices_scalar(s: &Sell, x: &[f64], ys: &SyncSlice<f64>, slices: std::ops::Range<usize>) {
+    let c = s.c();
+    let slice_ptr = s.slice_ptr();
+    let slice_len = s.slice_len();
+    let cols = s.cols();
+    let vals = s.vals();
+    let lanes = s.row_of_lane();
+    let mut acc = vec![0.0f64; c];
+    for si in slices {
+        acc.fill(0.0);
+        let off = slice_ptr[si] as usize;
+        let width = slice_len[si] as usize;
+        for k in 0..width {
+            let base = off + k * c;
+            for lane in 0..c {
+                acc[lane] += vals[base + lane] * x[cols[base + lane] as usize];
+            }
+        }
+        for lane in 0..c {
+            let r = lanes[si * c + lane];
+            if r != u32::MAX {
+                unsafe { ys.set(r as usize, acc[lane]) };
+            }
+        }
+    }
+}
+
+/// AVX-512 SELL-8 slice kernel: 8-lane gather + FMA (mirrors the HBMC
+/// substitution inner loop of Fig. 4.6, without the sequential dependence).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn sell_slices_avx512(
+    s: &Sell,
+    x: &[f64],
+    ys: &SyncSlice<f64>,
+    slices: std::ops::Range<usize>,
+) {
+    use std::arch::x86_64::*;
+    const C: usize = 8;
+    let slice_ptr = s.slice_ptr();
+    let slice_len = s.slice_len();
+    let cols = s.cols();
+    let vals = s.vals();
+    let lanes = s.row_of_lane();
+    let xp = x.as_ptr();
+    for si in slices {
+        let off = slice_ptr[si] as usize;
+        let width = slice_len[si] as usize;
+        let mut acc = _mm512_setzero_pd();
+        for k in 0..width {
+            let base = off + k * C;
+            let vidx = _mm256_loadu_si256(cols.as_ptr().add(base) as *const __m256i);
+            let g = _mm512_i32gather_pd::<8>(vidx, xp);
+            let v = _mm512_loadu_pd(vals.as_ptr().add(base));
+            acc = _mm512_fmadd_pd(v, g, acc);
+        }
+        let mut buf = [0.0f64; C];
+        _mm512_storeu_pd(buf.as_mut_ptr(), acc);
+        for (lane, &val) in buf.iter().enumerate() {
+            let r = lanes[si * C + lane];
+            if r != u32::MAX {
+                ys.set(r as usize, val);
+            }
+        }
+    }
+}
+
+/// AVX2 SELL-4 slice kernel.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sell_slices_avx2(
+    s: &Sell,
+    x: &[f64],
+    ys: &SyncSlice<f64>,
+    slices: std::ops::Range<usize>,
+) {
+    use std::arch::x86_64::*;
+    const C: usize = 4;
+    let slice_ptr = s.slice_ptr();
+    let slice_len = s.slice_len();
+    let cols = s.cols();
+    let vals = s.vals();
+    let lanes = s.row_of_lane();
+    let xp = x.as_ptr();
+    for si in slices {
+        let off = slice_ptr[si] as usize;
+        let width = slice_len[si] as usize;
+        let mut acc = _mm256_setzero_pd();
+        for k in 0..width {
+            let base = off + k * C;
+            let vidx = _mm_loadu_si128(cols.as_ptr().add(base) as *const __m128i);
+            let g = _mm256_i32gather_pd::<8>(xp, vidx);
+            let v = _mm256_loadu_pd(vals.as_ptr().add(base));
+            acc = _mm256_fmadd_pd(v, g, acc);
+        }
+        let mut buf = [0.0f64; C];
+        _mm256_storeu_pd(buf.as_mut_ptr(), acc);
+        for (lane, &val) in buf.iter().enumerate() {
+            let r = lanes[si * C + lane];
+            if r != u32::MAX {
+                ys.set(r as usize, val);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::util::rng::Rng;
+
+    fn random_csr(n: usize, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut coo = Coo::new(n);
+        for i in 0..n {
+            coo.push(i, i, 4.0);
+            for _ in 0..4 {
+                let j = rng.below(n);
+                if j != i {
+                    coo.push(i, j, rng.range_f64(-1.0, 1.0));
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn crs_parallel_matches_serial() {
+        let a = random_csr(97, 1);
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..97).map(|_| rng.f64()).collect();
+        let mut y_ref = vec![0.0; 97];
+        a.mul_vec(&x, &mut y_ref);
+        for nt in [1usize, 3, 4] {
+            let pool = Pool::new(nt);
+            let mut y = vec![0.0; 97];
+            spmv_crs(&a, &x, &mut y, &pool);
+            assert!(crate::util::max_abs_diff(&y, &y_ref) < 1e-14, "nt={nt}");
+        }
+    }
+
+    #[test]
+    fn sell_parallel_matches_serial() {
+        let a = random_csr(120, 5);
+        let mut rng = Rng::new(6);
+        let x: Vec<f64> = (0..120).map(|_| rng.f64()).collect();
+        let mut y_ref = vec![0.0; 120];
+        a.mul_vec(&x, &mut y_ref);
+        for &c in &[4usize, 8] {
+            let s = Sell::from_csr(&a, c);
+            for nt in [1usize, 2] {
+                let pool = Pool::new(nt);
+                let mut y = vec![0.0; 120];
+                spmv_sell(&s, &x, &mut y, &pool);
+                assert!(crate::util::max_abs_diff(&y, &y_ref) < 1e-14, "c={c} nt={nt}");
+            }
+        }
+    }
+
+    #[test]
+    fn sell_sigma_sorted_matches() {
+        let a = random_csr(128, 9);
+        let s = Sell::from_csr_sigma(&a, 8, 32);
+        let x: Vec<f64> = (0..128).map(|i| (i as f64).sin()).collect();
+        let mut y_ref = vec![0.0; 128];
+        a.mul_vec(&x, &mut y_ref);
+        let pool = Pool::new(2);
+        let mut y = vec![0.0; 128];
+        spmv_sell(&s, &x, &mut y, &pool);
+        assert!(crate::util::max_abs_diff(&y, &y_ref) < 1e-14);
+    }
+}

@@ -1,0 +1,170 @@
+//! Multithreaded substitutions under block multi-color ordering (the
+//! paper's "BMC" baseline, ref. [13]). Blocks of one color are independent
+//! → parallel over blocks; *inside* a block the rows are processed
+//! sequentially, which is exactly the data dependence that prevents SIMD
+//! vectorization and motivates HBMC (§1, §4).
+
+use crate::coordinator::pool::{Pool, SyncSlice};
+use crate::factor::split::TriFactors;
+
+/// Forward substitution `L y = r` under BMC ordering with block size `bs`.
+pub fn forward(
+    tri: &TriFactors,
+    color_ptr: &[usize],
+    bs: usize,
+    r: &[f64],
+    y: &mut [f64],
+    pool: &Pool,
+) {
+    let n = tri.n();
+    assert_eq!(r.len(), n);
+    assert_eq!(y.len(), n);
+    let ncolors = color_ptr.len() - 1;
+    let ys = SyncSlice::new(y);
+    pool.run(&|tid, nt| {
+        let row_ptr = tri.lower.row_ptr();
+        let cols = tri.lower.cols();
+        let vals = tri.lower.vals();
+        for c in 0..ncolors {
+            let (lo, hi) = (color_ptr[c], color_ptr[c + 1]);
+            let nblocks = (hi - lo) / bs;
+            let blocks = Pool::chunk(nblocks, tid, nt);
+            for b in blocks {
+                let row0 = lo + b * bs;
+                for i in row0..row0 + bs {
+                    let mut s = r[i];
+                    for k in row_ptr[i] as usize..row_ptr[i + 1] as usize {
+                        s -= vals[k] * unsafe { ys.get(cols[k] as usize) };
+                    }
+                    unsafe { ys.set(i, s * tri.diag_inv[i]) };
+                }
+            }
+            if c + 1 < ncolors {
+                pool.color_barrier();
+            }
+        }
+    });
+}
+
+/// Backward substitution `Lᵀ z = y` under BMC ordering (colors and
+/// in-block rows reversed).
+pub fn backward(
+    tri: &TriFactors,
+    color_ptr: &[usize],
+    bs: usize,
+    y: &[f64],
+    z: &mut [f64],
+    pool: &Pool,
+) {
+    let n = tri.n();
+    assert_eq!(y.len(), n);
+    assert_eq!(z.len(), n);
+    let ncolors = color_ptr.len() - 1;
+    let zs = SyncSlice::new(z);
+    pool.run(&|tid, nt| {
+        let row_ptr = tri.upper.row_ptr();
+        let cols = tri.upper.cols();
+        let vals = tri.upper.vals();
+        for c in (0..ncolors).rev() {
+            let (lo, hi) = (color_ptr[c], color_ptr[c + 1]);
+            let nblocks = (hi - lo) / bs;
+            let blocks = Pool::chunk(nblocks, tid, nt);
+            for b in blocks {
+                let row0 = lo + b * bs;
+                for i in (row0..row0 + bs).rev() {
+                    let mut s = y[i];
+                    for k in row_ptr[i] as usize..row_ptr[i + 1] as usize {
+                        s -= vals[k] * unsafe { zs.get(cols[k] as usize) };
+                    }
+                    unsafe { zs.set(i, s * tri.diag_inv[i]) };
+                }
+            }
+            if c > 0 {
+                pool.color_barrier();
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::ic0::ic0;
+    use crate::ordering::bmc::bmc_order;
+    use crate::solver::trisolve_serial;
+    use crate::sparse::coo::Coo;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> crate::sparse::csr::Csr {
+        let mut rng = Rng::new(seed);
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            c.push(i, i, 8.0);
+            for _ in 0..3 {
+                let j = rng.below(n);
+                if j != i {
+                    c.push_sym(i, j, -0.4);
+                }
+            }
+        }
+        c.to_csr()
+    }
+
+    #[test]
+    fn bmc_substitutions_match_serial() {
+        let a0 = random_spd(130, 17);
+        for &bs in &[4usize, 8, 16] {
+            let ord = bmc_order(&a0, bs);
+            let a = a0.permute_sym(&ord.perm);
+            let f = ic0(&a, 0.0).unwrap();
+            let tri = TriFactors::from_ic(&f);
+            let n = a.n();
+            let mut rng = Rng::new(18);
+            let r: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+
+            let mut y_ref = vec![0.0; n];
+            trisolve_serial::forward(&tri, &r, &mut y_ref);
+            let mut z_ref = vec![0.0; n];
+            trisolve_serial::backward(&tri, &y_ref, &mut z_ref);
+
+            for nt in [1usize, 3] {
+                let pool = Pool::new(nt);
+                let mut y = vec![0.0; n];
+                forward(&tri, &ord.color_ptr, bs, &r, &mut y, &pool);
+                assert!(
+                    crate::util::max_abs_diff(&y, &y_ref) < 1e-13,
+                    "fwd bs={bs} nt={nt}"
+                );
+                let mut z = vec![0.0; n];
+                backward(&tri, &ord.color_ptr, bs, &y, &mut z, &pool);
+                assert!(
+                    crate::util::max_abs_diff(&z, &z_ref) < 1e-13,
+                    "bwd bs={bs} nt={nt}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dummy_rows_stay_zero() {
+        // A padded system: dummy slots must remain 0 through both sweeps
+        // when the rhs is 0 there (identity diagonal, no coupling).
+        let a0 = random_spd(30, 3); // 30 % 8 != 0 → dummies with bs=8
+        let ord = bmc_order(&a0, 8);
+        let a = a0.permute_sym(&ord.perm);
+        assert!(a.n() > 30, "fixture must pad");
+        let f = ic0(&a, 0.0).unwrap();
+        let tri = TriFactors::from_ic(&f);
+        let r = ord.perm.apply_vec(&vec![1.0; 30], 0.0);
+        let pool = Pool::new(1);
+        let mut y = vec![0.0; a.n()];
+        forward(&tri, &ord.color_ptr, 8, &r, &mut y, &pool);
+        let mut z = vec![0.0; a.n()];
+        backward(&tri, &ord.color_ptr, 8, &y, &mut z, &pool);
+        for i in 0..a.n() {
+            if ord.perm.old_of_new(i).is_none() {
+                assert_eq!(z[i], 0.0, "dummy row {i} polluted");
+            }
+        }
+    }
+}

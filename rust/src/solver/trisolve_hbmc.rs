@@ -1,0 +1,488 @@
+//! Vectorized + multithreaded substitutions under HBMC ordering — the
+//! paper's core kernel (§4.3, Fig. 4.6).
+//!
+//! Structure: outer loop over colors (barrier between colors, `n_c − 1`
+//! syncs); middle loop over level-1 blocks, partitioned across threads;
+//! inner loop over the `bs` sequential steps of a level-1 block, each step
+//! being a `w`-wide packed operation over one SELL slice:
+//!
+//! ```text
+//! t[0..w]  = r[row .. row+w]                       (packed load)
+//! for k in 0..slice_len:                            (SELL gather loop)
+//!     t[j] -= val[k][j] * y[col[k][j]]              (gather + packed FNMA)
+//! y[row .. row+w] = t * diag_inv[row .. row+w]      (packed mul + store)
+//! ```
+//!
+//! This is exactly the AVX-512 kernel of Fig. 4.6 (`_mm512_load_pd`,
+//! `_mm512_i32logather_pd`, `_mm512_sub_pd(mul)`, `_mm512_mul_pd`,
+//! `_mm512_store_pd`). Three implementations are provided:
+//!
+//! * a const-generic scalar path (`W` ∈ {2,4,8,16}) written so LLVM can
+//!   auto-vectorize the multiply/subtract lanes,
+//! * an AVX-512F intrinsic path for `w = 8` (the paper's KNL/Skylake code),
+//! * an AVX2 intrinsic path for `w = 4` (the paper's Broadwell code),
+//!
+//! selected at runtime via `is_x86_feature_detected!`. All three are
+//! bit-compatible (same operation order per lane) and tested against the
+//! serial CSR oracle.
+//!
+//! Gather safety: within a color, a slice's columns reference either
+//! earlier colors (finished before the barrier) or earlier steps of the
+//! *same lane* of the same level-1 block (written by this same thread) —
+//! that is the level-2 diagonality invariant checked at ordering time — so
+//! unsynchronized reads through [`SyncSlice`] are race-free.
+
+use crate::coordinator::pool::{Pool, SyncSlice};
+use crate::factor::split::SellTriFactors;
+use crate::ordering::hbmc::HbmcOrdering;
+use crate::sparse::sell::Sell;
+
+/// Solve-time metadata extracted from an [`HbmcOrdering`] (kept small and
+/// POD so benches can build variants cheaply).
+#[derive(Debug, Clone)]
+pub struct HbmcMeta {
+    pub bs: usize,
+    pub w: usize,
+    pub num_colors: usize,
+    /// Row range of color `c`: `color_ptr[c]..color_ptr[c+1]`.
+    pub color_ptr: Vec<usize>,
+}
+
+impl HbmcMeta {
+    pub fn from_ordering(ord: &HbmcOrdering) -> HbmcMeta {
+        HbmcMeta {
+            bs: ord.bs,
+            w: ord.w,
+            num_colors: ord.num_colors,
+            color_ptr: ord.color_ptr.clone(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        *self.color_ptr.last().unwrap()
+    }
+}
+
+/// Which inner kernel ran (reported by the driver; feeds EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    Scalar,
+    Avx2W4,
+    Avx512W8,
+}
+
+impl KernelPath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Avx2W4 => "avx2-w4",
+            KernelPath::Avx512W8 => "avx512-w8",
+        }
+    }
+}
+
+/// Select the best available kernel path for width `w`.
+pub fn select_path(w: usize, use_intrinsics: bool) -> KernelPath {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if use_intrinsics {
+            if w == 8 && std::arch::is_x86_feature_detected!("avx512f") {
+                return KernelPath::Avx512W8;
+            }
+            if w == 4 && std::arch::is_x86_feature_detected!("avx2") {
+                return KernelPath::Avx2W4;
+            }
+        }
+    }
+    let _ = use_intrinsics;
+    KernelPath::Scalar
+}
+
+/// Forward substitution `L y = r` under HBMC.
+pub fn forward(
+    meta: &HbmcMeta,
+    factors: &SellTriFactors,
+    r: &[f64],
+    y: &mut [f64],
+    pool: &Pool,
+    path: KernelPath,
+) {
+    let n = meta.n();
+    assert_eq!(factors.n(), n);
+    assert_eq!(r.len(), n);
+    assert_eq!(y.len(), n);
+    let ys = SyncSlice::new(y);
+    let sell = &factors.fwd;
+    let dinv = &factors.diag_inv;
+    pool.run(&|tid, nt| {
+        sweep(meta, sell, dinv, r, &ys, pool, tid, nt, path, false);
+    });
+}
+
+/// Backward substitution `Lᵀ z = y` under HBMC (colors and steps reversed).
+pub fn backward(
+    meta: &HbmcMeta,
+    factors: &SellTriFactors,
+    y: &[f64],
+    z: &mut [f64],
+    pool: &Pool,
+    path: KernelPath,
+) {
+    let n = meta.n();
+    assert_eq!(factors.n(), n);
+    assert_eq!(y.len(), n);
+    assert_eq!(z.len(), n);
+    let zs = SyncSlice::new(z);
+    let sell = &factors.bwd;
+    let dinv = &factors.diag_inv;
+    pool.run(&|tid, nt| {
+        sweep(meta, sell, dinv, y, &zs, pool, tid, nt, path, true);
+    });
+}
+
+/// One full color sweep executed by worker `tid` (shared by fwd/bwd; for
+/// the backward sweep colors and in-block steps run in reverse).
+#[allow(clippy::too_many_arguments)]
+fn sweep(
+    meta: &HbmcMeta,
+    sell: &Sell,
+    dinv: &[f64],
+    rhs: &[f64],
+    out: &SyncSlice<f64>,
+    pool: &Pool,
+    tid: usize,
+    nt: usize,
+    path: KernelPath,
+    reverse: bool,
+) {
+    let (bs, w) = (meta.bs, meta.w);
+    let bw = bs * w;
+    let ncolors = meta.num_colors;
+    let colors: Box<dyn Iterator<Item = usize>> = if reverse {
+        Box::new((0..ncolors).rev())
+    } else {
+        Box::new(0..ncolors)
+    };
+    for (ci, c) in colors.enumerate() {
+        let (lo, hi) = (meta.color_ptr[c], meta.color_ptr[c + 1]);
+        let nl1 = (hi - lo) / bw;
+        let blocks = Pool::chunk(nl1, tid, nt);
+        for b in blocks {
+            let row0 = lo + b * bw;
+            block_solve(sell, dinv, rhs, out, row0, bs, w, path, reverse);
+        }
+        if ci + 1 < ncolors {
+            pool.color_barrier();
+        }
+    }
+}
+
+/// Solve one level-1 block: `bs` sequential `w`-wide steps.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn block_solve(
+    sell: &Sell,
+    dinv: &[f64],
+    rhs: &[f64],
+    out: &SyncSlice<f64>,
+    row0: usize,
+    bs: usize,
+    w: usize,
+    path: KernelPath,
+    reverse: bool,
+) {
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx512W8 => unsafe {
+            block_solve_avx512(sell, dinv, rhs, out, row0, bs, reverse)
+        },
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx2W4 => unsafe {
+            block_solve_avx2(sell, dinv, rhs, out, row0, bs, reverse)
+        },
+        #[allow(unreachable_patterns)]
+        _ => match w {
+            2 => block_solve_scalar::<2>(sell, dinv, rhs, out, row0, bs, reverse),
+            4 => block_solve_scalar::<4>(sell, dinv, rhs, out, row0, bs, reverse),
+            8 => block_solve_scalar::<8>(sell, dinv, rhs, out, row0, bs, reverse),
+            16 => block_solve_scalar::<16>(sell, dinv, rhs, out, row0, bs, reverse),
+            _ => block_solve_dyn(sell, dinv, rhs, out, row0, bs, w, reverse),
+        },
+    }
+}
+
+/// Const-generic scalar kernel (auto-vectorizable lanes).
+fn block_solve_scalar<const W: usize>(
+    sell: &Sell,
+    dinv: &[f64],
+    rhs: &[f64],
+    out: &SyncSlice<f64>,
+    row0: usize,
+    bs: usize,
+    reverse: bool,
+) {
+    let slice_ptr = sell.slice_ptr();
+    let slice_len = sell.slice_len();
+    let cols = sell.cols();
+    let vals = sell.vals();
+    for step in 0..bs {
+        let l = if reverse { bs - 1 - step } else { step };
+        let rowbase = row0 + l * W;
+        let slice = rowbase / W;
+        let off = slice_ptr[slice] as usize;
+        let len = slice_len[slice] as usize;
+        let mut t = [0.0f64; W];
+        t.copy_from_slice(&rhs[rowbase..rowbase + W]);
+        for k in 0..len {
+            let base = off + k * W;
+            for j in 0..W {
+                t[j] -= vals[base + j] * unsafe { out.get(cols[base + j] as usize) };
+            }
+        }
+        for j in 0..W {
+            unsafe { out.set(rowbase + j, t[j] * dinv[rowbase + j]) };
+        }
+    }
+}
+
+/// Fallback for arbitrary `w` (not a compile-time width).
+#[allow(clippy::too_many_arguments)]
+fn block_solve_dyn(
+    sell: &Sell,
+    dinv: &[f64],
+    rhs: &[f64],
+    out: &SyncSlice<f64>,
+    row0: usize,
+    bs: usize,
+    w: usize,
+    reverse: bool,
+) {
+    let slice_ptr = sell.slice_ptr();
+    let slice_len = sell.slice_len();
+    let cols = sell.cols();
+    let vals = sell.vals();
+    let mut t = vec![0.0f64; w];
+    for step in 0..bs {
+        let l = if reverse { bs - 1 - step } else { step };
+        let rowbase = row0 + l * w;
+        let slice = rowbase / w;
+        let off = slice_ptr[slice] as usize;
+        let len = slice_len[slice] as usize;
+        t.copy_from_slice(&rhs[rowbase..rowbase + w]);
+        for k in 0..len {
+            let base = off + k * w;
+            for j in 0..w {
+                t[j] -= vals[base + j] * unsafe { out.get(cols[base + j] as usize) };
+            }
+        }
+        for j in 0..w {
+            unsafe { out.set(rowbase + j, t[j] * dinv[rowbase + j]) };
+        }
+    }
+}
+
+/// AVX-512 kernel for `w = 8` — the paper's Fig. 4.6 inner loop.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn block_solve_avx512(
+    sell: &Sell,
+    dinv: &[f64],
+    rhs: &[f64],
+    out: &SyncSlice<f64>,
+    row0: usize,
+    bs: usize,
+    reverse: bool,
+) {
+    use std::arch::x86_64::*;
+    const W: usize = 8;
+    let slice_ptr = sell.slice_ptr();
+    let slice_len = sell.slice_len();
+    let cols = sell.cols();
+    let vals = sell.vals();
+    let base_ptr = out.as_ptr();
+    for step in 0..bs {
+        let l = if reverse { bs - 1 - step } else { step };
+        let rowbase = row0 + l * W;
+        let slice = rowbase / W;
+        let off = slice_ptr[slice] as usize;
+        let len = slice_len[slice] as usize;
+        // (Perf note: software-prefetching the next step's gather targets
+        // was tried and measured 3–6% *slower* — the slices are short and
+        // the hardware prefetcher already covers the streaming arrays; see
+        // EXPERIMENTS.md §Perf.)
+        // mtmp = load(r)
+        let mut t = _mm512_loadu_pd(rhs.as_ptr().add(rowbase));
+        for k in 0..len {
+            let b = off + k * W;
+            // pos = load_epi32(col); mb = gather(pos, y, 8)
+            let vidx = _mm256_loadu_si256(cols.as_ptr().add(b) as *const __m256i);
+            let g = _mm512_i32gather_pd::<8>(vidx, base_ptr);
+            // mtmp -= mval * mb   (fused)
+            let v = _mm512_loadu_pd(vals.as_ptr().add(b));
+            t = _mm512_fnmadd_pd(v, g, t);
+        }
+        // mtmp *= diaginv; store(z)
+        let d = _mm512_loadu_pd(dinv.as_ptr().add(rowbase));
+        let res = _mm512_mul_pd(t, d);
+        _mm512_storeu_pd(out.as_mut_ptr().add(rowbase), res);
+    }
+}
+
+/// AVX2 kernel for `w = 4` — the paper's Broadwell (AVX2) variant.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn block_solve_avx2(
+    sell: &Sell,
+    dinv: &[f64],
+    rhs: &[f64],
+    out: &SyncSlice<f64>,
+    row0: usize,
+    bs: usize,
+    reverse: bool,
+) {
+    use std::arch::x86_64::*;
+    const W: usize = 4;
+    let slice_ptr = sell.slice_ptr();
+    let slice_len = sell.slice_len();
+    let cols = sell.cols();
+    let vals = sell.vals();
+    let base_ptr = out.as_ptr();
+    for step in 0..bs {
+        let l = if reverse { bs - 1 - step } else { step };
+        let rowbase = row0 + l * W;
+        let slice = rowbase / W;
+        let off = slice_ptr[slice] as usize;
+        let len = slice_len[slice] as usize;
+        let mut t = _mm256_loadu_pd(rhs.as_ptr().add(rowbase));
+        for k in 0..len {
+            let b = off + k * W;
+            let vidx = _mm_loadu_si128(cols.as_ptr().add(b) as *const __m128i);
+            let g = _mm256_i32gather_pd::<8>(base_ptr, vidx);
+            let v = _mm256_loadu_pd(vals.as_ptr().add(b));
+            t = _mm256_fnmadd_pd(v, g, t);
+        }
+        let d = _mm256_loadu_pd(dinv.as_ptr().add(rowbase));
+        let res = _mm256_mul_pd(t, d);
+        _mm256_storeu_pd(out.as_mut_ptr().add(rowbase), res);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::ic0::ic0;
+    use crate::factor::split::{SellTriFactors, TriFactors};
+    use crate::ordering::hbmc::hbmc_order;
+    use crate::solver::trisolve_serial;
+    use crate::sparse::coo::Coo;
+    use crate::sparse::csr::Csr;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            c.push(i, i, 8.0);
+            for _ in 0..3 {
+                let j = rng.below(n);
+                if j != i {
+                    c.push_sym(i, j, -0.4);
+                }
+            }
+        }
+        c.to_csr()
+    }
+
+    fn check_case(n: usize, seed: u64, bs: usize, w: usize, path: KernelPath, nt: usize) {
+        let a0 = random_spd(n, seed);
+        let ord = hbmc_order(&a0, bs, w);
+        let a = a0.permute_sym(&ord.perm);
+        let f = ic0(&a, 0.0).unwrap();
+        let tri = TriFactors::from_ic(&f);
+        let sell_tri = SellTriFactors::from_tri(&tri, w);
+        let meta = HbmcMeta::from_ordering(&ord);
+        let na = a.n();
+        let mut rng = Rng::new(seed + 1);
+        let r: Vec<f64> = (0..na).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+
+        let mut y_ref = vec![0.0; na];
+        trisolve_serial::forward(&tri, &r, &mut y_ref);
+        let mut z_ref = vec![0.0; na];
+        trisolve_serial::backward(&tri, &y_ref, &mut z_ref);
+
+        let pool = Pool::new(nt);
+        let mut y = vec![0.0; na];
+        forward(&meta, &sell_tri, &r, &mut y, &pool, path);
+        assert!(
+            crate::util::max_abs_diff(&y, &y_ref) < 1e-12,
+            "fwd n={n} bs={bs} w={w} path={} nt={nt}",
+            path.name()
+        );
+        let mut z = vec![0.0; na];
+        backward(&meta, &sell_tri, &y, &mut z, &pool, path);
+        assert!(
+            crate::util::max_abs_diff(&z, &z_ref) < 1e-12,
+            "bwd n={n} bs={bs} w={w} path={} nt={nt}",
+            path.name()
+        );
+    }
+
+    #[test]
+    fn scalar_matches_serial_all_widths() {
+        for &(bs, w) in &[(2usize, 2usize), (4, 4), (8, 8), (4, 8), (8, 4), (16, 2)] {
+            check_case(150, 41, bs, w, KernelPath::Scalar, 1);
+        }
+    }
+
+    #[test]
+    fn scalar_matches_serial_multithreaded() {
+        check_case(220, 43, 8, 4, KernelPath::Scalar, 3);
+        check_case(220, 44, 4, 8, KernelPath::Scalar, 4);
+    }
+
+    #[test]
+    fn avx512_matches_serial_if_available() {
+        if select_path(8, true) == KernelPath::Avx512W8 {
+            check_case(200, 45, 8, 8, KernelPath::Avx512W8, 1);
+            check_case(200, 46, 16, 8, KernelPath::Avx512W8, 2);
+        } else {
+            eprintln!("avx512f unavailable: skipping");
+        }
+    }
+
+    #[test]
+    fn avx2_matches_serial_if_available() {
+        if select_path(4, true) == KernelPath::Avx2W4 {
+            check_case(200, 47, 8, 4, KernelPath::Avx2W4, 1);
+            check_case(200, 48, 32, 4, KernelPath::Avx2W4, 2);
+        } else {
+            eprintln!("avx2 unavailable: skipping");
+        }
+    }
+
+    #[test]
+    fn sync_count_is_colors_minus_one_per_sweep() {
+        let a0 = random_spd(120, 51);
+        let ord = hbmc_order(&a0, 4, 4);
+        let a = a0.permute_sym(&ord.perm);
+        let f = ic0(&a, 0.0).unwrap();
+        let tri = TriFactors::from_ic(&f);
+        let sell_tri = SellTriFactors::from_tri(&tri, 4);
+        let meta = HbmcMeta::from_ordering(&ord);
+        let pool = Pool::new(2);
+        pool.reset_sync_count();
+        let r = vec![1.0; a.n()];
+        let mut y = vec![0.0; a.n()];
+        forward(&meta, &sell_tri, &r, &mut y, &pool, KernelPath::Scalar);
+        assert_eq!(pool.sync_count() as usize, meta.num_colors - 1);
+        let mut z = vec![0.0; a.n()];
+        backward(&meta, &sell_tri, &y, &mut z, &pool, KernelPath::Scalar);
+        assert_eq!(pool.sync_count() as usize, 2 * (meta.num_colors - 1));
+    }
+
+    #[test]
+    fn path_selection_respects_flag() {
+        assert_eq!(select_path(8, false), KernelPath::Scalar);
+        assert_eq!(select_path(3, true), KernelPath::Scalar);
+    }
+}

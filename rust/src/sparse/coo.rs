@@ -1,0 +1,139 @@
+//! Coordinate-format assembly buffer. Generators build matrices here and
+//! convert to [`Csr`](crate::sparse::csr::Csr) once; duplicate entries are
+//! summed on conversion (finite-element style assembly).
+
+use crate::sparse::csr::Csr;
+
+/// Square COO matrix under assembly.
+#[derive(Debug, Clone)]
+pub struct Coo {
+    n: usize,
+    entries: Vec<(u32, u32, f64)>,
+}
+
+impl Coo {
+    pub fn new(n: usize) -> Self {
+        assert!(n < u32::MAX as usize, "COO limited to u32 indices");
+        Coo { n, entries: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize, cap: usize) -> Self {
+        let mut c = Self::new(n);
+        c.entries.reserve(cap);
+        c
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn nnz_entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Add `v` at `(i, j)`; duplicates accumulate.
+    #[inline]
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.n && j < self.n, "entry ({i},{j}) out of bounds n={}", self.n);
+        self.entries.push((i as u32, j as u32, v));
+    }
+
+    /// Add `v` at `(i, j)` and `(j, i)` (symmetric assembly; `i != j`).
+    #[inline]
+    pub fn push_sym(&mut self, i: usize, j: usize, v: f64) {
+        self.push(i, j, v);
+        if i != j {
+            self.push(j, i, v);
+        }
+    }
+
+    /// Convert to CSR, summing duplicates and dropping exact zeros created
+    /// by cancellation is NOT done (IC(0) pattern must match assembly).
+    pub fn to_csr(&self) -> Csr {
+        let n = self.n;
+        // Counting sort by row, then sort each row by column and merge dups.
+        let mut row_count = vec![0u32; n + 1];
+        for &(i, _, _) in &self.entries {
+            row_count[i as usize + 1] += 1;
+        }
+        for i in 0..n {
+            row_count[i + 1] += row_count[i];
+        }
+        let mut cols = vec![0u32; self.entries.len()];
+        let mut vals = vec![0f64; self.entries.len()];
+        let mut cursor = row_count.clone();
+        for &(i, j, v) in &self.entries {
+            let p = cursor[i as usize] as usize;
+            cols[p] = j;
+            vals[p] = v;
+            cursor[i as usize] += 1;
+        }
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        let mut out_cols: Vec<u32> = Vec::with_capacity(self.entries.len());
+        let mut out_vals: Vec<f64> = Vec::with_capacity(self.entries.len());
+        row_ptr.push(0u32);
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for i in 0..n {
+            let (s, e) = (row_count[i] as usize, row_count[i + 1] as usize);
+            scratch.clear();
+            scratch.extend(cols[s..e].iter().copied().zip(vals[s..e].iter().copied()));
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut k = 0;
+            while k < scratch.len() {
+                let c = scratch[k].0;
+                let mut v = 0.0;
+                while k < scratch.len() && scratch[k].0 == c {
+                    v += scratch[k].1;
+                    k += 1;
+                }
+                out_cols.push(c);
+                out_vals.push(v);
+            }
+            row_ptr.push(out_cols.len() as u32);
+        }
+        Csr::from_parts(n, row_ptr, out_cols, out_vals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assembly_sums_duplicates() {
+        let mut c = Coo::new(3);
+        c.push(0, 0, 1.0);
+        c.push(0, 0, 2.0);
+        c.push(2, 1, -1.0);
+        c.push(1, 2, 4.0);
+        let a = c.to_csr();
+        assert_eq!(a.n(), 3);
+        assert_eq!(a.nnz(), 3);
+        assert_eq!(a.get(0, 0), Some(3.0));
+        assert_eq!(a.get(2, 1), Some(-1.0));
+        assert_eq!(a.get(1, 2), Some(4.0));
+        assert_eq!(a.get(1, 1), None);
+    }
+
+    #[test]
+    fn push_sym_mirrors() {
+        let mut c = Coo::new(2);
+        c.push_sym(0, 1, 5.0);
+        c.push_sym(1, 1, 2.0);
+        let a = c.to_csr();
+        assert_eq!(a.get(0, 1), Some(5.0));
+        assert_eq!(a.get(1, 0), Some(5.0));
+        assert_eq!(a.get(1, 1), Some(2.0));
+    }
+
+    #[test]
+    fn rows_sorted() {
+        let mut c = Coo::new(4);
+        c.push(1, 3, 1.0);
+        c.push(1, 0, 1.0);
+        c.push(1, 2, 1.0);
+        let a = c.to_csr();
+        let (cols, _) = a.row(1);
+        assert_eq!(cols, &[0, 2, 3]);
+    }
+}

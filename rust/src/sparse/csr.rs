@@ -1,0 +1,345 @@
+//! Compressed sparse row storage — the canonical matrix format of the
+//! solver stack (the paper's "CRS"). Rows are column-sorted.
+
+use crate::ordering::perm::Perm;
+
+/// Square CSR matrix with `u32` indices and `f64` values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    n: usize,
+    row_ptr: Vec<u32>,
+    col: Vec<u32>,
+    val: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from raw parts. Debug-asserts structural sanity.
+    pub fn from_parts(n: usize, row_ptr: Vec<u32>, col: Vec<u32>, val: Vec<f64>) -> Csr {
+        assert_eq!(row_ptr.len(), n + 1);
+        assert_eq!(col.len(), val.len());
+        assert_eq!(*row_ptr.last().unwrap() as usize, col.len());
+        debug_assert!(col.iter().all(|&c| (c as usize) < n));
+        debug_assert!((0..n).all(|i| {
+            let r = row_ptr[i] as usize..row_ptr[i + 1] as usize;
+            col[r].windows(2).all(|w| w[0] < w[1])
+        }), "CSR rows must be strictly column-sorted");
+        Csr { n, row_ptr, col, val }
+    }
+
+    /// Identity matrix (used for dummy/padding rows in tests).
+    pub fn identity(n: usize) -> Csr {
+        Csr::from_parts(
+            n,
+            (0..=n as u32).collect(),
+            (0..n as u32).collect(),
+            vec![1.0; n],
+        )
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.col.len()
+    }
+
+    #[inline]
+    pub fn row_ptr(&self) -> &[u32] {
+        &self.row_ptr
+    }
+
+    #[inline]
+    pub fn cols(&self) -> &[u32] {
+        &self.col
+    }
+
+    #[inline]
+    pub fn vals(&self) -> &[f64] {
+        &self.val
+    }
+
+    #[inline]
+    pub fn vals_mut(&mut self) -> &mut [f64] {
+        &mut self.val
+    }
+
+    /// Columns and values of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let r = self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize;
+        (&self.col[r.clone()], &self.val[r])
+    }
+
+    /// Number of entries in row `i`.
+    #[inline]
+    pub fn row_len(&self, i: usize) -> usize {
+        (self.row_ptr[i + 1] - self.row_ptr[i]) as usize
+    }
+
+    /// Value at `(i, j)` if stored.
+    pub fn get(&self, i: usize, j: usize) -> Option<f64> {
+        let (cols, vals) = self.row(i);
+        cols.binary_search(&(j as u32)).ok().map(|k| vals[k])
+    }
+
+    /// Diagonal entries (0.0 where the diagonal is not stored).
+    pub fn diag(&self) -> Vec<f64> {
+        (0..self.n).map(|i| self.get(i, i).unwrap_or(0.0)).collect()
+    }
+
+    /// `y = A x` (serial reference; the performant paths live in
+    /// [`crate::solver::spmv`]).
+    pub fn mul_vec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        for i in 0..self.n {
+            let (cols, vals) = self.row(i);
+            let mut s = 0.0;
+            for (c, v) in cols.iter().zip(vals) {
+                s += v * x[*c as usize];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// Structural symmetry check (pattern and values).
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        for i in 0..self.n {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                match self.get(*c as usize, i) {
+                    Some(w) => {
+                        if (v - w).abs() > tol * v.abs().max(w.abs()).max(1.0) {
+                            return false;
+                        }
+                    }
+                    None => return false,
+                }
+            }
+        }
+        true
+    }
+
+    /// Strict lower-triangular part (cols < row), same row order.
+    pub fn lower_strict(&self) -> Csr {
+        self.filter(|i, j| j < i)
+    }
+
+    /// Lower-triangular including diagonal.
+    pub fn lower(&self) -> Csr {
+        self.filter(|i, j| j <= i)
+    }
+
+    /// Upper-triangular including diagonal.
+    pub fn upper(&self) -> Csr {
+        self.filter(|i, j| j >= i)
+    }
+
+    fn filter(&self, keep: impl Fn(usize, usize) -> bool) -> Csr {
+        let mut row_ptr = Vec::with_capacity(self.n + 1);
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        row_ptr.push(0u32);
+        for i in 0..self.n {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                if keep(i, *c as usize) {
+                    col.push(*c);
+                    val.push(*v);
+                }
+            }
+            row_ptr.push(col.len() as u32);
+        }
+        Csr::from_parts(self.n, row_ptr, col, val)
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Csr {
+        let n = self.n;
+        let mut cnt = vec![0u32; n + 1];
+        for &c in &self.col {
+            cnt[c as usize + 1] += 1;
+        }
+        for i in 0..n {
+            cnt[i + 1] += cnt[i];
+        }
+        let mut col = vec![0u32; self.nnz()];
+        let mut val = vec![0f64; self.nnz()];
+        let mut cursor = cnt.clone();
+        for i in 0..n {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                let p = cursor[*c as usize] as usize;
+                col[p] = i as u32;
+                val[p] = *v;
+                cursor[*c as usize] += 1;
+            }
+        }
+        Csr::from_parts(n, cnt, col, val)
+    }
+
+    /// Symmetric permutation `A' = P A Pᵀ`: entry `(i, j)` moves to
+    /// `(π(i), π(j))`. `perm` maps old → new index over an equal or larger
+    /// index space (`perm.n_new() >= self.n()`); extra rows become
+    /// identity rows (the HBMC "dummy unknowns" of §4.3).
+    pub fn permute_sym(&self, perm: &Perm) -> Csr {
+        assert!(perm.n_old() == self.n, "perm domain must match matrix");
+        let n_new = perm.n_new();
+        let mut coo = crate::sparse::coo::Coo::with_capacity(n_new, self.nnz() + n_new);
+        for i in 0..self.n {
+            let (cols, vals) = self.row(i);
+            let pi = perm.new_of_old(i);
+            for (c, v) in cols.iter().zip(vals) {
+                coo.push(pi, perm.new_of_old(*c as usize), *v);
+            }
+        }
+        // Dummy rows: identity diagonal, decoupled from the real system.
+        let mut is_real = vec![false; n_new];
+        for i in 0..self.n {
+            is_real[perm.new_of_old(i)] = true;
+        }
+        for (i, real) in is_real.iter().enumerate() {
+            if !real {
+                coo.push(i, i, 1.0);
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Dense representation (tests only; O(n²) memory).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.n]; self.n];
+        for i in 0..self.n {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                d[i][*c as usize] = *v;
+            }
+        }
+        d
+    }
+
+    /// Maximum row length (SELL padding analysis).
+    pub fn max_row_len(&self) -> usize {
+        (0..self.n).map(|i| self.row_len(i)).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    fn sample() -> Csr {
+        // [ 4 -1  0 ]
+        // [-1  4 -1 ]
+        // [ 0 -1  4 ]
+        let mut c = Coo::new(3);
+        for i in 0..3 {
+            c.push(i, i, 4.0);
+        }
+        c.push_sym(0, 1, -1.0);
+        c.push_sym(1, 2, -1.0);
+        c.to_csr()
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let a = sample();
+        assert_eq!(a.n(), 3);
+        assert_eq!(a.nnz(), 7);
+        assert_eq!(a.row_len(1), 3);
+        assert_eq!(a.diag(), vec![4.0, 4.0, 4.0]);
+        assert_eq!(a.max_row_len(), 3);
+    }
+
+    #[test]
+    fn mul_vec_matches_dense() {
+        let a = sample();
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![0.0; 3];
+        a.mul_vec(&x, &mut y);
+        assert_eq!(y, vec![4.0 - 2.0, -1.0 + 8.0 - 3.0, -2.0 + 12.0]);
+    }
+
+    #[test]
+    fn symmetry() {
+        let a = sample();
+        assert!(a.is_symmetric(1e-14));
+        let mut c = Coo::new(2);
+        c.push(0, 1, 1.0);
+        c.push(0, 0, 1.0);
+        c.push(1, 1, 1.0);
+        assert!(!c.to_csr().is_symmetric(1e-14));
+    }
+
+    #[test]
+    fn triangular_parts() {
+        let a = sample();
+        let l = a.lower();
+        assert_eq!(l.nnz(), 5);
+        assert_eq!(l.get(1, 0), Some(-1.0));
+        assert_eq!(l.get(0, 1), None);
+        let ls = a.lower_strict();
+        assert_eq!(ls.nnz(), 2);
+        let u = a.upper();
+        assert_eq!(u.nnz(), 5);
+        assert_eq!(u.get(0, 1), Some(-1.0));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut c = Coo::new(3);
+        c.push(0, 2, 5.0);
+        c.push(1, 0, 2.0);
+        c.push(2, 2, 1.0);
+        let a = c.to_csr();
+        let t = a.transpose();
+        assert_eq!(t.get(2, 0), Some(5.0));
+        assert_eq!(t.get(0, 1), Some(2.0));
+        assert_eq!(t.transpose(), a);
+    }
+
+    #[test]
+    fn permute_identity_is_noop() {
+        let a = sample();
+        let p = Perm::identity(3);
+        assert_eq!(a.permute_sym(&p), a);
+    }
+
+    #[test]
+    fn permute_reverse() {
+        let a = sample();
+        let p = Perm::from_new_of_old(vec![2, 1, 0], 3).unwrap();
+        let b = a.permute_sym(&p);
+        assert_eq!(b.get(2, 1), Some(-1.0));
+        assert_eq!(b.get(0, 2), None);
+        // Symmetric permutation of a symmetric matrix stays symmetric.
+        assert!(b.is_symmetric(1e-14));
+    }
+
+    #[test]
+    fn permute_with_padding_adds_identity_rows() {
+        let a = sample();
+        // Map 3 unknowns into a 5-slot space.
+        let p = Perm::padded(vec![0, 2, 4], 5).unwrap();
+        let b = a.permute_sym(&p);
+        assert_eq!(b.n(), 5);
+        assert_eq!(b.get(1, 1), Some(1.0));
+        assert_eq!(b.get(3, 3), Some(1.0));
+        assert_eq!(b.get(0, 0), Some(4.0));
+        assert_eq!(b.get(0, 2), Some(-1.0)); // old (0,1)
+    }
+
+    #[test]
+    fn identity_matrix() {
+        let i = Csr::identity(4);
+        assert_eq!(i.nnz(), 4);
+        let x = vec![3.0, 1.0, 4.0, 1.5];
+        let mut y = vec![0.0; 4];
+        i.mul_vec(&x, &mut y);
+        assert_eq!(y, x);
+    }
+}

@@ -1,0 +1,169 @@
+//! MatrixMarket (`.mtx`) reader/writer for square real matrices.
+//!
+//! Supports `matrix coordinate real {general|symmetric}` and
+//! `matrix coordinate pattern {general|symmetric}` (pattern entries get
+//! value 1.0). This lets users run the solver on the paper's actual
+//! SuiteSparse datasets when they have them; the bundled generators in
+//! [`crate::gen`] are the offline stand-ins.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+
+/// Read a square MatrixMarket file into CSR (symmetric files are expanded).
+pub fn read(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    read_from(BufReader::new(f))
+}
+
+/// Parse from any reader (unit-testable without touching the filesystem).
+pub fn read_from(reader: impl BufRead) -> Result<Csr> {
+    let mut lines = reader.lines();
+    let header = lines
+        .next()
+        .context("matrix market: empty file")?
+        .context("matrix market: read error")?;
+    let h: Vec<String> = header.split_whitespace().map(|t| t.to_lowercase()).collect();
+    if h.len() < 5 || h[0] != "%%matrixmarket" || h[1] != "matrix" || h[2] != "coordinate" {
+        bail!("matrix market: unsupported header {header:?}");
+    }
+    let pattern = match h[3].as_str() {
+        "real" | "integer" => false,
+        "pattern" => true,
+        other => bail!("matrix market: unsupported field {other:?}"),
+    };
+    let symmetric = match h[4].as_str() {
+        "general" => false,
+        "symmetric" => true,
+        other => bail!("matrix market: unsupported symmetry {other:?}"),
+    };
+
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line.context("matrix market: read error")?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(t.to_string());
+        break;
+    }
+    let size_line = size_line.context("matrix market: missing size line")?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse().context("matrix market: bad size line"))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        bail!("matrix market: bad size line {size_line:?}");
+    }
+    let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
+    if nrows != ncols {
+        bail!("matrix market: only square matrices supported ({nrows}x{ncols})");
+    }
+
+    let mut coo = Coo::with_capacity(nrows, if symmetric { 2 * nnz } else { nnz });
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line.context("matrix market: read error")?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().context("mm: missing row")?.parse().context("mm: bad row")?;
+        let j: usize = it.next().context("mm: missing col")?.parse().context("mm: bad col")?;
+        let v: f64 = if pattern {
+            1.0
+        } else {
+            it.next().context("mm: missing value")?.parse().context("mm: bad value")?
+        };
+        if i == 0 || j == 0 || i > nrows || j > ncols {
+            bail!("matrix market: 1-based index ({i},{j}) out of range");
+        }
+        if symmetric {
+            coo.push_sym(i - 1, j - 1, v);
+        } else {
+            coo.push(i - 1, j - 1, v);
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        bail!("matrix market: expected {nnz} entries, found {seen}");
+    }
+    Ok(coo.to_csr())
+}
+
+/// Write CSR as `coordinate real general`.
+pub fn write(a: &Csr, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "{} {} {}", a.n(), a.n(), a.nnz())?;
+    for i in 0..a.n() {
+        let (cols, vals) = a.row(i);
+        for (c, v) in cols.iter().zip(vals) {
+            writeln!(f, "{} {} {:.17e}", i + 1, *c as usize + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_general() {
+        let text = "%%MatrixMarket matrix coordinate real general\n% comment\n3 3 4\n1 1 2.0\n2 2 3.0\n3 3 4.0\n1 3 -1.0\n";
+        let a = read_from(Cursor::new(text)).unwrap();
+        assert_eq!(a.n(), 3);
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.get(0, 2), Some(-1.0));
+        assert_eq!(a.get(2, 0), None);
+    }
+
+    #[test]
+    fn parse_symmetric_expands() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n2 2 2\n1 1 2.0\n2 1 -1.0\n";
+        let a = read_from(Cursor::new(text)).unwrap();
+        assert_eq!(a.nnz(), 3);
+        assert_eq!(a.get(0, 1), Some(-1.0));
+        assert_eq!(a.get(1, 0), Some(-1.0));
+    }
+
+    #[test]
+    fn parse_pattern() {
+        let text = "%%MatrixMarket matrix coordinate pattern symmetric\n2 2 2\n1 1\n2 1\n";
+        let a = read_from(Cursor::new(text)).unwrap();
+        assert_eq!(a.get(1, 0), Some(1.0));
+    }
+
+    #[test]
+    fn reject_rectangular_and_bad_counts() {
+        assert!(read_from(Cursor::new("%%MatrixMarket matrix coordinate real general\n2 3 1\n1 1 1.0\n")).is_err());
+        assert!(read_from(Cursor::new("%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n")).is_err());
+        assert!(read_from(Cursor::new("%%MatrixMarket matrix array real general\n2 2 1\n")).is_err());
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut coo = Coo::new(3);
+        coo.push(0, 0, 1.5);
+        coo.push_sym(0, 2, -2.25);
+        coo.push(1, 1, 3.0);
+        coo.push(2, 2, 9.0);
+        let a = coo.to_csr();
+        let dir = std::env::temp_dir().join("hbmc_mm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.mtx");
+        write(&a, &path).unwrap();
+        let b = read(&path).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,13 @@
+//! Sparse-matrix storage substrates.
+//!
+//! * [`coo`] — coordinate-format builder (assembly),
+//! * [`csr`] — compressed sparse row, the solver's canonical format (the
+//!   paper's "CRS"),
+//! * [`sell`] — sliced-ELL / SELL-C-σ (Kreutzer et al. 2014), the
+//!   SIMD-friendly format the paper uses for HBMC (`slice = w`),
+//! * [`matrix_market`] — MatrixMarket IO for external datasets.
+
+pub mod coo;
+pub mod csr;
+pub mod matrix_market;
+pub mod sell;

@@ -1,0 +1,279 @@
+//! Sliced-ELL storage (SELL / SELL-C-σ, Kreutzer et al. 2014).
+//!
+//! Rows are grouped into *slices* of `c` consecutive rows; each slice is
+//! stored column-major (`val[off + k*c + lane]`) and padded to the longest
+//! row in the slice, which is what makes the inner loop a `c`-wide packed
+//! operation — the layout the paper pairs with HBMC (`c = w`).
+//!
+//! SELL-C-σ additionally sorts rows by length inside windows of `σ` rows to
+//! reduce padding; the sort permutation is internal to the format (values
+//! are scattered back on SpMV), so it is **only** usable for SpMV, not for
+//! triangular solves where row order is semantic.
+
+use crate::sparse::csr::Csr;
+
+/// SELL-C(-σ) matrix.
+#[derive(Debug, Clone)]
+pub struct Sell {
+    n: usize,
+    /// Slice height (the paper's `w`).
+    c: usize,
+    /// Per-slice start offset into `val`/`col` (`len = nslices + 1`).
+    slice_ptr: Vec<u32>,
+    /// Per-slice width (longest row in the slice).
+    slice_len: Vec<u32>,
+    /// Column indices, slice-local column-major, padded entries point at
+    /// their own row with value 0 (safe gather).
+    col: Vec<u32>,
+    val: Vec<f64>,
+    /// `row_of_lane[slice*c + lane]` = source CSR row (u32::MAX for padding
+    /// rows past `n`). Identity when built without σ-sorting.
+    row_of_lane: Vec<u32>,
+    /// True if rows were σ-sorted (SpMV-only layout).
+    sorted: bool,
+}
+
+impl Sell {
+    /// Build SELL-C from CSR preserving row order (usable for trisolve).
+    pub fn from_csr(a: &Csr, c: usize) -> Sell {
+        Self::build(a, c, None)
+    }
+
+    /// Build SELL-C-σ: sort rows by descending length within windows of
+    /// `sigma` rows (`sigma` a multiple of `c`). SpMV-only.
+    pub fn from_csr_sigma(a: &Csr, c: usize, sigma: usize) -> Sell {
+        assert!(sigma >= c && sigma % c == 0, "sigma must be a multiple of c");
+        Self::build(a, c, Some(sigma))
+    }
+
+    fn build(a: &Csr, c: usize, sigma: Option<usize>) -> Sell {
+        assert!(c > 0);
+        let n = a.n();
+        let nslices = n.div_ceil(c);
+        let mut row_of_lane: Vec<u32> = (0..(nslices * c) as u32).collect();
+        if let Some(sigma) = sigma {
+            for wstart in (0..n).step_by(sigma) {
+                let wend = (wstart + sigma).min(nslices * c);
+                row_of_lane[wstart..wend].sort_by_key(|&r| {
+                    if (r as usize) < n {
+                        usize::MAX - a.row_len(r as usize)
+                    } else {
+                        usize::MAX
+                    }
+                });
+            }
+        }
+        let mut slice_ptr = Vec::with_capacity(nslices + 1);
+        let mut slice_len = Vec::with_capacity(nslices);
+        slice_ptr.push(0u32);
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        for s in 0..nslices {
+            let lanes = &row_of_lane[s * c..(s + 1) * c];
+            let width = lanes
+                .iter()
+                .map(|&r| if (r as usize) < n { a.row_len(r as usize) } else { 0 })
+                .max()
+                .unwrap_or(0);
+            for k in 0..width {
+                for &r in lanes {
+                    if (r as usize) < n && k < a.row_len(r as usize) {
+                        let (cols, vals) = a.row(r as usize);
+                        col.push(cols[k]);
+                        val.push(vals[k]);
+                    } else {
+                        // Padding: self-reference (or row 0) with value 0.
+                        let safe = if (r as usize) < n { r } else { 0 };
+                        col.push(safe);
+                        val.push(0.0);
+                    }
+                }
+            }
+            slice_len.push(width as u32);
+            slice_ptr.push(col.len() as u32);
+        }
+        let row_of_lane = row_of_lane
+            .into_iter()
+            .map(|r| if (r as usize) < n { r } else { u32::MAX })
+            .collect();
+        Sell {
+            n,
+            c,
+            slice_ptr,
+            slice_len,
+            col,
+            val,
+            row_of_lane,
+            sorted: sigma.is_some(),
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn c(&self) -> usize {
+        self.c
+    }
+
+    #[inline]
+    pub fn nslices(&self) -> usize {
+        self.slice_len.len()
+    }
+
+    #[inline]
+    pub fn slice_ptr(&self) -> &[u32] {
+        &self.slice_ptr
+    }
+
+    #[inline]
+    pub fn slice_len(&self) -> &[u32] {
+        &self.slice_len
+    }
+
+    #[inline]
+    pub fn cols(&self) -> &[u32] {
+        &self.col
+    }
+
+    #[inline]
+    pub fn vals(&self) -> &[f64] {
+        &self.val
+    }
+
+    #[inline]
+    pub fn row_of_lane(&self) -> &[u32] {
+        &self.row_of_lane
+    }
+
+    #[inline]
+    pub fn is_sorted(&self) -> bool {
+        self.sorted
+    }
+
+    /// Stored (incl. padding) element count — the paper's "number of
+    /// processed elements" metric for the SELL-overhead discussion (§5.2.2).
+    pub fn stored_elements(&self) -> usize {
+        self.val.len()
+    }
+
+    /// Padding overhead vs CSR nnz: `stored / nnz`.
+    pub fn overhead_vs(&self, nnz: usize) -> f64 {
+        self.stored_elements() as f64 / nnz as f64
+    }
+
+    /// Serial reference SpMV `y = A x` (performant path in
+    /// [`crate::solver::spmv`]).
+    pub fn mul_vec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        let c = self.c;
+        let mut acc = vec![0.0f64; c];
+        for s in 0..self.nslices() {
+            acc[..c].fill(0.0);
+            let off = self.slice_ptr[s] as usize;
+            let width = self.slice_len[s] as usize;
+            for k in 0..width {
+                let base = off + k * c;
+                for lane in 0..c {
+                    acc[lane] += self.val[base + lane] * x[self.col[base + lane] as usize];
+                }
+            }
+            for lane in 0..c {
+                let r = self.row_of_lane[s * c + lane];
+                if r != u32::MAX {
+                    y[r as usize] = acc[lane];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::util::rng::Rng;
+
+    fn random_csr(n: usize, avg: usize, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut coo = Coo::new(n);
+        for i in 0..n {
+            coo.push(i, i, 4.0 + rng.f64());
+            let deg = rng.below(avg * 2);
+            for _ in 0..deg {
+                let j = rng.below(n);
+                if j != i {
+                    coo.push(i, j, rng.range_f64(-1.0, 1.0));
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn spmv_matches_csr() {
+        for &c in &[2usize, 4, 8] {
+            let a = random_csr(50, 4, 42);
+            let sell = Sell::from_csr(&a, c);
+            let mut rng = Rng::new(7);
+            let x: Vec<f64> = (0..50).map(|_| rng.f64()).collect();
+            let mut y1 = vec![0.0; 50];
+            let mut y2 = vec![0.0; 50];
+            a.mul_vec(&x, &mut y1);
+            sell.mul_vec(&x, &mut y2);
+            assert!(crate::util::max_abs_diff(&y1, &y2) < 1e-13, "c={c}");
+        }
+    }
+
+    #[test]
+    fn sigma_sorting_reduces_padding() {
+        let a = random_csr(256, 6, 3);
+        let plain = Sell::from_csr(&a, 8);
+        let sorted = Sell::from_csr_sigma(&a, 8, 64);
+        assert!(sorted.stored_elements() <= plain.stored_elements());
+        assert!(sorted.is_sorted() && !plain.is_sorted());
+        // Numerics identical.
+        let mut rng = Rng::new(9);
+        let x: Vec<f64> = (0..256).map(|_| rng.f64()).collect();
+        let mut y1 = vec![0.0; 256];
+        let mut y2 = vec![0.0; 256];
+        plain.mul_vec(&x, &mut y1);
+        sorted.mul_vec(&x, &mut y2);
+        assert!(crate::util::max_abs_diff(&y1, &y2) < 1e-13);
+    }
+
+    #[test]
+    fn ragged_tail_slice() {
+        // n not a multiple of c.
+        let a = random_csr(13, 3, 5);
+        let sell = Sell::from_csr(&a, 4);
+        assert_eq!(sell.nslices(), 4);
+        let x = vec![1.0; 13];
+        let mut y1 = vec![0.0; 13];
+        let mut y2 = vec![0.0; 13];
+        a.mul_vec(&x, &mut y1);
+        sell.mul_vec(&x, &mut y2);
+        assert!(crate::util::max_abs_diff(&y1, &y2) < 1e-13);
+    }
+
+    #[test]
+    fn overhead_accounting() {
+        let a = random_csr(64, 5, 11);
+        let sell = Sell::from_csr(&a, 8);
+        assert!(sell.stored_elements() >= a.nnz());
+        assert!(sell.overhead_vs(a.nnz()) >= 1.0);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let a = Csr::from_parts(4, vec![0, 1, 1, 1, 2], vec![0, 3], vec![2.0, 5.0]);
+        let sell = Sell::from_csr(&a, 4);
+        let x = vec![1.0, 1.0, 1.0, 1.0];
+        let mut y = vec![9.0; 4];
+        sell.mul_vec(&x, &mut y);
+        assert_eq!(y, vec![2.0, 0.0, 0.0, 5.0]);
+    }
+}

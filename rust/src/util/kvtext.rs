@@ -1,0 +1,188 @@
+//! Minimal line-oriented key/value interchange format shared with the
+//! python build path (`python/compile/aot.py` writes `artifacts/golden.txt`
+//! in this format). No `serde` is available offline, and we deliberately
+//! avoid a JSON parser: the format is
+//!
+//! ```text
+//! # comment
+//! key = scalar
+//! key = v0 v1 v2 ...        (whitespace-separated vector)
+//! ```
+//!
+//! Keys are unique; values are parsed on demand as `i64`, `f64`, `String`
+//! or vectors thereof.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed key/value document.
+#[derive(Debug, Default, Clone)]
+pub struct KvDoc {
+    map: HashMap<String, String>,
+    /// Insertion order, for deterministic serialization.
+    order: Vec<String>,
+}
+
+impl KvDoc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn parse(text: &str) -> Result<KvDoc> {
+        let mut doc = KvDoc::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("kvtext: line {} has no '=': {line:?}", lineno + 1);
+            };
+            doc.set(k.trim(), v.trim());
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &Path) -> Result<KvDoc> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        if !self.map.contains_key(key) {
+            self.order.push(key.to_string());
+        }
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn set_usize_vec(&mut self, key: &str, xs: &[usize]) {
+        let s: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+        self.set(key, &s.join(" "));
+    }
+
+    pub fn set_f64_vec(&mut self, key: &str, xs: &[f64]) {
+        let s: Vec<String> = xs.iter().map(|x| format!("{x:.17e}")).collect();
+        self.set(key, &s.join(" "));
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn raw(&self, key: &str) -> Result<&str> {
+        self.map
+            .get(key)
+            .map(|s| s.as_str())
+            .with_context(|| format!("kvtext: missing key {key:?}"))
+    }
+
+    pub fn str(&self, key: &str) -> Result<String> {
+        Ok(self.raw(key)?.to_string())
+    }
+
+    pub fn i64(&self, key: &str) -> Result<i64> {
+        self.raw(key)?
+            .parse()
+            .with_context(|| format!("kvtext: key {key:?} is not an i64"))
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize> {
+        Ok(self.i64(key)? as usize)
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        self.raw(key)?
+            .parse()
+            .with_context(|| format!("kvtext: key {key:?} is not an f64"))
+    }
+
+    pub fn usize_vec(&self, key: &str) -> Result<Vec<usize>> {
+        self.raw(key)?
+            .split_whitespace()
+            .map(|t| t.parse::<usize>().with_context(|| format!("kvtext: {key:?} element {t:?}")))
+            .collect()
+    }
+
+    pub fn u32_vec(&self, key: &str) -> Result<Vec<u32>> {
+        self.raw(key)?
+            .split_whitespace()
+            .map(|t| t.parse::<u32>().with_context(|| format!("kvtext: {key:?} element {t:?}")))
+            .collect()
+    }
+
+    pub fn f64_vec(&self, key: &str) -> Result<Vec<f64>> {
+        self.raw(key)?
+            .split_whitespace()
+            .map(|t| t.parse::<f64>().with_context(|| format!("kvtext: {key:?} element {t:?}")))
+            .collect()
+    }
+
+    /// Serialize in insertion order.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for k in &self.order {
+            out.push_str(k);
+            out.push_str(" = ");
+            out.push_str(&self.map[k]);
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_text())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// Escape-free JSON writer for small reports (metrics dumps). Values are
+/// written as-is; callers must pass well-formed fragments for nested values.
+pub fn json_object(pairs: &[(&str, String)]) -> String {
+    let body: Vec<String> = pairs.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+    format!("{{{}}}", body.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut d = KvDoc::new();
+        d.set("name", "g3_circuit");
+        d.set_usize_vec("perm", &[2, 0, 1]);
+        d.set_f64_vec("vals", &[1.5, -2.25]);
+        let d2 = KvDoc::parse(&d.to_text()).unwrap();
+        assert_eq!(d2.str("name").unwrap(), "g3_circuit");
+        assert_eq!(d2.usize_vec("perm").unwrap(), vec![2, 0, 1]);
+        assert_eq!(d2.f64_vec("vals").unwrap(), vec![1.5, -2.25]);
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let d = KvDoc::parse("# hi\n\nx = 3\n").unwrap();
+        assert_eq!(d.usize("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let d = KvDoc::parse("x = 1").unwrap();
+        assert!(d.f64("y").is_err());
+        assert!(d.contains("x"));
+        assert!(!d.contains("y"));
+    }
+
+    #[test]
+    fn bad_line_errors() {
+        assert!(KvDoc::parse("no equals sign").is_err());
+    }
+
+    #[test]
+    fn json_writer() {
+        let s = json_object(&[("a", "1".into()), ("b", "\"x\"".into())]);
+        assert_eq!(s, "{\"a\": 1, \"b\": \"x\"}");
+    }
+}

@@ -1,0 +1,62 @@
+//! Small self-contained utilities (the offline crate set has no `rand`,
+//! `serde` or `criterion`, so we carry our own RNG, timers, stats and a
+//! minimal key/value text format).
+
+pub mod kvtext;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+/// Round `x` up to the next multiple of `m` (`m > 0`).
+#[inline]
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Relative L2 difference `||a - b|| / max(||b||, eps)`.
+pub fn rel_l2_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        num += (x - y) * (x - y);
+        den += y * y;
+    }
+    (num.sqrt()) / den.sqrt().max(1e-300)
+}
+
+/// Max-norm difference.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 4), 0);
+        assert_eq!(round_up(1, 4), 4);
+        assert_eq!(round_up(4, 4), 4);
+        assert_eq!(round_up(5, 4), 8);
+        assert_eq!(round_up(31, 8), 32);
+    }
+
+    #[test]
+    fn rel_diff_zero_for_equal() {
+        let a = vec![1.0, -2.0, 3.0];
+        assert_eq!(rel_l2_diff(&a, &a), 0.0);
+        assert_eq!(max_abs_diff(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn rel_diff_scales() {
+        let a = vec![1.0, 0.0];
+        let b = vec![0.0, 0.0];
+        assert!(rel_l2_diff(&a, &b) > 1e200); // guarded by eps floor
+        assert_eq!(max_abs_diff(&a, &b), 1.0);
+    }
+}

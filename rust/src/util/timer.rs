@@ -1,0 +1,147 @@
+//! Wall-clock timers and a per-kernel time breakdown used by the solver
+//! metrics (the offline environment has no `criterion`; benches use these).
+
+use std::time::{Duration, Instant};
+
+/// Simple scoped stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Named accumulation buckets for the solver's kernel breakdown
+/// (trisolve-forward, trisolve-backward, spmv, blas1, setup ...).
+#[derive(Debug, Default, Clone)]
+pub struct KernelTimes {
+    entries: Vec<(&'static str, Duration)>,
+}
+
+impl KernelTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `d` to the bucket `name`, creating it on first use.
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        for e in &mut self.entries {
+            if e.0 == name {
+                e.1 += d;
+                return;
+            }
+        }
+        self.entries.push((name, d));
+    }
+
+    /// Time a closure into bucket `name`.
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(name, t.elapsed());
+        out
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.entries
+            .iter()
+            .find(|e| e.0 == name)
+            .map(|e| e.1)
+            .unwrap_or_default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.entries.iter().map(|e| e.1).sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, Duration)> + '_ {
+        self.entries.iter().copied()
+    }
+
+    /// Merge another breakdown into this one.
+    pub fn merge(&mut self, other: &KernelTimes) {
+        for (n, d) in other.iter() {
+            self.add(n, d);
+        }
+    }
+}
+
+/// Run `f` repeatedly until at least `min_time` elapsed and `min_iters`
+/// iterations were done, returning (best, mean) seconds per call. This is
+/// the micro-bench primitive used by `rust/benches/`.
+pub fn bench_secs(min_iters: usize, min_time: Duration, mut f: impl FnMut()) -> (f64, f64) {
+    // Warmup.
+    f();
+    let mut best = f64::INFINITY;
+    let mut total = 0.0;
+    let mut n = 0usize;
+    let start = Instant::now();
+    while n < min_iters || start.elapsed() < min_time {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        best = best.min(dt);
+        total += dt;
+        n += 1;
+        if n > 1_000_000 {
+            break;
+        }
+    }
+    (best, total / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_times_accumulate() {
+        let mut kt = KernelTimes::new();
+        kt.add("spmv", Duration::from_millis(5));
+        kt.add("spmv", Duration::from_millis(7));
+        kt.add("dot", Duration::from_millis(1));
+        assert_eq!(kt.get("spmv"), Duration::from_millis(12));
+        assert_eq!(kt.total(), Duration::from_millis(13));
+        assert_eq!(kt.get("missing"), Duration::ZERO);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut kt = KernelTimes::new();
+        let v = kt.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(kt.get("work") > Duration::ZERO);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = KernelTimes::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = KernelTimes::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.get("x"), Duration::from_millis(3));
+        assert_eq!(a.get("y"), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn bench_runs() {
+        let (best, mean) = bench_secs(3, Duration::from_millis(1), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(best > 0.0 && mean >= best);
+    }
+}

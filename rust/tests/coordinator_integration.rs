@@ -1,0 +1,109 @@
+//! Coordinator-level integration: pool stress, experiment harness
+//! invariants (the automated versions of the paper's tables at tiny
+//! scale), and report plumbing.
+
+use hbmc::config::{NodePreset, OrderingKind, Scale, SolverConfig, SpmvKind};
+use hbmc::coordinator::driver::solve_opts;
+use hbmc::coordinator::experiments;
+use hbmc::coordinator::pool::{Pool, SyncSlice};
+use hbmc::gen::suite;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+#[test]
+fn pool_stress_many_jobs_many_barriers() {
+    let pool = Pool::new(4);
+    let counter = AtomicUsize::new(0);
+    for _ in 0..200 {
+        pool.run(&|_, _| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            pool.color_barrier();
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    assert_eq!(counter.load(Ordering::Relaxed), 200 * 4 * 2);
+    assert_eq!(pool.sync_count(), 200);
+}
+
+#[test]
+fn pool_pipeline_ordering_with_barriers() {
+    // Simulated 3-color substitution: each color reads the previous
+    // color's writes; repeated many times to shake out races.
+    let pool = Pool::new(3);
+    let n = 3 * 64;
+    for round in 0..50 {
+        let mut data = vec![0u64; n];
+        let ds = SyncSlice::new(&mut data);
+        pool.run(&|tid, nt| {
+            for color in 0..3usize {
+                let lo = color * 64;
+                let range = Pool::chunk(64, tid, nt);
+                for i in lo + range.start..lo + range.end {
+                    let prev = if color == 0 {
+                        1
+                    } else {
+                        unsafe { ds.get(i - 64) }
+                    };
+                    unsafe { ds.set(i, prev + 1) };
+                }
+                if color < 2 {
+                    pool.color_barrier();
+                }
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v as usize, i / 64 + 2, "round {round} index {i}");
+        }
+    }
+}
+
+#[test]
+fn table_5_2_harness_reproduces_equivalence() {
+    let (table, raw) = experiments::table_5_2(Scale::Tiny, 2).unwrap();
+    let rendered = table.render();
+    assert!(rendered.contains("thermal2") && rendered.contains("ieej"));
+    for iters in &raw {
+        assert!(iters[1].abs_diff(iters[2]) <= 2 + iters[1] / 20, "BMC != HBMC");
+    }
+}
+
+#[test]
+fn fig_5_1_harness_emits_overlapping_curves() {
+    let curves = experiments::fig_5_1(&["ieej"], Scale::Tiny, 1).unwrap();
+    let (name, bmc, hbmc) = &curves[0];
+    assert_eq!(name, "ieej");
+    assert!(!bmc.is_empty());
+    assert_eq!(bmc.len(), hbmc.len());
+    // Monotone-ish decrease overall: final < initial.
+    assert!(bmc.last().unwrap() < bmc.first().unwrap());
+}
+
+#[test]
+fn sell_overhead_statistic_shape() {
+    let t = experiments::sell_overhead_stat(Scale::Tiny).unwrap();
+    assert_eq!(t.rows.len(), 5);
+    let rendered = t.render();
+    assert!(rendered.contains("audikw_1"));
+}
+
+#[test]
+fn solve_report_kernel_breakdown_sums_to_solve_time() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let cfg = SolverConfig {
+        ordering: OrderingKind::Hbmc,
+        bs: 8,
+        w: 4,
+        spmv: SpmvKind::Sell,
+        rtol: 1e-7,
+        ..Default::default()
+    };
+    let rep = solve_opts(&d.matrix, &d.b, &cfg, false).unwrap();
+    let parts: f64 = rep.kernel_seconds.iter().map(|(_, s)| s).sum();
+    assert!(parts <= rep.solve_seconds * 1.05, "{parts} vs {}", rep.solve_seconds);
+    assert!(parts >= rep.solve_seconds * 0.5, "breakdown lost time: {parts} vs {}", rep.solve_seconds);
+}
+
+#[test]
+fn node_presets_differ_in_w() {
+    let ws: Vec<usize> = NodePreset::all().iter().map(|n| n.w()).collect();
+    assert_eq!(ws, vec![8, 4, 8]);
+}

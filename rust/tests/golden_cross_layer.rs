@@ -1,0 +1,112 @@
+//! Cross-layer golden tests: the python build path (`compile/ordering.py`,
+//! `compile/kernels/ref.py`) and this crate must implement the *same*
+//! deterministic algorithms. `make artifacts` bakes the python results into
+//! `artifacts/golden.txt`; these tests re-derive everything in rust and
+//! compare node-for-node / bit-for-bit(ish).
+//!
+//! Skipped (with a loud message) when artifacts are absent — run
+//! `make artifacts` first.
+
+use hbmc::config::{OrderingKind, SolverConfig, SpmvKind};
+use hbmc::ordering::hbmc::hbmc_order;
+use hbmc::runtime::artifacts::{canonical_matrix, ArtifactSet};
+use hbmc::solver::iccg::IccgSolver;
+
+fn artifacts() -> Option<ArtifactSet> {
+    match ArtifactSet::locate() {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("SKIP golden tests: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn rust_and_python_hbmc_permutations_agree() {
+    let Some(arts) = artifacts() else { return };
+    let golden = arts.golden().unwrap();
+    let a = canonical_matrix(&golden).unwrap();
+    let bs = golden.usize("bs").unwrap();
+    let w = golden.usize("w").unwrap();
+    let ord = hbmc_order(&a, bs, w);
+
+    let py_perm = golden.usize_vec("hbmc_new_of_old").unwrap();
+    assert_eq!(ord.perm.n_old(), py_perm.len());
+    for (i, &p) in py_perm.iter().enumerate() {
+        assert_eq!(
+            ord.perm.new_of_old(i),
+            p,
+            "node {i}: rust {} vs python {p}",
+            ord.perm.new_of_old(i)
+        );
+    }
+
+    let py_bmc = golden.usize_vec("bmc_new_of_old").unwrap();
+    for (i, &p) in py_bmc.iter().enumerate() {
+        assert_eq!(ord.bmc.perm.new_of_old(i), p, "bmc node {i}");
+    }
+    assert_eq!(ord.num_colors, golden.usize("num_colors").unwrap());
+    assert_eq!(
+        ord.color_ptr,
+        golden.usize_vec("color_ptr").unwrap(),
+        "color layout differs"
+    );
+}
+
+#[test]
+fn rust_ic0_matches_python_factor() {
+    let Some(arts) = artifacts() else { return };
+    let golden = arts.golden().unwrap();
+    let a = canonical_matrix(&golden).unwrap();
+    let bs = golden.usize("bs").unwrap();
+    let w = golden.usize("w").unwrap();
+    let ord = hbmc_order(&a, bs, w);
+    let b = a.permute_sym(&ord.perm);
+    let f = hbmc::factor::ic0::ic0(&b, 0.0).unwrap();
+    let py_diag = golden.f64_vec("factor_diag").unwrap();
+    assert_eq!(f.diag.len(), py_diag.len());
+    let dev = hbmc::util::max_abs_diff(&f.diag, &py_diag);
+    assert!(dev < 1e-12, "factor diagonals deviate: {dev}");
+}
+
+#[test]
+fn rust_preconditioner_reproduces_python_golden_vector() {
+    let Some(arts) = artifacts() else { return };
+    let golden = arts.golden().unwrap();
+    let a = canonical_matrix(&golden).unwrap();
+    let bs = golden.usize("bs").unwrap();
+    let w = golden.usize("w").unwrap();
+    let cfg = SolverConfig {
+        ordering: OrderingKind::Hbmc,
+        bs,
+        w,
+        spmv: SpmvKind::Sell,
+        ..Default::default()
+    };
+    let solver = IccgSolver::new(&a, &cfg).unwrap();
+    let r = golden.f64_vec("precond_r").unwrap();
+    let z_expect = golden.f64_vec("precond_z").unwrap();
+    assert_eq!(solver.n_aug(), r.len(), "augmented dimensions differ");
+    let mut z = vec![0.0; r.len()];
+    solver.apply_precond_internal(&r, &mut z);
+    let dev = hbmc::util::max_abs_diff(&z, &z_expect);
+    assert!(dev < 1e-11, "rust preconditioner deviates from python: {dev}");
+}
+
+#[test]
+fn rust_spmv_reproduces_python_golden_vector() {
+    let Some(arts) = artifacts() else { return };
+    let golden = arts.golden().unwrap();
+    let a = canonical_matrix(&golden).unwrap();
+    let bs = golden.usize("bs").unwrap();
+    let w = golden.usize("w").unwrap();
+    let ord = hbmc_order(&a, bs, w);
+    let b = a.permute_sym(&ord.perm);
+    let x = golden.f64_vec("spmv_x").unwrap();
+    let y_expect = golden.f64_vec("spmv_y").unwrap();
+    let mut y = vec![0.0; x.len()];
+    b.mul_vec(&x, &mut y);
+    let dev = hbmc::util::max_abs_diff(&y, &y_expect);
+    assert!(dev < 1e-11, "rust SpMV deviates from python: {dev}");
+}

@@ -1,0 +1,230 @@
+//! Property-based tests over randomized inputs (a self-contained harness —
+//! no `proptest` in the offline crate set; `util::rng::Rng` provides the
+//! deterministic case generator, failures print the seed).
+
+use hbmc::config::{OrderingKind, SolverConfig, SpmvKind};
+use hbmc::coordinator::pool::Pool;
+use hbmc::factor::ic0::ic0;
+use hbmc::factor::split::{SellTriFactors, TriFactors};
+use hbmc::ordering::bmc::{bmc_order, check_block_independence};
+use hbmc::ordering::graph::{er_condition_holds, orderings_equivalent, Adjacency};
+use hbmc::ordering::hbmc::{check_level2_diagonal, hbmc_order};
+use hbmc::ordering::mc::mc_order;
+use hbmc::ordering::perm::Perm;
+use hbmc::solver::trisolve_hbmc::{self, HbmcMeta, KernelPath};
+use hbmc::solver::trisolve_serial;
+use hbmc::sparse::coo::Coo;
+use hbmc::sparse::csr::Csr;
+use hbmc::sparse::sell::Sell;
+use hbmc::util::rng::Rng;
+
+/// Random connected-ish SPD matrix with varying density.
+fn random_spd(rng: &mut Rng) -> Csr {
+    let n = 20 + rng.below(180);
+    let extra = 1 + rng.below(4);
+    let mut coo = Coo::new(n);
+    let mut diag = vec![0.1f64; n];
+    for i in 0..n {
+        // chain edge keeps it connected
+        if i + 1 < n {
+            let v = rng.range_f64(0.2, 1.0);
+            coo.push_sym(i, i + 1, -v);
+            diag[i] += v;
+            diag[i + 1] += v;
+        }
+        for _ in 0..extra {
+            let j = rng.below(n);
+            if j != i {
+                let v = rng.range_f64(0.05, 0.6);
+                coo.push_sym(i, j, -v);
+                diag[i] += v;
+                diag[j] += v;
+            }
+        }
+    }
+    for (i, d) in diag.iter().enumerate() {
+        coo.push(i, i, d + 0.5);
+    }
+    coo.to_csr()
+}
+
+const CASES: u64 = 25;
+
+#[test]
+fn prop_hbmc_equivalent_and_structured() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(1000 + seed);
+        let a = random_spd(&mut rng);
+        let bs = [2usize, 4, 8, 16][rng.below(4)];
+        let w = [2usize, 4, 8][rng.below(3)];
+        let ord = hbmc_order(&a, bs, w);
+        assert!(
+            orderings_equivalent(&a, &ord.bmc.perm, &ord.perm),
+            "seed={seed} bs={bs} w={w}"
+        );
+        let b = a.permute_sym(&ord.perm);
+        assert_eq!(check_level2_diagonal(&b, &ord), None, "seed={seed}");
+        assert!(er_condition_holds(&b, &Perm::identity(b.n())), "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_bmc_blocks_independent() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(2000 + seed);
+        let a = random_spd(&mut rng);
+        let bs = [2usize, 8, 32][rng.below(3)];
+        let ord = bmc_order(&a, bs);
+        let b = a.permute_sym(&ord.perm);
+        assert_eq!(check_block_independence(&b, &ord), None, "seed={seed} bs={bs}");
+    }
+}
+
+#[test]
+fn prop_mc_colors_are_independent_sets() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(3000 + seed);
+        let a = random_spd(&mut rng);
+        let mc = mc_order(&a);
+        let b = a.permute_sym(&mc.perm);
+        for c in 0..mc.num_colors {
+            for i in mc.color_ptr[c]..mc.color_ptr[c + 1] {
+                let (cols, _) = b.row(i);
+                for &j in cols {
+                    let j = j as usize;
+                    assert!(
+                        j == i || j < mc.color_ptr[c] || j >= mc.color_ptr[c + 1],
+                        "seed={seed} intra-color edge"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_hbmc_trisolve_matches_serial_all_paths() {
+    let have512 = trisolve_hbmc::select_path(8, true) == KernelPath::Avx512W8;
+    let have2 = trisolve_hbmc::select_path(4, true) == KernelPath::Avx2W4;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(4000 + seed);
+        let a = random_spd(&mut rng);
+        let bs = [2usize, 4, 8][rng.below(3)];
+        let w = [4usize, 8][rng.below(2)];
+        let ord = hbmc_order(&a, bs, w);
+        let b = a.permute_sym(&ord.perm);
+        let f = ic0(&b, 0.0).unwrap();
+        let tri = TriFactors::from_ic(&f);
+        let sell = SellTriFactors::from_tri(&tri, w);
+        let meta = HbmcMeta::from_ordering(&ord);
+        let n = b.n();
+        let r: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let mut y_ref = vec![0.0; n];
+        trisolve_serial::forward(&tri, &r, &mut y_ref);
+        let mut z_ref = vec![0.0; n];
+        trisolve_serial::backward(&tri, &y_ref, &mut z_ref);
+
+        let mut paths = vec![KernelPath::Scalar];
+        if w == 8 && have512 {
+            paths.push(KernelPath::Avx512W8);
+        }
+        if w == 4 && have2 {
+            paths.push(KernelPath::Avx2W4);
+        }
+        for path in paths {
+            let pool = Pool::new(1 + rng.below(3));
+            let mut y = vec![0.0; n];
+            trisolve_hbmc::forward(&meta, &sell, &r, &mut y, &pool, path);
+            assert!(
+                hbmc::util::max_abs_diff(&y, &y_ref) < 1e-11,
+                "fwd seed={seed} path={}",
+                path.name()
+            );
+            let mut z = vec![0.0; n];
+            trisolve_hbmc::backward(&meta, &sell, &y, &mut z, &pool, path);
+            assert!(
+                hbmc::util::max_abs_diff(&z, &z_ref) < 1e-11,
+                "bwd seed={seed} path={}",
+                path.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sell_spmv_equals_csr() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(5000 + seed);
+        let a = random_spd(&mut rng);
+        let c = [2usize, 4, 8][rng.below(3)];
+        let sell = Sell::from_csr(&a, c);
+        let x: Vec<f64> = (0..a.n()).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let mut y1 = vec![0.0; a.n()];
+        let mut y2 = vec![0.0; a.n()];
+        a.mul_vec(&x, &mut y1);
+        sell.mul_vec(&x, &mut y2);
+        assert!(hbmc::util::max_abs_diff(&y1, &y2) < 1e-12, "seed={seed} c={c}");
+    }
+}
+
+#[test]
+fn prop_ic0_preserves_pattern_and_positivity() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(6000 + seed);
+        let a = random_spd(&mut rng);
+        let f = ic0(&a, 0.0).unwrap();
+        assert_eq!(f.lower.nnz(), a.lower_strict().nnz(), "seed={seed}");
+        assert!(f.diag.iter().all(|&d| d > 0.0 && d.is_finite()), "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_full_solve_reaches_tolerance() {
+    for seed in 0..10 {
+        let mut rng = Rng::new(7000 + seed);
+        let a = random_spd(&mut rng);
+        let mut b = vec![0.0; a.n()];
+        a.mul_vec(&vec![1.0; a.n()], &mut b);
+        let cfg = SolverConfig {
+            ordering: [OrderingKind::Mc, OrderingKind::Bmc, OrderingKind::Hbmc][rng.below(3)],
+            bs: [4usize, 8][rng.below(2)],
+            w: 4,
+            spmv: [SpmvKind::Crs, SpmvKind::Sell][rng.below(2)],
+            threads: 1 + rng.below(2),
+            rtol: 1e-8,
+            ..Default::default()
+        };
+        let rep = hbmc::coordinator::driver::solve(&a, &b, &cfg).unwrap();
+        assert!(rep.converged, "seed={seed} cfg={:?}", cfg.ordering);
+        let err = rep.solution.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-5, "seed={seed} err={err}");
+    }
+}
+
+#[test]
+fn prop_permutation_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(8000 + seed);
+        let n = 5 + rng.below(200);
+        let n_new = n + rng.below(50);
+        // random injective map
+        let mut slots: Vec<u32> = (0..n_new as u32).collect();
+        rng.shuffle(&mut slots);
+        let p = Perm::padded(slots[..n].to_vec(), n_new).unwrap();
+        let x: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let y = p.apply_vec(&x, -7.0);
+        assert_eq!(p.unapply_vec(&y), x, "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_coloring_proper_on_adjacency() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(9000 + seed);
+        let a = random_spd(&mut rng);
+        let adj = Adjacency::from_csr(&a);
+        let col = hbmc::ordering::coloring::greedy_color(adj.n(), |v| adj.neighbors(v).to_vec());
+        assert!(col.is_proper(|v| adj.neighbors(v).to_vec()), "seed={seed}");
+        assert!(col.num_colors <= adj.max_degree() + 1, "seed={seed}");
+    }
+}

@@ -1,0 +1,90 @@
+//! PJRT runtime integration: load the AOT HLO artifacts, execute them on
+//! the XLA CPU client and compare against the python goldens — the
+//! automated version of `examples/hybrid_pjrt.rs`.
+//!
+//! Skipped when artifacts are absent (`make artifacts`).
+
+use hbmc::runtime::artifacts::ArtifactSet;
+use hbmc::runtime::hybrid::{HybridPcgStep, HybridPrecond, HybridSpmv};
+use hbmc::runtime::pjrt::PjrtRuntime;
+use hbmc::solver::blas1::dot;
+
+fn setup() -> Option<(ArtifactSet, PjrtRuntime)> {
+    let arts = match ArtifactSet::locate() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("SKIP pjrt tests: {e:#}");
+            return None;
+        }
+    };
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    Some((arts, rt))
+}
+
+#[test]
+fn precond_executable_matches_golden() {
+    let Some((arts, rt)) = setup() else { return };
+    let pre = HybridPrecond::load(&rt, &arts).unwrap();
+    let golden = arts.golden().unwrap();
+    let r = golden.f64_vec("precond_r").unwrap();
+    let z_expect = golden.f64_vec("precond_z").unwrap();
+    let z = pre.apply(&r).unwrap();
+    let dev = hbmc::util::max_abs_diff(&z, &z_expect);
+    assert!(dev < 1e-11, "pjrt precond deviates: {dev}");
+}
+
+#[test]
+fn spmv_executable_matches_golden() {
+    let Some((arts, rt)) = setup() else { return };
+    let spmv = HybridSpmv::load(&rt, &arts).unwrap();
+    let golden = arts.golden().unwrap();
+    let x = golden.f64_vec("spmv_x").unwrap();
+    let y_expect = golden.f64_vec("spmv_y").unwrap();
+    let y = spmv.apply(&x).unwrap();
+    let dev = hbmc::util::max_abs_diff(&y, &y_expect);
+    assert!(dev < 1e-11, "pjrt spmv deviates: {dev}");
+}
+
+#[test]
+fn pcg_step_reproduces_python_rr_history() {
+    let Some((arts, rt)) = setup() else { return };
+    let step = HybridPcgStep::load(&rt, &arts).unwrap();
+    let spmv = HybridSpmv::load(&rt, &arts).unwrap();
+    let pre = HybridPrecond::load(&rt, &arts).unwrap();
+    let golden = arts.golden().unwrap();
+    let n = golden.usize("n_aug").unwrap();
+    let rr_expect = golden.f64_vec("pcg_rr_history").unwrap();
+
+    // Same initial state as aot.py: b = A·1, x0 = 0.
+    let b = spmv.apply(&vec![1.0; n]).unwrap();
+    let mut x = vec![0.0; n];
+    let mut r = b.clone();
+    let z = pre.apply(&r).unwrap();
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+    for (i, expect) in rr_expect.iter().enumerate() {
+        let (x2, r2, _z2, p2, rz2, rr) = step.step(&x, &r, &p, rz).unwrap();
+        x = x2;
+        r = r2;
+        p = p2;
+        rz = rz2;
+        let rel = (rr - expect).abs() / expect.abs().max(1e-300);
+        assert!(rel < 1e-9, "iter {i}: rr {rr} vs golden {expect} (rel {rel:.2e})");
+    }
+}
+
+#[test]
+fn executables_reject_wrong_dimensions() {
+    let Some((arts, rt)) = setup() else { return };
+    let pre = HybridPrecond::load(&rt, &arts).unwrap();
+    assert!(pre.apply(&[1.0, 2.0]).is_err());
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let Some((_, rt)) = setup() else { return };
+    let bogus = ArtifactSet::at(std::path::Path::new("/nonexistent"));
+    assert!(rt
+        .load_hlo_text(&bogus.hlo_path("precond_hbmc"), 1)
+        .is_err());
+}

@@ -1,0 +1,188 @@
+//! Full-solver integration: every ordering × SpMV × thread-count
+//! combination solves the suite correctly; shifted ICCG handles the
+//! semi-definite Ieej-class system; configuration knobs behave.
+
+use hbmc::config::{NodePreset, OrderingKind, Scale, SolverConfig, SpmvKind};
+use hbmc::coordinator::driver::solve;
+use hbmc::gen::suite;
+use hbmc::solver::iccg::IccgSolver;
+
+fn unit_err(solution: &[f64]) -> f64 {
+    solution.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn full_matrix_of_configurations_on_g3() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    for ordering in [OrderingKind::Natural, OrderingKind::Mc, OrderingKind::Bmc, OrderingKind::Hbmc] {
+        for spmv in [SpmvKind::Crs, SpmvKind::Sell] {
+            for threads in [1usize, 2] {
+                let cfg = SolverConfig {
+                    ordering,
+                    spmv,
+                    threads,
+                    bs: 8,
+                    w: 4,
+                    rtol: 1e-7,
+                    ..Default::default()
+                };
+                let rep = solve(&d.matrix, &d.b, &cfg).unwrap();
+                assert!(
+                    rep.converged,
+                    "{ordering:?}/{spmv:?}/t{threads} relres={}",
+                    rep.final_relres
+                );
+                assert!(
+                    unit_err(&rep.solution) < 1e-4,
+                    "{ordering:?}/{spmv:?}/t{threads} err={}",
+                    unit_err(&rep.solution)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn iteration_count_invariant_under_threads_and_spmv() {
+    let d = suite::dataset("thermal2", Scale::Tiny);
+    let mut iters = Vec::new();
+    for threads in [1usize, 2, 4] {
+        for spmv in [SpmvKind::Crs, SpmvKind::Sell] {
+            let cfg = SolverConfig {
+                ordering: OrderingKind::Hbmc,
+                bs: 8,
+                w: 4,
+                threads,
+                spmv,
+                rtol: 1e-7,
+                ..Default::default()
+            };
+            iters.push(solve(&d.matrix, &d.b, &cfg).unwrap().iterations);
+        }
+    }
+    let first = iters[0];
+    assert!(
+        iters.iter().all(|&i| i.abs_diff(first) <= 1),
+        "iterations vary: {iters:?}"
+    );
+}
+
+#[test]
+fn shifted_iccg_solves_ieej_class() {
+    // The paper's protocol: shift σ = 0.3 for the eddy-current system.
+    let d = suite::dataset("ieej", Scale::Tiny);
+    assert_eq!(d.shift, 0.3);
+    let cfg = SolverConfig {
+        ordering: OrderingKind::Hbmc,
+        bs: 16,
+        w: 8,
+        shift: d.shift,
+        rtol: 1e-7,
+        ..Default::default()
+    };
+    let rep = solve(&d.matrix, &d.b, &cfg).unwrap();
+    assert!(rep.converged, "relres={}", rep.final_relres);
+    assert!(rep.setup.shift_used >= 0.3);
+    assert!(unit_err(&rep.solution) < 1e-3);
+}
+
+#[test]
+fn all_five_datasets_solve_with_paper_defaults() {
+    for d in suite::all(Scale::Tiny) {
+        let cfg = SolverConfig {
+            ordering: OrderingKind::Hbmc,
+            bs: 32,
+            w: 8,
+            spmv: SpmvKind::Sell,
+            shift: d.shift,
+            rtol: 1e-7,
+            ..Default::default()
+        };
+        let rep = solve(&d.matrix, &d.b, &cfg).unwrap();
+        assert!(rep.converged, "{} relres={}", d.name, rep.final_relres);
+        println!(
+            "{:<14} n={:>6} iters={:>5} simd={:>5.1}% sell_ovh={:+.1}%",
+            d.name,
+            d.n(),
+            rep.iterations,
+            100.0 * rep.simd_ratio,
+            100.0 * (rep.sell_overhead.unwrap() - 1.0)
+        );
+    }
+}
+
+#[test]
+fn intrinsic_and_scalar_paths_agree() {
+    let d = suite::dataset("audikw_1", Scale::Tiny);
+    let mk = |use_intrinsics| SolverConfig {
+        ordering: OrderingKind::Hbmc,
+        bs: 8,
+        w: 8,
+        use_intrinsics,
+        rtol: 1e-8,
+        ..Default::default()
+    };
+    let a = solve(&d.matrix, &d.b, &mk(true)).unwrap();
+    let b = solve(&d.matrix, &d.b, &mk(false)).unwrap();
+    assert_eq!(a.iterations, b.iterations);
+    let max_dev = a
+        .solution
+        .iter()
+        .zip(&b.solution)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max);
+    assert!(max_dev < 1e-9, "intrinsic vs scalar deviate: {max_dev}");
+}
+
+#[test]
+fn node_presets_solve() {
+    let d = suite::dataset("parabolic_fem", Scale::Tiny);
+    for node in NodePreset::all() {
+        let mut cfg = SolverConfig { ordering: OrderingKind::Hbmc, bs: 16, ..Default::default() };
+        node.apply(&mut cfg);
+        let rep = solve(&d.matrix, &d.b, &cfg).unwrap();
+        assert!(rep.converged, "{:?}", node);
+        assert_eq!(cfg.w, node.w());
+    }
+}
+
+#[test]
+fn sell_sigma_variant_matches_unsorted() {
+    let d = suite::dataset("audikw_1", Scale::Tiny);
+    let mk = |sigma| SolverConfig {
+        ordering: OrderingKind::Hbmc,
+        bs: 8,
+        w: 8,
+        spmv: SpmvKind::Sell,
+        sell_sigma: sigma,
+        rtol: 1e-7,
+        ..Default::default()
+    };
+    let plain = IccgSolver::new(&d.matrix, &mk(None)).unwrap();
+    let sorted = IccgSolver::new(&d.matrix, &mk(Some(64))).unwrap();
+    // σ-sorting strictly reduces stored elements on the imbalanced set.
+    assert!(sorted.setup.spmv_elements < plain.setup.spmv_elements);
+    let op = plain.solve(&d.b).unwrap();
+    let os = sorted.solve(&d.b).unwrap();
+    assert_eq!(op.cg.iterations, os.cg.iterations);
+}
+
+#[test]
+fn solver_is_reusable_across_rhs() {
+    let d = suite::dataset("thermal2", Scale::Tiny);
+    let solver = IccgSolver::new(&d.matrix, &SolverConfig {
+        ordering: OrderingKind::Hbmc,
+        bs: 8,
+        w: 4,
+        rtol: 1e-8,
+        ..Default::default()
+    })
+    .unwrap();
+    let o1 = solver.solve(&d.b).unwrap();
+    // Second rhs: 2·b → solution 2·1.
+    let b2: Vec<f64> = d.b.iter().map(|v| 2.0 * v).collect();
+    let o2 = solver.solve(&b2).unwrap();
+    assert!(o1.cg.converged && o2.cg.converged);
+    let err = o2.x.iter().map(|x| (x - 2.0).abs()).fold(0.0, f64::max);
+    assert!(err < 1e-4, "err={err}");
+}
