@@ -52,8 +52,8 @@ fn main() -> anyhow::Result<()> {
             label.to_string(),
             rep.iterations.to_string(),
             secs(rep.solve_seconds),
-            rep.syncs_per_substitution.to_string(),
-            format!("{}", rep.setup.shift_used),
+            rep.plan.syncs_per_substitution.to_string(),
+            format!("{}", rep.plan.setup.shift_used),
         ]);
     }
     print!("{}", table.render());

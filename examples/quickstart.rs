@@ -1,11 +1,15 @@
-//! Quickstart: solve one system with the HBMC ICCG solver and print the
-//! paper-relevant metrics.
+//! Quickstart: the two-phase plan/session API — build one `SolverPlan`,
+//! open a `SolveSession`, and serve several right-hand sides off the same
+//! setup, printing the paper-relevant metrics.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use std::sync::Arc;
+
 use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
-use hbmc::coordinator::driver::solve;
+use hbmc::coordinator::session::SolveSession;
 use hbmc::gen::suite;
+use hbmc::solver::plan::SolverPlan;
 
 fn main() -> anyhow::Result<()> {
     // 1. A test problem — the G3_circuit-class generator (see DESIGN.md §3).
@@ -30,26 +34,58 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
 
-    // 3. Solve A x = b.
-    let report = solve(&dataset.matrix, &dataset.b, &cfg)?;
-    println!("\nconfig   : {}", report.config_label);
-    println!("kernel   : {}", report.setup.kernel_path);
-    println!("colors   : {} (syncs/substitution = {})",
-        report.setup.num_colors, report.syncs_per_substitution);
-    println!("iters    : {} (converged = {})", report.iterations, report.converged);
-    println!("time     : {:.3} s solve | {:.3} s ordering | {:.3} s factor",
-        report.solve_seconds, report.setup.ordering_seconds, report.setup.factor_seconds);
-    for (k, s) in &report.kernel_seconds {
-        println!("  {k:<9} {s:.3} s");
-    }
-    println!("simd     : {:.1}% packed FP ops", 100.0 * report.simd_ratio);
-    if let Some(o) = report.sell_overhead {
+    // 3. Phase 1 — the plan: ordering + IC(0) factorization + SELL
+    //    construction, paid exactly once per (matrix, config) pair.
+    let plan = Arc::new(SolverPlan::build(&dataset.matrix, &cfg)?);
+    println!("\nconfig   : {}", cfg.label());
+    println!("kernel   : {}", plan.setup.kernel_path);
+    println!(
+        "colors   : {} (syncs/substitution = {})",
+        plan.setup.num_colors,
+        plan.trisolver.syncs_per_sweep()
+    );
+    println!(
+        "setup    : {:.3} s ({:.3} ordering | {:.3} factor | {:.3} storage)",
+        plan.setup.setup_seconds(),
+        plan.setup.ordering_seconds,
+        plan.setup.factor_seconds,
+        plan.setup.storage_seconds
+    );
+    println!("simd     : {:.1}% packed FP ops", 100.0 * plan.ops.simd_ratio());
+    if let Some(o) = plan.sell_overhead() {
         println!("sell     : {:+.1}% stored elements vs CRS", 100.0 * (o - 1.0));
     }
 
-    // 4. The rhs was A·1 — verify the solution.
-    let err = report.solution.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
-    println!("max |x-1|: {err:.2e}");
-    anyhow::ensure!(report.converged && err < 1e-4);
+    // 4. Phase 2 — the session: one persistent thread pool, many solves
+    //    amortizing the plan (the rhs was A·1, so x* = 1 scaled).
+    let session = SolveSession::new(plan);
+    let mut total = 0.0;
+    for k in 1..=3u32 {
+        let b: Vec<f64> = dataset.b.iter().map(|v| v * k as f64).collect();
+        let out = session.solve(&b)?;
+        let err = out
+            .x
+            .iter()
+            .map(|x| (x - k as f64).abs())
+            .fold(0.0, f64::max);
+        println!(
+            "\nsolve[{}] : iters = {} (converged = {}), {:.3} s, max |x - {k}| = {err:.2e}",
+            out.report.solve_index,
+            out.report.iterations,
+            out.report.converged,
+            out.report.solve_seconds
+        );
+        for (kernel, s) in &out.report.kernel_seconds {
+            println!("  {kernel:<9} {s:.3} s");
+        }
+        anyhow::ensure!(out.report.converged && err < 1e-3);
+        total += out.report.solve_seconds;
+    }
+    println!(
+        "\namortization: setup {:.3} s once, {} solves {:.3} s total",
+        session.plan().setup.setup_seconds(),
+        session.solves_completed(),
+        total
+    );
     Ok(())
 }

@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
                 secs(rep.solve_seconds),
                 secs(rep.kernel("trisolve")),
                 secs(rep.kernel("spmv")),
-                pct(rep.simd_ratio),
+                pct(rep.plan.simd_ratio),
             ]);
         }
         // The paper's headline checks.

@@ -64,7 +64,7 @@ fn main() {
             t2.push_row(vec![
                 bs.to_string(),
                 w.to_string(),
-                rep.setup.num_colors.to_string(),
+                rep.plan.setup.num_colors.to_string(),
                 rep.iterations.to_string(),
                 secs(rep.solve_seconds),
             ]);
@@ -93,7 +93,7 @@ fn main() {
             threads.to_string(),
             rep.iterations.to_string(),
             secs(rep.solve_seconds),
-            rep.syncs_per_substitution.to_string(),
+            rep.plan.syncs_per_substitution.to_string(),
         ]);
     }
     print!("{}", t3.render());

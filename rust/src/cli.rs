@@ -14,7 +14,7 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const SWITCHES: [&str; 4] = ["history", "verbose", "no-intrinsics", "help"];
+const SWITCHES: [&str; 5] = ["history", "verbose", "no-intrinsics", "help", "setup-only"];
 
 impl Args {
     /// Parse from an iterator of arguments (program name excluded).
@@ -83,6 +83,13 @@ mod tests {
         assert_eq!(a.usize_flag("w", 8).unwrap(), 8);
         assert!(a.switch("history"));
         assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn setup_only_and_repeat() {
+        let a = parse("solve --dataset ieej --repeat 8 --setup-only").unwrap();
+        assert!(a.switch("setup-only"));
+        assert_eq!(a.usize_flag("repeat", 1).unwrap(), 8);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 use anyhow::{bail, Result};
 
 /// Which parallel ordering drives the triangular solver.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum OrderingKind {
     /// Natural ordering, serial substitutions (sanity baseline; not in the
     /// paper's tables).
@@ -42,7 +42,7 @@ impl OrderingKind {
 
 /// SpMV storage for the CG matrix-vector product (the paper's
 /// `HBMC (crs_spmv)` vs `HBMC (sell_spmv)` distinction).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SpmvKind {
     Crs,
     Sell,
@@ -67,7 +67,7 @@ impl SpmvKind {
 
 /// Problem scale for the generated datasets (DESIGN.md §3: scaled stand-ins
 /// for the paper's SuiteSparse matrices).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Scale {
     /// A few thousand unknowns — unit/integration tests.
     Tiny,
@@ -186,6 +186,18 @@ impl NodePreset {
 }
 
 impl SolverConfig {
+    /// Human-readable plan label, e.g. `HBMC(bs=32,w=8,sell)` — used by
+    /// reports and the CLI.
+    pub fn label(&self) -> String {
+        format!(
+            "{}(bs={},w={},{})",
+            self.ordering.name(),
+            self.bs,
+            self.w,
+            self.spmv.name()
+        )
+    }
+
     /// Validate parameter coherence.
     pub fn validate(&self) -> Result<()> {
         if self.bs == 0 || self.w == 0 {

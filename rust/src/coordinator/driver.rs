@@ -1,63 +1,120 @@
-//! End-to-end solve orchestration: dataset/matrix + config → ordered,
-//! factored, storage-built solver → PCG run → [`SolveReport`] with every
-//! metric the paper's tables and figures need.
+//! One-shot solve orchestration and the report types shared with the
+//! session layer. [`solve`] / [`solve_opts`] are thin wrappers that build a
+//! single-use [`SolveSession`](crate::coordinator::session::SolveSession);
+//! production callers serving many right-hand sides should hold the session
+//! (or a `PlanCache`) themselves so the setup phase is paid once.
+//!
+//! Reporting is split to make amortization observable:
+//!
+//! * [`PlanReport`] — per-plan (setup) metrics: ordering/factorization
+//!   time, colors, storage sizes, SIMD statistic. Identical for every solve
+//!   that reuses the plan.
+//! * [`SolveReport`] — per-solve metrics: iterations, residual, iteration-
+//!   loop wall time, kernel breakdown, plus its `PlanReport`.
 
 use anyhow::Result;
 
 use crate::config::SolverConfig;
+use crate::coordinator::session::SolveSession;
 use crate::solver::cg::CgResult;
-use crate::solver::iccg::{IccgSolver, SetupStats};
+use crate::solver::plan::{SetupStats, SolverPlan};
 use crate::sparse::csr::Csr;
 
-/// Everything the benches/tables/CLI report about one solve.
+/// Per-solve knobs (everything structural lives in the plan).
+#[derive(Debug, Clone, Default)]
+pub struct SolveOptions {
+    /// Record the per-iteration residual history (Fig. 5.1 data).
+    pub record_history: bool,
+    /// Copy the solution vector into `SolveReport::solution`. Off by
+    /// default: at `Scale::Full` this is hundreds of thousands of doubles
+    /// per report, and session callers already receive `x` in
+    /// `SolveOutput` without any copy.
+    pub return_solution: bool,
+    /// Override the plan's convergence tolerance for this solve.
+    pub rtol: Option<f64>,
+    /// Override the plan's iteration cap for this solve.
+    pub max_iters: Option<usize>,
+}
+
+impl SolveOptions {
+    /// Record the residual history (Fig. 5.1 runs).
+    pub fn history() -> SolveOptions {
+        SolveOptions { record_history: true, ..Default::default() }
+    }
+
+    /// Return the solution vector in the report (one-shot callers).
+    pub fn with_solution() -> SolveOptions {
+        SolveOptions { return_solution: true, ..Default::default() }
+    }
+
+    /// History + solution.
+    pub fn full() -> SolveOptions {
+        SolveOptions { record_history: true, return_solution: true, ..Default::default() }
+    }
+}
+
+/// Per-plan (setup-phase) metrics; identical across solves on one plan.
 #[derive(Debug, Clone)]
-pub struct SolveReport {
+pub struct PlanReport {
     pub config_label: String,
-    pub iterations: usize,
-    pub converged: bool,
-    pub final_relres: f64,
-    /// Iteration-loop wall time (the paper's Table 5.3 "execution time").
-    pub solve_seconds: f64,
     pub setup: SetupStats,
-    /// Per-kernel time breakdown (trisolve / spmv / blas1).
-    pub kernel_seconds: Vec<(&'static str, f64)>,
     /// Analytic packed-FP fraction (§5.2.1 SIMD statistic).
     pub simd_ratio: f64,
     /// Syncs per substitution sweep (= n_c − 1).
     pub syncs_per_substitution: usize,
     /// SELL processed-element overhead vs CRS nnz (§5.2.2), if SELL used.
     pub sell_overhead: Option<f64>,
+    /// Substitution strategy ("ic0-hbmc", ...).
+    pub trisolver: &'static str,
+}
+
+impl PlanReport {
+    pub fn of(plan: &SolverPlan) -> PlanReport {
+        PlanReport {
+            config_label: plan.cfg.label(),
+            setup: plan.setup.clone(),
+            simd_ratio: plan.ops.simd_ratio(),
+            syncs_per_substitution: plan.trisolver.syncs_per_sweep(),
+            sell_overhead: plan.sell_overhead(),
+            trisolver: plan.trisolver.name(),
+        }
+    }
+}
+
+/// Everything the benches/tables/CLI report about one solve.
+#[derive(Debug, Clone)]
+pub struct SolveReport {
+    pub iterations: usize,
+    pub converged: bool,
+    pub final_relres: f64,
+    /// Iteration-loop wall time (the paper's Table 5.3 "execution time") —
+    /// excludes all setup, which is in `plan.setup`.
+    pub solve_seconds: f64,
+    /// Per-kernel time breakdown (trisolve / spmv / blas1).
+    pub kernel_seconds: Vec<(&'static str, f64)>,
     /// Residual history when requested (Fig. 5.1).
     pub residual_history: Vec<f64>,
-    /// Solution max-error vs the known x* = 1 when the rhs was A·1.
-    pub solution: Vec<f64>,
+    /// Solution in the original ordering; populated only when
+    /// [`SolveOptions::return_solution`] is set.
+    pub solution: Option<Vec<f64>>,
+    /// 0-based index of this solve on its plan (amortization counter).
+    pub solve_index: usize,
+    /// The setup-phase metrics of the plan this solve ran on.
+    pub plan: PlanReport,
 }
 
 impl SolveReport {
-    fn from_parts(label: String, solver: &IccgSolver, cg: CgResult, x: Vec<f64>, syncs: usize) -> SolveReport {
-        let sell_overhead = match solver.cfg.spmv {
-            crate::config::SpmvKind::Sell => {
-                Some(solver.setup.spmv_elements as f64 / solver.setup.nnz as f64)
-            }
-            crate::config::SpmvKind::Crs => None,
-        };
+    pub(crate) fn from_parts(plan: &SolverPlan, cg: CgResult, solve_index: usize) -> SolveReport {
         SolveReport {
-            config_label: label,
             iterations: cg.iterations,
             converged: cg.converged,
             final_relres: cg.final_relres,
             solve_seconds: cg.solve_seconds,
-            setup: solver.setup.clone(),
-            kernel_seconds: cg
-                .times
-                .iter()
-                .map(|(n, d)| (n, d.as_secs_f64()))
-                .collect(),
-            simd_ratio: solver.ops.simd_ratio(),
-            syncs_per_substitution: syncs,
-            sell_overhead,
+            kernel_seconds: cg.times.iter().map(|(n, d)| (n, d.as_secs_f64())).collect(),
             residual_history: cg.residual_history,
-            solution: x,
+            solution: None,
+            solve_index,
+            plan: PlanReport::of(plan),
         }
     }
 
@@ -71,23 +128,21 @@ impl SolveReport {
     }
 }
 
-/// One-shot convenience: build + solve.
+/// One-shot convenience: plan + session + one solve. The report omits the
+/// solution and history; see [`SolveOptions`].
 pub fn solve(a: &Csr, b: &[f64], cfg: &SolverConfig) -> Result<SolveReport> {
-    solve_opts(a, b, cfg, false)
+    solve_opts(a, b, cfg, &SolveOptions::default())
 }
 
-/// One-shot with residual-history recording (Fig. 5.1).
-pub fn solve_opts(a: &Csr, b: &[f64], cfg: &SolverConfig, record_history: bool) -> Result<SolveReport> {
-    let solver = IccgSolver::new(a, cfg)?;
-    let out = solver.solve_opts(b, record_history)?;
-    let label = format!(
-        "{}(bs={},w={},{})",
-        cfg.ordering.name(),
-        cfg.bs,
-        cfg.w,
-        cfg.spmv.name()
-    );
-    Ok(SolveReport::from_parts(label, &solver, out.cg, out.x, out.syncs_per_substitution))
+/// One-shot with explicit per-solve options.
+pub fn solve_opts(
+    a: &Csr,
+    b: &[f64],
+    cfg: &SolverConfig,
+    opts: &SolveOptions,
+) -> Result<SolveReport> {
+    let session = SolveSession::from_matrix(a, cfg)?;
+    Ok(session.solve_with(b, opts)?.report)
 }
 
 #[cfg(test)]
@@ -107,18 +162,31 @@ mod tests {
             rtol: 1e-7,
             ..Default::default()
         };
-        let rep = solve_opts(&d.matrix, &d.b, &cfg, true).unwrap();
+        let rep = solve_opts(&d.matrix, &d.b, &cfg, &SolveOptions::full()).unwrap();
         assert!(rep.converged, "relres={}", rep.final_relres);
         assert!(rep.iterations > 0);
         assert!(rep.solve_seconds > 0.0);
-        assert!(rep.simd_ratio > 0.9, "hbmc+sell should be mostly packed");
-        assert!(rep.sell_overhead.unwrap() >= 1.0);
+        assert!(rep.plan.simd_ratio > 0.9, "hbmc+sell should be mostly packed");
+        assert!(rep.plan.sell_overhead.unwrap() >= 1.0);
         assert_eq!(rep.residual_history.len(), rep.iterations);
         assert!(rep.kernel("trisolve") > 0.0);
         assert!(rep.kernel("spmv") > 0.0);
-        assert_eq!(rep.syncs_per_substitution, rep.setup.num_colors - 1);
+        assert_eq!(rep.plan.syncs_per_substitution, rep.plan.setup.num_colors - 1);
+        assert_eq!(rep.plan.trisolver, "ic0-hbmc");
+        assert_eq!(rep.solve_index, 0);
         // rhs was A·1 → solution ≈ 1.
-        let err = rep.solution.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
+        let sol = rep.solution.as_ref().unwrap();
+        let err = sol.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
         assert!(err < 1e-4, "solution error {err}");
+    }
+
+    #[test]
+    fn solution_and_history_are_opt_in() {
+        let d = suite::dataset("g3_circuit", crate::config::Scale::Tiny);
+        let cfg = SolverConfig { ordering: OrderingKind::Bmc, bs: 8, w: 4, ..Default::default() };
+        let rep = solve(&d.matrix, &d.b, &cfg).unwrap();
+        assert!(rep.converged);
+        assert!(rep.solution.is_none(), "solution must not be cloned by default");
+        assert!(rep.residual_history.is_empty(), "history must be opt-in");
     }
 }

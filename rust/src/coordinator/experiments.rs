@@ -12,9 +12,10 @@
 use anyhow::Result;
 
 use crate::config::{NodePreset, OrderingKind, Scale, SolverConfig, SpmvKind};
-use crate::coordinator::driver::{solve, solve_opts, SolveReport};
+use crate::coordinator::driver::{solve, solve_opts, SolveOptions, SolveReport};
 use crate::coordinator::report::{pct, secs, Table};
 use crate::gen::suite;
+use crate::solver::plan::SolverPlan;
 
 /// The paper's block-size sweep.
 pub const BLOCK_SIZES: [usize; 3] = [8, 16, 32];
@@ -76,8 +77,8 @@ pub fn fig_5_1(datasets: &[&str], scale: Scale, threads: usize) -> Result<Conver
             shift: d.shift,
             ..base_cfg(threads)
         };
-        let rb = solve_opts(&d.matrix, &d.b, &mk(OrderingKind::Bmc), true)?;
-        let rh = solve_opts(&d.matrix, &d.b, &mk(OrderingKind::Hbmc), true)?;
+        let rb = solve_opts(&d.matrix, &d.b, &mk(OrderingKind::Bmc), &SolveOptions::history())?;
+        let rh = solve_opts(&d.matrix, &d.b, &mk(OrderingKind::Hbmc), &SolveOptions::history())?;
         out.push((d.name.clone(), rb.residual_history, rh.residual_history));
     }
     Ok(out)
@@ -169,11 +170,12 @@ pub fn simd_ratio_stat(scale: Scale, threads: usize) -> Result<Table> {
                 w: 8,
                 spmv,
                 shift: d.shift,
-                max_iters: 1, // setup only; ratio is analytic
                 ..base_cfg(threads)
             };
-            let solver = crate::solver::iccg::IccgSolver::new(&d.matrix, &cfg)?;
-            vals.push(solver.ops.simd_ratio());
+            // Setup phase only — the ratio is analytic, so build the plan
+            // and never run a solve.
+            let plan = SolverPlan::build(&d.matrix, &cfg)?;
+            vals.push(plan.ops.simd_ratio());
         }
         t.push_row(vec![d.name.clone(), pct(vals[0]), pct(vals[1]), pct(vals[2])]);
     }

@@ -1,8 +1,10 @@
 //! Layer-3 coordination: the color-barrier thread pool that implements the
 //! paper's multithreading model (§4.4.3 — one sync per color), work
 //! scheduling, solver metrics (including the packed-op ratio standing in
-//! for the paper's VTune SIMD statistic), the end-to-end driver and the
-//! paper-style report formatting.
+//! for the paper's VTune SIMD statistic), the serving layer
+//! ([`session`] — reusable `SolveSession`s, batched `solve_many`, the LRU
+//! `PlanCache`), the one-shot [`driver`] wrappers and the paper-style
+//! report formatting.
 
 pub mod driver;
 pub mod experiments;
@@ -10,3 +12,4 @@ pub mod metrics;
 pub mod pool;
 pub mod report;
 pub mod schedule;
+pub mod session;

@@ -1,0 +1,378 @@
+//! Phase 2 of the two-phase solver: serving. A [`SolveSession`] owns one
+//! persistent color-barrier [`Pool`] shared by trisolve + SpMV + BLAS-1 and
+//! runs any number of right-hand sides against one immutable
+//! [`SolverPlan`] — the production shape of the paper's amortization claim
+//! (setup once, sweep many times). [`PlanCache`] adds an LRU plan store
+//! keyed by (matrix fingerprint, ordering, bs, w, spmv, σ, shift,
+//! intrinsics) so repeated requests against the same few matrices never
+//! re-order or re-factor.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{OrderingKind, SolverConfig, SpmvKind};
+use crate::coordinator::driver::{SolveOptions, SolveReport};
+use crate::coordinator::pool::Pool;
+use crate::solver::plan::{ExecOptions, SolverPlan};
+use crate::sparse::csr::Csr;
+
+/// Result of one session solve: the solution (moved, never cloned) plus
+/// the per-solve report.
+#[derive(Debug, Clone)]
+pub struct SolveOutput {
+    pub x: Vec<f64>,
+    pub report: SolveReport,
+}
+
+/// A reusable solve endpoint: one plan, one thread pool, many solves.
+///
+/// Convergence controls (`rtol`, `max_iters`) are *session* state, taken
+/// from the requesting config — a plan fetched from the cache may have
+/// been built for a different caller's tolerances, and those must not
+/// leak into this session's solves.
+pub struct SolveSession {
+    plan: Arc<SolverPlan>,
+    pool: Pool,
+    solves: AtomicUsize,
+    rtol: f64,
+    max_iters: usize,
+}
+
+impl SolveSession {
+    /// Wrap a plan; pool size and tolerances come from the plan's config.
+    pub fn new(plan: Arc<SolverPlan>) -> SolveSession {
+        let threads = plan.cfg.threads;
+        SolveSession::with_threads(plan, threads)
+    }
+
+    /// Wrap a (possibly cached) plan with an explicit pool size — lets one
+    /// plan serve sessions of different widths.
+    pub fn with_threads(plan: Arc<SolverPlan>, threads: usize) -> SolveSession {
+        let (rtol, max_iters) = (plan.cfg.rtol, plan.cfg.max_iters);
+        SolveSession {
+            plan,
+            pool: Pool::new(threads),
+            solves: AtomicUsize::new(0),
+            rtol,
+            max_iters,
+        }
+    }
+
+    /// Wrap a (possibly cached) plan, taking pool width **and** the
+    /// convergence controls from the requesting config rather than from
+    /// the config the plan was originally built under.
+    pub fn for_request(plan: Arc<SolverPlan>, cfg: &SolverConfig) -> SolveSession {
+        let mut s = SolveSession::with_threads(plan, cfg.threads);
+        s.rtol = cfg.rtol;
+        s.max_iters = cfg.max_iters;
+        s
+    }
+
+    /// Build the plan and the session in one step (the one-shot path).
+    pub fn from_matrix(a: &Csr, cfg: &SolverConfig) -> Result<SolveSession> {
+        Ok(SolveSession::new(Arc::new(SolverPlan::build(a, cfg)?)))
+    }
+
+    /// The immutable plan backing this session.
+    pub fn plan(&self) -> &Arc<SolverPlan> {
+        &self.plan
+    }
+
+    /// The session's persistent thread pool.
+    pub fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
+    /// Number of solves completed on this session.
+    pub fn solves_completed(&self) -> usize {
+        self.solves.load(AtomicOrdering::SeqCst)
+    }
+
+    /// Solve `A x = b` with default options.
+    pub fn solve(&self, b: &[f64]) -> Result<SolveOutput> {
+        self.solve_with(b, &SolveOptions::default())
+    }
+
+    /// Solve with explicit per-solve options. Note `&self`: sessions are
+    /// externally immutable, and consecutive solves reuse pool and plan.
+    pub fn solve_with(&self, b: &[f64], opts: &SolveOptions) -> Result<SolveOutput> {
+        let out = self.plan.execute(
+            &self.pool,
+            b,
+            &ExecOptions {
+                record_history: opts.record_history,
+                rtol: Some(opts.rtol.unwrap_or(self.rtol)),
+                max_iters: Some(opts.max_iters.unwrap_or(self.max_iters)),
+            },
+        )?;
+        let solve_index = self.solves.fetch_add(1, AtomicOrdering::SeqCst);
+        let mut report = SolveReport::from_parts(&self.plan, out.cg, solve_index);
+        if opts.return_solution {
+            report.solution = Some(out.x.clone());
+        }
+        Ok(SolveOutput { x: out.x, report })
+    }
+
+    /// Batched serving: run every rhs through the plan sequentially on the
+    /// session pool. Results are index-aligned with `rhss` and identical
+    /// to the corresponding independent `solve` calls.
+    pub fn solve_many<B: AsRef<[f64]>>(&self, rhss: &[B]) -> Result<Vec<SolveOutput>> {
+        self.solve_many_with(rhss, &SolveOptions::default())
+    }
+
+    /// Batched serving with per-solve options (applied to every rhs).
+    pub fn solve_many_with<B: AsRef<[f64]>>(
+        &self,
+        rhss: &[B],
+        opts: &SolveOptions,
+    ) -> Result<Vec<SolveOutput>> {
+        rhss.iter().map(|b| self.solve_with(b.as_ref(), opts)).collect()
+    }
+}
+
+/// Cache key: everything that determines a plan's content.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub fingerprint: u64,
+    pub ordering: OrderingKind,
+    pub bs: usize,
+    pub w: usize,
+    pub spmv: SpmvKind,
+    pub sell_sigma: Option<usize>,
+    /// Bit pattern of the requested diagonal shift.
+    pub shift_bits: u64,
+    pub use_intrinsics: bool,
+}
+
+impl PlanKey {
+    pub fn new(a: &Csr, cfg: &SolverConfig) -> PlanKey {
+        PlanKey {
+            fingerprint: a.fingerprint(),
+            ordering: cfg.ordering,
+            bs: cfg.bs,
+            w: cfg.w,
+            spmv: cfg.spmv,
+            sell_sigma: cfg.sell_sigma,
+            shift_bits: cfg.shift.to_bits(),
+            use_intrinsics: cfg.use_intrinsics,
+        }
+    }
+}
+
+struct CacheEntry {
+    plan: Arc<SolverPlan>,
+    last_used: u64,
+}
+
+/// LRU store of built plans — the serving tier's answer to "a few matrices,
+/// many right-hand sides". Hit ⇒ no re-ordering, no re-factorization.
+pub struct PlanCache {
+    capacity: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    entries: HashMap<PlanKey, CacheEntry>,
+}
+
+impl PlanCache {
+    /// `capacity` ≥ 1: most plans a cache will hold at once.
+    pub fn new(capacity: usize) -> PlanCache {
+        assert!(capacity >= 1, "plan cache capacity must be >= 1");
+        PlanCache {
+            capacity,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            entries: HashMap::new(),
+        }
+    }
+
+    /// Fetch the plan for `(a, cfg)`, building (and possibly evicting the
+    /// least-recently-used entry) on miss. Returns `(plan, was_hit)`.
+    pub fn get_or_build(&mut self, a: &Csr, cfg: &SolverConfig) -> Result<(Arc<SolverPlan>, bool)> {
+        let key = PlanKey::new(a, cfg);
+        self.tick += 1;
+        if let Some(entry) = self.entries.get_mut(&key) {
+            entry.last_used = self.tick;
+            self.hits += 1;
+            return Ok((entry.plan.clone(), true));
+        }
+        let plan = Arc::new(SolverPlan::build(a, cfg)?);
+        self.misses += 1;
+        if self.entries.len() >= self.capacity {
+            if let Some(lru) = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                self.entries.remove(&lru);
+                self.evictions += 1;
+            }
+        }
+        self.entries
+            .insert(key, CacheEntry { plan: plan.clone(), last_used: self.tick });
+        Ok((plan, false))
+    }
+
+    /// Open a session on the cached (or freshly built) plan, with the pool
+    /// width and convergence controls the *request* asked for (a cache hit
+    /// must not inherit another caller's rtol/max_iters).
+    pub fn session(&mut self, a: &Csr, cfg: &SolverConfig) -> Result<SolveSession> {
+        let (plan, _) = self.get_or_build(a, cfg)?;
+        Ok(SolveSession::for_request(plan, cfg))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scale;
+    use crate::gen::suite;
+
+    fn tiny_cfg(ordering: OrderingKind) -> SolverConfig {
+        SolverConfig { ordering, bs: 8, w: 4, rtol: 1e-7, ..Default::default() }
+    }
+
+    #[test]
+    fn session_counts_solves_and_reuses_plan() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let cfg = tiny_cfg(OrderingKind::Hbmc);
+        let session = SolveSession::from_matrix(&d.matrix, &cfg).unwrap();
+        assert_eq!(session.solves_completed(), 0);
+        let o1 = session.solve(&d.b).unwrap();
+        let o2 = session.solve(&d.b).unwrap();
+        assert_eq!(session.solves_completed(), 2);
+        assert_eq!(o1.report.solve_index, 0);
+        assert_eq!(o2.report.solve_index, 1);
+        assert!(o1.report.converged && o2.report.converged);
+        // Same plan, same rhs ⇒ bitwise-identical solutions.
+        assert_eq!(o1.x, o2.x);
+    }
+
+    #[test]
+    fn solve_many_matches_independent_solves() {
+        let d = suite::dataset("thermal2", Scale::Tiny);
+        let cfg = tiny_cfg(OrderingKind::Bmc);
+        let session = SolveSession::from_matrix(&d.matrix, &cfg).unwrap();
+        let b2: Vec<f64> = d.b.iter().map(|v| 2.0 * v).collect();
+        let b3: Vec<f64> = d.b.iter().map(|v| -0.5 * v).collect();
+        let batch = session.solve_many(&[d.b.clone(), b2.clone(), b3.clone()]).unwrap();
+        assert_eq!(batch.len(), 3);
+        for (rhs, out) in [&d.b, &b2, &b3].into_iter().zip(&batch) {
+            let single = session.solve(rhs).unwrap();
+            assert_eq!(single.x, out.x, "batched solve must be bitwise-identical");
+            assert_eq!(single.report.iterations, out.report.iterations);
+        }
+    }
+
+    #[test]
+    fn cache_hits_on_repeated_config_and_evicts_lru() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let mut cache = PlanCache::new(2);
+        let hb = tiny_cfg(OrderingKind::Hbmc);
+        let bm = tiny_cfg(OrderingKind::Bmc);
+        let mc = tiny_cfg(OrderingKind::Mc);
+
+        let (p1, hit1) = cache.get_or_build(&d.matrix, &hb).unwrap();
+        assert!(!hit1);
+        let (p2, hit2) = cache.get_or_build(&d.matrix, &hb).unwrap();
+        assert!(hit2, "same (matrix, config) must hit");
+        assert!(Arc::ptr_eq(&p1, &p2), "hit must return the same plan object");
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+
+        let _ = cache.get_or_build(&d.matrix, &bm).unwrap();
+        assert_eq!(cache.len(), 2);
+        // Third distinct key evicts the LRU entry — hbmc (last touched
+        // before bmc).
+        let _ = cache.get_or_build(&d.matrix, &mc).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        let (_, hbmc_again) = cache.get_or_build(&d.matrix, &hb).unwrap();
+        assert!(!hbmc_again, "evicted entry must rebuild");
+    }
+
+    #[test]
+    fn cache_distinguishes_matrices_and_params() {
+        let d1 = suite::dataset("g3_circuit", Scale::Tiny);
+        let d2 = suite::dataset("thermal2", Scale::Tiny);
+        let mut cache = PlanCache::new(8);
+        let cfg = tiny_cfg(OrderingKind::Hbmc);
+        let (_, h1) = cache.get_or_build(&d1.matrix, &cfg).unwrap();
+        let (_, h2) = cache.get_or_build(&d2.matrix, &cfg).unwrap();
+        assert!(!h1 && !h2, "different matrices must not collide");
+        let mut cfg16 = cfg.clone();
+        cfg16.bs = 16;
+        let (_, h3) = cache.get_or_build(&d1.matrix, &cfg16).unwrap();
+        assert!(!h3, "different bs must not collide");
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn cached_plan_does_not_leak_builders_tolerances() {
+        // rtol/max_iters are not part of the cache key (they don't affect
+        // plan content), so a hit must still solve with the *requester's*
+        // tolerances, not those of whoever built the plan.
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let mut cache = PlanCache::new(2);
+        let loose = SolverConfig { rtol: 1e-2, ..tiny_cfg(OrderingKind::Hbmc) };
+        let strict = SolverConfig { rtol: 1e-9, ..tiny_cfg(OrderingKind::Hbmc) };
+        let s_loose = cache.session(&d.matrix, &loose).unwrap();
+        let s_strict = cache.session(&d.matrix, &strict).unwrap();
+        assert_eq!(cache.hits(), 1, "structurally identical configs must share the plan");
+        assert!(Arc::ptr_eq(s_loose.plan(), s_strict.plan()));
+        let o_loose = s_loose.solve(&d.b).unwrap();
+        let o_strict = s_strict.solve(&d.b).unwrap();
+        assert!(o_loose.report.converged && o_strict.report.converged);
+        assert!(o_strict.report.final_relres < 1e-9, "strict session must honor its own rtol");
+        assert!(
+            o_strict.report.iterations > o_loose.report.iterations,
+            "tighter tolerance must not be satisfied by the loose builder's rtol"
+        );
+    }
+
+    #[test]
+    fn cached_session_solves_correctly() {
+        let d = suite::dataset("parabolic_fem", Scale::Tiny);
+        let cfg = tiny_cfg(OrderingKind::Hbmc);
+        let mut cache = PlanCache::new(4);
+        let s1 = cache.session(&d.matrix, &cfg).unwrap();
+        let s2 = cache.session(&d.matrix, &cfg).unwrap();
+        assert!(Arc::ptr_eq(s1.plan(), s2.plan()));
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+        let o1 = s1.solve(&d.b).unwrap();
+        let o2 = s2.solve(&d.b).unwrap();
+        assert!(o1.report.converged);
+        assert_eq!(o1.x, o2.x);
+    }
+}

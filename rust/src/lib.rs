@@ -1,35 +1,70 @@
 //! # hbmc — Hierarchical Block Multi-Color Ordering for the ICCG method
 //!
 //! Reproduction of Iwashita, Li & Fukaya (2019), *"Hierarchical Block
-//! Multi-Color Ordering: A New Parallel Ordering Method for Vectorization and
-//! Parallelization of the Sparse Triangular Solver in the ICCG Method"*.
+//! Multi-Color Ordering: A New Parallel Ordering Method for Vectorization
+//! and Parallelization of the Sparse Triangular Solver in the ICCG
+//! Method"*, grown into a servable two-phase solver.
 //!
-//! The crate is the **Layer-3 coordinator** of a three-layer rust + JAX +
-//! Pallas stack:
+//! ## Two-phase architecture (plan / execute)
+//!
+//! The paper's premise is that the expensive reordering + IC(0)
+//! factorization setup is amortized over many triangular sweeps. The crate
+//! makes that split explicit:
+//!
+//! * **Phase 1 — plan** ([`solver::plan::SolverPlan::build`]): ordering →
+//!   symmetric permutation → IC(0)/shifted-IC factorization → CSR/SELL
+//!   storage → kernel-path selection. The result is an immutable
+//!   [`SolverPlan`](solver::plan::SolverPlan) holding the permutation, the
+//!   permuted matrix, the factor triangles behind a unified
+//!   [`TriSolver`](solver::trisolve::TriSolver) trait object, and the
+//!   per-plan [`SetupStats`](solver::plan::SetupStats).
+//! * **Phase 2 — execute** ([`coordinator::session::SolveSession`]): a
+//!   session wraps one `Arc<SolverPlan>` with one persistent color-barrier
+//!   thread pool and serves `solve` / batched `solve_many` over arbitrarily
+//!   many right-hand sides. An LRU
+//!   [`PlanCache`](coordinator::session::PlanCache) keyed by (matrix
+//!   fingerprint, ordering, bs, w, spmv, …) removes re-setup across
+//!   requests entirely.
+//!
+//! [`coordinator::driver::solve`] remains as a thin one-shot wrapper
+//! (plan + session + single solve) for tests, tables and quick runs.
+//!
+//! ## Layer map
 //!
 //! * [`sparse`] — CSR / COO / SELL-C-σ storage and Matrix-Market IO,
 //! * [`gen`] — synthetic generators standing in for the paper's five test
 //!   matrices (see `DESIGN.md` §3 for the substitution rationale),
-//! * [`ordering`] — multi-color (MC), block multi-color (BMC) and the
-//!   paper's hierarchical block multi-color (HBMC) orderings, plus the
-//!   ordering-graph / ER-condition machinery used to prove equivalence,
+//! * [`ordering`] — MC / BMC / HBMC orderings, the ordering-graph / ER
+//!   machinery, and the [`order_matrix`](ordering::order_matrix) façade the
+//!   plan builder consumes,
 //! * [`factor`] — IC(0) and shifted-IC incomplete factorization,
-//! * [`solver`] — serial / MC / BMC / HBMC triangular solvers, CRS & SELL
-//!   SpMV and the preconditioned CG driver,
-//! * [`coordinator`] — color-barrier thread pool, scheduling, metrics and
-//!   paper-style reporting,
-//! * [`runtime`] — PJRT (xla crate) executor that loads the AOT-compiled
-//!   JAX/Pallas artifacts produced by `python/compile/aot.py`.
+//! * [`solver`] — triangular kernels behind the `TriSolver` trait, CRS &
+//!   SELL SpMV, the PCG loop, `SolverPlan` and the `IccgSolver` wrapper,
+//! * [`coordinator`] — color-barrier thread pool, sessions + plan cache,
+//!   metrics and paper-style reporting,
+//! * [`runtime`] — PJRT executor for the AOT JAX/Pallas artifacts
+//!   (`pjrt` cargo feature; stubbed offline).
 //!
 //! ## Quickstart
 //!
 //! ```no_run
+//! use std::sync::Arc;
 //! use hbmc::prelude::*;
 //!
 //! let a = hbmc::gen::suite::dataset("g3_circuit", Scale::Small).matrix;
 //! let cfg = SolverConfig { ordering: OrderingKind::Hbmc, bs: 32, w: 8, ..Default::default() };
-//! let report = hbmc::coordinator::driver::solve(&a, &vec![1.0; a.n()], &cfg).unwrap();
-//! println!("iters={} time={:.3}s", report.iterations, report.solve_seconds);
+//!
+//! // Phase 1: build the plan once (ordering + factorization + storage).
+//! let plan = Arc::new(SolverPlan::build(&a, &cfg).unwrap());
+//! println!("setup {:.3}s, {} colors", plan.setup.setup_seconds(), plan.setup.num_colors);
+//!
+//! // Phase 2: open a session and serve many right-hand sides.
+//! let session = SolveSession::new(plan);
+//! for scale in [1.0, 2.0, 3.0] {
+//!     let b = vec![scale; a.n()];
+//!     let out = session.solve(&b).unwrap();
+//!     println!("iters={} time={:.3}s", out.report.iterations, out.report.solve_seconds);
+//! }
 //! ```
 
 pub mod cli;
@@ -46,9 +81,12 @@ pub mod util;
 /// Convenient re-exports for downstream users.
 pub mod prelude {
     pub use crate::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
-    pub use crate::coordinator::driver::{solve, SolveReport};
+    pub use crate::coordinator::driver::{solve, solve_opts, PlanReport, SolveOptions, SolveReport};
+    pub use crate::coordinator::session::{PlanCache, SolveOutput, SolveSession};
     pub use crate::factor::ic0::IcFactor;
     pub use crate::ordering::{bmc::BmcOrdering, hbmc::HbmcOrdering, perm::Perm};
     pub use crate::solver::cg::CgResult;
+    pub use crate::solver::plan::{SetupStats, SolverPlan};
+    pub use crate::solver::trisolve::TriSolver;
     pub use crate::sparse::csr::Csr;
 }

@@ -2,7 +2,9 @@
 //!
 //! Commands:
 //!
-//! * `solve`        — run one ICCG solve on a named dataset
+//! * `solve`        — build one `SolverPlan`, open a `SolveSession`, run
+//!   one or `--repeat N` solves (setup reported once, per-solve metrics
+//!   per run); `--setup-only` stops after the plan
 //! * `table`        — regenerate a paper table (5.2 / 5.3 / simd / sell)
 //! * `convergence`  — Fig. 5.1 residual curves as CSV
 //! * `verify`       — ordering-equivalence + structural invariant checks
@@ -14,7 +16,9 @@ use anyhow::{bail, Context, Result};
 
 use hbmc::cli::Args;
 use hbmc::config::{NodePreset, OrderingKind, Scale, SolverConfig, SpmvKind};
-use hbmc::coordinator::{driver, experiments};
+use hbmc::coordinator::driver::SolveOptions;
+use hbmc::coordinator::experiments;
+use hbmc::coordinator::session::SolveSession;
 use hbmc::gen::suite;
 
 fn main() {
@@ -78,6 +82,7 @@ COMMANDS
   solve        --dataset <name> [--scale tiny|small|full] [--ordering natural|mc|bmc|hbmc]
                [--bs N] [--w N] [--spmv crs|sell] [--threads N] [--rtol X]
                [--shift X] [--node knl|bdw|skx] [--history] [--no-intrinsics]
+               [--repeat N] [--setup-only]   (plan built once, N solves on one session)
   table        --id 5.2|5.3|simd|sell [--node knl|bdw|skx] [--scale S] [--threads N]
   convergence  [--datasets a,b] [--scale S] [--out curves.csv]
   verify       [--scale S]          run ordering/equivalence invariants
@@ -91,6 +96,7 @@ DATASETS: thermal2, parabolic_fem, g3_circuit, audikw_1, ieej
 fn cmd_solve(args: &Args) -> Result<()> {
     let scale = Scale::parse(&args.flag_or("scale", "small"))?;
     let name = args.flag_or("dataset", "g3_circuit");
+    let repeat = args.usize_flag("repeat", 1)?.max(1);
     let d = suite::try_dataset(&name, scale)?;
     let cfg = cfg_from(args, d.shift)?;
     println!(
@@ -101,38 +107,73 @@ fn cmd_solve(args: &Args) -> Result<()> {
         d.nnz_per_row(),
         scale.name()
     );
-    let rep = driver::solve_opts(&d.matrix, &d.b, &cfg, args.switch("history"))?;
+
+    // Phase 1: plan + session (paid once, however many solves follow).
+    let session = SolveSession::from_matrix(&d.matrix, &cfg)?;
+    let plan = session.plan();
     println!(
-        "config={} threads={} kernel={}",
-        rep.config_label, cfg.threads, rep.setup.kernel_path
+        "config={} threads={} kernel={} trisolver={}",
+        cfg.label(),
+        cfg.threads,
+        plan.setup.kernel_path,
+        plan.trisolver.name()
     );
     println!(
-        "setup: ordering {:.3}s factor {:.3}s colors={} n_aug={} shift={}",
-        rep.setup.ordering_seconds,
-        rep.setup.factor_seconds,
-        rep.setup.num_colors,
-        rep.setup.n_aug,
-        rep.setup.shift_used
+        "setup: ordering {:.3}s factor {:.3}s storage {:.3}s colors={} n_aug={} shift={}",
+        plan.setup.ordering_seconds,
+        plan.setup.factor_seconds,
+        plan.setup.storage_seconds,
+        plan.setup.num_colors,
+        plan.setup.n_aug,
+        plan.setup.shift_used
     );
-    println!(
-        "solve: iters={} converged={} relres={:.3e} time={:.3}s",
-        rep.iterations, rep.converged, rep.final_relres, rep.solve_seconds
-    );
-    for (k, s) in &rep.kernel_seconds {
-        println!("  {k:<10} {s:.3}s");
-    }
     println!(
         "simd_ratio={:.1}% syncs/substitution={} sell_overhead={}",
-        100.0 * rep.simd_ratio,
-        rep.syncs_per_substitution,
-        rep.sell_overhead.map(|o| format!("{:.1}%", 100.0 * (o - 1.0))).unwrap_or("n/a".into())
+        100.0 * plan.ops.simd_ratio(),
+        plan.trisolver.syncs_per_sweep(),
+        plan.sell_overhead()
+            .map(|o| format!("{:.1}%", 100.0 * (o - 1.0)))
+            .unwrap_or("n/a".into())
     );
+    if args.switch("setup-only") {
+        return Ok(());
+    }
+
+    // Phase 2: N solves against the same plan.
+    let opts = SolveOptions { record_history: args.switch("history"), ..Default::default() };
+    let mut total_solve = 0.0;
+    let mut last: Option<hbmc::coordinator::session::SolveOutput> = None;
+    for k in 0..repeat {
+        let out = session.solve_with(&d.b, &opts)?;
+        let rep = &out.report;
+        println!(
+            "solve[{k}]: iters={} converged={} relres={:.3e} time={:.3}s",
+            rep.iterations, rep.converged, rep.final_relres, rep.solve_seconds
+        );
+        total_solve += rep.solve_seconds;
+        last = Some(out);
+    }
+    let out = last.expect("repeat >= 1");
+    for (k, s) in &out.report.kernel_seconds {
+        println!("  {k:<10} {s:.3}s");
+    }
     if args.switch("history") {
-        for (i, r) in rep.residual_history.iter().enumerate() {
+        for (i, r) in out.report.residual_history.iter().enumerate() {
             println!("iter {:>5}  relres {:.6e}", i + 1, r);
         }
     }
-    let err = rep.solution.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
+    if repeat > 1 {
+        let setup = plan.setup.setup_seconds();
+        println!(
+            "amortization: setup {:.3}s once + {repeat} solves {:.3}s total \
+             ({:.3}s/solve; setup share {:.1}%)",
+            setup,
+            total_solve,
+            total_solve / repeat as f64,
+            100.0 * setup / (setup + total_solve)
+        );
+    }
+    let err = out.x.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
     println!("max |x - 1| = {err:.3e} (rhs was A·1)");
     Ok(())
 }

@@ -5,6 +5,12 @@
 //! [`graph`] implements the *ordering graph* and the ER (equivalent
 //! reordering) condition of §3.1, eq. (3.5) — the tool used to prove that
 //! HBMC converges identically to BMC.
+//!
+//! [`order_matrix`] is the layer's façade for the plan builder
+//! ([`crate::solver::plan`]): one call that runs the requested ordering and
+//! returns the permutation plus the ordering-specific structure a
+//! triangular solver needs, so no upper layer re-implements the
+//! per-[`OrderingKind`](crate::config::OrderingKind) dispatch.
 
 pub mod blocking;
 pub mod bmc;
@@ -13,3 +19,125 @@ pub mod graph;
 pub mod hbmc;
 pub mod mc;
 pub mod perm;
+
+use crate::config::OrderingKind;
+use crate::sparse::csr::Csr;
+
+use self::bmc::bmc_order;
+use self::hbmc::{hbmc_order, HbmcOrdering};
+use self::mc::mc_order;
+use self::perm::Perm;
+
+/// Ordering-specific structure consumed by the triangular-solver layer.
+pub enum OrderedStructure {
+    /// Natural ordering: serial substitutions, no color structure.
+    Natural,
+    /// Nodal multi-color: rows of color `c` span `color_ptr[c]..color_ptr[c+1]`.
+    Mc { color_ptr: Vec<usize> },
+    /// Block multi-color: blocks of `bs` consecutive rows per color.
+    Bmc { color_ptr: Vec<usize>, bs: usize },
+    /// Hierarchical block multi-color: full ordering retained (the solver
+    /// extracts its `HbmcMeta` and the level-2 layout from it).
+    Hbmc(HbmcOrdering),
+}
+
+/// Product of the ordering phase: permutation into the (possibly padded)
+/// internal space, color count, and the solver-facing structure.
+pub struct OrderingPlan {
+    pub perm: Perm,
+    pub num_colors: usize,
+    pub structure: OrderedStructure,
+}
+
+/// Run the ordering `kind` on `a` (`bs`/`w` are the BMC/HBMC parameters;
+/// ignored where not applicable).
+pub fn order_matrix(a: &Csr, kind: OrderingKind, bs: usize, w: usize) -> OrderingPlan {
+    match kind {
+        OrderingKind::Natural => OrderingPlan {
+            perm: Perm::identity(a.n()),
+            num_colors: 1,
+            structure: OrderedStructure::Natural,
+        },
+        OrderingKind::Mc => {
+            let mc = mc_order(a);
+            OrderingPlan {
+                perm: mc.perm,
+                num_colors: mc.num_colors,
+                structure: OrderedStructure::Mc { color_ptr: mc.color_ptr },
+            }
+        }
+        OrderingKind::Bmc => {
+            let ord = bmc_order(a, bs);
+            OrderingPlan {
+                perm: ord.perm.clone(),
+                num_colors: ord.num_colors,
+                structure: OrderedStructure::Bmc { color_ptr: ord.color_ptr, bs: ord.bs },
+            }
+        }
+        OrderingKind::Hbmc => {
+            let ord = hbmc_order(a, bs, w);
+            OrderingPlan {
+                perm: ord.perm.clone(),
+                num_colors: ord.num_colors,
+                structure: OrderedStructure::Hbmc(ord),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod facade_tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    fn grid(nx: usize, ny: usize) -> Csr {
+        let idx = |x: usize, y: usize| y * nx + x;
+        let mut c = Coo::new(nx * ny);
+        for y in 0..ny {
+            for x in 0..nx {
+                c.push(idx(x, y), idx(x, y), 4.0);
+                if x + 1 < nx {
+                    c.push_sym(idx(x, y), idx(x + 1, y), -1.0);
+                }
+                if y + 1 < ny {
+                    c.push_sym(idx(x, y), idx(x, y + 1), -1.0);
+                }
+            }
+        }
+        c.to_csr()
+    }
+
+    #[test]
+    fn facade_matches_direct_calls() {
+        let a = grid(10, 8);
+        let natural = order_matrix(&a, OrderingKind::Natural, 4, 4);
+        assert!(natural.perm.is_identity());
+        assert_eq!(natural.num_colors, 1);
+        assert!(matches!(natural.structure, OrderedStructure::Natural));
+
+        let mc = order_matrix(&a, OrderingKind::Mc, 4, 4);
+        let direct = mc_order(&a);
+        assert_eq!(mc.num_colors, direct.num_colors);
+        assert_eq!(mc.perm.new_of_old_slice(), direct.perm.new_of_old_slice());
+
+        let bmc = order_matrix(&a, OrderingKind::Bmc, 4, 4);
+        let direct = bmc_order(&a, 4);
+        assert_eq!(bmc.num_colors, direct.num_colors);
+        match &bmc.structure {
+            OrderedStructure::Bmc { color_ptr, bs } => {
+                assert_eq!(*bs, 4);
+                assert_eq!(*color_ptr, direct.color_ptr);
+            }
+            _ => panic!("wrong structure"),
+        }
+
+        let h = order_matrix(&a, OrderingKind::Hbmc, 4, 4);
+        match &h.structure {
+            OrderedStructure::Hbmc(ord) => {
+                assert_eq!(ord.num_colors, h.num_colors);
+                assert_eq!(h.perm.new_of_old_slice(), ord.perm.new_of_old_slice());
+            }
+            _ => panic!("wrong structure"),
+        }
+    }
+}

@@ -2,7 +2,18 @@
 //! `python/compile/aot.py` (HLO **text** — see `/opt/xla-example/README.md`
 //! for why text, not serialized protos) and executes them on the XLA CPU
 //! client from the rust request path. Python never runs at solve time.
+//!
+//! The executor itself sits behind the `pjrt` cargo feature because it
+//! links the `xla` crate (and its native XLA extension). Default builds get
+//! [`pjrt_stub`]-backed types with the same API whose constructor returns a
+//! clean error, so every caller compiles unchanged offline.
 
 pub mod artifacts;
 pub mod hybrid;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;

@@ -1,0 +1,92 @@
+//! API-compatible stand-in for [`pjrt`](crate::runtime::pjrt) when the
+//! crate is built without the `pjrt` feature (the offline default). Every
+//! type and signature matches the real module; the only reachable entry
+//! point, [`PjrtRuntime::cpu`], reports that the executor is unavailable.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+/// Uninhabited marker: stub runtimes cannot be constructed, which lets the
+/// remaining methods type-check without a real implementation behind them.
+enum Never {}
+
+/// A PJRT CPU client plus compiled executables (stub).
+pub struct PjrtRuntime {
+    never: Never,
+}
+
+/// One compiled executable (stub).
+pub struct Executable {
+    never: Never,
+    /// Number of leaves in the result tuple.
+    pub num_outputs: usize,
+}
+
+/// Argument buffer for execution.
+pub enum Arg {
+    F64(Vec<f64>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl Arg {
+    pub fn f64(data: &[f64]) -> Arg {
+        Arg::F64(data.to_vec(), vec![data.len() as i64])
+    }
+
+    pub fn f64_shaped(data: &[f64], shape: &[i64]) -> Arg {
+        assert_eq!(shape.iter().product::<i64>() as usize, data.len());
+        Arg::F64(data.to_vec(), shape.to_vec())
+    }
+
+    pub fn i32(data: &[i32]) -> Arg {
+        Arg::I32(data.to_vec(), vec![data.len() as i64])
+    }
+
+    pub fn i32_shaped(data: &[i32], shape: &[i64]) -> Arg {
+        assert_eq!(shape.iter().product::<i64>() as usize, data.len());
+        Arg::I32(data.to_vec(), shape.to_vec())
+    }
+}
+
+impl PjrtRuntime {
+    /// Always fails: the crate was compiled without the `pjrt` feature.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        bail!(
+            "hbmc was built without the `pjrt` feature; rebuild with \
+             `cargo build --features pjrt` (requires the XLA extension) \
+             to run AOT artifacts"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn load_hlo_text(&self, _path: &Path, _num_outputs: usize) -> Result<Executable> {
+        match self.never {}
+    }
+}
+
+impl Executable {
+    pub fn run_f64(&self, _args: &[Arg]) -> Result<Vec<Vec<f64>>> {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = PjrtRuntime::cpu().err().expect("stub must not construct");
+        assert!(err.to_string().contains("pjrt"));
+    }
+
+    #[test]
+    fn arg_constructors_shape_check() {
+        assert!(matches!(Arg::f64(&[1.0, 2.0]), Arg::F64(v, s) if v.len() == 2 && s == vec![2]));
+        assert!(matches!(Arg::i32_shaped(&[1, 2, 3, 4], &[2, 2]), Arg::I32(_, s) if s == vec![2, 2]));
+    }
+}

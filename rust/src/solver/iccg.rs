@@ -1,185 +1,83 @@
-//! The assembled ICCG solver: ordering → IC(0) factorization → storage
-//! construction → PCG loop, for any [`OrderingKind`] × [`SpmvKind`]
-//! combination the paper evaluates.
+//! The assembled ICCG solver — a back-compat convenience wrapper that
+//! bundles a [`SolverPlan`] (phase 1: ordering → IC(0) factorization →
+//! storage) with a private [`Pool`] (phase 2: execution), for callers that
+//! want a single object per (matrix, config) pair.
+//!
+//! New code serving many right-hand sides should prefer the coordinator's
+//! [`SolveSession`](crate::coordinator::session::SolveSession), which adds
+//! reporting, batching (`solve_many`) and plan caching on top of the same
+//! two-phase split.
 
-use anyhow::{Context, Result};
-use std::time::Instant;
+use std::sync::Arc;
 
-use crate::config::{OrderingKind, SolverConfig, SpmvKind};
-use crate::coordinator::metrics::{per_iteration_ops, OpInputs, OpProfile};
+use anyhow::Result;
+
+use crate::config::SolverConfig;
+use crate::coordinator::metrics::OpProfile;
 use crate::coordinator::pool::Pool;
-use crate::factor::ic0::ic0_auto;
-use crate::factor::split::{SellTriFactors, TriFactors};
-use crate::ordering::bmc::bmc_order;
-use crate::ordering::hbmc::hbmc_order;
-use crate::ordering::mc::mc_order;
 use crate::ordering::perm::Perm;
-use crate::solver::cg::{pcg, CgResult};
-use crate::solver::precond::Preconditioner;
-use crate::solver::spmv::{spmv_crs, spmv_sell};
-use crate::solver::trisolve_hbmc::{select_path, HbmcMeta};
+use crate::solver::plan::{ExecOptions, SolverPlan};
 use crate::sparse::csr::Csr;
-use crate::sparse::sell::Sell;
 
-/// Setup-phase statistics (reported alongside solve results).
-#[derive(Debug, Clone)]
-pub struct SetupStats {
-    pub ordering_seconds: f64,
-    pub factor_seconds: f64,
-    pub num_colors: usize,
-    pub n_orig: usize,
-    /// Augmented dimension (≥ n_orig; includes HBMC/BMC dummy unknowns).
-    pub n_aug: usize,
-    pub nnz: usize,
-    /// Stored elements of the SpMV matrix in its chosen format.
-    pub spmv_elements: usize,
-    /// Stored elements of the substitution triangles in their chosen format.
-    pub tri_elements: usize,
-    /// Shift actually used by the factorization (≥ requested on auto-retry).
-    pub shift_used: f64,
-    /// Inner kernel selected for HBMC ("scalar", "avx2-w4", "avx512-w8").
-    pub kernel_path: &'static str,
-}
+pub use crate::solver::plan::{SetupStats, SolveOutcome};
 
 /// A fully-constructed solver, reusable across right-hand sides.
 pub struct IccgSolver {
-    pub cfg: SolverConfig,
-    perm: Perm,
-    a_perm: Csr,
-    sell_a: Option<Sell>,
-    precond: Preconditioner,
+    plan: Arc<SolverPlan>,
     pool: Pool,
-    pub setup: SetupStats,
-    /// Analytic per-iteration op profile (SIMD-ratio metric).
-    pub ops: OpProfile,
-}
-
-/// Solution + iteration data, mapped back to the original ordering.
-#[derive(Debug, Clone)]
-pub struct SolveOutcome {
-    pub x: Vec<f64>,
-    pub cg: CgResult,
-    /// Thread synchronizations per substitution sweep (= n_c − 1).
-    pub syncs_per_substitution: usize,
 }
 
 impl IccgSolver {
     /// Build the solver for matrix `a` under configuration `cfg`.
     pub fn new(a: &Csr, cfg: &SolverConfig) -> Result<IccgSolver> {
-        cfg.validate()?;
-        let pool = Pool::new(cfg.threads);
-        let n_orig = a.n();
+        Ok(IccgSolver::from_plan(Arc::new(SolverPlan::build(a, cfg)?)))
+    }
 
-        // --- Ordering ---------------------------------------------------
-        let t0 = Instant::now();
-        let (perm, num_colors, structure): (Perm, usize, Structure) = match cfg.ordering {
-            OrderingKind::Natural => (Perm::identity(n_orig), 1, Structure::Natural),
-            OrderingKind::Mc => {
-                let mc = mc_order(a);
-                (mc.perm.clone(), mc.num_colors, Structure::Mc { color_ptr: mc.color_ptr })
-            }
-            OrderingKind::Bmc => {
-                let ord = bmc_order(a, cfg.bs);
-                (
-                    ord.perm.clone(),
-                    ord.num_colors,
-                    Structure::Bmc { color_ptr: ord.color_ptr, bs: ord.bs },
-                )
-            }
-            OrderingKind::Hbmc => {
-                let ord = hbmc_order(a, cfg.bs, cfg.w);
-                let meta = HbmcMeta::from_ordering(&ord);
-                (ord.perm.clone(), ord.num_colors, Structure::Hbmc { meta })
-            }
-        };
-        let a_perm = a.permute_sym(&perm);
-        let ordering_seconds = t0.elapsed().as_secs_f64();
+    /// Wrap an existing (possibly cached/shared) plan with a fresh pool.
+    pub fn from_plan(plan: Arc<SolverPlan>) -> IccgSolver {
+        let pool = Pool::new(plan.cfg.threads);
+        IccgSolver { plan, pool }
+    }
 
-        // --- Factorization ------------------------------------------------
-        let t1 = Instant::now();
-        let factor = ic0_auto(&a_perm, cfg.shift).context("IC(0) factorization failed")?;
-        let shift_used = factor.shift;
-        let tri = TriFactors::from_ic(&factor);
-        let factor_seconds = t1.elapsed().as_secs_f64();
+    /// The underlying immutable plan.
+    pub fn plan(&self) -> &Arc<SolverPlan> {
+        &self.plan
+    }
 
-        // --- Solver storage -----------------------------------------------
-        let tri_nnz = tri.lower.nnz() + tri.upper.nnz();
-        let mut kernel_path = "n/a";
-        let (precond, tri_elements) = match structure {
-            Structure::Natural => (Preconditioner::Serial(tri), tri_nnz),
-            Structure::Mc { color_ptr } => (Preconditioner::Mc { tri, color_ptr }, tri_nnz),
-            Structure::Bmc { color_ptr, bs } => {
-                (Preconditioner::Bmc { tri, color_ptr, bs }, tri_nnz)
-            }
-            Structure::Hbmc { meta } => {
-                let sell = SellTriFactors::from_tri(&tri, cfg.w);
-                let stored = sell.stored_elements();
-                let path = select_path(cfg.w, cfg.use_intrinsics);
-                kernel_path = path.name();
-                (Preconditioner::Hbmc { meta, sell, path }, stored)
-            }
-        };
+    /// The configuration the plan was built under.
+    pub fn cfg(&self) -> &SolverConfig {
+        &self.plan.cfg
+    }
 
-        let sell_a = match cfg.spmv {
-            SpmvKind::Crs => None,
-            SpmvKind::Sell => Some(match cfg.sell_sigma {
-                Some(sigma) => Sell::from_csr_sigma(&a_perm, cfg.w, sigma),
-                None => Sell::from_csr(&a_perm, cfg.w),
-            }),
-        };
-        let spmv_elements = sell_a
-            .as_ref()
-            .map(|s| s.stored_elements())
-            .unwrap_or_else(|| a_perm.nnz());
+    /// Setup-phase statistics.
+    pub fn setup(&self) -> &SetupStats {
+        &self.plan.setup
+    }
 
-        let setup = SetupStats {
-            ordering_seconds,
-            factor_seconds,
-            num_colors,
-            n_orig,
-            n_aug: a_perm.n(),
-            nnz: a_perm.nnz(),
-            spmv_elements,
-            tri_elements,
-            shift_used,
-            kernel_path,
-        };
-
-        let ops = per_iteration_ops(
-            cfg,
-            &OpInputs {
-                n: a_perm.n(),
-                nnz: a_perm.nnz(),
-                tri_nnz,
-                sell_tri_elements: matches!(cfg.ordering, OrderingKind::Hbmc)
-                    .then_some(tri_elements),
-                sell_a_elements: sell_a.as_ref().map(|s| s.stored_elements()),
-            },
-        );
-
-        Ok(IccgSolver { cfg: cfg.clone(), perm, a_perm, sell_a, precond, pool, setup, ops })
+    /// Analytic per-iteration op profile (SIMD-ratio metric).
+    pub fn ops(&self) -> &OpProfile {
+        &self.plan.ops
     }
 
     /// Augmented (internal) dimension.
     pub fn n_aug(&self) -> usize {
-        self.a_perm.n()
+        self.plan.n_aug()
     }
 
     /// The permutation from original to internal (reordered, padded) space.
     pub fn perm(&self) -> &Perm {
-        &self.perm
+        &self.plan.perm
     }
 
     /// The reordered matrix (for tests and the PJRT hybrid path).
     pub fn a_perm(&self) -> &Csr {
-        &self.a_perm
+        &self.plan.a_perm
     }
 
     /// Apply the preconditioner in the *internal* ordering (tests, hybrid
     /// PJRT cross-checks).
     pub fn apply_precond_internal(&self, r: &[f64], z: &mut [f64]) {
-        let mut scratch = vec![0.0; self.n_aug()];
-        self.precond.apply(r, &mut scratch, z, &self.pool);
+        self.plan.apply_precond_internal(r, z, &self.pool);
     }
 
     /// Solve `A x = b` (original ordering); `b.len() == n_orig`.
@@ -190,61 +88,15 @@ impl IccgSolver {
     /// Solve, optionally recording the per-iteration residual history
     /// (Fig. 5.1 data).
     pub fn solve_opts(&self, b: &[f64], record_history: bool) -> Result<SolveOutcome> {
-        anyhow::ensure!(b.len() == self.setup.n_orig, "rhs dimension mismatch");
-        let n = self.n_aug();
-        let b_perm = self.perm.apply_vec(b, 0.0);
-        let mut x_perm = vec![0.0f64; n];
-        let mut scratch = vec![0.0f64; n];
-
-        let pool = &self.pool;
-        let a_perm = &self.a_perm;
-        let sell_a = &self.sell_a;
-        let precond = &self.precond;
-        pool.reset_sync_count();
-
-        let mut spmv = |x: &[f64], y: &mut [f64], times: &mut crate::util::timer::KernelTimes| {
-            let t = Instant::now();
-            match sell_a {
-                Some(s) => spmv_sell(s, x, y, pool),
-                None => spmv_crs(a_perm, x, y, pool),
-            }
-            times.add("spmv", t.elapsed());
-        };
-        let mut prec = |r: &[f64], z: &mut [f64], times: &mut crate::util::timer::KernelTimes| {
-            let t = Instant::now();
-            precond.apply(r, &mut scratch, z, pool);
-            times.add("trisolve", t.elapsed());
-        };
-
-        let cg = pcg(
-            &mut spmv,
-            &mut prec,
-            &b_perm,
-            &mut x_perm,
-            self.cfg.rtol,
-            self.cfg.max_iters,
-            record_history,
-        );
-
-        let x = self.perm.unapply_vec(&x_perm);
-        Ok(SolveOutcome {
-            x,
-            cg,
-            syncs_per_substitution: self.setup.num_colors.saturating_sub(1),
-        })
+        self.plan
+            .execute(&self.pool, b, &ExecOptions { record_history, ..Default::default() })
     }
-}
-
-enum Structure {
-    Natural,
-    Mc { color_ptr: Vec<usize> },
-    Bmc { color_ptr: Vec<usize>, bs: usize },
-    Hbmc { meta: HbmcMeta },
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{OrderingKind, SpmvKind};
     use crate::sparse::coo::Coo;
 
     fn laplace2d(nx: usize, ny: usize) -> Csr {
@@ -341,7 +193,7 @@ mod tests {
         let os = sell.solve(&b).unwrap();
         assert_eq!(oc.cg.iterations, os.cg.iterations);
         assert!(crate::util::max_abs_diff(&oc.x, &os.x) < 1e-8);
-        assert!(sell.setup.spmv_elements >= crs.setup.spmv_elements);
+        assert!(sell.setup().spmv_elements >= crs.setup().spmv_elements);
     }
 
     #[test]
@@ -369,12 +221,27 @@ mod tests {
         let a = laplace2d(12, 12);
         let cfg = SolverConfig { ordering: OrderingKind::Hbmc, bs: 4, w: 4, ..Default::default() };
         let s = IccgSolver::new(&a, &cfg).unwrap();
-        assert_eq!(s.setup.n_orig, 144);
-        assert!(s.setup.n_aug >= 144);
-        assert!(s.setup.num_colors >= 2);
-        assert!(s.setup.tri_elements > 0);
-        assert!(s.ops.simd_ratio() > 0.0);
-        assert_ne!(s.setup.kernel_path, "n/a");
+        assert_eq!(s.setup().n_orig, 144);
+        assert!(s.setup().n_aug >= 144);
+        assert!(s.setup().num_colors >= 2);
+        assert!(s.setup().tri_elements > 0);
+        assert!(s.ops().simd_ratio() > 0.0);
+        assert_ne!(s.setup().kernel_path, "n/a");
+    }
+
+    #[test]
+    fn shared_plan_backs_multiple_solvers() {
+        let a = laplace2d(10, 10);
+        let cfg = SolverConfig { ordering: OrderingKind::Bmc, bs: 4, w: 4, ..Default::default() };
+        let plan = Arc::new(SolverPlan::build(&a, &cfg).unwrap());
+        let s1 = IccgSolver::from_plan(plan.clone());
+        let s2 = IccgSolver::from_plan(plan.clone());
+        assert!(Arc::ptr_eq(s1.plan(), s2.plan()));
+        let b = rhs_for_ones(&a);
+        let o1 = s1.solve(&b).unwrap();
+        let o2 = s2.solve(&b).unwrap();
+        assert_eq!(o1.cg.iterations, o2.cg.iterations);
+        assert_eq!(o1.x, o2.x);
     }
 
     #[test]

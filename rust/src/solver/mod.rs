@@ -1,13 +1,17 @@
-//! Solver kernels: triangular substitutions (serial / MC / BMC / HBMC),
-//! sparse matrix-vector products (CRS & SELL), BLAS-1 helpers, the
-//! preconditioned CG iteration and the assembled ICCG solver.
+//! Solver kernels and the two-phase solve pipeline: triangular
+//! substitutions (serial / MC / BMC / HBMC) behind the unified
+//! [`trisolve::TriSolver`] trait, sparse matrix-vector products (CRS &
+//! SELL), BLAS-1 helpers, the preconditioned CG iteration, the immutable
+//! setup product [`plan::SolverPlan`] and the assembled [`iccg::IccgSolver`]
+//! convenience wrapper.
 
 pub mod blas1;
 pub mod cg;
 pub mod gs;
 pub mod iccg;
-pub mod precond;
+pub mod plan;
 pub mod spmv;
+pub mod trisolve;
 pub mod trisolve_bmc;
 pub mod trisolve_hbmc;
 pub mod trisolve_mc;

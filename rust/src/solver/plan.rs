@@ -1,0 +1,384 @@
+//! Phase 1 of the two-phase solver: [`SolverPlan`] — the immutable product
+//! of setup (permutation, permuted CSR, IC(0) factors, SELL structures,
+//! selected kernel path) for one (matrix, configuration) pair.
+//!
+//! The paper's premise is that HBMC's reordering + factorization cost is
+//! amortized over many triangular sweeps; a plan is the unit of that
+//! amortization. Build it once with [`SolverPlan::build`], then run
+//! arbitrarily many right-hand sides through [`SolverPlan::execute`] (or,
+//! one level up, through a [`SolveSession`](crate::coordinator::session::SolveSession),
+//! which owns the thread pool and the reporting).
+//!
+//! Plans are `Send + Sync` and typically shared behind an `Arc` — the
+//! coordinator's `PlanCache` hands the same plan to any number of
+//! sessions.
+
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{OrderingKind, SolverConfig, SpmvKind};
+use crate::coordinator::metrics::{per_iteration_ops, OpInputs, OpProfile};
+use crate::coordinator::pool::Pool;
+use crate::factor::ic0::ic0_auto;
+use crate::factor::split::{SellTriFactors, TriFactors};
+use crate::ordering::perm::Perm;
+use crate::ordering::{order_matrix, OrderedStructure};
+use crate::solver::cg::{pcg, CgResult};
+use crate::solver::spmv::{spmv_crs, spmv_sell};
+use crate::solver::trisolve::{
+    BmcTriSolver, HbmcTriSolver, McTriSolver, SerialTriSolver, TriSolver,
+};
+use crate::solver::trisolve_hbmc::{select_path, HbmcMeta};
+use crate::sparse::csr::Csr;
+use crate::sparse::sell::Sell;
+
+/// Process-wide count of plan constructions — lets tests and the serving
+/// layer assert amortization ("8 solves, exactly one setup").
+static PLAN_BUILDS: AtomicU64 = AtomicU64::new(0);
+
+/// Number of [`SolverPlan::build`] calls since process start.
+pub fn plans_built() -> u64 {
+    PLAN_BUILDS.load(AtomicOrdering::SeqCst)
+}
+
+/// Setup-phase statistics (per-plan; reported once, not per solve).
+#[derive(Debug, Clone)]
+pub struct SetupStats {
+    pub ordering_seconds: f64,
+    pub factor_seconds: f64,
+    /// SELL conversions + solver-structure assembly.
+    pub storage_seconds: f64,
+    pub num_colors: usize,
+    pub n_orig: usize,
+    /// Augmented dimension (≥ n_orig; includes HBMC/BMC dummy unknowns).
+    pub n_aug: usize,
+    pub nnz: usize,
+    /// Stored elements of the SpMV matrix in its chosen format.
+    pub spmv_elements: usize,
+    /// Stored elements of the substitution triangles in their chosen format.
+    pub tri_elements: usize,
+    /// Shift actually used by the factorization (≥ requested on auto-retry).
+    pub shift_used: f64,
+    /// Inner kernel selected for HBMC ("scalar", "avx2-w4", "avx512-w8").
+    pub kernel_path: &'static str,
+}
+
+impl SetupStats {
+    /// Total setup wall time (ordering + factorization + storage).
+    pub fn setup_seconds(&self) -> f64 {
+        self.ordering_seconds + self.factor_seconds + self.storage_seconds
+    }
+}
+
+/// Per-solve execution options (everything else is baked into the plan).
+#[derive(Debug, Clone, Default)]
+pub struct ExecOptions {
+    /// Record the per-iteration residual history (Fig. 5.1 data).
+    pub record_history: bool,
+    /// Override the plan's convergence tolerance for this solve.
+    pub rtol: Option<f64>,
+    /// Override the plan's iteration cap for this solve.
+    pub max_iters: Option<usize>,
+}
+
+/// Solution + iteration data, mapped back to the original ordering.
+#[derive(Debug, Clone)]
+pub struct SolveOutcome {
+    pub x: Vec<f64>,
+    pub cg: CgResult,
+    /// Thread synchronizations per substitution sweep (= n_c − 1).
+    pub syncs_per_substitution: usize,
+}
+
+/// The immutable product of the setup phase; see module docs.
+pub struct SolverPlan {
+    pub cfg: SolverConfig,
+    /// Fingerprint of the *original* matrix (plan-cache key component).
+    pub matrix_fingerprint: u64,
+    /// Original → internal (reordered, padded) permutation.
+    pub perm: Perm,
+    /// The reordered matrix.
+    pub a_perm: Csr,
+    /// SELL form of the reordered matrix when `cfg.spmv` is SELL.
+    pub sell_a: Option<Sell>,
+    /// The ordering-specific substitution engine.
+    pub trisolver: Arc<dyn TriSolver>,
+    pub setup: SetupStats,
+    /// Analytic per-iteration op profile (SIMD-ratio metric).
+    pub ops: OpProfile,
+}
+
+impl SolverPlan {
+    /// Run the full setup phase for matrix `a` under `cfg`: ordering →
+    /// IC(0) factorization → storage construction → kernel selection.
+    pub fn build(a: &Csr, cfg: &SolverConfig) -> Result<SolverPlan> {
+        cfg.validate()?;
+        let n_orig = a.n();
+        let matrix_fingerprint = a.fingerprint();
+
+        // --- Ordering ---------------------------------------------------
+        let t0 = Instant::now();
+        let ordering = order_matrix(a, cfg.ordering, cfg.bs, cfg.w);
+        let a_perm = a.permute_sym(&ordering.perm);
+        let ordering_seconds = t0.elapsed().as_secs_f64();
+
+        // --- Factorization ----------------------------------------------
+        let t1 = Instant::now();
+        let factor = ic0_auto(&a_perm, cfg.shift).context("IC(0) factorization failed")?;
+        let shift_used = factor.shift;
+        let tri = TriFactors::from_ic(&factor);
+        let factor_seconds = t1.elapsed().as_secs_f64();
+
+        // --- Solver storage ----------------------------------------------
+        let t2 = Instant::now();
+        let tri_nnz = tri.lower.nnz() + tri.upper.nnz();
+        let trisolver: Arc<dyn TriSolver> = match ordering.structure {
+            OrderedStructure::Natural => Arc::new(SerialTriSolver::new(tri)),
+            OrderedStructure::Mc { color_ptr } => Arc::new(McTriSolver::new(tri, color_ptr)),
+            OrderedStructure::Bmc { color_ptr, bs } => {
+                Arc::new(BmcTriSolver::new(tri, color_ptr, bs))
+            }
+            OrderedStructure::Hbmc(ord) => {
+                let sell = SellTriFactors::from_tri(&tri, cfg.w);
+                let path = select_path(cfg.w, cfg.use_intrinsics);
+                Arc::new(HbmcTriSolver::new(HbmcMeta::from_ordering(&ord), sell, path))
+            }
+        };
+
+        let sell_a = match cfg.spmv {
+            SpmvKind::Crs => None,
+            SpmvKind::Sell => Some(match cfg.sell_sigma {
+                Some(sigma) => Sell::from_csr_sigma(&a_perm, cfg.w, sigma),
+                None => Sell::from_csr(&a_perm, cfg.w),
+            }),
+        };
+        let spmv_elements = sell_a
+            .as_ref()
+            .map(|s| s.stored_elements())
+            .unwrap_or_else(|| a_perm.nnz());
+        let storage_seconds = t2.elapsed().as_secs_f64();
+
+        let setup = SetupStats {
+            ordering_seconds,
+            factor_seconds,
+            storage_seconds,
+            num_colors: ordering.num_colors,
+            n_orig,
+            n_aug: a_perm.n(),
+            nnz: a_perm.nnz(),
+            spmv_elements,
+            tri_elements: trisolver.tri_elements(),
+            shift_used,
+            kernel_path: trisolver.kernel_path(),
+        };
+
+        let ops = per_iteration_ops(
+            cfg,
+            &OpInputs {
+                n: a_perm.n(),
+                nnz: a_perm.nnz(),
+                tri_nnz,
+                sell_tri_elements: matches!(cfg.ordering, OrderingKind::Hbmc)
+                    .then(|| trisolver.tri_elements()),
+                sell_a_elements: sell_a.as_ref().map(|s| s.stored_elements()),
+            },
+        );
+
+        PLAN_BUILDS.fetch_add(1, AtomicOrdering::SeqCst);
+        Ok(SolverPlan {
+            cfg: cfg.clone(),
+            matrix_fingerprint,
+            perm: ordering.perm,
+            a_perm,
+            sell_a,
+            trisolver,
+            setup,
+            ops,
+        })
+    }
+
+    /// Original problem dimension.
+    pub fn n_orig(&self) -> usize {
+        self.setup.n_orig
+    }
+
+    /// Augmented (internal) dimension.
+    pub fn n_aug(&self) -> usize {
+        self.a_perm.n()
+    }
+
+    /// SELL processed-element overhead vs CRS nnz (§5.2.2), if SELL used.
+    pub fn sell_overhead(&self) -> Option<f64> {
+        match self.cfg.spmv {
+            SpmvKind::Sell => Some(self.setup.spmv_elements as f64 / self.setup.nnz as f64),
+            SpmvKind::Crs => None,
+        }
+    }
+
+    /// Apply the preconditioner in the *internal* ordering (tests, hybrid
+    /// PJRT cross-checks).
+    pub fn apply_precond_internal(&self, r: &[f64], z: &mut [f64], pool: &Pool) {
+        let mut scratch = vec![0.0; self.n_aug()];
+        self.trisolver.apply(r, &mut scratch, z, pool);
+    }
+
+    /// Phase 2: solve `A x = b` (original ordering, `b.len() == n_orig`)
+    /// on a caller-provided pool. Everything allocated here is per-solve;
+    /// the plan itself is never mutated, so concurrent `execute` calls on
+    /// distinct pools are safe.
+    pub fn execute(&self, pool: &Pool, b: &[f64], opts: &ExecOptions) -> Result<SolveOutcome> {
+        anyhow::ensure!(
+            b.len() == self.setup.n_orig,
+            "rhs dimension mismatch: got {}, matrix has {}",
+            b.len(),
+            self.setup.n_orig
+        );
+        let n = self.n_aug();
+        let b_perm = self.perm.apply_vec(b, 0.0);
+        let mut x_perm = vec![0.0f64; n];
+        let mut scratch = vec![0.0f64; n];
+
+        let a_perm = &self.a_perm;
+        let sell_a = &self.sell_a;
+        let trisolver = &self.trisolver;
+        pool.reset_sync_count();
+
+        let mut spmv = |x: &[f64], y: &mut [f64], times: &mut crate::util::timer::KernelTimes| {
+            let t = Instant::now();
+            match sell_a {
+                Some(s) => spmv_sell(s, x, y, pool),
+                None => spmv_crs(a_perm, x, y, pool),
+            }
+            times.add("spmv", t.elapsed());
+        };
+        let mut prec = |r: &[f64], z: &mut [f64], times: &mut crate::util::timer::KernelTimes| {
+            let t = Instant::now();
+            trisolver.apply(r, &mut scratch, z, pool);
+            times.add("trisolve", t.elapsed());
+        };
+
+        let cg = pcg(
+            &mut spmv,
+            &mut prec,
+            &b_perm,
+            &mut x_perm,
+            opts.rtol.unwrap_or(self.cfg.rtol),
+            opts.max_iters.unwrap_or(self.cfg.max_iters),
+            opts.record_history,
+        );
+
+        let x = self.perm.unapply_vec(&x_perm);
+        Ok(SolveOutcome {
+            x,
+            cg,
+            syncs_per_substitution: self.trisolver.syncs_per_sweep(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    fn laplace2d(nx: usize, ny: usize) -> Csr {
+        let idx = |x: usize, y: usize| y * nx + x;
+        let mut c = Coo::new(nx * ny);
+        for y in 0..ny {
+            for x in 0..nx {
+                c.push(idx(x, y), idx(x, y), 4.0);
+                if x + 1 < nx {
+                    c.push_sym(idx(x, y), idx(x + 1, y), -1.0);
+                }
+                if y + 1 < ny {
+                    c.push_sym(idx(x, y), idx(x, y + 1), -1.0);
+                }
+            }
+        }
+        c.to_csr()
+    }
+
+    fn rhs_for_ones(a: &Csr) -> Vec<f64> {
+        let mut b = vec![0.0; a.n()];
+        a.mul_vec(&vec![1.0; a.n()], &mut b);
+        b
+    }
+
+    #[test]
+    fn build_populates_setup_and_counts_builds() {
+        let a = laplace2d(12, 12);
+        let cfg = SolverConfig { ordering: OrderingKind::Hbmc, bs: 4, w: 4, ..Default::default() };
+        let before = plans_built();
+        let plan = SolverPlan::build(&a, &cfg).unwrap();
+        assert_eq!(plans_built(), before + 1);
+        assert_eq!(plan.n_orig(), 144);
+        assert!(plan.n_aug() >= 144);
+        assert!(plan.setup.num_colors >= 2);
+        assert!(plan.setup.tri_elements > 0);
+        assert!(plan.setup.setup_seconds() > 0.0);
+        assert!(plan.ops.simd_ratio() > 0.0);
+        assert_ne!(plan.setup.kernel_path, "n/a");
+        assert_eq!(plan.matrix_fingerprint, a.fingerprint());
+    }
+
+    #[test]
+    fn one_plan_serves_many_rhs() {
+        let a = laplace2d(16, 12);
+        let cfg = SolverConfig {
+            ordering: OrderingKind::Bmc,
+            bs: 4,
+            w: 4,
+            spmv: SpmvKind::Crs,
+            rtol: 1e-9,
+            ..Default::default()
+        };
+        let plan = SolverPlan::build(&a, &cfg).unwrap();
+        let pool = Pool::new(1);
+        let b = rhs_for_ones(&a);
+        let o1 = plan.execute(&pool, &b, &ExecOptions::default()).unwrap();
+        assert!(o1.cg.converged);
+        assert!(crate::util::max_abs_diff(&o1.x, &vec![1.0; a.n()]) < 1e-6);
+        // Scaled rhs → scaled solution, same plan, no rebuild.
+        let before = plans_built();
+        let b3: Vec<f64> = b.iter().map(|v| 3.0 * v).collect();
+        let o3 = plan.execute(&pool, &b3, &ExecOptions::default()).unwrap();
+        assert_eq!(plans_built(), before);
+        assert!(crate::util::max_abs_diff(&o3.x, &vec![3.0; a.n()]) < 1e-5);
+    }
+
+    #[test]
+    fn exec_options_override_tolerances() {
+        let a = laplace2d(14, 14);
+        let cfg = SolverConfig {
+            ordering: OrderingKind::Hbmc,
+            bs: 4,
+            w: 4,
+            rtol: 1e-10,
+            ..Default::default()
+        };
+        let plan = SolverPlan::build(&a, &cfg).unwrap();
+        let pool = Pool::new(1);
+        let b = rhs_for_ones(&a);
+        let strict = plan.execute(&pool, &b, &ExecOptions::default()).unwrap();
+        let loose = plan
+            .execute(&pool, &b, &ExecOptions { rtol: Some(1e-3), ..Default::default() })
+            .unwrap();
+        assert!(loose.cg.iterations < strict.cg.iterations);
+        let capped = plan
+            .execute(&pool, &b, &ExecOptions { max_iters: Some(2), ..Default::default() })
+            .unwrap();
+        assert_eq!(capped.cg.iterations, 2);
+        assert!(!capped.cg.converged);
+    }
+
+    #[test]
+    fn execute_rejects_wrong_rhs_dimension() {
+        let a = laplace2d(8, 8);
+        let plan = SolverPlan::build(&a, &SolverConfig::default()).unwrap();
+        let pool = Pool::new(1);
+        assert!(plan.execute(&pool, &[1.0, 2.0], &ExecOptions::default()).is_err());
+    }
+}

@@ -1,0 +1,331 @@
+//! The unified triangular-solver abstraction: one [`TriSolver`] trait with
+//! four ordering-specific implementations wrapping the free-function kernel
+//! paths (`trisolve_serial` / `trisolve_mc` / `trisolve_bmc` /
+//! `trisolve_hbmc`), so the CG loop, the plan builder and the benches all
+//! dispatch through one object instead of per-ordering match arms.
+//!
+//! Implementations are immutable once built and `Send + Sync`: a plan
+//! holding one behind an `Arc` can serve many concurrent sessions.
+
+use crate::coordinator::pool::Pool;
+use crate::factor::split::{SellTriFactors, TriFactors};
+use crate::solver::trisolve_hbmc::{HbmcMeta, KernelPath};
+use crate::solver::{trisolve_bmc, trisolve_hbmc, trisolve_mc, trisolve_serial};
+
+/// An IC(0) substitution engine `z = (L Lᵀ)⁻¹ r` specialized to one
+/// parallel ordering.
+pub trait TriSolver: Send + Sync {
+    /// Forward substitution `L y = r`.
+    fn forward(&self, r: &[f64], y: &mut [f64], pool: &Pool);
+
+    /// Backward substitution `Lᵀ z = y`.
+    fn backward(&self, y: &[f64], z: &mut [f64], pool: &Pool);
+
+    /// Colors in the ordering (1 when unordered/serial).
+    fn num_colors(&self) -> usize;
+
+    /// Thread synchronizations per substitution sweep (= `n_c − 1`).
+    fn syncs_per_sweep(&self) -> usize {
+        self.num_colors().saturating_sub(1)
+    }
+
+    /// Inner kernel identifier ("scalar", "avx2-w4", "avx512-w8"); "n/a"
+    /// for paths without a selectable kernel.
+    fn kernel_path(&self) -> &'static str {
+        "n/a"
+    }
+
+    /// Stored elements of both substitution triangles in their chosen
+    /// format (SELL padding included for HBMC) — feeds the §5.2.2 metric.
+    fn tri_elements(&self) -> usize;
+
+    /// Strategy name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Full preconditioner application `z = (L Lᵀ)⁻¹ r`; `scratch` holds
+    /// the forward-substitution result.
+    fn apply(&self, r: &[f64], scratch: &mut [f64], z: &mut [f64], pool: &Pool) {
+        self.forward(r, scratch, pool);
+        self.backward(scratch, z, pool);
+    }
+}
+
+/// Identity "preconditioner" (plain CG) — diagnostic baseline.
+pub struct IdentityPrecond;
+
+impl TriSolver for IdentityPrecond {
+    fn forward(&self, r: &[f64], y: &mut [f64], _pool: &Pool) {
+        y.copy_from_slice(r);
+    }
+
+    fn backward(&self, y: &[f64], z: &mut [f64], _pool: &Pool) {
+        z.copy_from_slice(y);
+    }
+
+    fn num_colors(&self) -> usize {
+        1
+    }
+
+    fn tri_elements(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+}
+
+/// Serial substitutions under natural ordering (also the correctness
+/// oracle the parallel variants are tested against).
+pub struct SerialTriSolver {
+    pub tri: TriFactors,
+}
+
+impl SerialTriSolver {
+    pub fn new(tri: TriFactors) -> SerialTriSolver {
+        SerialTriSolver { tri }
+    }
+}
+
+impl TriSolver for SerialTriSolver {
+    fn forward(&self, r: &[f64], y: &mut [f64], _pool: &Pool) {
+        trisolve_serial::forward(&self.tri, r, y);
+    }
+
+    fn backward(&self, y: &[f64], z: &mut [f64], _pool: &Pool) {
+        trisolve_serial::backward(&self.tri, y, z);
+    }
+
+    fn num_colors(&self) -> usize {
+        1
+    }
+
+    fn tri_elements(&self) -> usize {
+        self.tri.lower.nnz() + self.tri.upper.nnz()
+    }
+
+    fn name(&self) -> &'static str {
+        "ic0-serial"
+    }
+}
+
+/// Nodal multi-color substitutions (the paper's "MC" baseline).
+pub struct McTriSolver {
+    pub tri: TriFactors,
+    pub color_ptr: Vec<usize>,
+}
+
+impl McTriSolver {
+    pub fn new(tri: TriFactors, color_ptr: Vec<usize>) -> McTriSolver {
+        McTriSolver { tri, color_ptr }
+    }
+}
+
+impl TriSolver for McTriSolver {
+    fn forward(&self, r: &[f64], y: &mut [f64], pool: &Pool) {
+        trisolve_mc::forward(&self.tri, &self.color_ptr, r, y, pool);
+    }
+
+    fn backward(&self, y: &[f64], z: &mut [f64], pool: &Pool) {
+        trisolve_mc::backward(&self.tri, &self.color_ptr, y, z, pool);
+    }
+
+    fn num_colors(&self) -> usize {
+        self.color_ptr.len() - 1
+    }
+
+    fn tri_elements(&self) -> usize {
+        self.tri.lower.nnz() + self.tri.upper.nnz()
+    }
+
+    fn name(&self) -> &'static str {
+        "ic0-mc"
+    }
+}
+
+/// Block multi-color substitutions (the paper's "BMC" baseline).
+pub struct BmcTriSolver {
+    pub tri: TriFactors,
+    pub color_ptr: Vec<usize>,
+    pub bs: usize,
+}
+
+impl BmcTriSolver {
+    pub fn new(tri: TriFactors, color_ptr: Vec<usize>, bs: usize) -> BmcTriSolver {
+        BmcTriSolver { tri, color_ptr, bs }
+    }
+}
+
+impl TriSolver for BmcTriSolver {
+    fn forward(&self, r: &[f64], y: &mut [f64], pool: &Pool) {
+        trisolve_bmc::forward(&self.tri, &self.color_ptr, self.bs, r, y, pool);
+    }
+
+    fn backward(&self, y: &[f64], z: &mut [f64], pool: &Pool) {
+        trisolve_bmc::backward(&self.tri, &self.color_ptr, self.bs, y, z, pool);
+    }
+
+    fn num_colors(&self) -> usize {
+        self.color_ptr.len() - 1
+    }
+
+    fn tri_elements(&self) -> usize {
+        self.tri.lower.nnz() + self.tri.upper.nnz()
+    }
+
+    fn name(&self) -> &'static str {
+        "ic0-bmc"
+    }
+}
+
+/// Hierarchical block multi-color substitutions — the paper's vectorized
+/// kernel (§4.3) over SELL-w triangles.
+pub struct HbmcTriSolver {
+    pub meta: HbmcMeta,
+    pub sell: SellTriFactors,
+    pub path: KernelPath,
+}
+
+impl HbmcTriSolver {
+    pub fn new(meta: HbmcMeta, sell: SellTriFactors, path: KernelPath) -> HbmcTriSolver {
+        HbmcTriSolver { meta, sell, path }
+    }
+}
+
+impl TriSolver for HbmcTriSolver {
+    fn forward(&self, r: &[f64], y: &mut [f64], pool: &Pool) {
+        trisolve_hbmc::forward(&self.meta, &self.sell, r, y, pool, self.path);
+    }
+
+    fn backward(&self, y: &[f64], z: &mut [f64], pool: &Pool) {
+        trisolve_hbmc::backward(&self.meta, &self.sell, y, z, pool, self.path);
+    }
+
+    fn num_colors(&self) -> usize {
+        self.meta.num_colors
+    }
+
+    fn kernel_path(&self) -> &'static str {
+        self.path.name()
+    }
+
+    fn tri_elements(&self) -> usize {
+        self.sell.stored_elements()
+    }
+
+    fn name(&self) -> &'static str {
+        "ic0-hbmc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::ic0::ic0;
+    use crate::ordering::bmc::bmc_order;
+    use crate::ordering::hbmc::hbmc_order;
+    use crate::ordering::mc::mc_order;
+    use crate::sparse::coo::Coo;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> crate::sparse::csr::Csr {
+        let mut rng = Rng::new(seed);
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            c.push(i, i, 8.0);
+            for _ in 0..3 {
+                let j = rng.below(n);
+                if j != i {
+                    c.push_sym(i, j, -0.4);
+                }
+            }
+        }
+        c.to_csr()
+    }
+
+    /// Each implementation must equal the serial oracle on its own
+    /// reordered system (they compute the same `M⁻¹ r` for that matrix).
+    #[test]
+    fn all_implementations_agree_with_serial_oracle() {
+        let a0 = random_spd(140, 61);
+        let pool = Pool::new(2);
+
+        let cases: Vec<(Box<dyn TriSolver>, crate::sparse::csr::Csr)> = vec![
+            {
+                let mc = mc_order(&a0);
+                let a = a0.permute_sym(&mc.perm);
+                let tri = TriFactors::from_ic(&ic0(&a, 0.0).unwrap());
+                (Box::new(McTriSolver::new(tri, mc.color_ptr)) as Box<dyn TriSolver>, a)
+            },
+            {
+                let ord = bmc_order(&a0, 8);
+                let a = a0.permute_sym(&ord.perm);
+                let tri = TriFactors::from_ic(&ic0(&a, 0.0).unwrap());
+                (Box::new(BmcTriSolver::new(tri, ord.color_ptr, 8)) as Box<dyn TriSolver>, a)
+            },
+            {
+                let ord = hbmc_order(&a0, 8, 4);
+                let a = a0.permute_sym(&ord.perm);
+                let tri = TriFactors::from_ic(&ic0(&a, 0.0).unwrap());
+                let sell = SellTriFactors::from_tri(&tri, 4);
+                let meta = HbmcMeta::from_ordering(&ord);
+                (Box::new(HbmcTriSolver::new(meta, sell, KernelPath::Scalar)) as Box<dyn TriSolver>, a)
+            },
+        ];
+
+        for (solver, a) in &cases {
+            let n = a.n();
+            let tri = TriFactors::from_ic(&ic0(a, 0.0).unwrap());
+            let r: Vec<f64> = (0..n).map(|i| (i as f64 * 0.1).sin()).collect();
+            let mut scratch = vec![0.0; n];
+            let mut z_ref = vec![0.0; n];
+            trisolve_serial::apply(&tri, &r, &mut scratch, &mut z_ref);
+            let mut s = vec![0.0; n];
+            let mut z = vec![0.0; n];
+            solver.apply(&r, &mut s, &mut z, &pool);
+            assert!(
+                crate::util::max_abs_diff(&z, &z_ref) < 1e-12,
+                "{} deviates from serial oracle",
+                solver.name()
+            );
+            assert_eq!(solver.syncs_per_sweep(), solver.num_colors() - 1);
+            assert!(solver.tri_elements() > 0);
+        }
+    }
+
+    #[test]
+    fn serial_solver_reports_no_syncs() {
+        let a = random_spd(40, 7);
+        let tri = TriFactors::from_ic(&ic0(&a, 0.0).unwrap());
+        let s = SerialTriSolver::new(tri);
+        assert_eq!(s.num_colors(), 1);
+        assert_eq!(s.syncs_per_sweep(), 0);
+        assert_eq!(s.kernel_path(), "n/a");
+        assert_eq!(s.name(), "ic0-serial");
+    }
+
+    #[test]
+    fn identity_copies() {
+        let p = IdentityPrecond;
+        let pool = Pool::new(1);
+        let r = vec![1.0, -2.0, 3.0];
+        let mut s = vec![0.0; 3];
+        let mut z = vec![0.0; 3];
+        p.apply(&r, &mut s, &mut z, &pool);
+        assert_eq!(z, r);
+        assert_eq!(p.name(), "identity");
+        assert_eq!(p.tri_elements(), 0);
+    }
+
+    #[test]
+    fn hbmc_solver_reports_its_kernel_path() {
+        let a0 = random_spd(120, 9);
+        let ord = hbmc_order(&a0, 4, 4);
+        let a = a0.permute_sym(&ord.perm);
+        let tri = TriFactors::from_ic(&ic0(&a, 0.0).unwrap());
+        let sell = SellTriFactors::from_tri(&tri, 4);
+        let s = HbmcTriSolver::new(HbmcMeta::from_ordering(&ord), sell, KernelPath::Scalar);
+        assert_eq!(s.kernel_path(), "scalar");
+        assert_eq!(s.num_colors(), ord.num_colors);
+    }
+}

@@ -3,7 +3,7 @@
 //! scale), and report plumbing.
 
 use hbmc::config::{NodePreset, OrderingKind, Scale, SolverConfig, SpmvKind};
-use hbmc::coordinator::driver::solve_opts;
+use hbmc::coordinator::driver::{solve_opts, SolveOptions};
 use hbmc::coordinator::experiments;
 use hbmc::coordinator::pool::{Pool, SyncSlice};
 use hbmc::gen::suite;
@@ -96,7 +96,7 @@ fn solve_report_kernel_breakdown_sums_to_solve_time() {
         rtol: 1e-7,
         ..Default::default()
     };
-    let rep = solve_opts(&d.matrix, &d.b, &cfg, false).unwrap();
+    let rep = solve_opts(&d.matrix, &d.b, &cfg, &SolveOptions::default()).unwrap();
     let parts: f64 = rep.kernel_seconds.iter().map(|(_, s)| s).sum();
     assert!(parts <= rep.solve_seconds * 1.05, "{parts} vs {}", rep.solve_seconds);
     assert!(parts >= rep.solve_seconds * 0.5, "breakdown lost time: {parts} vs {}", rep.solve_seconds);

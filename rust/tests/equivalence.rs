@@ -4,7 +4,7 @@
 //! more slowly.
 
 use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
-use hbmc::coordinator::driver::solve_opts;
+use hbmc::coordinator::driver::{solve_opts, SolveOptions};
 use hbmc::gen::suite;
 use hbmc::ordering::graph::{er_condition_holds, orderings_equivalent, Adjacency};
 use hbmc::ordering::hbmc::{check_level2_diagonal, hbmc_order};
@@ -30,8 +30,8 @@ fn bmc_hbmc_iteration_exact_on_all_datasets() {
         cb.shift = d.shift;
         let mut ch = cfg(OrderingKind::Hbmc, 16, 4);
         ch.shift = d.shift;
-        let rb = solve_opts(&d.matrix, &d.b, &cb, true).unwrap();
-        let rh = solve_opts(&d.matrix, &d.b, &ch, true).unwrap();
+        let rb = solve_opts(&d.matrix, &d.b, &cb, &SolveOptions::history()).unwrap();
+        let rh = solve_opts(&d.matrix, &d.b, &ch, &SolveOptions::history()).unwrap();
         assert!(rb.converged && rh.converged, "{}", d.name);
         // Equivalence is exact in exact arithmetic; in FP the reassociated
         // kernels drift at round-off level, which ill-conditioned systems
@@ -67,8 +67,8 @@ fn bmc_hbmc_iteration_exact_on_all_datasets() {
 fn equivalence_holds_across_block_sizes_and_widths() {
     let d = suite::dataset("g3_circuit", Scale::Tiny);
     for (bs, w) in [(8usize, 4usize), (16, 8), (32, 8)] {
-        let rb = solve_opts(&d.matrix, &d.b, &cfg(OrderingKind::Bmc, bs, w), false).unwrap();
-        let rh = solve_opts(&d.matrix, &d.b, &cfg(OrderingKind::Hbmc, bs, w), false).unwrap();
+        let rb = solve_opts(&d.matrix, &d.b, &cfg(OrderingKind::Bmc, bs, w), &SolveOptions::default()).unwrap();
+        let rh = solve_opts(&d.matrix, &d.b, &cfg(OrderingKind::Hbmc, bs, w), &SolveOptions::default()).unwrap();
         assert!(
             rb.iterations.abs_diff(rh.iterations) <= 1 + rb.iterations / 100,
             "bs={bs} w={w}: {} vs {}",
@@ -106,8 +106,8 @@ fn bmc_converges_no_worse_than_mc_in_majority() {
         cm.shift = d.shift;
         let mut cb = cfg(OrderingKind::Bmc, 32, 4);
         cb.shift = d.shift;
-        let rm = solve_opts(&d.matrix, &d.b, &cm, false).unwrap();
-        let rb = solve_opts(&d.matrix, &d.b, &cb, false).unwrap();
+        let rm = solve_opts(&d.matrix, &d.b, &cm, &SolveOptions::default()).unwrap();
+        let rb = solve_opts(&d.matrix, &d.b, &cb, &SolveOptions::default()).unwrap();
         assert!(rm.converged && rb.converged, "{}", d.name);
         total += 1;
         if rb.iterations <= rm.iterations {
@@ -143,8 +143,8 @@ fn natural_serial_is_the_convergence_reference() {
     // IC in natural ordering typically converges fastest (no parallel
     // ordering penalty); MC/BMC/HBMC pay a bounded penalty.
     let d = suite::dataset("parabolic_fem", Scale::Tiny);
-    let rn = solve_opts(&d.matrix, &d.b, &cfg(OrderingKind::Natural, 1, 1), false).unwrap();
-    let rh = solve_opts(&d.matrix, &d.b, &cfg(OrderingKind::Hbmc, 16, 4), false).unwrap();
+    let rn = solve_opts(&d.matrix, &d.b, &cfg(OrderingKind::Natural, 1, 1), &SolveOptions::default()).unwrap();
+    let rh = solve_opts(&d.matrix, &d.b, &cfg(OrderingKind::Hbmc, 16, 4), &SolveOptions::default()).unwrap();
     assert!(rn.converged && rh.converged);
     // Sanity bound: parallel ordering costs at most 4x iterations here.
     assert!(rh.iterations <= 4 * rn.iterations.max(1));

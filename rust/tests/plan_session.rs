@@ -1,0 +1,193 @@
+//! Plan/session integration — the amortization contract of the two-phase
+//! refactor:
+//!
+//! * a reused `SolveSession` runs 8 consecutive solves on one
+//!   `Scale::Small` matrix with **exactly one** ordering+factorization
+//!   setup (asserted via the global plan-build counter and the plan-cache
+//!   hit/miss counters),
+//! * per-solve results are **bit-exact** against one-shot `driver::solve`
+//!   for all of natural / MC / BMC / HBMC,
+//! * `solve_many` over k right-hand sides is bitwise-identical to k
+//!   independent one-shot solves,
+//! * repeated (matrix, config) requests hit the `PlanCache` (no
+//!   re-factorization).
+//!
+//! Tests in this binary share the process-wide plan-build counter, so they
+//! serialize on a static mutex.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
+use hbmc::coordinator::driver::{solve_opts, SolveOptions};
+use hbmc::coordinator::session::{PlanCache, SolveSession};
+use hbmc::gen::suite;
+use hbmc::solver::plan::plans_built;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+const ORDERINGS: [OrderingKind; 4] = [
+    OrderingKind::Natural,
+    OrderingKind::Mc,
+    OrderingKind::Bmc,
+    OrderingKind::Hbmc,
+];
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The headline acceptance test: 8 solves, one setup, bit-exact vs the
+/// one-shot driver, for every ordering, at `Scale::Small`.
+#[test]
+fn eight_solves_amortize_one_setup_and_match_one_shot_bitwise() {
+    let _guard = serial();
+    // parabolic_fem is the cheapest Small-scale system to converge
+    // (strongly diagonally dominant), keeping 4 orderings × 9 solves sane
+    // in debug builds. The contract is scale-independent.
+    let d = suite::dataset("parabolic_fem", Scale::Small);
+    for ordering in ORDERINGS {
+        let cfg = SolverConfig {
+            ordering,
+            bs: 16,
+            w: 4,
+            spmv: SpmvKind::Crs,
+            threads: 1,
+            rtol: 1e-5,
+            shift: d.shift,
+            ..Default::default()
+        };
+
+        let mut cache = PlanCache::new(2);
+        let session = cache.session(&d.matrix, &cfg).unwrap();
+        assert_eq!((cache.misses(), cache.hits()), (1, 0));
+
+        let builds_before = plans_built();
+        let mut solutions: Vec<Vec<f64>> = Vec::new();
+        for _ in 0..8 {
+            // Re-request the plan per solve, as a serving tier would —
+            // every request after the first must be a cache hit.
+            let (plan, _) = cache.get_or_build(&d.matrix, &cfg).unwrap();
+            assert!(Arc::ptr_eq(&plan, session.plan()), "{ordering:?}: plan changed");
+            let out = session.solve(&d.b).unwrap();
+            assert!(out.report.converged, "{ordering:?} did not converge");
+            solutions.push(out.x);
+        }
+        assert_eq!(
+            plans_built(),
+            builds_before,
+            "{ordering:?}: a plan was rebuilt during the 8 reused solves"
+        );
+        assert_eq!(cache.misses(), 1, "{ordering:?}: exactly one setup");
+        assert_eq!(cache.hits(), 8, "{ordering:?}: all repeat requests must hit");
+        assert_eq!(session.solves_completed(), 8);
+
+        // All 8 session solves are bitwise identical to each other…
+        for (k, x) in solutions.iter().enumerate().skip(1) {
+            assert_eq!(bits(x), bits(&solutions[0]), "{ordering:?}: solve {k} deviates");
+        }
+        // …and to a fresh one-shot driver::solve (same deterministic path).
+        let one = solve_opts(&d.matrix, &d.b, &cfg, &SolveOptions::with_solution()).unwrap();
+        assert_eq!(
+            bits(one.solution.as_ref().unwrap()),
+            bits(&solutions[0]),
+            "{ordering:?}: session result deviates from one-shot driver::solve"
+        );
+    }
+}
+
+/// `solve_many` over k distinct right-hand sides ≡ k independent one-shot
+/// solves, for every ordering × SpMV storage.
+#[test]
+fn solve_many_is_bitwise_identical_to_one_shot_for_every_ordering() {
+    let _guard = serial();
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let rhss: Vec<Vec<f64>> = (0..3)
+        .map(|k| d.b.iter().map(|v| v * (1.0 + 0.5 * k as f64)).collect())
+        .collect();
+    for ordering in ORDERINGS {
+        for spmv in [SpmvKind::Crs, SpmvKind::Sell] {
+            let cfg = SolverConfig {
+                ordering,
+                bs: 8,
+                w: 4,
+                spmv,
+                rtol: 1e-7,
+                ..Default::default()
+            };
+            let session = SolveSession::from_matrix(&d.matrix, &cfg).unwrap();
+            let batch = session.solve_many(&rhss).unwrap();
+            assert_eq!(batch.len(), rhss.len());
+            for (i, (rhs, out)) in rhss.iter().zip(&batch).enumerate() {
+                assert!(out.report.converged, "{ordering:?}/{spmv:?} rhs {i}");
+                assert_eq!(out.report.solve_index, i);
+                let one =
+                    solve_opts(&d.matrix, rhs, &cfg, &SolveOptions::with_solution()).unwrap();
+                assert_eq!(one.iterations, out.report.iterations, "{ordering:?}/{spmv:?}");
+                assert_eq!(
+                    bits(one.solution.as_ref().unwrap()),
+                    bits(&out.x),
+                    "{ordering:?}/{spmv:?} rhs {i}: batched ≠ one-shot"
+                );
+            }
+        }
+    }
+}
+
+/// Cache hits skip the whole setup phase (no IC(0) re-factorization).
+#[test]
+fn plan_cache_hits_do_not_refactor() {
+    let _guard = serial();
+    let d = suite::dataset("thermal2", Scale::Tiny);
+    let cfg = SolverConfig { ordering: OrderingKind::Hbmc, bs: 8, w: 4, ..Default::default() };
+    let mut cache = PlanCache::new(4);
+    let before = plans_built();
+    let (p1, hit1) = cache.get_or_build(&d.matrix, &cfg).unwrap();
+    assert!(!hit1);
+    assert_eq!(plans_built(), before + 1);
+    for _ in 0..5 {
+        let (p, hit) = cache.get_or_build(&d.matrix, &cfg).unwrap();
+        assert!(hit);
+        assert!(Arc::ptr_eq(&p, &p1));
+    }
+    assert_eq!(plans_built(), before + 1, "cache hits must not re-run setup");
+    assert_eq!((cache.hits(), cache.misses()), (5, 1));
+}
+
+/// The report split keeps per-plan (setup) metrics constant across solves
+/// while per-solve metrics vary, and neither clones the solution by
+/// default.
+#[test]
+fn report_split_exposes_amortization() {
+    let _guard = serial();
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let cfg = SolverConfig {
+        ordering: OrderingKind::Hbmc,
+        bs: 8,
+        w: 4,
+        spmv: SpmvKind::Sell,
+        rtol: 1e-7,
+        ..Default::default()
+    };
+    let session = SolveSession::from_matrix(&d.matrix, &cfg).unwrap();
+    let reports: Vec<_> = (0..3).map(|_| session.solve(&d.b).unwrap().report).collect();
+    for (i, rep) in reports.iter().enumerate() {
+        assert_eq!(rep.solve_index, i);
+        assert!(rep.solution.is_none(), "solution must be opt-in");
+        assert!(rep.residual_history.is_empty(), "history must be opt-in");
+        // Per-plan metrics are those of the single shared setup.
+        assert_eq!(
+            rep.plan.setup.ordering_seconds.to_bits(),
+            reports[0].plan.setup.ordering_seconds.to_bits()
+        );
+        assert_eq!(
+            rep.plan.setup.factor_seconds.to_bits(),
+            reports[0].plan.setup.factor_seconds.to_bits()
+        );
+        assert_eq!(rep.plan.config_label, reports[0].plan.config_label);
+        assert!(rep.solve_seconds > 0.0);
+    }
+}

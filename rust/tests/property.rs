@@ -194,9 +194,16 @@ fn prop_full_solve_reaches_tolerance() {
             rtol: 1e-8,
             ..Default::default()
         };
-        let rep = hbmc::coordinator::driver::solve(&a, &b, &cfg).unwrap();
+        let rep = hbmc::coordinator::driver::solve_opts(
+            &a,
+            &b,
+            &cfg,
+            &hbmc::coordinator::driver::SolveOptions::with_solution(),
+        )
+        .unwrap();
         assert!(rep.converged, "seed={seed} cfg={:?}", cfg.ordering);
-        let err = rep.solution.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
+        let sol = rep.solution.as_ref().unwrap();
+        let err = sol.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
         assert!(err < 1e-5, "seed={seed} err={err}");
     }
 }

@@ -2,7 +2,11 @@
 //! the XLA CPU client and compare against the python goldens — the
 //! automated version of `examples/hybrid_pjrt.rs`.
 //!
-//! Skipped when artifacts are absent (`make artifacts`).
+//! Skipped when artifacts are absent (`make artifacts`), and compiled out
+//! entirely without the `pjrt` cargo feature (the default offline build
+//! stubs the executor).
+
+#![cfg(feature = "pjrt")]
 
 use hbmc::runtime::artifacts::ArtifactSet;
 use hbmc::runtime::hybrid::{HybridPcgStep, HybridPrecond, HybridSpmv};

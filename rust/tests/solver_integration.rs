@@ -3,7 +3,7 @@
 //! semi-definite Ieej-class system; configuration knobs behave.
 
 use hbmc::config::{NodePreset, OrderingKind, Scale, SolverConfig, SpmvKind};
-use hbmc::coordinator::driver::solve;
+use hbmc::coordinator::driver::{solve, solve_opts, SolveOptions};
 use hbmc::gen::suite;
 use hbmc::solver::iccg::IccgSolver;
 
@@ -26,16 +26,18 @@ fn full_matrix_of_configurations_on_g3() {
                     rtol: 1e-7,
                     ..Default::default()
                 };
-                let rep = solve(&d.matrix, &d.b, &cfg).unwrap();
+                let rep =
+                    solve_opts(&d.matrix, &d.b, &cfg, &SolveOptions::with_solution()).unwrap();
                 assert!(
                     rep.converged,
                     "{ordering:?}/{spmv:?}/t{threads} relres={}",
                     rep.final_relres
                 );
+                let sol = rep.solution.as_ref().unwrap();
                 assert!(
-                    unit_err(&rep.solution) < 1e-4,
+                    unit_err(sol) < 1e-4,
                     "{ordering:?}/{spmv:?}/t{threads} err={}",
-                    unit_err(&rep.solution)
+                    unit_err(sol)
                 );
             }
         }
@@ -80,10 +82,10 @@ fn shifted_iccg_solves_ieej_class() {
         rtol: 1e-7,
         ..Default::default()
     };
-    let rep = solve(&d.matrix, &d.b, &cfg).unwrap();
+    let rep = solve_opts(&d.matrix, &d.b, &cfg, &SolveOptions::with_solution()).unwrap();
     assert!(rep.converged, "relres={}", rep.final_relres);
-    assert!(rep.setup.shift_used >= 0.3);
-    assert!(unit_err(&rep.solution) < 1e-3);
+    assert!(rep.plan.setup.shift_used >= 0.3);
+    assert!(unit_err(rep.solution.as_ref().unwrap()) < 1e-3);
 }
 
 #[test]
@@ -105,8 +107,8 @@ fn all_five_datasets_solve_with_paper_defaults() {
             d.name,
             d.n(),
             rep.iterations,
-            100.0 * rep.simd_ratio,
-            100.0 * (rep.sell_overhead.unwrap() - 1.0)
+            100.0 * rep.plan.simd_ratio,
+            100.0 * (rep.plan.sell_overhead.unwrap() - 1.0)
         );
     }
 }
@@ -122,13 +124,15 @@ fn intrinsic_and_scalar_paths_agree() {
         rtol: 1e-8,
         ..Default::default()
     };
-    let a = solve(&d.matrix, &d.b, &mk(true)).unwrap();
-    let b = solve(&d.matrix, &d.b, &mk(false)).unwrap();
+    let a = solve_opts(&d.matrix, &d.b, &mk(true), &SolveOptions::with_solution()).unwrap();
+    let b = solve_opts(&d.matrix, &d.b, &mk(false), &SolveOptions::with_solution()).unwrap();
     assert_eq!(a.iterations, b.iterations);
     let max_dev = a
         .solution
+        .as_ref()
+        .unwrap()
         .iter()
-        .zip(&b.solution)
+        .zip(b.solution.as_ref().unwrap())
         .map(|(x, y)| (x - y).abs())
         .fold(0.0, f64::max);
     assert!(max_dev < 1e-9, "intrinsic vs scalar deviate: {max_dev}");
@@ -161,7 +165,7 @@ fn sell_sigma_variant_matches_unsorted() {
     let plain = IccgSolver::new(&d.matrix, &mk(None)).unwrap();
     let sorted = IccgSolver::new(&d.matrix, &mk(Some(64))).unwrap();
     // σ-sorting strictly reduces stored elements on the imbalanced set.
-    assert!(sorted.setup.spmv_elements < plain.setup.spmv_elements);
+    assert!(sorted.setup().spmv_elements < plain.setup().spmv_elements);
     let op = plain.solve(&d.b).unwrap();
     let os = sorted.solve(&d.b).unwrap();
     assert_eq!(op.cg.iterations, os.cg.iterations);
