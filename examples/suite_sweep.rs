@@ -8,8 +8,8 @@
 //! Run: `cargo run --release --example suite_sweep [-- full]`
 //! (`full` uses the paper-scale generators; default is `small`.)
 
+use hbmc::api::{SolveRequest, SolverService};
 use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
-use hbmc::coordinator::driver::solve;
 use hbmc::coordinator::report::{pct, secs, Table};
 use hbmc::gen::suite;
 
@@ -18,6 +18,10 @@ fn main() -> anyhow::Result<()> {
     let bs = 32usize;
     let w = 8usize;
     println!("suite sweep at scale {:?}, bs={bs}, w={w}\n", scale);
+
+    // One service serves the whole sweep: each dataset registered once,
+    // each solver variant a per-request config override.
+    let service = SolverService::with_capacity(SolverConfig::default(), 8)?;
 
     let mut table = Table::new(
         "ICCG suite sweep (rtol 1e-7)",
@@ -28,6 +32,8 @@ fn main() -> anyhow::Result<()> {
     let mut cells = 0usize;
 
     for d in suite::all(scale) {
+        let n = d.n();
+        let handle = service.register_matrix(d.matrix);
         let mut times = std::collections::HashMap::new();
         let mut iters = std::collections::HashMap::new();
         for (label, ordering, spmv) in [
@@ -46,13 +52,15 @@ fn main() -> anyhow::Result<()> {
                 max_iters: 100_000,
                 ..Default::default()
             };
-            let rep = solve(&d.matrix, &d.b, &cfg)?;
-            anyhow::ensure!(rep.converged, "{}/{label} failed", d.name);
+            // `require_convergence` turns a stalled run into a typed
+            // `HbmcError::NotConverged` instead of a bad table row.
+            let req = SolveRequest::new().with_config(cfg).require_convergence();
+            let rep = service.solve_with(handle, &d.b, &req)?.report;
             times.insert(label, rep.solve_seconds);
             iters.insert(label, rep.iterations);
             table.push_row(vec![
                 d.name.clone(),
-                d.n().to_string(),
+                n.to_string(),
                 label.to_string(),
                 rep.iterations.to_string(),
                 secs(rep.solve_seconds),

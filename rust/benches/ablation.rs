@@ -51,6 +51,11 @@ fn main() {
     let d = suite::dataset("g3_circuit", scale);
     for bs in [4usize, 8, 16, 32, 64] {
         for w in [4usize, 8] {
+            if bs % w != 0 {
+                // HBMC requires bs to be a multiple of w (SolverConfig
+                // validation); the grid point is unrepresentable.
+                continue;
+            }
             let cfg = SolverConfig {
                 ordering: OrderingKind::Hbmc,
                 bs,

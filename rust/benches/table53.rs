@@ -19,18 +19,18 @@ fn main() {
     let args: Vec<String> = std::env::args().collect();
     let scale = if args.iter().any(|a| a == "full") { Scale::Full } else { Scale::Small };
     let nodes: Vec<NodePreset> = match args.iter().position(|a| a == "--node") {
-        Some(i) => vec![NodePreset::parse(&args[i + 1]).expect("node preset")],
+        Some(i) => vec![args[i + 1].parse().expect("node preset")],
         None => NodePreset::all().to_vec(),
     };
     for node in nodes {
-        eprintln!("table 5.3 for {} at scale {scale:?} ...", node.name());
+        eprintln!("table 5.3 for {} at scale {scale:?} ...", node.describe());
         let (table, cells) = table_5_3(node, scale, 1).expect("table 5.3 run");
         print!("{}", table.render());
 
         // Setup (ordering + factorization + storage) seconds, reported
         // separately from the iteration times above — the amortized part.
         let mut setup_table = Table::new(
-            &format!("setup seconds (one plan per cell), node preset {}", node.name()),
+            &format!("setup seconds (one plan per cell), node preset {}", node.describe()),
             &["Dataset", "solver", "bs", "ordering", "factor", "storage", "total"],
         );
         let mut iter_total = 0.0;

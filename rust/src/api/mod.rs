@@ -1,0 +1,24 @@
+//! The typed, concurrent public API — the one front door production
+//! callers go through:
+//!
+//! * [`HbmcError`](crate::error::HbmcError) — the typed error every public
+//!   library function returns (re-exported here for convenience),
+//! * [`SolverConfigBuilder`](crate::config::SolverConfigBuilder) — the
+//!   validating config constructor ([`SolverConfig::builder`]),
+//! * [`SolverService`] — a `Send + Sync` solve endpoint that owns the
+//!   matrix registry and the plan cache, coalesces concurrent plan builds
+//!   per [`PlanKey`](crate::coordinator::session::PlanKey), and serves
+//!   `solve` / `solve_many` with per-request [`SolveRequest`] overrides.
+//!
+//! The lower layers (plans, sessions, kernels) remain public for research
+//! scripts and the reproduction benches; the service is the shape the
+//! ROADMAP's serving story ("a few matrices, many right-hand sides, many
+//! concurrent callers") is built on.
+//!
+//! [`SolverConfig::builder`]: crate::config::SolverConfig::builder
+
+mod service;
+
+pub use crate::config::{SolverConfig, SolverConfigBuilder};
+pub use crate::error::{HbmcError, Result};
+pub use service::{MatrixHandle, ServiceStats, SolveRequest, SolverService};

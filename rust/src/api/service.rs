@@ -1,0 +1,481 @@
+//! [`SolverService`] — the thread-safe serving façade.
+//!
+//! One service owns (a) a registry of matrices behind opaque
+//! [`MatrixHandle`]s and (b) the LRU [`PlanCache`] behind an `RwLock`,
+//! with a per-[`PlanKey`] build gate so that **concurrent requests for the
+//! same (matrix, config) trigger exactly one plan build** — the others
+//! wait on the gate and then take the cached plan. Solves themselves never
+//! hold either lock: a request checks out an `Arc<SolverPlan>`, opens a
+//! short-lived [`SolveSession`] with the *request's* pool width and
+//! convergence controls, and runs.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+use crate::config::SolverConfig;
+use crate::coordinator::driver::SolveOptions;
+use crate::coordinator::session::{CacheStats, PlanCache, PlanKey, SolveOutput, SolveSession};
+use crate::error::{HbmcError, Result};
+use crate::solver::plan::SolverPlan;
+use crate::sparse::csr::Csr;
+
+/// Opaque ticket for a matrix registered with a [`SolverService`]. Cheap to
+/// copy and share across threads. Ids are allocated from one process-wide
+/// counter, so a handle presented to a service other than its issuer can
+/// never alias a different matrix — it fails with
+/// [`HbmcError::UnknownMatrix`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MatrixHandle(u64);
+
+impl MatrixHandle {
+    /// The raw registry id (diagnostics, log correlation).
+    pub fn id(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Process-wide handle allocator (see [`MatrixHandle`]).
+static NEXT_MATRIX_ID: AtomicU64 = AtomicU64::new(1);
+
+/// A registry entry: the shared matrix plus its content fingerprint,
+/// hashed once at registration (an O(nnz) scan) rather than per request.
+#[derive(Clone)]
+struct Registered {
+    matrix: Arc<Csr>,
+    fingerprint: u64,
+}
+
+/// Per-request overrides layered on the service's default configuration.
+///
+/// `config` swaps the *structural* configuration (ordering, bs, w, storage
+/// — a different [`PlanKey`], hence possibly a different cached plan);
+/// `options` carries the per-solve knobs (rtol/max_iters overrides,
+/// history, solution copy) that never invalidate a plan.
+#[derive(Debug, Clone, Default)]
+pub struct SolveRequest {
+    /// Structural config for this request; `None` = the service default.
+    pub config: Option<SolverConfig>,
+    /// Per-solve options (tolerance/iteration overrides, history, …).
+    pub options: SolveOptions,
+    /// Turn a non-converged result into [`HbmcError::NotConverged`]
+    /// instead of an `Ok` report with `converged == false`.
+    pub require_convergence: bool,
+}
+
+impl SolveRequest {
+    pub fn new() -> SolveRequest {
+        SolveRequest::default()
+    }
+
+    /// Use this structural config (a different plan-cache key) instead of
+    /// the service default.
+    pub fn with_config(mut self, cfg: SolverConfig) -> SolveRequest {
+        self.config = Some(cfg);
+        self
+    }
+
+    /// Override the convergence tolerance for this request only.
+    pub fn rtol(mut self, rtol: f64) -> SolveRequest {
+        self.options.rtol = Some(rtol);
+        self
+    }
+
+    /// Override the iteration cap for this request only.
+    pub fn max_iters(mut self, max_iters: usize) -> SolveRequest {
+        self.options.max_iters = Some(max_iters);
+        self
+    }
+
+    /// Record the per-iteration residual history.
+    pub fn record_history(mut self) -> SolveRequest {
+        self.options.record_history = true;
+        self
+    }
+
+    /// Copy the solution vector into the report.
+    pub fn return_solution(mut self) -> SolveRequest {
+        self.options.return_solution = true;
+        self
+    }
+
+    /// Fail with [`HbmcError::NotConverged`] when the cap is reached.
+    pub fn require_convergence(mut self) -> SolveRequest {
+        self.require_convergence = true;
+        self
+    }
+}
+
+/// Point-in-time service counters: registry size, plan-cache counters, and
+/// the build/coalescing behaviour under concurrency.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceStats {
+    /// Matrices currently registered.
+    pub matrices: usize,
+    /// Plan-cache snapshot (len/capacity/hits/misses/evictions).
+    pub cache: CacheStats,
+    /// Plans actually built by this service (== cache misses).
+    pub builds: u64,
+    /// Requests that waited on another thread's in-flight build instead of
+    /// building themselves.
+    pub coalesced_builds: u64,
+    /// Solves completed through the service.
+    pub solves: u64,
+}
+
+/// Thread-safe solve endpoint; see module docs. `Send + Sync` — share one
+/// instance behind an `Arc` across all request threads.
+pub struct SolverService {
+    default_cfg: SolverConfig,
+    matrices: RwLock<HashMap<u64, Registered>>,
+    cache: RwLock<PlanCache>,
+    /// Per-key build gates: the map lock is held only to look up/insert a
+    /// gate; the gate itself is held for the duration of one plan build.
+    building: Mutex<HashMap<PlanKey, Arc<Mutex<()>>>>,
+    builds: AtomicU64,
+    coalesced: AtomicU64,
+    solves: AtomicU64,
+}
+
+/// Default plan-cache capacity (`SolverService::new`).
+pub const DEFAULT_PLAN_CAPACITY: usize = 8;
+
+// Lock helpers: the service never panics while holding a lock on the hot
+// path, but a poisoned lock must not cascade — recover the guard.
+fn wlock<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn rlock<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn mlock<T>(l: &Mutex<T>) -> MutexGuard<'_, T> {
+    l.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl SolverService {
+    /// Service with the default configuration and plan-cache capacity.
+    pub fn new() -> SolverService {
+        SolverService::with_capacity(SolverConfig::default(), DEFAULT_PLAN_CAPACITY)
+            .expect("default config is valid")
+    }
+
+    /// Service whose `solve(handle, b)` uses `default_cfg`; fails fast on
+    /// an invalid config rather than at first request.
+    pub fn with_config(default_cfg: SolverConfig) -> Result<SolverService> {
+        SolverService::with_capacity(default_cfg, DEFAULT_PLAN_CAPACITY)
+    }
+
+    /// Full constructor: default config + plan-cache capacity (≥ 1).
+    pub fn with_capacity(default_cfg: SolverConfig, capacity: usize) -> Result<SolverService> {
+        default_cfg.validate()?;
+        if capacity == 0 {
+            return Err(HbmcError::invalid_config("plan cache capacity must be >= 1"));
+        }
+        Ok(SolverService {
+            default_cfg,
+            matrices: RwLock::new(HashMap::new()),
+            cache: RwLock::new(PlanCache::new(capacity)),
+            building: Mutex::new(HashMap::new()),
+            builds: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            solves: AtomicU64::new(0),
+        })
+    }
+
+    /// The configuration used when a request carries no override.
+    pub fn default_config(&self) -> &SolverConfig {
+        &self.default_cfg
+    }
+
+    /// Register a matrix; the returned handle addresses it in every later
+    /// call. Registration never builds a plan — that happens lazily (and
+    /// exactly once per distinct config) at first solve.
+    pub fn register_matrix(&self, a: Csr) -> MatrixHandle {
+        self.register_matrix_arc(Arc::new(a))
+    }
+
+    /// Zero-copy registration for callers that already share the matrix.
+    /// The matrix is fingerprinted here, once, so later plan-cache lookups
+    /// never rescan it.
+    pub fn register_matrix_arc(&self, a: Arc<Csr>) -> MatrixHandle {
+        let id = NEXT_MATRIX_ID.fetch_add(1, AtomicOrdering::SeqCst);
+        let entry = Registered { fingerprint: a.fingerprint(), matrix: a };
+        wlock(&self.matrices).insert(id, entry);
+        MatrixHandle(id)
+    }
+
+    /// Drop a matrix from the registry. Cached plans for it age out of the
+    /// LRU naturally; in-flight solves holding the plan are unaffected.
+    pub fn unregister_matrix(&self, handle: MatrixHandle) -> Result<()> {
+        match wlock(&self.matrices).remove(&handle.0) {
+            Some(_) => Ok(()),
+            None => Err(HbmcError::UnknownMatrix(format!("handle #{}", handle.0))),
+        }
+    }
+
+    fn registered(&self, handle: MatrixHandle) -> Result<Registered> {
+        rlock(&self.matrices)
+            .get(&handle.0)
+            .cloned()
+            .ok_or_else(|| HbmcError::UnknownMatrix(format!("handle #{}", handle.0)))
+    }
+
+    /// The registered matrix behind `handle`.
+    pub fn matrix(&self, handle: MatrixHandle) -> Result<Arc<Csr>> {
+        Ok(self.registered(handle)?.matrix)
+    }
+
+    /// Get-or-build the plan for `(handle, cfg)` with single-build
+    /// coalescing (the tentpole guarantee: concurrent same-key requests
+    /// produce exactly one `SolverPlan::build`).
+    pub fn plan(&self, handle: MatrixHandle, cfg: &SolverConfig) -> Result<Arc<SolverPlan>> {
+        cfg.validate()?;
+        let reg = self.registered(handle)?;
+        self.plan_for(&reg, cfg)
+    }
+
+    fn plan_for(&self, reg: &Registered, cfg: &SolverConfig) -> Result<Arc<SolverPlan>> {
+        let key = PlanKey::from_fingerprint(reg.fingerprint, cfg);
+        // Fast path: cached (write lock — `get` touches the LRU clock).
+        if let Some(plan) = wlock(&self.cache).get(&key) {
+            return Ok(plan);
+        }
+        // Slow path: take this key's build gate so one thread builds while
+        // the rest wait here, not in a duplicate factorization.
+        let gate = mlock(&self.building).entry(key.clone()).or_default().clone();
+        let permit = mlock(&gate);
+        // Re-check under the gate: whoever held it before us has inserted.
+        if let Some(plan) = wlock(&self.cache).get(&key) {
+            self.coalesced.fetch_add(1, AtomicOrdering::SeqCst);
+            drop(permit);
+            self.release_gate(&key, &gate);
+            return Ok(plan);
+        }
+        let result = SolverPlan::build(&reg.matrix, cfg).map(|plan| {
+            let plan = Arc::new(plan);
+            self.builds.fetch_add(1, AtomicOrdering::SeqCst);
+            wlock(&self.cache).insert(key.clone(), plan.clone());
+            plan
+        });
+        drop(permit);
+        self.release_gate(&key, &gate);
+        result
+    }
+
+    /// Retire a build gate once no other thread is waiting on it. Removing
+    /// only when we hold the map's sole outside reference keeps the gate
+    /// stable while contended — every concurrent requester for a key always
+    /// serializes on the *same* mutex, so a rebuilt (failed or evicted) key
+    /// can never be built twice at once — while still letting idle entries
+    /// be reclaimed instead of accumulating per distinct key.
+    fn release_gate(&self, key: &PlanKey, gate: &Arc<Mutex<()>>) {
+        let mut map = mlock(&self.building);
+        // Strong refs on the entry: the map's + ours (`gate`) + one per
+        // thread that has fetched it and not yet released. <= 2 means
+        // nobody else can be waiting; a later requester must go through
+        // the map lock we hold, so the count cannot grow under us.
+        let retire = map
+            .get(key)
+            .is_some_and(|current| Arc::ptr_eq(current, gate) && Arc::strong_count(current) <= 2);
+        if retire {
+            map.remove(key);
+        }
+    }
+
+    /// Open a [`SolveSession`] on the (cached or freshly built) plan for
+    /// `(handle, cfg)`, with the request's pool width and tolerances. For
+    /// callers that want to hold one session across a burst of solves.
+    pub fn session(&self, handle: MatrixHandle, cfg: &SolverConfig) -> Result<SolveSession> {
+        let plan = self.plan(handle, cfg)?;
+        Ok(SolveSession::for_request(plan, cfg))
+    }
+
+    /// Solve `A x = b` under the service's default configuration.
+    ///
+    /// Each call opens a short-lived session, which spawns a pool of
+    /// `threads - 1` workers; with the default `threads = 1` that is free.
+    /// Callers sustaining a high request rate on a multi-threaded config
+    /// should hold a [`session`](SolverService::session) (one persistent
+    /// pool) or batch with [`solve_many`](SolverService::solve_many).
+    pub fn solve(&self, handle: MatrixHandle, b: &[f64]) -> Result<SolveOutput> {
+        self.solve_with(handle, b, &SolveRequest::default())
+    }
+
+    /// Solve with per-request overrides (see [`solve`](SolverService::solve)
+    /// for the per-call pool note).
+    pub fn solve_with(
+        &self,
+        handle: MatrixHandle,
+        b: &[f64],
+        req: &SolveRequest,
+    ) -> Result<SolveOutput> {
+        let outs = self.solve_many_with(handle, &[b], req)?;
+        Ok(outs.into_iter().next().expect("one rhs in, one output out"))
+    }
+
+    /// Batched serving: all right-hand sides run on one session (one pool,
+    /// one plan checkout). Results are index-aligned with `rhss`.
+    pub fn solve_many<B: AsRef<[f64]>>(
+        &self,
+        handle: MatrixHandle,
+        rhss: &[B],
+    ) -> Result<Vec<SolveOutput>> {
+        self.solve_many_with(handle, rhss, &SolveRequest::default())
+    }
+
+    /// Batched serving with per-request overrides (applied to every rhs).
+    ///
+    /// Dimension checks run up front, so a malformed batch is rejected
+    /// before any solve. With
+    /// [`require_convergence`](SolveRequest::require_convergence), the
+    /// batch fails fast on the first rhs that stalls: completed outputs are
+    /// discarded and later rhss do not run — solve rhss individually when
+    /// partial results of a batch that may stall matter.
+    pub fn solve_many_with<B: AsRef<[f64]>>(
+        &self,
+        handle: MatrixHandle,
+        rhss: &[B],
+        req: &SolveRequest,
+    ) -> Result<Vec<SolveOutput>> {
+        let reg = self.registered(handle)?;
+        let n = reg.matrix.n();
+        let cfg = req.config.as_ref().unwrap_or(&self.default_cfg);
+        cfg.validate()?;
+        // Reject every malformed rhs up front — a batch must not run
+        // halfway before tripping on rhs k.
+        for b in rhss {
+            let got = b.as_ref().len();
+            if got != n {
+                return Err(HbmcError::DimensionMismatch { expected: n, got });
+            }
+        }
+        let plan = self.plan_for(&reg, cfg)?;
+        let session = SolveSession::for_request(plan, cfg);
+        let mut outs = Vec::with_capacity(rhss.len());
+        for b in rhss {
+            let out = session.solve_with(b.as_ref(), &req.options)?;
+            self.solves.fetch_add(1, AtomicOrdering::SeqCst);
+            if req.require_convergence && !out.report.converged {
+                return Err(HbmcError::NotConverged {
+                    iterations: out.report.iterations,
+                    relres: out.report.final_relres,
+                });
+            }
+            outs.push(out);
+        }
+        Ok(outs)
+    }
+
+    /// Counters: registry size, cache hits/misses/evictions, coalesced
+    /// builds, solves served.
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            matrices: rlock(&self.matrices).len(),
+            cache: rlock(&self.cache).stats(),
+            builds: self.builds.load(AtomicOrdering::SeqCst),
+            coalesced_builds: self.coalesced.load(AtomicOrdering::SeqCst),
+            solves: self.solves.load(AtomicOrdering::SeqCst),
+        }
+    }
+}
+
+impl Default for SolverService {
+    fn default() -> Self {
+        SolverService::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{OrderingKind, Scale};
+    use crate::gen::suite;
+
+    fn tiny_cfg(ordering: OrderingKind) -> SolverConfig {
+        SolverConfig { ordering, bs: 8, w: 4, rtol: 1e-7, ..Default::default() }
+    }
+
+    #[test]
+    fn service_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<SolverService>();
+        assert_send_sync::<MatrixHandle>();
+    }
+
+    #[test]
+    fn register_solve_and_stats() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let svc = SolverService::with_config(tiny_cfg(OrderingKind::Hbmc)).unwrap();
+        let h = svc.register_matrix(d.matrix.clone());
+        let o1 = svc.solve(h, &d.b).unwrap();
+        let o2 = svc.solve(h, &d.b).unwrap();
+        assert!(o1.report.converged);
+        assert_eq!(o1.x, o2.x, "same plan + rhs must be deterministic");
+        let s = svc.stats();
+        assert_eq!(s.matrices, 1);
+        assert_eq!(s.builds, 1, "second solve must reuse the cached plan");
+        assert_eq!(s.cache.hits, 1);
+        assert_eq!(s.solves, 2);
+    }
+
+    #[test]
+    fn unknown_handle_is_typed() {
+        let svc = SolverService::with_config(tiny_cfg(OrderingKind::Bmc)).unwrap();
+        let d = suite::dataset("thermal2", Scale::Tiny);
+        let h = svc.register_matrix(d.matrix.clone());
+        svc.unregister_matrix(h).unwrap();
+        let err = svc.solve(h, &d.b).unwrap_err();
+        assert!(matches!(err, HbmcError::UnknownMatrix(_)), "{err:?}");
+        assert!(matches!(svc.unregister_matrix(h), Err(HbmcError::UnknownMatrix(_))));
+    }
+
+    #[test]
+    fn dimension_mismatch_is_typed_for_solve_and_batch() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let svc = SolverService::with_config(tiny_cfg(OrderingKind::Hbmc)).unwrap();
+        let h = svc.register_matrix(d.matrix.clone());
+        let n = d.matrix.n();
+        let err = svc.solve(h, &[1.0, 2.0]).unwrap_err();
+        assert!(
+            matches!(err, HbmcError::DimensionMismatch { expected, got }
+                if expected == n && got == 2),
+            "{err:?}"
+        );
+        // A batch with one bad rhs is rejected before any solve runs.
+        let err = svc.solve_many(h, &[d.b.clone(), vec![0.0; 3]]).unwrap_err();
+        assert!(matches!(err, HbmcError::DimensionMismatch { got: 3, .. }), "{err:?}");
+        assert_eq!(svc.stats().solves, 0, "rejected batch must not run");
+    }
+
+    #[test]
+    fn per_request_config_overrides_use_distinct_plans() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let svc = SolverService::with_config(tiny_cfg(OrderingKind::Hbmc)).unwrap();
+        let h = svc.register_matrix(d.matrix.clone());
+        svc.solve(h, &d.b).unwrap();
+        let req = SolveRequest::new().with_config(tiny_cfg(OrderingKind::Bmc));
+        svc.solve_with(h, &d.b, &req).unwrap();
+        assert_eq!(svc.stats().builds, 2, "different ordering = different plan key");
+        // rtol/max_iters overrides do NOT make a new plan.
+        svc.solve_with(h, &d.b, &SolveRequest::new().rtol(1e-3)).unwrap();
+        assert_eq!(svc.stats().builds, 2);
+    }
+
+    #[test]
+    fn require_convergence_yields_not_converged() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let svc = SolverService::with_config(tiny_cfg(OrderingKind::Hbmc)).unwrap();
+        let h = svc.register_matrix(d.matrix.clone());
+        let req = SolveRequest::new().max_iters(2).require_convergence();
+        let err = svc.solve_with(h, &d.b, &req).unwrap_err();
+        assert!(
+            matches!(err, HbmcError::NotConverged { iterations: 2, .. }),
+            "{err:?}"
+        );
+        // Without the flag the same request is an Ok non-converged report.
+        let out = svc.solve_with(h, &d.b, &SolveRequest::new().max_iters(2)).unwrap();
+        assert!(!out.report.converged);
+    }
+}

@@ -2,8 +2,18 @@
 //! SpMV storage, thread count, convergence controls, plus the three
 //! "node-like" presets that stand in for the paper's three test machines
 //! (Table 4.1) on this host.
+//!
+//! The validating front door is [`SolverConfig::builder`]: per-field
+//! setters, then [`SolverConfigBuilder::build`] runs
+//! [`SolverConfig::validate`] so an invalid configuration never reaches the
+//! plan builder. The enums implement [`FromStr`]/[`Display`] (CLI flags and
+//! report labels go through the standard traits, not ad-hoc `parse`/`name`
+//! pairs).
 
-use anyhow::{bail, Result};
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::{HbmcError, Result};
 
 /// Which parallel ordering drives the triangular solver.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -19,24 +29,30 @@ pub enum OrderingKind {
     Hbmc,
 }
 
-impl OrderingKind {
-    pub fn parse(s: &str) -> Result<Self> {
-        Ok(match s.to_ascii_lowercase().as_str() {
-            "natural" | "none" => OrderingKind::Natural,
-            "mc" => OrderingKind::Mc,
-            "bmc" => OrderingKind::Bmc,
-            "hbmc" => OrderingKind::Hbmc,
-            other => bail!("unknown ordering {other:?} (natural|mc|bmc|hbmc)"),
-        })
-    }
+impl FromStr for OrderingKind {
+    type Err = HbmcError;
 
-    pub fn name(&self) -> &'static str {
-        match self {
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "natural" | "none" => Ok(OrderingKind::Natural),
+            "mc" => Ok(OrderingKind::Mc),
+            "bmc" => Ok(OrderingKind::Bmc),
+            "hbmc" => Ok(OrderingKind::Hbmc),
+            other => Err(HbmcError::invalid_config(format!(
+                "unknown ordering {other:?} (natural|mc|bmc|hbmc)"
+            ))),
+        }
+    }
+}
+
+impl fmt::Display for OrderingKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
             OrderingKind::Natural => "natural",
             OrderingKind::Mc => "MC",
             OrderingKind::Bmc => "BMC",
             OrderingKind::Hbmc => "HBMC",
-        }
+        })
     }
 }
 
@@ -48,20 +64,26 @@ pub enum SpmvKind {
     Sell,
 }
 
-impl SpmvKind {
-    pub fn parse(s: &str) -> Result<Self> {
-        Ok(match s.to_ascii_lowercase().as_str() {
-            "crs" | "csr" => SpmvKind::Crs,
-            "sell" => SpmvKind::Sell,
-            other => bail!("unknown spmv kind {other:?} (crs|sell)"),
-        })
-    }
+impl FromStr for SpmvKind {
+    type Err = HbmcError;
 
-    pub fn name(&self) -> &'static str {
-        match self {
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "crs" | "csr" => Ok(SpmvKind::Crs),
+            "sell" => Ok(SpmvKind::Sell),
+            other => Err(HbmcError::invalid_config(format!(
+                "unknown spmv kind {other:?} (crs|sell)"
+            ))),
+        }
+    }
+}
+
+impl fmt::Display for SpmvKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
             SpmvKind::Crs => "crs",
             SpmvKind::Sell => "sell",
-        }
+        })
     }
 }
 
@@ -77,30 +99,41 @@ pub enum Scale {
     Full,
 }
 
-impl Scale {
-    pub fn parse(s: &str) -> Result<Self> {
-        Ok(match s.to_ascii_lowercase().as_str() {
-            "tiny" => Scale::Tiny,
-            "small" => Scale::Small,
-            "full" => Scale::Full,
-            other => bail!("unknown scale {other:?} (tiny|small|full)"),
-        })
-    }
+impl FromStr for Scale {
+    type Err = HbmcError;
 
-    pub fn name(&self) -> &'static str {
-        match self {
-            Scale::Tiny => "tiny",
-            Scale::Small => "small",
-            Scale::Full => "full",
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "tiny" => Ok(Scale::Tiny),
+            "small" => Ok(Scale::Small),
+            "full" => Ok(Scale::Full),
+            other => Err(HbmcError::invalid_config(format!(
+                "unknown scale {other:?} (tiny|small|full)"
+            ))),
         }
     }
 }
 
+impl fmt::Display for Scale {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Scale::Tiny => "tiny",
+            Scale::Small => "small",
+            Scale::Full => "full",
+        })
+    }
+}
+
 /// Full solver configuration.
+///
+/// Construct through [`SolverConfig::builder`] (validates on `build()`), or
+/// as a struct literal for internal/test code that calls
+/// [`validate`](SolverConfig::validate) via `SolverPlan::build` anyway.
 #[derive(Debug, Clone)]
 pub struct SolverConfig {
     pub ordering: OrderingKind,
-    /// BMC/HBMC block size (paper sweeps 8, 16, 32).
+    /// BMC/HBMC block size (paper sweeps 8, 16, 32). For HBMC, must be a
+    /// multiple of `w`.
     pub bs: usize,
     /// SIMD width / HBMC level-2 width / SELL slice height.
     pub w: usize,
@@ -148,17 +181,37 @@ pub enum NodePreset {
     SkxLike,
 }
 
-impl NodePreset {
-    pub fn parse(s: &str) -> Result<Self> {
-        Ok(match s.to_ascii_lowercase().as_str() {
-            "knl" | "knl-like" | "xc40" => NodePreset::KnlLike,
-            "bdw" | "bdw-like" | "cs400" | "broadwell" => NodePreset::BdwLike,
-            "skx" | "skx-like" | "cx2550" | "skylake" => NodePreset::SkxLike,
-            other => bail!("unknown node preset {other:?} (knl|bdw|skx)"),
+impl FromStr for NodePreset {
+    type Err = HbmcError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "knl" | "knl-like" | "xc40" => Ok(NodePreset::KnlLike),
+            "bdw" | "bdw-like" | "cs400" | "broadwell" => Ok(NodePreset::BdwLike),
+            "skx" | "skx-like" | "cx2550" | "skylake" => Ok(NodePreset::SkxLike),
+            other => Err(HbmcError::invalid_config(format!(
+                "unknown node preset {other:?} (knl|bdw|skx)"
+            ))),
+        }
+    }
+}
+
+impl fmt::Display for NodePreset {
+    /// Short canonical name; parses back via [`FromStr`] (round-trip).
+    /// See [`describe`](NodePreset::describe) for the paper-machine label.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            NodePreset::KnlLike => "knl-like",
+            NodePreset::BdwLike => "bdw-like",
+            NodePreset::SkxLike => "skx-like",
         })
     }
+}
 
-    pub fn name(&self) -> &'static str {
+impl NodePreset {
+    /// Human-readable label naming the paper machine (Table 4.1) — for
+    /// report titles; not parseable, unlike `Display`.
+    pub fn describe(&self) -> &'static str {
         match self {
             NodePreset::KnlLike => "knl-like (XC40)",
             NodePreset::BdwLike => "bdw-like (CS400)",
@@ -186,38 +239,123 @@ impl NodePreset {
 }
 
 impl SolverConfig {
+    /// Start a validating builder seeded with the defaults.
+    pub fn builder() -> SolverConfigBuilder {
+        SolverConfigBuilder { cfg: SolverConfig::default() }
+    }
+
     /// Human-readable plan label, e.g. `HBMC(bs=32,w=8,sell)` — used by
     /// reports and the CLI.
     pub fn label(&self) -> String {
-        format!(
-            "{}(bs={},w={},{})",
-            self.ordering.name(),
-            self.bs,
-            self.w,
-            self.spmv.name()
-        )
+        format!("{}(bs={},w={},{})", self.ordering, self.bs, self.w, self.spmv)
     }
 
     /// Validate parameter coherence.
     pub fn validate(&self) -> Result<()> {
         if self.bs == 0 || self.w == 0 {
-            bail!("bs and w must be positive");
+            return Err(HbmcError::invalid_config("bs and w must be positive"));
         }
-        if self.ordering == OrderingKind::Hbmc && self.bs < 1 {
-            bail!("hbmc requires bs >= 1");
+        if self.ordering == OrderingKind::Hbmc && self.bs % self.w != 0 {
+            return Err(HbmcError::invalid_config(format!(
+                "hbmc requires bs to be a multiple of w, got bs={} w={}: each \
+                 level-2 block packs w level-1 blocks of bs rows into bs \
+                 sequential w-wide steps",
+                self.bs, self.w
+            )));
         }
         if self.threads == 0 {
-            bail!("threads must be >= 1");
+            return Err(HbmcError::invalid_config("threads must be >= 1"));
         }
         if !(self.rtol > 0.0) {
-            bail!("rtol must be > 0");
+            return Err(HbmcError::invalid_config("rtol must be > 0"));
         }
         if let Some(sigma) = self.sell_sigma {
             if sigma < self.w || sigma % self.w != 0 {
-                bail!("sell_sigma must be a positive multiple of w");
+                return Err(HbmcError::invalid_config(
+                    "sell_sigma must be a positive multiple of w",
+                ));
             }
         }
         Ok(())
+    }
+}
+
+/// Fluent, validating constructor for [`SolverConfig`]; obtained from
+/// [`SolverConfig::builder`]. Every setter mirrors one field; `build()`
+/// runs [`SolverConfig::validate`], so a config obtained through the
+/// builder is valid by construction.
+#[derive(Debug, Clone)]
+pub struct SolverConfigBuilder {
+    cfg: SolverConfig,
+}
+
+impl SolverConfigBuilder {
+    pub fn ordering(mut self, ordering: OrderingKind) -> Self {
+        self.cfg.ordering = ordering;
+        self
+    }
+
+    /// BMC/HBMC block size (for HBMC, a multiple of `w`).
+    pub fn bs(mut self, bs: usize) -> Self {
+        self.cfg.bs = bs;
+        self
+    }
+
+    /// SIMD width / HBMC level-2 width / SELL slice height.
+    pub fn w(mut self, w: usize) -> Self {
+        self.cfg.w = w;
+        self
+    }
+
+    pub fn spmv(mut self, spmv: SpmvKind) -> Self {
+        self.cfg.spmv = spmv;
+        self
+    }
+
+    /// SELL-C-σ sorting window (must be a multiple of `w`).
+    pub fn sell_sigma(mut self, sigma: Option<usize>) -> Self {
+        self.cfg.sell_sigma = sigma;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    /// Relative residual convergence criterion.
+    pub fn rtol(mut self, rtol: f64) -> Self {
+        self.cfg.rtol = rtol;
+        self
+    }
+
+    pub fn max_iters(mut self, max_iters: usize) -> Self {
+        self.cfg.max_iters = max_iters;
+        self
+    }
+
+    /// Diagonal shift σ for shifted IC.
+    pub fn shift(mut self, shift: f64) -> Self {
+        self.cfg.shift = shift;
+        self
+    }
+
+    pub fn use_intrinsics(mut self, on: bool) -> Self {
+        self.cfg.use_intrinsics = on;
+        self
+    }
+
+    /// Apply a machine preset (sets `w` and the intrinsic path).
+    pub fn preset(mut self, node: NodePreset) -> Self {
+        node.apply(&mut self.cfg);
+        self
+    }
+
+    /// Validate and produce the config; [`HbmcError::InvalidConfig`] names
+    /// the violated invariant.
+    pub fn build(self) -> Result<SolverConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
     }
 }
 
@@ -226,18 +364,63 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parse_kinds() {
-        assert_eq!(OrderingKind::parse("HBMC").unwrap(), OrderingKind::Hbmc);
-        assert_eq!(OrderingKind::parse("mc").unwrap(), OrderingKind::Mc);
-        assert!(OrderingKind::parse("xyz").is_err());
-        assert_eq!(SpmvKind::parse("CSR").unwrap(), SpmvKind::Crs);
-        assert_eq!(Scale::parse("full").unwrap(), Scale::Full);
-        assert_eq!(NodePreset::parse("skx").unwrap(), NodePreset::SkxLike);
+    fn from_str_round_trips() {
+        assert_eq!("HBMC".parse::<OrderingKind>().unwrap(), OrderingKind::Hbmc);
+        assert_eq!("mc".parse::<OrderingKind>().unwrap(), OrderingKind::Mc);
+        assert!("xyz".parse::<OrderingKind>().is_err());
+        assert_eq!("CSR".parse::<SpmvKind>().unwrap(), SpmvKind::Crs);
+        assert_eq!("full".parse::<Scale>().unwrap(), Scale::Full);
+        assert_eq!("skx".parse::<NodePreset>().unwrap(), NodePreset::SkxLike);
+        // Display of each ordering parses back to itself.
+        for k in [OrderingKind::Natural, OrderingKind::Mc, OrderingKind::Bmc, OrderingKind::Hbmc] {
+            assert_eq!(k.to_string().parse::<OrderingKind>().unwrap(), k);
+        }
+        for s in [Scale::Tiny, Scale::Small, Scale::Full] {
+            assert_eq!(s.to_string().parse::<Scale>().unwrap(), s);
+        }
+        for n in NodePreset::all() {
+            assert_eq!(n.to_string().parse::<NodePreset>().unwrap(), n);
+            assert!(n.describe().starts_with(&n.to_string()));
+        }
+    }
+
+    #[test]
+    fn unknown_strings_report_invalid_config() {
+        let err = "warp".parse::<SpmvKind>().unwrap_err();
+        assert!(matches!(err, HbmcError::InvalidConfig(_)), "{err:?}");
+        assert!(err.to_string().contains("warp"));
     }
 
     #[test]
     fn default_is_valid() {
         assert!(SolverConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn builder_builds_and_validates() {
+        let cfg = SolverConfig::builder()
+            .ordering(OrderingKind::Hbmc)
+            .bs(16)
+            .w(4)
+            .spmv(SpmvKind::Crs)
+            .rtol(1e-9)
+            .max_iters(100)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.bs, 16);
+        assert_eq!(cfg.w, 4);
+        assert_eq!(cfg.rtol, 1e-9);
+        assert_eq!(cfg.label(), "HBMC(bs=16,w=4,crs)");
+
+        let err = SolverConfig::builder().threads(0).build().unwrap_err();
+        assert!(matches!(err, HbmcError::InvalidConfig(_)));
+    }
+
+    #[test]
+    fn builder_preset_sets_w() {
+        let cfg = SolverConfig::builder().preset(NodePreset::BdwLike).bs(16).build().unwrap();
+        assert_eq!(cfg.w, 4);
+        assert!(cfg.use_intrinsics);
     }
 
     #[test]
@@ -247,6 +430,19 @@ mod tests {
         assert_eq!(cfg.w, 4);
         NodePreset::KnlLike.apply(&mut cfg);
         assert_eq!(cfg.w, 8);
+    }
+
+    #[test]
+    fn validation_requires_hbmc_bs_multiple_of_w() {
+        let cfg = SolverConfig { ordering: OrderingKind::Hbmc, bs: 12, w: 8, ..Default::default() };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("multiple of w"), "{err}");
+        // The same shape is fine for BMC (no level-2 packing).
+        let cfg = SolverConfig { ordering: OrderingKind::Bmc, bs: 12, w: 8, ..Default::default() };
+        assert!(cfg.validate().is_ok());
+        // And fine for HBMC once bs is a multiple.
+        let cfg = SolverConfig { ordering: OrderingKind::Hbmc, bs: 16, w: 8, ..Default::default() };
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

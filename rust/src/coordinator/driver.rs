@@ -1,8 +1,9 @@
 //! One-shot solve orchestration and the report types shared with the
-//! session layer. [`solve`] / [`solve_opts`] are thin wrappers that build a
-//! single-use [`SolveSession`](crate::coordinator::session::SolveSession);
-//! production callers serving many right-hand sides should hold the session
-//! (or a `PlanCache`) themselves so the setup phase is paid once.
+//! session layer. [`solve`] / [`solve_opts`] are thin compatible wrappers
+//! (one plan, one single-use [`SolveSession`](crate::coordinator::session::SolveSession),
+//! one solve — the exact path a [`SolverService`](crate::api::SolverService)
+//! request takes); production callers serving many right-hand sides should
+//! hold a service so the setup phase is paid once.
 //!
 //! Reporting is split to make amortization observable:
 //!
@@ -12,10 +13,11 @@
 //! * [`SolveReport`] — per-solve metrics: iterations, residual, iteration-
 //!   loop wall time, kernel breakdown, plus its `PlanReport`.
 
-use anyhow::Result;
+use std::sync::Arc;
 
 use crate::config::SolverConfig;
 use crate::coordinator::session::SolveSession;
+use crate::error::Result;
 use crate::solver::cg::CgResult;
 use crate::solver::plan::{SetupStats, SolverPlan};
 use crate::sparse::csr::Csr;
@@ -128,20 +130,24 @@ impl SolveReport {
     }
 }
 
-/// One-shot convenience: plan + session + one solve. The report omits the
-/// solution and history; see [`SolveOptions`].
+/// One-shot convenience: plan + session + one solve, borrowing the matrix
+/// (no registration, no copy). The report omits the solution and history;
+/// see [`SolveOptions`]. Kept as a thin compatible wrapper — it runs the
+/// exact execution path a [`SolverService`](crate::api::SolverService)
+/// request takes, so results are bit-identical to the façade; production
+/// callers serving many right-hand sides should hold a service themselves.
 pub fn solve(a: &Csr, b: &[f64], cfg: &SolverConfig) -> Result<SolveReport> {
     solve_opts(a, b, cfg, &SolveOptions::default())
 }
 
-/// One-shot with explicit per-solve options.
+/// One-shot with explicit per-solve options (same thin wrapper).
 pub fn solve_opts(
     a: &Csr,
     b: &[f64],
     cfg: &SolverConfig,
     opts: &SolveOptions,
 ) -> Result<SolveReport> {
-    let session = SolveSession::from_matrix(a, cfg)?;
+    let session = SolveSession::for_request(Arc::new(SolverPlan::build(a, cfg)?), cfg);
     Ok(session.solve_with(b, opts)?.report)
 }
 

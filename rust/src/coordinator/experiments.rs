@@ -9,11 +9,11 @@
 //! * [`simd_ratio_stat`] — the §5.2.1 packed-instruction statistic,
 //! * [`sell_overhead_stat`] — the §5.2.2 processed-elements comparison.
 
-use anyhow::Result;
-
+use crate::api::{SolveRequest, SolverService};
 use crate::config::{NodePreset, OrderingKind, Scale, SolverConfig, SpmvKind};
-use crate::coordinator::driver::{solve, solve_opts, SolveOptions, SolveReport};
+use crate::coordinator::driver::SolveReport;
 use crate::coordinator::report::{pct, secs, Table};
+use crate::error::Result;
 use crate::gen::suite;
 use crate::solver::plan::SolverPlan;
 
@@ -32,7 +32,9 @@ pub fn table_5_2(scale: Scale, threads: usize) -> Result<(Table, Vec<[usize; 3]>
         &["Dataset", "MC", "BMC", "HBMC"],
     );
     let mut raw = Vec::new();
+    let service = SolverService::with_config(base_cfg(threads))?;
     for d in suite::all(scale) {
+        let handle = service.register_matrix(d.matrix);
         let mut iters = [0usize; 3];
         for (slot, ordering) in
             [OrderingKind::Mc, OrderingKind::Bmc, OrderingKind::Hbmc].into_iter().enumerate()
@@ -45,7 +47,8 @@ pub fn table_5_2(scale: Scale, threads: usize) -> Result<(Table, Vec<[usize; 3]>
                 shift: d.shift,
                 ..base_cfg(threads)
             };
-            let rep = solve(&d.matrix, &d.b, &cfg)?;
+            let req = SolveRequest::new().with_config(cfg);
+            let rep = service.solve_with(handle, &d.b, &req)?.report;
             iters[slot] = rep.iterations;
         }
         t.push_row(vec![
@@ -67,8 +70,10 @@ pub type ConvergenceCurves = Vec<(String, Vec<f64>, Vec<f64>)>;
 
 pub fn fig_5_1(datasets: &[&str], scale: Scale, threads: usize) -> Result<ConvergenceCurves> {
     let mut out = Vec::new();
+    let service = SolverService::with_config(base_cfg(threads))?;
     for name in datasets {
-        let d = suite::dataset(name, scale);
+        let d = suite::try_dataset(name, scale)?;
+        let handle = service.register_matrix(d.matrix);
         let mk = |ordering| SolverConfig {
             ordering,
             bs: 32,
@@ -77,8 +82,9 @@ pub fn fig_5_1(datasets: &[&str], scale: Scale, threads: usize) -> Result<Conver
             shift: d.shift,
             ..base_cfg(threads)
         };
-        let rb = solve_opts(&d.matrix, &d.b, &mk(OrderingKind::Bmc), &SolveOptions::history())?;
-        let rh = solve_opts(&d.matrix, &d.b, &mk(OrderingKind::Hbmc), &SolveOptions::history())?;
+        let req = |ordering| SolveRequest::new().with_config(mk(ordering)).record_history();
+        let rb = service.solve_with(handle, &d.b, &req(OrderingKind::Bmc))?.report;
+        let rh = service.solve_with(handle, &d.b, &req(OrderingKind::Hbmc))?.report;
         out.push((d.name.clone(), rb.residual_history, rh.residual_history));
     }
     Ok(out)
@@ -98,7 +104,7 @@ pub struct Cell {
 pub fn table_5_3(node: NodePreset, scale: Scale, threads: usize) -> Result<(Table, Vec<Cell>)> {
     let w = node.w();
     let mut t = Table::new(
-        &format!("Table 5.3 — ICCG execution time (s), node preset {}", node.name()),
+        &format!("Table 5.3 — ICCG execution time (s), node preset {}", node.describe()),
         &[
             "Dataset", "MC",
             "BMC b8", "BMC b16", "BMC b32",
@@ -107,7 +113,11 @@ pub fn table_5_3(node: NodePreset, scale: Scale, threads: usize) -> Result<(Tabl
         ],
     );
     let mut cells = Vec::new();
+    // One plan per cell (distinct configs), but one service + one matrix
+    // registration per dataset — the façade the serving tier uses.
+    let service = SolverService::with_capacity(base_cfg(threads), 16)?;
     for d in suite::all(scale) {
+        let handle = service.register_matrix(d.matrix);
         let mut row = vec![d.name.clone()];
         // MC baseline (CRS SpMV, as in the paper).
         let cfg = SolverConfig {
@@ -117,7 +127,8 @@ pub fn table_5_3(node: NodePreset, scale: Scale, threads: usize) -> Result<(Tabl
             shift: d.shift,
             ..base_cfg(threads)
         };
-        let rep = solve(&d.matrix, &d.b, &cfg)?;
+        let req = SolveRequest::new().with_config(cfg);
+        let rep = service.solve_with(handle, &d.b, &req)?.report;
         row.push(secs(rep.solve_seconds));
         cells.push(Cell { dataset: d.name.clone(), solver: "MC".into(), bs: 0, report: rep });
 
@@ -135,7 +146,8 @@ pub fn table_5_3(node: NodePreset, scale: Scale, threads: usize) -> Result<(Tabl
                     shift: d.shift,
                     ..base_cfg(threads)
                 };
-                let rep = solve(&d.matrix, &d.b, &cfg)?;
+                let req = SolveRequest::new().with_config(cfg);
+                let rep = service.solve_with(handle, &d.b, &req)?.report;
                 row.push(secs(rep.solve_seconds));
                 cells.push(Cell {
                     dataset: d.name.clone(),

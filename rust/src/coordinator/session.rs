@@ -11,11 +11,10 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use crate::config::{OrderingKind, SolverConfig, SpmvKind};
 use crate::coordinator::driver::{SolveOptions, SolveReport};
 use crate::coordinator::pool::Pool;
+use crate::error::Result;
 use crate::solver::plan::{ExecOptions, SolverPlan};
 use crate::sparse::csr::Csr;
 
@@ -149,8 +148,15 @@ pub struct PlanKey {
 
 impl PlanKey {
     pub fn new(a: &Csr, cfg: &SolverConfig) -> PlanKey {
+        PlanKey::from_fingerprint(a.fingerprint(), cfg)
+    }
+
+    /// Build the key from an already-computed matrix fingerprint — lets
+    /// callers that hold matrices long-term (the `SolverService` registry)
+    /// hash the matrix once at registration instead of per request.
+    pub fn from_fingerprint(fingerprint: u64, cfg: &SolverConfig) -> PlanKey {
         PlanKey {
-            fingerprint: a.fingerprint(),
+            fingerprint,
             ordering: cfg.ordering,
             bs: cfg.bs,
             w: cfg.w,
@@ -165,6 +171,17 @@ impl PlanKey {
 struct CacheEntry {
     plan: Arc<SolverPlan>,
     last_used: u64,
+}
+
+/// Point-in-time snapshot of a cache's counters (also surfaced through
+/// `SolverService::stats`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub len: usize,
+    pub capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
 }
 
 /// LRU store of built plans — the serving tier's answer to "a few matrices,
@@ -192,19 +209,25 @@ impl PlanCache {
         }
     }
 
-    /// Fetch the plan for `(a, cfg)`, building (and possibly evicting the
-    /// least-recently-used entry) on miss. Returns `(plan, was_hit)`.
-    pub fn get_or_build(&mut self, a: &Csr, cfg: &SolverConfig) -> Result<(Arc<SolverPlan>, bool)> {
-        let key = PlanKey::new(a, cfg);
+    /// Look up a plan by key, touching its LRU position and counting a hit.
+    /// Returns `None` (and counts nothing) on miss — the caller decides
+    /// whether to build (see [`insert`](PlanCache::insert)); the
+    /// `SolverService` uses this split to build outside the cache lock.
+    pub fn get(&mut self, key: &PlanKey) -> Option<Arc<SolverPlan>> {
         self.tick += 1;
-        if let Some(entry) = self.entries.get_mut(&key) {
-            entry.last_used = self.tick;
-            self.hits += 1;
-            return Ok((entry.plan.clone(), true));
-        }
-        let plan = Arc::new(SolverPlan::build(a, cfg)?);
+        let entry = self.entries.get_mut(key)?;
+        entry.last_used = self.tick;
+        self.hits += 1;
+        Some(entry.plan.clone())
+    }
+
+    /// Insert a freshly built plan, counting a miss and evicting the
+    /// least-recently-used entry if the cache is at capacity. Re-inserting
+    /// an existing key replaces the entry without eviction.
+    pub fn insert(&mut self, key: PlanKey, plan: Arc<SolverPlan>) {
+        self.tick += 1;
         self.misses += 1;
-        if self.entries.len() >= self.capacity {
+        if !self.entries.contains_key(&key) && self.entries.len() >= self.capacity {
             if let Some(lru) = self
                 .entries
                 .iter()
@@ -215,8 +238,18 @@ impl PlanCache {
                 self.evictions += 1;
             }
         }
-        self.entries
-            .insert(key, CacheEntry { plan: plan.clone(), last_used: self.tick });
+        self.entries.insert(key, CacheEntry { plan, last_used: self.tick });
+    }
+
+    /// Fetch the plan for `(a, cfg)`, building (and possibly evicting the
+    /// least-recently-used entry) on miss. Returns `(plan, was_hit)`.
+    pub fn get_or_build(&mut self, a: &Csr, cfg: &SolverConfig) -> Result<(Arc<SolverPlan>, bool)> {
+        let key = PlanKey::new(a, cfg);
+        if let Some(plan) = self.get(&key) {
+            return Ok((plan, true));
+        }
+        let plan = Arc::new(SolverPlan::build(a, cfg)?);
+        self.insert(key, plan.clone());
         Ok((plan, false))
     }
 
@@ -246,6 +279,21 @@ impl PlanCache {
 
     pub fn evictions(&self) -> u64 {
         self.evictions
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Snapshot of size and counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            len: self.entries.len(),
+            capacity: self.capacity,
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+        }
     }
 
     pub fn clear(&mut self) {

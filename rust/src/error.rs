@@ -1,0 +1,182 @@
+//! Crate-wide typed error: [`HbmcError`] is the single error type returned
+//! by every public library function (`config`, `sparse`, `factor`,
+//! `ordering`, `solver`, `coordinator`, `api`, `runtime`). Binaries may
+//! wrap it in a dynamic error type at the edge; the library itself never
+//! does.
+//!
+//! The core variants mirror the failure modes of the two-phase solver:
+//!
+//! * [`InvalidConfig`](HbmcError::InvalidConfig) — a [`SolverConfig`]
+//!   (or a string being parsed into one of its enums) violates an
+//!   invariant; produced by `SolverConfig::validate`, the
+//!   `SolverConfigBuilder`, and the `FromStr` impls,
+//! * [`DimensionMismatch`](HbmcError::DimensionMismatch) — a right-hand
+//!   side (or other vector) does not match the matrix dimension,
+//! * [`BreakdownInFactorization`](HbmcError::BreakdownInFactorization) —
+//!   IC(0) hit a non-positive pivot (or a structurally missing diagonal),
+//! * [`NotConverged`](HbmcError::NotConverged) — a solve was asked to
+//!   *require* convergence (see `SolveRequest::require_convergence`) and
+//!   the iteration cap was reached first,
+//! * [`UnknownMatrix`](HbmcError::UnknownMatrix) — a dataset name or
+//!   `MatrixHandle` that the registry/service does not know,
+//! * [`Io`](HbmcError::Io) — an underlying I/O failure, with the path or
+//!   operation as context.
+//!
+//! Three auxiliary variants cover the remaining library surface:
+//! [`Parse`](HbmcError::Parse) for malformed input text (MatrixMarket,
+//! kvtext artifacts), [`Runtime`](HbmcError::Runtime) for the PJRT/XLA
+//! backend, and [`Internal`](HbmcError::Internal) for violated internal
+//! invariants (e.g. a non-injective permutation).
+//!
+//! [`SolverConfig`]: crate::config::SolverConfig
+
+use std::fmt;
+
+/// Crate-wide result alias. The default error parameter keeps
+/// `Result<T, OtherError>` spellable where needed (e.g. `FromStr::Err`).
+pub type Result<T, E = HbmcError> = std::result::Result<T, E>;
+
+/// Typed error for every public library operation; see module docs.
+#[derive(Debug)]
+#[non_exhaustive]
+pub enum HbmcError {
+    /// A solver configuration (or an enum string being parsed into one)
+    /// violates an invariant.
+    InvalidConfig(String),
+    /// A vector's length does not match the matrix dimension.
+    DimensionMismatch { expected: usize, got: usize },
+    /// IC(0) factorization broke down (non-positive pivot or missing
+    /// diagonal). `row` is `None` when the auto-shift retry loop gave up.
+    BreakdownInFactorization {
+        row: Option<usize>,
+        shift: f64,
+        detail: String,
+    },
+    /// The iteration cap was reached on a solve that required convergence.
+    NotConverged { iterations: usize, relres: f64 },
+    /// Unknown dataset name or stale/foreign `MatrixHandle`.
+    UnknownMatrix(String),
+    /// Underlying I/O failure; `context` names the path or operation.
+    Io {
+        context: String,
+        source: std::io::Error,
+    },
+    /// Malformed input text (MatrixMarket files, kvtext artifacts).
+    Parse(String),
+    /// PJRT/XLA backend failure (including "built without the `pjrt`
+    /// feature").
+    Runtime(String),
+    /// An internal invariant was violated (library bug or corrupt input).
+    Internal(String),
+}
+
+impl HbmcError {
+    /// Attach `context` to an I/O error (path, operation).
+    pub fn io(context: impl Into<String>, source: std::io::Error) -> HbmcError {
+        HbmcError::Io { context: context.into(), source }
+    }
+
+    /// Convenience constructor matching the common call shape.
+    pub fn invalid_config(msg: impl Into<String>) -> HbmcError {
+        HbmcError::InvalidConfig(msg.into())
+    }
+
+    /// Convenience constructor for malformed-input errors.
+    pub fn parse(msg: impl Into<String>) -> HbmcError {
+        HbmcError::Parse(msg.into())
+    }
+}
+
+impl fmt::Display for HbmcError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HbmcError::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
+            HbmcError::DimensionMismatch { expected, got } => {
+                write!(f, "dimension mismatch: expected {expected}, got {got}")
+            }
+            HbmcError::BreakdownInFactorization { row, shift, detail } => match row {
+                Some(r) => write!(
+                    f,
+                    "IC(0) factorization breakdown at row {r} (shift {shift}): {detail}"
+                ),
+                None => write!(f, "IC(0) factorization breakdown (shift {shift}): {detail}"),
+            },
+            HbmcError::NotConverged { iterations, relres } => write!(
+                f,
+                "solver did not converge: {iterations} iterations, relative residual {relres:.3e}"
+            ),
+            HbmcError::UnknownMatrix(what) => write!(f, "unknown matrix: {what}"),
+            HbmcError::Io { context, source } => {
+                if context.is_empty() {
+                    write!(f, "I/O error: {source}")
+                } else {
+                    write!(f, "{context}: {source}")
+                }
+            }
+            HbmcError::Parse(msg) => write!(f, "parse error: {msg}"),
+            HbmcError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            HbmcError::Internal(msg) => write!(f, "internal error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for HbmcError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            HbmcError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for HbmcError {
+    fn from(e: std::io::Error) -> HbmcError {
+        HbmcError::Io { context: String::new(), source: e }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::error::Error as _;
+
+    #[test]
+    fn display_formats_each_variant() {
+        assert_eq!(
+            HbmcError::InvalidConfig("bs must be positive".into()).to_string(),
+            "invalid configuration: bs must be positive"
+        );
+        assert_eq!(
+            HbmcError::DimensionMismatch { expected: 100, got: 3 }.to_string(),
+            "dimension mismatch: expected 100, got 3"
+        );
+        let b = HbmcError::BreakdownInFactorization {
+            row: Some(7),
+            shift: 0.3,
+            detail: "non-positive pivot -1.0e0".into(),
+        };
+        assert!(b.to_string().contains("row 7"));
+        assert!(b.to_string().contains("0.3"));
+        let nc = HbmcError::NotConverged { iterations: 500, relres: 1.25e-3 };
+        assert!(nc.to_string().contains("500 iterations"));
+        assert!(HbmcError::UnknownMatrix("nope".into()).to_string().contains("nope"));
+        assert!(HbmcError::Parse("bad line".into()).to_string().starts_with("parse error"));
+        assert!(HbmcError::Runtime("no pjrt".into()).to_string().starts_with("runtime error"));
+    }
+
+    #[test]
+    fn io_conversion_preserves_source() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: HbmcError = io.into();
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("gone"));
+        let with_ctx = HbmcError::io("opening a.mtx", std::io::Error::other("denied"));
+        assert!(with_ctx.to_string().starts_with("opening a.mtx"));
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync + 'static>() {}
+        assert_send_sync::<HbmcError>();
+    }
+}

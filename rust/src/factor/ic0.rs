@@ -6,8 +6,7 @@
 //! the shift parameter given as 0.3"): the diagonal is scaled by `1 + σ`
 //! before factorization.
 
-use anyhow::{bail, Result};
-
+use crate::error::{HbmcError, Result};
 use crate::sparse::csr::Csr;
 
 /// IC(0) factor: `L` lower-triangular including the diagonal.
@@ -95,7 +94,13 @@ pub fn ic0(a: &Csr, shift: f64) -> Result<IcFactor> {
         }
         let aii = match a.get(i, i) {
             Some(v) => v,
-            None => bail!("ic0: missing diagonal at row {i}"),
+            None => {
+                return Err(HbmcError::BreakdownInFactorization {
+                    row: Some(i),
+                    shift,
+                    detail: "missing diagonal entry".into(),
+                })
+            }
         };
         let mut dii = aii * (1.0 + shift);
 
@@ -123,7 +128,11 @@ pub fn ic0(a: &Csr, shift: f64) -> Result<IcFactor> {
                 scratch[c as usize] = 0.0;
                 in_row[c as usize] = false;
             }
-            bail!("ic0: non-positive pivot {dii:.3e} at row {i} (shift {shift})");
+            return Err(HbmcError::BreakdownInFactorization {
+                row: Some(i),
+                shift,
+                detail: format!("non-positive pivot {dii:.3e}"),
+            });
         }
         diag[i] = dii.sqrt();
         diag_inv[i] = 1.0 / diag[i];
@@ -155,7 +164,14 @@ pub fn ic0_auto(a: &Csr, shift: f64) -> Result<IcFactor> {
             loop {
                 s *= 2.0;
                 if s > 10.0 {
-                    bail!("ic0_auto: no successful shift up to 10.0");
+                    return Err(HbmcError::BreakdownInFactorization {
+                        row: None,
+                        // s itself was never tried; report the last shift
+                        // that actually ran (s/2, or the caller's on the
+                        // first round).
+                        shift: (s / 2.0).max(shift),
+                        detail: "ic0_auto: no successful shift up to 10.0".into(),
+                    });
                 }
                 if let Ok(f) = ic0(a, s) {
                     return Ok(f);

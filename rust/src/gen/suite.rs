@@ -3,9 +3,8 @@
 //! substitution rationale per dataset; the *class* properties (nnz/row,
 //! irregularity, definiteness) are matched, not the exact files.
 
-use anyhow::{bail, Result};
-
 use crate::config::Scale;
+use crate::error::{HbmcError, Result};
 use crate::gen::{circuit, edgefem, elasticity, fdm, fem2d, Dataset};
 
 /// Paper dataset names in table order.
@@ -87,7 +86,11 @@ pub fn try_dataset(name: &str, scale: Scale) -> Result<Dataset> {
                 0.3,
             )
         }
-        _ => bail!("unknown dataset {name:?}; known: {NAMES:?}"),
+        _ => {
+            return Err(HbmcError::UnknownMatrix(format!(
+                "dataset {name:?}; known: {NAMES:?}"
+            )))
+        }
     })
 }
 

@@ -3,34 +3,86 @@
 //! Reproduction of Iwashita, Li & Fukaya (2019), *"Hierarchical Block
 //! Multi-Color Ordering: A New Parallel Ordering Method for Vectorization
 //! and Parallelization of the Sparse Triangular Solver in the ICCG
-//! Method"*, grown into a servable two-phase solver.
+//! Method"*, grown into a servable, thread-safe two-phase solver.
+//!
+//! ## The front door: builder → service → handles
+//!
+//! Production callers go through three typed pieces (the [`api`] layer):
+//!
+//! 1. [`SolverConfig::builder`](config::SolverConfig::builder) — per-field
+//!    setters, validated on `build()`, so an invalid configuration is
+//!    rejected before it can reach a kernel;
+//! 2. [`SolverService`](api::SolverService) — a `Send + Sync` endpoint
+//!    owning the matrix registry and the LRU plan cache; share one behind
+//!    an `Arc` across every request thread. Concurrent requests for the
+//!    same (matrix, config) key coalesce into **exactly one** plan build;
+//! 3. [`MatrixHandle`](api::MatrixHandle) +
+//!    [`SolveRequest`](api::SolveRequest) — registered matrices are
+//!    addressed by copyable handles, and each request may override
+//!    tolerances or the whole structural config without touching the
+//!    service defaults.
+//!
+//! Every public library function returns
+//! [`Result<T, HbmcError>`](error::HbmcError) — no stringly-typed error
+//! crates outside the binary edge.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hbmc::prelude::*;
+//! use std::sync::Arc;
+//!
+//! // 1. A validated configuration (the paper's headline solver).
+//! let cfg = SolverConfig::builder()
+//!     .ordering(OrderingKind::Hbmc)
+//!     .bs(32)
+//!     .w(8)
+//!     .spmv(SpmvKind::Sell)
+//!     .rtol(1e-7)
+//!     .build()?;
+//!
+//! // 2. One service for the whole process; register matrices once.
+//! let service = Arc::new(SolverService::with_config(cfg)?);
+//! let dataset = hbmc::gen::suite::dataset("g3_circuit", Scale::Small);
+//! let n = dataset.n();
+//! let handle = service.register_matrix(dataset.matrix);
+//!
+//! // 3. Serve right-hand sides — from any thread. The first solve builds
+//! //    the plan (ordering + IC(0) + storage); every later solve reuses it.
+//! let out = service.solve(handle, &dataset.b)?;
+//! println!("iters={} time={:.3}s", out.report.iterations, out.report.solve_seconds);
+//!
+//! // Per-request overrides never disturb the service defaults:
+//! let strict = SolveRequest::new().rtol(1e-10).require_convergence();
+//! let out = service.solve_with(handle, &vec![1.0; n], &strict)?;
+//! println!("strict: {} iters; cache: {:?}", out.report.iterations, service.stats().cache);
+//! # Ok::<(), HbmcError>(())
+//! ```
 //!
 //! ## Two-phase architecture (plan / execute)
 //!
 //! The paper's premise is that the expensive reordering + IC(0)
-//! factorization setup is amortized over many triangular sweeps. The crate
-//! makes that split explicit:
+//! factorization setup is amortized over many triangular sweeps. Beneath
+//! the service, the split is explicit and still public:
 //!
 //! * **Phase 1 — plan** ([`solver::plan::SolverPlan::build`]): ordering →
 //!   symmetric permutation → IC(0)/shifted-IC factorization → CSR/SELL
-//!   storage → kernel-path selection. The result is an immutable
-//!   [`SolverPlan`](solver::plan::SolverPlan) holding the permutation, the
-//!   permuted matrix, the factor triangles behind a unified
-//!   [`TriSolver`](solver::trisolve::TriSolver) trait object, and the
-//!   per-plan [`SetupStats`](solver::plan::SetupStats).
-//! * **Phase 2 — execute** ([`coordinator::session::SolveSession`]): a
-//!   session wraps one `Arc<SolverPlan>` with one persistent color-barrier
-//!   thread pool and serves `solve` / batched `solve_many` over arbitrarily
-//!   many right-hand sides. An LRU
-//!   [`PlanCache`](coordinator::session::PlanCache) keyed by (matrix
-//!   fingerprint, ordering, bs, w, spmv, …) removes re-setup across
-//!   requests entirely.
+//!   storage → kernel-path selection, producing an immutable
+//!   `Arc<SolverPlan>`.
+//! * **Phase 2 — execute** ([`coordinator::session::SolveSession`]): one
+//!   persistent color-barrier thread pool serving `solve` / `solve_many`
+//!   against one plan; the LRU
+//!   [`PlanCache`](coordinator::session::PlanCache) keys plans by (matrix
+//!   fingerprint, ordering, bs, w, spmv, …).
 //!
-//! [`coordinator::driver::solve`] remains as a thin one-shot wrapper
-//! (plan + session + single solve) for tests, tables and quick runs.
+//! [`coordinator::driver::solve`] remains as a thin one-shot wrapper over
+//! the service (plan + session + single solve) for tests and tables.
 //!
 //! ## Layer map
 //!
+//! * [`api`] — the typed, concurrent façade (`SolverService`, handles,
+//!   requests),
+//! * [`error`] — [`HbmcError`](error::HbmcError), the crate-wide error,
 //! * [`sparse`] — CSR / COO / SELL-C-σ storage and Matrix-Market IO,
 //! * [`gen`] — synthetic generators standing in for the paper's five test
 //!   matrices (see `DESIGN.md` §3 for the substitution rationale),
@@ -44,32 +96,12 @@
 //!   metrics and paper-style reporting,
 //! * [`runtime`] — PJRT executor for the AOT JAX/Pallas artifacts
 //!   (`pjrt` cargo feature; stubbed offline).
-//!
-//! ## Quickstart
-//!
-//! ```no_run
-//! use std::sync::Arc;
-//! use hbmc::prelude::*;
-//!
-//! let a = hbmc::gen::suite::dataset("g3_circuit", Scale::Small).matrix;
-//! let cfg = SolverConfig { ordering: OrderingKind::Hbmc, bs: 32, w: 8, ..Default::default() };
-//!
-//! // Phase 1: build the plan once (ordering + factorization + storage).
-//! let plan = Arc::new(SolverPlan::build(&a, &cfg).unwrap());
-//! println!("setup {:.3}s, {} colors", plan.setup.setup_seconds(), plan.setup.num_colors);
-//!
-//! // Phase 2: open a session and serve many right-hand sides.
-//! let session = SolveSession::new(plan);
-//! for scale in [1.0, 2.0, 3.0] {
-//!     let b = vec![scale; a.n()];
-//!     let out = session.solve(&b).unwrap();
-//!     println!("iters={} time={:.3}s", out.report.iterations, out.report.solve_seconds);
-//! }
-//! ```
 
+pub mod api;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod factor;
 pub mod gen;
 pub mod ordering;
@@ -80,9 +112,13 @@ pub mod util;
 
 /// Convenient re-exports for downstream users.
 pub mod prelude {
-    pub use crate::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
+    pub use crate::api::{MatrixHandle, ServiceStats, SolveRequest, SolverService};
+    pub use crate::config::{
+        NodePreset, OrderingKind, Scale, SolverConfig, SolverConfigBuilder, SpmvKind,
+    };
     pub use crate::coordinator::driver::{solve, solve_opts, PlanReport, SolveOptions, SolveReport};
     pub use crate::coordinator::session::{PlanCache, SolveOutput, SolveSession};
+    pub use crate::error::HbmcError;
     pub use crate::factor::ic0::IcFactor;
     pub use crate::ordering::{bmc::BmcOrdering, hbmc::HbmcOrdering, perm::Perm};
     pub use crate::solver::cg::CgResult;

@@ -14,11 +14,11 @@
 
 use anyhow::{bail, Context, Result};
 
+use hbmc::api::SolverService;
 use hbmc::cli::Args;
 use hbmc::config::{NodePreset, OrderingKind, Scale, SolverConfig, SpmvKind};
 use hbmc::coordinator::driver::SolveOptions;
 use hbmc::coordinator::experiments;
-use hbmc::coordinator::session::SolveSession;
 use hbmc::gen::suite;
 
 fn main() {
@@ -34,26 +34,23 @@ fn main() {
 }
 
 fn cfg_from(args: &Args, shift: f64) -> Result<SolverConfig> {
-    let mut cfg = SolverConfig {
-        ordering: OrderingKind::parse(&args.flag_or("ordering", "hbmc"))?,
-        bs: args.usize_flag("bs", 32)?,
-        w: args.usize_flag("w", 8)?,
-        spmv: SpmvKind::parse(&args.flag_or("spmv", "sell"))?,
-        threads: args.usize_flag("threads", 1)?,
-        rtol: args.f64_flag("rtol", 1e-7)?,
-        max_iters: args.usize_flag("max-iters", 50_000)?,
-        shift: args.f64_flag("shift", shift)?,
-        use_intrinsics: !args.switch("no-intrinsics"),
-        sell_sigma: match args.flag("sell-sigma") {
-            Some(v) => Some(v.parse()?),
-            None => None,
-        },
-    };
-    if let Some(node) = args.flag("node") {
-        NodePreset::parse(node)?.apply(&mut cfg);
+    let mut builder = SolverConfig::builder()
+        .ordering(args.flag_or("ordering", "hbmc").parse::<OrderingKind>()?)
+        .bs(args.usize_flag("bs", 32)?)
+        .w(args.usize_flag("w", 8)?)
+        .spmv(args.flag_or("spmv", "sell").parse::<SpmvKind>()?)
+        .threads(args.usize_flag("threads", 1)?)
+        .rtol(args.f64_flag("rtol", 1e-7)?)
+        .max_iters(args.usize_flag("max-iters", 50_000)?)
+        .shift(args.f64_flag("shift", shift)?)
+        .use_intrinsics(!args.switch("no-intrinsics"));
+    if let Some(v) = args.flag("sell-sigma") {
+        builder = builder.sell_sigma(Some(v.parse()?));
     }
-    cfg.validate()?;
-    Ok(cfg)
+    if let Some(node) = args.flag("node") {
+        builder = builder.preset(node.parse::<NodePreset>()?);
+    }
+    Ok(builder.build()?)
 }
 
 fn run(args: Args) -> Result<()> {
@@ -94,22 +91,24 @@ DATASETS: thermal2, parabolic_fem, g3_circuit, audikw_1, ieej
 ";
 
 fn cmd_solve(args: &Args) -> Result<()> {
-    let scale = Scale::parse(&args.flag_or("scale", "small"))?;
+    let scale: Scale = args.flag_or("scale", "small").parse()?;
     let name = args.flag_or("dataset", "g3_circuit");
     let repeat = args.usize_flag("repeat", 1)?.max(1);
     let d = suite::try_dataset(&name, scale)?;
     let cfg = cfg_from(args, d.shift)?;
     println!(
-        "dataset={} n={} nnz={} ({:.1}/row) scale={}",
+        "dataset={} n={} nnz={} ({:.1}/row) scale={scale}",
         d.name,
         d.n(),
         d.nnz(),
         d.nnz_per_row(),
-        scale.name()
     );
 
-    // Phase 1: plan + session (paid once, however many solves follow).
-    let session = SolveSession::from_matrix(&d.matrix, &cfg)?;
+    // The typed façade: one service, one registered matrix, one session.
+    // Phase 1 (plan build) happens inside `session`; phase 2 below.
+    let service = SolverService::with_config(cfg.clone())?;
+    let handle = service.register_matrix(d.matrix);
+    let session = service.session(handle, &cfg)?;
     let plan = session.plan();
     println!(
         "config={} threads={} kernel={} trisolver={}",
@@ -179,7 +178,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
 }
 
 fn cmd_table(args: &Args) -> Result<()> {
-    let scale = Scale::parse(&args.flag_or("scale", "small"))?;
+    let scale: Scale = args.flag_or("scale", "small").parse()?;
     let threads = args.usize_flag("threads", 1)?;
     match args.flag_or("id", "5.2").as_str() {
         "5.2" => {
@@ -187,7 +186,7 @@ fn cmd_table(args: &Args) -> Result<()> {
             print!("{}", t.render());
         }
         "5.3" => {
-            let node = NodePreset::parse(&args.flag_or("node", "skx"))?;
+            let node: NodePreset = args.flag_or("node", "skx").parse()?;
             let (t, _) = experiments::table_5_3(node, scale, threads)?;
             print!("{}", t.render());
         }
@@ -199,7 +198,7 @@ fn cmd_table(args: &Args) -> Result<()> {
 }
 
 fn cmd_convergence(args: &Args) -> Result<()> {
-    let scale = Scale::parse(&args.flag_or("scale", "small"))?;
+    let scale: Scale = args.flag_or("scale", "small").parse()?;
     let list = args.flag_or("datasets", "g3_circuit,ieej");
     let names: Vec<&str> = list.split(',').collect();
     let curves = experiments::fig_5_1(&names, scale, args.usize_flag("threads", 1)?)?;
@@ -230,7 +229,7 @@ fn cmd_convergence(args: &Args) -> Result<()> {
 fn cmd_verify(args: &Args) -> Result<()> {
     use hbmc::ordering::graph::{er_condition_holds, orderings_equivalent};
     use hbmc::ordering::hbmc::{check_level2_diagonal, hbmc_order};
-    let scale = Scale::parse(&args.flag_or("scale", "tiny"))?;
+    let scale: Scale = args.flag_or("scale", "tiny").parse()?;
     let mut failures = 0;
     for d in suite::all(scale) {
         for (bs, w) in [(8usize, 4usize), (32, 8)] {
@@ -304,7 +303,7 @@ fn cmd_run_hlo(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let scale = Scale::parse(&args.flag_or("scale", "small"))?;
+    let scale: Scale = args.flag_or("scale", "small").parse()?;
     let name = args.flag_or("dataset", "g3_circuit");
     let d = suite::try_dataset(&name, scale)?;
     println!("dataset      {}", d.name);

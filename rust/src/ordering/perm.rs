@@ -3,7 +3,7 @@
 //! "dummy unknowns" (paper §4.3), which we model as injective maps
 //! `old → new` with identity rows on the unused new slots.
 
-use anyhow::{bail, Result};
+use crate::error::{HbmcError, Result};
 
 /// Sentinel marking a padded (dummy) slot in `old_of_new`.
 pub const DUMMY: u32 = u32::MAX;
@@ -33,15 +33,21 @@ impl Perm {
     /// hit become dummies.
     pub fn padded(new_of_old: Vec<u32>, n_new: usize) -> Result<Perm> {
         if new_of_old.len() > n_new {
-            bail!("perm: n_old {} exceeds n_new {}", new_of_old.len(), n_new);
+            return Err(HbmcError::Internal(format!(
+                "perm: n_old {} exceeds n_new {}",
+                new_of_old.len(),
+                n_new
+            )));
         }
         let mut old_of_new = vec![DUMMY; n_new];
         for (old, &new) in new_of_old.iter().enumerate() {
             if new as usize >= n_new {
-                bail!("perm: image {} out of range {}", new, n_new);
+                return Err(HbmcError::Internal(format!(
+                    "perm: image {new} out of range {n_new}"
+                )));
             }
             if old_of_new[new as usize] != DUMMY {
-                bail!("perm: image {} hit twice", new);
+                return Err(HbmcError::Internal(format!("perm: image {new} hit twice")));
             }
             old_of_new[new as usize] = old as u32;
         }

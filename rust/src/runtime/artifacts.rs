@@ -14,8 +14,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Result};
-
+use crate::error::{HbmcError, Result};
 use crate::sparse::coo::Coo;
 use crate::sparse::csr::Csr;
 use crate::util::kvtext::KvDoc;
@@ -35,7 +34,10 @@ impl ArtifactSet {
             if dir.join("meta.txt").exists() {
                 return Ok(ArtifactSet { dir });
             }
-            bail!("HBMC_ARTIFACTS={} has no meta.txt", dir.display());
+            return Err(HbmcError::Runtime(format!(
+                "HBMC_ARTIFACTS={} has no meta.txt",
+                dir.display()
+            )));
         }
         for cand in ["artifacts", "../artifacts", "../../artifacts"] {
             let dir = PathBuf::from(cand);
@@ -43,7 +45,9 @@ impl ArtifactSet {
                 return Ok(ArtifactSet { dir });
             }
         }
-        bail!("artifact set not found — run `make artifacts` first")
+        Err(HbmcError::Runtime(
+            "artifact set not found — run `make artifacts` first".into(),
+        ))
     }
 
     pub fn at(dir: &Path) -> ArtifactSet {
@@ -74,7 +78,9 @@ pub fn canonical_matrix(golden: &KvDoc) -> Result<Csr> {
     let rows = golden.usize_vec("mat_rows")?;
     let cols = golden.usize_vec("mat_cols")?;
     let vals = golden.f64_vec("mat_vals")?;
-    anyhow::ensure!(rows.len() == cols.len() && cols.len() == vals.len(), "triplet arity");
+    if rows.len() != cols.len() || cols.len() != vals.len() {
+        return Err(HbmcError::Parse("golden matrix triplet arrays differ in length".into()));
+    }
     let mut coo = Coo::with_capacity(n, rows.len());
     for ((i, j), v) in rows.into_iter().zip(cols).zip(vals) {
         coo.push(i, j, v);

@@ -6,8 +6,7 @@
 //! `python/compile/aot.py` (matrix data baked as constants), so they take
 //! only the iteration vectors as runtime inputs.
 
-use anyhow::{Context, Result};
-
+use crate::error::{HbmcError, Result};
 use crate::runtime::artifacts::ArtifactSet;
 use crate::runtime::pjrt::{Arg, Executable, PjrtRuntime};
 
@@ -22,15 +21,15 @@ impl HybridPrecond {
     pub fn load(rt: &PjrtRuntime, arts: &ArtifactSet) -> Result<HybridPrecond> {
         let meta = arts.meta()?;
         let n = meta.usize("n_aug")?;
-        let exe = rt
-            .load_hlo_text(&arts.hlo_path("precond_hbmc"), 1)
-            .context("loading precond_hbmc")?;
+        let exe = rt.load_hlo_text(&arts.hlo_path("precond_hbmc"), 1)?;
         Ok(HybridPrecond { exe, n })
     }
 
     /// Apply to a vector in the canonical problem's HBMC ordering.
     pub fn apply(&self, r: &[f64]) -> Result<Vec<f64>> {
-        anyhow::ensure!(r.len() == self.n, "dimension mismatch");
+        if r.len() != self.n {
+            return Err(HbmcError::DimensionMismatch { expected: self.n, got: r.len() });
+        }
         let mut out = self.exe.run_f64(&[Arg::f64(r)])?;
         Ok(out.remove(0))
     }
@@ -46,14 +45,14 @@ impl HybridSpmv {
     pub fn load(rt: &PjrtRuntime, arts: &ArtifactSet) -> Result<HybridSpmv> {
         let meta = arts.meta()?;
         let n = meta.usize("n_aug")?;
-        let exe = rt
-            .load_hlo_text(&arts.hlo_path("spmv_sell"), 1)
-            .context("loading spmv_sell")?;
+        let exe = rt.load_hlo_text(&arts.hlo_path("spmv_sell"), 1)?;
         Ok(HybridSpmv { exe, n })
     }
 
     pub fn apply(&self, x: &[f64]) -> Result<Vec<f64>> {
-        anyhow::ensure!(x.len() == self.n, "dimension mismatch");
+        if x.len() != self.n {
+            return Err(HbmcError::DimensionMismatch { expected: self.n, got: x.len() });
+        }
         let mut out = self.exe.run_f64(&[Arg::f64(x)])?;
         Ok(out.remove(0))
     }
@@ -71,9 +70,7 @@ impl HybridPcgStep {
     pub fn load(rt: &PjrtRuntime, arts: &ArtifactSet) -> Result<HybridPcgStep> {
         let meta = arts.meta()?;
         let n = meta.usize("n_aug")?;
-        let exe = rt
-            .load_hlo_text(&arts.hlo_path("pcg_step"), 6)
-            .context("loading pcg_step")?;
+        let exe = rt.load_hlo_text(&arts.hlo_path("pcg_step"), 6)?;
         Ok(HybridPcgStep { exe, n })
     }
 

@@ -3,7 +3,11 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::error::{HbmcError, Result};
+
+fn xla_err(context: &str, e: impl std::fmt::Display) -> HbmcError {
+    HbmcError::Runtime(format!("{context}: {e}"))
+}
 
 /// A PJRT CPU client plus compiled executables.
 pub struct PjrtRuntime {
@@ -44,8 +48,12 @@ impl Arg {
 
     fn to_literal(&self) -> Result<xla::Literal> {
         Ok(match self {
-            Arg::F64(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
-            Arg::I32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
+            Arg::F64(data, shape) => xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| xla_err("reshaping f64 argument", e))?,
+            Arg::I32(data, shape) => xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| xla_err("reshaping i32 argument", e))?,
         })
     }
 }
@@ -53,7 +61,8 @@ impl Arg {
 impl PjrtRuntime {
     /// Construct the CPU client.
     pub fn cpu() -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| xla_err("creating PJRT CPU client", e))?;
         Ok(PjrtRuntime { client })
     }
 
@@ -63,13 +72,16 @@ impl PjrtRuntime {
 
     /// Load an HLO-text artifact and compile it.
     pub fn load_hlo_text(&self, path: &Path, num_outputs: usize) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| HbmcError::Runtime(format!("non-utf8 path {}", path.display())))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| xla_err(&format!("parsing HLO text {}", path.display()), e))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
+            .map_err(|e| xla_err(&format!("compiling {}", path.display()), e))?;
         Ok(Executable { exe, num_outputs })
     }
 }
@@ -81,19 +93,23 @@ impl Executable {
     pub fn run_f64(&self, args: &[Arg]) -> Result<Vec<Vec<f64>>> {
         let literals: Vec<xla::Literal> =
             args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| xla_err("executing", e))?[0][0]
             .to_literal_sync()
-            .context("fetching result literal")?;
-        let leaves = result.to_tuple()?;
-        anyhow::ensure!(
-            leaves.len() == self.num_outputs,
-            "expected {} outputs, got {}",
-            self.num_outputs,
-            leaves.len()
-        );
+            .map_err(|e| xla_err("fetching result literal", e))?;
+        let leaves = result.to_tuple().map_err(|e| xla_err("untupling result", e))?;
+        if leaves.len() != self.num_outputs {
+            return Err(HbmcError::Runtime(format!(
+                "expected {} outputs, got {}",
+                self.num_outputs,
+                leaves.len()
+            )));
+        }
         leaves
             .into_iter()
-            .map(|l| l.to_vec::<f64>().context("output is not f64"))
+            .map(|l| l.to_vec::<f64>().map_err(|e| xla_err("output is not f64", e)))
             .collect()
     }
 }

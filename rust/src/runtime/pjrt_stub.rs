@@ -5,7 +5,7 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use crate::error::{HbmcError, Result};
 
 /// Uninhabited marker: stub runtimes cannot be constructed, which lets the
 /// remaining methods type-check without a real implementation behind them.
@@ -52,11 +52,12 @@ impl Arg {
 impl PjrtRuntime {
     /// Always fails: the crate was compiled without the `pjrt` feature.
     pub fn cpu() -> Result<PjrtRuntime> {
-        bail!(
+        Err(HbmcError::Runtime(
             "hbmc was built without the `pjrt` feature; rebuild with \
              `cargo build --features pjrt` (requires the XLA extension) \
              to run AOT artifacts"
-        )
+                .into(),
+        ))
     }
 
     pub fn platform(&self) -> String {

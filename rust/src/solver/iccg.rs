@@ -10,11 +10,10 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use crate::config::SolverConfig;
 use crate::coordinator::metrics::OpProfile;
 use crate::coordinator::pool::Pool;
+use crate::error::Result;
 use crate::ordering::perm::Perm;
 use crate::solver::plan::{ExecOptions, SolverPlan};
 use crate::sparse::csr::Csr;

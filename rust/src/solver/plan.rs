@@ -17,11 +17,10 @@ use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
-
 use crate::config::{OrderingKind, SolverConfig, SpmvKind};
 use crate::coordinator::metrics::{per_iteration_ops, OpInputs, OpProfile};
 use crate::coordinator::pool::Pool;
+use crate::error::{HbmcError, Result};
 use crate::factor::ic0::ic0_auto;
 use crate::factor::split::{SellTriFactors, TriFactors};
 use crate::ordering::perm::Perm;
@@ -127,7 +126,7 @@ impl SolverPlan {
 
         // --- Factorization ----------------------------------------------
         let t1 = Instant::now();
-        let factor = ic0_auto(&a_perm, cfg.shift).context("IC(0) factorization failed")?;
+        let factor = ic0_auto(&a_perm, cfg.shift)?;
         let shift_used = factor.shift;
         let tri = TriFactors::from_ic(&factor);
         let factor_seconds = t1.elapsed().as_secs_f64();
@@ -230,12 +229,12 @@ impl SolverPlan {
     /// the plan itself is never mutated, so concurrent `execute` calls on
     /// distinct pools are safe.
     pub fn execute(&self, pool: &Pool, b: &[f64], opts: &ExecOptions) -> Result<SolveOutcome> {
-        anyhow::ensure!(
-            b.len() == self.setup.n_orig,
-            "rhs dimension mismatch: got {}, matrix has {}",
-            b.len(),
-            self.setup.n_orig
-        );
+        if b.len() != self.setup.n_orig {
+            return Err(HbmcError::DimensionMismatch {
+                expected: self.setup.n_orig,
+                got: b.len(),
+            });
+        }
         let n = self.n_aug();
         let b_perm = self.perm.apply_vec(b, 0.0);
         let mut x_perm = vec![0.0f64; n];

@@ -9,14 +9,14 @@
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
+use crate::error::{HbmcError, Result};
 use crate::sparse::coo::Coo;
 use crate::sparse::csr::Csr;
 
 /// Read a square MatrixMarket file into CSR (symmetric files are expanded).
 pub fn read(path: &Path) -> Result<Csr> {
-    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let f = std::fs::File::open(path)
+        .map_err(|e| HbmcError::io(format!("opening {}", path.display()), e))?;
     read_from(BufReader::new(f))
 }
 
@@ -25,26 +25,30 @@ pub fn read_from(reader: impl BufRead) -> Result<Csr> {
     let mut lines = reader.lines();
     let header = lines
         .next()
-        .context("matrix market: empty file")?
-        .context("matrix market: read error")?;
+        .ok_or_else(|| HbmcError::parse("matrix market: empty file"))?
+        .map_err(|e| HbmcError::io("matrix market: read error", e))?;
     let h: Vec<String> = header.split_whitespace().map(|t| t.to_lowercase()).collect();
     if h.len() < 5 || h[0] != "%%matrixmarket" || h[1] != "matrix" || h[2] != "coordinate" {
-        bail!("matrix market: unsupported header {header:?}");
+        return Err(HbmcError::parse(format!("matrix market: unsupported header {header:?}")));
     }
     let pattern = match h[3].as_str() {
         "real" | "integer" => false,
         "pattern" => true,
-        other => bail!("matrix market: unsupported field {other:?}"),
+        other => {
+            return Err(HbmcError::parse(format!("matrix market: unsupported field {other:?}")))
+        }
     };
     let symmetric = match h[4].as_str() {
         "general" => false,
         "symmetric" => true,
-        other => bail!("matrix market: unsupported symmetry {other:?}"),
+        other => {
+            return Err(HbmcError::parse(format!("matrix market: unsupported symmetry {other:?}")))
+        }
     };
 
     let mut size_line = None;
     for line in lines.by_ref() {
-        let line = line.context("matrix market: read error")?;
+        let line = line.map_err(|e| HbmcError::io("matrix market: read error", e))?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('%') {
             continue;
@@ -52,37 +56,56 @@ pub fn read_from(reader: impl BufRead) -> Result<Csr> {
         size_line = Some(t.to_string());
         break;
     }
-    let size_line = size_line.context("matrix market: missing size line")?;
+    let size_line = size_line.ok_or_else(|| HbmcError::parse("matrix market: missing size line"))?;
     let dims: Vec<usize> = size_line
         .split_whitespace()
-        .map(|t| t.parse().context("matrix market: bad size line"))
+        .map(|t| {
+            t.parse().map_err(|_| {
+                HbmcError::parse(format!("matrix market: bad size line {size_line:?}"))
+            })
+        })
         .collect::<Result<_>>()?;
     if dims.len() != 3 {
-        bail!("matrix market: bad size line {size_line:?}");
+        return Err(HbmcError::parse(format!("matrix market: bad size line {size_line:?}")));
     }
     let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
     if nrows != ncols {
-        bail!("matrix market: only square matrices supported ({nrows}x{ncols})");
+        return Err(HbmcError::parse(format!(
+            "matrix market: only square matrices supported ({nrows}x{ncols})"
+        )));
     }
 
     let mut coo = Coo::with_capacity(nrows, if symmetric { 2 * nnz } else { nnz });
     let mut seen = 0usize;
     for line in lines {
-        let line = line.context("matrix market: read error")?;
+        let line = line.map_err(|e| HbmcError::io("matrix market: read error", e))?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('%') {
             continue;
         }
         let mut it = t.split_whitespace();
-        let i: usize = it.next().context("mm: missing row")?.parse().context("mm: bad row")?;
-        let j: usize = it.next().context("mm: missing col")?.parse().context("mm: bad col")?;
+        let i: usize = it
+            .next()
+            .ok_or_else(|| HbmcError::parse("mm: missing row"))?
+            .parse()
+            .map_err(|_| HbmcError::parse("mm: bad row"))?;
+        let j: usize = it
+            .next()
+            .ok_or_else(|| HbmcError::parse("mm: missing col"))?
+            .parse()
+            .map_err(|_| HbmcError::parse("mm: bad col"))?;
         let v: f64 = if pattern {
             1.0
         } else {
-            it.next().context("mm: missing value")?.parse().context("mm: bad value")?
+            it.next()
+                .ok_or_else(|| HbmcError::parse("mm: missing value"))?
+                .parse()
+                .map_err(|_| HbmcError::parse("mm: bad value"))?
         };
         if i == 0 || j == 0 || i > nrows || j > ncols {
-            bail!("matrix market: 1-based index ({i},{j}) out of range");
+            return Err(HbmcError::parse(format!(
+                "matrix market: 1-based index ({i},{j}) out of range"
+            )));
         }
         if symmetric {
             coo.push_sym(i - 1, j - 1, v);
@@ -92,7 +115,9 @@ pub fn read_from(reader: impl BufRead) -> Result<Csr> {
         seen += 1;
     }
     if seen != nnz {
-        bail!("matrix market: expected {nnz} entries, found {seen}");
+        return Err(HbmcError::parse(format!(
+            "matrix market: expected {nnz} entries, found {seen}"
+        )));
     }
     Ok(coo.to_csr())
 }
@@ -100,7 +125,8 @@ pub fn read_from(reader: impl BufRead) -> Result<Csr> {
 /// Write CSR as `coordinate real general`.
 pub fn write(a: &Csr, path: &Path) -> Result<()> {
     let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+        std::fs::File::create(path)
+            .map_err(|e| HbmcError::io(format!("creating {}", path.display()), e))?,
     );
     writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
     writeln!(f, "{} {} {}", a.n(), a.n(), a.nnz())?;

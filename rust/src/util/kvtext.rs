@@ -15,7 +15,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::error::{HbmcError, Result};
 
 /// Parsed key/value document.
 #[derive(Debug, Default, Clone)]
@@ -38,7 +38,10 @@ impl KvDoc {
                 continue;
             }
             let Some((k, v)) = line.split_once('=') else {
-                bail!("kvtext: line {} has no '=': {line:?}", lineno + 1);
+                return Err(HbmcError::parse(format!(
+                    "kvtext: line {} has no '=': {line:?}",
+                    lineno + 1
+                )));
             };
             doc.set(k.trim(), v.trim());
         }
@@ -47,7 +50,7 @@ impl KvDoc {
 
     pub fn load(path: &Path) -> Result<KvDoc> {
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
+            .map_err(|e| HbmcError::io(format!("reading {}", path.display()), e))?;
         Self::parse(&text)
     }
 
@@ -76,7 +79,7 @@ impl KvDoc {
         self.map
             .get(key)
             .map(|s| s.as_str())
-            .with_context(|| format!("kvtext: missing key {key:?}"))
+            .ok_or_else(|| HbmcError::parse(format!("kvtext: missing key {key:?}")))
     }
 
     pub fn str(&self, key: &str) -> Result<String> {
@@ -86,7 +89,7 @@ impl KvDoc {
     pub fn i64(&self, key: &str) -> Result<i64> {
         self.raw(key)?
             .parse()
-            .with_context(|| format!("kvtext: key {key:?} is not an i64"))
+            .map_err(|_| HbmcError::parse(format!("kvtext: key {key:?} is not an i64")))
     }
 
     pub fn usize(&self, key: &str) -> Result<usize> {
@@ -96,27 +99,36 @@ impl KvDoc {
     pub fn f64(&self, key: &str) -> Result<f64> {
         self.raw(key)?
             .parse()
-            .with_context(|| format!("kvtext: key {key:?} is not an f64"))
+            .map_err(|_| HbmcError::parse(format!("kvtext: key {key:?} is not an f64")))
     }
 
     pub fn usize_vec(&self, key: &str) -> Result<Vec<usize>> {
         self.raw(key)?
             .split_whitespace()
-            .map(|t| t.parse::<usize>().with_context(|| format!("kvtext: {key:?} element {t:?}")))
+            .map(|t| {
+                t.parse::<usize>()
+                    .map_err(|_| HbmcError::parse(format!("kvtext: {key:?} element {t:?}")))
+            })
             .collect()
     }
 
     pub fn u32_vec(&self, key: &str) -> Result<Vec<u32>> {
         self.raw(key)?
             .split_whitespace()
-            .map(|t| t.parse::<u32>().with_context(|| format!("kvtext: {key:?} element {t:?}")))
+            .map(|t| {
+                t.parse::<u32>()
+                    .map_err(|_| HbmcError::parse(format!("kvtext: {key:?} element {t:?}")))
+            })
             .collect()
     }
 
     pub fn f64_vec(&self, key: &str) -> Result<Vec<f64>> {
         self.raw(key)?
             .split_whitespace()
-            .map(|t| t.parse::<f64>().with_context(|| format!("kvtext: {key:?} element {t:?}")))
+            .map(|t| {
+                t.parse::<f64>()
+                    .map_err(|_| HbmcError::parse(format!("kvtext: {key:?} element {t:?}")))
+            })
             .collect()
     }
 
@@ -134,7 +146,7 @@ impl KvDoc {
 
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.to_text())
-            .with_context(|| format!("writing {}", path.display()))
+            .map_err(|e| HbmcError::io(format!("writing {}", path.display()), e))
     }
 }
 

@@ -1,0 +1,134 @@
+//! The typed public API surface: every failure mode of the library comes
+//! back as a matchable [`HbmcError`] variant — no stringly-typed errors,
+//! no panics on malformed requests.
+
+use hbmc::api::{SolveRequest, SolverService};
+use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
+use hbmc::coordinator::session::SolveSession;
+use hbmc::error::HbmcError;
+use hbmc::gen::suite;
+use hbmc::solver::plan::SolverPlan;
+
+fn tiny_cfg(ordering: OrderingKind) -> SolverConfig {
+    SolverConfig { ordering, bs: 8, w: 4, rtol: 1e-7, ..Default::default() }
+}
+
+/// A wrong-length rhs must come back as `DimensionMismatch` carrying the
+/// expected and observed lengths — from `solve`, never a panic.
+#[test]
+fn session_solve_reports_dimension_mismatch() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let n = d.matrix.n();
+    let session = SolveSession::from_matrix(&d.matrix, &tiny_cfg(OrderingKind::Hbmc)).unwrap();
+
+    for bad_len in [0usize, 3, n - 1, n + 1] {
+        let bad = vec![1.0; bad_len];
+        let err = session.solve(&bad).unwrap_err();
+        assert!(
+            matches!(err, HbmcError::DimensionMismatch { expected, got }
+                if expected == n && got == bad_len),
+            "len {bad_len}: {err:?}"
+        );
+    }
+    // A well-formed rhs still works on the same session afterwards.
+    assert!(session.solve(&d.b).unwrap().report.converged);
+}
+
+/// …and from `solve_many`, where a single malformed rhs in the batch is
+/// enough to fail it.
+#[test]
+fn session_solve_many_reports_dimension_mismatch() {
+    let d = suite::dataset("thermal2", Scale::Tiny);
+    let n = d.matrix.n();
+    let session = SolveSession::from_matrix(&d.matrix, &tiny_cfg(OrderingKind::Bmc)).unwrap();
+    let err = session.solve_many(&[d.b.clone(), vec![1.0; 5]]).unwrap_err();
+    assert!(
+        matches!(err, HbmcError::DimensionMismatch { expected, got }
+            if expected == n && got == 5),
+        "{err:?}"
+    );
+}
+
+/// The same contract at the service layer, where the whole batch is
+/// validated up front (nothing runs before the reject).
+#[test]
+fn service_rejects_batch_with_any_bad_rhs_before_solving() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let svc = SolverService::with_config(tiny_cfg(OrderingKind::Hbmc)).unwrap();
+    let h = svc.register_matrix(d.matrix.clone());
+    let err = svc.solve_many(h, &[d.b.clone(), d.b[..d.b.len() - 1].to_vec()]).unwrap_err();
+    assert!(matches!(err, HbmcError::DimensionMismatch { .. }), "{err:?}");
+    assert_eq!(svc.stats().solves, 0, "no rhs of a rejected batch may run");
+}
+
+/// The HBMC structural constraint is validated before any kernel sees the
+/// config: `bs` must be a multiple of `w`.
+#[test]
+fn hbmc_bs_not_multiple_of_w_is_invalid_config() {
+    let a = suite::dataset("g3_circuit", Scale::Tiny).matrix;
+    let cfg = SolverConfig { ordering: OrderingKind::Hbmc, bs: 12, w: 8, ..Default::default() };
+    let err = SolverPlan::build(&a, &cfg).unwrap_err();
+    assert!(matches!(err, HbmcError::InvalidConfig(_)), "{err:?}");
+    assert!(err.to_string().contains("multiple of w"), "{err}");
+
+    let err = SolverConfig::builder().ordering(OrderingKind::Hbmc).bs(12).w(8).build().unwrap_err();
+    assert!(matches!(err, HbmcError::InvalidConfig(_)), "{err:?}");
+
+    // BMC has no level-2 packing; the same shape is legal there.
+    assert!(SolverConfig::builder().ordering(OrderingKind::Bmc).bs(12).w(8).build().is_ok());
+}
+
+/// The enums round-trip through the standard `FromStr`/`Display` traits.
+#[test]
+fn config_enums_parse_and_display() {
+    let cfg = SolverConfig::builder()
+        .ordering("hbmc".parse().unwrap())
+        .spmv("sell".parse().unwrap())
+        .bs(16)
+        .w(4)
+        .build()
+        .unwrap();
+    assert_eq!(cfg.label(), "HBMC(bs=16,w=4,sell)");
+    assert_eq!(cfg.ordering, OrderingKind::Hbmc);
+    assert_eq!(cfg.spmv, SpmvKind::Sell);
+    let err = "rainbow".parse::<Scale>().unwrap_err();
+    assert!(matches!(err, HbmcError::InvalidConfig(_)), "{err:?}");
+}
+
+/// Unknown dataset names and stale handles are `UnknownMatrix`.
+#[test]
+fn unknown_matrix_is_typed() {
+    let err = suite::try_dataset("not_in_suite", Scale::Tiny).unwrap_err();
+    assert!(matches!(err, HbmcError::UnknownMatrix(_)), "{err:?}");
+    assert!(err.to_string().contains("not_in_suite"));
+}
+
+/// A solve that must converge but hits the cap is `NotConverged` with the
+/// observed iteration count and residual.
+#[test]
+fn capped_solve_with_required_convergence_is_typed() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let svc = SolverService::with_config(tiny_cfg(OrderingKind::Hbmc)).unwrap();
+    let h = svc.register_matrix(d.matrix.clone());
+    let req = SolveRequest::new().max_iters(3).require_convergence();
+    let err = svc.solve_with(h, &d.b, &req).unwrap_err();
+    match err {
+        HbmcError::NotConverged { iterations, relres } => {
+            assert_eq!(iterations, 3);
+            assert!(relres > 0.0);
+        }
+        other => panic!("expected NotConverged, got {other:?}"),
+    }
+}
+
+/// Missing files surface as `Io` with the path in the message and the
+/// `std::io::Error` preserved as `source()`.
+#[test]
+fn missing_matrix_market_file_is_io() {
+    use std::error::Error as _;
+    let err =
+        hbmc::sparse::matrix_market::read(std::path::Path::new("/nonexistent/a.mtx")).unwrap_err();
+    assert!(matches!(err, HbmcError::Io { .. }), "{err:?}");
+    assert!(err.to_string().contains("/nonexistent/a.mtx"), "{err}");
+    assert!(err.source().is_some());
+}

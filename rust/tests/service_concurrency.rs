@@ -1,0 +1,170 @@
+//! Concurrency contract of the `SolverService` façade (the tentpole
+//! guarantee of the typed-API redesign):
+//!
+//! * one shared service hammered from ≥ 4 threads with mixed matrices and
+//!   configs performs **exactly one plan build per distinct `PlanKey`** —
+//!   no duplicate ordering/factorization, no poisoned locks,
+//! * every concurrent result is **bitwise identical** to the
+//!   single-threaded one-shot path.
+//!
+//! Tests in this binary share the process-wide plan-build counter, so they
+//! serialize on a static mutex.
+
+use std::sync::{Arc, Barrier, Mutex, MutexGuard};
+use std::thread;
+
+use hbmc::api::{SolveRequest, SolverService};
+use hbmc::config::{OrderingKind, Scale, SolverConfig};
+use hbmc::coordinator::driver::{solve_opts, SolveOptions};
+use hbmc::gen::suite;
+use hbmc::solver::plan::plans_built;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn tiny_cfg(ordering: OrderingKind) -> SolverConfig {
+    SolverConfig { ordering, bs: 8, w: 4, threads: 1, rtol: 1e-7, ..Default::default() }
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Six threads race on one (matrix, config) key: the build gate must
+/// coalesce them into a single `SolverPlan::build`, and all six solutions
+/// must be bit-identical to the one-shot driver path.
+#[test]
+fn same_key_concurrent_requests_build_exactly_once() {
+    let _guard = serial();
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let cfg = tiny_cfg(OrderingKind::Hbmc);
+
+    // Single-threaded reference first (it consumes its own plan build).
+    let reference = solve_opts(&d.matrix, &d.b, &cfg, &SolveOptions::with_solution()).unwrap();
+    let ref_bits = bits(reference.solution.as_ref().unwrap());
+
+    let service = Arc::new(SolverService::with_config(cfg).unwrap());
+    let handle = service.register_matrix(d.matrix.clone());
+    let builds_before = plans_built();
+
+    const THREADS: usize = 6;
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let workers: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let service = Arc::clone(&service);
+            let barrier = Arc::clone(&barrier);
+            let b = d.b.clone();
+            thread::spawn(move || {
+                barrier.wait();
+                service.solve(handle, &b).unwrap()
+            })
+        })
+        .collect();
+    let outputs: Vec<_> = workers.into_iter().map(|t| t.join().unwrap()).collect();
+
+    assert_eq!(
+        plans_built(),
+        builds_before + 1,
+        "concurrent same-key requests must coalesce into one plan build"
+    );
+    let stats = service.stats();
+    assert_eq!(stats.builds, 1);
+    assert_eq!(stats.cache.misses, 1);
+    assert_eq!(stats.cache.hits, THREADS as u64 - 1, "every other request must hit");
+    assert_eq!(stats.solves, THREADS as u64);
+    for (i, out) in outputs.iter().enumerate() {
+        assert!(out.report.converged, "thread {i} did not converge");
+        assert_eq!(
+            bits(&out.x),
+            ref_bits,
+            "thread {i}: concurrent result deviates from single-threaded one-shot"
+        );
+    }
+}
+
+/// Eight threads × 4 distinct `PlanKey`s (2 matrices × 2 orderings) × 2
+/// repetitions, in thread-dependent order: exactly 4 builds total, every
+/// result bit-identical to its single-threaded reference, and the service
+/// (its locks in particular) stays healthy afterwards.
+#[test]
+fn mixed_matrices_and_configs_build_once_per_key() {
+    let _guard = serial();
+    let datasets =
+        [suite::dataset("g3_circuit", Scale::Tiny), suite::dataset("thermal2", Scale::Tiny)];
+    let configs = [tiny_cfg(OrderingKind::Hbmc), tiny_cfg(OrderingKind::Bmc)];
+
+    // Single-threaded references for all 4 keys, before counting builds.
+    let mut ref_bits = Vec::new();
+    for d in &datasets {
+        for cfg in &configs {
+            let rep = solve_opts(&d.matrix, &d.b, cfg, &SolveOptions::with_solution()).unwrap();
+            ref_bits.push(bits(rep.solution.as_ref().unwrap()));
+        }
+    }
+
+    let service = Arc::new(SolverService::with_capacity(configs[0].clone(), 8).unwrap());
+    let handles: Vec<_> =
+        datasets.iter().map(|d| service.register_matrix(d.matrix.clone())).collect();
+    let rhss: Vec<Arc<Vec<f64>>> = datasets.iter().map(|d| Arc::new(d.b.clone())).collect();
+    let builds_before = plans_built();
+
+    const THREADS: usize = 8;
+    const REPS: usize = 2;
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let service = Arc::clone(&service);
+            let barrier = Arc::clone(&barrier);
+            let handles = handles.clone();
+            let rhss = rhss.clone();
+            let configs = configs.clone();
+            thread::spawn(move || {
+                barrier.wait();
+                let mut got = Vec::new();
+                for rep in 0..REPS {
+                    for k in 0..4usize {
+                        // Vary the visit order per thread so different keys
+                        // are in flight simultaneously.
+                        let k = (k + t + rep) % 4;
+                        let (di, ci) = (k / 2, k % 2);
+                        let req = SolveRequest::new().with_config(configs[ci].clone());
+                        let out = service.solve_with(handles[di], &rhss[di], &req).unwrap();
+                        got.push((k, bits(&out.x)));
+                    }
+                }
+                got
+            })
+        })
+        .collect();
+    let results: Vec<_> = workers.into_iter().map(|t| t.join().unwrap()).collect();
+
+    assert_eq!(
+        plans_built(),
+        builds_before + 4,
+        "exactly one build per distinct (matrix, config) key"
+    );
+    let stats = service.stats();
+    assert_eq!(stats.builds, 4);
+    let total = (THREADS * REPS * 4) as u64;
+    assert_eq!(stats.solves, total);
+    assert_eq!(stats.cache.hits, total - 4, "all but the 4 building requests must hit");
+    assert_eq!(stats.cache.len, 4);
+    assert_eq!(stats.cache.evictions, 0);
+
+    for (t, got) in results.iter().enumerate() {
+        for (k, xbits) in got {
+            assert_eq!(
+                xbits, &ref_bits[*k],
+                "thread {t} key {k}: concurrent result deviates from reference"
+            );
+        }
+    }
+
+    // No poisoned locks: the service keeps serving on the same plans.
+    let after = service.solve(handles[0], &rhss[0]).unwrap();
+    assert!(after.report.converged);
+    assert_eq!(plans_built(), builds_before + 4, "post-stress solve must reuse cached plans");
+}
