@@ -1,0 +1,100 @@
+//! Async job API walkthrough: `submit` → `JobHandle` (poll / wait /
+//! cancel / deadline), and cross-request micro-batching — several client
+//! threads each submit one right-hand side for the same matrix, and the
+//! service dispatcher coalesces them into wide batches on one session.
+//!
+//! Run: `cargo run --release --example async_jobs`
+
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::Duration;
+
+use hbmc::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let dataset = hbmc::gen::suite::dataset("g3_circuit", Scale::Tiny);
+    println!("problem: {} (n = {}, nnz = {})", dataset.name, dataset.n(), dataset.nnz());
+
+    // Queue tuning rides on the config: hold an under-full batch open up
+    // to 50 ms, coalescing at most 16 jobs into one dispatched sweep.
+    let cfg = SolverConfig::builder()
+        .ordering(OrderingKind::Hbmc)
+        .bs(8)
+        .w(4)
+        .rtol(1e-7)
+        .max_batch(16)
+        .max_wait(Duration::from_millis(50))
+        .build()?;
+    let service = Arc::new(SolverService::with_config(cfg)?);
+    let handle = service.register_matrix(dataset.matrix.clone());
+
+    // --- 1. submit / poll / wait -------------------------------------------
+    let job = service.submit(handle, &dataset.b, &SolveRequest::new())?;
+    println!("\njob #{} submitted; state = {:?}", job.id(), job.poll());
+    let out = job.wait()?;
+    println!("job done: {} iters, relres {:.3e}", out.report.iterations, out.report.final_relres);
+
+    // --- 2. cross-request micro-batching -----------------------------------
+    // Eight "clients" each submit ONE rhs for the same (matrix, config)
+    // key at the same moment; the dispatcher runs them as a few wide
+    // batches instead of eight sessions.
+    const CLIENTS: usize = 8;
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let service = Arc::clone(&service);
+            let barrier = Arc::clone(&barrier);
+            let rhs: Vec<f64> = dataset.b.iter().map(|v| v * (1.0 + c as f64)).collect();
+            thread::spawn(move || {
+                barrier.wait();
+                service
+                    .submit(handle, &rhs, &SolveRequest::new())
+                    .and_then(|job| job.wait())
+                    .map(|out| out.report.iterations)
+            })
+        })
+        .collect();
+    for (c, t) in workers.into_iter().enumerate() {
+        let iters = t.join().expect("client thread")?;
+        println!("client {c}: converged in {iters} iters");
+    }
+    let stats = service.stats();
+    println!(
+        "batching: {} jobs ran in {} dispatched batches (mean width {:.2}, {} rhs coalesced)",
+        stats.solves,
+        stats.batches,
+        stats.mean_batch_width(),
+        stats.coalesced_rhs
+    );
+
+    // --- 3. cancellation ----------------------------------------------------
+    // A queued job can be cancelled before dispatch; `wait` then returns
+    // the typed `HbmcError::Cancelled`. (Running jobs always finish.)
+    let victim = service.submit(handle, &dataset.b, &SolveRequest::new())?;
+    if victim.cancel() {
+        match victim.wait() {
+            Err(HbmcError::Cancelled) => println!("\ncancelled job surfaced HbmcError::Cancelled"),
+            other => println!("\ncancel raced dispatch; job finished anyway: {other:?}"),
+        }
+    } else {
+        let _ = victim.wait();
+        println!("\ncancel lost the race — job already dispatched (it still finished cleanly)");
+    }
+
+    // --- 4. deadlines -------------------------------------------------------
+    // A zero budget means the job is already expired when the dispatcher
+    // reaches it: it never runs and fails typed.
+    let hopeless = service.submit(
+        handle,
+        &dataset.b,
+        &SolveRequest::new().deadline(Duration::ZERO),
+    )?;
+    match hopeless.wait() {
+        Err(HbmcError::DeadlineExceeded { budget }) => {
+            println!("deadline job failed typed (budget {budget:?}) without running");
+        }
+        other => println!("unexpected deadline outcome: {other:?}"),
+    }
+
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Serving-throughput bench: the payoff of the asynchronous job queue.
+//!
+//! Workload: M concurrent clients, each firing K single-RHS requests for
+//! the *same* (matrix, config) key — the ROADMAP's "heavy traffic, few
+//! matrices" shape. Three serving strategies over identical work:
+//!
+//! 1. `sequential`   — one thread, K·M blocking `solve` calls (baseline;
+//!    every call is its own dispatched batch of width 1),
+//! 2. `threads`      — M threads, blocking `solve` calls that ride the
+//!    queue and coalesce *implicitly*,
+//! 3. `submit/wait`  — M threads submit everything up front, then wait;
+//!    maximal opportunity for the dispatcher to form wide batches.
+//!
+//! The plan is warmed before every timed region: this bench measures
+//! phase-2 serving, not setup. Batching statistics are printed per
+//! strategy so the width → throughput relation is visible.
+//!
+//! `cargo bench --bench serving [-- full]`
+
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use hbmc::api::{SolveRequest, SolverService};
+use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
+use hbmc::gen::{suite, Dataset};
+
+const CLIENTS: usize = 4;
+const REQUESTS: usize = 6;
+
+fn service_for(cfg: &SolverConfig, d: &Dataset) -> (Arc<SolverService>, hbmc::api::MatrixHandle) {
+    let service = Arc::new(SolverService::with_config(cfg.clone()).expect("valid config"));
+    let handle = service.register_matrix_arc(Arc::new(d.matrix.clone()));
+    // Warm the plan: the timed region below is pure serving.
+    service.solve(handle, &d.b).expect("warmup solve");
+    (service, handle)
+}
+
+fn rhs_for(d: &Dataset, i: usize) -> Vec<f64> {
+    let f = 1.0 + (i % 7) as f64;
+    d.b.iter().map(|v| v * f).collect()
+}
+
+fn report(label: &str, wall: f64, service: &SolverService, warm: hbmc::api::ServiceStats) {
+    // Subtract the warmup solve's batch from every counter so the printed
+    // width/coalescing numbers describe exactly the timed region.
+    let st = service.stats();
+    let batches = st.batches - warm.batches;
+    let rhs = st.batched_rhs - warm.batched_rhs;
+    let coalesced = st.coalesced_rhs - warm.coalesced_rhs;
+    let width = if batches == 0 { 0.0 } else { rhs as f64 / batches as f64 };
+    let total = (CLIENTS * REQUESTS) as f64;
+    println!(
+        "{label:<12} {wall:.3}s  ({:.1} solves/s)  batches={batches} mean_width={width:.2} \
+         coalesced_rhs={coalesced}",
+        total / wall,
+    );
+}
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "full") { Scale::Small } else { Scale::Tiny };
+    let d = suite::dataset("g3_circuit", scale);
+    let mut cfg = SolverConfig {
+        ordering: OrderingKind::Hbmc,
+        bs: 8,
+        w: 4,
+        spmv: SpmvKind::Sell,
+        rtol: 1e-7,
+        ..Default::default()
+    };
+    cfg.queue.max_batch = CLIENTS * REQUESTS;
+    cfg.queue.max_wait = Duration::from_millis(2);
+    println!(
+        "serving bench on {} (n={}, nnz={}): {CLIENTS} clients x {REQUESTS} requests, \
+         max_batch={} max_wait={:?}\n",
+        d.name,
+        d.n(),
+        d.nnz(),
+        cfg.queue.max_batch,
+        cfg.queue.max_wait
+    );
+
+    // 1. Sequential blocking baseline — with a zero flush window, so the
+    //    baseline measures solving, not the batching delay (a lone
+    //    blocking caller gains nothing from holding a window open).
+    {
+        let mut cfg_seq = cfg.clone();
+        cfg_seq.queue.max_wait = Duration::ZERO;
+        let (service, handle) = service_for(&cfg_seq, &d);
+        let warm = service.stats();
+        let t0 = Instant::now();
+        for i in 0..CLIENTS * REQUESTS {
+            let out = service.solve(handle, &rhs_for(&d, i)).expect("solve");
+            assert!(out.report.converged);
+        }
+        report("sequential", t0.elapsed().as_secs_f64(), &service, warm);
+    }
+
+    // 2. Concurrent blocking callers (implicit coalescing).
+    {
+        let (service, handle) = service_for(&cfg, &d);
+        let warm = service.stats();
+        let barrier = Arc::new(Barrier::new(CLIENTS));
+        let t0 = Instant::now();
+        let workers: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let service = Arc::clone(&service);
+                let barrier = Arc::clone(&barrier);
+                let rhss: Vec<Vec<f64>> =
+                    (0..REQUESTS).map(|k| rhs_for(&d, c * REQUESTS + k)).collect();
+                thread::spawn(move || {
+                    barrier.wait();
+                    for rhs in &rhss {
+                        let out = service.solve(handle, rhs).expect("solve");
+                        assert!(out.report.converged);
+                    }
+                })
+            })
+            .collect();
+        for t in workers {
+            t.join().expect("client thread");
+        }
+        report("threads", t0.elapsed().as_secs_f64(), &service, warm);
+    }
+
+    // 3. Submit everything, then wait (explicit async fan-in).
+    {
+        let (service, handle) = service_for(&cfg, &d);
+        let warm = service.stats();
+        let barrier = Arc::new(Barrier::new(CLIENTS));
+        let t0 = Instant::now();
+        let workers: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let service = Arc::clone(&service);
+                let barrier = Arc::clone(&barrier);
+                let rhss: Vec<Vec<f64>> =
+                    (0..REQUESTS).map(|k| rhs_for(&d, c * REQUESTS + k)).collect();
+                thread::spawn(move || {
+                    barrier.wait();
+                    let req = SolveRequest::new();
+                    let jobs: Vec<_> = rhss
+                        .iter()
+                        .map(|rhs| service.submit(handle, rhs, &req).expect("submit"))
+                        .collect();
+                    for job in jobs {
+                        let out = job.wait().expect("wait");
+                        assert!(out.report.converged);
+                    }
+                })
+            })
+            .collect();
+        for t in workers {
+            t.join().expect("client thread");
+        }
+        report("submit/wait", t0.elapsed().as_secs_f64(), &service, warm);
+    }
+}

@@ -1,0 +1,241 @@
+//! Asynchronous job handles for the [`SolverService`] queue.
+//!
+//! [`SolverService::submit`] enqueues one right-hand side and returns a
+//! [`JobHandle`] immediately; the dispatcher thread (see `api::queue`)
+//! later runs the job — possibly coalesced with other jobs for the same
+//! plan into one micro-batch — and publishes the result here. A handle
+//! supports:
+//!
+//! * [`poll`](JobHandle::poll) — non-blocking state inspection,
+//! * [`wait`](JobHandle::wait) — block until terminal, consuming the
+//!   handle and yielding the solve's `Result<SolveOutput>`,
+//! * [`cancel`](JobHandle::cancel) — abort a job that is **still queued**
+//!   (running jobs always finish; cancelling them is a no-op).
+//!
+//! A per-job deadline (`SolveRequest::deadline`) is checked at dispatch
+//! time: a job still queued when its deadline passes fails with
+//! [`HbmcError::DeadlineExceeded`] instead of running.
+//!
+//! [`SolverService`]: crate::api::SolverService
+//! [`SolverService::submit`]: crate::api::SolverService::submit
+
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use super::service::mlock;
+use crate::coordinator::session::SolveOutput;
+use crate::error::{HbmcError, Result};
+
+/// Lifecycle of an asynchronous solve job.
+///
+/// `Queued → Running → Succeeded | Failed` is the normal path;
+/// `Cancelled` and `DeadlineExceeded` are terminal states a job can reach
+/// only from `Queued` (running jobs always finish).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Waiting in the service queue for the dispatcher.
+    Queued,
+    /// Dispatched into a batch; the solver is (or is about to be) running.
+    Running,
+    /// Finished; `wait()` yields `Ok(SolveOutput)`.
+    Succeeded,
+    /// Finished; `wait()` yields the solve's typed error.
+    Failed,
+    /// Cancelled while queued; `wait()` yields [`HbmcError::Cancelled`].
+    Cancelled,
+    /// Deadline expired while queued; `wait()` yields
+    /// [`HbmcError::DeadlineExceeded`].
+    DeadlineExceeded,
+}
+
+impl JobState {
+    /// Whether the job has reached a final state (its result is available).
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, JobState::Queued | JobState::Running)
+    }
+}
+
+/// Process-wide job id allocator. Relaxed suffices: ids only need to be
+/// unique (atomicity), nothing is ordered by them.
+static NEXT_JOB_ID: AtomicU64 = AtomicU64::new(1);
+
+struct Slot {
+    state: JobState,
+    /// Present exactly from the transition into a terminal state until
+    /// `wait()` takes it.
+    result: Option<Result<SolveOutput>>,
+}
+
+/// State shared between a [`JobHandle`] and the dispatcher.
+pub(crate) struct JobCore {
+    id: u64,
+    slot: Mutex<Slot>,
+    cv: Condvar,
+    /// Absolute dispatch deadline, derived from the submitted budget.
+    deadline: Option<Instant>,
+    /// The originally requested budget (for the error message).
+    budget: Option<Duration>,
+}
+
+impl JobCore {
+    pub(crate) fn new(budget: Option<Duration>) -> Arc<JobCore> {
+        Arc::new(JobCore {
+            id: NEXT_JOB_ID.fetch_add(1, AtomicOrdering::Relaxed),
+            slot: Mutex::new(Slot { state: JobState::Queued, result: None }),
+            cv: Condvar::new(),
+            // checked_add: a huge budget (e.g. Duration::MAX as a "no
+            // deadline" sentinel) saturates to no deadline instead of
+            // panicking in `submit`.
+            deadline: budget.and_then(|d| Instant::now().checked_add(d)),
+            budget,
+        })
+    }
+
+    pub(crate) fn state(&self) -> JobState {
+        mlock(&self.slot).state
+    }
+
+    /// Whether this job carries a dispatch deadline (drives the
+    /// dispatcher's flush-early policy for latency-sensitive jobs).
+    pub(crate) fn has_deadline(&self) -> bool {
+        self.deadline.is_some()
+    }
+
+    /// Dispatcher entry check: flip `Queued → Running` and return `true`,
+    /// unless the job was cancelled meanwhile (skip it) or its deadline
+    /// has passed (fail it here, typed, without running).
+    pub(crate) fn try_start(&self) -> bool {
+        let mut slot = mlock(&self.slot);
+        if slot.state != JobState::Queued {
+            return false;
+        }
+        if let Some(deadline) = self.deadline {
+            if Instant::now() >= deadline {
+                slot.state = JobState::DeadlineExceeded;
+                slot.result = Some(Err(HbmcError::DeadlineExceeded {
+                    budget: self.budget.unwrap_or_default(),
+                }));
+                drop(slot);
+                self.cv.notify_all();
+                return false;
+            }
+        }
+        slot.state = JobState::Running;
+        true
+    }
+
+    /// Publish the result of a job previously started with
+    /// [`try_start`](JobCore::try_start).
+    pub(crate) fn finish(&self, result: Result<SolveOutput>) {
+        let mut slot = mlock(&self.slot);
+        if slot.state != JobState::Running {
+            return;
+        }
+        slot.state = if result.is_ok() { JobState::Succeeded } else { JobState::Failed };
+        slot.result = Some(result);
+        drop(slot);
+        self.cv.notify_all();
+    }
+
+    /// The single `Queued → Cancelled` transition, shared by
+    /// [`JobHandle::cancel`] and the shutdown-reject path in the queue.
+    /// Returns whether the transition happened (`false` once the job is
+    /// running or terminal).
+    pub(crate) fn cancel_queued(&self) -> bool {
+        let mut slot = mlock(&self.slot);
+        if slot.state != JobState::Queued {
+            return false;
+        }
+        slot.state = JobState::Cancelled;
+        slot.result = Some(Err(HbmcError::Cancelled));
+        drop(slot);
+        self.cv.notify_all();
+        true
+    }
+}
+
+/// Handle to one submitted solve job; see module docs. Obtained from
+/// `SolverService::submit`. Dropping the handle without calling
+/// [`wait`](JobHandle::wait) abandons the result but never the job — an
+/// already-queued job still runs (or is skipped via `cancel`).
+pub struct JobHandle {
+    core: Arc<JobCore>,
+}
+
+impl JobHandle {
+    pub(crate) fn new(core: Arc<JobCore>) -> JobHandle {
+        JobHandle { core }
+    }
+
+    /// Unique id of this job (diagnostics, log correlation).
+    pub fn id(&self) -> u64 {
+        self.core.id
+    }
+
+    /// Non-blocking snapshot of the job's state.
+    pub fn poll(&self) -> JobState {
+        self.core.state()
+    }
+
+    /// Abort the job if it is still queued: it will never run, and
+    /// [`wait`](JobHandle::wait) returns [`HbmcError::Cancelled`]. Returns
+    /// `false` (and changes nothing) once the job is running or terminal —
+    /// in-flight solves always finish.
+    pub fn cancel(&self) -> bool {
+        self.core.cancel_queued()
+    }
+
+    /// Block until the job reaches a terminal state and return its result.
+    /// Consumes the handle — a job's output is moved out exactly once.
+    pub fn wait(self) -> Result<SolveOutput> {
+        let mut slot = mlock(&self.core.slot);
+        while !slot.state.is_terminal() {
+            slot = self.core.cv.wait(slot).unwrap_or_else(PoisonError::into_inner);
+        }
+        slot.result
+            .take()
+            .unwrap_or_else(|| Err(HbmcError::Internal("job result already consumed".into())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_queued_running_finished() {
+        let core = JobCore::new(None);
+        let handle = JobHandle::new(Arc::clone(&core));
+        assert_eq!(handle.poll(), JobState::Queued);
+        assert!(!JobState::Queued.is_terminal() && !JobState::Running.is_terminal());
+        assert!(core.try_start());
+        assert_eq!(handle.poll(), JobState::Running);
+        assert!(!handle.cancel(), "running jobs must not be cancellable");
+        assert!(!core.try_start(), "a job starts at most once");
+        // A finished job is terminal and hands its (here: failed) result out.
+        core.finish(Err(HbmcError::Internal("kernel exploded".into())));
+        assert_eq!(handle.poll(), JobState::Failed);
+        assert!(matches!(handle.wait(), Err(HbmcError::Internal(_))));
+    }
+
+    #[test]
+    fn cancel_wins_over_dispatch() {
+        let core = JobCore::new(None);
+        let handle = JobHandle::new(Arc::clone(&core));
+        assert!(handle.cancel());
+        assert!(!handle.cancel(), "second cancel is a no-op");
+        assert!(!core.try_start(), "dispatcher must skip a cancelled job");
+        assert_eq!(handle.poll(), JobState::Cancelled);
+        assert!(matches!(handle.wait(), Err(HbmcError::Cancelled)));
+    }
+
+    #[test]
+    fn expired_deadline_fails_at_dispatch() {
+        let core = JobCore::new(Some(Duration::ZERO));
+        let handle = JobHandle::new(Arc::clone(&core));
+        assert!(!core.try_start(), "expired job must not start");
+        assert_eq!(handle.poll(), JobState::DeadlineExceeded);
+        assert!(matches!(handle.wait(), Err(HbmcError::DeadlineExceeded { .. })));
+    }
+}

@@ -6,9 +6,15 @@
 //! * [`SolverConfigBuilder`](crate::config::SolverConfigBuilder) — the
 //!   validating config constructor ([`SolverConfig::builder`]),
 //! * [`SolverService`] — a `Send + Sync` solve endpoint that owns the
-//!   matrix registry and the plan cache, coalesces concurrent plan builds
-//!   per [`PlanKey`](crate::coordinator::session::PlanKey), and serves
-//!   `solve` / `solve_many` with per-request [`SolveRequest`] overrides.
+//!   matrix registry, the plan cache (coalescing concurrent plan builds
+//!   per [`PlanKey`](crate::coordinator::session::PlanKey)), and an
+//!   asynchronous job queue: [`submit`](SolverService::submit) returns a
+//!   [`JobHandle`] (poll / wait / cancel, per-job deadlines), and a
+//!   dispatcher thread micro-batches compatible jobs onto shared sessions
+//!   so concurrent single-RHS traffic shares plan checkouts and warmed-up
+//!   pools instead of paying per-request setup.
+//!   The blocking `solve` / `solve_many` calls are submit + wait wrappers
+//!   over the same queue.
 //!
 //! The lower layers (plans, sessions, kernels) remain public for research
 //! scripts and the reproduction benches; the service is the shape the
@@ -17,8 +23,11 @@
 //!
 //! [`SolverConfig::builder`]: crate::config::SolverConfig::builder
 
+mod job;
+mod queue;
 mod service;
 
-pub use crate::config::{SolverConfig, SolverConfigBuilder};
+pub use crate::config::{QueueConfig, SolverConfig, SolverConfigBuilder};
 pub use crate::error::{HbmcError, Result};
+pub use job::{JobHandle, JobState};
 pub use service::{MatrixHandle, ServiceStats, SolveRequest, SolverService};

@@ -1,0 +1,368 @@
+//! The service job queue and its dispatcher thread (std-only: one
+//! `Mutex<VecDeque>` + `Condvar`, no extra dependencies).
+//!
+//! `SolverService::submit` validates a request and pushes a [`QueuedJob`];
+//! the dispatcher drains the queue and **micro-batches jobs that share a
+//! [`BatchKey`]** — same plan (`PlanKey`) and same session-relevant config
+//! (pool width, convergence controls) — into one batched sweep on a single
+//! [`SolveSession`]. N concurrent single-RHS requests for one matrix thus
+//! share one plan checkout and one warmed-up pool, running back-to-back
+//! over cache-hot factors (each solve's kernels are already SIMD-wide
+//! internally) instead of paying per-request session setup N times.
+//!
+//! Batching policy (tuned by [`QueueConfig`]): a batch opens with the
+//! oldest queued job, greedily absorbs every compatible queued job in
+//! arrival order, and flushes when it reaches `max_batch` jobs or has been
+//! open for `max_wait` — whichever comes first. Deadline-carrying jobs are
+//! latency-sensitive, so a window never idles while one is queued (in this
+//! batch or behind it): it flushes immediately instead. Per-job
+//! cancellation and deadlines are honoured *lazily*, when the dispatcher
+//! actually reaches each job (`JobCore::try_start`) — a late member of a
+//! wide batch stays cancellable while earlier members solve; running jobs
+//! always finish.
+//!
+//! Shutdown (wired into `SolverService::drop`) is graceful: the flag stops
+//! new submissions, the dispatcher flushes everything still queued, then
+//! exits and is joined.
+//!
+//! Two deliberate scope limits of this design:
+//!
+//! * **One dispatcher thread per service.** Batches — including batches
+//!   for *different* keys — run one after another. That is exactly right
+//!   for the target workload (many requests, few matrices, solver
+//!   parallelism inside the batch via `cfg.threads`), but callers serving
+//!   many *distinct* (matrix, config) keys with single-threaded configs
+//!   should hold per-key `SolverService::session` handles (the documented
+//!   queue-bypass path) to run keys in parallel.
+//! * **The queue is unbounded.** `submit` never blocks or sheds load; a
+//!   sustained submission rate above dispatcher throughput grows
+//!   `queue_depth` (each queued job owns its rhs clone) without limit.
+//!   Callers needing backpressure should watch `ServiceStats::queue_depth`
+//!   and shed upstream, or bound in-flight jobs with per-job deadlines
+//!   plus a cap on outstanding handles.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::Instant;
+
+use crate::config::{QueueConfig, SolverConfig};
+use crate::coordinator::driver::SolveOptions;
+use crate::coordinator::session::{PlanKey, SolveOutput, SolveSession};
+use crate::error::{HbmcError, Result};
+
+use super::job::JobCore;
+use super::service::{mlock, Registered, ServiceCore};
+
+/// Everything that must agree for two jobs to run on one session: the plan
+/// identity plus the session-level knobs `SolveSession::for_request` takes
+/// from the config. Per-solve [`SolveOptions`] (history, solution copy,
+/// rtol/max_iters *overrides*) may differ within a batch — they are applied
+/// per right-hand side.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub(crate) struct BatchKey {
+    plan: PlanKey,
+    threads: usize,
+    rtol_bits: u64,
+    max_iters: usize,
+}
+
+impl BatchKey {
+    pub(crate) fn new(plan: PlanKey, cfg: &SolverConfig) -> BatchKey {
+        BatchKey {
+            plan,
+            threads: cfg.threads,
+            rtol_bits: cfg.rtol.to_bits(),
+            max_iters: cfg.max_iters,
+        }
+    }
+}
+
+/// One submitted right-hand side, waiting for dispatch. The registry entry
+/// is captured at submit time, so unregistering the matrix afterwards does
+/// not affect jobs already queued.
+pub(crate) struct QueuedJob {
+    pub(crate) core: Arc<JobCore>,
+    pub(crate) key: BatchKey,
+    pub(crate) rhs: Vec<f64>,
+    pub(crate) cfg: SolverConfig,
+    pub(crate) options: SolveOptions,
+    pub(crate) require_convergence: bool,
+    pub(crate) reg: Registered,
+}
+
+struct QueueState {
+    jobs: VecDeque<QueuedJob>,
+    shutdown: bool,
+    /// Queued jobs carrying a deadline (maintained on push/remove). The
+    /// dispatcher flushes an open batch window early whenever this is
+    /// non-zero, so a latency-sensitive job never waits out another
+    /// batch's window on an otherwise idle service.
+    deadline_jobs: usize,
+}
+
+/// The shared queue; one per service, drained by one dispatcher thread.
+pub(crate) struct JobQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    cfg: QueueConfig,
+    // Monotonic statistics counters, surfaced through `ServiceStats`.
+    // `Relaxed` is deliberate and sufficient: each counter is independently
+    // monotonic and read only for reporting — no other memory is published
+    // through them (job results synchronize via the job-state mutexes, the
+    // queue via `state`). Stronger orderings would only add fences.
+    batches: AtomicU64,
+    batched_rhs: AtomicU64,
+    coalesced_rhs: AtomicU64,
+}
+
+impl JobQueue {
+    pub(crate) fn new(cfg: QueueConfig) -> JobQueue {
+        JobQueue {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                shutdown: false,
+                deadline_jobs: 0,
+            }),
+            cv: Condvar::new(),
+            cfg,
+            batches: AtomicU64::new(0),
+            batched_rhs: AtomicU64::new(0),
+            coalesced_rhs: AtomicU64::new(0),
+        }
+    }
+
+    /// Enqueue a job (or fail it immediately if the service is shutting
+    /// down — a race only reachable through handles outliving the service).
+    /// A shutdown-rejected job surfaces as [`HbmcError::Cancelled`]: it was
+    /// never dispatched, exactly like a caller-cancelled one.
+    pub(crate) fn push(&self, job: QueuedJob) {
+        {
+            let mut st = mlock(&self.state);
+            if st.shutdown {
+                drop(st);
+                job.core.cancel_queued();
+                return;
+            }
+            if job.core.has_deadline() {
+                st.deadline_jobs += 1;
+            }
+            st.jobs.push_back(job);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Stop accepting jobs and wake the dispatcher so it can flush and exit.
+    pub(crate) fn shutdown(&self) {
+        mlock(&self.state).shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Jobs currently queued (not yet pulled into a batch).
+    pub(crate) fn depth(&self) -> usize {
+        mlock(&self.state).jobs.len()
+    }
+
+    pub(crate) fn batches(&self) -> u64 {
+        self.batches.load(AtomicOrdering::Relaxed)
+    }
+
+    pub(crate) fn batched_rhs(&self) -> u64 {
+        self.batched_rhs.load(AtomicOrdering::Relaxed)
+    }
+
+    pub(crate) fn coalesced_rhs(&self) -> u64 {
+        self.coalesced_rhs.load(AtomicOrdering::Relaxed)
+    }
+
+    /// Block for the next batch: the oldest queued job plus every
+    /// compatible job that arrives before the flush (see module docs).
+    /// `None` means shutdown with the queue fully drained.
+    fn next_batch(&self) -> Option<Vec<QueuedJob>> {
+        let mut st = mlock(&self.state);
+        let head = loop {
+            if let Some(job) = st.jobs.pop_front() {
+                if job.core.has_deadline() {
+                    st.deadline_jobs = st.deadline_jobs.saturating_sub(1);
+                }
+                // A job that is already terminal (cancelled while queued)
+                // must not open a batch window that would stall unrelated
+                // jobs behind it — drop it and keep looking.
+                if job.core.state().is_terminal() {
+                    continue;
+                }
+                break job;
+            }
+            if st.shutdown {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        };
+        let mut batch = vec![head];
+        let flush_at = Instant::now() + self.cfg.max_wait;
+        // Scan offset: everything before it is known-incompatible with
+        // this batch. Valid across wakeups because only the dispatcher
+        // removes queue entries and pushes only append — so the absorb
+        // pass is O(new arrivals), not O(depth) per wakeup.
+        let mut scanned = 0;
+        loop {
+            // Absorb compatible queued jobs in arrival order.
+            let mut i = scanned;
+            while i < st.jobs.len() && batch.len() < self.cfg.max_batch {
+                if st.jobs[i].key == batch[0].key {
+                    if let Some(job) = st.jobs.remove(i) {
+                        if job.core.has_deadline() {
+                            st.deadline_jobs = st.deadline_jobs.saturating_sub(1);
+                        }
+                        batch.push(job);
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            scanned = i;
+            if batch.len() >= self.cfg.max_batch || st.shutdown {
+                break;
+            }
+            // A deadline marks a latency-sensitive job: if this batch — or
+            // ANY job still queued behind it — carries one, flush without
+            // waiting out the window (coalescing under load still happens
+            // via the backlog absorbed above), so an idle service never
+            // expires a job inside its own batching delay.
+            if st.deadline_jobs > 0 || batch.iter().any(|job| job.core.has_deadline()) {
+                break;
+            }
+            let now = Instant::now();
+            if now >= flush_at {
+                break;
+            }
+            let (guard, _timeout) = self
+                .cv
+                .wait_timeout(st, flush_at - now)
+                .unwrap_or_else(PoisonError::into_inner);
+            st = guard;
+        }
+        Some(batch)
+    }
+}
+
+/// Body of the dispatcher thread: drain batches until graceful shutdown.
+pub(crate) fn dispatcher_loop(queue: Arc<JobQueue>, core: Arc<ServiceCore>) {
+    while let Some(batch) = queue.next_batch() {
+        run_batch(&queue, &core, batch);
+    }
+}
+
+/// Run one batch: filter out jobs cancelled or expired while queued, then
+/// one plan checkout + one session for everything that remains.
+///
+/// Panic containment is best-effort: any panic that *surfaces* on this
+/// thread (plan build, single-threaded solves, pool jobs whose worker
+/// panic is re-raised by `Pool::run`) fails the affected jobs typed and
+/// poisons the batch — the session is then abandoned, never reused or
+/// joined. The residual gap, documented in `pool.rs`: with `threads > 1`,
+/// a *worker* panicking mid-color-loop can desynchronize the pool's
+/// shared barrier before the re-raise, hanging the dispatcher inside the
+/// solve. Solver kernels are panic-free over validated plans, so this is
+/// a defense-in-depth boundary, not an expected path.
+fn run_batch(queue: &JobQueue, core: &ServiceCore, batch: Vec<QueuedJob>) {
+    // Jobs are claimed *lazily*: `try_start` runs when the dispatcher
+    // reaches each job, not at batch formation. A late member of a wide
+    // batch therefore stays cancellable — and its deadline keeps counting
+    // — for the whole time earlier members are solving.
+    let mut jobs = batch.into_iter();
+    let first = loop {
+        match jobs.next() {
+            Some(job) if job.core.try_start() => break job,
+            Some(_) => continue, // cancelled or expired while queued
+            None => return,      // nothing left to run: not a batch at all
+        }
+    };
+    queue.batches.fetch_add(1, AtomicOrdering::Relaxed);
+    let session = catch_unwind(AssertUnwindSafe(|| {
+        core.plan_for(&first.reg, &first.cfg)
+            .map(|plan| SolveSession::for_request(plan, &first.cfg))
+    }));
+    let session = match session {
+        Ok(Ok(session)) => session,
+        Ok(Err(e)) => {
+            // Fan the one batch-level failure out to every waiting handle.
+            first.core.finish(Err(e.clone()));
+            for job in jobs {
+                if job.core.try_start() {
+                    job.core.finish(Err(e.clone()));
+                }
+            }
+            return;
+        }
+        Err(_) => {
+            let internal = || HbmcError::Internal("plan build panicked during dispatch".into());
+            first.core.finish(Err(internal()));
+            for job in jobs {
+                if job.core.try_start() {
+                    job.core.finish(Err(internal()));
+                }
+            }
+            return;
+        }
+    };
+    let mut width: u64 = 0;
+    let mut poisoned = false;
+    let mut current = Some(first);
+    while let Some(job) = current.take() {
+        // Counters tick before the job runs, so any caller whose wait()
+        // has returned already observes its own job in the statistics.
+        width += 1;
+        queue.batched_rhs.fetch_add(1, AtomicOrdering::Relaxed);
+        if width == 2 {
+            queue.coalesced_rhs.fetch_add(2, AtomicOrdering::Relaxed);
+        } else if width > 2 {
+            queue.coalesced_rhs.fetch_add(1, AtomicOrdering::Relaxed);
+        }
+        match catch_unwind(AssertUnwindSafe(|| run_one(core, &session, &job))) {
+            Ok(result) => job.core.finish(result),
+            Err(_) => {
+                job.core.finish(Err(HbmcError::Internal(
+                    "solver panicked during dispatch".into(),
+                )));
+                poisoned = true;
+                break;
+            }
+        }
+        // Claim the next still-live member only now (lazy, see above).
+        current = jobs.by_ref().find(|job| job.core.try_start());
+    }
+    if poisoned {
+        // A panic may have unwound past the pool's barrier protocol (see
+        // `Pool::run`), so neither reuse the session for the remaining
+        // jobs nor drop it — `Pool::drop` joins workers that can be
+        // parked at a desynchronized barrier, which would hang the
+        // dispatcher (and with it every future job). Fail the rest of the
+        // batch and, for multi-threaded pools, leak the session: bounded
+        // by panic events, and liveness beats a few leaked threads on an
+        // already-broken invariant.
+        for job in jobs {
+            if job.core.try_start() {
+                job.core.finish(Err(HbmcError::Internal(
+                    "batch aborted: an earlier job's solver panicked".into(),
+                )));
+            }
+        }
+        if session.pool().nthreads() > 1 {
+            std::mem::forget(session);
+        }
+    }
+}
+
+fn run_one(core: &ServiceCore, session: &SolveSession, job: &QueuedJob) -> Result<SolveOutput> {
+    let out = session.solve_with(&job.rhs, &job.options)?;
+    core.note_solve();
+    if job.require_convergence && !out.report.converged {
+        return Err(HbmcError::NotConverged {
+            iterations: out.report.iterations,
+            relres: out.report.final_relres,
+        });
+    }
+    Ok(out)
+}

@@ -1,17 +1,28 @@
-//! [`SolverService`] — the thread-safe serving façade.
+//! [`SolverService`] — the thread-safe serving façade, now an
+//! **asynchronous job endpoint**.
 //!
 //! One service owns (a) a registry of matrices behind opaque
-//! [`MatrixHandle`]s and (b) the LRU [`PlanCache`] behind an `RwLock`,
-//! with a per-[`PlanKey`] build gate so that **concurrent requests for the
-//! same (matrix, config) trigger exactly one plan build** — the others
-//! wait on the gate and then take the cached plan. Solves themselves never
-//! hold either lock: a request checks out an `Arc<SolverPlan>`, opens a
-//! short-lived [`SolveSession`] with the *request's* pool width and
-//! convergence controls, and runs.
+//! [`MatrixHandle`]s, (b) the LRU [`PlanCache`] behind an `RwLock` with a
+//! per-[`PlanKey`] build gate (concurrent same-key requests trigger exactly
+//! one plan build), and (c) a job queue drained by one dispatcher thread
+//! (`api::queue`). [`submit`](SolverService::submit) enqueues one
+//! right-hand side and returns a [`JobHandle`] immediately; the dispatcher
+//! micro-batches compatible jobs onto one session, so concurrent
+//! single-RHS traffic shares one plan checkout and one warmed-up pool
+//! instead of paying per-request setup. The blocking
+//! [`solve`](SolverService::solve) / [`solve_many`](SolverService::solve_many)
+//! calls are thin submit + wait wrappers over the same queue, so existing
+//! callers keep working — and transparently coalesce with each other.
+//!
+//! Dropping the service shuts the queue down gracefully: no new
+//! submissions, everything already queued is flushed, then the dispatcher
+//! thread is joined.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::config::SolverConfig;
 use crate::coordinator::driver::SolveOptions;
@@ -19,6 +30,9 @@ use crate::coordinator::session::{CacheStats, PlanCache, PlanKey, SolveOutput, S
 use crate::error::{HbmcError, Result};
 use crate::solver::plan::SolverPlan;
 use crate::sparse::csr::Csr;
+
+use super::job::{JobCore, JobHandle};
+use super::queue::{dispatcher_loop, BatchKey, JobQueue, QueuedJob};
 
 /// Opaque ticket for a matrix registered with a [`SolverService`]. Cheap to
 /// copy and share across threads. Ids are allocated from one process-wide
@@ -35,15 +49,16 @@ impl MatrixHandle {
     }
 }
 
-/// Process-wide handle allocator (see [`MatrixHandle`]).
+/// Process-wide handle allocator (see [`MatrixHandle`]). Relaxed suffices:
+/// ids only need to be unique, which atomicity alone guarantees.
 static NEXT_MATRIX_ID: AtomicU64 = AtomicU64::new(1);
 
 /// A registry entry: the shared matrix plus its content fingerprint,
 /// hashed once at registration (an O(nnz) scan) rather than per request.
 #[derive(Clone)]
-struct Registered {
-    matrix: Arc<Csr>,
-    fingerprint: u64,
+pub(crate) struct Registered {
+    pub(crate) matrix: Arc<Csr>,
+    pub(crate) fingerprint: u64,
 }
 
 /// Per-request overrides layered on the service's default configuration.
@@ -51,16 +66,24 @@ struct Registered {
 /// `config` swaps the *structural* configuration (ordering, bs, w, storage
 /// — a different [`PlanKey`], hence possibly a different cached plan);
 /// `options` carries the per-solve knobs (rtol/max_iters overrides,
-/// history, solution copy) that never invalidate a plan.
+/// history, solution copy) that never invalidate a plan; `deadline` bounds
+/// how long a submitted job may sit in the queue before it is failed with
+/// [`HbmcError::DeadlineExceeded`] instead of dispatched.
 #[derive(Debug, Clone, Default)]
 pub struct SolveRequest {
     /// Structural config for this request; `None` = the service default.
+    /// (The `queue` field of an override is ignored — dispatcher tuning is
+    /// service-level.)
     pub config: Option<SolverConfig>,
     /// Per-solve options (tolerance/iteration overrides, history, …).
     pub options: SolveOptions,
     /// Turn a non-converged result into [`HbmcError::NotConverged`]
     /// instead of an `Ok` report with `converged == false`.
     pub require_convergence: bool,
+    /// Maximum time the job may wait in the queue before dispatch. Checked
+    /// when the dispatcher reaches the job: an expired job never runs; a
+    /// job that started before expiry always finishes.
+    pub deadline: Option<Duration>,
 }
 
 impl SolveRequest {
@@ -104,10 +127,18 @@ impl SolveRequest {
         self.require_convergence = true;
         self
     }
+
+    /// Fail the job with [`HbmcError::DeadlineExceeded`] if it is still
+    /// queued `budget` after submission (see the field docs).
+    pub fn deadline(mut self, budget: Duration) -> SolveRequest {
+        self.deadline = Some(budget);
+        self
+    }
 }
 
-/// Point-in-time service counters: registry size, plan-cache counters, and
-/// the build/coalescing behaviour under concurrency.
+/// Point-in-time service counters: registry size, plan-cache counters,
+/// build/coalescing behaviour under concurrency, and the job queue's
+/// batching statistics.
 #[derive(Debug, Clone, Copy)]
 pub struct ServiceStats {
     /// Matrices currently registered.
@@ -121,24 +152,29 @@ pub struct ServiceStats {
     pub coalesced_builds: u64,
     /// Solves completed through the service.
     pub solves: u64,
+    /// Jobs currently waiting in the queue (not yet dispatched).
+    pub queue_depth: usize,
+    /// Micro-batches the dispatcher has run (each = one plan checkout +
+    /// one session).
+    pub batches: u64,
+    /// Total right-hand sides dispatched across all batches.
+    pub batched_rhs: u64,
+    /// Right-hand sides that rode in a batch of width ≥ 2 — i.e. requests
+    /// that shared a session with at least one other request.
+    pub coalesced_rhs: u64,
 }
 
-/// Thread-safe solve endpoint; see module docs. `Send + Sync` — share one
-/// instance behind an `Arc` across all request threads.
-pub struct SolverService {
-    default_cfg: SolverConfig,
-    matrices: RwLock<HashMap<u64, Registered>>,
-    cache: RwLock<PlanCache>,
-    /// Per-key build gates: the map lock is held only to look up/insert a
-    /// gate; the gate itself is held for the duration of one plan build.
-    building: Mutex<HashMap<PlanKey, Arc<Mutex<()>>>>,
-    builds: AtomicU64,
-    coalesced: AtomicU64,
-    solves: AtomicU64,
+impl ServiceStats {
+    /// Mean dispatched batch width (`batched_rhs / batches`); 0 before the
+    /// first batch.
+    pub fn mean_batch_width(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_rhs as f64 / self.batches as f64
+        }
+    }
 }
-
-/// Default plan-cache capacity (`SolverService::new`).
-pub const DEFAULT_PLAN_CAPACITY: usize = 8;
 
 // Lock helpers: the service never panics while holding a lock on the hot
 // path, but a poisoned lock must not cascade — recover the guard.
@@ -150,93 +186,41 @@ fn rlock<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
     l.read().unwrap_or_else(PoisonError::into_inner)
 }
 
-fn mlock<T>(l: &Mutex<T>) -> MutexGuard<'_, T> {
+pub(crate) fn mlock<T>(l: &Mutex<T>) -> MutexGuard<'_, T> {
     l.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
-impl SolverService {
-    /// Service with the default configuration and plan-cache capacity.
-    pub fn new() -> SolverService {
-        SolverService::with_capacity(SolverConfig::default(), DEFAULT_PLAN_CAPACITY)
-            .expect("default config is valid")
-    }
+/// The service state shared between request threads and the dispatcher
+/// thread: registry, plan cache + build gates, and the statistics counters.
+pub(crate) struct ServiceCore {
+    default_cfg: SolverConfig,
+    matrices: RwLock<HashMap<u64, Registered>>,
+    cache: RwLock<PlanCache>,
+    /// Per-key build gates: the map lock is held only to look up/insert a
+    /// gate; the gate itself is held for the duration of one plan build.
+    building: Mutex<HashMap<PlanKey, Arc<Mutex<()>>>>,
+    // Monotonic statistics counters. `Relaxed` is deliberate and
+    // sufficient: each is independently monotonic and read only for
+    // reporting — nothing establishes happens-before through them (the
+    // data they describe synchronizes via the registry/cache locks and the
+    // job-state mutexes). They are not synchronization points; `SeqCst`
+    // would only add fences on the hot path.
+    builds: AtomicU64,
+    coalesced: AtomicU64,
+    solves: AtomicU64,
+}
 
-    /// Service whose `solve(handle, b)` uses `default_cfg`; fails fast on
-    /// an invalid config rather than at first request.
-    pub fn with_config(default_cfg: SolverConfig) -> Result<SolverService> {
-        SolverService::with_capacity(default_cfg, DEFAULT_PLAN_CAPACITY)
-    }
-
-    /// Full constructor: default config + plan-cache capacity (≥ 1).
-    pub fn with_capacity(default_cfg: SolverConfig, capacity: usize) -> Result<SolverService> {
-        default_cfg.validate()?;
-        if capacity == 0 {
-            return Err(HbmcError::invalid_config("plan cache capacity must be >= 1"));
-        }
-        Ok(SolverService {
-            default_cfg,
-            matrices: RwLock::new(HashMap::new()),
-            cache: RwLock::new(PlanCache::new(capacity)),
-            building: Mutex::new(HashMap::new()),
-            builds: AtomicU64::new(0),
-            coalesced: AtomicU64::new(0),
-            solves: AtomicU64::new(0),
-        })
-    }
-
-    /// The configuration used when a request carries no override.
-    pub fn default_config(&self) -> &SolverConfig {
-        &self.default_cfg
-    }
-
-    /// Register a matrix; the returned handle addresses it in every later
-    /// call. Registration never builds a plan — that happens lazily (and
-    /// exactly once per distinct config) at first solve.
-    pub fn register_matrix(&self, a: Csr) -> MatrixHandle {
-        self.register_matrix_arc(Arc::new(a))
-    }
-
-    /// Zero-copy registration for callers that already share the matrix.
-    /// The matrix is fingerprinted here, once, so later plan-cache lookups
-    /// never rescan it.
-    pub fn register_matrix_arc(&self, a: Arc<Csr>) -> MatrixHandle {
-        let id = NEXT_MATRIX_ID.fetch_add(1, AtomicOrdering::SeqCst);
-        let entry = Registered { fingerprint: a.fingerprint(), matrix: a };
-        wlock(&self.matrices).insert(id, entry);
-        MatrixHandle(id)
-    }
-
-    /// Drop a matrix from the registry. Cached plans for it age out of the
-    /// LRU naturally; in-flight solves holding the plan are unaffected.
-    pub fn unregister_matrix(&self, handle: MatrixHandle) -> Result<()> {
-        match wlock(&self.matrices).remove(&handle.0) {
-            Some(_) => Ok(()),
-            None => Err(HbmcError::UnknownMatrix(format!("handle #{}", handle.0))),
-        }
-    }
-
-    fn registered(&self, handle: MatrixHandle) -> Result<Registered> {
+impl ServiceCore {
+    pub(crate) fn registered(&self, handle: MatrixHandle) -> Result<Registered> {
         rlock(&self.matrices)
             .get(&handle.0)
             .cloned()
             .ok_or_else(|| HbmcError::UnknownMatrix(format!("handle #{}", handle.0)))
     }
 
-    /// The registered matrix behind `handle`.
-    pub fn matrix(&self, handle: MatrixHandle) -> Result<Arc<Csr>> {
-        Ok(self.registered(handle)?.matrix)
-    }
-
-    /// Get-or-build the plan for `(handle, cfg)` with single-build
-    /// coalescing (the tentpole guarantee: concurrent same-key requests
-    /// produce exactly one `SolverPlan::build`).
-    pub fn plan(&self, handle: MatrixHandle, cfg: &SolverConfig) -> Result<Arc<SolverPlan>> {
-        cfg.validate()?;
-        let reg = self.registered(handle)?;
-        self.plan_for(&reg, cfg)
-    }
-
-    fn plan_for(&self, reg: &Registered, cfg: &SolverConfig) -> Result<Arc<SolverPlan>> {
+    /// Get-or-build with single-build coalescing (see `plan` on the
+    /// service). Called by request threads and by the dispatcher.
+    pub(crate) fn plan_for(&self, reg: &Registered, cfg: &SolverConfig) -> Result<Arc<SolverPlan>> {
         let key = PlanKey::from_fingerprint(reg.fingerprint, cfg);
         // Fast path: cached (write lock — `get` touches the LRU clock).
         if let Some(plan) = wlock(&self.cache).get(&key) {
@@ -248,14 +232,14 @@ impl SolverService {
         let permit = mlock(&gate);
         // Re-check under the gate: whoever held it before us has inserted.
         if let Some(plan) = wlock(&self.cache).get(&key) {
-            self.coalesced.fetch_add(1, AtomicOrdering::SeqCst);
+            self.coalesced.fetch_add(1, AtomicOrdering::Relaxed);
             drop(permit);
             self.release_gate(&key, &gate);
             return Ok(plan);
         }
         let result = SolverPlan::build(&reg.matrix, cfg).map(|plan| {
             let plan = Arc::new(plan);
-            self.builds.fetch_add(1, AtomicOrdering::SeqCst);
+            self.builds.fetch_add(1, AtomicOrdering::Relaxed);
             wlock(&self.cache).insert(key.clone(), plan.clone());
             plan
         });
@@ -284,39 +268,191 @@ impl SolverService {
         }
     }
 
+    /// Count one completed solve (called by the dispatcher per rhs).
+    pub(crate) fn note_solve(&self) {
+        self.solves.fetch_add(1, AtomicOrdering::Relaxed);
+    }
+}
+
+/// Thread-safe solve endpoint; see module docs. `Send + Sync` — share one
+/// instance behind an `Arc` across all request threads.
+pub struct SolverService {
+    core: Arc<ServiceCore>,
+    queue: Arc<JobQueue>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+/// Default plan-cache capacity (`SolverService::new`).
+pub const DEFAULT_PLAN_CAPACITY: usize = 8;
+
+impl SolverService {
+    /// Service with the default configuration and plan-cache capacity.
+    pub fn new() -> SolverService {
+        SolverService::with_capacity(SolverConfig::default(), DEFAULT_PLAN_CAPACITY)
+            .expect("default service must construct")
+    }
+
+    /// Service whose `solve(handle, b)` uses `default_cfg`; fails fast on
+    /// an invalid config rather than at first request.
+    pub fn with_config(default_cfg: SolverConfig) -> Result<SolverService> {
+        SolverService::with_capacity(default_cfg, DEFAULT_PLAN_CAPACITY)
+    }
+
+    /// Full constructor: default config + plan-cache capacity (≥ 1). Also
+    /// spawns the dispatcher thread, tuned by `default_cfg.queue`.
+    pub fn with_capacity(default_cfg: SolverConfig, capacity: usize) -> Result<SolverService> {
+        default_cfg.validate()?;
+        if capacity == 0 {
+            return Err(HbmcError::invalid_config("plan cache capacity must be >= 1"));
+        }
+        let queue_cfg = default_cfg.queue;
+        let core = Arc::new(ServiceCore {
+            default_cfg,
+            matrices: RwLock::new(HashMap::new()),
+            cache: RwLock::new(PlanCache::new(capacity)),
+            building: Mutex::new(HashMap::new()),
+            builds: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            solves: AtomicU64::new(0),
+        });
+        let queue = Arc::new(JobQueue::new(queue_cfg));
+        let dispatcher = {
+            let (queue, core) = (Arc::clone(&queue), Arc::clone(&core));
+            std::thread::Builder::new()
+                .name("hbmc-dispatcher".into())
+                .spawn(move || dispatcher_loop(queue, core))
+                .map_err(|e| HbmcError::io("spawning the service dispatcher thread", e))?
+        };
+        Ok(SolverService { core, queue, dispatcher: Some(dispatcher) })
+    }
+
+    /// The configuration used when a request carries no override.
+    pub fn default_config(&self) -> &SolverConfig {
+        &self.core.default_cfg
+    }
+
+    /// Register a matrix; the returned handle addresses it in every later
+    /// call. Registration never builds a plan — that happens lazily (and
+    /// exactly once per distinct config) at first solve.
+    pub fn register_matrix(&self, a: Csr) -> MatrixHandle {
+        self.register_matrix_arc(Arc::new(a))
+    }
+
+    /// Zero-copy registration for callers that already share the matrix.
+    /// The matrix is fingerprinted here, once, so later plan-cache lookups
+    /// never rescan it.
+    pub fn register_matrix_arc(&self, a: Arc<Csr>) -> MatrixHandle {
+        let id = NEXT_MATRIX_ID.fetch_add(1, AtomicOrdering::Relaxed);
+        let entry = Registered { fingerprint: a.fingerprint(), matrix: a };
+        wlock(&self.core.matrices).insert(id, entry);
+        MatrixHandle(id)
+    }
+
+    /// Drop a matrix from the registry. Cached plans for it age out of the
+    /// LRU naturally; queued jobs captured their registry entry at submit
+    /// time and are unaffected, as are in-flight solves holding the plan.
+    pub fn unregister_matrix(&self, handle: MatrixHandle) -> Result<()> {
+        match wlock(&self.core.matrices).remove(&handle.0) {
+            Some(_) => Ok(()),
+            None => Err(HbmcError::UnknownMatrix(format!("handle #{}", handle.0))),
+        }
+    }
+
+    /// The registered matrix behind `handle`.
+    pub fn matrix(&self, handle: MatrixHandle) -> Result<Arc<Csr>> {
+        Ok(self.core.registered(handle)?.matrix)
+    }
+
+    /// Get-or-build the plan for `(handle, cfg)` with single-build
+    /// coalescing (concurrent same-key requests produce exactly one
+    /// `SolverPlan::build`).
+    pub fn plan(&self, handle: MatrixHandle, cfg: &SolverConfig) -> Result<Arc<SolverPlan>> {
+        cfg.validate()?;
+        let reg = self.core.registered(handle)?;
+        self.core.plan_for(&reg, cfg)
+    }
+
     /// Open a [`SolveSession`] on the (cached or freshly built) plan for
-    /// `(handle, cfg)`, with the request's pool width and tolerances. For
-    /// callers that want to hold one session across a burst of solves.
+    /// `(handle, cfg)`, with the request's pool width and tolerances — the
+    /// power-user path that bypasses the job queue for callers that want
+    /// to hold one session across a burst of solves themselves.
     pub fn session(&self, handle: MatrixHandle, cfg: &SolverConfig) -> Result<SolveSession> {
         let plan = self.plan(handle, cfg)?;
         Ok(SolveSession::for_request(plan, cfg))
     }
 
+    /// Enqueue one right-hand side and return immediately with a
+    /// [`JobHandle`] (poll / wait / cancel; see `api::job`).
+    ///
+    /// Validation (handle, config, rhs dimension) happens here, so a
+    /// malformed request fails synchronously with a typed error and never
+    /// occupies the queue. The dispatcher micro-batches this job with any
+    /// other queued jobs that share its plan and session parameters —
+    /// concurrent submitters against one matrix share one session instead
+    /// of spinning up N.
+    pub fn submit(
+        &self,
+        handle: MatrixHandle,
+        rhs: &[f64],
+        req: &SolveRequest,
+    ) -> Result<JobHandle> {
+        let reg = self.core.registered(handle)?;
+        let cfg = req.config.as_ref().unwrap_or(&self.core.default_cfg);
+        cfg.validate()?;
+        let n = reg.matrix.n();
+        if rhs.len() != n {
+            return Err(HbmcError::DimensionMismatch { expected: n, got: rhs.len() });
+        }
+        Ok(self.enqueue(&reg, cfg, rhs, req))
+    }
+
+    /// Infallible enqueue for inputs already validated by the caller
+    /// (`submit` per request; `solve_many_with` once for a whole batch).
+    fn enqueue(
+        &self,
+        reg: &Registered,
+        cfg: &SolverConfig,
+        rhs: &[f64],
+        req: &SolveRequest,
+    ) -> JobHandle {
+        let key = BatchKey::new(PlanKey::from_fingerprint(reg.fingerprint, cfg), cfg);
+        let core = JobCore::new(req.deadline);
+        self.queue.push(QueuedJob {
+            core: Arc::clone(&core),
+            key,
+            rhs: rhs.to_vec(),
+            cfg: cfg.clone(),
+            options: req.options.clone(),
+            require_convergence: req.require_convergence,
+            reg: reg.clone(),
+        });
+        JobHandle::new(core)
+    }
+
     /// Solve `A x = b` under the service's default configuration.
     ///
-    /// Each call opens a short-lived session, which spawns a pool of
-    /// `threads - 1` workers; with the default `threads = 1` that is free.
-    /// Callers sustaining a high request rate on a multi-threaded config
-    /// should hold a [`session`](SolverService::session) (one persistent
-    /// pool) or batch with [`solve_many`](SolverService::solve_many).
+    /// A thin [`submit`](SolverService::submit) + wait wrapper: the call
+    /// blocks, but the work rides the job queue, so simultaneous blocking
+    /// callers against the same matrix still coalesce into shared batches.
     pub fn solve(&self, handle: MatrixHandle, b: &[f64]) -> Result<SolveOutput> {
         self.solve_with(handle, b, &SolveRequest::default())
     }
 
-    /// Solve with per-request overrides (see [`solve`](SolverService::solve)
-    /// for the per-call pool note).
+    /// Solve with per-request overrides (submit + wait; see
+    /// [`solve`](SolverService::solve)).
     pub fn solve_with(
         &self,
         handle: MatrixHandle,
         b: &[f64],
         req: &SolveRequest,
     ) -> Result<SolveOutput> {
-        let outs = self.solve_many_with(handle, &[b], req)?;
-        Ok(outs.into_iter().next().expect("one rhs in, one output out"))
+        self.submit(handle, b, req)?.wait()
     }
 
-    /// Batched serving: all right-hand sides run on one session (one pool,
-    /// one plan checkout). Results are index-aligned with `rhss`.
+    /// Batched serving: all right-hand sides are submitted up front and
+    /// dispatched on shared sessions. Results are index-aligned with
+    /// `rhss`. An empty slice returns `Ok(vec![])` without touching the
+    /// queue, the plan cache, or a session.
     pub fn solve_many<B: AsRef<[f64]>>(
         &self,
         handle: MatrixHandle,
@@ -328,55 +464,85 @@ impl SolverService {
     /// Batched serving with per-request overrides (applied to every rhs).
     ///
     /// Dimension checks run up front, so a malformed batch is rejected
-    /// before any solve. With
-    /// [`require_convergence`](SolveRequest::require_convergence), the
-    /// batch fails fast on the first rhs that stalls: completed outputs are
-    /// discarded and later rhss do not run — solve rhss individually when
-    /// partial results of a batch that may stall matter.
+    /// before any job is enqueued. The batch result is all-or-nothing:
+    /// with [`require_convergence`](SolveRequest::require_convergence),
+    /// the first rhs that stalls fails the call, completed outputs are
+    /// discarded, and the not-yet-dispatched remainder is cancelled
+    /// (already-running rhss finish, unobserved) — solve rhss
+    /// individually when partial results matter.
     pub fn solve_many_with<B: AsRef<[f64]>>(
         &self,
         handle: MatrixHandle,
         rhss: &[B],
         req: &SolveRequest,
     ) -> Result<Vec<SolveOutput>> {
-        let reg = self.registered(handle)?;
-        let n = reg.matrix.n();
-        let cfg = req.config.as_ref().unwrap_or(&self.default_cfg);
+        if rhss.is_empty() {
+            return Ok(Vec::new());
+        }
+        let reg = self.core.registered(handle)?;
+        let cfg = req.config.as_ref().unwrap_or(&self.core.default_cfg);
         cfg.validate()?;
-        // Reject every malformed rhs up front — a batch must not run
-        // halfway before tripping on rhs k.
+        let n = reg.matrix.n();
+        // Reject every malformed rhs up front — a batch must not enqueue
+        // (let alone run) halfway before tripping on rhs k.
         for b in rhss {
             let got = b.as_ref().len();
             if got != n {
                 return Err(HbmcError::DimensionMismatch { expected: n, got });
             }
         }
-        let plan = self.plan_for(&reg, cfg)?;
-        let session = SolveSession::for_request(plan, cfg);
-        let mut outs = Vec::with_capacity(rhss.len());
-        for b in rhss {
-            let out = session.solve_with(b.as_ref(), &req.options)?;
-            self.solves.fetch_add(1, AtomicOrdering::SeqCst);
-            if req.require_convergence && !out.report.converged {
-                return Err(HbmcError::NotConverged {
-                    iterations: out.report.iterations,
-                    relres: out.report.final_relres,
-                });
+        // Everything is validated; enqueue without re-checking per rhs.
+        let jobs: Vec<JobHandle> =
+            rhss.iter().map(|b| self.enqueue(&reg, cfg, b.as_ref(), req)).collect();
+        let mut outs = Vec::with_capacity(jobs.len());
+        let mut jobs = jobs.into_iter();
+        while let Some(job) = jobs.next() {
+            match job.wait() {
+                Ok(out) => outs.push(out),
+                Err(e) => {
+                    // The batch result is discarded anyway — shed the
+                    // not-yet-dispatched remainder instead of letting the
+                    // dispatcher solve rhss nobody can observe. (Running
+                    // jobs still finish; cancel is queued-only.)
+                    for job in jobs {
+                        job.cancel();
+                    }
+                    return Err(e);
+                }
             }
-            outs.push(out);
         }
         Ok(outs)
     }
 
     /// Counters: registry size, cache hits/misses/evictions, coalesced
-    /// builds, solves served.
+    /// builds, solves served, and the queue's batching statistics.
     pub fn stats(&self) -> ServiceStats {
         ServiceStats {
-            matrices: rlock(&self.matrices).len(),
-            cache: rlock(&self.cache).stats(),
-            builds: self.builds.load(AtomicOrdering::SeqCst),
-            coalesced_builds: self.coalesced.load(AtomicOrdering::SeqCst),
-            solves: self.solves.load(AtomicOrdering::SeqCst),
+            matrices: rlock(&self.core.matrices).len(),
+            cache: rlock(&self.core.cache).stats(),
+            builds: self.core.builds.load(AtomicOrdering::Relaxed),
+            coalesced_builds: self.core.coalesced.load(AtomicOrdering::Relaxed),
+            solves: self.core.solves.load(AtomicOrdering::Relaxed),
+            queue_depth: self.queue.depth(),
+            batches: self.queue.batches(),
+            batched_rhs: self.queue.batched_rhs(),
+            coalesced_rhs: self.queue.coalesced_rhs(),
+        }
+    }
+}
+
+impl Drop for SolverService {
+    /// Graceful shutdown: stop accepting jobs, let the dispatcher flush
+    /// everything already queued, then join it. Every outstanding
+    /// `JobHandle` resolves — queued jobs run (or expire/cancel), none are
+    /// abandoned mid-wait — with one caveat: if a multi-threaded pool was
+    /// wedged by a mid-color-loop worker panic (the residual gap
+    /// documented in `pool.rs`), the dispatcher is stuck inside that solve
+    /// and this join inherits the hang rather than abandoning the thread.
+    fn drop(&mut self) {
+        self.queue.shutdown();
+        if let Some(dispatcher) = self.dispatcher.take() {
+            let _ = dispatcher.join();
         }
     }
 }
@@ -390,6 +556,7 @@ impl Default for SolverService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::job::JobState;
     use crate::config::{OrderingKind, Scale};
     use crate::gen::suite;
 
@@ -402,6 +569,8 @@ mod tests {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<SolverService>();
         assert_send_sync::<MatrixHandle>();
+        fn assert_send<T: Send>() {}
+        assert_send::<JobHandle>();
     }
 
     #[test]
@@ -418,6 +587,33 @@ mod tests {
         assert_eq!(s.builds, 1, "second solve must reuse the cached plan");
         assert_eq!(s.cache.hits, 1);
         assert_eq!(s.solves, 2);
+        // Two sequential blocking solves = two dispatched batches of one.
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.batched_rhs, 2);
+        assert_eq!(s.coalesced_rhs, 0);
+        assert_eq!(s.queue_depth, 0);
+        assert!((s.mean_batch_width() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn submit_poll_wait_lifecycle() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let svc = SolverService::with_config(tiny_cfg(OrderingKind::Hbmc)).unwrap();
+        let h = svc.register_matrix(d.matrix.clone());
+        let job = svc.submit(h, &d.b, &SolveRequest::new()).unwrap();
+        assert!(job.id() > 0);
+        // Whatever intermediate states we observe, wait() must resolve.
+        let state = job.poll();
+        assert!(
+            matches!(
+                state,
+                JobState::Queued | JobState::Running | JobState::Succeeded
+            ),
+            "{state:?}"
+        );
+        let out = job.wait().unwrap();
+        assert!(out.report.converged);
+        assert_eq!(svc.stats().solves, 1);
     }
 
     #[test]
@@ -429,6 +625,9 @@ mod tests {
         let err = svc.solve(h, &d.b).unwrap_err();
         assert!(matches!(err, HbmcError::UnknownMatrix(_)), "{err:?}");
         assert!(matches!(svc.unregister_matrix(h), Err(HbmcError::UnknownMatrix(_))));
+        // submit validates synchronously, too.
+        let err = svc.submit(h, &d.b, &SolveRequest::new()).unwrap_err();
+        assert!(matches!(err, HbmcError::UnknownMatrix(_)), "{err:?}");
     }
 
     #[test]
@@ -443,10 +642,12 @@ mod tests {
                 if expected == n && got == 2),
             "{err:?}"
         );
-        // A batch with one bad rhs is rejected before any solve runs.
+        // A batch with one bad rhs is rejected before any job is enqueued.
         let err = svc.solve_many(h, &[d.b.clone(), vec![0.0; 3]]).unwrap_err();
         assert!(matches!(err, HbmcError::DimensionMismatch { got: 3, .. }), "{err:?}");
-        assert_eq!(svc.stats().solves, 0, "rejected batch must not run");
+        let s = svc.stats();
+        assert_eq!(s.solves, 0, "rejected batch must not run");
+        assert_eq!(s.batches, 0, "rejected batch must not even be enqueued");
     }
 
     #[test]
@@ -477,5 +678,20 @@ mod tests {
         // Without the flag the same request is an Ok non-converged report.
         let out = svc.solve_with(h, &d.b, &SolveRequest::new().max_iters(2)).unwrap();
         assert!(!out.report.converged);
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let svc = SolverService::with_config(tiny_cfg(OrderingKind::Hbmc)).unwrap();
+        let h = svc.register_matrix(d.matrix.clone());
+        let rhss: Vec<Vec<f64>> = Vec::new();
+        let outs = svc.solve_many(h, &rhss).unwrap();
+        assert!(outs.is_empty());
+        let s = svc.stats();
+        assert_eq!(s.builds, 0, "empty batch must not build a plan");
+        assert_eq!(s.cache.misses, 0);
+        assert_eq!(s.solves, 0);
+        assert_eq!(s.batches, 0, "empty batch must not reach the queue");
     }
 }

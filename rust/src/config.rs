@@ -8,10 +8,15 @@
 //! [`SolverConfig::validate`] so an invalid configuration never reaches the
 //! plan builder. The enums implement [`FromStr`]/[`Display`] (CLI flags and
 //! report labels go through the standard traits, not ad-hoc `parse`/`name`
-//! pairs).
+//! pairs); an unknown string is [`HbmcError::Parse`].
+//!
+//! [`QueueConfig`] tunes the asynchronous job dispatcher of the
+//! `SolverService` (micro-batch width and flush window); it is
+//! service-level state, read once at service construction.
 
 use std::fmt;
 use std::str::FromStr;
+use std::time::Duration;
 
 use crate::error::{HbmcError, Result};
 
@@ -38,7 +43,7 @@ impl FromStr for OrderingKind {
             "mc" => Ok(OrderingKind::Mc),
             "bmc" => Ok(OrderingKind::Bmc),
             "hbmc" => Ok(OrderingKind::Hbmc),
-            other => Err(HbmcError::invalid_config(format!(
+            other => Err(HbmcError::parse(format!(
                 "unknown ordering {other:?} (natural|mc|bmc|hbmc)"
             ))),
         }
@@ -71,7 +76,7 @@ impl FromStr for SpmvKind {
         match s.to_ascii_lowercase().as_str() {
             "crs" | "csr" => Ok(SpmvKind::Crs),
             "sell" => Ok(SpmvKind::Sell),
-            other => Err(HbmcError::invalid_config(format!(
+            other => Err(HbmcError::parse(format!(
                 "unknown spmv kind {other:?} (crs|sell)"
             ))),
         }
@@ -107,7 +112,7 @@ impl FromStr for Scale {
             "tiny" => Ok(Scale::Tiny),
             "small" => Ok(Scale::Small),
             "full" => Ok(Scale::Full),
-            other => Err(HbmcError::invalid_config(format!(
+            other => Err(HbmcError::parse(format!(
                 "unknown scale {other:?} (tiny|small|full)"
             ))),
         }
@@ -121,6 +126,36 @@ impl fmt::Display for Scale {
             Scale::Small => "small",
             Scale::Full => "full",
         })
+    }
+}
+
+/// Tuning for the `SolverService` job dispatcher (see `api::queue`): how
+/// many compatible queued jobs may be coalesced into one micro-batch, and
+/// how long the dispatcher holds an under-full batch open waiting for more.
+///
+/// These are **service-level** knobs: a service reads them once, from the
+/// config it was constructed with. The `queue` field of a per-request
+/// config override (`SolveRequest::with_config`) is ignored, and none of
+/// these fields participate in the plan-cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueConfig {
+    /// Maximum jobs coalesced into one dispatched batch (≥ 1). A batch is
+    /// flushed as soon as it reaches this width.
+    pub max_batch: usize,
+    /// How long the dispatcher keeps an under-full batch open for more
+    /// same-key jobs before flushing it. Zero disables the wait (every
+    /// batch is whatever is already queued at dispatch time); capped at
+    /// one hour by [`SolverConfig::validate`].
+    pub max_wait: Duration,
+}
+
+impl Default for QueueConfig {
+    fn default() -> Self {
+        // 200 µs keeps single blocking solves (which ride the queue too)
+        // essentially latency-neutral — tiny next to a multi-ms solve —
+        // while still wide enough to coalesce a burst of concurrent
+        // submissions into one SIMD-friendly sweep.
+        QueueConfig { max_batch: 32, max_wait: Duration::from_micros(200) }
     }
 }
 
@@ -148,6 +183,8 @@ pub struct SolverConfig {
     pub shift: f64,
     /// Use the explicit AVX-512/AVX2 intrinsic path when available.
     pub use_intrinsics: bool,
+    /// Job-queue dispatcher tuning (service-level; see [`QueueConfig`]).
+    pub queue: QueueConfig,
 }
 
 impl Default for SolverConfig {
@@ -163,6 +200,7 @@ impl Default for SolverConfig {
             max_iters: 20_000,
             shift: 0.0,
             use_intrinsics: true,
+            queue: QueueConfig::default(),
         }
     }
 }
@@ -189,7 +227,7 @@ impl FromStr for NodePreset {
             "knl" | "knl-like" | "xc40" => Ok(NodePreset::KnlLike),
             "bdw" | "bdw-like" | "cs400" | "broadwell" => Ok(NodePreset::BdwLike),
             "skx" | "skx-like" | "cx2550" | "skylake" => Ok(NodePreset::SkxLike),
-            other => Err(HbmcError::invalid_config(format!(
+            other => Err(HbmcError::parse(format!(
                 "unknown node preset {other:?} (knl|bdw|skx)"
             ))),
         }
@@ -276,6 +314,16 @@ impl SolverConfig {
                 ));
             }
         }
+        if self.queue.max_batch == 0 {
+            return Err(HbmcError::invalid_config("queue.max_batch must be >= 1"));
+        }
+        // Bounded so `Instant::now() + max_wait` in the dispatcher can never
+        // overflow (Duration::MAX as a "wait forever" sentinel would
+        // otherwise panic the dispatcher thread); an hour is already far
+        // beyond any sane batching window.
+        if self.queue.max_wait > Duration::from_secs(3600) {
+            return Err(HbmcError::invalid_config("queue.max_wait must be <= 1 hour"));
+        }
         Ok(())
     }
 }
@@ -345,6 +393,19 @@ impl SolverConfigBuilder {
         self
     }
 
+    /// Maximum jobs the service dispatcher coalesces into one batch (≥ 1).
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.cfg.queue.max_batch = max_batch;
+        self
+    }
+
+    /// How long the dispatcher holds an under-full batch open for more
+    /// same-key jobs before flushing it.
+    pub fn max_wait(mut self, max_wait: Duration) -> Self {
+        self.cfg.queue.max_wait = max_wait;
+        self
+    }
+
     /// Apply a machine preset (sets `w` and the intrinsic path).
     pub fn preset(mut self, node: NodePreset) -> Self {
         node.apply(&mut self.cfg);
@@ -371,9 +432,12 @@ mod tests {
         assert_eq!("CSR".parse::<SpmvKind>().unwrap(), SpmvKind::Crs);
         assert_eq!("full".parse::<Scale>().unwrap(), Scale::Full);
         assert_eq!("skx".parse::<NodePreset>().unwrap(), NodePreset::SkxLike);
-        // Display of each ordering parses back to itself.
+        // Display of *every* variant of each enum parses back to itself.
         for k in [OrderingKind::Natural, OrderingKind::Mc, OrderingKind::Bmc, OrderingKind::Hbmc] {
             assert_eq!(k.to_string().parse::<OrderingKind>().unwrap(), k);
+        }
+        for v in [SpmvKind::Crs, SpmvKind::Sell] {
+            assert_eq!(v.to_string().parse::<SpmvKind>().unwrap(), v);
         }
         for s in [Scale::Tiny, Scale::Small, Scale::Full] {
             assert_eq!(s.to_string().parse::<Scale>().unwrap(), s);
@@ -385,10 +449,31 @@ mod tests {
     }
 
     #[test]
-    fn unknown_strings_report_invalid_config() {
+    fn unknown_strings_report_parse_errors() {
         let err = "warp".parse::<SpmvKind>().unwrap_err();
-        assert!(matches!(err, HbmcError::InvalidConfig(_)), "{err:?}");
+        assert!(matches!(err, HbmcError::Parse(_)), "{err:?}");
         assert!(err.to_string().contains("warp"));
+        assert!(matches!("rainbow".parse::<OrderingKind>(), Err(HbmcError::Parse(_))));
+        assert!(matches!("huge".parse::<Scale>(), Err(HbmcError::Parse(_))));
+        assert!(matches!("epyc".parse::<NodePreset>(), Err(HbmcError::Parse(_))));
+    }
+
+    #[test]
+    fn queue_knobs_validate_and_build() {
+        let cfg = SolverConfig::builder()
+            .max_batch(4)
+            .max_wait(Duration::from_millis(2))
+            .build()
+            .unwrap();
+        assert_eq!(cfg.queue.max_batch, 4);
+        assert_eq!(cfg.queue.max_wait, Duration::from_millis(2));
+        let err = SolverConfig::builder().max_batch(0).build().unwrap_err();
+        assert!(matches!(err, HbmcError::InvalidConfig(_)), "{err:?}");
+        assert!(err.to_string().contains("max_batch"), "{err}");
+        // The window is bounded so the dispatcher's deadline arithmetic
+        // can never overflow (Duration::MAX sentinel).
+        let err = SolverConfig::builder().max_wait(Duration::from_secs(7200)).build().unwrap_err();
+        assert!(err.to_string().contains("max_wait"), "{err}");
     }
 
     #[test]

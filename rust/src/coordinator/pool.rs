@@ -34,6 +34,12 @@ struct Shared {
     shutdown: AtomicBool,
     syncs: AtomicU64,
     active_jobs: AtomicUsize,
+    /// Set when a worker's closure panicked during the current job; the
+    /// caller re-raises it after the completion barrier so the panic is
+    /// observed on the calling thread instead of silently killing a
+    /// worker (which would leave every later `run` waiting forever on a
+    /// short barrier).
+    worker_panicked: AtomicBool,
 }
 
 /// Persistent worker pool; see module docs.
@@ -54,6 +60,7 @@ impl Pool {
             shutdown: AtomicBool::new(false),
             syncs: AtomicU64::new(0),
             active_jobs: AtomicUsize::new(0),
+            worker_panicked: AtomicBool::new(false),
         });
         let handles = (1..nthreads)
             .map(|tid| {
@@ -102,6 +109,15 @@ impl Pool {
         f(0, n);
         self.shared.barrier.wait(); // completion
         self.shared.active_jobs.store(0, Ordering::SeqCst);
+        if self.shared.worker_panicked.swap(false, Ordering::SeqCst) {
+            // Re-raise on the calling thread: the job's output is not
+            // trustworthy, and the caller (not a detached worker) is the
+            // one positioned to contain it. Note: if the panic happened
+            // between color barriers the pool's barrier generations may be
+            // desynchronized — treat the pool as poisoned and do not reuse
+            // it (the service dispatcher leaks such sessions on purpose).
+            panic!("pool worker panicked during job");
+        }
     }
 
     /// Intra-job synchronization point (one per color transition).
@@ -165,7 +181,22 @@ fn worker_loop(sh: Arc<Shared>, tid: usize) {
             // SAFETY: `run` keeps the closure alive until the completion
             // barrier below.
             let f = unsafe { &*ptr };
-            f(tid, sh.nthreads);
+            // A panicking closure must not kill the worker: every later
+            // job would then wait forever on a barrier that is one thread
+            // short. Catch it, flag it, and still arrive at the completion
+            // barrier; `run` re-raises on the caller. Best-effort only:
+            // this restores the protocol when the panic happens outside a
+            // color loop (or after its last barrier). A worker panicking
+            // with ≥ 2 color barriers still ahead deserts those waits and
+            // the one shared `Barrier` stays desynchronized — the
+            // remaining participants hang, which a std Barrier cannot
+            // express (no poisoning). Callers that must survive that
+            // (the service dispatcher) need their own watchdog/isolation.
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(tid, sh.nthreads)))
+                .is_err()
+            {
+                sh.worker_panicked.store(true, Ordering::SeqCst);
+            }
             sh.barrier.wait(); // completion
         }
     }
@@ -308,6 +339,21 @@ mod tests {
             });
         }
         assert_eq!(total.load(Ordering::SeqCst), 30);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool worker panicked")]
+    fn worker_panic_is_reraised_on_caller() {
+        // A worker panic (outside any color loop) must not kill the worker
+        // silently: the caller observes it as its own panic after the
+        // completion barrier, and the pool's threads stay joinable (Drop
+        // runs during this test's unwind).
+        let pool = Pool::new(2);
+        pool.run(&|tid, _n| {
+            if tid == 1 {
+                panic!("boom");
+            }
+        });
     }
 
     #[test]

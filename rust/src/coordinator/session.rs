@@ -6,6 +6,13 @@
 //! keyed by (matrix fingerprint, ordering, bs, w, spmv, σ, shift,
 //! intrinsics) so repeated requests against the same few matrices never
 //! re-order or re-factor.
+//!
+//! Sessions are also the batch entry point of the serving tier: the
+//! `SolverService` job dispatcher (`api::queue`) opens **one** session per
+//! micro-batch and runs every coalesced right-hand side through it —
+//! `solve_many` and the dispatcher share the same per-rhs
+//! [`solve_with`](SolveSession::solve_with) path, so batched results are
+//! bitwise-identical to independent solves.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
@@ -35,6 +42,9 @@ pub struct SolveOutput {
 pub struct SolveSession {
     plan: Arc<SolverPlan>,
     pool: Pool,
+    /// Monotonic solve counter (feeds `solve_index`). Relaxed ordering is
+    /// sufficient: `fetch_add` is atomic, so indices stay unique, and the
+    /// counter is never used to publish other memory.
     solves: AtomicUsize,
     rtol: f64,
     max_iters: usize,
@@ -87,7 +97,7 @@ impl SolveSession {
 
     /// Number of solves completed on this session.
     pub fn solves_completed(&self) -> usize {
-        self.solves.load(AtomicOrdering::SeqCst)
+        self.solves.load(AtomicOrdering::Relaxed)
     }
 
     /// Solve `A x = b` with default options.
@@ -107,7 +117,7 @@ impl SolveSession {
                 max_iters: Some(opts.max_iters.unwrap_or(self.max_iters)),
             },
         )?;
-        let solve_index = self.solves.fetch_add(1, AtomicOrdering::SeqCst);
+        let solve_index = self.solves.fetch_add(1, AtomicOrdering::Relaxed);
         let mut report = SolveReport::from_parts(&self.plan, out.cg, solve_index);
         if opts.return_solution {
             report.solution = Some(out.x.clone());

@@ -19,18 +19,30 @@
 //!   the iteration cap was reached first,
 //! * [`UnknownMatrix`](HbmcError::UnknownMatrix) — a dataset name or
 //!   `MatrixHandle` that the registry/service does not know,
+//! * [`DeadlineExceeded`](HbmcError::DeadlineExceeded) — an asynchronous
+//!   job (see `SolverService::submit`) was still queued when its per-job
+//!   deadline expired; it was never dispatched,
+//! * [`Cancelled`](HbmcError::Cancelled) — an asynchronous job was
+//!   cancelled while still queued (`JobHandle::cancel`),
 //! * [`Io`](HbmcError::Io) — an underlying I/O failure, with the path or
 //!   operation as context.
 //!
 //! Three auxiliary variants cover the remaining library surface:
 //! [`Parse`](HbmcError::Parse) for malformed input text (MatrixMarket,
-//! kvtext artifacts), [`Runtime`](HbmcError::Runtime) for the PJRT/XLA
-//! backend, and [`Internal`](HbmcError::Internal) for violated internal
-//! invariants (e.g. a non-injective permutation).
+//! kvtext artifacts — and unknown enum strings in the `FromStr` impls),
+//! [`Runtime`](HbmcError::Runtime) for the PJRT/XLA backend, and
+//! [`Internal`](HbmcError::Internal) for violated internal invariants
+//! (e.g. a non-injective permutation).
+//!
+//! `HbmcError` implements [`Clone`] so the job dispatcher can fan one
+//! failure (say, a factorization breakdown while building a shared plan)
+//! out to every job of a batch; the `Io` variant clones by re-creating the
+//! `std::io::Error` from its kind and message.
 //!
 //! [`SolverConfig`]: crate::config::SolverConfig
 
 use std::fmt;
+use std::time::Duration;
 
 /// Crate-wide result alias. The default error parameter keeps
 /// `Result<T, OtherError>` spellable where needed (e.g. `FromStr::Err`).
@@ -56,6 +68,14 @@ pub enum HbmcError {
     NotConverged { iterations: usize, relres: f64 },
     /// Unknown dataset name or stale/foreign `MatrixHandle`.
     UnknownMatrix(String),
+    /// An asynchronous job was still queued when its per-job deadline
+    /// (`SolveRequest::deadline`) expired; `budget` is the time the job
+    /// was given at submission. Jobs already running are never aborted.
+    DeadlineExceeded { budget: Duration },
+    /// An asynchronous job was cancelled while still queued — by
+    /// `JobHandle::cancel`, or rejected because the service was already
+    /// shutting down. Either way it was never dispatched.
+    Cancelled,
     /// Underlying I/O failure; `context` names the path or operation.
     Io {
         context: String,
@@ -106,6 +126,10 @@ impl fmt::Display for HbmcError {
                 "solver did not converge: {iterations} iterations, relative residual {relres:.3e}"
             ),
             HbmcError::UnknownMatrix(what) => write!(f, "unknown matrix: {what}"),
+            HbmcError::DeadlineExceeded { budget } => {
+                write!(f, "job deadline exceeded: still queued after its {budget:?} budget")
+            }
+            HbmcError::Cancelled => write!(f, "job cancelled while queued"),
             HbmcError::Io { context, source } => {
                 if context.is_empty() {
                     write!(f, "I/O error: {source}")
@@ -116,6 +140,43 @@ impl fmt::Display for HbmcError {
             HbmcError::Parse(msg) => write!(f, "parse error: {msg}"),
             HbmcError::Runtime(msg) => write!(f, "runtime error: {msg}"),
             HbmcError::Internal(msg) => write!(f, "internal error: {msg}"),
+        }
+    }
+}
+
+// Manual impl because `std::io::Error` is not `Clone`: the `Io` variant is
+// reproduced from its kind and rendered message (the `source` chain is cut,
+// the text preserved). Needed by the job dispatcher, which fans a single
+// batch-level failure out to every `JobHandle` waiting on that batch.
+impl Clone for HbmcError {
+    fn clone(&self) -> HbmcError {
+        match self {
+            HbmcError::InvalidConfig(m) => HbmcError::InvalidConfig(m.clone()),
+            HbmcError::DimensionMismatch { expected, got } => {
+                HbmcError::DimensionMismatch { expected: *expected, got: *got }
+            }
+            HbmcError::BreakdownInFactorization { row, shift, detail } => {
+                HbmcError::BreakdownInFactorization {
+                    row: *row,
+                    shift: *shift,
+                    detail: detail.clone(),
+                }
+            }
+            HbmcError::NotConverged { iterations, relres } => {
+                HbmcError::NotConverged { iterations: *iterations, relres: *relres }
+            }
+            HbmcError::UnknownMatrix(m) => HbmcError::UnknownMatrix(m.clone()),
+            HbmcError::DeadlineExceeded { budget } => {
+                HbmcError::DeadlineExceeded { budget: *budget }
+            }
+            HbmcError::Cancelled => HbmcError::Cancelled,
+            HbmcError::Io { context, source } => HbmcError::Io {
+                context: context.clone(),
+                source: std::io::Error::new(source.kind(), source.to_string()),
+            },
+            HbmcError::Parse(m) => HbmcError::Parse(m.clone()),
+            HbmcError::Runtime(m) => HbmcError::Runtime(m.clone()),
+            HbmcError::Internal(m) => HbmcError::Internal(m.clone()),
         }
     }
 }
@@ -162,6 +223,20 @@ mod tests {
         assert!(HbmcError::UnknownMatrix("nope".into()).to_string().contains("nope"));
         assert!(HbmcError::Parse("bad line".into()).to_string().starts_with("parse error"));
         assert!(HbmcError::Runtime("no pjrt".into()).to_string().starts_with("runtime error"));
+        let dl = HbmcError::DeadlineExceeded { budget: Duration::from_millis(5) };
+        assert!(dl.to_string().contains("deadline exceeded"), "{dl}");
+        assert!(HbmcError::Cancelled.to_string().contains("cancelled"));
+    }
+
+    #[test]
+    fn clone_preserves_variant_and_message() {
+        let orig = HbmcError::NotConverged { iterations: 7, relres: 2.5e-2 };
+        assert!(matches!(orig.clone(), HbmcError::NotConverged { iterations: 7, .. }));
+        let io = HbmcError::io("reading b.mtx", std::io::Error::other("disk on fire"));
+        let cloned = io.clone();
+        assert!(matches!(cloned, HbmcError::Io { .. }), "{cloned:?}");
+        assert!(cloned.to_string().contains("disk on fire"));
+        assert!(cloned.to_string().starts_with("reading b.mtx"));
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! and Parallelization of the Sparse Triangular Solver in the ICCG
 //! Method"*, grown into a servable, thread-safe two-phase solver.
 //!
-//! ## The front door: builder → service → handles
+//! ## The front door: builder → service → jobs
 //!
 //! Production callers go through three typed pieces (the [`api`] layer):
 //!
@@ -13,14 +13,19 @@
 //!    setters, validated on `build()`, so an invalid configuration is
 //!    rejected before it can reach a kernel;
 //! 2. [`SolverService`](api::SolverService) — a `Send + Sync` endpoint
-//!    owning the matrix registry and the LRU plan cache; share one behind
-//!    an `Arc` across every request thread. Concurrent requests for the
-//!    same (matrix, config) key coalesce into **exactly one** plan build;
+//!    owning the matrix registry, the LRU plan cache (concurrent requests
+//!    for the same (matrix, config) key coalesce into **exactly one** plan
+//!    build), and an asynchronous job queue:
+//!    [`submit`](api::SolverService::submit) returns a
+//!    [`JobHandle`](api::JobHandle) immediately, and a dispatcher thread
+//!    **micro-batches jobs that share a plan** onto one session, so N
+//!    concurrent single-RHS requests share one plan checkout and one
+//!    warmed-up pool instead of paying per-request setup N times;
 //! 3. [`MatrixHandle`](api::MatrixHandle) +
 //!    [`SolveRequest`](api::SolveRequest) — registered matrices are
 //!    addressed by copyable handles, and each request may override
-//!    tolerances or the whole structural config without touching the
-//!    service defaults.
+//!    tolerances, set a queueing deadline, or swap the whole structural
+//!    config without touching the service defaults.
 //!
 //! Every public library function returns
 //! [`Result<T, HbmcError>`](error::HbmcError) — no stringly-typed error
@@ -31,6 +36,7 @@
 //! ```no_run
 //! use hbmc::prelude::*;
 //! use std::sync::Arc;
+//! use std::time::Duration;
 //!
 //! // 1. A validated configuration (the paper's headline solver).
 //! let cfg = SolverConfig::builder()
@@ -47,15 +53,27 @@
 //! let n = dataset.n();
 //! let handle = service.register_matrix(dataset.matrix);
 //!
-//! // 3. Serve right-hand sides — from any thread. The first solve builds
-//! //    the plan (ordering + IC(0) + storage); every later solve reuses it.
-//! let out = service.solve(handle, &dataset.b)?;
+//! // 3. Submit work — from any thread. The job handle is non-blocking
+//! //    (`poll`, `cancel`) until you `wait` for the output; jobs from
+//! //    concurrent submitters that share this (matrix, config) key are
+//! //    micro-batched onto one shared session by the dispatcher.
+//! let job = service.submit(handle, &dataset.b, &SolveRequest::new())?;
+//! let out = job.wait()?;
 //! println!("iters={} time={:.3}s", out.report.iterations, out.report.solve_seconds);
 //!
-//! // Per-request overrides never disturb the service defaults:
-//! let strict = SolveRequest::new().rtol(1e-10).require_convergence();
-//! let out = service.solve_with(handle, &vec![1.0; n], &strict)?;
-//! println!("strict: {} iters; cache: {:?}", out.report.iterations, service.stats().cache);
+//! // Per-request overrides never disturb the service defaults; a deadline
+//! // bounds how long a job may sit queued before it fails typed
+//! // (HbmcError::DeadlineExceeded) instead of running late.
+//! let strict = SolveRequest::new()
+//!     .rtol(1e-10)
+//!     .require_convergence()
+//!     .deadline(Duration::from_millis(250));
+//! let out = service.submit(handle, &vec![1.0; n], &strict)?.wait()?;
+//! println!("strict: {} iters; batching: {:?}", out.report.iterations, service.stats().batches);
+//!
+//! // The blocking calls remain as thin submit + wait wrappers:
+//! let out = service.solve(handle, &vec![2.0; n])?;
+//! # let _ = out;
 //! # Ok::<(), HbmcError>(())
 //! ```
 //!
@@ -81,7 +99,7 @@
 //! ## Layer map
 //!
 //! * [`api`] — the typed, concurrent façade (`SolverService`, handles,
-//!   requests),
+//!   requests, the asynchronous job queue + dispatcher),
 //! * [`error`] — [`HbmcError`](error::HbmcError), the crate-wide error,
 //! * [`sparse`] — CSR / COO / SELL-C-σ storage and Matrix-Market IO,
 //! * [`gen`] — synthetic generators standing in for the paper's five test
@@ -112,9 +130,11 @@ pub mod util;
 
 /// Convenient re-exports for downstream users.
 pub mod prelude {
-    pub use crate::api::{MatrixHandle, ServiceStats, SolveRequest, SolverService};
+    pub use crate::api::{
+        JobHandle, JobState, MatrixHandle, ServiceStats, SolveRequest, SolverService,
+    };
     pub use crate::config::{
-        NodePreset, OrderingKind, Scale, SolverConfig, SolverConfigBuilder, SpmvKind,
+        NodePreset, OrderingKind, QueueConfig, Scale, SolverConfig, SolverConfigBuilder, SpmvKind,
     };
     pub use crate::coordinator::driver::{solve, solve_opts, PlanReport, SolveOptions, SolveReport};
     pub use crate::coordinator::session::{PlanCache, SolveOutput, SolveSession};

@@ -4,7 +4,10 @@
 //!
 //! * `solve`        — build one `SolverPlan`, open a `SolveSession`, run
 //!   one or `--repeat N` solves (setup reported once, per-solve metrics
-//!   per run); `--setup-only` stops after the plan
+//!   per run); `--setup-only` stops after the plan; `--batch N` submits N
+//!   jobs through the async queue instead (micro-batched dispatch)
+//! * `serve`        — async serving stress: M client threads × K submits,
+//!   prints throughput and batching statistics
 //! * `table`        — regenerate a paper table (5.2 / 5.3 / simd / sell)
 //! * `convergence`  — Fig. 5.1 residual curves as CSV
 //! * `verify`       — ordering-equivalence + structural invariant checks
@@ -12,9 +15,12 @@
 //! * `info`         — dataset statistics
 //! * `help`
 
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
 use anyhow::{bail, Context, Result};
 
-use hbmc::api::SolverService;
+use hbmc::api::{SolveRequest, SolverService};
 use hbmc::cli::Args;
 use hbmc::config::{NodePreset, OrderingKind, Scale, SolverConfig, SpmvKind};
 use hbmc::coordinator::driver::SolveOptions;
@@ -43,7 +49,9 @@ fn cfg_from(args: &Args, shift: f64) -> Result<SolverConfig> {
         .rtol(args.f64_flag("rtol", 1e-7)?)
         .max_iters(args.usize_flag("max-iters", 50_000)?)
         .shift(args.f64_flag("shift", shift)?)
-        .use_intrinsics(!args.switch("no-intrinsics"));
+        .use_intrinsics(!args.switch("no-intrinsics"))
+        .max_batch(args.usize_flag("max-batch", 32)?)
+        .max_wait(Duration::from_micros(args.usize_flag("max-wait-us", 200)? as u64));
     if let Some(v) = args.flag("sell-sigma") {
         builder = builder.sell_sigma(Some(v.parse()?));
     }
@@ -56,6 +64,7 @@ fn cfg_from(args: &Args, shift: f64) -> Result<SolverConfig> {
 fn run(args: Args) -> Result<()> {
     match args.command.as_str() {
         "solve" => cmd_solve(&args),
+        "serve" => cmd_serve(&args),
         "table" => cmd_table(&args),
         "convergence" => cmd_convergence(&args),
         "verify" => cmd_verify(&args),
@@ -80,6 +89,11 @@ COMMANDS
                [--bs N] [--w N] [--spmv crs|sell] [--threads N] [--rtol X]
                [--shift X] [--node knl|bdw|skx] [--history] [--no-intrinsics]
                [--repeat N] [--setup-only]   (plan built once, N solves on one session)
+               [--batch N]                   (submit N async jobs, micro-batched dispatch)
+  serve        --dataset <name> [--scale S] [--clients M] [--requests K]
+               [--max-batch B] [--max-wait-us U] [--deadline-ms D]
+               (async stress: M client threads submit K jobs each; prints
+                throughput + batching stats)
   table        --id 5.2|5.3|simd|sell [--node knl|bdw|skx] [--scale S] [--threads N]
   convergence  [--datasets a,b] [--scale S] [--out curves.csv]
   verify       [--scale S]          run ordering/equivalence invariants
@@ -138,6 +152,41 @@ fn cmd_solve(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    // Async path: `--batch N` submits N jobs through the job queue and lets
+    // the dispatcher micro-batch them (all share this plan's key).
+    let batch = args.usize_flag("batch", 0)?;
+    if batch > 0 {
+        let req = SolveRequest::new();
+        let t0 = Instant::now();
+        let jobs = (0..batch)
+            .map(|k| {
+                let rhs: Vec<f64> = d.b.iter().map(|v| v * (1.0 + k as f64)).collect();
+                service.submit(handle, &rhs, &req)
+            })
+            .collect::<std::result::Result<Vec<_>, hbmc::api::HbmcError>>()?;
+        for (k, job) in jobs.into_iter().enumerate() {
+            let out = job.wait()?;
+            println!(
+                "job[{k}]: iters={} converged={} relres={:.3e} time={:.3}s",
+                out.report.iterations,
+                out.report.converged,
+                out.report.final_relres,
+                out.report.solve_seconds
+            );
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let st = service.stats();
+        println!(
+            "batching: {} solves in {} dispatched batches (mean width {:.2}), \
+             {} coalesced rhs, {wall:.3}s wall",
+            st.solves,
+            st.batches,
+            st.mean_batch_width(),
+            st.coalesced_rhs
+        );
+        return Ok(());
+    }
+
     // Phase 2: N solves against the same plan.
     let opts = SolveOptions { record_history: args.switch("history"), ..Default::default() };
     let mut total_solve = 0.0;
@@ -174,6 +223,91 @@ fn cmd_solve(args: &Args) -> Result<()> {
     }
     let err = out.x.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
     println!("max |x - 1| = {err:.3e} (rhs was A·1)");
+    Ok(())
+}
+
+/// Async serving stress: M client threads submit K single-RHS jobs each
+/// against one registered matrix; the dispatcher coalesces compatible jobs
+/// into micro-batches. Prints throughput and the batching statistics.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let scale: Scale = args.flag_or("scale", "tiny").parse()?;
+    let name = args.flag_or("dataset", "g3_circuit");
+    let clients = args.usize_flag("clients", 4)?.max(1);
+    let requests = args.usize_flag("requests", 8)?.max(1);
+    let deadline_ms = args.usize_flag("deadline-ms", 0)?;
+    let d = suite::try_dataset(&name, scale)?;
+    let cfg = cfg_from(args, d.shift)?;
+    println!(
+        "serve: dataset={} n={} nnz={} scale={scale} config={} \
+         clients={clients} requests/client={requests} max_batch={} max_wait={:?}",
+        d.name,
+        d.n(),
+        d.nnz(),
+        cfg.label(),
+        cfg.queue.max_batch,
+        cfg.queue.max_wait
+    );
+    let service = Arc::new(SolverService::with_config(cfg)?);
+    let handle = service.register_matrix(d.matrix);
+    // Warm the plan once so the stress run measures serving, not setup.
+    service.solve(handle, &d.b)?;
+
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let service = Arc::clone(&service);
+            let b = d.b.clone();
+            std::thread::spawn(move || -> (usize, usize, usize) {
+                let (mut ok, mut missed, mut completed) = (0usize, 0usize, 0usize);
+                for k in 0..requests {
+                    let f = 1.0 + ((c * requests + k) % 7) as f64;
+                    let rhs: Vec<f64> = b.iter().map(|v| v * f).collect();
+                    let mut req = SolveRequest::new();
+                    if deadline_ms > 0 {
+                        req = req.deadline(Duration::from_millis(deadline_ms as u64));
+                    }
+                    match service.submit(handle, &rhs, &req).and_then(|job| job.wait()) {
+                        Ok(out) => {
+                            completed += 1;
+                            if out.report.converged {
+                                ok += 1;
+                            }
+                        }
+                        Err(hbmc::api::HbmcError::DeadlineExceeded { .. }) => missed += 1,
+                        Err(e) => eprintln!("client {c} request {k}: {e}"),
+                    }
+                }
+                (ok, missed, completed)
+            })
+        })
+        .collect();
+    let (mut ok, mut missed, mut completed) = (0usize, 0usize, 0usize);
+    for t in workers {
+        let (o, m, s) = t.join().expect("client thread panicked");
+        ok += o;
+        missed += m;
+        completed += s;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let st = service.stats();
+    let total = clients * requests;
+    // Throughput counts only requests that actually ran a solve —
+    // deadline-missed (and errored) requests never reached the solver.
+    println!(
+        "served {ok}/{total} converged, {completed} completed ({missed} deadline-missed) \
+         in {wall:.3}s ({:.1} solves/s)",
+        completed as f64 / wall
+    );
+    println!(
+        "batching: {} dispatched batches, mean width {:.2}, {} of {} rhs coalesced \
+         (plan builds={}, cache hits={})",
+        st.batches,
+        st.mean_batch_width(),
+        st.coalesced_rhs,
+        st.batched_rhs,
+        st.builds,
+        st.cache.hits
+    );
     Ok(())
 }
 

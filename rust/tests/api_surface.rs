@@ -92,7 +92,30 @@ fn config_enums_parse_and_display() {
     assert_eq!(cfg.ordering, OrderingKind::Hbmc);
     assert_eq!(cfg.spmv, SpmvKind::Sell);
     let err = "rainbow".parse::<Scale>().unwrap_err();
-    assert!(matches!(err, HbmcError::InvalidConfig(_)), "{err:?}");
+    assert!(matches!(err, HbmcError::Parse(_)), "{err:?}");
+}
+
+/// Every enum variant's `Display` parses back to itself, and unknown
+/// strings are `HbmcError::Parse` — for all four config enums.
+#[test]
+fn config_enums_round_trip_exhaustively() {
+    use hbmc::config::NodePreset;
+    for k in [OrderingKind::Natural, OrderingKind::Mc, OrderingKind::Bmc, OrderingKind::Hbmc] {
+        assert_eq!(k.to_string().parse::<OrderingKind>().unwrap(), k);
+    }
+    for v in [SpmvKind::Crs, SpmvKind::Sell] {
+        assert_eq!(v.to_string().parse::<SpmvKind>().unwrap(), v);
+    }
+    for s in [Scale::Tiny, Scale::Small, Scale::Full] {
+        assert_eq!(s.to_string().parse::<Scale>().unwrap(), s);
+    }
+    for n in NodePreset::all() {
+        assert_eq!(n.to_string().parse::<NodePreset>().unwrap(), n);
+    }
+    assert!(matches!("nope".parse::<OrderingKind>(), Err(HbmcError::Parse(_))));
+    assert!(matches!("nope".parse::<SpmvKind>(), Err(HbmcError::Parse(_))));
+    assert!(matches!("nope".parse::<Scale>(), Err(HbmcError::Parse(_))));
+    assert!(matches!("nope".parse::<NodePreset>(), Err(HbmcError::Parse(_))));
 }
 
 /// Unknown dataset names and stale handles are `UnknownMatrix`.

@@ -1,0 +1,220 @@
+//! Contract of the asynchronous job API (the tentpole of the queue
+//! redesign):
+//!
+//! * **coalescing** — M threads each submitting one rhs for the same
+//!   (matrix, config) key produce *fewer than M* dispatched batches, with
+//!   mean batch width > 1, and every result is bitwise-identical to the
+//!   single-threaded one-shot path;
+//! * **deadlines** — a job still queued past its budget fails typed with
+//!   `HbmcError::DeadlineExceeded` and never runs;
+//! * **cancellation** — a queued job can be cancelled (typed
+//!   `HbmcError::Cancelled`, never runs); running/terminal jobs cannot;
+//! * **blocking wrappers** — `solve`/`solve_many` ride the same queue and
+//!   stay index-aligned and bit-identical.
+
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::Duration;
+
+use hbmc::api::{HbmcError, JobState, SolveRequest, SolverService};
+use hbmc::config::{OrderingKind, Scale, SolverConfig};
+use hbmc::coordinator::driver::{solve_opts, SolveOptions};
+use hbmc::gen::suite;
+
+fn tiny_cfg(ordering: OrderingKind) -> SolverConfig {
+    SolverConfig { ordering, bs: 8, w: 4, threads: 1, rtol: 1e-7, ..Default::default() }
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The acceptance test: M concurrent single-RHS submissions for one
+/// `PlanKey` coalesce into fewer than M dispatched batches (width > 1),
+/// with results bitwise-identical to sequential one-shot solves.
+#[test]
+fn concurrent_submissions_coalesce_into_wide_batches() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let mut cfg = tiny_cfg(OrderingKind::Hbmc);
+    // A generous flush window + room for all jobs in one batch makes the
+    // coalescing deterministic: every submit lands well inside the window.
+    cfg.queue.max_batch = 16;
+    cfg.queue.max_wait = Duration::from_millis(300);
+
+    // Single-threaded one-shot reference, per distinct rhs.
+    const M: usize = 8;
+    let rhss: Vec<Vec<f64>> = (0..M)
+        .map(|k| d.b.iter().map(|v| v * (1.0 + (k % 3) as f64)).collect())
+        .collect();
+    let mut ref_bits = Vec::new();
+    for rhs in &rhss {
+        let rep = solve_opts(&d.matrix, rhs, &cfg, &SolveOptions::with_solution()).unwrap();
+        ref_bits.push(bits(rep.solution.as_ref().unwrap()));
+    }
+
+    let service = Arc::new(SolverService::with_config(cfg).unwrap());
+    let handle = service.register_matrix(d.matrix.clone());
+    let barrier = Arc::new(Barrier::new(M));
+    let workers: Vec<_> = (0..M)
+        .map(|k| {
+            let service = Arc::clone(&service);
+            let barrier = Arc::clone(&barrier);
+            let rhs = rhss[k].clone();
+            thread::spawn(move || {
+                barrier.wait();
+                service.submit(handle, &rhs, &SolveRequest::new()).unwrap().wait().unwrap()
+            })
+        })
+        .collect();
+    let outputs: Vec<_> = workers.into_iter().map(|t| t.join().unwrap()).collect();
+
+    for (k, out) in outputs.iter().enumerate() {
+        assert!(out.report.converged, "job {k} did not converge");
+        assert_eq!(
+            bits(&out.x),
+            ref_bits[k],
+            "job {k}: coalesced result deviates from the sequential one-shot"
+        );
+    }
+    let st = service.stats();
+    assert_eq!(st.solves, M as u64);
+    assert_eq!(st.batched_rhs, M as u64);
+    assert!(
+        st.batches < M as u64,
+        "{M} same-key jobs must coalesce into fewer than {M} batches, got {}",
+        st.batches
+    );
+    assert!(
+        st.mean_batch_width() > 1.0,
+        "mean batch width must exceed 1, got {:.2}",
+        st.mean_batch_width()
+    );
+    assert!(st.coalesced_rhs >= 2, "at least one batch must have shared a session");
+    assert_eq!(st.builds, 1, "one plan build for one key");
+    assert_eq!(st.queue_depth, 0, "queue must drain");
+}
+
+/// A job whose budget is already spent when the dispatcher reaches it
+/// fails with the documented typed error and never runs.
+#[test]
+fn expired_deadline_is_typed_and_never_runs() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let cfg = tiny_cfg(OrderingKind::Hbmc);
+    let service = SolverService::with_config(cfg).unwrap();
+    let handle = service.register_matrix(d.matrix.clone());
+    // Warm the plan so a *dispatched* job would be fast — the failure below
+    // is strictly the deadline, not load.
+    service.solve(handle, &d.b).unwrap();
+    let solves_before = service.stats().solves;
+
+    let req = SolveRequest::new().deadline(Duration::ZERO);
+    let job = service.submit(handle, &d.b, &req).unwrap();
+    let err = job.wait().unwrap_err();
+    assert!(matches!(err, HbmcError::DeadlineExceeded { .. }), "{err:?}");
+
+    // Observable through poll() as well.
+    let job = service.submit(handle, &d.b, &req).unwrap();
+    let state = loop {
+        let s = job.poll();
+        if s.is_terminal() {
+            break s;
+        }
+        thread::yield_now();
+    };
+    assert_eq!(state, JobState::DeadlineExceeded);
+    assert!(matches!(job.wait(), Err(HbmcError::DeadlineExceeded { .. })));
+    assert_eq!(
+        service.stats().solves,
+        solves_before,
+        "expired jobs must never reach the solver"
+    );
+}
+
+/// Cancel aborts queued jobs (typed error, no solve); terminal jobs
+/// cannot be cancelled; and a job busy in another key's batch window
+/// stays cancellable the whole time it is queued.
+#[test]
+fn cancel_aborts_queued_jobs_only() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let mut cfg = tiny_cfg(OrderingKind::Hbmc);
+    // Long flush window: job A holds the dispatcher in its batch window
+    // while job B (a different BatchKey) sits queued — deterministically
+    // cancellable even on a heavily loaded CI machine.
+    cfg.queue.max_wait = Duration::from_millis(800);
+    cfg.queue.max_batch = 4;
+    let service = SolverService::with_config(cfg).unwrap();
+    let handle = service.register_matrix(d.matrix.clone());
+
+    let job_a = service.submit(handle, &d.b, &SolveRequest::new()).unwrap();
+    let req_b = SolveRequest::new().with_config(tiny_cfg(OrderingKind::Bmc));
+    let job_b = service.submit(handle, &d.b, &req_b).unwrap();
+
+    assert!(job_b.cancel(), "job queued behind another key's window must cancel");
+    assert!(!job_b.cancel(), "second cancel is a no-op");
+    assert_eq!(job_b.poll(), JobState::Cancelled);
+    let err = job_b.wait().unwrap_err();
+    assert!(matches!(err, HbmcError::Cancelled), "{err:?}");
+
+    let out = job_a.wait().unwrap();
+    assert!(out.report.converged);
+    let st = service.stats();
+    assert_eq!(st.solves, 1, "the cancelled job must never run");
+    assert_eq!(st.builds, 1, "the cancelled job must not build its plan");
+
+    // A finished job is not cancellable.
+    let job_c = service.submit(handle, &d.b, &SolveRequest::new()).unwrap();
+    while !job_c.poll().is_terminal() {
+        thread::yield_now();
+    }
+    assert!(!job_c.cancel(), "terminal jobs must not be cancellable");
+    assert!(job_c.wait().is_ok());
+}
+
+/// The blocking batch wrapper rides the queue, keeps results index-aligned
+/// with the submitted rhss, and matches independent one-shot solves
+/// bitwise.
+#[test]
+fn solve_many_stays_aligned_and_bit_identical() {
+    let d = suite::dataset("thermal2", Scale::Tiny);
+    let cfg = tiny_cfg(OrderingKind::Bmc);
+    let service = SolverService::with_config(cfg.clone()).unwrap();
+    let handle = service.register_matrix(d.matrix.clone());
+    let b2: Vec<f64> = d.b.iter().map(|v| 2.0 * v).collect();
+    let b3: Vec<f64> = d.b.iter().map(|v| -0.5 * v).collect();
+    let rhss = [d.b.clone(), b2, b3];
+    let outs = service.solve_many(handle, &rhss).unwrap();
+    assert_eq!(outs.len(), 3);
+    for (rhs, out) in rhss.iter().zip(&outs) {
+        let rep = solve_opts(&d.matrix, rhs, &cfg, &SolveOptions::with_solution()).unwrap();
+        assert_eq!(
+            bits(&out.x),
+            bits(rep.solution.as_ref().unwrap()),
+            "queued batch result must match the one-shot path bitwise"
+        );
+        assert_eq!(out.report.iterations, rep.iterations);
+    }
+    let st = service.stats();
+    assert_eq!(st.solves, 3);
+    assert_eq!(st.batched_rhs, 3);
+    assert_eq!(st.builds, 1);
+    assert_eq!(st.queue_depth, 0);
+}
+
+/// Dropping the service is a graceful shutdown: already-submitted jobs
+/// are flushed and their handles resolve.
+#[test]
+fn drop_flushes_queued_jobs() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let mut cfg = tiny_cfg(OrderingKind::Hbmc);
+    cfg.queue.max_wait = Duration::from_millis(100);
+    let service = SolverService::with_config(cfg).unwrap();
+    let handle = service.register_matrix(d.matrix.clone());
+    let jobs: Vec<_> = (0..3)
+        .map(|_| service.submit(handle, &d.b, &SolveRequest::new()).unwrap())
+        .collect();
+    drop(service);
+    for (k, job) in jobs.into_iter().enumerate() {
+        let out = job.wait().unwrap_or_else(|e| panic!("job {k} lost in shutdown: {e}"));
+        assert!(out.report.converged, "job {k}");
+    }
+}
