@@ -7,18 +7,95 @@
 //! (ordering / factorization / storage) are reported separately from the
 //! per-application kernel time, matching the paper's Table 5.3 protocol.
 //!
-//! `cargo bench --bench kernels [-- full]`
+//! `cargo bench --bench kernels [-- full | -- --quick]`
+//!
+//! Quick mode (`--quick` arg or `HBMC_BENCH_QUICK=1`): a CI-friendly run
+//! that solves the Tiny dataset through both execution paths and emits
+//! `BENCH_iter.json` (iters/s, dispatches/solve, syncs/iter for fused vs
+//! legacy) so the perf trajectory is recorded as a CI artifact.
 
 use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
 use hbmc::coordinator::pool::Pool;
 use hbmc::gen::suite;
-use hbmc::solver::plan::SolverPlan;
+use hbmc::solver::plan::{ExecOptions, SolverPlan};
 use hbmc::solver::spmv::{spmv_crs, spmv_sell};
 use hbmc::sparse::sell::Sell;
 use hbmc::util::timer::bench_secs;
 use std::time::Duration;
 
+/// One measured configuration for the quick-mode JSON artifact.
+fn quick_entry(d: &hbmc::gen::Dataset, spmv: SpmvKind, legacy: bool) -> String {
+    let cfg = SolverConfig {
+        ordering: OrderingKind::Hbmc,
+        bs: 8,
+        w: 4,
+        spmv,
+        shift: d.shift,
+        rtol: 1e-6,
+        ..Default::default()
+    };
+    let plan = SolverPlan::build(&d.matrix, &cfg).expect("plan build");
+    let pool = Pool::new(1);
+    let opts = ExecOptions { legacy_loop: legacy, ..Default::default() };
+    // Warm once, then measure the median-ish of 3.
+    let _ = plan.execute(&pool, &d.b, &opts).expect("warmup");
+    let mut best = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..3 {
+        let o = plan.execute(&pool, &d.b, &opts).expect("solve");
+        if o.cg.solve_seconds < best {
+            best = o.cg.solve_seconds;
+            out = Some(o);
+        }
+    }
+    let o = out.expect("at least one solve");
+    assert!(o.cg.converged, "quick bench solve must converge");
+    let iters = o.cg.iterations.max(1);
+    let label = format!(
+        "hbmc-{}-{}",
+        match spmv {
+            SpmvKind::Crs => "crs",
+            SpmvKind::Sell => "sell",
+        },
+        if legacy { "legacy" } else { "fused" }
+    );
+    format!(
+        "    {{\"label\": \"{label}\", \"iterations\": {iters}, \"solve_seconds\": {best:.6e}, \
+         \"iters_per_sec\": {:.3}, \"dispatches_per_solve\": {}, \"syncs_per_iter\": {:.2}}}",
+        iters as f64 / best,
+        o.dispatches,
+        o.pool_syncs as f64 / iters as f64,
+    )
+}
+
+/// Quick mode: solve fused vs legacy, write `BENCH_iter.json`, skip the
+/// long microbench sections.
+fn quick_main() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let mut entries = Vec::new();
+    for spmv in [SpmvKind::Crs, SpmvKind::Sell] {
+        for legacy in [false, true] {
+            entries.push(quick_entry(&d, spmv, legacy));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"kernels-quick\",\n  \"dataset\": \"{}\",\n  \"n\": {},\n  \
+         \"nnz\": {},\n  \"configs\": [\n{}\n  ]\n}}\n",
+        d.name,
+        d.n(),
+        d.nnz(),
+        entries.join(",\n")
+    );
+    std::fs::write("BENCH_iter.json", &json).expect("write BENCH_iter.json");
+    println!("{json}");
+    println!("wrote BENCH_iter.json");
+}
+
 fn main() {
+    if std::env::args().any(|a| a == "--quick") || std::env::var("HBMC_BENCH_QUICK").is_ok() {
+        quick_main();
+        return;
+    }
     let scale = if std::env::args().any(|a| a == "full") { Scale::Full } else { Scale::Small };
     let d = suite::dataset("g3_circuit", scale);
     let a = &d.matrix;

@@ -13,20 +13,28 @@
 //!
 //! The plan is warmed before every timed region: this bench measures
 //! phase-2 serving, not setup. Batching statistics are printed per
-//! strategy so the width → throughput relation is visible.
+//! strategy so the width → throughput relation is visible. Every solve
+//! rides the fused single-dispatch CG loop, so `ServiceStats::dispatches`
+//! should track `solves` one-to-one.
 //!
-//! `cargo bench --bench serving [-- full]`
+//! `cargo bench --bench serving [-- full | -- --quick]`
+//!
+//! Quick mode (`--quick` arg or `HBMC_BENCH_QUICK=1`): a CI-friendly
+//! shrunk workload that also writes `BENCH_serving.json` (solves/s and
+//! dispatches/solve per strategy) as a perf-trajectory artifact.
 
 use std::sync::{Arc, Barrier};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use hbmc::api::{SolveRequest, SolverService};
+use hbmc::api::{ServiceStats, SolveRequest, SolverService};
 use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
 use hbmc::gen::{suite, Dataset};
 
-const CLIENTS: usize = 4;
-const REQUESTS: usize = 6;
+struct Workload {
+    clients: usize,
+    requests: usize,
+}
 
 fn service_for(cfg: &SolverConfig, d: &Dataset) -> (Arc<SolverService>, hbmc::api::MatrixHandle) {
     let service = Arc::new(SolverService::with_config(cfg.clone()).expect("valid config"));
@@ -41,24 +49,47 @@ fn rhs_for(d: &Dataset, i: usize) -> Vec<f64> {
     d.b.iter().map(|v| v * f).collect()
 }
 
-fn report(label: &str, wall: f64, service: &SolverService, warm: hbmc::api::ServiceStats) {
+/// Print one strategy's stats; returns (solves/s, dispatches/solve) for
+/// the quick-mode JSON.
+fn report(
+    label: &str,
+    wall: f64,
+    service: &SolverService,
+    warm: ServiceStats,
+    w: &Workload,
+) -> (f64, f64) {
     // Subtract the warmup solve's batch from every counter so the printed
     // width/coalescing numbers describe exactly the timed region.
     let st = service.stats();
     let batches = st.batches - warm.batches;
     let rhs = st.batched_rhs - warm.batched_rhs;
     let coalesced = st.coalesced_rhs - warm.coalesced_rhs;
+    let solves = st.solves - warm.solves;
+    let dispatches = st.dispatches - warm.dispatches;
     let width = if batches == 0 { 0.0 } else { rhs as f64 / batches as f64 };
-    let total = (CLIENTS * REQUESTS) as f64;
+    let total = (w.clients * w.requests) as f64;
+    let per_solve = if solves == 0 { 0.0 } else { dispatches as f64 / solves as f64 };
     println!(
         "{label:<12} {wall:.3}s  ({:.1} solves/s)  batches={batches} mean_width={width:.2} \
-         coalesced_rhs={coalesced}",
+         coalesced_rhs={coalesced} dispatches/solve={per_solve:.2}",
         total / wall,
     );
+    (total / wall, per_solve)
 }
 
 fn main() {
-    let scale = if std::env::args().any(|a| a == "full") { Scale::Small } else { Scale::Tiny };
+    let quick =
+        std::env::args().any(|a| a == "--quick") || std::env::var("HBMC_BENCH_QUICK").is_ok();
+    let scale = if std::env::args().any(|a| a == "full") {
+        Scale::Small
+    } else {
+        Scale::Tiny
+    };
+    let w = if quick {
+        Workload { clients: QUICK_CLIENTS, requests: QUICK_REQUESTS }
+    } else {
+        Workload { clients: CLIENTS, requests: REQUESTS }
+    };
     let d = suite::dataset("g3_circuit", scale);
     let mut cfg = SolverConfig {
         ordering: OrderingKind::Hbmc,
@@ -68,17 +99,27 @@ fn main() {
         rtol: 1e-7,
         ..Default::default()
     };
-    cfg.queue.max_batch = CLIENTS * REQUESTS;
+    cfg.queue.max_batch = w.clients * w.requests;
     cfg.queue.max_wait = Duration::from_millis(2);
     println!(
-        "serving bench on {} (n={}, nnz={}): {CLIENTS} clients x {REQUESTS} requests, \
+        "serving bench on {} (n={}, nnz={}): {} clients x {} requests, \
          max_batch={} max_wait={:?}\n",
         d.name,
         d.n(),
         d.nnz(),
+        w.clients,
+        w.requests,
         cfg.queue.max_batch,
         cfg.queue.max_wait
     );
+
+    let mut json_entries: Vec<String> = Vec::new();
+    let mut record = |label: &str, (rate, per_solve): (f64, f64)| {
+        json_entries.push(format!(
+            "    {{\"strategy\": \"{label}\", \"solves_per_sec\": {rate:.3}, \
+             \"dispatches_per_solve\": {per_solve:.2}}}"
+        ));
+    };
 
     // 1. Sequential blocking baseline — with a zero flush window, so the
     //    baseline measures solving, not the batching delay (a lone
@@ -89,25 +130,25 @@ fn main() {
         let (service, handle) = service_for(&cfg_seq, &d);
         let warm = service.stats();
         let t0 = Instant::now();
-        for i in 0..CLIENTS * REQUESTS {
+        for i in 0..w.clients * w.requests {
             let out = service.solve(handle, &rhs_for(&d, i)).expect("solve");
             assert!(out.report.converged);
         }
-        report("sequential", t0.elapsed().as_secs_f64(), &service, warm);
+        record("sequential", report("sequential", t0.elapsed().as_secs_f64(), &service, warm, &w));
     }
 
     // 2. Concurrent blocking callers (implicit coalescing).
     {
         let (service, handle) = service_for(&cfg, &d);
         let warm = service.stats();
-        let barrier = Arc::new(Barrier::new(CLIENTS));
+        let barrier = Arc::new(Barrier::new(w.clients));
         let t0 = Instant::now();
-        let workers: Vec<_> = (0..CLIENTS)
+        let workers: Vec<_> = (0..w.clients)
             .map(|c| {
                 let service = Arc::clone(&service);
                 let barrier = Arc::clone(&barrier);
                 let rhss: Vec<Vec<f64>> =
-                    (0..REQUESTS).map(|k| rhs_for(&d, c * REQUESTS + k)).collect();
+                    (0..w.requests).map(|k| rhs_for(&d, c * w.requests + k)).collect();
                 thread::spawn(move || {
                     barrier.wait();
                     for rhs in &rhss {
@@ -120,21 +161,21 @@ fn main() {
         for t in workers {
             t.join().expect("client thread");
         }
-        report("threads", t0.elapsed().as_secs_f64(), &service, warm);
+        record("threads", report("threads", t0.elapsed().as_secs_f64(), &service, warm, &w));
     }
 
     // 3. Submit everything, then wait (explicit async fan-in).
     {
         let (service, handle) = service_for(&cfg, &d);
         let warm = service.stats();
-        let barrier = Arc::new(Barrier::new(CLIENTS));
+        let barrier = Arc::new(Barrier::new(w.clients));
         let t0 = Instant::now();
-        let workers: Vec<_> = (0..CLIENTS)
+        let workers: Vec<_> = (0..w.clients)
             .map(|c| {
                 let service = Arc::clone(&service);
                 let barrier = Arc::clone(&barrier);
                 let rhss: Vec<Vec<f64>> =
-                    (0..REQUESTS).map(|k| rhs_for(&d, c * REQUESTS + k)).collect();
+                    (0..w.requests).map(|k| rhs_for(&d, c * w.requests + k)).collect();
                 thread::spawn(move || {
                     barrier.wait();
                     let req = SolveRequest::new();
@@ -152,6 +193,28 @@ fn main() {
         for t in workers {
             t.join().expect("client thread");
         }
-        report("submit/wait", t0.elapsed().as_secs_f64(), &service, warm);
+        record(
+            "submit/wait",
+            report("submit/wait", t0.elapsed().as_secs_f64(), &service, warm, &w),
+        );
+    }
+
+    if quick {
+        let json = format!(
+            "{{\n  \"bench\": \"serving-quick\",\n  \"dataset\": \"{}\",\n  \"clients\": {},\n  \
+             \"requests\": {},\n  \"strategies\": [\n{}\n  ]\n}}\n",
+            d.name,
+            w.clients,
+            w.requests,
+            json_entries.join(",\n")
+        );
+        std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
+        println!("\n{json}");
+        println!("wrote BENCH_serving.json");
     }
 }
+
+const CLIENTS: usize = 4;
+const REQUESTS: usize = 6;
+const QUICK_CLIENTS: usize = 2;
+const QUICK_REQUESTS: usize = 3;

@@ -358,6 +358,7 @@ fn run_batch(queue: &JobQueue, core: &ServiceCore, batch: Vec<QueuedJob>) {
 fn run_one(core: &ServiceCore, session: &SolveSession, job: &QueuedJob) -> Result<SolveOutput> {
     let out = session.solve_with(&job.rhs, &job.options)?;
     core.note_solve();
+    core.note_dispatches(out.report.dispatches);
     if job.require_convergence && !out.report.converged {
         return Err(HbmcError::NotConverged {
             iterations: out.report.iterations,

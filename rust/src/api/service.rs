@@ -162,6 +162,11 @@ pub struct ServiceStats {
     /// Right-hand sides that rode in a batch of width ≥ 2 — i.e. requests
     /// that shared a session with at least one other request.
     pub coalesced_rhs: u64,
+    /// Total `Pool::run` dispatches across all solves completed through
+    /// the job queue. With the fused single-dispatch loop this equals
+    /// `solves`; the legacy loop pays ~3 per CG iteration. (Solves on
+    /// queue-bypass `session()` handles are not counted.)
+    pub dispatches: u64,
 }
 
 impl ServiceStats {
@@ -208,6 +213,7 @@ pub(crate) struct ServiceCore {
     builds: AtomicU64,
     coalesced: AtomicU64,
     solves: AtomicU64,
+    dispatches: AtomicU64,
 }
 
 impl ServiceCore {
@@ -272,6 +278,11 @@ impl ServiceCore {
     pub(crate) fn note_solve(&self) {
         self.solves.fetch_add(1, AtomicOrdering::Relaxed);
     }
+
+    /// Accumulate a completed solve's pool-dispatch count.
+    pub(crate) fn note_dispatches(&self, n: u64) {
+        self.dispatches.fetch_add(n, AtomicOrdering::Relaxed);
+    }
 }
 
 /// Thread-safe solve endpoint; see module docs. `Send + Sync` — share one
@@ -314,6 +325,7 @@ impl SolverService {
             builds: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
             solves: AtomicU64::new(0),
+            dispatches: AtomicU64::new(0),
         });
         let queue = Arc::new(JobQueue::new(queue_cfg));
         let dispatcher = {
@@ -527,6 +539,7 @@ impl SolverService {
             batches: self.queue.batches(),
             batched_rhs: self.queue.batched_rhs(),
             coalesced_rhs: self.queue.coalesced_rhs(),
+            dispatches: self.core.dispatches.load(AtomicOrdering::Relaxed),
         }
     }
 }

@@ -99,6 +99,12 @@ pub struct SolveReport {
     /// Solution in the original ordering; populated only when
     /// [`SolveOptions::return_solution`] is set.
     pub solution: Option<Vec<f64>>,
+    /// `Pool::run` dispatches this solve performed: 1 on the fused
+    /// single-dispatch path, ~3 per iteration on the legacy loop.
+    pub dispatches: u64,
+    /// Pool barrier synchronizations this solve performed (color barriers
+    /// + fused-loop phase barriers).
+    pub pool_syncs: u64,
     /// 0-based index of this solve on its plan (amortization counter).
     pub solve_index: usize,
     /// The setup-phase metrics of the plan this solve ran on.
@@ -115,6 +121,10 @@ impl SolveReport {
             kernel_seconds: cg.times.iter().map(|(n, d)| (n, d.as_secs_f64())).collect(),
             residual_history: cg.residual_history,
             solution: None,
+            // Filled in by the session (the dispatch/sync deltas live on
+            // the pool, which `from_parts` does not see).
+            dispatches: 0,
+            pool_syncs: 0,
             solve_index,
             plan: PlanReport::of(plan),
         }

@@ -82,6 +82,19 @@ pub fn per_iteration_ops(cfg: &SolverConfig, inp: &OpInputs) -> OpProfile {
     p
 }
 
+/// Pool synchronizations per steady-state iteration of the **fused**
+/// single-dispatch CG loop (`solver::cg::pcg_fused`): the two substitution
+/// sweeps' `n_c − 1` color barriers each, plus the six phase barriers
+/// (SpMV publish+combine, fused-update combine, forward→backward,
+/// backward→dot, r·z combine, p publish), plus one extra q-publish barrier
+/// when SELL SpMV cannot fuse the `p·q` partials into its sweep. The
+/// legacy loop pays the same color barriers **plus three full dispatches**
+/// (condvar wake-up + completion barrier each) per iteration; see the
+/// accounting table in ARCHITECTURE.md.
+pub fn syncs_per_fused_iteration(num_colors: usize, sell_spmv: bool) -> usize {
+    2 * num_colors.saturating_sub(1) + 6 + usize::from(sell_spmv)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,5 +138,14 @@ mod tests {
     #[test]
     fn empty_profile_ratio_zero() {
         assert_eq!(OpProfile::default().simd_ratio(), 0.0);
+    }
+
+    #[test]
+    fn fused_sync_model() {
+        // Serial/natural ordering (1 color): phase barriers only.
+        assert_eq!(syncs_per_fused_iteration(1, false), 6);
+        assert_eq!(syncs_per_fused_iteration(1, true), 7);
+        // 4 colors: 2·3 color barriers + 6 phase barriers.
+        assert_eq!(syncs_per_fused_iteration(4, false), 12);
     }
 }

@@ -9,13 +9,49 @@
 //! intra-job synchronization point, counted so the metrics can report
 //! syncs-per-substitution.
 //!
+//! Since the single-dispatch CG redesign the pool is also the home of the
+//! *persistent SPMD region*: `SolverPlan::execute` issues **one** `run`
+//! per solve and the workers walk the whole CG iteration together, with
+//! [`Pool::phase_barrier`] separating kernel phases (SpMV → reduction →
+//! update → sweep …). [`Pool::dispatch_count`] counts `run` calls so the
+//! serving metrics can assert "one dispatch per solve".
+//!
+//! Two reduction primitives exist at different layers: [`Pool::reduce_sum`]
+//! combines one partial **per thread** in fixed thread order (run-to-run
+//! deterministic for a given width — the general-purpose SPMD reduction
+//! for in-region code); the CG loop itself instead reduces over the fixed
+//! chunk grid of `solver::blas1` (`dot_partials` + `combine_partials`),
+//! because per-thread partials can never be invariant across *thread
+//! counts* and the loop's acceptance bar is bitwise parity at any width.
+//!
 //! Safety: `run` erases the closure's lifetime to hand it to the workers;
 //! the completion barrier at the end of `run` guarantees no worker touches
 //! the closure after `run` returns, so the borrow never escapes.
 
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+/// One per-thread reduction slot, padded to two cache lines so neighbour
+/// threads never false-share while writing partials. Double-buffered
+/// (`vals[parity]`): a thread may enter reduction `k + 1` and overwrite one
+/// buffer while a straggler is still summing reduction `k` from the other,
+/// so a single barrier per [`Pool::reduce_sum`] suffices (see the safety
+/// argument there).
+#[repr(align(128))]
+struct ReduceSlot {
+    vals: UnsafeCell<[f64; 2]>,
+    /// Reductions completed by the owning thread — selects the buffer
+    /// parity. Written only by the owner; the SPMD contract (every thread
+    /// performs the same reduction sequence) keeps all counters in step.
+    count: UnsafeCell<u64>,
+}
+
+// SAFETY: cross-thread access is disciplined by `reduce_sum`'s barrier —
+// `vals[p]` is written only by the owner before the barrier and read by
+// everyone after it; `count` is owner-thread-only.
+unsafe impl Sync for ReduceSlot {}
 
 /// Lifetime-erased job pointer. The pool guarantees the pointee outlives
 /// every access (completion barrier in `run`).
@@ -33,6 +69,9 @@ struct Shared {
     job_cv: Condvar,
     shutdown: AtomicBool,
     syncs: AtomicU64,
+    dispatches: AtomicU64,
+    /// Per-thread reduction scratchpad (see [`Pool::reduce_sum`]).
+    red: Vec<ReduceSlot>,
     active_jobs: AtomicUsize,
     /// Set when a worker's closure panicked during the current job; the
     /// caller re-raises it after the completion barrier so the panic is
@@ -59,6 +98,13 @@ impl Pool {
             job_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             syncs: AtomicU64::new(0),
+            dispatches: AtomicU64::new(0),
+            red: (0..nthreads)
+                .map(|_| ReduceSlot {
+                    vals: UnsafeCell::new([0.0; 2]),
+                    count: UnsafeCell::new(0),
+                })
+                .collect(),
             active_jobs: AtomicUsize::new(0),
             worker_panicked: AtomicBool::new(false),
         });
@@ -83,6 +129,7 @@ impl Pool {
     /// performs the same number of barrier calls (true for color loops).
     pub fn run(&self, f: &(dyn Fn(usize, usize) + Sync)) {
         let n = self.shared.nthreads;
+        self.shared.dispatches.fetch_add(1, Ordering::Relaxed);
         if n == 1 {
             f(0, 1);
             return;
@@ -127,6 +174,68 @@ impl Pool {
         }
         // Count per-thread waits normalized to whole-pool syncs on read.
         self.shared.syncs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Phase boundary inside a persistent SPMD region (the single-dispatch
+    /// CG loop): identical mechanics to [`Pool::color_barrier`], named for
+    /// readability at call sites that separate kernel *phases* (SpMV →
+    /// reduction → update → sweep) rather than substitution colors. Counted
+    /// in [`Pool::sync_count`] like any other barrier.
+    #[inline]
+    pub fn phase_barrier(&self) {
+        self.color_barrier();
+    }
+
+    /// Deterministic sum-reduction across the pool, callable only from
+    /// inside a job (every thread must call it, in the same sequence — the
+    /// usual SPMD contract). Thread `tid` contributes `partial`; every
+    /// thread receives the identical total, combined **in fixed thread
+    /// order** `0, 1, …, nt−1`, so the result is bitwise run-to-run
+    /// deterministic for a given thread count.
+    ///
+    /// Costs one barrier. Safety of the single barrier: slot writes for
+    /// reduction `k` happen-before the barrier of `k`; the earliest a slot
+    /// can be overwritten is in reduction `k + 2` (double buffering), whose
+    /// write happens-after its caller passed the barrier of `k + 1`, which
+    /// in turn happens-after every thread finished reading reduction `k`.
+    ///
+    /// Note for reductions that must also be invariant across *thread
+    /// counts* (the CG loop's dot products): combine per-**chunk** partials
+    /// over the fixed grid of [`crate::solver::blas1::CHUNK`]-sized chunks
+    /// instead — see `blas1::combine_partials` — because per-thread
+    /// partials necessarily depend on the partitioning.
+    pub fn reduce_sum(&self, tid: usize, partial: f64) -> f64 {
+        let nt = self.shared.nthreads;
+        debug_assert!(tid < nt);
+        let slot = &self.shared.red[tid];
+        // SAFETY: `count` is owner-thread-only; `vals[parity]` is written
+        // only by the owner before the barrier below (see module docs).
+        let parity = unsafe {
+            let count = &mut *slot.count.get();
+            let parity = (*count % 2) as usize;
+            *count += 1;
+            (*slot.vals.get())[parity] = partial;
+            parity
+        };
+        self.color_barrier();
+        let mut sum = 0.0;
+        for t in 0..nt {
+            // SAFETY: published by the barrier; not overwritten until the
+            // next-but-one reduction (double buffer).
+            sum += unsafe { (*self.shared.red[t].vals.get())[parity] };
+        }
+        sum
+    }
+
+    /// Number of [`Pool::run`] dispatches since construction (condvar
+    /// wake-up + completion barrier each) — the serving layer's
+    /// "dispatches per solve" metric.
+    pub fn dispatch_count(&self) -> u64 {
+        self.shared.dispatches.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_dispatch_count(&self) {
+        self.shared.dispatches.store(0, Ordering::Relaxed);
     }
 
     /// Number of whole-pool synchronizations since construction/reset
@@ -370,6 +479,61 @@ mod tests {
                 assert!(covered.iter().all(|&c| c), "len={len} nt={nt}");
             }
         }
+    }
+
+    #[test]
+    fn dispatch_count_counts_runs() {
+        for nt in [1usize, 3] {
+            let pool = Pool::new(nt);
+            assert_eq!(pool.dispatch_count(), 0);
+            for _ in 0..4 {
+                pool.run(&|_, _| {});
+            }
+            assert_eq!(pool.dispatch_count(), 4, "nt={nt}");
+            pool.reset_dispatch_count();
+            assert_eq!(pool.dispatch_count(), 0);
+        }
+    }
+
+    #[test]
+    fn reduce_sum_is_deterministic_and_complete() {
+        for nt in [1usize, 2, 4] {
+            let pool = Pool::new(nt);
+            let results = Mutex::new(Vec::new());
+            pool.run(&|tid, n| {
+                // Two back-to-back reductions exercise the double buffer.
+                let a = pool.reduce_sum(tid, (tid + 1) as f64);
+                let b = pool.reduce_sum(tid, 0.5);
+                results.lock().unwrap().push((a, b, n));
+            });
+            let expect_a = (nt * (nt + 1) / 2) as f64;
+            let expect_b = 0.5 * nt as f64;
+            let got = results.lock().unwrap();
+            assert_eq!(got.len(), nt);
+            for &(a, b, _) in got.iter() {
+                assert_eq!(a, expect_a, "nt={nt}");
+                assert_eq!(b, expect_b, "nt={nt}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_sum_repeated_runs_are_bitwise_identical() {
+        let pool = Pool::new(4);
+        let vals: Vec<f64> = (0..4).map(|t| 0.1 * (t as f64 + 1.0)).collect();
+        let mut seen = Vec::new();
+        for _ in 0..3 {
+            let out = Mutex::new(0.0f64);
+            let vals = &vals;
+            pool.run(&|tid, _| {
+                let s = pool.reduce_sum(tid, vals[tid]);
+                if tid == 0 {
+                    *out.lock().unwrap() = s;
+                }
+            });
+            seen.push(out.into_inner().unwrap());
+        }
+        assert!(seen.windows(2).all(|w| w[0].to_bits() == w[1].to_bits()));
     }
 
     #[test]

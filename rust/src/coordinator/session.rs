@@ -115,10 +115,13 @@ impl SolveSession {
                 record_history: opts.record_history,
                 rtol: Some(opts.rtol.unwrap_or(self.rtol)),
                 max_iters: Some(opts.max_iters.unwrap_or(self.max_iters)),
+                ..Default::default()
             },
         )?;
         let solve_index = self.solves.fetch_add(1, AtomicOrdering::Relaxed);
         let mut report = SolveReport::from_parts(&self.plan, out.cg, solve_index);
+        report.dispatches = out.dispatches;
+        report.pool_syncs = out.pool_syncs;
         if opts.return_solution {
             report.solution = Some(out.x.clone());
         }

@@ -1,15 +1,57 @@
-//! Dense vector (BLAS-1) kernels for the CG iteration. These are the
-//! straightforwardly-parallel parts of the solver (paper §2); on this
-//! single-core host they run serially but are written as contiguous loops
+//! Dense vector (BLAS-1) kernels for the CG iteration — the
+//! straightforwardly-parallel parts of the solver (paper §2). Since the
+//! single-dispatch CG redesign they run **inside the persistent pool
+//! region**, chunk-partitioned across threads, written as contiguous loops
 //! the compiler auto-vectorizes (they count as *packed* ops in the SIMD
 //! ratio metric, matching how VTune attributes them in §5.2.1).
+//!
+//! # Deterministic reductions
+//!
+//! Every reduction (`dot`, `norm2`, the `‖r‖²` of [`fused_cg_update`]) is
+//! defined over a **fixed chunk grid**: the vector is cut into
+//! [`CHUNK`]-sized chunks, each chunk is reduced by one canonical kernel
+//! (`chunk_dot` — 4-way unrolled — or the sequential fused-update
+//! kernel), and the per-chunk partials are combined **left-to-right in
+//! chunk order**. Because the grid depends only on `n`, the result is
+//! bitwise identical whether the chunks are walked by one thread (the
+//! serial entry points below) or partitioned across any number of pool
+//! workers (the `*_partials` variants + [`combine_partials`]): thread
+//! count, thread scheduling and run-to-run ordering cannot change a single
+//! bit. This is what lets the fused single-dispatch CG loop reproduce the
+//! legacy per-kernel path exactly (see `tests/fused_parity.rs`).
+//!
+//! The elementwise kernels (`axpy`, `xpby`, updates) have no reduction and
+//! are trivially partition-invariant; their chunked variants use the same
+//! per-element expressions as the serial ones.
 
-/// `xᵀ y`.
+use crate::coordinator::pool::SyncSlice;
+use std::ops::Range;
+
+/// Reduction chunk size (elements). Fixed so that reduction results are
+/// independent of the thread partitioning (see module docs). A multiple of
+/// every supported SIMD width `w ∈ {2, 4, 8, 16}` and of the SELL chunk
+/// sizes, so chunk-aligned row partitions stay SIMD-aligned too.
+pub const CHUNK: usize = 1024;
+
+/// Number of reduction chunks covering `0..n`.
 #[inline]
-pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+pub fn num_chunks(n: usize) -> usize {
+    n.div_ceil(CHUNK)
+}
+
+/// Element range of chunk `c` in a length-`n` vector (the last chunk may
+/// be short).
+#[inline]
+pub fn chunk_range(c: usize, n: usize) -> Range<usize> {
+    (c * CHUNK)..((c + 1) * CHUNK).min(n)
+}
+
+/// Canonical per-chunk dot kernel: 4-way unrolled reduction. Keeps the
+/// dependency chain short so LLVM vectorizes; the fixed unroll order makes
+/// the chunk partial a pure function of its elements.
+#[inline]
+fn chunk_dot(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
-    // 4-way unrolled reduction: keeps the dependency chain short so LLVM
-    // vectorizes; also gives run-to-run deterministic results.
     let mut acc = [0.0f64; 4];
     let chunks = x.len() / 4;
     for i in 0..chunks {
@@ -22,6 +64,33 @@ pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     let mut s = acc[0] + acc[1] + acc[2] + acc[3];
     for i in chunks * 4..x.len() {
         s += x[i] * y[i];
+    }
+    s
+}
+
+/// Canonical per-chunk fused-update kernel: `x += α p; r -= α q`; returns
+/// the chunk's `‖r‖²` partial (sequential accumulation within the chunk).
+#[inline]
+fn chunk_fused_update(alpha: f64, p: &[f64], q: &[f64], x: &mut [f64], r: &mut [f64]) -> f64 {
+    let mut rr = 0.0f64;
+    for i in 0..p.len() {
+        x[i] += alpha * p[i];
+        let ri = r[i] - alpha * q[i];
+        r[i] = ri;
+        rr += ri * ri;
+    }
+    rr
+}
+
+/// `xᵀ y` — canonical chunked reduction (see module docs).
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let mut s = 0.0f64;
+    for c in 0..num_chunks(n) {
+        let r = chunk_range(c, n);
+        s += chunk_dot(&x[r.clone()], &y[r]);
     }
     s
 }
@@ -56,27 +125,140 @@ pub fn copy(x: &[f64], y: &mut [f64]) {
     y.copy_from_slice(x);
 }
 
-/// Fused CG update: `x += α p; r -= α q;` returns `‖r‖²`. One pass over
-/// four arrays instead of three passes (perf-pass optimization — the
-/// BLAS-1 share of an ICCG iteration is memory-bound).
+/// Fused CG update: `x += α p; r -= α q;` returns `‖r‖²` (canonical
+/// chunked reduction). One pass over four arrays instead of three passes
+/// (the BLAS-1 share of an ICCG iteration is memory-bound).
 #[inline]
 pub fn fused_cg_update(alpha: f64, p: &[f64], q: &[f64], x: &mut [f64], r: &mut [f64]) -> f64 {
     debug_assert_eq!(p.len(), q.len());
     debug_assert_eq!(p.len(), x.len());
     debug_assert_eq!(p.len(), r.len());
+    let n = p.len();
     let mut rr = 0.0f64;
-    for i in 0..p.len() {
-        x[i] += alpha * p[i];
-        let ri = r[i] - alpha * q[i];
-        r[i] = ri;
-        rr += ri * ri;
+    for c in 0..num_chunks(n) {
+        let rng = chunk_range(c, n);
+        rr += chunk_fused_update(
+            alpha,
+            &p[rng.clone()],
+            &q[rng.clone()],
+            &mut x[rng.clone()],
+            &mut r[rng],
+        );
     }
     rr
+}
+
+// ---------------------------------------------------------------------------
+// In-region (tid, nt)-partitioned variants. Contract for all of them: the
+// calling thread exclusively owns the chunk indices in `chunks` (use
+// `Pool::chunk(num_chunks(n), tid, nt)`), read-only inputs are stable for
+// the duration of the phase, and a pool barrier separates the partial
+// writes from `combine_partials`.
+// ---------------------------------------------------------------------------
+
+/// Write the per-chunk partials of `xᵀ y` for the owned `chunks` into
+/// `partials` (indexed by chunk).
+pub fn dot_partials(x: &[f64], y: &[f64], partials: &SyncSlice<f64>, chunks: Range<usize>) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    for c in chunks {
+        let r = chunk_range(c, n);
+        // SAFETY: chunk `c` is owned by this thread (contract above).
+        unsafe { partials.set(c, chunk_dot(&x[r.clone()], &y[r])) };
+    }
+}
+
+/// Combine per-chunk partials left-to-right — the canonical reduction
+/// order. Every thread calls this redundantly after the barrier and gets
+/// the identical (bitwise) scalar; no broadcast needed.
+pub fn combine_partials(partials: &SyncSlice<f64>, nchunks: usize) -> f64 {
+    let mut s = 0.0f64;
+    for c in 0..nchunks {
+        // SAFETY: all partials were published by the preceding barrier.
+        s += unsafe { partials.get(c) };
+    }
+    s
+}
+
+/// Chunked fused CG update: `x += α p; r -= α q` over the owned chunks,
+/// writing each chunk's `‖r‖²` partial. Bitwise-matches
+/// [`fused_cg_update`] once combined.
+pub fn fused_update_partials(
+    alpha: f64,
+    p: &[f64],
+    q: &[f64],
+    x: &SyncSlice<f64>,
+    r: &SyncSlice<f64>,
+    partials: &SyncSlice<f64>,
+    chunks: Range<usize>,
+) {
+    debug_assert_eq!(p.len(), q.len());
+    let n = p.len();
+    for c in chunks {
+        let rng = chunk_range(c, n);
+        let len = rng.len();
+        // SAFETY: chunk `c` (and hence these element ranges of x, r and
+        // partials) is owned exclusively by this thread.
+        let (xc, rc) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(x.as_mut_ptr().add(rng.start), len),
+                std::slice::from_raw_parts_mut(r.as_mut_ptr().add(rng.start), len),
+            )
+        };
+        let pr = chunk_fused_update(alpha, &p[rng.clone()], &q[rng], xc, rc);
+        unsafe { partials.set(c, pr) };
+    }
+}
+
+/// Chunked `p = z + β p` (same per-element expression as [`xpby`]).
+pub fn xpby_chunks(z: &[f64], beta: f64, p: &SyncSlice<f64>, chunks: Range<usize>) {
+    let n = z.len();
+    for c in chunks {
+        for i in chunk_range(c, n) {
+            // SAFETY: chunk owned by this thread.
+            unsafe { p.set(i, z[i] + beta * p.get(i)) };
+        }
+    }
+}
+
+/// Chunked residual `r = b − q`.
+pub fn residual_chunks(b: &[f64], q: &[f64], r: &SyncSlice<f64>, chunks: Range<usize>) {
+    debug_assert_eq!(b.len(), q.len());
+    let n = b.len();
+    for c in chunks {
+        for i in chunk_range(c, n) {
+            // SAFETY: chunk owned by this thread.
+            unsafe { r.set(i, b[i] - q[i]) };
+        }
+    }
+}
+
+/// Chunked copy `dst = src`.
+pub fn copy_chunks(src: &[f64], dst: &SyncSlice<f64>, chunks: Range<usize>) {
+    let n = src.len();
+    for c in chunks {
+        for i in chunk_range(c, n) {
+            // SAFETY: chunk owned by this thread.
+            unsafe { dst.set(i, src[i]) };
+        }
+    }
+}
+
+/// Chunked fill `dst = v`.
+pub fn fill_chunks(v: f64, dst: &SyncSlice<f64>, chunks: Range<usize>) {
+    let n = dst.len();
+    for c in chunks {
+        for i in chunk_range(c, n) {
+            // SAFETY: chunk owned by this thread.
+            unsafe { dst.set(i, v) };
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pool::Pool;
 
     #[test]
     fn dot_matches_naive() {
@@ -112,5 +294,104 @@ mod tests {
         assert_eq!(dot(&[], &[]), 0.0);
         assert_eq!(dot(&[2.0], &[3.0]), 6.0);
         assert_eq!(dot(&[1.0, 2.0, 3.0], &[1.0, 1.0, 1.0]), 6.0);
+    }
+
+    #[test]
+    fn chunk_grid_covers_vector() {
+        for n in [0usize, 1, CHUNK - 1, CHUNK, CHUNK + 1, 3 * CHUNK + 7] {
+            let mut covered = 0usize;
+            for c in 0..num_chunks(n) {
+                let r = chunk_range(c, n);
+                assert_eq!(r.start, covered);
+                covered = r.end;
+            }
+            assert_eq!(covered, n, "n={n}");
+        }
+    }
+
+    /// The load-bearing invariant: partitioned partials + left-to-right
+    /// combine are bitwise identical to the serial entry points, for any
+    /// thread count.
+    #[test]
+    fn parallel_dot_is_bitwise_identical_to_serial() {
+        let n = 3 * CHUNK + 513;
+        let x: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.37).sin()).collect();
+        let y: Vec<f64> = (0..n).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let serial = dot(&x, &y);
+        let nchunks = num_chunks(n);
+        for nt in [1usize, 2, 3, 4] {
+            let pool = Pool::new(nt);
+            let mut partials = vec![0.0f64; nchunks];
+            let ps = SyncSlice::new(&mut partials);
+            let out = std::sync::Mutex::new(Vec::new());
+            pool.run(&|tid, nthreads| {
+                dot_partials(&x, &y, &ps, Pool::chunk(nchunks, tid, nthreads));
+                pool.phase_barrier();
+                let s = combine_partials(&ps, nchunks);
+                out.lock().unwrap().push(s);
+            });
+            for s in out.into_inner().unwrap() {
+                assert_eq!(s.to_bits(), serial.to_bits(), "nt={nt}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_fused_update_is_bitwise_identical_to_serial() {
+        let n = 2 * CHUNK + 100;
+        let p: Vec<f64> = (0..n).map(|i| ((i * 7 % 13) as f64) - 6.0).collect();
+        let q: Vec<f64> = (0..n).map(|i| ((i * 5 % 11) as f64) * 0.1).collect();
+        let alpha = 0.371;
+        let mut x_ref = vec![1.0f64; n];
+        let mut r_ref: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).cos()).collect();
+        let rr_ref = fused_cg_update(alpha, &p, &q, &mut x_ref, &mut r_ref);
+
+        let nchunks = num_chunks(n);
+        for nt in [1usize, 4] {
+            let mut x = vec![1.0f64; n];
+            let mut r: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).cos()).collect();
+            let mut partials = vec![0.0f64; nchunks];
+            let pool = Pool::new(nt);
+            let (xs, rs, ps) =
+                (SyncSlice::new(&mut x), SyncSlice::new(&mut r), SyncSlice::new(&mut partials));
+            let rr_out = std::sync::Mutex::new(0.0f64);
+            pool.run(&|tid, nthreads| {
+                let chunks = Pool::chunk(nchunks, tid, nthreads);
+                fused_update_partials(alpha, &p, &q, &xs, &rs, &ps, chunks);
+                pool.phase_barrier();
+                let rr = combine_partials(&ps, nchunks);
+                if tid == 0 {
+                    *rr_out.lock().unwrap() = rr;
+                }
+            });
+            assert_eq!(rr_out.into_inner().unwrap().to_bits(), rr_ref.to_bits(), "nt={nt}");
+            assert!(x.iter().zip(&x_ref).all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert!(r.iter().zip(&r_ref).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn elementwise_chunk_helpers_match_serial() {
+        let n = CHUNK + 37;
+        let z: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let mut p_ref: Vec<f64> = (0..n).map(|i| (i as f64) * 0.5).collect();
+        let mut p = p_ref.clone();
+        xpby(&z, 0.25, &mut p_ref);
+        let pool = Pool::new(3);
+        let psync = SyncSlice::new(&mut p);
+        let nchunks = num_chunks(n);
+        pool.run(&|tid, nt| {
+            xpby_chunks(&z, 0.25, &psync, Pool::chunk(nchunks, tid, nt));
+        });
+        assert_eq!(p, p_ref);
+
+        let b: Vec<f64> = (0..n).map(|i| (i as f64).sqrt()).collect();
+        let q: Vec<f64> = (0..n).map(|i| 0.1 * i as f64).collect();
+        let mut r = vec![0.0f64; n];
+        let rsync = SyncSlice::new(&mut r);
+        pool.run(&|tid, nt| {
+            residual_chunks(&b, &q, &rsync, Pool::chunk(nchunks, tid, nt));
+        });
+        assert!(r.iter().zip(b.iter().zip(&q)).all(|(ri, (bi, qi))| *ri == bi - qi));
     }
 }

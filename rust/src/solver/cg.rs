@@ -1,12 +1,35 @@
-//! Preconditioned conjugate gradient (the "CG" of ICCG). The loop is
-//! storage- and ordering-agnostic: SpMV and preconditioner come in as
-//! closures so the same driver serves MC/BMC/HBMC × CRS/SELL variants.
+//! Preconditioned conjugate gradient (the "CG" of ICCG), in two execution
+//! shapes with bitwise-identical numerics:
+//!
+//! * [`pcg`] — the legacy per-kernel loop: SpMV and preconditioner come in
+//!   as closures (each one a separate `Pool::run` dispatch), BLAS-1 runs
+//!   serially on the calling thread. Kept as the reference path and for
+//!   callers with bespoke kernels (the PJRT hybrid).
+//! * [`pcg_fused`] — the single-dispatch loop: **one** `Pool::run` per
+//!   solve. Workers enter a persistent SPMD region and walk the whole
+//!   iteration together; [`Pool::phase_barrier`] separates kernel phases,
+//!   reductions go through the fixed chunk grid of `blas1` (partials +
+//!   left-to-right combine), and every thread recomputes the iteration
+//!   scalars (α, β, convergence) redundantly-but-identically from the
+//!   combined values — no broadcast, no serial section. Per-iteration
+//!   dispatches drop from 3 (SpMV, forward, backward — each a condvar
+//!   wake-up plus a completion barrier) to 0; see `ARCHITECTURE.md` for
+//!   the sync accounting.
+//!
+//! Because the chunk-grid reductions are partition-invariant (see
+//! `blas1`), the fused loop reproduces the legacy loop *exactly* —
+//! identical residual history, iteration count and solution bits — for
+//! any thread count (`tests/fused_parity.rs`).
 //!
 //! Convergence criterion: relative residual 2-norm `< rtol` (paper §5.1:
 //! `10⁻⁷`), measured against `||b||`.
 
-use crate::solver::blas1::{dot, fused_cg_update, norm2, xpby};
+use crate::coordinator::pool::{Pool, SyncSlice};
+use crate::solver::blas1::{self, dot, fused_cg_update, norm2, xpby};
+use crate::solver::spmv::SpmvEngine;
+use crate::solver::trisolve::TriSolver;
 use crate::util::timer::KernelTimes;
+use std::cell::UnsafeCell;
 use std::time::Instant;
 
 /// Outcome of a PCG run.
@@ -120,6 +143,330 @@ pub fn pcg(
     }
 }
 
+/// Per-solve state written only by thread 0 inside the region (residual
+/// history, kernel timers, final counters) and read by the caller after
+/// the region completes.
+struct SoloCell<T>(UnsafeCell<T>);
+
+// SAFETY: the region protocol gives thread 0 exclusive access between
+// barriers; the caller reads only after `Pool::run` returned (completion
+// barrier = happens-after every worker write).
+unsafe impl<T: Send> Sync for SoloCell<T> {}
+
+impl<T> SoloCell<T> {
+    fn new(v: T) -> SoloCell<T> {
+        SoloCell(UnsafeCell::new(v))
+    }
+
+    /// Raw pointer for thread-0-only access (deref inside `unsafe`).
+    fn as_ptr(&self) -> *mut T {
+        self.0.get()
+    }
+
+    fn into_inner(self) -> T {
+        self.0.into_inner()
+    }
+}
+
+struct FusedState {
+    times: KernelTimes,
+    history: Vec<f64>,
+    iterations: usize,
+    converged: bool,
+    relres: f64,
+}
+
+/// Everything the region workers share, borrowed for the duration of the
+/// single `Pool::run`.
+struct FusedCtx<'a> {
+    spmv: &'a SpmvEngine<'a>,
+    tri: &'a dyn TriSolver,
+    b: &'a [f64],
+    xs: &'a SyncSlice<'a, f64>,
+    rs: &'a SyncSlice<'a, f64>,
+    zs: &'a SyncSlice<'a, f64>,
+    ps: &'a SyncSlice<'a, f64>,
+    qs: &'a SyncSlice<'a, f64>,
+    /// Forward-substitution result (the `scratch` of `TriSolver::apply`).
+    ss: &'a SyncSlice<'a, f64>,
+    /// Chunk-partials buffers. Two, used alternately: a thread may start
+    /// writing the *next* reduction's partials while a straggler is still
+    /// combining the previous one (there is deliberately no barrier after
+    /// a combine), so consecutive reductions must target different
+    /// buffers. The steady-state loop's sequence (p·q → `partials`,
+    /// update-‖r‖² → `partials2`, r·z → `partials`, then the p-publish
+    /// barrier before the next p·q) alternates correctly with at least one
+    /// barrier between any write and the combine it could clobber; the
+    /// initialization's shared-barrier double reduction is followed by an
+    /// explicit extra barrier instead.
+    partials: &'a SyncSlice<'a, f64>,
+    partials2: &'a SyncSlice<'a, f64>,
+    nchunks: usize,
+    rtol: f64,
+    max_iters: usize,
+    record_history: bool,
+    pool: &'a Pool,
+    state: &'a SoloCell<FusedState>,
+}
+
+/// Close a timing bucket on thread 0 and restart every thread's phase
+/// clock. Phases are barrier-delimited, so thread 0's elapsed time is a
+/// faithful (± one barrier wait) pool-wide figure; the buckets match the
+/// legacy loop's ("spmv" / "trisolve" / "blas1").
+#[inline]
+fn mark(tid: usize, state: &SoloCell<FusedState>, clock: &mut Instant, bucket: &'static str) {
+    if tid == 0 {
+        // SAFETY: thread 0 is the sole writer of the solo state.
+        unsafe { (*state.as_ptr()).times.add(bucket, clock.elapsed()) };
+    }
+    *clock = Instant::now();
+}
+
+/// Run preconditioned CG as **one** pool dispatch (see module docs). `x`
+/// holds the initial guess and receives the solution. Numerics are
+/// bitwise-identical to [`pcg`] driven by the same kernels.
+#[allow(clippy::too_many_arguments)]
+pub fn pcg_fused(
+    spmv: &SpmvEngine,
+    tri: &dyn TriSolver,
+    b: &[f64],
+    x: &mut [f64],
+    rtol: f64,
+    max_iters: usize,
+    record_history: bool,
+    pool: &Pool,
+) -> CgResult {
+    let n = b.len();
+    assert_eq!(x.len(), n);
+    let start = Instant::now();
+    let nchunks = blas1::num_chunks(n);
+
+    let mut r = vec![0.0f64; n];
+    let mut z = vec![0.0f64; n];
+    let mut p = vec![0.0f64; n];
+    let mut q = vec![0.0f64; n];
+    let mut scratch = vec![0.0f64; n];
+    let mut partials = vec![0.0f64; nchunks];
+    let mut partials2 = vec![0.0f64; nchunks];
+
+    let xs = SyncSlice::new(x);
+    let rs = SyncSlice::new(&mut r);
+    let zs = SyncSlice::new(&mut z);
+    let ps = SyncSlice::new(&mut p);
+    let qs = SyncSlice::new(&mut q);
+    let ss = SyncSlice::new(&mut scratch);
+    let pt = SyncSlice::new(&mut partials);
+    let pt2 = SyncSlice::new(&mut partials2);
+    let state = SoloCell::new(FusedState {
+        times: KernelTimes::new(),
+        history: Vec::new(),
+        iterations: 0,
+        converged: false,
+        relres: 0.0,
+    });
+
+    {
+        let cx = FusedCtx {
+            spmv,
+            tri,
+            b,
+            xs: &xs,
+            rs: &rs,
+            zs: &zs,
+            ps: &ps,
+            qs: &qs,
+            ss: &ss,
+            partials: &pt,
+            partials2: &pt2,
+            nchunks,
+            rtol,
+            max_iters,
+            record_history,
+            pool,
+            state: &state,
+        };
+        pool.run(&|tid, nt| fused_worker(&cx, tid, nt));
+    }
+
+    let st = state.into_inner();
+    CgResult {
+        iterations: st.iterations,
+        converged: st.converged,
+        final_relres: st.relres,
+        residual_history: st.history,
+        times: st.times,
+        solve_seconds: start.elapsed().as_secs_f64(),
+    }
+}
+
+/// Read-only view of a region-shared vector for the current phase.
+///
+/// # Safety
+/// Phase discipline: the pointee must not be written by any thread while
+/// the view is in use, and all prior writes must be separated from this
+/// read by a [`Pool::phase_barrier`].
+#[inline]
+unsafe fn view<'s>(s: &'s SyncSlice<'_, f64>, n: usize) -> &'s [f64] {
+    debug_assert_eq!(s.len(), n);
+    std::slice::from_raw_parts(s.as_ptr(), n)
+}
+
+/// The SPMD region body: every thread executes this with the same control
+/// flow. All branching scalars (bnorm, pq, rr, rz, α, β) come out of
+/// deterministic chunk-grid reductions, so each thread computes bitwise-
+/// identical copies and the threads never diverge.
+fn fused_worker(cx: &FusedCtx, tid: usize, nt: usize) {
+    let pool = cx.pool;
+    let n = cx.b.len();
+    let nchunks = cx.nchunks;
+    // This thread's share of the BLAS-1 chunk grid (reduction + element-
+    // wise phases). SpMV uses its own nnz-balanced partition.
+    let chunks = Pool::chunk(nchunks, tid, nt);
+    let mut clock = Instant::now();
+
+    // --- bnorm = ‖b‖ -----------------------------------------------------
+    blas1::dot_partials(cx.b, cx.b, cx.partials, chunks.clone());
+    pool.phase_barrier();
+    let bnorm = blas1::combine_partials(cx.partials, nchunks).sqrt();
+    mark(tid, cx.state, &mut clock, "blas1");
+    if bnorm == 0.0 {
+        blas1::fill_chunks(0.0, cx.xs, chunks.clone());
+        if tid == 0 {
+            // SAFETY: thread-0-only solo state.
+            let st = unsafe { &mut *cx.state.as_ptr() };
+            st.converged = true;
+            st.relres = 0.0;
+            st.iterations = 0;
+        }
+        return;
+    }
+
+    // --- r₀ = b − A x ----------------------------------------------------
+    // SAFETY (this and every `view` below): phase discipline — the viewed
+    // vector's last writes are behind a phase barrier and no thread writes
+    // it during the view's phase.
+    cx.spmv.worker(unsafe { view(cx.xs, n) }, cx.qs, tid, nt);
+    pool.phase_barrier();
+    mark(tid, cx.state, &mut clock, "spmv");
+    blas1::residual_chunks(cx.b, unsafe { view(cx.qs, n) }, cx.rs, chunks.clone());
+    pool.phase_barrier();
+    mark(tid, cx.state, &mut clock, "blas1");
+
+    // --- z₀ = M⁻¹ r₀, p₀ = z₀, rz = r·z, relres₀ = ‖r‖/‖b‖ ---------------
+    cx.tri.forward_worker(unsafe { view(cx.rs, n) }, cx.ss, pool, tid, nt);
+    pool.phase_barrier();
+    cx.tri.backward_worker(unsafe { view(cx.ss, n) }, cx.zs, pool, tid, nt);
+    pool.phase_barrier();
+    mark(tid, cx.state, &mut clock, "trisolve");
+    let (r_view, z_view) = unsafe { (view(cx.rs, n), view(cx.zs, n)) };
+    blas1::copy_chunks(z_view, cx.ps, chunks.clone());
+    blas1::dot_partials(r_view, z_view, cx.partials, chunks.clone());
+    blas1::dot_partials(r_view, r_view, cx.partials2, chunks.clone());
+    pool.phase_barrier();
+    let mut rz = blas1::combine_partials(cx.partials, nchunks);
+    let mut relres = blas1::combine_partials(cx.partials2, nchunks).sqrt() / bnorm;
+    // Both partials buffers were just combined; the first loop iteration
+    // writes `partials` again, so fence the stragglers' combines off.
+    pool.phase_barrier();
+    mark(tid, cx.state, &mut clock, "blas1");
+
+    let mut iters = 0usize;
+    let mut converged = false;
+
+    while iters < cx.max_iters {
+        iters += 1;
+
+        // --- q = A p (+ p·q partials) ------------------------------------
+        let p_view = unsafe { view(cx.ps, n) };
+        cx.spmv.worker(p_view, cx.qs, tid, nt);
+        match cx.spmv.owned_chunks(tid) {
+            Some(own) => {
+                // CRS: splits are chunk-aligned, so the p·q partials can be
+                // formed in the same sweep, over cache-hot q, pre-barrier
+                // (this thread reads only the q rows it just wrote). That
+                // in-sweep dot is billed to "spmv" — it genuinely rides
+                // the sweep; the combine below goes to "blas1" like the
+                // legacy loop's dot.
+                blas1::dot_partials(p_view, unsafe { view(cx.qs, n) }, cx.partials, own);
+                pool.phase_barrier();
+                mark(tid, cx.state, &mut clock, "spmv");
+            }
+            None => {
+                // SELL (σ-sorting may scatter rows): publish q first.
+                pool.phase_barrier();
+                mark(tid, cx.state, &mut clock, "spmv");
+                blas1::dot_partials(
+                    p_view,
+                    unsafe { view(cx.qs, n) },
+                    cx.partials,
+                    chunks.clone(),
+                );
+                pool.phase_barrier();
+            }
+        }
+        let pq = blas1::combine_partials(cx.partials, nchunks);
+        mark(tid, cx.state, &mut clock, "blas1");
+        if pq <= 0.0 || !pq.is_finite() {
+            // Non-SPD or breakdown; every thread sees the same pq and
+            // breaks identically (reported as divergence, like `pcg`).
+            break;
+        }
+        let alpha = rz / pq;
+
+        // --- x += α p; r −= α q; rr = ‖r‖² -------------------------------
+        // `partials2`: a straggler may still be combining p·q from
+        // `partials` (see the FusedCtx buffer-discipline note).
+        blas1::fused_update_partials(
+            alpha,
+            p_view,
+            unsafe { view(cx.qs, n) },
+            cx.xs,
+            cx.rs,
+            cx.partials2,
+            chunks.clone(),
+        );
+        pool.phase_barrier();
+        let rr = blas1::combine_partials(cx.partials2, nchunks);
+        relres = rr.sqrt() / bnorm;
+        if cx.record_history && tid == 0 {
+            // SAFETY: thread-0-only solo state.
+            unsafe { (*cx.state.as_ptr()).history.push(relres) };
+        }
+        mark(tid, cx.state, &mut clock, "blas1");
+        if relres < cx.rtol {
+            converged = true;
+            break;
+        }
+
+        // --- z = M⁻¹ r ---------------------------------------------------
+        cx.tri.forward_worker(unsafe { view(cx.rs, n) }, cx.ss, pool, tid, nt);
+        pool.phase_barrier();
+        cx.tri.backward_worker(unsafe { view(cx.ss, n) }, cx.zs, pool, tid, nt);
+        pool.phase_barrier();
+        mark(tid, cx.state, &mut clock, "trisolve");
+
+        // --- β = (r·z)new / (r·z)old; p = z + β p ------------------------
+        let (r_view, z_view) = unsafe { (view(cx.rs, n), view(cx.zs, n)) };
+        blas1::dot_partials(r_view, z_view, cx.partials, chunks.clone());
+        pool.phase_barrier();
+        let rz_new = blas1::combine_partials(cx.partials, nchunks);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        blas1::xpby_chunks(z_view, beta, cx.ps, chunks.clone());
+        // p must be fully published before the next iteration's SpMV.
+        pool.phase_barrier();
+        mark(tid, cx.state, &mut clock, "blas1");
+    }
+
+    if tid == 0 {
+        // SAFETY: thread-0-only solo state.
+        let st = unsafe { &mut *cx.state.as_ptr() };
+        st.iterations = iters;
+        st.converged = converged;
+        st.relres = relres;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,6 +568,62 @@ mod tests {
             100,
             false,
         );
+        assert!(res.converged);
+        assert_eq!(res.iterations, 0);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn fused_loop_matches_legacy_bitwise_with_identity_precond() {
+        use crate::coordinator::pool::Pool;
+        use crate::solver::trisolve::IdentityPrecond;
+
+        let a = laplace2d(20, 17);
+        let n = a.n();
+        let xstar: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.1).sin()).collect();
+        let mut b = vec![0.0; n];
+        a.mul_vec(&xstar, &mut b);
+
+        // Legacy per-kernel loop, identity preconditioner.
+        let mut x_ref = vec![0.0; n];
+        let legacy = pcg(
+            &mut |v, y, _| a.mul_vec(v, y),
+            &mut |r, z, _| z.copy_from_slice(r),
+            &b,
+            &mut x_ref,
+            1e-9,
+            2000,
+            true,
+        );
+        assert!(legacy.converged);
+
+        let tri = IdentityPrecond;
+        for nt in [1usize, 4] {
+            let pool = Pool::new(nt);
+            let engine = SpmvEngine::crs(&a, nt);
+            let mut x = vec![0.0; n];
+            let fused = pcg_fused(&engine, &tri, &b, &mut x, 1e-9, 2000, true, &pool);
+            assert_eq!(fused.iterations, legacy.iterations, "nt={nt}");
+            assert_eq!(fused.converged, legacy.converged);
+            assert_eq!(fused.final_relres.to_bits(), legacy.final_relres.to_bits());
+            assert_eq!(fused.residual_history.len(), legacy.residual_history.len());
+            for (f, l) in fused.residual_history.iter().zip(&legacy.residual_history) {
+                assert_eq!(f.to_bits(), l.to_bits(), "history diverged at nt={nt}");
+            }
+            assert!(x.iter().zip(&x_ref).all(|(xa, xb)| xa.to_bits() == xb.to_bits()));
+        }
+    }
+
+    #[test]
+    fn fused_loop_zero_rhs_is_trivial() {
+        use crate::coordinator::pool::Pool;
+        use crate::solver::trisolve::IdentityPrecond;
+        let a = laplace2d(5, 5);
+        let pool = Pool::new(2);
+        let engine = SpmvEngine::crs(&a, 2);
+        let mut x = vec![7.0; 25];
+        let res =
+            pcg_fused(&engine, &IdentityPrecond, &vec![0.0; 25], &mut x, 1e-8, 100, false, &pool);
         assert!(res.converged);
         assert_eq!(res.iterations, 0);
         assert!(x.iter().all(|&v| v == 0.0));

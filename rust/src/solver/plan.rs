@@ -25,8 +25,8 @@ use crate::factor::ic0::ic0_auto;
 use crate::factor::split::{SellTriFactors, TriFactors};
 use crate::ordering::perm::Perm;
 use crate::ordering::{order_matrix, OrderedStructure};
-use crate::solver::cg::{pcg, CgResult};
-use crate::solver::spmv::{spmv_crs, spmv_sell};
+use crate::solver::cg::{pcg, pcg_fused, CgResult};
+use crate::solver::spmv::{spmv_crs_with, spmv_sell, RowSplits, SpmvEngine};
 use crate::solver::trisolve::{
     BmcTriSolver, HbmcTriSolver, McTriSolver, SerialTriSolver, TriSolver,
 };
@@ -81,6 +81,11 @@ pub struct ExecOptions {
     pub rtol: Option<f64>,
     /// Override the plan's iteration cap for this solve.
     pub max_iters: Option<usize>,
+    /// Run the legacy per-kernel loop (3 pool dispatches per iteration,
+    /// serial BLAS-1) instead of the fused single-dispatch region. The two
+    /// paths are bitwise-identical (`tests/fused_parity.rs`); this exists
+    /// as the reference/fallback and for A/B benchmarking.
+    pub legacy_loop: bool,
 }
 
 /// Solution + iteration data, mapped back to the original ordering.
@@ -90,6 +95,12 @@ pub struct SolveOutcome {
     pub cg: CgResult,
     /// Thread synchronizations per substitution sweep (= n_c − 1).
     pub syncs_per_substitution: usize,
+    /// `Pool::run` dispatches this solve performed (1 on the fused path,
+    /// ~3 per iteration on the legacy path).
+    pub dispatches: u64,
+    /// Pool barrier synchronizations this solve performed (color barriers
+    /// + fused-loop phase barriers).
+    pub pool_syncs: u64,
 }
 
 /// The immutable product of the setup phase; see module docs.
@@ -105,6 +116,10 @@ pub struct SolverPlan {
     pub sell_a: Option<Sell>,
     /// The ordering-specific substitution engine.
     pub trisolver: Arc<dyn TriSolver>,
+    /// Precomputed nnz-balanced CRS row splits for `cfg.threads` (None for
+    /// SELL SpMV). `execute` recomputes on the fly when it runs on a pool
+    /// of a different width.
+    pub crs_splits: Option<RowSplits>,
     pub setup: SetupStats,
     /// Analytic per-iteration op profile (SIMD-ratio metric).
     pub ops: OpProfile,
@@ -158,6 +173,10 @@ impl SolverPlan {
             .as_ref()
             .map(|s| s.stored_elements())
             .unwrap_or_else(|| a_perm.nnz());
+        let crs_splits = match cfg.spmv {
+            SpmvKind::Crs => Some(RowSplits::balanced(a_perm.row_ptr(), cfg.threads)),
+            SpmvKind::Sell => None,
+        };
         let storage_seconds = t2.elapsed().as_secs_f64();
 
         let setup = SetupStats {
@@ -194,6 +213,7 @@ impl SolverPlan {
             a_perm,
             sell_a,
             trisolver,
+            crs_splits,
             setup,
             ops,
         })
@@ -228,6 +248,11 @@ impl SolverPlan {
     /// on a caller-provided pool. Everything allocated here is per-solve;
     /// the plan itself is never mutated, so concurrent `execute` calls on
     /// distinct pools are safe.
+    ///
+    /// Default path: the fused single-dispatch loop — **one** `Pool::run`
+    /// for the whole solve ([`pcg_fused`]). Set
+    /// [`ExecOptions::legacy_loop`] for the per-kernel reference path; both
+    /// produce bitwise-identical results.
     pub fn execute(&self, pool: &Pool, b: &[f64], opts: &ExecOptions) -> Result<SolveOutcome> {
         if b.len() != self.setup.n_orig {
             return Err(HbmcError::DimensionMismatch {
@@ -238,42 +263,78 @@ impl SolverPlan {
         let n = self.n_aug();
         let b_perm = self.perm.apply_vec(b, 0.0);
         let mut x_perm = vec![0.0f64; n];
-        let mut scratch = vec![0.0f64; n];
 
         let a_perm = &self.a_perm;
         let sell_a = &self.sell_a;
         let trisolver = &self.trisolver;
         pool.reset_sync_count();
+        let dispatches_before = pool.dispatch_count();
+        let rtol = opts.rtol.unwrap_or(self.cfg.rtol);
+        let max_iters = opts.max_iters.unwrap_or(self.cfg.max_iters);
 
-        let mut spmv = |x: &[f64], y: &mut [f64], times: &mut crate::util::timer::KernelTimes| {
-            let t = Instant::now();
-            match sell_a {
-                Some(s) => spmv_sell(s, x, y, pool),
-                None => spmv_crs(a_perm, x, y, pool),
-            }
-            times.add("spmv", t.elapsed());
+        let cg = if opts.legacy_loop {
+            let mut scratch = vec![0.0f64; n];
+            let splits;
+            let crs_splits = match (&self.crs_splits, sell_a) {
+                (Some(sp), None) if sp.nt() == pool.nthreads() => Some(sp),
+                (_, None) => {
+                    splits = RowSplits::balanced(a_perm.row_ptr(), pool.nthreads());
+                    Some(&splits)
+                }
+                _ => None,
+            };
+            let mut spmv =
+                |x: &[f64], y: &mut [f64], times: &mut crate::util::timer::KernelTimes| {
+                    let t = Instant::now();
+                    match sell_a {
+                        Some(s) => spmv_sell(s, x, y, pool),
+                        None => spmv_crs_with(a_perm, x, y, pool, crs_splits.unwrap()),
+                    }
+                    times.add("spmv", t.elapsed());
+                };
+            let mut prec = |r: &[f64], z: &mut [f64], times: &mut crate::util::timer::KernelTimes| {
+                let t = Instant::now();
+                trisolver.apply(r, &mut scratch, z, pool);
+                times.add("trisolve", t.elapsed());
+            };
+            pcg(
+                &mut spmv,
+                &mut prec,
+                &b_perm,
+                &mut x_perm,
+                rtol,
+                max_iters,
+                opts.record_history,
+            )
+        } else {
+            let engine = match sell_a {
+                Some(s) => SpmvEngine::sell(s),
+                None => match &self.crs_splits {
+                    Some(sp) if sp.nt() == pool.nthreads() => {
+                        SpmvEngine::crs_with(a_perm, sp.clone())
+                    }
+                    _ => SpmvEngine::crs(a_perm, pool.nthreads()),
+                },
+            };
+            pcg_fused(
+                &engine,
+                trisolver.as_ref(),
+                &b_perm,
+                &mut x_perm,
+                rtol,
+                max_iters,
+                opts.record_history,
+                pool,
+            )
         };
-        let mut prec = |r: &[f64], z: &mut [f64], times: &mut crate::util::timer::KernelTimes| {
-            let t = Instant::now();
-            trisolver.apply(r, &mut scratch, z, pool);
-            times.add("trisolve", t.elapsed());
-        };
-
-        let cg = pcg(
-            &mut spmv,
-            &mut prec,
-            &b_perm,
-            &mut x_perm,
-            opts.rtol.unwrap_or(self.cfg.rtol),
-            opts.max_iters.unwrap_or(self.cfg.max_iters),
-            opts.record_history,
-        );
 
         let x = self.perm.unapply_vec(&x_perm);
         Ok(SolveOutcome {
             x,
             cg,
             syncs_per_substitution: self.trisolver.syncs_per_sweep(),
+            dispatches: pool.dispatch_count() - dispatches_before,
+            pool_syncs: pool.sync_count(),
         })
     }
 }

@@ -1,30 +1,152 @@
 //! Parallel sparse matrix-vector products — CRS (the paper's baseline
 //! format, used by the MC/BMC solvers and by `HBMC (crs_spmv)`) and
 //! SELL-w (used by `HBMC (sell_spmv)`, §4.4.2).
+//!
+//! CRS rows are partitioned by **nonzeros**, not by row count
+//! ([`RowSplits::balanced`]): on matrices with skewed row densities
+//! (e.g. the `gen/circuit.rs` hub rows) an even row split leaves one
+//! thread with a multiple of the others' work, and the per-iteration
+//! barrier then bills that imbalance to every thread. Splits are
+//! precomputed once per plan and aligned to the BLAS-1 reduction grid
+//! ([`blas1::CHUNK`]) so the fused CG loop can produce the `p·q` partials
+//! in the same sweep that writes `q`.
+//!
+//! Each format exposes an inner `*_worker(tid-range)` body callable from
+//! inside an open pool region (the single-dispatch CG loop); the
+//! `spmv_crs` / `spmv_sell` entry points are thin one-`run` wrappers kept
+//! for the legacy per-kernel path, benches and tests.
 
 use crate::coordinator::pool::{Pool, SyncSlice};
+use crate::solver::blas1::CHUNK;
 use crate::sparse::csr::Csr;
 use crate::sparse::sell::Sell;
+use std::ops::Range;
 
-/// `y = A x`, CRS storage, rows partitioned across the pool.
+/// Contiguous per-thread row ranges for CRS SpMV, balanced by nonzeros and
+/// (interior boundaries) aligned to [`CHUNK`].
+#[derive(Debug, Clone)]
+pub struct RowSplits {
+    splits: Vec<usize>,
+}
+
+impl RowSplits {
+    /// Partition `0..n` into `nt` contiguous ranges of approximately equal
+    /// nonzeros, computed from the CSR `row_ptr` (which *is* the
+    /// cumulative-nnz array — one `partition_point` per boundary, no scan).
+    /// Interior boundaries are rounded down to [`CHUNK`] multiples so every
+    /// reduction chunk has exactly one owning thread.
+    pub fn balanced(row_ptr: &[u32], nt: usize) -> RowSplits {
+        assert!(nt >= 1);
+        let n = row_ptr.len() - 1;
+        let nnz = *row_ptr.last().unwrap() as u64;
+        let mut splits = Vec::with_capacity(nt + 1);
+        splits.push(0usize);
+        for t in 1..nt {
+            let target = nnz * t as u64 / nt as u64;
+            let row = row_ptr.partition_point(|&v| (v as u64) < target).min(n);
+            let aligned = row / CHUNK * CHUNK;
+            let prev = *splits.last().unwrap();
+            splits.push(aligned.clamp(prev, n));
+        }
+        splits.push(n);
+        RowSplits { splits }
+    }
+
+    /// Number of thread ranges.
+    pub fn nt(&self) -> usize {
+        self.splits.len() - 1
+    }
+
+    /// Row range of thread `tid`.
+    pub fn rows(&self, tid: usize) -> Range<usize> {
+        self.splits[tid]..self.splits[tid + 1]
+    }
+
+    /// Reduction-chunk range wholly owned by thread `tid` (valid because
+    /// interior boundaries are CHUNK-aligned; the final partial chunk
+    /// belongs to the last thread).
+    pub fn chunks(&self, tid: usize) -> Range<usize> {
+        let r = self.rows(tid);
+        let n = *self.splits.last().unwrap();
+        let lo = r.start / CHUNK;
+        let hi = if r.end == n { n.div_ceil(CHUNK) } else { r.end / CHUNK };
+        lo..hi.max(lo)
+    }
+}
+
+/// CRS SpMV body for worker `tid`: computes rows `rows` of `y = A x`.
+pub fn spmv_crs_worker(a: &Csr, x: &[f64], ys: &SyncSlice<f64>, rows: Range<usize>) {
+    let row_ptr = a.row_ptr();
+    let cols = a.cols();
+    let vals = a.vals();
+    for i in rows {
+        let mut s = 0.0;
+        for k in row_ptr[i] as usize..row_ptr[i + 1] as usize {
+            s += vals[k] * x[cols[k] as usize];
+        }
+        unsafe { ys.set(i, s) };
+    }
+}
+
+/// `y = A x`, CRS storage, rows partitioned across the pool by nonzeros.
 pub fn spmv_crs(a: &Csr, x: &[f64], y: &mut [f64], pool: &Pool) {
+    let splits = RowSplits::balanced(a.row_ptr(), pool.nthreads());
+    spmv_crs_with(a, x, y, pool, &splits);
+}
+
+/// [`spmv_crs`] with precomputed splits (one `RowSplits::balanced` per
+/// plan instead of per call); `splits.nt()` must equal `pool.nthreads()`.
+pub fn spmv_crs_with(a: &Csr, x: &[f64], y: &mut [f64], pool: &Pool, splits: &RowSplits) {
     let n = a.n();
     assert_eq!(x.len(), n);
     assert_eq!(y.len(), n);
+    assert_eq!(splits.nt(), pool.nthreads());
     let ys = SyncSlice::new(y);
-    pool.run(&|tid, nt| {
-        let rows = Pool::chunk(n, tid, nt);
-        let row_ptr = a.row_ptr();
-        let cols = a.cols();
-        let vals = a.vals();
-        for i in rows {
-            let mut s = 0.0;
-            for k in row_ptr[i] as usize..row_ptr[i + 1] as usize {
-                s += vals[k] * x[cols[k] as usize];
-            }
-            unsafe { ys.set(i, s) };
-        }
+    pool.run(&|tid, _nt| {
+        spmv_crs_worker(a, x, &ys, splits.rows(tid));
     });
+}
+
+/// Which SELL inner kernel to run (resolved once per plan/engine, not per
+/// call — `is_x86_feature_detected!` is cached but still a branch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SellSimd {
+    Scalar,
+    Avx2C4,
+    Avx512C8,
+}
+
+/// Select the widest available SELL kernel for chunk size `c`.
+pub fn detect_sell_simd(c: usize) -> SellSimd {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if c == 8 && std::arch::is_x86_feature_detected!("avx512f") {
+            return SellSimd::Avx512C8;
+        }
+        if c == 4 && std::arch::is_x86_feature_detected!("avx2") {
+            return SellSimd::Avx2C4;
+        }
+    }
+    let _ = c;
+    SellSimd::Scalar
+}
+
+/// SELL SpMV body for worker `tid`: computes slices `slices` of `y = A x`.
+pub fn spmv_sell_worker(
+    s: &Sell,
+    x: &[f64],
+    ys: &SyncSlice<f64>,
+    slices: Range<usize>,
+    simd: SellSimd,
+) {
+    match simd {
+        #[cfg(target_arch = "x86_64")]
+        SellSimd::Avx512C8 => unsafe { sell_slices_avx512(s, x, ys, slices) },
+        #[cfg(target_arch = "x86_64")]
+        SellSimd::Avx2C4 => unsafe { sell_slices_avx2(s, x, ys, slices) },
+        #[allow(unreachable_patterns)]
+        _ => sell_slices_scalar(s, x, ys, slices),
+    }
 }
 
 /// `y = A x`, SELL-c storage, slices partitioned across the pool. Handles
@@ -35,29 +157,60 @@ pub fn spmv_sell(s: &Sell, x: &[f64], y: &mut [f64], pool: &Pool) {
     let n = s.n();
     assert_eq!(x.len(), n);
     assert_eq!(y.len(), n);
-    let c = s.c();
     let nslices = s.nslices();
-    #[cfg(target_arch = "x86_64")]
-    let use512 = c == 8 && std::arch::is_x86_feature_detected!("avx512f");
-    #[cfg(target_arch = "x86_64")]
-    let use2 = c == 4 && std::arch::is_x86_feature_detected!("avx2");
-    #[cfg(not(target_arch = "x86_64"))]
-    let (use512, use2) = (false, false);
+    let simd = detect_sell_simd(s.c());
     let ys = SyncSlice::new(y);
     pool.run(&|tid, nt| {
-        let slices = Pool::chunk(nslices, tid, nt);
-        #[cfg(target_arch = "x86_64")]
-        if use512 {
-            unsafe { sell_slices_avx512(s, x, &ys, slices.clone()) };
-            return;
-        }
-        #[cfg(target_arch = "x86_64")]
-        if use2 {
-            unsafe { sell_slices_avx2(s, x, &ys, slices.clone()) };
-            return;
-        }
-        sell_slices_scalar(s, x, &ys, slices);
+        spmv_sell_worker(s, x, &ys, Pool::chunk(nslices, tid, nt), simd);
     });
+}
+
+/// The SpMV side of a solve, resolved once per `SolverPlan::execute`:
+/// format, kernel path and thread partition. The fused CG loop drives it
+/// through [`SpmvEngine::worker`].
+pub enum SpmvEngine<'a> {
+    Crs { a: &'a Csr, splits: RowSplits },
+    Sell { s: &'a Sell, simd: SellSimd },
+}
+
+impl<'a> SpmvEngine<'a> {
+    pub fn crs(a: &'a Csr, nt: usize) -> SpmvEngine<'a> {
+        SpmvEngine::Crs { a, splits: RowSplits::balanced(a.row_ptr(), nt) }
+    }
+
+    pub fn crs_with(a: &'a Csr, splits: RowSplits) -> SpmvEngine<'a> {
+        SpmvEngine::Crs { a, splits }
+    }
+
+    pub fn sell(s: &'a Sell) -> SpmvEngine<'a> {
+        SpmvEngine::Sell { s, simd: detect_sell_simd(s.c()) }
+    }
+
+    /// This worker's share of `y = A x` (no barriers inside).
+    pub fn worker(&self, x: &[f64], ys: &SyncSlice<f64>, tid: usize, nt: usize) {
+        match self {
+            SpmvEngine::Crs { a, splits } => {
+                // Hard assert (mirrors `spmv_crs_with`): a width mismatch
+                // would silently leave rows of `y` stale in release builds.
+                assert_eq!(splits.nt(), nt, "SpmvEngine splits were built for a different width");
+                spmv_crs_worker(a, x, ys, splits.rows(tid));
+            }
+            SpmvEngine::Sell { s, simd } => {
+                spmv_sell_worker(s, x, ys, Pool::chunk(s.nslices(), tid, nt), *simd);
+            }
+        }
+    }
+
+    /// Reduction chunks whose `y` rows were written entirely by worker
+    /// `tid`, or `None` when ownership is not chunk-coherent (SELL may
+    /// scatter σ-sorted rows anywhere, so the fused loop must barrier
+    /// before forming `p·q` partials).
+    pub fn owned_chunks(&self, tid: usize) -> Option<Range<usize>> {
+        match self {
+            SpmvEngine::Crs { splits, .. } => Some(splits.chunks(tid)),
+            SpmvEngine::Sell { .. } => None,
+        }
+    }
 }
 
 fn sell_slices_scalar(s: &Sell, x: &[f64], ys: &SyncSlice<f64>, slices: std::ops::Range<usize>) {
@@ -230,6 +383,82 @@ mod tests {
         let pool = Pool::new(2);
         let mut y = vec![0.0; 128];
         spmv_sell(&s, &x, &mut y, &pool);
+        assert!(crate::util::max_abs_diff(&y, &y_ref) < 1e-14);
+    }
+
+    /// A matrix with one dense "hub" region: a row split would give the
+    /// hub's owner most of the nonzeros; the balanced split must not.
+    fn skewed_csr(n: usize) -> Csr {
+        let mut coo = Coo::new(n);
+        for i in 0..n {
+            coo.push(i, i, 4.0);
+        }
+        // First n/8 rows are dense-ish (16 extra entries each).
+        let mut rng = Rng::new(77);
+        for i in 0..n / 8 {
+            for _ in 0..16 {
+                let j = rng.below(n);
+                if j != i {
+                    coo.push(i, j, 0.01);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn balanced_splits_cover_and_balance_nnz() {
+        // Large enough that CHUNK-quantized boundaries can still balance
+        // (alignment granularity is CHUNK rows).
+        let a = skewed_csr(16 * CHUNK);
+        let row_ptr = a.row_ptr();
+        for nt in [1usize, 2, 3, 4, 7] {
+            let sp = RowSplits::balanced(row_ptr, nt);
+            assert_eq!(sp.nt(), nt);
+            // Cover 0..n contiguously, interior boundaries CHUNK-aligned.
+            let mut end = 0usize;
+            for t in 0..nt {
+                let r = sp.rows(t);
+                assert_eq!(r.start, end);
+                end = r.end;
+                if t + 1 < nt {
+                    assert_eq!(r.end % CHUNK, 0, "interior split must be aligned");
+                }
+            }
+            assert_eq!(end, a.n());
+            // Chunk ownership covers the whole grid disjointly.
+            let mut cend = 0usize;
+            for t in 0..nt {
+                let c = sp.chunks(t);
+                assert_eq!(c.start, cend);
+                cend = c.end;
+            }
+            assert_eq!(cend, a.n().div_ceil(CHUNK));
+        }
+        // With 2 threads, the nnz share of each side is far closer to even
+        // than a naive half-rows split (hub rows all live in the first half).
+        let sp = RowSplits::balanced(row_ptr, 2);
+        let mid = sp.rows(0).end;
+        let nnz = a.nnz() as f64;
+        let left = row_ptr[mid] as f64;
+        assert!(
+            (left / nnz - 0.5).abs() < 0.2,
+            "nnz-balanced split is {left}/{nnz}"
+        );
+        let naive_left = row_ptr[a.n() / 2] as f64;
+        assert!((left / nnz - 0.5).abs() < (naive_left / nnz - 0.5).abs());
+    }
+
+    #[test]
+    fn spmv_crs_with_precomputed_splits_matches() {
+        let a = skewed_csr(2 * CHUNK + 100);
+        let x: Vec<f64> = (0..a.n()).map(|i| (i as f64 * 0.01).cos()).collect();
+        let mut y_ref = vec![0.0; a.n()];
+        a.mul_vec(&x, &mut y_ref);
+        let pool = Pool::new(3);
+        let splits = RowSplits::balanced(a.row_ptr(), 3);
+        let mut y = vec![0.0; a.n()];
+        spmv_crs_with(&a, &x, &mut y, &pool, &splits);
         assert!(crate::util::max_abs_diff(&y, &y_ref) < 1e-14);
     }
 }

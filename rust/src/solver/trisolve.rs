@@ -7,10 +7,10 @@
 //! Implementations are immutable once built and `Send + Sync`: a plan
 //! holding one behind an `Arc` can serve many concurrent sessions.
 
-use crate::coordinator::pool::Pool;
+use crate::coordinator::pool::{Pool, SyncSlice};
 use crate::factor::split::{SellTriFactors, TriFactors};
 use crate::solver::trisolve_hbmc::{HbmcMeta, KernelPath};
-use crate::solver::{trisolve_bmc, trisolve_hbmc, trisolve_mc, trisolve_serial};
+use crate::solver::{blas1, trisolve_bmc, trisolve_hbmc, trisolve_mc, trisolve_serial};
 
 /// An IC(0) substitution engine `z = (L Lᵀ)⁻¹ r` specialized to one
 /// parallel ordering.
@@ -20,6 +20,39 @@ pub trait TriSolver: Send + Sync {
 
     /// Backward substitution `Lᵀ z = y`.
     fn backward(&self, y: &[f64], z: &mut [f64], pool: &Pool);
+
+    /// Forward-sweep body executed by worker `tid` from *inside* an
+    /// already open pool region (the single-dispatch CG loop). Every
+    /// thread of the region must call it with identical arguments; color
+    /// barriers happen inside, and the **caller** must place a
+    /// [`Pool::phase_barrier`] after the call before `y` is read across
+    /// threads.
+    ///
+    /// Default: thread 0 runs the plain [`TriSolver::forward`] serially
+    /// while the others fall through to the caller's phase barrier —
+    /// correct only for implementations whose `forward` never dispatches
+    /// on the pool (the serial and identity solvers). Implementations that
+    /// parallelize their sweeps MUST override with a real worker body.
+    fn forward_worker(&self, r: &[f64], ys: &SyncSlice<f64>, pool: &Pool, tid: usize, nt: usize) {
+        let _ = nt;
+        if tid == 0 {
+            // SAFETY: region phase contract — no other thread touches `y`
+            // until the caller's trailing barrier.
+            let y = unsafe { std::slice::from_raw_parts_mut(ys.as_mut_ptr(), ys.len()) };
+            self.forward(r, y, pool);
+        }
+    }
+
+    /// Backward-sweep body for worker `tid`; same contract as
+    /// [`TriSolver::forward_worker`].
+    fn backward_worker(&self, y: &[f64], zs: &SyncSlice<f64>, pool: &Pool, tid: usize, nt: usize) {
+        let _ = nt;
+        if tid == 0 {
+            // SAFETY: see `forward_worker`.
+            let z = unsafe { std::slice::from_raw_parts_mut(zs.as_mut_ptr(), zs.len()) };
+            self.backward(y, z, pool);
+        }
+    }
 
     /// Colors in the ordering (1 when unordered/serial).
     fn num_colors(&self) -> usize;
@@ -60,6 +93,16 @@ impl TriSolver for IdentityPrecond {
 
     fn backward(&self, y: &[f64], z: &mut [f64], _pool: &Pool) {
         z.copy_from_slice(y);
+    }
+
+    fn forward_worker(&self, r: &[f64], ys: &SyncSlice<f64>, _pool: &Pool, tid: usize, nt: usize) {
+        let nc = blas1::num_chunks(r.len());
+        blas1::copy_chunks(r, ys, Pool::chunk(nc, tid, nt));
+    }
+
+    fn backward_worker(&self, y: &[f64], zs: &SyncSlice<f64>, _pool: &Pool, tid: usize, nt: usize) {
+        let nc = blas1::num_chunks(y.len());
+        blas1::copy_chunks(y, zs, Pool::chunk(nc, tid, nt));
     }
 
     fn num_colors(&self) -> usize {
@@ -130,6 +173,14 @@ impl TriSolver for McTriSolver {
         trisolve_mc::backward(&self.tri, &self.color_ptr, y, z, pool);
     }
 
+    fn forward_worker(&self, r: &[f64], ys: &SyncSlice<f64>, pool: &Pool, tid: usize, nt: usize) {
+        trisolve_mc::forward_worker(&self.tri, &self.color_ptr, r, ys, pool, tid, nt);
+    }
+
+    fn backward_worker(&self, y: &[f64], zs: &SyncSlice<f64>, pool: &Pool, tid: usize, nt: usize) {
+        trisolve_mc::backward_worker(&self.tri, &self.color_ptr, y, zs, pool, tid, nt);
+    }
+
     fn num_colors(&self) -> usize {
         self.color_ptr.len() - 1
     }
@@ -163,6 +214,14 @@ impl TriSolver for BmcTriSolver {
 
     fn backward(&self, y: &[f64], z: &mut [f64], pool: &Pool) {
         trisolve_bmc::backward(&self.tri, &self.color_ptr, self.bs, y, z, pool);
+    }
+
+    fn forward_worker(&self, r: &[f64], ys: &SyncSlice<f64>, pool: &Pool, tid: usize, nt: usize) {
+        trisolve_bmc::forward_worker(&self.tri, &self.color_ptr, self.bs, r, ys, pool, tid, nt);
+    }
+
+    fn backward_worker(&self, y: &[f64], zs: &SyncSlice<f64>, pool: &Pool, tid: usize, nt: usize) {
+        trisolve_bmc::backward_worker(&self.tri, &self.color_ptr, self.bs, y, zs, pool, tid, nt);
     }
 
     fn num_colors(&self) -> usize {
@@ -199,6 +258,14 @@ impl TriSolver for HbmcTriSolver {
 
     fn backward(&self, y: &[f64], z: &mut [f64], pool: &Pool) {
         trisolve_hbmc::backward(&self.meta, &self.sell, y, z, pool, self.path);
+    }
+
+    fn forward_worker(&self, r: &[f64], ys: &SyncSlice<f64>, pool: &Pool, tid: usize, nt: usize) {
+        trisolve_hbmc::forward_worker(&self.meta, &self.sell, r, ys, pool, tid, nt, self.path);
+    }
+
+    fn backward_worker(&self, y: &[f64], zs: &SyncSlice<f64>, pool: &Pool, tid: usize, nt: usize) {
+        trisolve_hbmc::backward_worker(&self.meta, &self.sell, y, zs, pool, tid, nt, self.path);
     }
 
     fn num_colors(&self) -> usize {

@@ -19,31 +19,48 @@ pub fn forward(
     let n = tri.n();
     assert_eq!(r.len(), n);
     assert_eq!(y.len(), n);
-    let ncolors = color_ptr.len() - 1;
     let ys = SyncSlice::new(y);
     pool.run(&|tid, nt| {
-        let row_ptr = tri.lower.row_ptr();
-        let cols = tri.lower.cols();
-        let vals = tri.lower.vals();
-        for c in 0..ncolors {
-            let (lo, hi) = (color_ptr[c], color_ptr[c + 1]);
-            let nblocks = (hi - lo) / bs;
-            let blocks = Pool::chunk(nblocks, tid, nt);
-            for b in blocks {
-                let row0 = lo + b * bs;
-                for i in row0..row0 + bs {
-                    let mut s = r[i];
-                    for k in row_ptr[i] as usize..row_ptr[i + 1] as usize {
-                        s -= vals[k] * unsafe { ys.get(cols[k] as usize) };
-                    }
-                    unsafe { ys.set(i, s * tri.diag_inv[i]) };
+        forward_worker(tri, color_ptr, bs, r, &ys, pool, tid, nt);
+    });
+}
+
+/// Forward-sweep body for worker `tid`, callable from inside an already
+/// open pool region. Performs exactly `n_c − 1` color barriers; the caller
+/// supplies any trailing barrier before `y` is read across threads.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_worker(
+    tri: &TriFactors,
+    color_ptr: &[usize],
+    bs: usize,
+    r: &[f64],
+    ys: &SyncSlice<f64>,
+    pool: &Pool,
+    tid: usize,
+    nt: usize,
+) {
+    let ncolors = color_ptr.len() - 1;
+    let row_ptr = tri.lower.row_ptr();
+    let cols = tri.lower.cols();
+    let vals = tri.lower.vals();
+    for c in 0..ncolors {
+        let (lo, hi) = (color_ptr[c], color_ptr[c + 1]);
+        let nblocks = (hi - lo) / bs;
+        let blocks = Pool::chunk(nblocks, tid, nt);
+        for b in blocks {
+            let row0 = lo + b * bs;
+            for i in row0..row0 + bs {
+                let mut s = r[i];
+                for k in row_ptr[i] as usize..row_ptr[i + 1] as usize {
+                    s -= vals[k] * unsafe { ys.get(cols[k] as usize) };
                 }
-            }
-            if c + 1 < ncolors {
-                pool.color_barrier();
+                unsafe { ys.set(i, s * tri.diag_inv[i]) };
             }
         }
-    });
+        if c + 1 < ncolors {
+            pool.color_barrier();
+        }
+    }
 }
 
 /// Backward substitution `Lᵀ z = y` under BMC ordering (colors and
@@ -59,31 +76,46 @@ pub fn backward(
     let n = tri.n();
     assert_eq!(y.len(), n);
     assert_eq!(z.len(), n);
-    let ncolors = color_ptr.len() - 1;
     let zs = SyncSlice::new(z);
     pool.run(&|tid, nt| {
-        let row_ptr = tri.upper.row_ptr();
-        let cols = tri.upper.cols();
-        let vals = tri.upper.vals();
-        for c in (0..ncolors).rev() {
-            let (lo, hi) = (color_ptr[c], color_ptr[c + 1]);
-            let nblocks = (hi - lo) / bs;
-            let blocks = Pool::chunk(nblocks, tid, nt);
-            for b in blocks {
-                let row0 = lo + b * bs;
-                for i in (row0..row0 + bs).rev() {
-                    let mut s = y[i];
-                    for k in row_ptr[i] as usize..row_ptr[i + 1] as usize {
-                        s -= vals[k] * unsafe { zs.get(cols[k] as usize) };
-                    }
-                    unsafe { zs.set(i, s * tri.diag_inv[i]) };
+        backward_worker(tri, color_ptr, bs, y, &zs, pool, tid, nt);
+    });
+}
+
+/// Backward-sweep body for worker `tid` (see [`forward_worker`]).
+#[allow(clippy::too_many_arguments)]
+pub fn backward_worker(
+    tri: &TriFactors,
+    color_ptr: &[usize],
+    bs: usize,
+    y: &[f64],
+    zs: &SyncSlice<f64>,
+    pool: &Pool,
+    tid: usize,
+    nt: usize,
+) {
+    let ncolors = color_ptr.len() - 1;
+    let row_ptr = tri.upper.row_ptr();
+    let cols = tri.upper.cols();
+    let vals = tri.upper.vals();
+    for c in (0..ncolors).rev() {
+        let (lo, hi) = (color_ptr[c], color_ptr[c + 1]);
+        let nblocks = (hi - lo) / bs;
+        let blocks = Pool::chunk(nblocks, tid, nt);
+        for b in blocks {
+            let row0 = lo + b * bs;
+            for i in (row0..row0 + bs).rev() {
+                let mut s = y[i];
+                for k in row_ptr[i] as usize..row_ptr[i + 1] as usize {
+                    s -= vals[k] * unsafe { zs.get(cols[k] as usize) };
                 }
-            }
-            if c > 0 {
-                pool.color_barrier();
+                unsafe { zs.set(i, s * tri.diag_inv[i]) };
             }
         }
-    });
+        if c > 0 {
+            pool.color_barrier();
+        }
+    }
 }
 
 #[cfg(test)]

@@ -112,11 +112,27 @@ pub fn forward(
     assert_eq!(r.len(), n);
     assert_eq!(y.len(), n);
     let ys = SyncSlice::new(y);
-    let sell = &factors.fwd;
-    let dinv = &factors.diag_inv;
     pool.run(&|tid, nt| {
-        sweep(meta, sell, dinv, r, &ys, pool, tid, nt, path, false);
+        forward_worker(meta, factors, r, &ys, pool, tid, nt, path);
     });
+}
+
+/// Forward-sweep body for worker `tid`, callable from inside an already
+/// open pool region (the single-dispatch CG loop). Performs exactly
+/// `n_c − 1` color barriers; the caller supplies any trailing barrier
+/// before `y` is read across threads.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_worker(
+    meta: &HbmcMeta,
+    factors: &SellTriFactors,
+    r: &[f64],
+    ys: &SyncSlice<f64>,
+    pool: &Pool,
+    tid: usize,
+    nt: usize,
+    path: KernelPath,
+) {
+    sweep(meta, &factors.fwd, &factors.diag_inv, r, ys, pool, tid, nt, path, false);
 }
 
 /// Backward substitution `Lᵀ z = y` under HBMC (colors and steps reversed).
@@ -133,15 +149,31 @@ pub fn backward(
     assert_eq!(y.len(), n);
     assert_eq!(z.len(), n);
     let zs = SyncSlice::new(z);
-    let sell = &factors.bwd;
-    let dinv = &factors.diag_inv;
     pool.run(&|tid, nt| {
-        sweep(meta, sell, dinv, y, &zs, pool, tid, nt, path, true);
+        backward_worker(meta, factors, y, &zs, pool, tid, nt, path);
     });
 }
 
+/// Backward-sweep body for worker `tid` (see [`forward_worker`]).
+#[allow(clippy::too_many_arguments)]
+pub fn backward_worker(
+    meta: &HbmcMeta,
+    factors: &SellTriFactors,
+    y: &[f64],
+    zs: &SyncSlice<f64>,
+    pool: &Pool,
+    tid: usize,
+    nt: usize,
+    path: KernelPath,
+) {
+    sweep(meta, &factors.bwd, &factors.diag_inv, y, zs, pool, tid, nt, path, true);
+}
+
 /// One full color sweep executed by worker `tid` (shared by fwd/bwd; for
-/// the backward sweep colors and in-block steps run in reverse).
+/// the backward sweep colors and in-block steps run in reverse). The color
+/// index is computed arithmetically — no boxed iterator on this hot path —
+/// and the dynamic-width kernel's scratch is allocated once per sweep, not
+/// per block.
 #[allow(clippy::too_many_arguments)]
 fn sweep(
     meta: &HbmcMeta,
@@ -158,18 +190,17 @@ fn sweep(
     let (bs, w) = (meta.bs, meta.w);
     let bw = bs * w;
     let ncolors = meta.num_colors;
-    let colors: Box<dyn Iterator<Item = usize>> = if reverse {
-        Box::new((0..ncolors).rev())
-    } else {
-        Box::new(0..ncolors)
-    };
-    for (ci, c) in colors.enumerate() {
+    // Scratch for `block_solve_dyn` only (widths without a const-generic or
+    // intrinsic kernel); hoisted out of the per-block loop.
+    let mut dyn_scratch = if matches!(w, 2 | 4 | 8 | 16) { Vec::new() } else { vec![0.0f64; w] };
+    for ci in 0..ncolors {
+        let c = if reverse { ncolors - 1 - ci } else { ci };
         let (lo, hi) = (meta.color_ptr[c], meta.color_ptr[c + 1]);
         let nl1 = (hi - lo) / bw;
         let blocks = Pool::chunk(nl1, tid, nt);
         for b in blocks {
             let row0 = lo + b * bw;
-            block_solve(sell, dinv, rhs, out, row0, bs, w, path, reverse);
+            block_solve(sell, dinv, rhs, out, row0, bs, w, path, reverse, &mut dyn_scratch);
         }
         if ci + 1 < ncolors {
             pool.color_barrier();
@@ -177,7 +208,9 @@ fn sweep(
     }
 }
 
-/// Solve one level-1 block: `bs` sequential `w`-wide steps.
+/// Solve one level-1 block: `bs` sequential `w`-wide steps. `dyn_scratch`
+/// is the sweep-lifetime buffer for the dynamic-width fallback (empty for
+/// const-generic/intrinsic widths).
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn block_solve(
@@ -190,6 +223,7 @@ fn block_solve(
     w: usize,
     path: KernelPath,
     reverse: bool,
+    dyn_scratch: &mut [f64],
 ) {
     match path {
         #[cfg(target_arch = "x86_64")]
@@ -206,7 +240,7 @@ fn block_solve(
             4 => block_solve_scalar::<4>(sell, dinv, rhs, out, row0, bs, reverse),
             8 => block_solve_scalar::<8>(sell, dinv, rhs, out, row0, bs, reverse),
             16 => block_solve_scalar::<16>(sell, dinv, rhs, out, row0, bs, reverse),
-            _ => block_solve_dyn(sell, dinv, rhs, out, row0, bs, w, reverse),
+            _ => block_solve_dyn(sell, dinv, rhs, out, row0, bs, w, reverse, dyn_scratch),
         },
     }
 }
@@ -245,7 +279,8 @@ fn block_solve_scalar<const W: usize>(
     }
 }
 
-/// Fallback for arbitrary `w` (not a compile-time width).
+/// Fallback for arbitrary `w` (not a compile-time width). `t` is the
+/// caller's sweep-lifetime scratch (`len == w`) — no per-block allocation.
 #[allow(clippy::too_many_arguments)]
 fn block_solve_dyn(
     sell: &Sell,
@@ -256,12 +291,13 @@ fn block_solve_dyn(
     bs: usize,
     w: usize,
     reverse: bool,
+    t: &mut [f64],
 ) {
+    debug_assert_eq!(t.len(), w);
     let slice_ptr = sell.slice_ptr();
     let slice_len = sell.slice_len();
     let cols = sell.cols();
     let vals = sell.vals();
-    let mut t = vec![0.0f64; w];
     for step in 0..bs {
         let l = if reverse { bs - 1 - step } else { step };
         let rowbase = row0 + l * w;

@@ -11,27 +11,43 @@ pub fn forward(tri: &TriFactors, color_ptr: &[usize], r: &[f64], y: &mut [f64], 
     let n = tri.n();
     assert_eq!(r.len(), n);
     assert_eq!(y.len(), n);
-    let ncolors = color_ptr.len() - 1;
     let ys = SyncSlice::new(y);
     pool.run(&|tid, nt| {
-        let row_ptr = tri.lower.row_ptr();
-        let cols = tri.lower.cols();
-        let vals = tri.lower.vals();
-        for c in 0..ncolors {
-            let (lo, hi) = (color_ptr[c], color_ptr[c + 1]);
-            let rows = Pool::chunk(hi - lo, tid, nt);
-            for i in lo + rows.start..lo + rows.end {
-                let mut s = r[i];
-                for k in row_ptr[i] as usize..row_ptr[i + 1] as usize {
-                    s -= vals[k] * unsafe { ys.get(cols[k] as usize) };
-                }
-                unsafe { ys.set(i, s * tri.diag_inv[i]) };
-            }
-            if c + 1 < ncolors {
-                pool.color_barrier();
-            }
-        }
+        forward_worker(tri, color_ptr, r, &ys, pool, tid, nt);
     });
+}
+
+/// Forward-sweep body for worker `tid`, callable from inside an already
+/// open pool region (the single-dispatch CG loop). Performs exactly
+/// `n_c − 1` color barriers; the caller supplies any trailing barrier
+/// before `y` is read across threads.
+pub fn forward_worker(
+    tri: &TriFactors,
+    color_ptr: &[usize],
+    r: &[f64],
+    ys: &SyncSlice<f64>,
+    pool: &Pool,
+    tid: usize,
+    nt: usize,
+) {
+    let ncolors = color_ptr.len() - 1;
+    let row_ptr = tri.lower.row_ptr();
+    let cols = tri.lower.cols();
+    let vals = tri.lower.vals();
+    for c in 0..ncolors {
+        let (lo, hi) = (color_ptr[c], color_ptr[c + 1]);
+        let rows = Pool::chunk(hi - lo, tid, nt);
+        for i in lo + rows.start..lo + rows.end {
+            let mut s = r[i];
+            for k in row_ptr[i] as usize..row_ptr[i + 1] as usize {
+                s -= vals[k] * unsafe { ys.get(cols[k] as usize) };
+            }
+            unsafe { ys.set(i, s * tri.diag_inv[i]) };
+        }
+        if c + 1 < ncolors {
+            pool.color_barrier();
+        }
+    }
 }
 
 /// Backward substitution `Lᵀ z = y` under MC ordering (colors reversed).
@@ -39,27 +55,40 @@ pub fn backward(tri: &TriFactors, color_ptr: &[usize], y: &[f64], z: &mut [f64],
     let n = tri.n();
     assert_eq!(y.len(), n);
     assert_eq!(z.len(), n);
-    let ncolors = color_ptr.len() - 1;
     let zs = SyncSlice::new(z);
     pool.run(&|tid, nt| {
-        let row_ptr = tri.upper.row_ptr();
-        let cols = tri.upper.cols();
-        let vals = tri.upper.vals();
-        for c in (0..ncolors).rev() {
-            let (lo, hi) = (color_ptr[c], color_ptr[c + 1]);
-            let rows = Pool::chunk(hi - lo, tid, nt);
-            for i in lo + rows.start..lo + rows.end {
-                let mut s = y[i];
-                for k in row_ptr[i] as usize..row_ptr[i + 1] as usize {
-                    s -= vals[k] * unsafe { zs.get(cols[k] as usize) };
-                }
-                unsafe { zs.set(i, s * tri.diag_inv[i]) };
-            }
-            if c > 0 {
-                pool.color_barrier();
-            }
-        }
+        backward_worker(tri, color_ptr, y, &zs, pool, tid, nt);
     });
+}
+
+/// Backward-sweep body for worker `tid` (see [`forward_worker`]).
+pub fn backward_worker(
+    tri: &TriFactors,
+    color_ptr: &[usize],
+    y: &[f64],
+    zs: &SyncSlice<f64>,
+    pool: &Pool,
+    tid: usize,
+    nt: usize,
+) {
+    let ncolors = color_ptr.len() - 1;
+    let row_ptr = tri.upper.row_ptr();
+    let cols = tri.upper.cols();
+    let vals = tri.upper.vals();
+    for c in (0..ncolors).rev() {
+        let (lo, hi) = (color_ptr[c], color_ptr[c + 1]);
+        let rows = Pool::chunk(hi - lo, tid, nt);
+        for i in lo + rows.start..lo + rows.end {
+            let mut s = y[i];
+            for k in row_ptr[i] as usize..row_ptr[i + 1] as usize {
+                s -= vals[k] * unsafe { zs.get(cols[k] as usize) };
+            }
+            unsafe { zs.set(i, s * tri.diag_inv[i]) };
+        }
+        if c > 0 {
+            pool.color_barrier();
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,195 @@
+//! Bitwise-parity acceptance suite for the single-dispatch CG redesign.
+//!
+//! Contract under test (ISSUE 4):
+//!
+//! * the fused single-dispatch loop reproduces the legacy per-kernel path
+//!   **exactly** — identical residual histories, iteration counts and
+//!   solution bits — for all four orderings × threads ∈ {1, 4} × SpMV ∈
+//!   {CRS, SELL};
+//! * fused results are bitwise-deterministic across runs *and across
+//!   thread counts* (the chunk-grid reductions are partition-invariant);
+//! * a converged solve performs **exactly one** `Pool::run` dispatch on
+//!   the fused path (vs one per kernel invocation on the legacy path),
+//!   and its barrier count matches the analytic sync model;
+//! * the service surfaces the dispatch counter (`ServiceStats`).
+
+use hbmc::api::SolverService;
+use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
+use hbmc::coordinator::metrics::syncs_per_fused_iteration;
+use hbmc::coordinator::pool::Pool;
+use hbmc::gen::suite;
+use hbmc::solver::plan::{ExecOptions, SolveOutcome, SolverPlan};
+
+const ORDERINGS: [OrderingKind; 4] = [
+    OrderingKind::Natural,
+    OrderingKind::Mc,
+    OrderingKind::Bmc,
+    OrderingKind::Hbmc,
+];
+
+fn cfg_for(ordering: OrderingKind, spmv: SpmvKind, shift: f64) -> SolverConfig {
+    SolverConfig {
+        ordering,
+        bs: 8,
+        w: 4,
+        spmv,
+        shift,
+        rtol: 1e-6,
+        threads: 1,
+        ..Default::default()
+    }
+}
+
+fn run(plan: &SolverPlan, b: &[f64], nt: usize, legacy: bool) -> SolveOutcome {
+    let pool = Pool::new(nt);
+    plan.execute(
+        &pool,
+        b,
+        &ExecOptions { record_history: true, legacy_loop: legacy, ..Default::default() },
+    )
+    .expect("solve")
+}
+
+fn assert_bitwise_equal(a: &SolveOutcome, b: &SolveOutcome, what: &str) {
+    assert_eq!(a.cg.iterations, b.cg.iterations, "{what}: iteration count");
+    assert_eq!(a.cg.converged, b.cg.converged, "{what}: converged flag");
+    assert_eq!(
+        a.cg.final_relres.to_bits(),
+        b.cg.final_relres.to_bits(),
+        "{what}: final relres"
+    );
+    assert_eq!(
+        a.cg.residual_history.len(),
+        b.cg.residual_history.len(),
+        "{what}: history length"
+    );
+    for (i, (ra, rb)) in a
+        .cg
+        .residual_history
+        .iter()
+        .zip(&b.cg.residual_history)
+        .enumerate()
+    {
+        assert_eq!(ra.to_bits(), rb.to_bits(), "{what}: history[{i}]");
+    }
+    assert_eq!(a.x.len(), b.x.len());
+    for (i, (xa, xb)) in a.x.iter().zip(&b.x).enumerate() {
+        assert_eq!(xa.to_bits(), xb.to_bits(), "{what}: x[{i}]");
+    }
+}
+
+/// The headline matrix: fused ≡ legacy, bit for bit, across the full
+/// orderings × threads × SpMV grid.
+#[test]
+fn fused_loop_is_bitwise_identical_to_legacy_everywhere() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    for ordering in ORDERINGS {
+        for spmv in [SpmvKind::Crs, SpmvKind::Sell] {
+            let cfg = cfg_for(ordering, spmv, d.shift);
+            let plan = SolverPlan::build(&d.matrix, &cfg).expect("plan");
+            let legacy1 = run(&plan, &d.b, 1, true);
+            assert!(
+                legacy1.cg.converged,
+                "{ordering:?}/{spmv:?} must converge (relres={})",
+                legacy1.cg.final_relres
+            );
+            for nt in [1usize, 4] {
+                let fused = run(&plan, &d.b, nt, false);
+                assert_bitwise_equal(&fused, &legacy1, &format!("{ordering:?}/{spmv:?} nt={nt}"));
+                let legacy = run(&plan, &d.b, nt, true);
+                assert_bitwise_equal(&legacy, &legacy1, &format!("legacy {ordering:?} nt={nt}"));
+            }
+        }
+    }
+}
+
+/// Run-to-run and cross-thread-count bitwise determinism of the fused
+/// path, asserted directly (not just via transitivity through legacy).
+#[test]
+fn fused_loop_is_deterministic_across_runs_and_thread_counts() {
+    let d = suite::dataset("thermal2", Scale::Tiny);
+    let cfg = cfg_for(OrderingKind::Hbmc, SpmvKind::Sell, d.shift);
+    let plan = SolverPlan::build(&d.matrix, &cfg).expect("plan");
+    let reference = run(&plan, &d.b, 1, false);
+    assert!(reference.cg.converged);
+    for nt in [1usize, 2, 4] {
+        for rep in 0..2 {
+            let again = run(&plan, &d.b, nt, false);
+            assert_bitwise_equal(&again, &reference, &format!("nt={nt} rep={rep}"));
+        }
+    }
+}
+
+/// A converged fused solve is exactly one pool dispatch; the legacy loop
+/// pays one dispatch per kernel invocation (3 per iteration + 3 for the
+/// initialization on the parallel orderings). Barrier counts match the
+/// analytic model in `coordinator::metrics`.
+#[test]
+fn fused_solve_is_exactly_one_dispatch_with_modeled_syncs() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    for ordering in ORDERINGS {
+        for spmv in [SpmvKind::Crs, SpmvKind::Sell] {
+            let cfg = cfg_for(ordering, spmv, d.shift);
+            let plan = SolverPlan::build(&d.matrix, &cfg).expect("plan");
+            for nt in [1usize, 4] {
+                let fused = run(&plan, &d.b, nt, false);
+                assert!(fused.cg.converged);
+                assert_eq!(
+                    fused.dispatches, 1,
+                    "{ordering:?}/{spmv:?} nt={nt}: fused solve must be one dispatch"
+                );
+
+                // Sync accounting: init (one barrier more than a steady
+                // iteration — the post-combine fence) + (k−1) full
+                // iterations + the converged iteration's two (CRS) or
+                // three (SELL) phases.
+                let nc = plan.trisolver.num_colors();
+                let sell = matches!(spmv, SpmvKind::Sell);
+                let k = fused.cg.iterations;
+                assert!(k >= 1);
+                let init = 2 * (nc - 1) + 7;
+                let expected =
+                    init + (k - 1) * syncs_per_fused_iteration(nc, sell) + 2 + usize::from(sell);
+                assert_eq!(
+                    fused.pool_syncs as usize, expected,
+                    "{ordering:?}/{spmv:?} nt={nt}: sync accounting drifted"
+                );
+
+                let legacy = run(&plan, &d.b, nt, true);
+                assert!(
+                    legacy.dispatches > fused.dispatches,
+                    "{ordering:?}/{spmv:?}: legacy must dispatch more"
+                );
+                if ordering != OrderingKind::Natural {
+                    // Init pays SpMV + forward + backward (3); each full
+                    // iteration pays the same trio; the converged final
+                    // iteration stops after its SpMV.
+                    assert_eq!(legacy.dispatches as usize, 3 * legacy.cg.iterations + 1);
+                } else {
+                    // Natural ordering substitutes serially on the caller:
+                    // only SpMV dispatches (init + one per iteration).
+                    assert_eq!(legacy.dispatches as usize, legacy.cg.iterations + 1);
+                }
+            }
+        }
+    }
+}
+
+/// The service's stats surface the dispatch counter: with the fused loop,
+/// dispatches == solves.
+#[test]
+fn service_stats_count_one_dispatch_per_solve() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let cfg = cfg_for(OrderingKind::Hbmc, SpmvKind::Sell, d.shift);
+    let service = SolverService::with_config(cfg).expect("service");
+    let handle = service.register_matrix(d.matrix.clone());
+    for scale in [1.0f64, 2.0, -0.5] {
+        let b: Vec<f64> = d.b.iter().map(|v| v * scale).collect();
+        let out = service.solve(handle, &b).expect("solve");
+        assert!(out.report.converged);
+        assert_eq!(out.report.dispatches, 1);
+    }
+    let st = service.stats();
+    assert_eq!(st.solves, 3);
+    assert_eq!(st.dispatches, st.solves, "fused serving: one dispatch per solve");
+}
