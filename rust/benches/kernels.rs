@@ -86,9 +86,11 @@ fn quick_main() {
         d.nnz(),
         entries.join(",\n")
     );
-    std::fs::write("BENCH_iter.json", &json).expect("write BENCH_iter.json");
+    // Stable name at the repo root (CWD here is the package dir, rust/).
+    let path = hbmc::util::bench_artifact_path("BENCH_iter.json");
+    std::fs::write(&path, &json).expect("write BENCH_iter.json");
     println!("{json}");
-    println!("wrote BENCH_iter.json");
+    println!("wrote {}", path.display());
 }
 
 fn main() {

@@ -21,7 +21,13 @@
 //!
 //! Quick mode (`--quick` arg or `HBMC_BENCH_QUICK=1`): a CI-friendly
 //! shrunk workload that also writes `BENCH_serving.json` (solves/s and
-//! dispatches/solve per strategy) as a perf-trajectory artifact.
+//! dispatches/solve per strategy, repo-root stable name) as a
+//! perf-trajectory artifact.
+//!
+//! `HBMC_PROFILE=<store.json>` runs the whole workload under the tuned
+//! profile stored for this matrix + machine (`hbmc tune` output), so the
+//! serving trajectory can be tracked for the production configuration as
+//! well as the fixed reference one.
 
 use std::sync::{Arc, Barrier};
 use std::thread;
@@ -30,6 +36,7 @@ use std::time::{Duration, Instant};
 use hbmc::api::{ServiceStats, SolveRequest, SolverService};
 use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
 use hbmc::gen::{suite, Dataset};
+use hbmc::tune::ProfileStore;
 
 struct Workload {
     clients: usize,
@@ -99,6 +106,19 @@ fn main() {
         rtol: 1e-7,
         ..Default::default()
     };
+    // HBMC_PROFILE=<store.json>: run the whole bench under the tuned
+    // profile for this matrix + machine (produced by `hbmc tune`), so the
+    // serving numbers track what production would actually run.
+    if let Some(store_path) = std::env::var_os("HBMC_PROFILE") {
+        let store = ProfileStore::open(&store_path).expect("readable profile store");
+        match store.lookup(&d.matrix) {
+            Some(p) => {
+                cfg = p.apply_to(&cfg);
+                println!("profile: {} from {store_path:?}", p.label());
+            }
+            None => println!("profile: none for this matrix/machine in {store_path:?}"),
+        }
+    }
     cfg.queue.max_batch = w.clients * w.requests;
     cfg.queue.max_wait = Duration::from_millis(2);
     println!(
@@ -208,9 +228,11 @@ fn main() {
             w.requests,
             json_entries.join(",\n")
         );
-        std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
+        // Stable name at the repo root (CWD here is the package dir).
+        let path = hbmc::util::bench_artifact_path("BENCH_serving.json");
+        std::fs::write(&path, &json).expect("write BENCH_serving.json");
         println!("\n{json}");
-        println!("wrote BENCH_serving.json");
+        println!("wrote {}", path.display());
     }
 }
 

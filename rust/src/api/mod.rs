@@ -16,6 +16,14 @@
 //!   The blocking `solve` / `solve_many` calls are submit + wait wrappers
 //!   over the same queue.
 //!
+//! The service is also the front door of the autotuner (see
+//! [`crate::tune`]): [`SolverService::tune`] searches the configuration
+//! space for a registered matrix on this machine and installs/persists
+//! the winning [`TunedProfile`], which later default-config requests
+//! auto-apply (opt out per request via
+//! [`SolveRequest::no_profile`](SolveRequest::no_profile); observe via
+//! `ServiceStats::profile_hits`).
+//!
 //! The lower layers (plans, sessions, kernels) remain public for research
 //! scripts and the reproduction benches; the service is the shape the
 //! ROADMAP's serving story ("a few matrices, many right-hand sides, many
@@ -29,5 +37,6 @@ mod service;
 
 pub use crate::config::{QueueConfig, SolverConfig, SolverConfigBuilder};
 pub use crate::error::{HbmcError, Result};
+pub use crate::tune::{HardwareSignature, ProfileStore, TuneOptions, TunedProfile};
 pub use job::{JobHandle, JobState};
 pub use service::{MatrixHandle, ServiceStats, SolveRequest, SolverService};

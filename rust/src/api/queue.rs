@@ -280,6 +280,10 @@ fn run_batch(queue: &JobQueue, core: &ServiceCore, batch: Vec<QueuedJob>) {
         }
     };
     queue.batches.fetch_add(1, AtomicOrdering::Relaxed);
+    // Remembered for poisoned-batch recovery below: `first` is consumed by
+    // the solve loop, but its plan key must outlive it so the cache entry
+    // can be evicted after a panic.
+    let plan_key = PlanKey::from_fingerprint(first.reg.fingerprint, &first.cfg);
     let session = catch_unwind(AssertUnwindSafe(|| {
         core.plan_for(&first.reg, &first.cfg)
             .map(|plan| SolveSession::for_request(plan, &first.cfg))
@@ -349,6 +353,14 @@ fn run_batch(queue: &JobQueue, core: &ServiceCore, batch: Vec<QueuedJob>) {
                 )));
             }
         }
+        // Evict the batch's plan: the panic fired inside kernels reading
+        // this plan's data, so treat the cached Arc as suspect. The next
+        // request for the same PlanKey rebuilds from the matrix (through
+        // the per-key build gate) rather than re-checking out a plan a
+        // dying worker may have been traversing — closing the residual
+        // gap documented above where only the *session* was abandoned
+        // while the plan stayed cached and servable.
+        core.evict_plan(&plan_key);
         if session.pool().nthreads() > 1 {
             std::mem::forget(session);
         }

@@ -19,6 +19,7 @@
 //! thread is joined.
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::thread::JoinHandle;
@@ -30,6 +31,7 @@ use crate::coordinator::session::{CacheStats, PlanCache, PlanKey, SolveOutput, S
 use crate::error::{HbmcError, Result};
 use crate::solver::plan::SolverPlan;
 use crate::sparse::csr::Csr;
+use crate::tune::{tune_matrix, HardwareSignature, ProfileStore, TuneOptions, TunedProfile};
 
 use super::job::{JobCore, JobHandle};
 use super::queue::{dispatcher_loop, BatchKey, JobQueue, QueuedJob};
@@ -84,6 +86,11 @@ pub struct SolveRequest {
     /// when the dispatcher reaches the job: an expired job never runs; a
     /// job that started before expiry always finishes.
     pub deadline: Option<Duration>,
+    /// Opt out of automatic tuned-profile application for this request
+    /// (see [`SolverService::tune`]): solve under the service default even
+    /// when a profile is installed for the matrix. Irrelevant when
+    /// `config` is set — an explicit override always wins.
+    pub skip_profile: bool,
 }
 
 impl SolveRequest {
@@ -134,6 +141,13 @@ impl SolveRequest {
         self.deadline = Some(budget);
         self
     }
+
+    /// Solve under the service default even when a tuned profile is
+    /// installed for the matrix (per-request opt-out of auto-application).
+    pub fn no_profile(mut self) -> SolveRequest {
+        self.skip_profile = true;
+        self
+    }
 }
 
 /// Point-in-time service counters: registry size, plan-cache counters,
@@ -167,6 +181,15 @@ pub struct ServiceStats {
     /// `solves`; the legacy loop pays ~3 per CG iteration. (Solves on
     /// queue-bypass `session()` handles are not counted.)
     pub dispatches: u64,
+    /// Tuned profiles currently installed (via [`SolverService::tune`],
+    /// [`install_profile`](SolverService::install_profile) or an attached
+    /// store).
+    pub profiles: usize,
+    /// Requests that ran under an auto-applied tuned profile (no explicit
+    /// config override, profile present, not opted out).
+    pub profile_hits: u64,
+    /// [`SolverService::tune`] runs completed on this service.
+    pub tunes: u64,
 }
 
 impl ServiceStats {
@@ -199,8 +222,17 @@ pub(crate) fn mlock<T>(l: &Mutex<T>) -> MutexGuard<'_, T> {
 /// thread: registry, plan cache + build gates, and the statistics counters.
 pub(crate) struct ServiceCore {
     default_cfg: SolverConfig,
+    /// The host this service runs on — the hardware half of every profile
+    /// key (detected once at construction).
+    hardware: HardwareSignature,
     matrices: RwLock<HashMap<u64, Registered>>,
     cache: RwLock<PlanCache>,
+    /// Installed tuned profiles by matrix fingerprint. Only profiles
+    /// matching `hardware` are ever admitted, so the fingerprint alone
+    /// keys this map.
+    profiles: RwLock<HashMap<u64, TunedProfile>>,
+    /// Store file `tune` persists into (set by `attach_profile_store`).
+    profile_store: Mutex<Option<PathBuf>>,
     /// Per-key build gates: the map lock is held only to look up/insert a
     /// gate; the gate itself is held for the duration of one plan build.
     building: Mutex<HashMap<PlanKey, Arc<Mutex<()>>>>,
@@ -214,6 +246,8 @@ pub(crate) struct ServiceCore {
     coalesced: AtomicU64,
     solves: AtomicU64,
     dispatches: AtomicU64,
+    profile_hits: AtomicU64,
+    tunes: AtomicU64,
 }
 
 impl ServiceCore {
@@ -222,6 +256,14 @@ impl ServiceCore {
             .get(&handle.0)
             .cloned()
             .ok_or_else(|| HbmcError::UnknownMatrix(format!("handle #{}", handle.0)))
+    }
+
+    /// The tuned config for a matrix, if a profile is installed: the
+    /// profile's structural choice overlaid on the service default (the
+    /// default's convergence contract is preserved — see
+    /// `TunedProfile::apply_to`).
+    fn tuned_config(&self, fingerprint: u64) -> Option<SolverConfig> {
+        rlock(&self.profiles).get(&fingerprint).map(|p| p.apply_to(&self.default_cfg))
     }
 
     /// Get-or-build with single-build coalescing (see `plan` on the
@@ -279,6 +321,16 @@ impl ServiceCore {
         self.solves.fetch_add(1, AtomicOrdering::Relaxed);
     }
 
+    /// Drop a plan from the cache outright (poisoned-batch recovery: a
+    /// solver panic implicates the plan a worker was reading when it
+    /// died). The next request for this `PlanKey` rebuilds from the
+    /// matrix instead of re-checking out a suspect plan; the per-key
+    /// build gate still guarantees the rebuild happens exactly once under
+    /// concurrency.
+    pub(crate) fn evict_plan(&self, key: &PlanKey) -> bool {
+        wlock(&self.cache).remove(key).is_some()
+    }
+
     /// Accumulate a completed solve's pool-dispatch count.
     pub(crate) fn note_dispatches(&self, n: u64) {
         self.dispatches.fetch_add(n, AtomicOrdering::Relaxed);
@@ -319,13 +371,18 @@ impl SolverService {
         let queue_cfg = default_cfg.queue;
         let core = Arc::new(ServiceCore {
             default_cfg,
+            hardware: HardwareSignature::detect(),
             matrices: RwLock::new(HashMap::new()),
             cache: RwLock::new(PlanCache::new(capacity)),
+            profiles: RwLock::new(HashMap::new()),
+            profile_store: Mutex::new(None),
             building: Mutex::new(HashMap::new()),
             builds: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
             solves: AtomicU64::new(0),
             dispatches: AtomicU64::new(0),
+            profile_hits: AtomicU64::new(0),
+            tunes: AtomicU64::new(0),
         });
         let queue = Arc::new(JobQueue::new(queue_cfg));
         let dispatcher = {
@@ -409,13 +466,33 @@ impl SolverService {
         req: &SolveRequest,
     ) -> Result<JobHandle> {
         let reg = self.core.registered(handle)?;
-        let cfg = req.config.as_ref().unwrap_or(&self.core.default_cfg);
+        let (cfg, from_profile) = self.effective_config(&reg, req);
         cfg.validate()?;
         let n = reg.matrix.n();
         if rhs.len() != n {
             return Err(HbmcError::DimensionMismatch { expected: n, got: rhs.len() });
         }
-        Ok(self.enqueue(&reg, cfg, rhs, req))
+        if from_profile {
+            self.core.profile_hits.fetch_add(1, AtomicOrdering::Relaxed);
+        }
+        Ok(self.enqueue(&reg, &cfg, rhs, req))
+    }
+
+    /// The configuration a request solves under: explicit override >
+    /// auto-applied tuned profile (unless the request opted out) >
+    /// service default. The boolean reports a profile application
+    /// (`ServiceStats::profile_hits`). `SolverConfig` is a small all-`Copy`
+    /// struct, so the clone is cheaper than the registry lookup before it.
+    fn effective_config(&self, reg: &Registered, req: &SolveRequest) -> (SolverConfig, bool) {
+        if let Some(cfg) = &req.config {
+            return (cfg.clone(), false);
+        }
+        if !req.skip_profile {
+            if let Some(cfg) = self.core.tuned_config(reg.fingerprint) {
+                return (cfg, true);
+            }
+        }
+        (self.core.default_cfg.clone(), false)
     }
 
     /// Infallible enqueue for inputs already validated by the caller
@@ -492,7 +569,7 @@ impl SolverService {
             return Ok(Vec::new());
         }
         let reg = self.core.registered(handle)?;
-        let cfg = req.config.as_ref().unwrap_or(&self.core.default_cfg);
+        let (cfg, from_profile) = self.effective_config(&reg, req);
         cfg.validate()?;
         let n = reg.matrix.n();
         // Reject every malformed rhs up front — a batch must not enqueue
@@ -504,8 +581,11 @@ impl SolverService {
             }
         }
         // Everything is validated; enqueue without re-checking per rhs.
+        if from_profile {
+            self.core.profile_hits.fetch_add(rhss.len() as u64, AtomicOrdering::Relaxed);
+        }
         let jobs: Vec<JobHandle> =
-            rhss.iter().map(|b| self.enqueue(&reg, cfg, b.as_ref(), req)).collect();
+            rhss.iter().map(|b| self.enqueue(&reg, &cfg, b.as_ref(), req)).collect();
         let mut outs = Vec::with_capacity(jobs.len());
         let mut jobs = jobs.into_iter();
         while let Some(job) = jobs.next() {
@@ -526,6 +606,109 @@ impl SolverService {
         Ok(outs)
     }
 
+    /// The hardware signature this service detected at construction — the
+    /// machine half of every profile key it will accept.
+    pub fn hardware(&self) -> HardwareSignature {
+        self.core.hardware
+    }
+
+    /// Search the valid configuration space for the registered matrix on
+    /// this machine (see [`crate::tune`]), install the winning
+    /// [`TunedProfile`] so subsequent default-config requests auto-apply
+    /// it, and persist it to the attached store (if any;
+    /// [`attach_profile_store`](SolverService::attach_profile_store)).
+    ///
+    /// The search solves against the deterministic representative
+    /// right-hand side `A·1` — tuning measures kernel shape, which is
+    /// rhs-independent. The incumbent (the service default config) always
+    /// competes in the final round, so the returned profile's score is
+    /// never worse than the default's on the same measurements.
+    ///
+    /// Runs synchronously on the caller's thread (it is a measurement, not
+    /// a job — riding the queue would let production traffic perturb the
+    /// timings and vice versa). Expect seconds of wall time for real
+    /// matrices; tune at deploy/registration time, not per request.
+    pub fn tune(&self, handle: MatrixHandle, opts: &TuneOptions) -> Result<TunedProfile> {
+        let reg = self.core.registered(handle)?;
+        let n = reg.matrix.n();
+        let ones = vec![1.0; n];
+        let mut b = vec![0.0; n];
+        reg.matrix.mul_vec(&ones, &mut b);
+        let outcome = tune_matrix(&reg.matrix, &b, &self.core.default_cfg, opts)?;
+        let profile = outcome.profile;
+        // Every fallible step runs before any state change, so an Err
+        // return means "nothing happened" — no half-applied tune where the
+        // in-memory profile is live but the store write failed (or vice
+        // versa).
+        if profile.hardware != self.core.hardware {
+            // tune_matrix detects the hardware at measurement time; if it
+            // no longer matches the signature this service was built under
+            // (e.g. a cgroup CPU-quota change moved available_parallelism),
+            // the profile is keyed to a machine this service will never
+            // match — installing nothing and returning Ok would make
+            // tuning look active while profile_hits stays 0 forever.
+            return Err(HbmcError::Internal(format!(
+                "hardware signature changed during tuning ({} -> {}); profile not installed",
+                self.core.hardware, profile.hardware
+            )));
+        }
+        profile.apply_to(&self.core.default_cfg).validate()?;
+        // The mutex is held across the whole open → put → save
+        // read-modify-write: two concurrent tune() calls (different
+        // matrices, same store) must not interleave and lose each other's
+        // profile on disk. Tuning is rare and already seconds-long, so
+        // serializing the file update is free.
+        let store_guard = mlock(&self.core.profile_store);
+        if let Some(path) = store_guard.as_ref() {
+            let mut store = ProfileStore::open(path)?;
+            store.put(profile.clone());
+            store.save()?;
+        }
+        drop(store_guard);
+        wlock(&self.core.profiles).insert(profile.fingerprint, profile.clone());
+        self.core.tunes.fetch_add(1, AtomicOrdering::Relaxed);
+        Ok(profile)
+    }
+
+    /// Install a tuned profile for auto-application. Returns `Ok(false)`
+    /// (not installed) when the profile was tuned on different hardware —
+    /// the paper's cross-machine result is exactly that such a transplant
+    /// mis-tunes — and [`HbmcError::InvalidConfig`] when the profile's
+    /// structural choice does not validate against the service default.
+    pub fn install_profile(&self, profile: TunedProfile) -> Result<bool> {
+        if profile.hardware != self.core.hardware {
+            return Ok(false);
+        }
+        profile.apply_to(&self.core.default_cfg).validate()?;
+        wlock(&self.core.profiles).insert(profile.fingerprint, profile);
+        Ok(true)
+    }
+
+    /// Bind a [`ProfileStore`] file to this service: load it now
+    /// (installing every profile that matches this machine and validates;
+    /// others are skipped) and persist future [`tune`](SolverService::tune)
+    /// results into it. Returns the number of profiles installed. A
+    /// missing file is an empty store; a corrupt one is
+    /// [`HbmcError::Parse`].
+    pub fn attach_profile_store(&self, path: impl AsRef<Path>) -> Result<usize> {
+        let path = path.as_ref();
+        let store = ProfileStore::open(path)?;
+        *mlock(&self.core.profile_store) = Some(path.to_path_buf());
+        let mut installed = 0;
+        for profile in store.iter() {
+            if self.install_profile(profile.clone()).unwrap_or(false) {
+                installed += 1;
+            }
+        }
+        Ok(installed)
+    }
+
+    /// The installed profile for a registered matrix, if any.
+    pub fn profile(&self, handle: MatrixHandle) -> Result<Option<TunedProfile>> {
+        let reg = self.core.registered(handle)?;
+        Ok(rlock(&self.core.profiles).get(&reg.fingerprint).cloned())
+    }
+
     /// Counters: registry size, cache hits/misses/evictions, coalesced
     /// builds, solves served, and the queue's batching statistics.
     pub fn stats(&self) -> ServiceStats {
@@ -540,6 +723,9 @@ impl SolverService {
             batched_rhs: self.queue.batched_rhs(),
             coalesced_rhs: self.queue.coalesced_rhs(),
             dispatches: self.core.dispatches.load(AtomicOrdering::Relaxed),
+            profiles: rlock(&self.core.profiles).len(),
+            profile_hits: self.core.profile_hits.load(AtomicOrdering::Relaxed),
+            tunes: self.core.tunes.load(AtomicOrdering::Relaxed),
         }
     }
 }
@@ -691,6 +877,83 @@ mod tests {
         // Without the flag the same request is an Ok non-converged report.
         let out = svc.solve_with(h, &d.b, &SolveRequest::new().max_iters(2)).unwrap();
         assert!(!out.report.converged);
+    }
+
+    #[test]
+    fn tuned_profile_auto_applies_and_can_be_opted_out() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let svc = SolverService::with_config(tiny_cfg(OrderingKind::Hbmc)).unwrap();
+        let h = svc.register_matrix(d.matrix.clone());
+        // Hand-install a profile (tuning itself is covered in tests/tune.rs):
+        // same hardware, different structural choice than the default.
+        let profile = TunedProfile {
+            fingerprint: d.matrix.fingerprint(),
+            hardware: svc.hardware(),
+            ordering: OrderingKind::Bmc,
+            bs: 8,
+            w: 4,
+            spmv: crate::config::SpmvKind::Crs,
+            sell_sigma: None,
+            threads: 1,
+            use_intrinsics: true,
+            solve_seconds: 1e-3,
+            setup_seconds: 1e-2,
+            iterations: 10,
+            baseline_solve_seconds: 2e-3,
+            created_unix: 0,
+        };
+        assert!(svc.install_profile(profile.clone()).unwrap());
+        assert_eq!(svc.profile(h).unwrap().unwrap().ordering, OrderingKind::Bmc);
+        // Default-config solve runs under the profile...
+        let out = svc.solve(h, &d.b).unwrap();
+        assert!(out.report.converged);
+        let label = out.report.plan.config_label;
+        assert!(label.starts_with("BMC"), "{label}");
+        let s = svc.stats();
+        assert_eq!((s.profiles, s.profile_hits), (1, 1));
+        // ...opting out runs the service default (a different plan)...
+        let raw = svc.solve_with(h, &d.b, &SolveRequest::new().no_profile()).unwrap();
+        let label = raw.report.plan.config_label;
+        assert!(label.starts_with("HBMC"), "{label}");
+        assert_eq!(svc.stats().profile_hits, 1, "opt-out must not count a hit");
+        // ...and an explicit override beats the profile without a hit.
+        let req = SolveRequest::new().with_config(tiny_cfg(OrderingKind::Mc));
+        let over = svc.solve_with(h, &d.b, &req).unwrap();
+        let label = over.report.plan.config_label;
+        assert!(label.starts_with("MC"), "{label}");
+        assert_eq!(svc.stats().profile_hits, 1);
+    }
+
+    #[test]
+    fn foreign_hardware_profile_is_rejected_not_installed() {
+        use crate::tune::SimdLevel;
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let svc = SolverService::with_config(tiny_cfg(OrderingKind::Hbmc)).unwrap();
+        let h = svc.register_matrix(d.matrix.clone());
+        let mut hw = svc.hardware();
+        hw.cores += 1; // a different machine
+        hw.simd = SimdLevel::Scalar;
+        let foreign = TunedProfile {
+            fingerprint: d.matrix.fingerprint(),
+            hardware: hw,
+            ordering: OrderingKind::Bmc,
+            bs: 8,
+            w: 4,
+            spmv: crate::config::SpmvKind::Crs,
+            sell_sigma: None,
+            threads: 1,
+            use_intrinsics: false,
+            solve_seconds: 1e-3,
+            setup_seconds: 1e-2,
+            iterations: 10,
+            baseline_solve_seconds: 2e-3,
+            created_unix: 0,
+        };
+        assert!(!svc.install_profile(foreign).unwrap(), "cross-machine profiles must not install");
+        assert_eq!(svc.stats().profiles, 0);
+        let out = svc.solve(h, &d.b).unwrap();
+        assert!(out.report.plan.config_label.starts_with("HBMC"));
+        assert_eq!(svc.stats().profile_hits, 0);
     }
 
     #[test]

@@ -14,7 +14,8 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const SWITCHES: [&str; 5] = ["history", "verbose", "no-intrinsics", "help", "setup-only"];
+const SWITCHES: [&str; 7] =
+    ["history", "verbose", "no-intrinsics", "help", "setup-only", "auto", "quick"];
 
 impl Args {
     /// Parse from an iterator of arguments (program name excluded).
@@ -90,6 +91,17 @@ mod tests {
         let a = parse("solve --dataset ieej --repeat 8 --setup-only").unwrap();
         assert!(a.switch("setup-only"));
         assert_eq!(a.usize_flag("repeat", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn tune_and_auto_switches() {
+        let a = parse("tune --dataset g3_circuit --quick --store profiles.json").unwrap();
+        assert_eq!(a.command, "tune");
+        assert!(a.switch("quick"));
+        assert_eq!(a.flag("store"), Some("profiles.json"));
+        let a = parse("solve --dataset ieej --auto").unwrap();
+        assert!(a.switch("auto"));
+        assert!(!a.switch("quick"));
     }
 
     #[test]

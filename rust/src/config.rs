@@ -308,10 +308,24 @@ impl SolverConfig {
             return Err(HbmcError::invalid_config("rtol must be > 0"));
         }
         if let Some(sigma) = self.sell_sigma {
-            if sigma < self.w || sigma % self.w != 0 {
+            if sigma == 0 {
                 return Err(HbmcError::invalid_config(
-                    "sell_sigma must be a positive multiple of w",
+                    "sell_sigma = Some(0) is not a sorting window; use None for unsorted SELL-w",
                 ));
+            }
+            if sigma < self.w {
+                return Err(HbmcError::invalid_config(format!(
+                    "sell_sigma window ({sigma}) is smaller than the slice height w ({}): \
+                     a window must cover at least one slice",
+                    self.w
+                )));
+            }
+            if sigma % self.w != 0 {
+                return Err(HbmcError::invalid_config(format!(
+                    "sell_sigma must be a multiple of w, got sigma={sigma} w={}: sorting \
+                     windows are built from whole w-row slices",
+                    self.w
+                )));
             }
         }
         if self.queue.max_batch == 0 {
@@ -536,6 +550,30 @@ mod tests {
         assert!(cfg.validate().is_err());
         let cfg = SolverConfig { sell_sigma: Some(8), w: 4, ..Default::default() };
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn builder_rejects_zero_and_subslice_sigma_with_typed_errors() {
+        // Some(0) is rejected explicitly (it is not "unsorted"; that's None).
+        let err = SolverConfig::builder().w(4).sell_sigma(Some(0)).build().unwrap_err();
+        assert!(matches!(err, HbmcError::InvalidConfig(_)), "{err:?}");
+        assert!(err.to_string().contains("Some(0)"), "{err}");
+        // A window smaller than the slice height cannot cover one slice.
+        let err = SolverConfig::builder()
+            .ordering(OrderingKind::Bmc)
+            .w(8)
+            .sell_sigma(Some(4))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, HbmcError::InvalidConfig(_)), "{err:?}");
+        assert!(err.to_string().contains("smaller than the slice height"), "{err}");
+        // Non-multiple windows name both offending values.
+        let err = SolverConfig::builder().w(8).bs(32).sell_sigma(Some(12)).build().unwrap_err();
+        assert!(err.to_string().contains("sigma=12"), "{err}");
+        assert!(err.to_string().contains("w=8"), "{err}");
+        // The boundary case (window == one slice) is valid.
+        let cfg = SolverConfig::builder().w(8).bs(32).sell_sigma(Some(8)).build().unwrap();
+        assert_eq!(cfg.sell_sigma, Some(8));
     }
 
     #[test]

@@ -95,6 +95,24 @@ pub fn syncs_per_fused_iteration(num_colors: usize, sell_spmv: bool) -> usize {
     2 * num_colors.saturating_sub(1) + 6 + usize::from(sell_spmv)
 }
 
+/// Cost model the autotuner scores candidates with: the effective seconds
+/// per solve when one plan build is amortized over `expected_reuse`
+/// solves. `expected_reuse = ∞` scores pure steady-state serving (only
+/// time/solve matters — the ROADMAP's "few matrices, many right-hand
+/// sides" shape); `expected_reuse = 1` scores a one-shot workload where
+/// setup dominates. Non-finite or sub-1 reuse is clamped to the two
+/// regimes' boundaries.
+pub fn amortized_seconds_per_solve(
+    setup_seconds: f64,
+    solve_seconds: f64,
+    expected_reuse: f64,
+) -> f64 {
+    if !expected_reuse.is_finite() {
+        return solve_seconds;
+    }
+    solve_seconds + setup_seconds / expected_reuse.max(1.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +165,17 @@ mod tests {
         assert_eq!(syncs_per_fused_iteration(1, true), 7);
         // 4 colors: 2·3 color barriers + 6 phase barriers.
         assert_eq!(syncs_per_fused_iteration(4, false), 12);
+    }
+
+    #[test]
+    fn amortized_score_spans_both_regimes() {
+        // One-shot: the whole setup is billed to the single solve.
+        assert_eq!(amortized_seconds_per_solve(10.0, 1.0, 1.0), 11.0);
+        // Heavy reuse: setup nearly vanishes.
+        assert!((amortized_seconds_per_solve(10.0, 1.0, 1000.0) - 1.01).abs() < 1e-12);
+        // Pure serving: setup ignored entirely.
+        assert_eq!(amortized_seconds_per_solve(10.0, 1.0, f64::INFINITY), 1.0);
+        // Degenerate reuse clamps to the one-shot regime.
+        assert_eq!(amortized_seconds_per_solve(10.0, 1.0, 0.0), 11.0);
     }
 }

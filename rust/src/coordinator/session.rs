@@ -254,6 +254,17 @@ impl PlanCache {
         self.entries.insert(key, CacheEntry { plan, last_used: self.tick });
     }
 
+    /// Remove a key outright, returning the evicted plan if it was
+    /// present (counted as an eviction — forced removals are part of the
+    /// cache's churn accounting). Used by the service dispatcher to drop
+    /// a plan implicated in a worker panic, so the next request for the
+    /// same key rebuilds instead of touching suspect state.
+    pub fn remove(&mut self, key: &PlanKey) -> Option<Arc<SolverPlan>> {
+        let entry = self.entries.remove(key)?;
+        self.evictions += 1;
+        Some(entry.plan)
+    }
+
     /// Fetch the plan for `(a, cfg)`, building (and possibly evicting the
     /// least-recently-used entry) on miss. Returns `(plan, was_hit)`.
     pub fn get_or_build(&mut self, a: &Csr, cfg: &SolverConfig) -> Result<(Arc<SolverPlan>, bool)> {
@@ -380,6 +391,22 @@ mod tests {
         assert_eq!(cache.evictions(), 1);
         let (_, hbmc_again) = cache.get_or_build(&d.matrix, &hb).unwrap();
         assert!(!hbmc_again, "evicted entry must rebuild");
+    }
+
+    #[test]
+    fn remove_forces_rebuild_and_counts_eviction() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let mut cache = PlanCache::new(4);
+        let cfg = tiny_cfg(OrderingKind::Hbmc);
+        let key = PlanKey::new(&d.matrix, &cfg);
+        let (built, _) = cache.get_or_build(&d.matrix, &cfg).unwrap();
+        let removed = cache.remove(&key).expect("plan was cached");
+        assert!(Arc::ptr_eq(&built, &removed));
+        assert_eq!(cache.evictions(), 1, "forced removal is an eviction");
+        assert_eq!(cache.len(), 0);
+        assert!(cache.remove(&key).is_none(), "double remove is a no-op");
+        let (_, hit) = cache.get_or_build(&d.matrix, &cfg).unwrap();
+        assert!(!hit, "a removed key must rebuild, not hit");
     }
 
     #[test]

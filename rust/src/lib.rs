@@ -77,6 +77,36 @@
 //! # Ok::<(), HbmcError>(())
 //! ```
 //!
+//! ## Autotuning: stop guessing `bs`/`w`/threads
+//!
+//! The paper's best `(ordering, bs, w, spmv)` differs per machine; the
+//! [`tune`] subsystem measures instead of guessing and persists the
+//! winner per (matrix fingerprint, hardware signature):
+//!
+//! ```no_run
+//! use hbmc::prelude::*;
+//! # let service = SolverService::new();
+//! # let dataset = hbmc::gen::suite::dataset("g3_circuit", Scale::Tiny);
+//! # let handle = service.register_matrix(dataset.matrix);
+//! // Search the valid config space for this matrix on this machine,
+//! // install the winner, and persist it to the attached store.
+//! service.attach_profile_store("hbmc_profiles.json")?;
+//! let profile = service.tune(handle, &TuneOptions::default())?;
+//! println!("tuned: {} ({:.2}x vs default)", profile.label(), profile.speedup());
+//!
+//! // From now on (and in any later process that attaches the store),
+//! // requests without an explicit config override run the tuned config —
+//! // visible as ServiceStats::profile_hits. Opt out per request:
+//! let out = service.solve(handle, &dataset.b)?;                // tuned
+//! let raw = service.solve_with(handle, &dataset.b,
+//!                              &SolveRequest::new().no_profile())?; // default
+//! # let _ = (out, raw);
+//! # Ok::<(), HbmcError>(())
+//! ```
+//!
+//! On the command line: `hbmc tune --dataset g3_circuit` then
+//! `hbmc solve --dataset g3_circuit --auto`.
+//!
 //! ## Two-phase architecture (plan / execute)
 //!
 //! The paper's premise is that the expensive reordering + IC(0)
@@ -112,6 +142,9 @@
 //!   SELL SpMV, the PCG loop, `SolverPlan` and the `IccgSolver` wrapper,
 //! * [`coordinator`] — color-barrier thread pool, sessions + plan cache,
 //!   metrics and paper-style reporting,
+//! * [`tune`] — the autotuner: config-space enumeration, measured search
+//!   (exhaustive / successive halving), and the persisted per-(matrix,
+//!   hardware) profile store the service auto-applies,
 //! * [`runtime`] — PJRT executor for the AOT JAX/Pallas artifacts
 //!   (`pjrt` cargo feature; stubbed offline).
 
@@ -126,6 +159,7 @@ pub mod ordering;
 pub mod runtime;
 pub mod solver;
 pub mod sparse;
+pub mod tune;
 pub mod util;
 
 /// Convenient re-exports for downstream users.
@@ -145,4 +179,7 @@ pub mod prelude {
     pub use crate::solver::plan::{SetupStats, SolverPlan};
     pub use crate::solver::trisolve::TriSolver;
     pub use crate::sparse::csr::Csr;
+    pub use crate::tune::{
+        ConfigSpace, HardwareSignature, ProfileStore, TuneOptions, TunedProfile,
+    };
 }

@@ -26,6 +26,9 @@ use hbmc::config::{NodePreset, OrderingKind, Scale, SolverConfig, SpmvKind};
 use hbmc::coordinator::driver::SolveOptions;
 use hbmc::coordinator::experiments;
 use hbmc::gen::suite;
+use hbmc::tune::{
+    tune_matrix, ConfigSpace, HardwareSignature, ProfileStore, TuneOptions, TuneStrategy,
+};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -64,6 +67,7 @@ fn cfg_from(args: &Args, shift: f64) -> Result<SolverConfig> {
 fn run(args: Args) -> Result<()> {
     match args.command.as_str() {
         "solve" => cmd_solve(&args),
+        "tune" => cmd_tune(&args),
         "serve" => cmd_serve(&args),
         "table" => cmd_table(&args),
         "convergence" => cmd_convergence(&args),
@@ -90,6 +94,14 @@ COMMANDS
                [--shift X] [--node knl|bdw|skx] [--history] [--no-intrinsics]
                [--repeat N] [--setup-only]   (plan built once, N solves on one session)
                [--batch N]                   (submit N async jobs, micro-batched dispatch)
+               [--auto] [--store <path>]     (apply the stored tuned profile for this
+                                              matrix + machine, if one exists)
+  tune         --dataset <name> [--scale S] [--store <path>] [--trials N] [--warmup N]
+               [--reuse X] [--strategy auto|exhaustive|racing] [--max-candidates N]
+               [--quick]
+               (search ordering/bs/w/spmv/threads for this matrix on this
+                machine, persist the winner; --quick = CI-sized space and
+                a BENCH_tune.json perf artifact)
   serve        --dataset <name> [--scale S] [--clients M] [--requests K]
                [--max-batch B] [--max-wait-us U] [--deadline-ms D]
                (async stress: M client threads submit K jobs each; prints
@@ -109,7 +121,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let name = args.flag_or("dataset", "g3_circuit");
     let repeat = args.usize_flag("repeat", 1)?.max(1);
     let d = suite::try_dataset(&name, scale)?;
-    let cfg = cfg_from(args, d.shift)?;
+    let mut cfg = cfg_from(args, d.shift)?;
     println!(
         "dataset={} n={} nnz={} ({:.1}/row) scale={scale}",
         d.name,
@@ -117,6 +129,33 @@ fn cmd_solve(args: &Args) -> Result<()> {
         d.nnz(),
         d.nnz_per_row(),
     );
+
+    // --auto: overlay the stored tuned profile for (matrix, machine), if
+    // one exists; otherwise run the flags as given and say so.
+    if args.switch("auto") {
+        let store_path = args
+            .flag("store")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(ProfileStore::default_path);
+        let store = ProfileStore::open(&store_path)?;
+        match store.lookup(&d.matrix) {
+            Some(profile) => {
+                cfg = profile.apply_to(&cfg);
+                println!(
+                    "auto: applying tuned profile {} from {} ({:.2}x vs default when tuned)",
+                    profile.label(),
+                    store_path.display(),
+                    profile.speedup()
+                );
+            }
+            None => println!(
+                "auto: no profile for this matrix on {} in {} (run `hbmc tune` first); \
+                 using the given flags",
+                HardwareSignature::detect(),
+                store_path.display()
+            ),
+        }
+    }
 
     // The typed façade: one service, one registered matrix, one session.
     // Phase 1 (plan build) happens inside `session`; phase 2 below.
@@ -223,6 +262,126 @@ fn cmd_solve(args: &Args) -> Result<()> {
     }
     let err = out.x.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
     println!("max |x - 1| = {err:.3e} (rhs was A·1)");
+    Ok(())
+}
+
+/// Search the valid configuration space for one suite matrix on this
+/// machine, print the scoreboard, persist the winner to the profile store,
+/// and verify end-to-end that a fresh service auto-applies it. `--quick`
+/// shrinks the space to CI size and writes the `BENCH_tune.json`
+/// perf-trajectory artifact.
+fn cmd_tune(args: &Args) -> Result<()> {
+    // Same default scale as `solve`: the documented tune-then-solve-auto
+    // flow must key both commands to the same matrix fingerprint.
+    let scale: Scale = args.flag_or("scale", "small").parse()?;
+    let name = args.flag_or("dataset", "g3_circuit");
+    let quick = args.switch("quick");
+    let d = suite::try_dataset(&name, scale)?;
+    let cfg = cfg_from(args, d.shift)?;
+    let hw = HardwareSignature::detect();
+
+    let mut opts = if quick { TuneOptions::quick() } else { TuneOptions::default() };
+    opts.trials = args.usize_flag("trials", opts.trials)?;
+    opts.warmup = args.usize_flag("warmup", opts.warmup)?;
+    opts.expected_reuse = args.f64_flag("reuse", opts.expected_reuse)?;
+    opts.max_candidates = args.usize_flag("max-candidates", opts.max_candidates)?;
+    if let Some(s) = args.flag("strategy") {
+        opts.strategy = s.parse::<TuneStrategy>()?;
+    }
+    if opts.space.is_none() {
+        opts.space = Some(ConfigSpace::for_hardware(&hw));
+    }
+    println!(
+        "tune: dataset={} n={} nnz={} scale={scale} hardware={hw} strategy={} \
+         trials={} reuse={}",
+        d.name,
+        d.n(),
+        d.nnz(),
+        opts.strategy,
+        opts.trials,
+        opts.expected_reuse
+    );
+
+    let t0 = Instant::now();
+    let out = tune_matrix(&d.matrix, &d.b, &cfg, &opts)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "searched {} candidates in {wall:.2}s ({} abandoned early, {} failed{}); \
+         finalists:",
+        out.candidates,
+        out.abandoned,
+        out.failed,
+        if out.truncated > 0 {
+            format!(", {} beyond --max-candidates NOT searched", out.truncated)
+        } else {
+            String::new()
+        }
+    );
+    for m in &out.finalists {
+        let is_default = m.cfg.label() == out.baseline.cfg.label()
+            && m.cfg.threads == out.baseline.cfg.threads;
+        println!(
+            "  {:<28} solve {:.6}s  setup {:.3}s  iters {:<5} score {:.6}s{}",
+            m.label(),
+            m.solve_seconds,
+            m.setup_seconds,
+            m.iterations,
+            m.score(opts.expected_reuse),
+            if is_default { "  <- default" } else { "" }
+        );
+    }
+    let p = &out.profile;
+    println!(
+        "winner: {}  ({:.6}s/solve vs default {:.6}s/solve = {:.2}x)",
+        p.label(),
+        p.solve_seconds,
+        p.baseline_solve_seconds,
+        p.speedup()
+    );
+
+    // Persist + end-to-end check: a fresh service attached to the store
+    // must auto-apply the profile on a default-config solve.
+    let store_path = args
+        .flag("store")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(ProfileStore::default_path);
+    let mut store = ProfileStore::open(&store_path)?;
+    store.put(p.clone());
+    store.save()?;
+    println!("stored profile in {}", store_path.display());
+    let service = SolverService::with_config(cfg.clone())?;
+    let installed = service.attach_profile_store(&store_path)?;
+    let handle = service.register_matrix(d.matrix.clone());
+    let check = service.solve(handle, &d.b)?;
+    let st = service.stats();
+    println!(
+        "auto-apply check: {installed} profile(s) loaded, solve ran {} in {:.6}s, \
+         profile_hits={}",
+        check.report.plan.config_label, check.report.solve_seconds, st.profile_hits
+    );
+
+    if quick {
+        let path = hbmc::util::bench_artifact_path("BENCH_tune.json");
+        let json = format!(
+            "{{\n  \"bench\": \"tune-quick\",\n  \"dataset\": \"{}\",\n  \"hardware\": \"{hw}\",\n  \
+             \"candidates\": {},\n  \"default_config\": \"{}\",\n  \
+             \"default_solve_seconds\": {:.6e},\n  \"tuned_config\": \"{}\",\n  \
+             \"tuned_solve_seconds\": {:.6e},\n  \"speedup\": {:.4},\n  \
+             \"tuned_iterations\": {},\n  \"profile_hits_after_reload\": {}\n}}\n",
+            d.name,
+            out.candidates,
+            out.baseline.cfg.label(),
+            p.baseline_solve_seconds,
+            p.label(),
+            p.solve_seconds,
+            p.speedup(),
+            p.iterations,
+            st.profile_hits,
+        );
+        std::fs::write(&path, &json)
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }
 

@@ -1,0 +1,236 @@
+//! Timed evaluation of one candidate configuration.
+//!
+//! Each measurement is an honest plan/solve split: the plan is built once
+//! (its setup seconds recorded separately — Table 5.3 protocol), then the
+//! right-hand side is solved through a real [`SolveSession`] on the fused
+//! single-dispatch path — the exact code the `SolverService` dispatcher
+//! runs in production, so tuned numbers transfer. Warmup solves populate
+//! caches and branch predictors before the timed trials; the reported
+//! time is the **median** trial (robust to one scheduler hiccup, unlike
+//! min or mean).
+//!
+//! Early abandonment: when an incumbent time is supplied, a candidate
+//! whose very first timed solve is already `abandon_factor ×` slower is
+//! cut off mid-measurement — the racing tuner spends its budget on
+//! contenders, not on confirming losers to three decimal places.
+
+use std::sync::Arc;
+
+use crate::config::SolverConfig;
+use crate::coordinator::metrics::amortized_seconds_per_solve;
+use crate::coordinator::session::SolveSession;
+use crate::error::Result;
+use crate::solver::plan::SolverPlan;
+use crate::sparse::csr::Csr;
+
+/// Trial-loop controls (one candidate's measurement budget).
+#[derive(Debug, Clone, Copy)]
+pub struct MeasureOptions {
+    /// Untimed solves before the trials (cache/branch warmup).
+    pub warmup: usize,
+    /// Timed solves; the reported time is their median. Clamped to ≥ 1.
+    pub trials: usize,
+    /// A trial exceeding `abandon_factor ×` the incumbent's time aborts
+    /// the remaining trials (see module docs); clamped to ≥ 1 so a
+    /// candidate can never be abandoned for merely matching the
+    /// incumbent. The incumbent itself is measured without a threshold.
+    pub abandon_factor: f64,
+}
+
+impl Default for MeasureOptions {
+    fn default() -> Self {
+        MeasureOptions { warmup: 1, trials: 3, abandon_factor: 3.0 }
+    }
+}
+
+/// One candidate's measured behaviour.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub cfg: SolverConfig,
+    /// One-time plan-build seconds (ordering + factorization + storage).
+    pub setup_seconds: f64,
+    /// Median iteration-loop seconds across completed trials.
+    pub solve_seconds: f64,
+    /// CG iterations of the measured solve.
+    pub iterations: usize,
+    pub converged: bool,
+    /// Final relative residual of the measured solve (diagnostics for the
+    /// non-converged case).
+    pub final_relres: f64,
+    /// Timed trials actually completed (< requested when abandoned).
+    pub trials_run: usize,
+    /// True when the measurement was cut off against the incumbent.
+    pub abandoned: bool,
+}
+
+impl Measurement {
+    /// The tuner's objective: amortized seconds per solve under the given
+    /// reuse expectation (`∞` ⇒ pure time/solve). Non-converging
+    /// configurations score `+∞` — a fast loop that never finishes is not
+    /// a candidate.
+    pub fn score(&self, expected_reuse: f64) -> f64 {
+        if !self.converged {
+            return f64::INFINITY;
+        }
+        amortized_seconds_per_solve(self.setup_seconds, self.solve_seconds, expected_reuse)
+    }
+
+    /// Display label of the measured configuration.
+    pub fn label(&self) -> String {
+        format!("{} x{}", self.cfg.label(), self.cfg.threads)
+    }
+}
+
+/// Measure `cfg` on `(a, b)`: build the plan, open a session, run
+/// warmup + timed trials on the fused path. `incumbent_solve` enables
+/// early abandonment (see [`MeasureOptions::abandon_factor`]).
+///
+/// Errors propagate only from the plan build (e.g. a factorization
+/// breakdown under this configuration) or a solver error — an *abandoned*
+/// measurement is still `Ok`, flagged via [`Measurement::abandoned`].
+pub fn measure(
+    a: &Csr,
+    b: &[f64],
+    cfg: &SolverConfig,
+    opts: &MeasureOptions,
+    incumbent_solve: Option<f64>,
+) -> Result<Measurement> {
+    let plan = Arc::new(SolverPlan::build(a, cfg)?);
+    measure_plan(&plan, b, opts, incumbent_solve)
+}
+
+/// [`measure`] on an **already-built** plan — the racing tuner re-times
+/// survivors across rounds without re-paying ordering + factorization
+/// (setup typically dwarfs one solve). The configuration, including the
+/// reported [`Measurement::setup_seconds`], comes from the plan itself.
+pub fn measure_plan(
+    plan: &Arc<SolverPlan>,
+    b: &[f64],
+    opts: &MeasureOptions,
+    incumbent_solve: Option<f64>,
+) -> Result<Measurement> {
+    let cfg = plan.cfg.clone();
+    let setup_seconds = plan.setup.setup_seconds();
+    let session = SolveSession::for_request(Arc::clone(plan), &cfg);
+    let threshold = incumbent_solve
+        .filter(|t| t.is_finite() && *t > 0.0)
+        .map(|t| t * opts.abandon_factor.max(1.0));
+
+    let mut times = Vec::with_capacity(opts.trials.max(1));
+    let mut iterations = 0;
+    let mut converged = false;
+    let mut final_relres = f64::INFINITY;
+    let mut abandoned = false;
+
+    for _ in 0..opts.warmup {
+        let out = session.solve(b)?;
+        iterations = out.report.iterations;
+        converged = out.report.converged;
+        final_relres = out.report.final_relres;
+        if threshold.is_some_and(|t| out.report.solve_seconds > t) {
+            // Already hopeless during warmup: record the observed time so
+            // the scoreboard stays total-ordered, and stop here.
+            return Ok(Measurement {
+                cfg,
+                setup_seconds,
+                solve_seconds: out.report.solve_seconds,
+                iterations,
+                converged,
+                final_relres,
+                trials_run: 0,
+                abandoned: true,
+            });
+        }
+    }
+    for _ in 0..opts.trials.max(1) {
+        let out = session.solve(b)?;
+        iterations = out.report.iterations;
+        converged = out.report.converged;
+        final_relres = out.report.final_relres;
+        times.push(out.report.solve_seconds);
+        if threshold.is_some_and(|t| out.report.solve_seconds > t) {
+            abandoned = true;
+            break;
+        }
+    }
+    let trials_run = times.len();
+    Ok(Measurement {
+        cfg,
+        setup_seconds,
+        solve_seconds: median(&mut times),
+        iterations,
+        converged,
+        final_relres,
+        trials_run,
+        abandoned,
+    })
+}
+
+/// Median of a non-empty sample (lower middle for even sizes — trial
+/// counts are tiny and a deterministic pick beats interpolation noise).
+fn median(xs: &mut [f64]) -> f64 {
+    debug_assert!(!xs.is_empty());
+    xs.sort_by(|p, q| p.total_cmp(q));
+    xs[(xs.len() - 1) / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{OrderingKind, Scale};
+    use crate::gen::suite;
+
+    fn tiny_cfg(ordering: OrderingKind) -> SolverConfig {
+        SolverConfig { ordering, bs: 8, w: 4, rtol: 1e-7, ..Default::default() }
+    }
+
+    #[test]
+    fn median_is_deterministic() {
+        assert_eq!(median(&mut [3.0]), 3.0);
+        assert_eq!(median(&mut [5.0, 1.0, 3.0]), 3.0);
+        assert_eq!(median(&mut [4.0, 1.0, 3.0, 2.0]), 2.0, "lower middle for even");
+    }
+
+    #[test]
+    fn measure_produces_complete_record() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let cfg = tiny_cfg(OrderingKind::Hbmc);
+        let m = measure(
+            &d.matrix,
+            &d.b,
+            &cfg,
+            &MeasureOptions { warmup: 1, trials: 3, abandon_factor: 3.0 },
+            None,
+        )
+        .unwrap();
+        assert!(m.converged);
+        assert!(m.iterations > 0);
+        assert!(m.setup_seconds > 0.0);
+        assert!(m.solve_seconds > 0.0);
+        assert!(m.final_relres < 1e-6, "converged relres must be recorded: {}", m.final_relres);
+        assert_eq!(m.trials_run, 3);
+        assert!(!m.abandoned);
+        assert!(m.score(f64::INFINITY) == m.solve_seconds);
+        assert!(m.score(1.0) > m.solve_seconds, "one-shot score must include setup");
+    }
+
+    #[test]
+    fn hopeless_incumbent_threshold_abandons() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let cfg = tiny_cfg(OrderingKind::Bmc);
+        // An absurdly fast incumbent (1 ns) forces abandonment immediately.
+        let m = measure(&d.matrix, &d.b, &cfg, &MeasureOptions::default(), Some(1e-9)).unwrap();
+        assert!(m.abandoned);
+        assert!(m.trials_run <= 1);
+        assert!(m.solve_seconds > 0.0, "abandoned runs still carry their observed time");
+    }
+
+    #[test]
+    fn non_converging_config_scores_infinite() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let cfg = SolverConfig { max_iters: 2, ..tiny_cfg(OrderingKind::Hbmc) };
+        let m = measure(&d.matrix, &d.b, &cfg, &MeasureOptions::default(), None).unwrap();
+        assert!(!m.converged);
+        assert_eq!(m.score(100.0), f64::INFINITY);
+    }
+}

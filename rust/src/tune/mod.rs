@@ -1,0 +1,43 @@
+//! Autotuning: per-matrix, per-hardware configuration search with a
+//! persisted profile store.
+//!
+//! The paper's headline numbers depend on picking the right ordering
+//! parameters *per machine* — it sweeps `bs ∈ {8, 16, 32}` and matches
+//! `w` to the SIMD width, and the winner differs across its three node
+//! types (Table 4.1). This subsystem replaces "the operator guesses well"
+//! with a measured search:
+//!
+//! * [`space`] — enumerates the valid configuration grid (ordering × `bs`
+//!   × `w` × SpMV storage × σ × threads), honouring the HBMC
+//!   `bs % w == 0` constraint and the machine's core count, and
+//!   collapsing axes that cannot reach a kernel;
+//! * [`measure`] — warmup + median timed trials through a real
+//!   [`SolveSession`](crate::coordinator::session::SolveSession) on the
+//!   fused single-dispatch path, with setup time, iterations and
+//!   time/solve recorded separately so reuse-heavy and one-shot workloads
+//!   score differently;
+//! * [`tuner`] — exhaustive grid for small spaces, successive
+//!   halving/racing with early abandonment against the incumbent for
+//!   large ones; the incumbent always competes in the final round, so
+//!   applying a profile can never regress the caller;
+//! * [`profile`] — [`TunedProfile`]s persisted in a versioned JSON store
+//!   keyed by ([`Csr::fingerprint`](crate::sparse::csr::Csr::fingerprint),
+//!   [`HardwareSignature`] = detected SIMD level + core count).
+//!
+//! End-to-end, the `SolverService` wires this in as
+//! [`tune`](crate::api::SolverService::tune) (search + install + persist)
+//! and auto-applies a stored profile to any request that does not carry
+//! an explicit config override (opt out per request with
+//! [`SolveRequest::no_profile`](crate::api::SolveRequest::no_profile));
+//! profile applications are visible as `ServiceStats::profile_hits`. The
+//! CLI exposes `hbmc tune` and `hbmc solve --auto`.
+
+pub mod measure;
+pub mod profile;
+pub mod space;
+pub mod tuner;
+
+pub use measure::{measure, measure_plan, MeasureOptions, Measurement};
+pub use profile::{HardwareSignature, ProfileKey, ProfileStore, SimdLevel, TunedProfile};
+pub use space::ConfigSpace;
+pub use tuner::{tune_matrix, TuneOptions, TuneOutcome, TuneStrategy};

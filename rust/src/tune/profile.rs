@@ -1,0 +1,525 @@
+//! The persisted autotuning product: [`TunedProfile`] (the winning
+//! structural configuration plus the measurements that justified it) and
+//! [`ProfileStore`], a versioned JSON file of profiles keyed by
+//! ([`Csr::fingerprint`](crate::sparse::csr::Csr::fingerprint),
+//! [`HardwareSignature`]).
+//!
+//! The key design mirrors the paper's cross-machine result: the best
+//! `(ordering, bs, w, spmv, threads)` differs between its three node types,
+//! so a profile tuned on one machine must never be applied on another —
+//! the hardware signature (detected SIMD level + core count) is part of
+//! the lookup key, not advisory metadata.
+//!
+//! Durability contract (exercised by `tests/tune.rs`):
+//!
+//! * a **missing** store file is an empty store (first run),
+//! * a **corrupt or truncated** file surfaces [`HbmcError::Parse`] —
+//!   never a panic, never silently-empty (the caller decides whether to
+//!   overwrite),
+//! * a well-formed file with a **stale `schema_version`** is *ignored*
+//!   (empty store): old profiles are measurements under a scheme we no
+//!   longer understand, and re-tuning is cheap relative to serving with a
+//!   misread config,
+//! * [`save`](ProfileStore::save) writes atomically (temp file + rename)
+//!   so a crashed writer cannot leave a half-written store behind.
+//!
+//! The 64-bit matrix fingerprint is serialized as a hex *string* — JSON
+//! numbers are IEEE doubles and silently lose bits above 2^53.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+
+use crate::config::{OrderingKind, SolverConfig, SpmvKind};
+use crate::error::{HbmcError, Result};
+use crate::util::json::{json_string, Json};
+
+/// Store-file schema version; bump on any incompatible field change.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// SIMD capability level of the host, the axis the paper's three machines
+/// differ on (AVX2 → w = 4, AVX-512 → w = 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SimdLevel {
+    Scalar,
+    Avx2,
+    Avx512,
+}
+
+impl SimdLevel {
+    /// Runtime detection (cached by the intrinsics, cheap to call).
+    pub fn detect() -> SimdLevel {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        {
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                return SimdLevel::Avx512;
+            }
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return SimdLevel::Avx2;
+            }
+        }
+        SimdLevel::Scalar
+    }
+
+    /// The natural HBMC/SELL width for this level (doubles per vector
+    /// register; scalar hosts still benefit from short blocked widths).
+    pub fn natural_w(&self) -> usize {
+        match self {
+            SimdLevel::Scalar => 4,
+            SimdLevel::Avx2 => 4,
+            SimdLevel::Avx512 => 8,
+        }
+    }
+}
+
+impl FromStr for SimdLevel {
+    type Err = HbmcError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Ok(SimdLevel::Scalar),
+            "avx2" => Ok(SimdLevel::Avx2),
+            "avx512" => Ok(SimdLevel::Avx512),
+            other => Err(HbmcError::parse(format!(
+                "unknown SIMD level {other:?} (scalar|avx2|avx512)"
+            ))),
+        }
+    }
+}
+
+impl fmt::Display for SimdLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Avx512 => "avx512",
+        })
+    }
+}
+
+/// The part of the profile key that describes the machine: detected SIMD
+/// level and logical core count. Two hosts with the same signature are
+/// treated as interchangeable for tuning purposes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct HardwareSignature {
+    pub simd: SimdLevel,
+    pub cores: usize,
+}
+
+impl HardwareSignature {
+    /// Detect the current host (SIMD features + available parallelism).
+    pub fn detect() -> HardwareSignature {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        HardwareSignature { simd: SimdLevel::detect(), cores }
+    }
+}
+
+impl fmt::Display for HardwareSignature {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}", self.simd, self.cores)
+    }
+}
+
+/// Lookup key of one profile: which matrix, on which machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ProfileKey {
+    pub fingerprint: u64,
+    pub hardware: HardwareSignature,
+}
+
+/// The persisted product of one [`tune`](crate::tune::tune_matrix) run:
+/// the winning structural configuration plus the measurements behind it.
+/// Convergence controls (rtol / max_iters / shift) are deliberately *not*
+/// stored — tuning picks the fast shape, never the accuracy contract; they
+/// are taken from the config the profile is applied onto
+/// ([`apply_to`](TunedProfile::apply_to)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedProfile {
+    pub fingerprint: u64,
+    pub hardware: HardwareSignature,
+    // --- winning structural configuration --------------------------------
+    pub ordering: OrderingKind,
+    pub bs: usize,
+    pub w: usize,
+    pub spmv: SpmvKind,
+    pub sell_sigma: Option<usize>,
+    pub threads: usize,
+    pub use_intrinsics: bool,
+    // --- evidence --------------------------------------------------------
+    /// Median iteration-loop seconds per solve under the winning config.
+    pub solve_seconds: f64,
+    /// One-time plan-build seconds under the winning config.
+    pub setup_seconds: f64,
+    /// CG iterations of the measured solve (config-dependent: orderings
+    /// trade iteration count against per-iteration speed).
+    pub iterations: usize,
+    /// Median seconds per solve under the *default* config the search
+    /// started from — the denominator of [`speedup`](TunedProfile::speedup).
+    pub baseline_solve_seconds: f64,
+    /// Unix seconds when the profile was produced (0 if clock unavailable).
+    pub created_unix: u64,
+}
+
+impl TunedProfile {
+    pub fn key(&self) -> ProfileKey {
+        ProfileKey { fingerprint: self.fingerprint, hardware: self.hardware }
+    }
+
+    /// Overlay the tuned structural choice onto `base`, keeping `base`'s
+    /// convergence controls (rtol, max_iters, shift) and service-level
+    /// queue tuning untouched.
+    pub fn apply_to(&self, base: &SolverConfig) -> SolverConfig {
+        SolverConfig {
+            ordering: self.ordering,
+            bs: self.bs,
+            w: self.w,
+            spmv: self.spmv,
+            sell_sigma: self.sell_sigma,
+            threads: self.threads,
+            use_intrinsics: self.use_intrinsics,
+            ..base.clone()
+        }
+    }
+
+    /// Label of the tuned configuration, e.g. `HBMC(bs=16,w=8,sell) x4`.
+    pub fn label(&self) -> String {
+        format!("{}(bs={},w={},{}) x{}", self.ordering, self.bs, self.w, self.spmv, self.threads)
+    }
+
+    /// Measured baseline-over-tuned time ratio (> 1 means the profile is
+    /// faster than the default configuration).
+    pub fn speedup(&self) -> f64 {
+        if self.solve_seconds > 0.0 {
+            self.baseline_solve_seconds / self.solve_seconds
+        } else {
+            1.0
+        }
+    }
+
+    /// One profile as a JSON object (fragment of the store document).
+    pub fn to_json(&self) -> String {
+        let sigma = match self.sell_sigma {
+            Some(s) => s.to_string(),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"fingerprint\": {}, \"simd\": {}, \"cores\": {}, \
+             \"ordering\": {}, \"bs\": {}, \"w\": {}, \"spmv\": {}, \
+             \"sell_sigma\": {sigma}, \"threads\": {}, \"use_intrinsics\": {}, \
+             \"solve_seconds\": {}, \"setup_seconds\": {}, \"iterations\": {}, \
+             \"baseline_solve_seconds\": {}, \"created_unix\": {}}}",
+            json_string(&format!("{:#018x}", self.fingerprint)),
+            json_string(&self.simd_str()),
+            self.hardware.cores,
+            json_string(&self.ordering.to_string().to_ascii_lowercase()),
+            self.bs,
+            self.w,
+            json_string(&self.spmv.to_string()),
+            self.threads,
+            self.use_intrinsics,
+            self.solve_seconds,
+            self.setup_seconds,
+            self.iterations,
+            self.baseline_solve_seconds,
+            self.created_unix,
+        )
+    }
+
+    fn simd_str(&self) -> String {
+        self.hardware.simd.to_string()
+    }
+
+    /// Parse one profile object; any missing/ill-typed member is
+    /// [`HbmcError::Parse`].
+    pub fn from_json(j: &Json) -> Result<TunedProfile> {
+        fn field<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+            j.get(key)
+                .ok_or_else(|| HbmcError::parse(format!("profile: missing field {key:?}")))
+        }
+        fn num(j: &Json, key: &str) -> Result<f64> {
+            field(j, key)?
+                .as_f64()
+                .ok_or_else(|| HbmcError::parse(format!("profile: field {key:?} is not a number")))
+        }
+        fn uint(j: &Json, key: &str) -> Result<usize> {
+            field(j, key)?.as_usize().ok_or_else(|| {
+                HbmcError::parse(format!("profile: field {key:?} is not a non-negative integer"))
+            })
+        }
+        fn text<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+            field(j, key)?
+                .as_str()
+                .ok_or_else(|| HbmcError::parse(format!("profile: field {key:?} is not a string")))
+        }
+        let fp_text = text(j, "fingerprint")?;
+        let fp_hex = fp_text
+            .strip_prefix("0x")
+            .ok_or_else(|| HbmcError::parse("profile: fingerprint must be a 0x-hex string"))?;
+        let fingerprint = u64::from_str_radix(fp_hex, 16)
+            .map_err(|_| HbmcError::parse(format!("profile: bad fingerprint {fp_text:?}")))?;
+        let sigma_field = field(j, "sell_sigma")?;
+        let sell_sigma = if sigma_field.is_null() {
+            None
+        } else {
+            Some(sigma_field.as_usize().ok_or_else(|| {
+                HbmcError::parse("profile: sell_sigma must be null or a non-negative integer")
+            })?)
+        };
+        let created = num(j, "created_unix")?;
+        Ok(TunedProfile {
+            fingerprint,
+            hardware: HardwareSignature {
+                simd: text(j, "simd")?.parse()?,
+                cores: uint(j, "cores")?,
+            },
+            ordering: text(j, "ordering")?.parse()?,
+            bs: uint(j, "bs")?,
+            w: uint(j, "w")?,
+            spmv: text(j, "spmv")?.parse()?,
+            sell_sigma,
+            threads: uint(j, "threads")?,
+            use_intrinsics: field(j, "use_intrinsics")?
+                .as_bool()
+                .ok_or_else(|| HbmcError::parse("profile: use_intrinsics must be a boolean"))?,
+            solve_seconds: num(j, "solve_seconds")?,
+            setup_seconds: num(j, "setup_seconds")?,
+            iterations: uint(j, "iterations")?,
+            baseline_solve_seconds: num(j, "baseline_solve_seconds")?,
+            created_unix: if created >= 0.0 { created as u64 } else { 0 },
+        })
+    }
+}
+
+/// Versioned on-disk store of [`TunedProfile`]s; see module docs for the
+/// durability contract. One entry per [`ProfileKey`]
+/// ([`put`](ProfileStore::put) replaces).
+#[derive(Debug, Clone)]
+pub struct ProfileStore {
+    path: Option<PathBuf>,
+    profiles: Vec<TunedProfile>,
+}
+
+impl ProfileStore {
+    /// An empty, path-less store (never persisted until
+    /// [`save_to`](ProfileStore::save_to)).
+    pub fn in_memory() -> ProfileStore {
+        ProfileStore { path: None, profiles: Vec::new() }
+    }
+
+    /// The store location used when none is given explicitly: the
+    /// `HBMC_PROFILE_STORE` environment variable, else
+    /// `hbmc_profiles.json` in the current directory.
+    pub fn default_path() -> PathBuf {
+        std::env::var_os("HBMC_PROFILE_STORE")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("hbmc_profiles.json"))
+    }
+
+    /// Open a store file. Missing file ⇒ empty store bound to `path`;
+    /// malformed content ⇒ [`HbmcError::Parse`]; well-formed but stale
+    /// `schema_version` ⇒ empty store (profiles under an old schema are
+    /// dropped; the next `save` rewrites the file at [`SCHEMA_VERSION`]).
+    pub fn open(path: impl AsRef<Path>) -> Result<ProfileStore> {
+        let path = path.as_ref();
+        let text = match std::fs::read_to_string(path) {
+            Ok(text) => text,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(ProfileStore { path: Some(path.to_path_buf()), profiles: Vec::new() })
+            }
+            Err(e) => return Err(HbmcError::io(format!("reading {}", path.display()), e)),
+        };
+        let profiles = Self::parse_document(&text)?;
+        Ok(ProfileStore { path: Some(path.to_path_buf()), profiles })
+    }
+
+    /// Parse a store document; `Ok(vec![])` for a stale schema version.
+    pub fn parse_document(text: &str) -> Result<Vec<TunedProfile>> {
+        let doc = Json::parse(text)?;
+        let version = doc
+            .get("schema_version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| HbmcError::parse("profile store: missing schema_version"))?;
+        if version != SCHEMA_VERSION {
+            // Stale (or future) schema: not corrupt, just unusable —
+            // ignore and let the caller re-tune/rewrite.
+            return Ok(Vec::new());
+        }
+        let entries = doc
+            .get("profiles")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| HbmcError::parse("profile store: missing profiles array"))?;
+        entries.iter().map(TunedProfile::from_json).collect()
+    }
+
+    /// Number of profiles held.
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    /// The path this store loads from / saves to, if bound to one.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TunedProfile> {
+        self.profiles.iter()
+    }
+
+    /// The profile for `(matrix, machine)`, if one is stored.
+    pub fn get(&self, key: &ProfileKey) -> Option<&TunedProfile> {
+        self.profiles.iter().find(|p| p.key() == *key)
+    }
+
+    /// The profile for `matrix` on *this* machine (fingerprint + detected
+    /// [`HardwareSignature`]) — the one-call lookup every consumer of a
+    /// store file wants (CLI `solve --auto`, benches via `HBMC_PROFILE`).
+    pub fn lookup(&self, matrix: &crate::sparse::csr::Csr) -> Option<&TunedProfile> {
+        self.get(&ProfileKey {
+            fingerprint: matrix.fingerprint(),
+            hardware: HardwareSignature::detect(),
+        })
+    }
+
+    /// Insert a profile, replacing any entry with the same key.
+    pub fn put(&mut self, profile: TunedProfile) {
+        let key = profile.key();
+        self.profiles.retain(|p| p.key() != key);
+        self.profiles.push(profile);
+    }
+
+    /// The whole store as a JSON document.
+    pub fn to_json_text(&self) -> String {
+        let body: Vec<String> =
+            self.profiles.iter().map(|p| format!("    {}", p.to_json())).collect();
+        format!(
+            "{{\n  \"schema_version\": {SCHEMA_VERSION},\n  \"profiles\": [\n{}\n  ]\n}}\n",
+            body.join(",\n")
+        )
+    }
+
+    /// Persist to the bound path ([`open`](ProfileStore::open)'s argument).
+    pub fn save(&self) -> Result<()> {
+        match &self.path {
+            Some(path) => self.save_to(path.clone()),
+            None => Err(HbmcError::invalid_config(
+                "profile store has no path; use save_to or open it from a file",
+            )),
+        }
+    }
+
+    /// Persist to `path` atomically (temp file in the same directory +
+    /// rename), so readers never observe a truncated store.
+    pub fn save_to(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json_text())
+            .map_err(|e| HbmcError::io(format!("writing {}", tmp.display()), e))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| HbmcError::io(format!("renaming {} into place", tmp.display()), e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(fp: u64) -> TunedProfile {
+        TunedProfile {
+            fingerprint: fp,
+            hardware: HardwareSignature { simd: SimdLevel::Avx2, cores: 4 },
+            ordering: OrderingKind::Hbmc,
+            bs: 16,
+            w: 4,
+            spmv: SpmvKind::Sell,
+            sell_sigma: Some(64),
+            threads: 2,
+            use_intrinsics: true,
+            solve_seconds: 1.25e-3,
+            setup_seconds: 4.0e-2,
+            iterations: 137,
+            baseline_solve_seconds: 2.5e-3,
+            created_unix: 1_753_000_000,
+        }
+    }
+
+    #[test]
+    fn profile_json_round_trips() {
+        let p = sample(0xdead_beef_cafe_f00d);
+        let j = Json::parse(&p.to_json()).unwrap();
+        assert_eq!(TunedProfile::from_json(&j).unwrap(), p);
+    }
+
+    #[test]
+    fn fingerprint_survives_above_2_pow_53() {
+        // A JSON number would lose these low bits; the hex string must not.
+        let p = sample(u64::MAX - 1);
+        let j = Json::parse(&p.to_json()).unwrap();
+        assert_eq!(TunedProfile::from_json(&j).unwrap().fingerprint, u64::MAX - 1);
+    }
+
+    #[test]
+    fn store_document_round_trips_and_replaces_on_put() {
+        let mut store = ProfileStore::in_memory();
+        store.put(sample(1));
+        store.put(sample(2));
+        let mut newer = sample(1);
+        newer.bs = 32;
+        store.put(newer.clone());
+        assert_eq!(store.len(), 2, "same key must replace, not append");
+        let parsed = ProfileStore::parse_document(&store.to_json_text()).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert!(parsed.contains(&newer));
+    }
+
+    #[test]
+    fn stale_schema_is_ignored_not_an_error() {
+        let text = "{\"schema_version\": 999, \"profiles\": [{\"garbage\": true}]}";
+        assert_eq!(ProfileStore::parse_document(text).unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn corrupt_documents_are_parse_errors() {
+        for bad in [
+            "",
+            "{",
+            "[1, 2]",
+            "{\"profiles\": []}",                          // missing version
+            "{\"schema_version\": 1}",                     // missing profiles
+            "{\"schema_version\": 1, \"profiles\": [{}]}", // empty profile
+        ] {
+            let err = ProfileStore::parse_document(bad).unwrap_err();
+            assert!(matches!(err, HbmcError::Parse(_)), "{bad:?} -> {err:?}");
+        }
+    }
+
+    #[test]
+    fn apply_to_keeps_convergence_contract() {
+        let p = sample(7);
+        let base = SolverConfig { rtol: 1e-11, max_iters: 123, shift: 0.3, ..Default::default() };
+        let cfg = p.apply_to(&base);
+        assert_eq!(cfg.ordering, OrderingKind::Hbmc);
+        assert_eq!((cfg.bs, cfg.w, cfg.threads), (16, 4, 2));
+        assert_eq!(cfg.sell_sigma, Some(64));
+        assert_eq!(cfg.rtol, 1e-11, "tuning must not change the accuracy contract");
+        assert_eq!(cfg.max_iters, 123);
+        assert_eq!(cfg.shift, 0.3);
+    }
+
+    #[test]
+    fn speedup_is_baseline_over_tuned() {
+        let p = sample(3);
+        assert!((p.speedup() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn simd_level_round_trips() {
+        for lvl in [SimdLevel::Scalar, SimdLevel::Avx2, SimdLevel::Avx512] {
+            assert_eq!(lvl.to_string().parse::<SimdLevel>().unwrap(), lvl);
+        }
+        assert!(matches!("sse9".parse::<SimdLevel>(), Err(HbmcError::Parse(_))));
+    }
+}

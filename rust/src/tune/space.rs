@@ -1,0 +1,319 @@
+//! Enumeration of the valid configuration space the tuner searches.
+//!
+//! Axes follow the paper's sweep: ordering (MC / BMC / HBMC), block size
+//! `bs ∈ {8, 16, 32}` (§5), SIMD width `w` (matched to the machine's
+//! vector registers — the cross-machine axis of Table 4.1), SpMV storage
+//! (CRS vs SELL, §5.2.2) with optional SELL-C-σ windows, and thread count
+//! up to the detected core count. Every candidate passes
+//! [`SolverConfig::validate`], so the HBMC `bs % w == 0` constraint and
+//! the SELL σ window rules are honoured by construction.
+//!
+//! Enumeration **canonicalizes irrelevant axes** before deduplication:
+//! `bs` does not reach the kernels under Natural/MC ordering, `w` is
+//! meaningless for a CRS-SpMV non-HBMC plan, and σ only exists for SELL —
+//! leaving those axes free would multiply the measurement budget by
+//! configurations that share a `PlanKey`-equivalent execution without
+//! adding information.
+
+use std::collections::HashSet;
+
+use crate::config::{OrderingKind, SolverConfig, SpmvKind};
+use crate::tune::profile::HardwareSignature;
+
+/// The grid of candidate axes; see module docs. Construct via
+/// [`ConfigSpace::for_hardware`] / [`ConfigSpace::quick`] or as a struct
+/// literal for custom sweeps.
+#[derive(Debug, Clone)]
+pub struct ConfigSpace {
+    pub orderings: Vec<OrderingKind>,
+    /// BMC/HBMC block sizes (the paper sweeps 8, 16, 32).
+    pub block_sizes: Vec<usize>,
+    /// SIMD widths / SELL slice heights.
+    pub widths: Vec<usize>,
+    pub spmvs: Vec<SpmvKind>,
+    /// SELL-C-σ windows in units of `w` slices (`None` = unsorted SELL-w;
+    /// `Some(k)` ⇒ σ = k·w, automatically a valid multiple of every `w`).
+    pub sigma_slices: Vec<Option<usize>>,
+    /// Pool widths to race (each must be ≥ 1).
+    pub threads: Vec<usize>,
+}
+
+impl ConfigSpace {
+    /// The full per-machine search space: the paper's `bs` sweep, widths
+    /// compatible with the detected SIMD level, both SpMV storages, one
+    /// σ-sorted SELL variant, and power-of-two thread counts up to the
+    /// core count.
+    pub fn for_hardware(hw: &HardwareSignature) -> ConfigSpace {
+        let mut widths = vec![4];
+        if hw.simd.natural_w() == 8 || hw.cores >= 4 {
+            widths.push(8);
+        }
+        ConfigSpace {
+            orderings: vec![OrderingKind::Mc, OrderingKind::Bmc, OrderingKind::Hbmc],
+            block_sizes: vec![8, 16, 32],
+            widths,
+            spmvs: vec![SpmvKind::Crs, SpmvKind::Sell],
+            sigma_slices: vec![None, Some(16)],
+            threads: thread_ladder(hw.cores),
+        }
+    }
+
+    /// A deliberately small space for smoke tests and `tune --quick`:
+    /// BMC vs HBMC at two block sizes, one width, both SpMV storages,
+    /// serial plus one multi-threaded width.
+    pub fn quick(hw: &HardwareSignature) -> ConfigSpace {
+        ConfigSpace {
+            orderings: vec![OrderingKind::Bmc, OrderingKind::Hbmc],
+            block_sizes: vec![8, 16],
+            widths: vec![4],
+            spmvs: vec![SpmvKind::Crs, SpmvKind::Sell],
+            sigma_slices: vec![None],
+            threads: if hw.cores >= 2 { vec![1, 2] } else { vec![1] },
+        }
+    }
+
+    /// Materialize the candidate list: `base` first (the incumbent the
+    /// racing strategy abandons against — and the guarantee that tuning
+    /// can never return something worse than the default), then every
+    /// distinct valid grid point, canonicalized and deduplicated.
+    pub fn enumerate(&self, base: &SolverConfig) -> Vec<SolverConfig> {
+        let mut seen: HashSet<CandidateKey> = HashSet::new();
+        let mut out = Vec::new();
+        // The incumbent is kept verbatim (the caller runs *this* config),
+        // but deduplicated under its *canonical* key so a behaviour-
+        // identical grid point (say MC + CRS, where bs/w are inert) is not
+        // measured a second time under a different label.
+        if base.validate().is_ok() {
+            let mut canon = base.clone();
+            canonicalize(&mut canon, self);
+            seen.insert(CandidateKey::of(&canon));
+            out.push(base.clone());
+        }
+        let mut push = |cfg: SolverConfig| {
+            if cfg.validate().is_ok() && seen.insert(CandidateKey::of(&cfg)) {
+                out.push(cfg);
+            }
+        };
+        for &ordering in &self.orderings {
+            for &bs in &self.block_sizes {
+                for &w in &self.widths {
+                    for &spmv in &self.spmvs {
+                        for &slices in &self.sigma_slices {
+                            for &threads in &self.threads {
+                                if threads == 0 {
+                                    continue;
+                                }
+                                let mut cfg = SolverConfig {
+                                    ordering,
+                                    bs,
+                                    w,
+                                    spmv,
+                                    sell_sigma: slices.map(|k| k * w),
+                                    threads,
+                                    ..base.clone()
+                                };
+                                canonicalize(&mut cfg, self);
+                                push(cfg);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of *distinct* candidates this space yields for `base`.
+    pub fn candidate_count(&self, base: &SolverConfig) -> usize {
+        self.enumerate(base).len()
+    }
+}
+
+/// Power-of-two thread counts up to `cores`, always ending in `cores`
+/// itself (e.g. 6 cores → `[1, 2, 4, 6]`).
+fn thread_ladder(cores: usize) -> Vec<usize> {
+    let cores = cores.max(1);
+    let mut out = vec![1];
+    let mut t = 2;
+    while t < cores {
+        out.push(t);
+        t *= 2;
+    }
+    if cores > 1 {
+        out.push(cores);
+    }
+    out
+}
+
+/// Map axes that cannot reach the kernels to fixed values so the dedup set
+/// collapses behaviour-identical grid points (see module docs).
+fn canonicalize(cfg: &mut SolverConfig, space: &ConfigSpace) {
+    let first_bs = space.block_sizes.first().copied().unwrap_or(cfg.bs);
+    let first_w = space.widths.first().copied().unwrap_or(cfg.w);
+    if cfg.spmv == SpmvKind::Crs {
+        // σ exists only for SELL storage.
+        cfg.sell_sigma = None;
+    }
+    match cfg.ordering {
+        OrderingKind::Natural | OrderingKind::Mc => {
+            // No blocking: bs is inert; w only matters as the SELL slice
+            // height.
+            cfg.bs = first_bs;
+            if cfg.spmv == SpmvKind::Crs {
+                cfg.w = first_w;
+            }
+        }
+        OrderingKind::Bmc => {
+            // bs is the blocking; w again only matters through SELL.
+            if cfg.spmv == SpmvKind::Crs {
+                cfg.w = first_w;
+            }
+        }
+        OrderingKind::Hbmc => {} // both bs and w shape the level-2 blocks
+    }
+}
+
+/// Dedup key over exactly the axes that matter post-canonicalization.
+#[derive(PartialEq, Eq, Hash)]
+struct CandidateKey {
+    ordering: OrderingKind,
+    bs: usize,
+    w: usize,
+    spmv: SpmvKind,
+    sell_sigma: Option<usize>,
+    threads: usize,
+    use_intrinsics: bool,
+}
+
+impl CandidateKey {
+    fn of(cfg: &SolverConfig) -> CandidateKey {
+        CandidateKey {
+            ordering: cfg.ordering,
+            bs: cfg.bs,
+            w: cfg.w,
+            spmv: cfg.spmv,
+            sell_sigma: cfg.sell_sigma,
+            threads: cfg.threads,
+            use_intrinsics: cfg.use_intrinsics,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tune::profile::SimdLevel;
+
+    fn hw(simd: SimdLevel, cores: usize) -> HardwareSignature {
+        HardwareSignature { simd, cores }
+    }
+
+    #[test]
+    fn enumerate_puts_base_first_and_validates_everything() {
+        let base = SolverConfig::default();
+        let space = ConfigSpace::for_hardware(&hw(SimdLevel::Avx2, 4));
+        let cands = space.enumerate(&base);
+        assert!(!cands.is_empty());
+        assert_eq!(cands[0].label(), base.label(), "incumbent must lead the list");
+        for c in &cands {
+            c.validate().expect("every enumerated candidate must be valid");
+        }
+    }
+
+    #[test]
+    fn hbmc_bs_multiple_of_w_is_honoured() {
+        let space = ConfigSpace {
+            orderings: vec![OrderingKind::Hbmc],
+            block_sizes: vec![8, 12],
+            widths: vec![8],
+            spmvs: vec![SpmvKind::Crs],
+            sigma_slices: vec![None],
+            threads: vec![1],
+        };
+        let cands = space.enumerate(&SolverConfig::default());
+        // bs=12 with w=8 violates bs % w == 0 and must be filtered out.
+        assert!(cands.iter().all(|c| c.ordering != OrderingKind::Hbmc || c.bs % c.w == 0));
+        assert!(cands.iter().any(|c| c.bs == 8));
+        assert!(!cands.iter().any(|c| c.bs == 12));
+    }
+
+    #[test]
+    fn irrelevant_axes_collapse() {
+        // MC ordering with CRS SpMV: neither bs nor w reaches a kernel, so
+        // the 3×2 (bs, w) sub-grid must collapse to one candidate.
+        let space = ConfigSpace {
+            orderings: vec![OrderingKind::Mc],
+            block_sizes: vec![8, 16, 32],
+            widths: vec![4, 8],
+            spmvs: vec![SpmvKind::Crs],
+            sigma_slices: vec![None, Some(16)],
+            threads: vec![1],
+        };
+        let base = SolverConfig {
+            ordering: OrderingKind::Mc,
+            bs: 8,
+            w: 4,
+            spmv: SpmvKind::Crs,
+            ..Default::default()
+        };
+        let cands = space.enumerate(&base);
+        assert_eq!(cands.len(), 1, "{:?}", cands.iter().map(|c| c.label()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sigma_windows_scale_with_w() {
+        let space = ConfigSpace {
+            orderings: vec![OrderingKind::Hbmc],
+            block_sizes: vec![16],
+            widths: vec![4, 8],
+            spmvs: vec![SpmvKind::Sell],
+            sigma_slices: vec![Some(16)],
+            threads: vec![1],
+        };
+        let cands = space.enumerate(&SolverConfig { bs: 16, w: 4, ..Default::default() });
+        for c in cands.iter().filter(|c| c.sell_sigma.is_some()) {
+            assert_eq!(c.sell_sigma.unwrap() % c.w, 0);
+            assert_eq!(c.sell_sigma.unwrap(), 16 * c.w);
+        }
+    }
+
+    #[test]
+    fn incumbent_dedups_under_its_canonical_key() {
+        // Base MC + CRS with inert bs=32/w=8: the grid's MC+CRS point
+        // canonicalizes to the same behaviour and must NOT be measured as
+        // a second candidate alongside the verbatim incumbent.
+        let space = ConfigSpace {
+            orderings: vec![OrderingKind::Mc],
+            block_sizes: vec![8],
+            widths: vec![4],
+            spmvs: vec![SpmvKind::Crs],
+            sigma_slices: vec![None],
+            threads: vec![1],
+        };
+        let base = SolverConfig {
+            ordering: OrderingKind::Mc,
+            bs: 32,
+            w: 8,
+            spmv: SpmvKind::Crs,
+            ..Default::default()
+        };
+        let cands = space.enumerate(&base);
+        assert_eq!(cands.len(), 1, "{:?}", cands.iter().map(|c| c.label()).collect::<Vec<_>>());
+        assert_eq!(cands[0].bs, 32, "the incumbent itself is kept verbatim");
+    }
+
+    #[test]
+    fn thread_ladder_covers_cores() {
+        assert_eq!(thread_ladder(1), vec![1]);
+        assert_eq!(thread_ladder(2), vec![1, 2]);
+        assert_eq!(thread_ladder(6), vec![1, 2, 4, 6]);
+        assert_eq!(thread_ladder(8), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn quick_space_is_small() {
+        let base = SolverConfig::default();
+        let n = ConfigSpace::quick(&hw(SimdLevel::Scalar, 2)).candidate_count(&base);
+        assert!(n <= 20, "quick space must stay CI-sized, got {n}");
+    }
+}

@@ -1,0 +1,482 @@
+//! The search driver: exhaustive grid for small spaces, successive
+//! halving ("racing") for large ones.
+//!
+//! Both strategies share the invariants that make tuning safe to apply
+//! blindly:
+//!
+//! * the **incumbent** (the configuration the caller already runs —
+//!   `base`) is measured first and carried into every later round, so the
+//!   winner's score can never exceed the incumbent's on the same
+//!   measurements — tuning is monotone: apply the profile, or keep what
+//!   you had, never regress;
+//! * candidates are **abandoned early** once a single solve shows them
+//!   `abandon_factor ×` behind the best time seen so far
+//!   ([`measure`](crate::tune::measure::measure)), so a wide grid costs
+//!   little more than its plausible region;
+//! * a candidate whose *plan build fails* (e.g. IC(0) breakdown under an
+//!   aggressive configuration) is skipped, not fatal — only the
+//!   incumbent's failure aborts the search.
+//!
+//! Successive halving: round 1 measures every candidate with one trial,
+//! then repeatedly keeps the better-scoring half with a doubled trial
+//! budget until at most [`TuneOptions::finalists`] remain; finalists get
+//! the full warmup + trials treatment and the best score wins.
+
+use std::sync::Arc;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::config::SolverConfig;
+use crate::error::{HbmcError, Result};
+use crate::solver::plan::SolverPlan;
+use crate::sparse::csr::Csr;
+use crate::tune::measure::{measure_plan, MeasureOptions, Measurement};
+use crate::tune::profile::{HardwareSignature, TunedProfile};
+use crate::tune::space::ConfigSpace;
+
+/// How the candidate list is searched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuneStrategy {
+    /// Exhaustive below [`TuneOptions::exhaustive_threshold`] candidates,
+    /// racing above.
+    Auto,
+    /// Full warmup + trials for every candidate.
+    Exhaustive,
+    /// Successive halving with early abandonment (see module docs).
+    Racing,
+}
+
+impl std::str::FromStr for TuneStrategy {
+    type Err = crate::error::HbmcError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(TuneStrategy::Auto),
+            "exhaustive" | "grid" => Ok(TuneStrategy::Exhaustive),
+            "racing" | "halving" => Ok(TuneStrategy::Racing),
+            other => Err(crate::error::HbmcError::parse(format!(
+                "unknown tune strategy {other:?} (auto|exhaustive|racing)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for TuneStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            TuneStrategy::Auto => "auto",
+            TuneStrategy::Exhaustive => "exhaustive",
+            TuneStrategy::Racing => "racing",
+        })
+    }
+}
+
+/// Search controls; the defaults suit a CI-sized matrix. For serving-only
+/// scoring set `expected_reuse = f64::INFINITY`.
+#[derive(Debug, Clone)]
+pub struct TuneOptions {
+    /// The candidate grid; `None` ⇒ [`ConfigSpace::for_hardware`] on the
+    /// detected machine.
+    pub space: Option<ConfigSpace>,
+    /// Untimed warmup solves per finalist measurement.
+    pub warmup: usize,
+    /// Timed trials per finalist measurement (median reported).
+    pub trials: usize,
+    /// Solves one plan build is expected to amortize over — the knob that
+    /// separates reuse-heavy serving (large / infinite) from one-shot
+    /// workloads (1).
+    pub expected_reuse: f64,
+    pub strategy: TuneStrategy,
+    /// `Auto` strategy switches to racing above this many candidates.
+    pub exhaustive_threshold: usize,
+    /// Racing keeps halving until at most this many candidates remain.
+    pub finalists: usize,
+    /// Early-abandonment multiplier vs the incumbent best time.
+    pub abandon_factor: f64,
+    /// Hard cap on the enumerated candidate list (incumbent always kept).
+    pub max_candidates: usize,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions {
+            space: None,
+            warmup: 1,
+            trials: 3,
+            expected_reuse: 100.0,
+            strategy: TuneStrategy::Auto,
+            exhaustive_threshold: 12,
+            finalists: 4,
+            abandon_factor: 3.0,
+            max_candidates: 96,
+        }
+    }
+}
+
+impl TuneOptions {
+    /// CI-sized options: the [`ConfigSpace::quick`] grid, two trials, one
+    /// warmup.
+    pub fn quick() -> TuneOptions {
+        let hw = HardwareSignature::detect();
+        TuneOptions {
+            space: Some(ConfigSpace::quick(&hw)),
+            warmup: 1,
+            trials: 2,
+            ..Default::default()
+        }
+    }
+}
+
+/// Everything a tune run learned: the persistable profile plus the full
+/// scoreboard for reporting.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    /// The winner, packaged for the [`ProfileStore`](crate::tune::ProfileStore).
+    pub profile: TunedProfile,
+    /// The incumbent's final-round measurement.
+    pub baseline: Measurement,
+    /// The winner's final-round measurement (same object the profile was
+    /// built from).
+    pub winner: Measurement,
+    /// All final-round measurements, best score first.
+    pub finalists: Vec<Measurement>,
+    /// Candidates actually considered (post-dedup, post-cap).
+    pub candidates: usize,
+    /// Enumerated candidates dropped by [`TuneOptions::max_candidates`]
+    /// without being measured — non-zero means the space was not fully
+    /// covered (no silent caps).
+    pub truncated: usize,
+    /// Candidates cut off early against the incumbent.
+    pub abandoned: usize,
+    /// Candidates dropped by an error — a failed plan build (e.g. IC(0)
+    /// breakdown under an aggressive configuration) or a solver error
+    /// during measurement.
+    pub failed: usize,
+}
+
+/// A pool entry: the latest measurement plus the built plan, retained so
+/// later racing rounds re-time without re-paying ordering + IC(0).
+struct Survivor {
+    m: Measurement,
+    plan: Arc<SolverPlan>,
+}
+
+/// The shared measurement bookkeeping of every search round: abandonment
+/// and build-failure counters, the surviving pool, and the running
+/// incumbent-best time that drives early abandonment.
+struct SearchState {
+    pool: Vec<Survivor>,
+    abandoned: usize,
+    failed: usize,
+    incumbent_time: f64,
+}
+
+impl SearchState {
+    /// Fold one measurement result into the state (see module docs: an
+    /// abandoned candidate is counted and dropped, an errored candidate —
+    /// failed plan build or solver error — is counted and skipped, a
+    /// survivor may lower the incumbent time).
+    fn record(&mut self, result: Result<Survivor>) {
+        match result {
+            Ok(s) if s.m.abandoned => self.abandoned += 1,
+            Ok(s) => {
+                if s.m.converged {
+                    self.incumbent_time = self.incumbent_time.min(s.m.solve_seconds);
+                }
+                self.pool.push(s);
+            }
+            Err(_) => self.failed += 1,
+        }
+    }
+
+    /// The abandonment reference passed to [`measure_plan`]: the incumbent-best
+    /// time in reuse-heavy regimes, `None` when setup amortization
+    /// dominates the score (small `expected_reuse`) — there a candidate
+    /// with a slow solve but cheap setup can still win on the actual
+    /// objective, so cutting it off on solve time alone would discard the
+    /// winner.
+    fn abandon_ref(&self, expected_reuse: f64) -> Option<f64> {
+        (!expected_reuse.is_finite() || expected_reuse >= 10.0).then_some(self.incumbent_time)
+    }
+}
+
+/// Search the configuration space for `(a, b)` starting from `base`; see
+/// module docs for the strategy and its invariants. `b` should be a
+/// representative right-hand side (the service uses `A·1`).
+pub fn tune_matrix(
+    a: &Csr,
+    b: &[f64],
+    base: &SolverConfig,
+    opts: &TuneOptions,
+) -> Result<TuneOutcome> {
+    // An invalid incumbent is the caller's bug, surfaced typed here —
+    // enumerate() would otherwise drop it and silently crown an arbitrary
+    // grid point "the baseline".
+    base.validate()?;
+    let hw = HardwareSignature::detect();
+    let space = opts.space.clone().unwrap_or_else(|| ConfigSpace::for_hardware(&hw));
+    let mut candidates = space.enumerate(base);
+    let enumerated = candidates.len();
+    candidates.truncate(opts.max_candidates.max(1)); // slot 0 is the incumbent
+    let considered = candidates.len();
+    let reuse = opts.expected_reuse;
+
+    // The incumbent is measured with the full budget and no threshold; its
+    // failure is the caller's failure (their default config doesn't run).
+    let final_opts =
+        MeasureOptions { warmup: opts.warmup, trials: opts.trials.max(1), ..screen_opts(opts) };
+    let baseline_plan = Arc::new(SolverPlan::build(a, &candidates[0])?);
+    let baseline = measure_plan(&baseline_plan, b, &final_opts, None)?;
+    let mut st = SearchState {
+        pool: Vec::new(),
+        abandoned: 0,
+        failed: 0,
+        incumbent_time: baseline.solve_seconds,
+    };
+
+    let rest: Vec<SolverConfig> = candidates.drain(1..).collect();
+    let use_racing = match opts.strategy {
+        TuneStrategy::Exhaustive => false,
+        TuneStrategy::Racing => true,
+        TuneStrategy::Auto => considered > opts.exhaustive_threshold,
+    };
+
+    // Measure the non-incumbent candidates down to a finalist pool.
+    if use_racing {
+        // Round 1: one untimed-warmup-free trial per candidate.
+        let mut round_opts = screen_opts(opts);
+        for cfg in &rest {
+            st.record(build_one(a, b, cfg, &round_opts, st.abandon_ref(reuse)));
+        }
+        // Halve with a doubled budget until the finalist pool is reached.
+        while st.pool.len() > opts.finalists.max(1) {
+            st.pool.sort_by(|p, q| p.m.score(reuse).total_cmp(&q.m.score(reuse)));
+            st.pool.truncate(st.pool.len().div_ceil(2).max(opts.finalists.max(1)));
+            if st.pool.len() <= opts.finalists.max(1) {
+                break;
+            }
+            round_opts.trials = (round_opts.trials * 2).min(opts.trials.max(1));
+            let survivors = std::mem::take(&mut st.pool);
+            for s in survivors {
+                st.record(retime_one(&s, b, &round_opts, st.abandon_ref(reuse)));
+            }
+        }
+        // Finalists get the full treatment (fresh warmup + full trials).
+        let survivors = std::mem::take(&mut st.pool);
+        for s in survivors {
+            st.record(retime_one(&s, b, &final_opts, st.abandon_ref(reuse)));
+        }
+    } else {
+        for cfg in &rest {
+            st.record(build_one(a, b, cfg, &final_opts, st.abandon_ref(reuse)));
+        }
+    }
+
+    // Final scoreboard: the incumbent always competes.
+    let mut finalists: Vec<Measurement> = st.pool.into_iter().map(|s| s.m).collect();
+    finalists.push(baseline.clone());
+    finalists.sort_by(|p, q| p.score(reuse).total_cmp(&q.score(reuse)));
+    let winner = finalists[0].clone();
+    if !winner.converged {
+        // Every measured candidate (incumbent included) scored +∞: there
+        // is nothing meaningful to install, and silently crowning an
+        // arbitrary grid point would hand auto-application a regression.
+        return Err(HbmcError::NotConverged {
+            iterations: winner.iterations,
+            relres: winner.final_relres,
+        });
+    }
+
+    let created_unix = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let profile = TunedProfile {
+        fingerprint: a.fingerprint(),
+        hardware: hw,
+        ordering: winner.cfg.ordering,
+        bs: winner.cfg.bs,
+        w: winner.cfg.w,
+        spmv: winner.cfg.spmv,
+        sell_sigma: winner.cfg.sell_sigma,
+        threads: winner.cfg.threads,
+        use_intrinsics: winner.cfg.use_intrinsics,
+        solve_seconds: winner.solve_seconds,
+        setup_seconds: winner.setup_seconds,
+        iterations: winner.iterations,
+        baseline_solve_seconds: baseline.solve_seconds,
+        created_unix,
+    };
+    Ok(TuneOutcome {
+        profile,
+        baseline,
+        winner,
+        finalists,
+        candidates: considered,
+        truncated: enumerated - considered,
+        abandoned: st.abandoned,
+        failed: st.failed,
+    })
+}
+
+/// Round-1 screening budget: no warmup, one trial, caller's abandonment.
+fn screen_opts(opts: &TuneOptions) -> MeasureOptions {
+    MeasureOptions { warmup: 0, trials: 1, abandon_factor: opts.abandon_factor }
+}
+
+/// Build one challenger's plan and take its first measurement; the plan is
+/// retained in the [`Survivor`] so later rounds only re-time.
+fn build_one(
+    a: &Csr,
+    b: &[f64],
+    cfg: &SolverConfig,
+    m_opts: &MeasureOptions,
+    abandon: Option<f64>,
+) -> Result<Survivor> {
+    let plan = Arc::new(SolverPlan::build(a, cfg)?);
+    let m = measure_plan(&plan, b, m_opts, abandon)?;
+    Ok(Survivor { m, plan })
+}
+
+/// Re-time a surviving candidate on its already-built plan — no repeated
+/// ordering/factorization across racing rounds.
+fn retime_one(
+    s: &Survivor,
+    b: &[f64],
+    m_opts: &MeasureOptions,
+    abandon: Option<f64>,
+) -> Result<Survivor> {
+    let m = measure_plan(&s.plan, b, m_opts, abandon)?;
+    Ok(Survivor { m, plan: Arc::clone(&s.plan) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{OrderingKind, Scale, SpmvKind};
+    use crate::gen::suite;
+
+    fn small_space() -> ConfigSpace {
+        ConfigSpace {
+            orderings: vec![OrderingKind::Bmc, OrderingKind::Hbmc],
+            block_sizes: vec![8],
+            widths: vec![4],
+            spmvs: vec![SpmvKind::Crs, SpmvKind::Sell],
+            sigma_slices: vec![None],
+            threads: vec![1],
+        }
+    }
+
+    fn base() -> SolverConfig {
+        SolverConfig { ordering: OrderingKind::Hbmc, bs: 8, w: 4, rtol: 1e-7, ..Default::default() }
+    }
+
+    #[test]
+    fn winner_never_loses_to_the_incumbent() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let opts = TuneOptions {
+            space: Some(small_space()),
+            trials: 2,
+            expected_reuse: f64::INFINITY,
+            ..Default::default()
+        };
+        let out = tune_matrix(&d.matrix, &d.b, &base(), &opts).unwrap();
+        assert!(out.winner.converged);
+        assert!(
+            out.winner.score(f64::INFINITY) <= out.baseline.score(f64::INFINITY),
+            "winner {} must not score worse than incumbent {}",
+            out.winner.label(),
+            out.baseline.label()
+        );
+        // With reuse = ∞ the score IS time/solve, so the profile's
+        // acceptance bound holds exactly.
+        assert!(out.profile.solve_seconds <= out.profile.baseline_solve_seconds);
+        assert!(out.candidates >= out.finalists.len());
+    }
+
+    #[test]
+    fn racing_reaches_a_finalist_pool() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let opts = TuneOptions {
+            space: Some(ConfigSpace {
+                block_sizes: vec![8, 16],
+                threads: vec![1],
+                ..small_space()
+            }),
+            strategy: TuneStrategy::Racing,
+            trials: 2,
+            finalists: 3,
+            ..Default::default()
+        };
+        let out = tune_matrix(&d.matrix, &d.b, &base(), &opts).unwrap();
+        assert!(out.winner.converged);
+        // Finalist pool = survivors + the incumbent; the cap applies to
+        // the survivors.
+        assert!(out.finalists.len() <= opts.finalists + 1, "{}", out.finalists.len());
+        assert!(!out.finalists.is_empty());
+    }
+
+    #[test]
+    fn invalid_base_is_a_typed_error_not_a_panic() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let bad = SolverConfig { rtol: 0.0, ..base() };
+        let err = tune_matrix(&d.matrix, &d.b, &bad, &TuneOptions::default()).unwrap_err();
+        assert!(matches!(err, HbmcError::InvalidConfig(_)), "{err:?}");
+    }
+
+    #[test]
+    fn nothing_converging_is_a_typed_error_not_an_arbitrary_winner() {
+        // With a 2-iteration cap nothing converges, every score is +∞, and
+        // installing any "winner" would hand auto-application a regression.
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let capped = SolverConfig { max_iters: 2, ..base() };
+        let opts = TuneOptions { space: Some(small_space()), trials: 1, ..Default::default() };
+        let err = tune_matrix(&d.matrix, &d.b, &capped, &opts).unwrap_err();
+        assert!(matches!(err, HbmcError::NotConverged { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn truncation_is_reported_not_silent() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let opts = TuneOptions {
+            space: Some(ConfigSpace { block_sizes: vec![8, 16], ..small_space() }),
+            trials: 1,
+            max_candidates: 2, // incumbent + one challenger
+            ..Default::default()
+        };
+        let out = tune_matrix(&d.matrix, &d.b, &base(), &opts).unwrap();
+        assert_eq!(out.candidates, 2, "considered must honour the cap");
+        assert!(out.truncated > 0, "the dropped remainder must be visible");
+    }
+
+    #[test]
+    fn one_shot_scoring_disables_solve_time_abandonment() {
+        // expected_reuse = 1 scores setup + solve; a candidate must never
+        // be cut off on solve time alone there (cheap-setup configs can
+        // win with slower solves).
+        let st = SearchState {
+            pool: Vec::new(),
+            abandoned: 0,
+            failed: 0,
+            incumbent_time: 1e-3,
+        };
+        assert_eq!(st.abandon_ref(1.0), None);
+        assert_eq!(st.abandon_ref(2.0), None);
+        assert_eq!(st.abandon_ref(100.0), Some(1e-3));
+        assert_eq!(st.abandon_ref(f64::INFINITY), Some(1e-3));
+    }
+
+    #[test]
+    fn scoreboard_is_sorted_best_first() {
+        let d = suite::dataset("thermal2", Scale::Tiny);
+        let opts = TuneOptions { space: Some(small_space()), trials: 1, ..Default::default() };
+        let out = tune_matrix(&d.matrix, &d.b, &base(), &opts).unwrap();
+        let scores: Vec<f64> =
+            out.finalists.iter().map(|m| m.score(opts.expected_reuse)).collect();
+        assert!(scores.windows(2).all(|w| w[0] <= w[1]), "{scores:?}");
+        assert_eq!(
+            out.finalists[0].cfg.label(),
+            out.winner.cfg.label(),
+            "winner must head the scoreboard"
+        );
+    }
+}

@@ -2,10 +2,23 @@
 //! `serde` or `criterion`, so we carry our own RNG, timers, stats and a
 //! minimal key/value text format).
 
+pub mod json;
 pub mod kvtext;
 pub mod rng;
 pub mod stats;
 pub mod timer;
+
+/// Stable location for a perf-trajectory artifact (`BENCH_*.json`): the
+/// **workspace root** whenever this build tree still exists at runtime,
+/// else the current directory. Benches run with CWD = the package dir
+/// (`rust/`) while `cargo run` starts from the workspace root; routing both
+/// through this helper gives CI one canonical set of artifact paths.
+pub fn bench_artifact_path(name: &str) -> std::path::PathBuf {
+    match std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent() {
+        Some(root) if root.is_dir() => root.join(name),
+        _ => std::path::PathBuf::from(name),
+    }
+}
 
 /// Round `x` up to the next multiple of `m` (`m > 0`).
 #[inline]

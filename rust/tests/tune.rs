@@ -1,0 +1,288 @@
+//! End-to-end tests of the autotuner subsystem: profile-store durability
+//! (round-trip property, corrupt files, stale schemas), the tuner's
+//! never-worse-than-default guarantee, service auto-application with
+//! `ServiceStats::profile_hits`, and fused/legacy parity under tuned
+//! configurations.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use hbmc::api::{HbmcError, SolveRequest, SolverService};
+use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
+use hbmc::coordinator::pool::Pool;
+use hbmc::gen::suite;
+use hbmc::solver::plan::{ExecOptions, SolverPlan};
+use hbmc::tune::{
+    tune_matrix, ConfigSpace, HardwareSignature, ProfileStore, SimdLevel, TuneOptions,
+    TunedProfile, TuneStrategy,
+};
+use hbmc::util::rng::Rng;
+
+/// Unique scratch path under the OS temp dir (no tempfile crate offline;
+/// each test owns a distinct file name and removes it on exit).
+fn scratch(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("hbmc_tune_test_{}_{name}", std::process::id()));
+    p
+}
+
+fn small_space() -> ConfigSpace {
+    ConfigSpace {
+        orderings: vec![OrderingKind::Bmc, OrderingKind::Hbmc],
+        block_sizes: vec![8],
+        widths: vec![4],
+        spmvs: vec![SpmvKind::Crs, SpmvKind::Sell],
+        sigma_slices: vec![None],
+        threads: vec![1],
+    }
+}
+
+fn tiny_base() -> SolverConfig {
+    SolverConfig { ordering: OrderingKind::Hbmc, bs: 8, w: 4, rtol: 1e-7, ..Default::default() }
+}
+
+fn random_profile(rng: &mut Rng) -> TunedProfile {
+    let orderings =
+        [OrderingKind::Natural, OrderingKind::Mc, OrderingKind::Bmc, OrderingKind::Hbmc];
+    let simds = [SimdLevel::Scalar, SimdLevel::Avx2, SimdLevel::Avx512];
+    let w = [1usize, 2, 4, 8][rng.below(4)];
+    let bs = w * (1 + rng.below(8));
+    TunedProfile {
+        fingerprint: rng.next_u64(),
+        hardware: HardwareSignature { simd: simds[rng.below(3)], cores: 1 + rng.below(64) },
+        ordering: orderings[rng.below(4)],
+        bs,
+        w,
+        spmv: if rng.below(2) == 0 { SpmvKind::Crs } else { SpmvKind::Sell },
+        sell_sigma: if rng.below(2) == 0 { None } else { Some(w * (1 + rng.below(32))) },
+        threads: 1 + rng.below(16),
+        use_intrinsics: rng.below(2) == 0,
+        solve_seconds: rng.range_f64(1e-6, 10.0),
+        setup_seconds: rng.range_f64(1e-6, 100.0),
+        iterations: rng.below(10_000),
+        baseline_solve_seconds: rng.range_f64(1e-6, 10.0),
+        created_unix: rng.next_u64() >> 20, // keep within f64-exact range
+    }
+}
+
+#[test]
+fn profile_store_round_trip_property() {
+    // 64 randomized profiles (deterministic seed): serialize the store,
+    // parse it back, and require field-exact equality — including
+    // fingerprints above 2^53, which a naive JSON number would corrupt.
+    let mut rng = Rng::new(0xc0ffee);
+    let mut store = ProfileStore::in_memory();
+    let mut expected = Vec::new();
+    for _ in 0..64 {
+        let p = random_profile(&mut rng);
+        store.put(p.clone());
+        expected.retain(|q: &TunedProfile| q.key() != p.key());
+        expected.push(p);
+    }
+    let parsed = ProfileStore::parse_document(&store.to_json_text()).unwrap();
+    assert_eq!(parsed.len(), expected.len());
+    for p in &expected {
+        assert!(parsed.contains(p), "lost or mangled profile {p:?}");
+    }
+}
+
+#[test]
+fn profile_store_file_round_trip() {
+    let path = scratch("roundtrip.json");
+    let _ = std::fs::remove_file(&path);
+    let mut rng = Rng::new(42);
+    let p = random_profile(&mut rng);
+    {
+        let mut store = ProfileStore::open(&path).unwrap();
+        assert!(store.is_empty(), "missing file must read as empty");
+        store.put(p.clone());
+        store.save().unwrap();
+    }
+    let reloaded = ProfileStore::open(&path).unwrap();
+    assert_eq!(reloaded.len(), 1);
+    assert_eq!(reloaded.get(&p.key()), Some(&p));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupt_or_truncated_store_is_parse_error_never_panic() {
+    let path = scratch("corrupt.json");
+    let full = {
+        let mut store = ProfileStore::in_memory();
+        store.put(random_profile(&mut Rng::new(7)));
+        store.to_json_text()
+    };
+    // A truncated prefix of a real store, plus assorted garbage.
+    let cases: Vec<String> = vec![
+        full[..full.len() / 2].to_string(),
+        "not json at all".into(),
+        "{\"schema_version\": \"one\"}".into(),
+        "{\"schema_version\": 1, \"profiles\": [{\"fingerprint\": 12}]}".into(),
+        "\u{0}\u{1}\u{2}".into(),
+    ];
+    for text in cases {
+        std::fs::write(&path, &text).unwrap();
+        let err = ProfileStore::open(&path).unwrap_err();
+        assert!(matches!(err, HbmcError::Parse(_)), "{text:?} -> {err:?}");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn stale_schema_version_is_ignored_and_rebuilt() {
+    let path = scratch("stale.json");
+    std::fs::write(
+        &path,
+        "{\"schema_version\": 9999, \"profiles\": [{\"whatever\": \"format\"}]}",
+    )
+    .unwrap();
+    let mut store = ProfileStore::open(&path).unwrap();
+    assert!(store.is_empty(), "stale-schema profiles must be dropped, not parsed");
+    // The rebuild path: put + save rewrites the file at the current schema.
+    let p = random_profile(&mut Rng::new(9));
+    store.put(p.clone());
+    store.save().unwrap();
+    let reloaded = ProfileStore::open(&path).unwrap();
+    assert_eq!(reloaded.get(&p.key()), Some(&p));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn tune_never_returns_worse_than_default_time_per_solve() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let opts = TuneOptions {
+        space: Some(small_space()),
+        trials: 2,
+        // ∞ reuse ⇒ the score IS time/solve, so the acceptance bound
+        // "tuned time/solve ≤ default's" holds exactly, not just in
+        // expectation: the default is always a finalist.
+        expected_reuse: f64::INFINITY,
+        ..Default::default()
+    };
+    let out = tune_matrix(&d.matrix, &d.b, &tiny_base(), &opts).unwrap();
+    assert!(out.winner.converged);
+    assert!(out.profile.solve_seconds <= out.profile.baseline_solve_seconds);
+    assert_eq!(out.profile.fingerprint, d.matrix.fingerprint());
+    assert_eq!(out.profile.hardware, HardwareSignature::detect());
+}
+
+#[test]
+fn racing_strategy_handles_a_wide_space() {
+    let d = suite::dataset("thermal2", Scale::Tiny);
+    let opts = TuneOptions {
+        space: Some(ConfigSpace {
+            orderings: vec![OrderingKind::Mc, OrderingKind::Bmc, OrderingKind::Hbmc],
+            block_sizes: vec![8, 16],
+            widths: vec![4],
+            spmvs: vec![SpmvKind::Crs, SpmvKind::Sell],
+            sigma_slices: vec![None, Some(16)],
+            threads: vec![1],
+        }),
+        strategy: TuneStrategy::Racing,
+        trials: 2,
+        finalists: 3,
+        ..Default::default()
+    };
+    let out = tune_matrix(&d.matrix, &d.b, &tiny_base(), &opts).unwrap();
+    assert!(out.winner.converged);
+    assert!(out.candidates > opts.finalists, "space must be wider than the finalist pool");
+    assert!(out.finalists.len() <= opts.finalists + 1);
+    assert!(out.winner.score(opts.expected_reuse) <= out.baseline.score(opts.expected_reuse));
+}
+
+#[test]
+fn service_tune_persists_and_next_service_auto_applies() {
+    let path = scratch("service_store.json");
+    let _ = std::fs::remove_file(&path);
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let opts = TuneOptions {
+        space: Some(small_space()),
+        trials: 1,
+        expected_reuse: f64::INFINITY,
+        ..Default::default()
+    };
+
+    // Service #1: tune and persist.
+    let svc = SolverService::with_config(tiny_base()).unwrap();
+    svc.attach_profile_store(&path).unwrap();
+    let h = svc.register_matrix(d.matrix.clone());
+    let profile = svc.tune(h, &opts).unwrap();
+    let st = svc.stats();
+    assert_eq!((st.tunes, st.profiles), (1, 1));
+    assert_eq!(svc.profile(h).unwrap().as_ref(), Some(&profile));
+    // The tune itself bypasses the queue: no profile hits yet.
+    assert_eq!(st.profile_hits, 0);
+    // A default-config solve on the tuning service already auto-applies.
+    let tuned_out = svc.solve(h, &d.b).unwrap();
+    assert!(tuned_out.report.converged);
+    assert_eq!(svc.stats().profile_hits, 1);
+    drop(svc);
+
+    // Service #2 (a "new process"): the profile survives the store
+    // round-trip and is auto-applied on the very next solve.
+    let svc2 = SolverService::with_config(tiny_base()).unwrap();
+    let installed = svc2.attach_profile_store(&path).unwrap();
+    assert_eq!(installed, 1, "persisted profile must load on this machine");
+    let h2 = svc2.register_matrix(d.matrix.clone());
+    let stored = svc2.profile(h2).unwrap().expect("profile for the same matrix");
+    assert_eq!(stored.key(), profile.key());
+    assert_eq!(stored.label(), profile.label());
+    let out = svc2.solve(h2, &d.b).unwrap();
+    assert!(out.report.converged);
+    let s2 = svc2.stats();
+    assert_eq!(s2.profile_hits, 1, "auto-application must be visible in ServiceStats");
+    assert_eq!(
+        out.report.plan.config_label,
+        profile.apply_to(&tiny_base()).label(),
+        "the solve must have run under the tuned config"
+    );
+    // Batch solves count one hit per rhs.
+    let outs = svc2.solve_many(h2, &[d.b.clone(), d.b.clone()]).unwrap();
+    assert_eq!(outs.len(), 2);
+    assert_eq!(svc2.stats().profile_hits, 3);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn tuned_config_keeps_fused_legacy_parity() {
+    // Determinism must survive tuning: whatever configuration the search
+    // picks, the fused single-dispatch loop and the legacy per-kernel
+    // loop stay bitwise-identical on it.
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let opts = TuneOptions { space: Some(small_space()), trials: 1, ..Default::default() };
+    let out = tune_matrix(&d.matrix, &d.b, &tiny_base(), &opts).unwrap();
+    let cfg = out.profile.apply_to(&tiny_base());
+    let plan = Arc::new(SolverPlan::build(&d.matrix, &cfg).unwrap());
+    let pool = Pool::new(cfg.threads);
+    let fused = plan.execute(&pool, &d.b, &ExecOptions::default()).unwrap();
+    let legacy = plan
+        .execute(&pool, &d.b, &ExecOptions { legacy_loop: true, ..Default::default() })
+        .unwrap();
+    assert_eq!(fused.cg.iterations, legacy.cg.iterations);
+    assert_eq!(fused.x, legacy.x, "tuned config broke fused/legacy parity");
+    // And run-to-run determinism under the tuned config.
+    let again = plan.execute(&pool, &d.b, &ExecOptions::default()).unwrap();
+    assert_eq!(fused.x, again.x);
+}
+
+#[test]
+fn solve_request_opt_out_still_solves_with_default() {
+    let d = suite::dataset("thermal2", Scale::Tiny);
+    let svc = SolverService::with_config(tiny_base()).unwrap();
+    let h = svc.register_matrix(d.matrix.clone());
+    let opts = TuneOptions {
+        space: Some(small_space()),
+        trials: 1,
+        expected_reuse: f64::INFINITY,
+        ..Default::default()
+    };
+    svc.tune(h, &opts).unwrap();
+    let opted_out = svc.solve_with(h, &d.b, &SolveRequest::new().no_profile()).unwrap();
+    assert!(opted_out.report.converged);
+    assert_eq!(
+        opted_out.report.plan.config_label,
+        tiny_base().label(),
+        "opt-out must run the service default"
+    );
+    assert_eq!(svc.stats().profile_hits, 0);
+}
