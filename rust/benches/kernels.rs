@@ -18,7 +18,7 @@ use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
 use hbmc::coordinator::pool::Pool;
 use hbmc::gen::suite;
 use hbmc::solver::plan::{ExecOptions, SolverPlan};
-use hbmc::solver::spmv::{spmv_crs, spmv_sell};
+use hbmc::solver::spmv::{spmv_crs, spmv_sell, spmv_symm, SymmSpmv};
 use hbmc::sparse::sell::Sell;
 use hbmc::util::timer::bench_secs;
 use std::time::Duration;
@@ -56,6 +56,7 @@ fn quick_entry(d: &hbmc::gen::Dataset, spmv: SpmvKind, legacy: bool) -> String {
         match spmv {
             SpmvKind::Crs => "crs",
             SpmvKind::Sell => "sell",
+            SpmvKind::SymmCsr => "symmcsr",
         },
         if legacy { "legacy" } else { "fused" }
     );
@@ -73,7 +74,7 @@ fn quick_entry(d: &hbmc::gen::Dataset, spmv: SpmvKind, legacy: bool) -> String {
 fn quick_main() {
     let d = suite::dataset("g3_circuit", Scale::Tiny);
     let mut entries = Vec::new();
-    for spmv in [SpmvKind::Crs, SpmvKind::Sell] {
+    for spmv in [SpmvKind::Crs, SpmvKind::Sell, SpmvKind::SymmCsr] {
         for legacy in [false, true] {
             entries.push(quick_entry(&d, spmv, legacy));
         }
@@ -115,8 +116,16 @@ fn main() {
         let (sel, _) = bench_secs(5, budget, || spmv_sell(&sell, &x, &mut y, &pool));
         let sells = Sell::from_csr_sigma(a, 8, 64);
         let (sels, _) = bench_secs(5, budget, || spmv_sell(&sells, &x, &mut y, &pool));
+        let symm = SymmSpmv::build(a).expect("suite matrices are exactly symmetric");
+        let (sym, _) = bench_secs(5, budget, || spmv_symm(&symm, &x, &mut y, &pool));
         let gf = |t: f64, elems: usize| 2.0 * elems as f64 / t / 1e9;
         println!("spmv crs      : {crs:.6}s ({:.2} GFLOP/s)", gf(crs, a.nnz()));
+        // Symmetric storage does the full 2·nnz flops from ~half the bytes.
+        println!(
+            "spmv symmcsr  : {sym:.6}s ({:.2} GFLOP/s, {:.0}% of crs matrix bytes)",
+            gf(sym, a.nnz()),
+            100.0 * symm.matrix().stored_elements() as f64 / a.nnz() as f64
+        );
         println!(
             "spmv sell-8   : {sel:.6}s ({:.2} GFLOP/s, {:+.1}% pad)",
             gf(sel, sell.stored_elements()),

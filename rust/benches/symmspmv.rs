@@ -1,0 +1,141 @@
+//! CRS vs symmetric-CSR SpMV inside the fused CG loop — the memory-traffic
+//! experiment behind `SpmvKind::SymmCsr`. Emits `BENCH_symmspmv.json`:
+//! per-engine model bytes/iteration (matrix and total, from
+//! [`SpmvTraffic::model`]), measured SpMV-phase seconds, effective GFLOP/s
+//! and model bandwidth, plus the two headline ratios (symm/crs matrix
+//! bytes, crs/symm SpMV-phase time per iteration).
+//!
+//! `cargo bench --bench symmspmv [-- --quick]`
+//!
+//! Quick mode (`--quick` or `HBMC_BENCH_QUICK=1`) runs the Tiny dataset at
+//! up to 2 threads for CI; the full run uses the largest generated suite
+//! at every available core.
+
+use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
+use hbmc::coordinator::metrics::SpmvTraffic;
+use hbmc::coordinator::pool::Pool;
+use hbmc::gen::suite;
+use hbmc::solver::plan::{ExecOptions, SolverPlan};
+
+struct EngineRun {
+    label: &'static str,
+    iterations: usize,
+    solve_seconds: f64,
+    spmv_seconds: f64,
+    traffic: SpmvTraffic,
+    nnz: usize,
+    dispatches: u64,
+}
+
+impl EngineRun {
+    /// Measured SpMV GFLOP/s (both engines do the full 2·nnz flops).
+    fn gflops(&self) -> f64 {
+        2.0 * self.nnz as f64 * self.iterations as f64 / self.spmv_seconds / 1e9
+    }
+
+    /// Model bytes moved per second of SpMV phase — the bandwidth the
+    /// traffic model implies, comparable against the machine's roofline.
+    fn model_gbps(&self) -> f64 {
+        self.traffic.total_bytes() as f64 * self.iterations as f64 / self.spmv_seconds / 1e9
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "    {{\"label\": \"{}\", \"iterations\": {}, \"solve_seconds\": {:.6e}, \
+             \"spmv_seconds\": {:.6e}, \"dispatches\": {}, \
+             \"model_matrix_bytes_per_iter\": {}, \"model_total_bytes_per_iter\": {}, \
+             \"spmv_gflops\": {:.4}, \"model_bandwidth_gbps\": {:.4}}}",
+            self.label,
+            self.iterations,
+            self.solve_seconds,
+            self.spmv_seconds,
+            self.dispatches,
+            self.traffic.matrix_bytes,
+            self.traffic.total_bytes(),
+            self.gflops(),
+            self.model_gbps(),
+        )
+    }
+}
+
+fn run_engine(
+    d: &hbmc::gen::Dataset,
+    spmv: SpmvKind,
+    label: &'static str,
+    threads: usize,
+) -> EngineRun {
+    let cfg = SolverConfig {
+        ordering: OrderingKind::Hbmc,
+        bs: 8,
+        w: 4,
+        spmv,
+        threads,
+        shift: d.shift,
+        rtol: 1e-6,
+        ..Default::default()
+    };
+    let plan = SolverPlan::build(&d.matrix, &cfg).expect("plan build");
+    let traffic = SpmvTraffic::model(cfg.spmv, plan.setup.n_aug, plan.setup.spmv_elements, cfg.w);
+    let pool = Pool::new(threads);
+    let opts = ExecOptions::default(); // fused single-dispatch path
+    let _ = plan.execute(&pool, &d.b, &opts).expect("warmup");
+    let mut o = plan.execute(&pool, &d.b, &opts).expect("solve");
+    for _ in 0..2 {
+        let t = plan.execute(&pool, &d.b, &opts).expect("solve");
+        if t.cg.solve_seconds < o.cg.solve_seconds {
+            o = t;
+        }
+    }
+    assert!(o.cg.converged, "bench solve must converge");
+    EngineRun {
+        label,
+        iterations: o.cg.iterations.max(1),
+        solve_seconds: o.cg.solve_seconds,
+        spmv_seconds: o.cg.times.get("spmv").as_secs_f64().max(1e-12),
+        traffic,
+        nnz: d.nnz(),
+        dispatches: o.dispatches,
+    }
+}
+
+fn main() {
+    let quick =
+        std::env::args().any(|a| a == "--quick") || std::env::var("HBMC_BENCH_QUICK").is_ok();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let (scale, threads) = if quick { (Scale::Tiny, cores.min(2)) } else { (Scale::Full, cores) };
+    let d = suite::dataset("g3_circuit", scale);
+    println!(
+        "symm-spmv bench: {} n={} nnz={} threads={threads} ({})",
+        d.name,
+        d.n(),
+        d.nnz(),
+        if quick { "quick" } else { "full" }
+    );
+
+    let crs = run_engine(&d, SpmvKind::Crs, "hbmc-crs-fused", threads);
+    let symm = run_engine(&d, SpmvKind::SymmCsr, "hbmc-symmcsr-fused", threads);
+
+    let matrix_bytes_ratio = symm.traffic.matrix_bytes as f64 / crs.traffic.matrix_bytes as f64;
+    let spmv_speedup = (crs.spmv_seconds / crs.iterations as f64)
+        / (symm.spmv_seconds / symm.iterations as f64);
+    let json = format!(
+        "{{\n  \"bench\": \"symmspmv\",\n  \"provenance\": \"measured\",\n  \
+         \"dataset\": \"{}\",\n  \"n\": {},\n  \"nnz\": {},\n  \"threads\": {threads},\n  \
+         \"engines\": [\n{},\n{}\n  ],\n  \
+         \"matrix_bytes_ratio_symm_vs_crs\": {matrix_bytes_ratio:.4},\n  \
+         \"spmv_phase_speedup_symm_vs_crs\": {spmv_speedup:.4}\n}}\n",
+        d.name,
+        d.n(),
+        d.nnz(),
+        crs.json(),
+        symm.json(),
+    );
+    let path = hbmc::util::bench_artifact_path("BENCH_symmspmv.json");
+    std::fs::write(&path, &json).expect("write BENCH_symmspmv.json");
+    println!("{json}");
+    println!(
+        "matrix bytes: symm/crs = {matrix_bytes_ratio:.3}; \
+         spmv phase: crs/symm per-iter = {spmv_speedup:.3}x"
+    );
+    println!("wrote {}", path.display());
+}

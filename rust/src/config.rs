@@ -62,11 +62,16 @@ impl fmt::Display for OrderingKind {
 }
 
 /// SpMV storage for the CG matrix-vector product (the paper's
-/// `HBMC (crs_spmv)` vs `HBMC (sell_spmv)` distinction).
+/// `HBMC (crs_spmv)` vs `HBMC (sell_spmv)` distinction, plus the
+/// symmetric lower-triangle engine of `solver::spmv::SymmSpmv`, which
+/// streams roughly half the matrix bytes per iteration).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SpmvKind {
     Crs,
     Sell,
+    /// Diagonal + strict lower triangle with scatter updates; requires an
+    /// exactly symmetric matrix (always true for this solver's SPD inputs).
+    SymmCsr,
 }
 
 impl FromStr for SpmvKind {
@@ -76,8 +81,9 @@ impl FromStr for SpmvKind {
         match s.to_ascii_lowercase().as_str() {
             "crs" | "csr" => Ok(SpmvKind::Crs),
             "sell" => Ok(SpmvKind::Sell),
+            "symmcsr" | "symm-csr" | "symm" => Ok(SpmvKind::SymmCsr),
             other => Err(HbmcError::parse(format!(
-                "unknown spmv kind {other:?} (crs|sell)"
+                "unknown spmv kind {other:?} (crs|sell|symmcsr)"
             ))),
         }
     }
@@ -88,6 +94,7 @@ impl fmt::Display for SpmvKind {
         f.write_str(match self {
             SpmvKind::Crs => "crs",
             SpmvKind::Sell => "sell",
+            SpmvKind::SymmCsr => "symmcsr",
         })
     }
 }
@@ -327,6 +334,12 @@ impl SolverConfig {
                     self.w
                 )));
             }
+            if self.spmv == SpmvKind::SymmCsr {
+                return Err(HbmcError::invalid_config(
+                    "sell_sigma applies only to SELL storage; the symmetric SpMV engine \
+                     (spmv = symmcsr) has no sorting window",
+                ));
+            }
         }
         if self.queue.max_batch == 0 {
             return Err(HbmcError::invalid_config("queue.max_batch must be >= 1"));
@@ -450,9 +463,10 @@ mod tests {
         for k in [OrderingKind::Natural, OrderingKind::Mc, OrderingKind::Bmc, OrderingKind::Hbmc] {
             assert_eq!(k.to_string().parse::<OrderingKind>().unwrap(), k);
         }
-        for v in [SpmvKind::Crs, SpmvKind::Sell] {
+        for v in [SpmvKind::Crs, SpmvKind::Sell, SpmvKind::SymmCsr] {
             assert_eq!(v.to_string().parse::<SpmvKind>().unwrap(), v);
         }
+        assert_eq!("symm".parse::<SpmvKind>().unwrap(), SpmvKind::SymmCsr);
         for s in [Scale::Tiny, Scale::Small, Scale::Full] {
             assert_eq!(s.to_string().parse::<Scale>().unwrap(), s);
         }
@@ -470,6 +484,19 @@ mod tests {
         assert!(matches!("rainbow".parse::<OrderingKind>(), Err(HbmcError::Parse(_))));
         assert!(matches!("huge".parse::<Scale>(), Err(HbmcError::Parse(_))));
         assert!(matches!("epyc".parse::<NodePreset>(), Err(HbmcError::Parse(_))));
+    }
+
+    #[test]
+    fn symmcsr_rejects_sell_sigma() {
+        let err = SolverConfig::builder()
+            .spmv(SpmvKind::SymmCsr)
+            .sell_sigma(Some(32))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, HbmcError::InvalidConfig(_)), "{err:?}");
+        // Without a window the symmetric engine is a valid configuration.
+        let cfg = SolverConfig::builder().spmv(SpmvKind::SymmCsr).build().unwrap();
+        assert_eq!(cfg.label(), format!("{}(bs={},w={},symmcsr)", cfg.ordering, cfg.bs, cfg.w));
     }
 
     #[test]

@@ -16,6 +16,7 @@
 use std::sync::Arc;
 
 use crate::config::SolverConfig;
+use crate::coordinator::metrics::SpmvTraffic;
 use crate::coordinator::session::SolveSession;
 use crate::error::Result;
 use crate::solver::cg::CgResult;
@@ -66,6 +67,9 @@ pub struct PlanReport {
     pub syncs_per_substitution: usize,
     /// SELL processed-element overhead vs CRS nnz (§5.2.2), if SELL used.
     pub sell_overhead: Option<f64>,
+    /// Analytic per-SpMV memory traffic for the chosen storage format
+    /// (roofline numerator; compare against measured bytes moved).
+    pub spmv_traffic: SpmvTraffic,
     /// Substitution strategy ("ic0-hbmc", ...).
     pub trisolver: &'static str,
 }
@@ -78,6 +82,12 @@ impl PlanReport {
             simd_ratio: plan.ops.simd_ratio(),
             syncs_per_substitution: plan.trisolver.syncs_per_sweep(),
             sell_overhead: plan.sell_overhead(),
+            spmv_traffic: SpmvTraffic::model(
+                plan.cfg.spmv,
+                plan.setup.n_aug,
+                plan.setup.spmv_elements,
+                plan.cfg.w,
+            ),
             trisolver: plan.trisolver.name(),
         }
     }
@@ -188,6 +198,7 @@ mod tests {
         assert!(rep.kernel("trisolve") > 0.0);
         assert!(rep.kernel("spmv") > 0.0);
         assert_eq!(rep.plan.syncs_per_substitution, rep.plan.setup.num_colors - 1);
+        assert!(rep.plan.spmv_traffic.total_bytes() > 0);
         assert_eq!(rep.plan.trisolver, "ic0-hbmc");
         assert_eq!(rep.solve_index, 0);
         // rhs was A·1 → solution ≈ 1.

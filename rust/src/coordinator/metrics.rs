@@ -56,9 +56,12 @@ pub fn per_iteration_ops(cfg: &SolverConfig, inp: &OpInputs) -> OpProfile {
     let mut p = OpProfile::default();
     let n = inp.n as u64;
 
-    // SpMV: 2 flops per stored element.
+    // SpMV: 2 flops per stored element. The symmetric kernel does 4 flops
+    // per stored strict-lower nonzero (gather FMA + scatter FMA) plus 2n
+    // for the diagonal — exactly 2·nnz again, in scalar loops (irregular
+    // scatter).
     match cfg.spmv {
-        SpmvKind::Crs => p.scalar_flops += 2 * inp.nnz as u64,
+        SpmvKind::Crs | SpmvKind::SymmCsr => p.scalar_flops += 2 * inp.nnz as u64,
         SpmvKind::Sell => {
             p.packed_flops += 2 * inp.sell_a_elements.expect("sell elements required") as u64
         }
@@ -82,6 +85,46 @@ pub fn per_iteration_ops(cfg: &SolverConfig, inp: &OpInputs) -> OpProfile {
     p
 }
 
+/// Barrier structure of an SpMV engine inside the fused loop: how many
+/// barriers its worker performs *internally* per product, and whether the
+/// loop needs an extra barrier between the q-publish and the `p·q`
+/// partials (engines that cannot fuse the dot into their sweep).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpmvSyncShape {
+    /// CRS: barrier-free worker, `p·q` partials fused into the sweep.
+    Crs,
+    /// SELL: barrier-free worker, but σ-sorting breaks chunk ownership so
+    /// the dot needs its own barrier-separated pass.
+    Sell,
+    /// Symmetric colored schedule: one barrier after the diagonal pass
+    /// plus one between consecutive colors (= `colors` total), dot in its
+    /// own pass.
+    SymmColored { colors: usize },
+    /// Symmetric buffered fallback: one internal barrier (scatter →
+    /// combine), dot in its own pass.
+    SymmBuffered,
+}
+
+impl SpmvSyncShape {
+    /// Barriers the engine's worker performs internally per product.
+    pub fn internal_syncs(&self) -> usize {
+        match self {
+            SpmvSyncShape::Crs | SpmvSyncShape::Sell => 0,
+            SpmvSyncShape::SymmColored { colors } => *colors,
+            SpmvSyncShape::SymmBuffered => 1,
+        }
+    }
+
+    /// Extra loop barriers around the `p·q` dot (0 when the partials are
+    /// produced in the SpMV sweep itself).
+    pub fn pq_extra_syncs(&self) -> usize {
+        match self {
+            SpmvSyncShape::Crs => 0,
+            _ => 1,
+        }
+    }
+}
+
 /// Pool synchronizations per steady-state iteration of the **fused**
 /// single-dispatch CG loop (`solver::cg::pcg_fused`): the two substitution
 /// sweeps' `n_c − 1` color barriers each, plus the six phase barriers
@@ -92,7 +135,64 @@ pub fn per_iteration_ops(cfg: &SolverConfig, inp: &OpInputs) -> OpProfile {
 /// (condvar wake-up + completion barrier each) per iteration; see the
 /// accounting table in ARCHITECTURE.md.
 pub fn syncs_per_fused_iteration(num_colors: usize, sell_spmv: bool) -> usize {
-    2 * num_colors.saturating_sub(1) + 6 + usize::from(sell_spmv)
+    let shape = if sell_spmv { SpmvSyncShape::Sell } else { SpmvSyncShape::Crs };
+    syncs_per_fused_iteration_shaped(num_colors, shape)
+}
+
+/// [`syncs_per_fused_iteration`] generalized over every engine's barrier
+/// shape: the symmetric engine adds its internal barriers on top of the
+/// six phase barriers and the per-sweep color barriers.
+pub fn syncs_per_fused_iteration_shaped(num_colors: usize, shape: SpmvSyncShape) -> usize {
+    2 * num_colors.saturating_sub(1) + 6 + shape.pq_extra_syncs() + shape.internal_syncs()
+}
+
+/// Analytic bytes moved from memory per SpMV, split into matrix-structure
+/// traffic and vector traffic (`f64` values = 8 B, `u32` indices = 4 B).
+/// This is the roofline side of the bench comparisons: the symmetric
+/// engine's whole point is a ≈0.5× `matrix_bytes` ratio versus CRS.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpmvTraffic {
+    pub matrix_bytes: u64,
+    pub vector_bytes: u64,
+}
+
+impl SpmvTraffic {
+    pub fn total_bytes(&self) -> u64 {
+        self.matrix_bytes + self.vector_bytes
+    }
+
+    /// Minimum bytes per SpMV for `kind`. `stored` is the format's stored
+    /// element count (CRS: nnz; SELL: padded elements; SymmCsr: `n`
+    /// diagonal + strict-lower nnz); `w` is the SELL slice height (unused
+    /// elsewhere).
+    pub fn model(kind: SpmvKind, n: usize, stored: usize, w: usize) -> SpmvTraffic {
+        let (n64, stored64) = (n as u64, stored as u64);
+        match kind {
+            // val + col per element, row_ptr once; read x, write y.
+            SpmvKind::Crs => SpmvTraffic {
+                matrix_bytes: 12 * stored64 + 4 * (n64 + 1),
+                vector_bytes: 16 * n64,
+            },
+            // val + col per (padded) element, slice_ptr + slice_len per
+            // slice, row_of_lane per lane.
+            SpmvKind::Sell => {
+                let nslices = n.div_ceil(w.max(1)) as u64;
+                SpmvTraffic {
+                    matrix_bytes: 12 * stored64 + 8 * nslices + 4 * nslices * w as u64,
+                    vector_bytes: 16 * n64,
+                }
+            }
+            // Dense diagonal (val only) + strict lower (val + col),
+            // row_ptr once; x read, y read-modify-written by the scatter.
+            SpmvKind::SymmCsr => {
+                let lower = stored64.saturating_sub(n64);
+                SpmvTraffic {
+                    matrix_bytes: 8 * n64 + 12 * lower + 4 * (n64 + 1),
+                    vector_bytes: 24 * n64,
+                }
+            }
+        }
+    }
 }
 
 /// Cost model the autotuner scores candidates with: the effective seconds
@@ -165,6 +265,46 @@ mod tests {
         assert_eq!(syncs_per_fused_iteration(1, true), 7);
         // 4 colors: 2·3 color barriers + 6 phase barriers.
         assert_eq!(syncs_per_fused_iteration(4, false), 12);
+        // The shaped model reproduces the legacy two shapes exactly…
+        assert_eq!(syncs_per_fused_iteration_shaped(4, SpmvSyncShape::Crs), 12);
+        assert_eq!(syncs_per_fused_iteration_shaped(1, SpmvSyncShape::Sell), 7);
+        // …and adds the symmetric engine's internal barriers: colored pays
+        // one per color (diag pass + color transitions), buffered pays one.
+        assert_eq!(
+            syncs_per_fused_iteration_shaped(1, SpmvSyncShape::SymmColored { colors: 3 }),
+            6 + 1 + 3
+        );
+        assert_eq!(syncs_per_fused_iteration_shaped(1, SpmvSyncShape::SymmBuffered), 6 + 1 + 1);
+    }
+
+    #[test]
+    fn symm_flops_equal_full_csr_flops() {
+        let cfg = SolverConfig { ordering: OrderingKind::Bmc, spmv: SpmvKind::SymmCsr, ..Default::default() };
+        let crs = SolverConfig { ordering: OrderingKind::Bmc, spmv: SpmvKind::Crs, ..Default::default() };
+        assert_eq!(per_iteration_ops(&cfg, &inputs()), per_iteration_ops(&crs, &inputs()));
+    }
+
+    #[test]
+    fn traffic_model_halves_symm_matrix_bytes() {
+        // A typical FEM-ish shape: n = 100k, ~7 nnz per row.
+        let (n, nnz) = (100_000usize, 700_000usize);
+        let crs = SpmvTraffic::model(SpmvKind::Crs, n, nnz, 8);
+        let symm_stored = n + (nnz - n) / 2;
+        let symm = SpmvTraffic::model(SpmvKind::SymmCsr, n, symm_stored, 8);
+        let ratio = symm.matrix_bytes as f64 / crs.matrix_bytes as f64;
+        assert!(ratio <= 0.6, "symm/crs matrix-bytes ratio {ratio}");
+        assert!(ratio > 0.4, "model sanity: {ratio}");
+        // Vector traffic goes the other way (y is read-modify-written).
+        assert_eq!(symm.vector_bytes, 24 * n as u64);
+        assert_eq!(crs.vector_bytes, 16 * n as u64);
+        assert!(symm.total_bytes() < crs.total_bytes());
+    }
+
+    #[test]
+    fn traffic_model_counts_sell_padding() {
+        let s = SpmvTraffic::model(SpmvKind::Sell, 64, 1024, 8);
+        let nslices = 8u64;
+        assert_eq!(s.matrix_bytes, 12 * 1024 + 8 * nslices + 4 * nslices * 8);
     }
 
     #[test]

@@ -39,6 +39,8 @@
 //! use std::time::Duration;
 //!
 //! // 1. A validated configuration (the paper's headline solver).
+//! //    `SpmvKind::SymmCsr` instead stores only the lower triangle and
+//! //    roughly halves SpMV matrix traffic on bandwidth-bound matrices.
 //! let cfg = SolverConfig::builder()
 //!     .ordering(OrderingKind::Hbmc)
 //!     .bs(32)
@@ -138,8 +140,10 @@
 //!   machinery, and the [`order_matrix`](ordering::order_matrix) façade the
 //!   plan builder consumes,
 //! * [`factor`] — IC(0) and shifted-IC incomplete factorization,
-//! * [`solver`] — triangular kernels behind the `TriSolver` trait, CRS &
-//!   SELL SpMV, the PCG loop, `SolverPlan` and the `IccgSolver` wrapper,
+//! * [`solver`] — triangular kernels behind the `TriSolver` trait, the
+//!   CRS / SELL / symmetric (`SpmvKind::SymmCsr`, conflict-free colored
+//!   scatter) SpMV engines, the PCG loop, `SolverPlan` and the
+//!   `IccgSolver` wrapper,
 //! * [`coordinator`] — color-barrier thread pool, sessions + plan cache,
 //!   metrics and paper-style reporting,
 //! * [`tune`] — the autotuner: config-space enumeration, measured search

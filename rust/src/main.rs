@@ -90,8 +90,11 @@ USAGE: hbmc <command> [flags]
 
 COMMANDS
   solve        --dataset <name> [--scale tiny|small|full] [--ordering natural|mc|bmc|hbmc]
-               [--bs N] [--w N] [--spmv crs|sell] [--threads N] [--rtol X]
+               [--bs N] [--w N] [--spmv crs|sell|symmcsr] [--threads N] [--rtol X]
                [--shift X] [--node knl|bdw|skx] [--history] [--no-intrinsics]
+               [--mtx <file.mtx>]            (solve a MatrixMarket file instead of a
+                                              generated dataset; with --spmv symmcsr the
+                                              stored lower triangle is read directly)
                [--repeat N] [--setup-only]   (plan built once, N solves on one session)
                [--batch N]                   (submit N async jobs, micro-batched dispatch)
                [--auto] [--store <path>]     (apply the stored tuned profile for this
@@ -120,7 +123,24 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let scale: Scale = args.flag_or("scale", "small").parse()?;
     let name = args.flag_or("dataset", "g3_circuit");
     let repeat = args.usize_flag("repeat", 1)?.max(1);
-    let d = suite::try_dataset(&name, scale)?;
+    // `--mtx` loads a MatrixMarket file instead of a generated dataset.
+    // For symmetric-SpMV plans we keep the stored lower triangle and
+    // mirror it ourselves: deduplicating in lower form makes the two
+    // halves bitwise-identical, which the engine's symmetry check needs.
+    let d = match args.flag("mtx") {
+        Some(path) => {
+            use hbmc::sparse::matrix_market as mm;
+            let spmv: SpmvKind = args.flag_or("spmv", "sell").parse()?;
+            let p = std::path::Path::new(path);
+            let matrix = if spmv == SpmvKind::SymmCsr {
+                mm::expand_lower(&mm::read_lower(p)?)?
+            } else {
+                mm::read(p)?
+            };
+            hbmc::gen::Dataset::with_unit_solution(path, matrix, args.f64_flag("shift", 0.0)?)
+        }
+        None => suite::try_dataset(&name, scale)?,
+    };
     let mut cfg = cfg_from(args, d.shift)?;
     println!(
         "dataset={} n={} nnz={} ({:.1}/row) scale={scale}",

@@ -12,6 +12,10 @@
 //! triangular solver needs, so no upper layer re-implements the
 //! per-[`OrderingKind`](crate::config::OrderingKind) dispatch.
 
+//! [`race`] is a different kind of ordering: not a solver reordering but a
+//! conflict-free row *schedule* (recursive algebraic coloring) for the
+//! symmetric SpMV engine in [`crate::solver::spmv`].
+
 pub mod blocking;
 pub mod bmc;
 pub mod coloring;
@@ -19,6 +23,7 @@ pub mod graph;
 pub mod hbmc;
 pub mod mc;
 pub mod perm;
+pub mod race;
 
 use crate::config::OrderingKind;
 use crate::sparse::csr::Csr;

@@ -1,0 +1,389 @@
+//! Recursive algebraic coloring for the symmetric SpMV engine (RACE-style,
+//! Alappat et al. — see PAPERS.md).
+//!
+//! The symmetric kernel updates, per stored strict-lower nonzero `(i, j)`,
+//! both `y[i]` and `y[j]`: row `i`'s *write set* is `{i} ∪ {j : j < i,
+//! a[i][j] ≠ 0}`. Two rows may execute concurrently only if their write
+//! sets are disjoint. Since `W(i) ⊆ {i} ∪ N(i)` in the matrix adjacency
+//! graph, any overlap between `W(i₁)` and `W(i₂)` forces
+//! `dist(i₁, i₂) ≤ 2`; a **distance-2 coloring** (same color ⇒ distance
+//! ≥ 3) is therefore exactly sufficient for conflict-freedom.
+//!
+//! RACE proper recursively bisects BFS level groups and assigns level
+//! groups to threads — but a thread-count-dependent schedule can never be
+//! bitwise-reproducible across pool widths, which is this repo's
+//! acceptance bar (see `tests/fused_parity.rs`). This pass keeps RACE's
+//! bandwidth-friendly *traversal* (BFS levels, so same-color rows are
+//! close in memory) and its *recursive work subdivision* (per-color rows
+//! are split by recursive nnz-halving into grains), but derives the colors
+//! with a deterministic greedy distance-2 sweep in BFS-level order —
+//! independent of the thread count. Within a color every `y` element has
+//! exactly one writing row, so how grains are dealt to threads cannot
+//! change any accumulation order: results are bitwise identical across
+//! runs *and* thread counts by construction.
+//!
+//! When the graph colors badly (dense rows ⇒ more than
+//! [`crate::solver::spmv::MAX_SYMM_COLORS`] colors), the engine falls back
+//! to per-thread scatter buffers combined over [`canonical_blocks`] in
+//! fixed block order — see `solver/spmv.rs`.
+
+use std::ops::Range;
+
+use crate::ordering::graph::Adjacency;
+use crate::sparse::csr::Csr;
+
+/// Target grain weight (nnz) for the recursive per-color subdivision:
+/// small enough that every pool width finds load balance inside one
+/// color, large enough to amortize scheduling.
+const GRAIN_TARGET_NNZ: usize = 2048;
+
+/// Conflict-free row schedule for the symmetric SpMV kernel: a fixed
+/// sequence of colors, each holding rows (ascending) whose write sets are
+/// pairwise disjoint, subdivided into contiguous grains for parallel
+/// execution.
+#[derive(Debug, Clone)]
+pub struct RaceSchedule {
+    /// Row indices, concatenated color by color; rows ascend within each
+    /// color (the canonical order — independent of traversal and threads).
+    rows: Vec<u32>,
+    /// `rows[color_ptr[c]..color_ptr[c+1]]` is color `c`.
+    color_ptr: Vec<usize>,
+    /// `rows[grain_ptr[g]..grain_ptr[g+1]]` is grain `g` (grains never
+    /// cross a color boundary).
+    grain_ptr: Vec<usize>,
+    /// Grains of color `c` are `color_grains[c]..color_grains[c+1]`.
+    color_grains: Vec<usize>,
+}
+
+impl RaceSchedule {
+    /// Build the schedule from any CRS whose *pattern* is symmetric (full
+    /// or lower-triangular storage give the same adjacency and therefore
+    /// the same schedule). Deterministic: no randomness, no dependence on
+    /// thread count.
+    pub fn build(a: &Csr) -> RaceSchedule {
+        let n = a.n();
+        let adj = Adjacency::from_csr(a);
+
+        // 1. BFS levels, deterministic roots (lowest unvisited index) and
+        //    sorted neighbor expansion.
+        let mut level = vec![u32::MAX; n];
+        let mut queue = std::collections::VecDeque::new();
+        for root in 0..n {
+            if level[root] != u32::MAX {
+                continue;
+            }
+            level[root] = 0;
+            queue.push_back(root as u32);
+            while let Some(u) = queue.pop_front() {
+                let lu = level[u as usize];
+                for &v in adj.neighbors(u as usize) {
+                    if level[v as usize] == u32::MAX {
+                        level[v as usize] = lu + 1;
+                        queue.push_back(v);
+                    }
+                }
+            }
+        }
+
+        // 2. Traversal order: stable sort by (level, index) — RACE's
+        //    locality-preserving sweep.
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_by_key(|&v| level[v as usize]);
+
+        // 3. Greedy distance-2 coloring in that order: forbid the colors
+        //    of every already-colored vertex within distance ≤ 2.
+        let mut color = vec![u32::MAX; n];
+        let mut num_colors = 0usize;
+        // forbidden[c] == stamp ⇒ color c is taken near the current vertex.
+        let mut forbidden: Vec<u32> = Vec::new();
+        for (stamp, &v) in order.iter().enumerate() {
+            let stamp = stamp as u32 + 1;
+            let v = v as usize;
+            let mut mark = |u: usize, forbidden: &mut Vec<u32>| {
+                let c = color[u];
+                if c != u32::MAX {
+                    let c = c as usize;
+                    if c >= forbidden.len() {
+                        forbidden.resize(c + 1, 0);
+                    }
+                    forbidden[c] = stamp;
+                }
+            };
+            for &u in adj.neighbors(v) {
+                mark(u as usize, &mut forbidden);
+                for &w in adj.neighbors(u as usize) {
+                    mark(w as usize, &mut forbidden);
+                }
+            }
+            let mut c = 0usize;
+            while c < forbidden.len() && forbidden[c] == stamp {
+                c += 1;
+            }
+            color[v] = c as u32;
+            num_colors = num_colors.max(c + 1);
+        }
+
+        // 4. Canonical per-color row lists: ascending by construction
+        //    (index sweep), independent of the traversal that colored them.
+        let mut count = vec![0usize; num_colors + 1];
+        for &c in &color {
+            count[c as usize + 1] += 1;
+        }
+        for c in 0..num_colors {
+            count[c + 1] += count[c];
+        }
+        let color_ptr = count.clone();
+        let mut rows = vec![0u32; n];
+        let mut cursor = count;
+        for i in 0..n {
+            let c = color[i] as usize;
+            rows[cursor[c]] = i as u32;
+            cursor[c] += 1;
+        }
+
+        // 5. Recursive nnz-halving grains inside each color (row weight =
+        //    its stored-nonzero count; works for full or lower storage).
+        let weight = |r: u32| a.row_len(r as usize) + 1;
+        let mut grain_ptr = vec![0usize];
+        let mut color_grains = vec![0usize];
+        for c in 0..num_colors {
+            let (lo, hi) = (color_ptr[c], color_ptr[c + 1]);
+            split_grains(&rows, lo, hi, &weight, &mut grain_ptr);
+            color_grains.push(grain_ptr.len() - 1);
+        }
+
+        RaceSchedule { rows, color_ptr, grain_ptr, color_grains }
+    }
+
+    pub fn num_colors(&self) -> usize {
+        self.color_ptr.len() - 1
+    }
+
+    pub fn num_grains(&self) -> usize {
+        self.grain_ptr.len() - 1
+    }
+
+    /// Rows of color `c`, ascending.
+    pub fn color_rows(&self, c: usize) -> &[u32] {
+        &self.rows[self.color_ptr[c]..self.color_ptr[c + 1]]
+    }
+
+    /// Grain indices belonging to color `c`.
+    pub fn grains_of(&self, c: usize) -> Range<usize> {
+        self.color_grains[c]..self.color_grains[c + 1]
+    }
+
+    /// Rows of grain `g`.
+    pub fn grain(&self, g: usize) -> &[u32] {
+        &self.rows[self.grain_ptr[g]..self.grain_ptr[g + 1]]
+    }
+
+    /// Verify conflict-freedom against a strict-lower structure
+    /// (`row_ptr` / `cols` as in [`crate::sparse::symm::SymmCsr`]): within
+    /// each color, no `y` element — row index or scattered column — may
+    /// have two writers.
+    pub fn is_conflict_free(&self, row_ptr: &[u32], cols: &[u32]) -> bool {
+        let n = self.rows.len();
+        let mut writer = vec![u32::MAX; n];
+        for c in 0..self.num_colors() {
+            let stamp = c as u32;
+            for &i in self.color_rows(c) {
+                let iu = i as usize;
+                if writer[iu] == stamp {
+                    return false;
+                }
+                writer[iu] = stamp;
+                for &j in &cols[row_ptr[iu] as usize..row_ptr[iu + 1] as usize] {
+                    let ju = j as usize;
+                    if writer[ju] == stamp {
+                        return false;
+                    }
+                    writer[ju] = stamp;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Recursively halve `rows[lo..hi]` by cumulative weight until each grain
+/// is at or below [`GRAIN_TARGET_NNZ`] (or a single row), appending grain
+/// end offsets to `grain_ptr` (which must currently end with `lo`… i.e.
+/// the caller's running position).
+fn split_grains(
+    rows: &[u32],
+    lo: usize,
+    hi: usize,
+    weight: &impl Fn(u32) -> usize,
+    grain_ptr: &mut Vec<usize>,
+) {
+    if lo == hi {
+        return;
+    }
+    let total: usize = rows[lo..hi].iter().map(|&r| weight(r)).sum();
+    if total <= GRAIN_TARGET_NNZ || hi - lo == 1 {
+        grain_ptr.push(hi);
+        return;
+    }
+    // Split at the first prefix reaching half the weight (≥ 1 row on each
+    // side).
+    let mut acc = 0usize;
+    let mut mid = lo;
+    for k in lo..hi - 1 {
+        acc += weight(rows[k]);
+        if acc * 2 >= total {
+            mid = k + 1;
+            break;
+        }
+    }
+    if mid == lo {
+        mid = lo + 1;
+    }
+    split_grains(rows, lo, mid, weight, grain_ptr);
+    split_grains(rows, mid, hi, weight, grain_ptr);
+}
+
+/// Fixed, thread-count-independent partition of `0..n` rows into `nb`
+/// contiguous nnz-balanced blocks (cumulative-weight bisection on the
+/// strict-lower `row_ptr`). This is the canonical block grid for the
+/// engine's buffered fallback: each block owns one scatter buffer, and the
+/// combine sums buffers in fixed block order — so the result is bitwise
+/// identical for every pool width.
+pub fn canonical_blocks(row_ptr: &[u32], nb: usize) -> Vec<usize> {
+    let n = row_ptr.len() - 1;
+    let nnz = *row_ptr.last().unwrap_or(&0) as usize;
+    let mut block_ptr = Vec::with_capacity(nb + 1);
+    block_ptr.push(0usize);
+    for b in 1..nb {
+        let target = (nnz * b).div_ceil(nb) as u32;
+        // First row boundary at or past the weight target, kept monotone
+        // with the previous block boundary.
+        let pos = row_ptr.partition_point(|&p| p < target).min(n).max(block_ptr[b - 1]);
+        block_ptr.push(pos);
+    }
+    block_ptr.push(n);
+    block_ptr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::sparse::symm::SymmCsr;
+    use crate::util::rng::Rng;
+
+    fn random_sym(n: usize, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut coo = Coo::new(n);
+        for i in 0..n {
+            coo.push(i, i, 4.0 + rng.f64());
+            for _ in 0..4 {
+                let j = rng.below(n);
+                if j != i {
+                    coo.push_sym(i, j, -0.1 * rng.f64());
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn schedule_covers_every_row_once() {
+        let a = random_sym(200, 11);
+        let s = RaceSchedule::build(&a);
+        let mut seen = vec![false; a.n()];
+        for c in 0..s.num_colors() {
+            let rows = s.color_rows(c);
+            assert!(rows.windows(2).all(|w| w[0] < w[1]), "rows ascend within color");
+            for &r in rows {
+                assert!(!seen[r as usize]);
+                seen[r as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+        // Grains tile the same sequence.
+        let mut flat = Vec::new();
+        for g in 0..s.num_grains() {
+            flat.extend_from_slice(s.grain(g));
+        }
+        let mut by_color = Vec::new();
+        for c in 0..s.num_colors() {
+            assert_eq!(
+                s.grains_of(c).map(|g| s.grain(g).len()).sum::<usize>(),
+                s.color_rows(c).len()
+            );
+            by_color.extend_from_slice(s.color_rows(c));
+        }
+        assert_eq!(flat, by_color);
+    }
+
+    #[test]
+    fn schedule_is_conflict_free() {
+        for seed in [1u64, 5, 9] {
+            let a = random_sym(300, seed);
+            let s = RaceSchedule::build(&a);
+            let m = SymmCsr::from_csr(&a).unwrap();
+            assert!(s.is_conflict_free(m.row_ptr(), m.cols()), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn lower_storage_yields_identical_schedule() {
+        let a = random_sym(150, 21);
+        let full = RaceSchedule::build(&a);
+        let lower = RaceSchedule::build(&a.lower());
+        assert_eq!(full.rows, lower.rows);
+        assert_eq!(full.color_ptr, lower.color_ptr);
+    }
+
+    #[test]
+    fn conflict_detector_catches_violation() {
+        // A path 0–1–2: rows 1 and 2 both write y[1] (row 2's lower col 1,
+        // row 1 itself), so a schedule putting them in one color must fail.
+        let mut coo = Coo::new(3);
+        for i in 0..3 {
+            coo.push(i, i, 2.0);
+        }
+        coo.push_sym(1, 0, -1.0);
+        coo.push_sym(2, 1, -1.0);
+        let a = coo.to_csr();
+        let m = SymmCsr::from_csr(&a).unwrap();
+        let bad = RaceSchedule {
+            rows: vec![1, 2, 0],
+            color_ptr: vec![0, 2, 3],
+            grain_ptr: vec![0, 2, 3],
+            color_grains: vec![0, 1, 2],
+        };
+        assert!(!bad.is_conflict_free(m.row_ptr(), m.cols()));
+        let good = RaceSchedule::build(&a);
+        assert!(good.is_conflict_free(m.row_ptr(), m.cols()));
+    }
+
+    #[test]
+    fn canonical_blocks_tile_and_balance() {
+        let a = random_sym(500, 33);
+        let m = SymmCsr::from_csr(&a).unwrap();
+        let bp = canonical_blocks(m.row_ptr(), 8);
+        assert_eq!(bp.len(), 9);
+        assert_eq!(bp[0], 0);
+        assert_eq!(*bp.last().unwrap(), a.n());
+        assert!(bp.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn tridiagonal_colors_like_a_path_power() {
+        // Path graph: distance-2 coloring of a path needs exactly 3 colors
+        // (its square is a union of short cliques).
+        let n = 64;
+        let mut coo = Coo::new(n);
+        for i in 0..n {
+            coo.push(i, i, 2.0);
+        }
+        for i in 1..n {
+            coo.push_sym(i, i - 1, -1.0);
+        }
+        let a = coo.to_csr();
+        let s = RaceSchedule::build(&a);
+        assert_eq!(s.num_colors(), 3);
+    }
+}

@@ -189,6 +189,10 @@ struct FusedCtx<'a> {
     qs: &'a SyncSlice<'a, f64>,
     /// Forward-substitution result (the `scratch` of `TriSolver::apply`).
     ss: &'a SyncSlice<'a, f64>,
+    /// SpMV engine scratch (`SpmvEngine::scratch_elems` doubles — empty
+    /// except for the buffered symmetric mode). Per-solve, because plans
+    /// are `Arc`-shared across concurrent executes.
+    spmv_scratch: &'a SyncSlice<'a, f64>,
     /// Chunk-partials buffers. Two, used alternately: a thread may start
     /// writing the *next* reduction's partials while a straggler is still
     /// combining the previous one (there is deliberately no barrier after
@@ -246,6 +250,7 @@ pub fn pcg_fused(
     let mut p = vec![0.0f64; n];
     let mut q = vec![0.0f64; n];
     let mut scratch = vec![0.0f64; n];
+    let mut spmv_scratch = vec![0.0f64; spmv.scratch_elems()];
     let mut partials = vec![0.0f64; nchunks];
     let mut partials2 = vec![0.0f64; nchunks];
 
@@ -255,6 +260,7 @@ pub fn pcg_fused(
     let ps = SyncSlice::new(&mut p);
     let qs = SyncSlice::new(&mut q);
     let ss = SyncSlice::new(&mut scratch);
+    let sps = SyncSlice::new(&mut spmv_scratch);
     let pt = SyncSlice::new(&mut partials);
     let pt2 = SyncSlice::new(&mut partials2);
     let state = SoloCell::new(FusedState {
@@ -276,6 +282,7 @@ pub fn pcg_fused(
             ps: &ps,
             qs: &qs,
             ss: &ss,
+            spmv_scratch: &sps,
             partials: &pt,
             partials2: &pt2,
             nchunks,
@@ -345,7 +352,7 @@ fn fused_worker(cx: &FusedCtx, tid: usize, nt: usize) {
     // SAFETY (this and every `view` below): phase discipline — the viewed
     // vector's last writes are behind a phase barrier and no thread writes
     // it during the view's phase.
-    cx.spmv.worker(unsafe { view(cx.xs, n) }, cx.qs, tid, nt);
+    cx.spmv.worker(unsafe { view(cx.xs, n) }, cx.qs, cx.spmv_scratch, pool, tid, nt);
     pool.phase_barrier();
     mark(tid, cx.state, &mut clock, "spmv");
     blas1::residual_chunks(cx.b, unsafe { view(cx.qs, n) }, cx.rs, chunks.clone());
@@ -378,7 +385,7 @@ fn fused_worker(cx: &FusedCtx, tid: usize, nt: usize) {
 
         // --- q = A p (+ p·q partials) ------------------------------------
         let p_view = unsafe { view(cx.ps, n) };
-        cx.spmv.worker(p_view, cx.qs, tid, nt);
+        cx.spmv.worker(p_view, cx.qs, cx.spmv_scratch, pool, tid, nt);
         match cx.spmv.owned_chunks(tid) {
             Some(own) => {
                 // CRS: splits are chunk-aligned, so the p·q partials can be
@@ -392,7 +399,8 @@ fn fused_worker(cx: &FusedCtx, tid: usize, nt: usize) {
                 mark(tid, cx.state, &mut clock, "spmv");
             }
             None => {
-                // SELL (σ-sorting may scatter rows): publish q first.
+                // SELL (σ-sorting may scatter rows) and the symmetric
+                // engine (scatters by construction): publish q first.
                 pool.phase_barrier();
                 mark(tid, cx.state, &mut clock, "spmv");
                 blas1::dot_partials(

@@ -26,7 +26,7 @@ use crate::factor::split::{SellTriFactors, TriFactors};
 use crate::ordering::perm::Perm;
 use crate::ordering::{order_matrix, OrderedStructure};
 use crate::solver::cg::{pcg, pcg_fused, CgResult};
-use crate::solver::spmv::{spmv_crs_with, spmv_sell, RowSplits, SpmvEngine};
+use crate::solver::spmv::{spmv_crs_with, spmv_sell, spmv_symm, RowSplits, SpmvEngine, SymmSpmv};
 use crate::solver::trisolve::{
     BmcTriSolver, HbmcTriSolver, McTriSolver, SerialTriSolver, TriSolver,
 };
@@ -114,6 +114,9 @@ pub struct SolverPlan {
     pub a_perm: Csr,
     /// SELL form of the reordered matrix when `cfg.spmv` is SELL.
     pub sell_a: Option<Sell>,
+    /// Symmetric (diag + strict lower) operator with its conflict-free
+    /// schedule when `cfg.spmv` is SymmCsr.
+    pub symm_a: Option<SymmSpmv>,
     /// The ordering-specific substitution engine.
     pub trisolver: Arc<dyn TriSolver>,
     /// Precomputed nnz-balanced CRS row splits for `cfg.threads` (None for
@@ -163,19 +166,27 @@ impl SolverPlan {
         };
 
         let sell_a = match cfg.spmv {
-            SpmvKind::Crs => None,
+            SpmvKind::Crs | SpmvKind::SymmCsr => None,
             SpmvKind::Sell => Some(match cfg.sell_sigma {
                 Some(sigma) => Sell::from_csr_sigma(&a_perm, cfg.w, sigma),
                 None => Sell::from_csr(&a_perm, cfg.w),
             }),
         };
-        let spmv_elements = sell_a
-            .as_ref()
-            .map(|s| s.stored_elements())
-            .unwrap_or_else(|| a_perm.nnz());
+        // `permute_sym` relocates values without rewriting them, so an
+        // exactly-symmetric input stays exactly symmetric; an asymmetric
+        // matrix surfaces here as a typed `InvalidConfig`.
+        let symm_a = match cfg.spmv {
+            SpmvKind::SymmCsr => Some(SymmSpmv::build(&a_perm)?),
+            _ => None,
+        };
+        let spmv_elements = match (&sell_a, &symm_a) {
+            (Some(s), _) => s.stored_elements(),
+            (None, Some(sy)) => sy.matrix().stored_elements(),
+            (None, None) => a_perm.nnz(),
+        };
         let crs_splits = match cfg.spmv {
             SpmvKind::Crs => Some(RowSplits::balanced(a_perm.row_ptr(), cfg.threads)),
-            SpmvKind::Sell => None,
+            SpmvKind::Sell | SpmvKind::SymmCsr => None,
         };
         let storage_seconds = t2.elapsed().as_secs_f64();
 
@@ -212,6 +223,7 @@ impl SolverPlan {
             perm: ordering.perm,
             a_perm,
             sell_a,
+            symm_a,
             trisolver,
             crs_splits,
             setup,
@@ -233,7 +245,7 @@ impl SolverPlan {
     pub fn sell_overhead(&self) -> Option<f64> {
         match self.cfg.spmv {
             SpmvKind::Sell => Some(self.setup.spmv_elements as f64 / self.setup.nnz as f64),
-            SpmvKind::Crs => None,
+            SpmvKind::Crs | SpmvKind::SymmCsr => None,
         }
     }
 
@@ -266,6 +278,7 @@ impl SolverPlan {
 
         let a_perm = &self.a_perm;
         let sell_a = &self.sell_a;
+        let symm_a = &self.symm_a;
         let trisolver = &self.trisolver;
         pool.reset_sync_count();
         let dispatches_before = pool.dispatch_count();
@@ -275,9 +288,10 @@ impl SolverPlan {
         let cg = if opts.legacy_loop {
             let mut scratch = vec![0.0f64; n];
             let splits;
-            let crs_splits = match (&self.crs_splits, sell_a) {
-                (Some(sp), None) if sp.nt() == pool.nthreads() => Some(sp),
-                (_, None) => {
+            let needs_crs = sell_a.is_none() && symm_a.is_none();
+            let crs_splits = match (&self.crs_splits, needs_crs) {
+                (Some(sp), true) if sp.nt() == pool.nthreads() => Some(sp),
+                (_, true) => {
                     splits = RowSplits::balanced(a_perm.row_ptr(), pool.nthreads());
                     Some(&splits)
                 }
@@ -286,9 +300,10 @@ impl SolverPlan {
             let mut spmv =
                 |x: &[f64], y: &mut [f64], times: &mut crate::util::timer::KernelTimes| {
                     let t = Instant::now();
-                    match sell_a {
-                        Some(s) => spmv_sell(s, x, y, pool),
-                        None => spmv_crs_with(a_perm, x, y, pool, crs_splits.unwrap()),
+                    match (sell_a, symm_a) {
+                        (Some(s), _) => spmv_sell(s, x, y, pool),
+                        (None, Some(sy)) => spmv_symm(sy, x, y, pool),
+                        (None, None) => spmv_crs_with(a_perm, x, y, pool, crs_splits.unwrap()),
                     }
                     times.add("spmv", t.elapsed());
                 };
@@ -307,14 +322,17 @@ impl SolverPlan {
                 opts.record_history,
             )
         } else {
-            let engine = match sell_a {
-                Some(s) => SpmvEngine::sell(s),
-                None => match &self.crs_splits {
+            let engine = if let Some(sy) = symm_a {
+                SpmvEngine::symm(sy)
+            } else if let Some(s) = sell_a {
+                SpmvEngine::sell(s)
+            } else {
+                match &self.crs_splits {
                     Some(sp) if sp.nt() == pool.nthreads() => {
                         SpmvEngine::crs_with(a_perm, sp.clone())
                     }
                     _ => SpmvEngine::crs(a_perm, pool.nthreads()),
-                },
+                }
             };
             pcg_fused(
                 &engine,

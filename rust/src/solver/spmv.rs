@@ -11,15 +11,28 @@
 //! ([`blas1::CHUNK`]) so the fused CG loop can produce the `p·q` partials
 //! in the same sweep that writes `q`.
 //!
+//! The third engine is the **symmetric** kernel ([`SymmSpmv`]): diagonal +
+//! strict lower triangle only ([`crate::sparse::symm::SymmCsr`]), each
+//! stored nonzero updating both `y[i]` and `y[j]` — about half the matrix
+//! bytes per iteration. Its scatter side needs a conflict-free schedule
+//! ([`crate::ordering::race::RaceSchedule`]); when the graph colors badly
+//! it falls back to per-block scatter buffers combined in fixed block
+//! order. Both modes are bitwise-deterministic across runs and thread
+//! counts.
+//!
 //! Each format exposes an inner `*_worker(tid-range)` body callable from
 //! inside an open pool region (the single-dispatch CG loop); the
-//! `spmv_crs` / `spmv_sell` entry points are thin one-`run` wrappers kept
-//! for the legacy per-kernel path, benches and tests.
+//! `spmv_crs` / `spmv_sell` / `spmv_symm` entry points are thin one-`run`
+//! wrappers kept for the legacy per-kernel path, benches and tests.
 
+use crate::coordinator::metrics::SpmvSyncShape;
 use crate::coordinator::pool::{Pool, SyncSlice};
+use crate::error::Result;
+use crate::ordering::race::{canonical_blocks, RaceSchedule};
 use crate::solver::blas1::CHUNK;
 use crate::sparse::csr::Csr;
 use crate::sparse::sell::Sell;
+use crate::sparse::symm::SymmCsr;
 use std::ops::Range;
 
 /// Contiguous per-thread row ranges for CRS SpMV, balanced by nonzeros and
@@ -165,12 +178,209 @@ pub fn spmv_sell(s: &Sell, x: &[f64], y: &mut [f64], pool: &Pool) {
     });
 }
 
+/// Color-count ceiling for the symmetric engine's scheduled mode: each
+/// color costs one barrier per SpMV, so a matrix whose distance-2 coloring
+/// exceeds this is cheaper under the buffered fallback (one barrier, at
+/// the price of `NBUF·n` scatter-buffer traffic).
+pub const MAX_SYMM_COLORS: usize = 64;
+
+/// Scatter buffers in the symmetric engine's buffered fallback — a fixed
+/// count (not the thread count!) so the combine order, and therefore every
+/// bit of the result, is independent of the pool width.
+pub const NBUF: usize = 8;
+
+/// How the symmetric kernel parallelizes its scatter updates.
+#[derive(Debug, Clone)]
+pub enum SymmMode {
+    /// Conflict-free color schedule: within a color every `y` element has
+    /// exactly one writing row, so threads scatter in place. One barrier
+    /// per color.
+    Colored(RaceSchedule),
+    /// Per-block scatter buffers over a fixed block grid
+    /// (`block_ptr[b]..block_ptr[b+1]` rows own buffer `b`), combined
+    /// left-to-right in block order after one barrier.
+    Buffered { block_ptr: Vec<usize> },
+}
+
+/// Symmetric SpMV operator: [`SymmCsr`] storage plus the parallel schedule
+/// chosen at build time. Shared read-only by every solve of a plan; the
+/// buffered mode's scratch is per-solve (see [`SymmSpmv::scratch_elems`]).
+#[derive(Debug, Clone)]
+pub struct SymmSpmv {
+    m: SymmCsr,
+    mode: SymmMode,
+}
+
+impl SymmSpmv {
+    /// Build from a full (exactly symmetric) CRS matrix; picks the colored
+    /// schedule when it stays under [`MAX_SYMM_COLORS`] colors, else the
+    /// buffered fallback.
+    pub fn build(a: &Csr) -> Result<SymmSpmv> {
+        SymmSpmv::build_with_max_colors(a, MAX_SYMM_COLORS)
+    }
+
+    /// [`SymmSpmv::build`] with an explicit color ceiling (tests pass 0 to
+    /// force the buffered fallback).
+    pub fn build_with_max_colors(a: &Csr, max_colors: usize) -> Result<SymmSpmv> {
+        let m = SymmCsr::from_csr(a)?;
+        let sched = RaceSchedule::build(a);
+        let mode = if sched.num_colors() <= max_colors
+            && sched.is_conflict_free(m.row_ptr(), m.cols())
+        {
+            SymmMode::Colored(sched)
+        } else {
+            SymmMode::Buffered { block_ptr: canonical_blocks(m.row_ptr(), NBUF) }
+        };
+        Ok(SymmSpmv { m, mode })
+    }
+
+    pub fn matrix(&self) -> &SymmCsr {
+        &self.m
+    }
+
+    pub fn mode(&self) -> &SymmMode {
+        &self.mode
+    }
+
+    /// Scratch doubles the caller must provide to [`spmv_symm_worker`]
+    /// (zero for the colored schedule; `NBUF·n` scatter buffers for the
+    /// buffered fallback). Per-solve, **not** per-plan: plans are shared
+    /// `Arc`s executed concurrently.
+    pub fn scratch_elems(&self) -> usize {
+        match &self.mode {
+            SymmMode::Colored(_) => 0,
+            SymmMode::Buffered { block_ptr } => (block_ptr.len() - 1) * self.m.n(),
+        }
+    }
+
+    /// Barrier structure for the sync-accounting model
+    /// ([`crate::coordinator::metrics`]).
+    pub fn sync_shape(&self) -> SpmvSyncShape {
+        match &self.mode {
+            SymmMode::Colored(sched) => SpmvSyncShape::SymmColored { colors: sched.num_colors() },
+            SymmMode::Buffered { .. } => SpmvSyncShape::SymmBuffered,
+        }
+    }
+}
+
+/// Symmetric SpMV body for worker `tid`, callable inside an open pool
+/// region. **Synchronizes internally** (unlike the CRS/SELL workers):
+/// `colors` barriers in colored mode, one in buffered mode — see
+/// [`SpmvSyncShape`]. The *caller's* next barrier publishes the final
+/// writes. Every thread of the region must call this with the same
+/// arguments (SPMD contract). `scratch` must hold
+/// [`SymmSpmv::scratch_elems`] doubles and must not be read by the caller
+/// between calls.
+pub fn spmv_symm_worker(
+    s: &SymmSpmv,
+    x: &[f64],
+    ys: &SyncSlice<f64>,
+    scratch: &SyncSlice<f64>,
+    pool: &Pool,
+    tid: usize,
+    nt: usize,
+) {
+    let m = &s.m;
+    let n = m.n();
+    let diag = m.diag();
+    match &s.mode {
+        SymmMode::Colored(sched) => {
+            // Phase 0: y = D·x (disjoint chunks).
+            for i in Pool::chunk(n, tid, nt) {
+                unsafe { ys.set(i, diag[i] * x[i]) };
+            }
+            pool.phase_barrier();
+            // One color at a time: within a color every y element has a
+            // single writing row (conflict-freedom), and the accumulation
+            // order into any y[j] is the fixed color sequence — so how
+            // grains are dealt to threads cannot change a single bit.
+            let ncolors = sched.num_colors();
+            for c in 0..ncolors {
+                let grains = sched.grains_of(c);
+                let g0 = grains.start;
+                for g in Pool::chunk(grains.end - g0, tid, nt) {
+                    for &row in sched.grain(g0 + g) {
+                        let i = row as usize;
+                        let xi = x[i];
+                        let (cols, vals) = m.row(i);
+                        let mut acc = 0.0;
+                        for (&j, &v) in cols.iter().zip(vals) {
+                            let j = j as usize;
+                            acc += v * x[j];
+                            // SAFETY: single writer per element within a
+                            // color (RaceSchedule conflict-freedom).
+                            unsafe { ys.set(j, ys.get(j) + v * xi) };
+                        }
+                        unsafe { ys.set(i, ys.get(i) + acc) };
+                    }
+                }
+                if c + 1 < ncolors {
+                    pool.phase_barrier();
+                }
+            }
+        }
+        SymmMode::Buffered { block_ptr } => {
+            let nb = block_ptr.len() - 1;
+            debug_assert!(scratch.len() >= nb * n, "buffered symm SpMV needs NBUF·n scratch");
+            // Phase A: each thread owns whole blocks (fixed grid, any
+            // width): zero the block's buffer, write y[i] for its rows
+            // (diagonal + gather), scatter into its own buffer.
+            for b in Pool::chunk(nb, tid, nt) {
+                let base = b * n;
+                for t in 0..n {
+                    unsafe { scratch.set(base + t, 0.0) };
+                }
+                for i in block_ptr[b]..block_ptr[b + 1] {
+                    let xi = x[i];
+                    let (cols, vals) = m.row(i);
+                    let mut acc = diag[i] * xi;
+                    for (&j, &v) in cols.iter().zip(vals) {
+                        let j = j as usize;
+                        acc += v * x[j];
+                        unsafe { scratch.set(base + j, scratch.get(base + j) + v * xi) };
+                    }
+                    // SAFETY: row i belongs to exactly one block.
+                    unsafe { ys.set(i, acc) };
+                }
+            }
+            pool.phase_barrier();
+            // Phase B: combine buffers left-to-right in fixed block order
+            // over disjoint element chunks — the block count (not the
+            // thread count) fixes the summation order, so results are
+            // bitwise identical for every pool width.
+            for j in Pool::chunk(n, tid, nt) {
+                let mut v = unsafe { ys.get(j) };
+                for b in 0..nb {
+                    v += unsafe { scratch.get(b * n + j) };
+                }
+                unsafe { ys.set(j, v) };
+            }
+        }
+    }
+}
+
+/// `y = A x`, symmetric storage — legacy one-`run` wrapper around
+/// [`spmv_symm_worker`] (allocates the buffered mode's scratch per call;
+/// the fused loop allocates it once per solve instead).
+pub fn spmv_symm(s: &SymmSpmv, x: &[f64], y: &mut [f64], pool: &Pool) {
+    let n = s.m.n();
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), n);
+    let mut scratch = vec![0.0f64; s.scratch_elems()];
+    let ys = SyncSlice::new(y);
+    let ss = SyncSlice::new(&mut scratch);
+    pool.run(&|tid, nt| {
+        spmv_symm_worker(s, x, &ys, &ss, pool, tid, nt);
+    });
+}
+
 /// The SpMV side of a solve, resolved once per `SolverPlan::execute`:
 /// format, kernel path and thread partition. The fused CG loop drives it
 /// through [`SpmvEngine::worker`].
 pub enum SpmvEngine<'a> {
     Crs { a: &'a Csr, splits: RowSplits },
     Sell { s: &'a Sell, simd: SellSimd },
+    Symm { s: &'a SymmSpmv },
 }
 
 impl<'a> SpmvEngine<'a> {
@@ -186,8 +396,24 @@ impl<'a> SpmvEngine<'a> {
         SpmvEngine::Sell { s, simd: detect_sell_simd(s.c()) }
     }
 
-    /// This worker's share of `y = A x` (no barriers inside).
-    pub fn worker(&self, x: &[f64], ys: &SyncSlice<f64>, tid: usize, nt: usize) {
+    pub fn symm(s: &'a SymmSpmv) -> SpmvEngine<'a> {
+        SpmvEngine::Symm { s }
+    }
+
+    /// This worker's share of `y = A x`. CRS/SELL run barrier-free; the
+    /// symmetric engine synchronizes internally (see [`spmv_symm_worker`])
+    /// — either way the *caller's* next barrier publishes `y`. `scratch`
+    /// must hold [`SpmvEngine::scratch_elems`] doubles (an empty slice for
+    /// CRS/SELL).
+    pub fn worker(
+        &self,
+        x: &[f64],
+        ys: &SyncSlice<f64>,
+        scratch: &SyncSlice<f64>,
+        pool: &Pool,
+        tid: usize,
+        nt: usize,
+    ) {
         match self {
             SpmvEngine::Crs { a, splits } => {
                 // Hard assert (mirrors `spmv_crs_with`): a width mismatch
@@ -198,17 +424,40 @@ impl<'a> SpmvEngine<'a> {
             SpmvEngine::Sell { s, simd } => {
                 spmv_sell_worker(s, x, ys, Pool::chunk(s.nslices(), tid, nt), *simd);
             }
+            SpmvEngine::Symm { s } => {
+                spmv_symm_worker(s, x, ys, scratch, pool, tid, nt);
+            }
         }
     }
 
     /// Reduction chunks whose `y` rows were written entirely by worker
     /// `tid`, or `None` when ownership is not chunk-coherent (SELL may
-    /// scatter σ-sorted rows anywhere, so the fused loop must barrier
-    /// before forming `p·q` partials).
+    /// scatter σ-sorted rows anywhere; the symmetric kernel scatters by
+    /// construction), so the fused loop must barrier before forming `p·q`
+    /// partials.
     pub fn owned_chunks(&self, tid: usize) -> Option<Range<usize>> {
         match self {
             SpmvEngine::Crs { splits, .. } => Some(splits.chunks(tid)),
-            SpmvEngine::Sell { .. } => None,
+            SpmvEngine::Sell { .. } | SpmvEngine::Symm { .. } => None,
+        }
+    }
+
+    /// Per-solve scratch doubles this engine's worker needs (only the
+    /// buffered symmetric mode uses any).
+    pub fn scratch_elems(&self) -> usize {
+        match self {
+            SpmvEngine::Crs { .. } | SpmvEngine::Sell { .. } => 0,
+            SpmvEngine::Symm { s } => s.scratch_elems(),
+        }
+    }
+
+    /// Barrier structure for the analytic sync model
+    /// ([`crate::coordinator::metrics::syncs_per_fused_iteration_shaped`]).
+    pub fn sync_shape(&self) -> SpmvSyncShape {
+        match self {
+            SpmvEngine::Crs { .. } => SpmvSyncShape::Crs,
+            SpmvEngine::Sell { .. } => SpmvSyncShape::Sell,
+            SpmvEngine::Symm { s } => s.sync_shape(),
         }
     }
 }
@@ -460,5 +709,85 @@ mod tests {
         let mut y = vec![0.0; a.n()];
         spmv_crs_with(&a, &x, &mut y, &pool, &splits);
         assert!(crate::util::max_abs_diff(&y, &y_ref) < 1e-14);
+    }
+
+    fn random_sym_csr(n: usize, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut coo = Coo::new(n);
+        for i in 0..n {
+            coo.push(i, i, 4.0 + rng.f64());
+            for _ in 0..4 {
+                let j = rng.below(n);
+                if j != i {
+                    coo.push_sym(i, j, rng.range_f64(-0.3, 0.3));
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn symm_parallel_matches_full_csr() {
+        let a = random_sym_csr(257, 13);
+        let x: Vec<f64> = (0..a.n()).map(|i| (i as f64 * 0.1).sin() + 1.0).collect();
+        let mut y_ref = vec![0.0; a.n()];
+        a.mul_vec(&x, &mut y_ref);
+        for max_colors in [MAX_SYMM_COLORS, 0] {
+            let s = SymmSpmv::build_with_max_colors(&a, max_colors).expect("build");
+            for nt in [1usize, 2, 4] {
+                let pool = Pool::new(nt);
+                let mut y = vec![0.0; a.n()];
+                spmv_symm(&s, &x, &mut y, &pool);
+                let rel = crate::util::rel_l2_diff(&y, &y_ref);
+                assert!(rel < 1e-13, "max_colors={max_colors} nt={nt}: rel={rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn symm_is_bitwise_deterministic_across_runs_and_widths() {
+        let a = random_sym_csr(310, 29);
+        let x: Vec<f64> = (0..a.n()).map(|i| ((i * 7 % 13) as f64).cos()).collect();
+        for max_colors in [MAX_SYMM_COLORS, 0] {
+            let s = SymmSpmv::build_with_max_colors(&a, max_colors).expect("build");
+            match (max_colors, s.mode()) {
+                (0, SymmMode::Buffered { .. }) | (MAX_SYMM_COLORS, SymmMode::Colored(_)) => {}
+                (mc, m) => panic!("unexpected mode {m:?} for ceiling {mc}"),
+            }
+            let mut reference: Option<Vec<u64>> = None;
+            for nt in [1usize, 2, 4] {
+                for _rep in 0..2 {
+                    let pool = Pool::new(nt);
+                    let mut y = vec![0.0; a.n()];
+                    spmv_symm(&s, &x, &mut y, &pool);
+                    let bits: Vec<u64> = y.iter().map(|v| v.to_bits()).collect();
+                    match &reference {
+                        None => reference = Some(bits),
+                        Some(r) => {
+                            assert_eq!(r, &bits, "max_colors={max_colors} nt={nt}")
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symm_engine_reports_scratch_and_shape() {
+        let a = random_sym_csr(120, 3);
+        let colored = SymmSpmv::build(&a).unwrap();
+        assert_eq!(colored.scratch_elems(), 0);
+        assert!(matches!(
+            SpmvEngine::symm(&colored).sync_shape(),
+            SpmvSyncShape::SymmColored { colors } if colors >= 1
+        ));
+        let buffered = SymmSpmv::build_with_max_colors(&a, 0).unwrap();
+        assert_eq!(buffered.scratch_elems(), NBUF * a.n());
+        assert!(matches!(
+            SpmvEngine::symm(&buffered).sync_shape(),
+            SpmvSyncShape::SymmBuffered
+        ));
+        let splits = RowSplits::balanced(a.row_ptr(), 2);
+        assert_eq!(SpmvEngine::crs_with(&a, splits).scratch_elems(), 0);
     }
 }

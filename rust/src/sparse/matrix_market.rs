@@ -5,6 +5,14 @@
 //! value 1.0). This lets users run the solver on the paper's actual
 //! SuiteSparse datasets when they have them; the bundled generators in
 //! [`crate::gen`] are the offline stand-ins.
+//!
+//! Symmetric files have two read paths: [`read`] mirrors every
+//! off-diagonal entry into a full CSR, while [`read_lower`] keeps the
+//! stored lower triangle as-is. The latter feeds symmetric-SpMV plans
+//! ([`SpmvKind::SymmCsr`](crate::config::SpmvKind)): deduplicating in
+//! lower form and mirroring afterwards ([`expand_lower`]) makes the two
+//! halves bitwise-identical by construction, so the engine's exact
+//! symmetry check can never trip on file quirks.
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
@@ -12,6 +20,15 @@ use std::path::Path;
 use crate::error::{HbmcError, Result};
 use crate::sparse::coo::Coo;
 use crate::sparse::csr::Csr;
+
+/// How a `symmetric` file's stored lower triangle is materialized.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SymmetryMode {
+    /// Mirror every off-diagonal entry (full CSR; `general` files allowed).
+    Expand,
+    /// Keep the stored triangle as-is (`general` files rejected).
+    KeepLower,
+}
 
 /// Read a square MatrixMarket file into CSR (symmetric files are expanded).
 pub fn read(path: &Path) -> Result<Csr> {
@@ -22,6 +39,51 @@ pub fn read(path: &Path) -> Result<Csr> {
 
 /// Parse from any reader (unit-testable without touching the filesystem).
 pub fn read_from(reader: impl BufRead) -> Result<Csr> {
+    read_coo(reader, SymmetryMode::Expand)
+}
+
+/// Read a `symmetric` MatrixMarket file keeping only the stored lower
+/// triangle (diagonal + strict lower) — the input for symmetric-SpMV
+/// plans. `general` files and entries above the diagonal are typed
+/// parse errors.
+pub fn read_lower(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| HbmcError::io(format!("opening {}", path.display()), e))?;
+    read_lower_from(BufReader::new(f))
+}
+
+/// [`read_lower`] from any reader.
+pub fn read_lower_from(reader: impl BufRead) -> Result<Csr> {
+    read_coo(reader, SymmetryMode::KeepLower)
+}
+
+/// Mirror a lower-triangular CSR (diagonal + strict lower, as produced by
+/// [`read_lower`]) into the full symmetric matrix. Because duplicates were
+/// summed in lower form first, `A[i][j]` and `A[j][i]` are bitwise equal
+/// by construction. Entries above the diagonal are a typed error.
+pub fn expand_lower(l: &Csr) -> Result<Csr> {
+    let n = l.n();
+    let mut coo = Coo::with_capacity(n, 2 * l.nnz());
+    for i in 0..n {
+        let (cols, vals) = l.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            let j = c as usize;
+            if j > i {
+                return Err(HbmcError::parse(format!(
+                    "expand_lower: entry ({i},{j}) above the diagonal"
+                )));
+            }
+            if j == i {
+                coo.push(i, i, v);
+            } else {
+                coo.push_sym(i, j, v);
+            }
+        }
+    }
+    Ok(coo.to_csr())
+}
+
+fn read_coo(reader: impl BufRead, mode: SymmetryMode) -> Result<Csr> {
     let mut lines = reader.lines();
     let header = lines
         .next()
@@ -45,6 +107,11 @@ pub fn read_from(reader: impl BufRead) -> Result<Csr> {
             return Err(HbmcError::parse(format!("matrix market: unsupported symmetry {other:?}")))
         }
     };
+    if mode == SymmetryMode::KeepLower && !symmetric {
+        return Err(HbmcError::parse(
+            "matrix market: read_lower requires a `symmetric` file, got `general`",
+        ));
+    }
 
     let mut size_line = None;
     for line in lines.by_ref() {
@@ -75,7 +142,8 @@ pub fn read_from(reader: impl BufRead) -> Result<Csr> {
         )));
     }
 
-    let mut coo = Coo::with_capacity(nrows, if symmetric { 2 * nnz } else { nnz });
+    let expand = symmetric && mode == SymmetryMode::Expand;
+    let mut coo = Coo::with_capacity(nrows, if expand { 2 * nnz } else { nnz });
     let mut seen = 0usize;
     for line in lines {
         let line = line.map_err(|e| HbmcError::io("matrix market: read error", e))?;
@@ -107,7 +175,12 @@ pub fn read_from(reader: impl BufRead) -> Result<Csr> {
                 "matrix market: 1-based index ({i},{j}) out of range"
             )));
         }
-        if symmetric {
+        if mode == SymmetryMode::KeepLower && j > i {
+            return Err(HbmcError::parse(format!(
+                "matrix market: symmetric file stores entry ({i},{j}) above the diagonal"
+            )));
+        }
+        if expand {
             coo.push_sym(i - 1, j - 1, v);
         } else {
             coo.push(i - 1, j - 1, v);
@@ -175,6 +248,39 @@ mod tests {
         assert!(read_from(Cursor::new("%%MatrixMarket matrix coordinate real general\n2 3 1\n1 1 1.0\n")).is_err());
         assert!(read_from(Cursor::new("%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n")).is_err());
         assert!(read_from(Cursor::new("%%MatrixMarket matrix array real general\n2 2 1\n")).is_err());
+    }
+
+    #[test]
+    fn lower_read_round_trips_vs_expanding_reader() {
+        // 3x3 symmetric with a duplicate lower entry (summed in COO):
+        // the kept-lower triangle, mirrored, must equal the expanding
+        // reader's full matrix entry-for-entry.
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n3 3 5\n\
+                    1 1 4.0\n2 2 5.0\n3 3 6.0\n2 1 -1.5\n3 2 -0.25\n";
+        let lower = read_lower_from(Cursor::new(text)).unwrap();
+        assert_eq!(lower.nnz(), 5, "lower view keeps stored entries only");
+        assert_eq!(lower.get(0, 1), None, "no mirrored upper entries");
+        let full = expand_lower(&lower).unwrap();
+        let expanded = read_from(Cursor::new(text)).unwrap();
+        assert_eq!(full, expanded);
+    }
+
+    #[test]
+    fn lower_read_rejects_general_and_upper_entries() {
+        let general = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 1.0\n";
+        assert!(read_lower_from(Cursor::new(general)).is_err());
+        // A symmetric file that stores the *upper* triangle is legal
+        // MatrixMarket but not a lower view.
+        let upper = "%%MatrixMarket matrix coordinate real symmetric\n2 2 2\n1 1 1.0\n1 2 -1.0\n";
+        assert!(read_lower_from(Cursor::new(upper)).is_err());
+        assert!(read_from(Cursor::new(upper)).is_ok(), "expanding reader accepts it");
+    }
+
+    #[test]
+    fn expand_lower_rejects_upper_entries() {
+        let mut coo = Coo::new(2);
+        coo.push(0, 1, 1.0);
+        assert!(expand_lower(&coo.to_csr()).is_err());
     }
 
     #[test]

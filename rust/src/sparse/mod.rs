@@ -5,9 +5,12 @@
 //!   paper's "CRS"),
 //! * [`sell`] — sliced-ELL / SELL-C-σ (Kreutzer et al. 2014), the
 //!   SIMD-friendly format the paper uses for HBMC (`slice = w`),
+//! * [`symm`] — diagonal + strict-lower-triangle view of a symmetric
+//!   matrix, the storage behind the symmetric SpMV engine,
 //! * [`matrix_market`] — MatrixMarket IO for external datasets.
 
 pub mod coo;
 pub mod csr;
 pub mod matrix_market;
 pub mod sell;
+pub mod symm;

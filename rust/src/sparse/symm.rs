@@ -1,0 +1,239 @@
+//! Lower-triangle + diagonal storage for the symmetric SpMV engine.
+//!
+//! A symmetric matrix streamed through CRS moves every off-diagonal value
+//! twice per SpMV (once as `a[i][j]`, once as `a[j][i]`). [`SymmCsr`]
+//! stores the diagonal densely plus the **strict lower triangle** in CRS
+//! layout; each stored nonzero `(i, j, v)` with `j < i` then contributes
+//! to *both* `y[i] += v·x[j]` (gather) and `y[j] += v·x[i]` (scatter),
+//! roughly halving the matrix bytes per iteration — the RACE idea of
+//! Alappat et al. (see PAPERS.md). The parallel schedule that makes the
+//! scatter side safe lives in [`crate::ordering::race`]; the engine itself
+//! in [`crate::solver::spmv`]. This module is only the storage view plus a
+//! serial reference kernel.
+//!
+//! Construction is strict: [`SymmCsr::from_csr`] demands **exact** (bitwise)
+//! symmetry — the solver pipeline only ever feeds it matrices that are
+//! symmetric by construction (generators, `push_sym` readers,
+//! `permute_sym`), so a mismatch is a configuration error, not something to
+//! paper over with a tolerance.
+
+use crate::error::{HbmcError, Result};
+use crate::sparse::csr::Csr;
+
+/// Symmetric matrix as dense diagonal + strict-lower-triangle CRS.
+#[derive(Debug, Clone)]
+pub struct SymmCsr {
+    n: usize,
+    diag: Vec<f64>,
+    row_ptr: Vec<u32>,
+    cols: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+impl SymmCsr {
+    /// Build from a full symmetric CRS matrix. Returns
+    /// [`HbmcError::InvalidConfig`] unless every off-diagonal entry has a
+    /// bitwise-equal mirror (`a[i][j]` ≡ `a[j][i]`).
+    pub fn from_csr(a: &Csr) -> Result<SymmCsr> {
+        let n = a.n();
+        let mut diag = vec![0.0f64; n];
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0u32);
+        for i in 0..n {
+            let (ci, vi) = a.row(i);
+            for (&j, &v) in ci.iter().zip(vi) {
+                let j = j as usize;
+                if j == i {
+                    diag[i] = v;
+                    continue;
+                }
+                let mirror = a.get(j, i).map(f64::to_bits);
+                if mirror != Some(v.to_bits()) {
+                    return Err(HbmcError::invalid_config(format!(
+                        "SymmCsr requires an exactly symmetric matrix: a[{i}][{j}] = {v:?} \
+                         but a[{j}][{i}] = {:?}",
+                        a.get(j, i)
+                    )));
+                }
+                if j < i {
+                    cols.push(j as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(cols.len() as u32);
+        }
+        Ok(SymmCsr { n, diag, row_ptr, cols, vals })
+    }
+
+    /// Build from a lower-triangular CRS (entries with `col ≤ row` only,
+    /// e.g. the output of [`crate::sparse::matrix_market::read_lower`] or
+    /// [`Csr::lower`]). Returns [`HbmcError::InvalidConfig`] if any entry
+    /// lies above the diagonal.
+    pub fn from_lower(l: &Csr) -> Result<SymmCsr> {
+        let n = l.n();
+        let mut diag = vec![0.0f64; n];
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0u32);
+        for i in 0..n {
+            let (ci, vi) = l.row(i);
+            for (&j, &v) in ci.iter().zip(vi) {
+                let j = j as usize;
+                if j > i {
+                    return Err(HbmcError::invalid_config(format!(
+                        "SymmCsr::from_lower: entry ({i}, {j}) lies above the diagonal"
+                    )));
+                }
+                if j == i {
+                    diag[i] = v;
+                } else {
+                    cols.push(j as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(cols.len() as u32);
+        }
+        Ok(SymmCsr { n, diag, row_ptr, cols, vals })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stored strict-lower nonzeros.
+    pub fn nnz_lower(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Stored elements streamed per SpMV: `n` diagonal values plus the
+    /// strict lower triangle (the traffic-model / `OpProfile` unit).
+    pub fn stored_elements(&self) -> usize {
+        self.n + self.vals.len()
+    }
+
+    pub fn diag(&self) -> &[f64] {
+        &self.diag
+    }
+
+    pub fn row_ptr(&self) -> &[u32] {
+        &self.row_ptr
+    }
+
+    pub fn cols(&self) -> &[u32] {
+        &self.cols
+    }
+
+    pub fn vals(&self) -> &[f64] {
+        &self.vals
+    }
+
+    /// Strict-lower row `i` as `(cols, vals)`.
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let lo = self.row_ptr[i] as usize;
+        let hi = self.row_ptr[i + 1] as usize;
+        (&self.cols[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Serial reference `y = A·x` in natural row order (diagonal pass,
+    /// then gather + scatter per strict-lower nonzero). This is the
+    /// *numerical* reference for the parallel engine — the parallel
+    /// schedule accumulates in a different (color) order, so agreement is
+    /// to rounding (≈1e-13 relative), not bitwise.
+    pub fn mul_vec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        for i in 0..self.n {
+            y[i] = self.diag[i] * x[i];
+        }
+        for i in 0..self.n {
+            let xi = x[i];
+            let (ci, vi) = self.row(i);
+            let mut acc = 0.0;
+            for (&j, &v) in ci.iter().zip(vi) {
+                let j = j as usize;
+                acc += v * x[j];
+                y[j] += v * xi;
+            }
+            y[i] += acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::util::rng::Rng;
+
+    fn random_sym(n: usize, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut coo = Coo::new(n);
+        for i in 0..n {
+            coo.push(i, i, 4.0 + rng.f64());
+            for _ in 0..3 {
+                let j = rng.below(n);
+                if j != i {
+                    coo.push_sym(i, j, -0.5 + rng.f64() * 0.1);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn from_csr_matches_full_mul() {
+        for seed in [1u64, 7, 42] {
+            let a = random_sym(64, seed);
+            let s = SymmCsr::from_csr(&a).expect("symmetric by construction");
+            assert_eq!(s.stored_elements(), a.n() + (a.nnz() - a.n()) / 2);
+            let x: Vec<f64> = (0..a.n()).map(|i| (i as f64).sin() + 1.0).collect();
+            let mut y_full = vec![0.0; a.n()];
+            let mut y_symm = vec![0.0; a.n()];
+            a.mul_vec(&x, &mut y_full);
+            s.mul_vec(&x, &mut y_symm);
+            let rel = crate::util::rel_l2_diff(&y_symm, &y_full);
+            assert!(rel < 1e-13, "seed {seed}: rel diff {rel}");
+        }
+    }
+
+    #[test]
+    fn from_lower_round_trips_through_lower_view() {
+        let a = random_sym(48, 3);
+        let via_full = SymmCsr::from_csr(&a).unwrap();
+        let via_lower = SymmCsr::from_lower(&a.lower()).unwrap();
+        assert_eq!(via_full.row_ptr(), via_lower.row_ptr());
+        assert_eq!(via_full.cols(), via_lower.cols());
+        assert_eq!(via_full.vals(), via_lower.vals());
+        assert_eq!(via_full.diag(), via_lower.diag());
+    }
+
+    #[test]
+    fn asymmetric_matrix_is_a_typed_error() {
+        let mut coo = Coo::new(3);
+        coo.push(0, 0, 2.0);
+        coo.push(1, 1, 2.0);
+        coo.push(2, 2, 2.0);
+        coo.push(1, 0, -1.0); // no (0,1) mirror
+        let a = coo.to_csr();
+        match SymmCsr::from_csr(&a) {
+            Err(HbmcError::InvalidConfig(_)) => {}
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn from_lower_rejects_upper_entries() {
+        let mut coo = Coo::new(2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, -1.0);
+        coo.push(1, 1, 1.0);
+        let u = coo.to_csr();
+        match SymmCsr::from_lower(&u) {
+            Err(HbmcError::InvalidConfig(_)) => {}
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! Acceptance suite for the symmetric SpMV engine (ISSUE 6).
+//!
+//! Contract under test:
+//!
+//! * `SpmvKind::SymmCsr` computes the same `A·x` as full-CSR within
+//!   1e-13 relative error, in both the conflict-free colored mode and the
+//!   buffered fallback, at every thread count;
+//! * the fused CG loop under SymmCsr converges in exactly the CRS
+//!   iteration count, and re-runs are bitwise identical — across runs,
+//!   across thread counts {1, 2, 4}, and between the fused and legacy
+//!   execution paths;
+//! * a converged fused SymmCsr solve is exactly **one** pool dispatch and
+//!   its barrier count matches the shaped sync model
+//!   (`syncs_per_fused_iteration_shaped`);
+//! * the RACE-style schedule is a conflict-free row partition;
+//! * the tuner grid races SymmCsr and invalid combinations (σ on a
+//!   symmetric plan, an asymmetric matrix) fail typed `InvalidConfig`.
+
+use std::collections::HashSet;
+
+use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
+use hbmc::coordinator::metrics::syncs_per_fused_iteration_shaped;
+use hbmc::coordinator::pool::Pool;
+use hbmc::error::HbmcError;
+use hbmc::gen::suite;
+use hbmc::ordering::race::RaceSchedule;
+use hbmc::solver::plan::{ExecOptions, SolveOutcome, SolverPlan};
+use hbmc::solver::spmv::{spmv_symm, SymmSpmv};
+use hbmc::sparse::coo::Coo;
+use hbmc::sparse::csr::Csr;
+use hbmc::tune::{ConfigSpace, HardwareSignature};
+use hbmc::util::rng::Rng;
+
+const ORDERINGS: [OrderingKind; 4] = [
+    OrderingKind::Natural,
+    OrderingKind::Mc,
+    OrderingKind::Bmc,
+    OrderingKind::Hbmc,
+];
+
+/// Random exactly-symmetric positive-ish matrix. Off-diagonal pairs are
+/// deduplicated so mirror entries stay bitwise equal through COO
+/// duplicate summation.
+fn random_sym(n: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n);
+    let mut used: HashSet<(usize, usize)> = HashSet::new();
+    for i in 0..n {
+        coo.push(i, i, 8.0 + rng.f64());
+    }
+    for _ in 0..3 * n {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        let (lo, hi) = (i.min(j), i.max(j));
+        if lo != hi && used.insert((lo, hi)) {
+            coo.push_sym(hi, lo, -1.0 + 0.25 * rng.f64());
+        }
+    }
+    coo.to_csr()
+}
+
+fn cfg_for(ordering: OrderingKind, spmv: SpmvKind, shift: f64) -> SolverConfig {
+    SolverConfig {
+        ordering,
+        bs: 8,
+        w: 4,
+        spmv,
+        shift,
+        rtol: 1e-6,
+        threads: 1,
+        ..Default::default()
+    }
+}
+
+fn run(plan: &SolverPlan, b: &[f64], nt: usize, legacy: bool) -> SolveOutcome {
+    let pool = Pool::new(nt);
+    plan.execute(
+        &pool,
+        b,
+        &ExecOptions { record_history: true, legacy_loop: legacy, ..Default::default() },
+    )
+    .expect("solve")
+}
+
+fn assert_bitwise_equal(a: &SolveOutcome, b: &SolveOutcome, what: &str) {
+    assert_eq!(a.cg.iterations, b.cg.iterations, "{what}: iteration count");
+    assert_eq!(a.cg.converged, b.cg.converged, "{what}: converged flag");
+    assert_eq!(a.cg.final_relres.to_bits(), b.cg.final_relres.to_bits(), "{what}: final relres");
+    assert_eq!(a.cg.residual_history.len(), b.cg.residual_history.len(), "{what}: history length");
+    for (i, (ra, rb)) in a.cg.residual_history.iter().zip(&b.cg.residual_history).enumerate() {
+        assert_eq!(ra.to_bits(), rb.to_bits(), "{what}: history[{i}]");
+    }
+    assert_eq!(a.x.len(), b.x.len());
+    for (i, (xa, xb)) in a.x.iter().zip(&b.x).enumerate() {
+        assert_eq!(xa.to_bits(), xb.to_bits(), "{what}: x[{i}]");
+    }
+}
+
+/// SymmCsr ≡ full CSR within 1e-13 on random suites, in both engine
+/// modes, at every pool width.
+#[test]
+fn symm_engine_matches_full_csr_on_random_suites() {
+    for (n, seed) in [(60usize, 1u64), (257, 7), (1024, 42)] {
+        let a = random_sym(n, seed);
+        let x: Vec<f64> = (0..n).map(|i| 0.5 + ((i * 37) % 19) as f64 * 0.125).collect();
+        let mut want = vec![0.0f64; n];
+        a.mul_vec(&x, &mut want);
+        // max_colors = 64 → colored; max_colors = 0 → buffered fallback.
+        for max_colors in [64usize, 0] {
+            let s =
+                SymmSpmv::build_with_max_colors(&a, max_colors).expect("symmetric matrix");
+            for nt in [1usize, 2, 4] {
+                let pool = Pool::new(nt);
+                let mut got = vec![0.0f64; n];
+                spmv_symm(&s, &x, &mut got, &pool);
+                for i in 0..n {
+                    let tol = 1e-13 * want[i].abs().max(1.0);
+                    assert!(
+                        (got[i] - want[i]).abs() <= tol,
+                        "n={n} seed={seed} max_colors={max_colors} nt={nt} row {i}: \
+                         {} vs {}",
+                        got[i],
+                        want[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The coloring schedule covers every row exactly once and no two rows of
+/// one color share a write target (conflict-freedom).
+#[test]
+fn race_schedule_is_conflict_free_on_suite_matrices() {
+    for name in ["g3_circuit", "thermal2"] {
+        let d = suite::dataset(name, Scale::Tiny);
+        let sched = RaceSchedule::build(&d.matrix);
+        let mut seen = vec![false; d.n()];
+        for c in 0..sched.num_colors() {
+            for &r in sched.color_rows(c) {
+                assert!(!seen[r as usize], "{name}: row {r} scheduled twice");
+                seen[r as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "{name}: schedule must cover every row");
+        assert!(
+            sched.is_conflict_free(d.matrix.row_ptr(), d.matrix.cols()),
+            "{name}: rows of one color must not share a scatter target"
+        );
+    }
+}
+
+/// Fused CG under SymmCsr: converges in exactly the CRS iteration count
+/// (the engine computes the same operator, only the summation order
+/// differs) and the solution hits the same target.
+#[test]
+fn fused_symm_cg_matches_crs_iteration_counts() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    for ordering in ORDERINGS {
+        let cfg_crs = cfg_for(ordering, SpmvKind::Crs, d.shift);
+        let cfg_symm = cfg_for(ordering, SpmvKind::SymmCsr, d.shift);
+        let crs_plan = SolverPlan::build(&d.matrix, &cfg_crs).expect("plan");
+        let symm_plan = SolverPlan::build(&d.matrix, &cfg_symm).expect("plan");
+        assert!(symm_plan.symm_a.is_some(), "SymmCsr plan must carry the symmetric engine");
+        let crs = run(&crs_plan, &d.b, 1, false);
+        let symm = run(&symm_plan, &d.b, 1, false);
+        assert!(crs.cg.converged && symm.cg.converged, "{ordering:?}: both must converge");
+        assert_eq!(
+            symm.cg.iterations, crs.cg.iterations,
+            "{ordering:?}: iteration counts must match exactly"
+        );
+        // rhs is A·1, so both solutions approximate the ones vector.
+        for x in [&crs.x, &symm.x] {
+            let err = x.iter().map(|v| (v - 1.0).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-3, "{ordering:?}: solution error {err}");
+        }
+    }
+}
+
+/// Bitwise determinism of the fused SymmCsr path: across repeated runs,
+/// across thread counts, and against the legacy per-kernel loop (which
+/// drives the same worker).
+#[test]
+fn fused_symm_is_bitwise_deterministic_across_runs_and_thread_counts() {
+    let d = suite::dataset("thermal2", Scale::Tiny);
+    let cfg = cfg_for(OrderingKind::Hbmc, SpmvKind::SymmCsr, d.shift);
+    let plan = SolverPlan::build(&d.matrix, &cfg).expect("plan");
+    let reference = run(&plan, &d.b, 1, false);
+    assert!(reference.cg.converged);
+    for nt in [1usize, 2, 4] {
+        for rep in 0..2 {
+            let again = run(&plan, &d.b, nt, false);
+            assert_bitwise_equal(&again, &reference, &format!("fused nt={nt} rep={rep}"));
+        }
+        let legacy = run(&plan, &d.b, nt, true);
+        assert_bitwise_equal(&legacy, &reference, &format!("legacy nt={nt}"));
+    }
+}
+
+/// A converged fused SymmCsr solve is exactly one dispatch, and its
+/// barrier count matches the shaped analytic model: init pays the
+/// engine's internal barriers once, every steady iteration pays
+/// `syncs_per_fused_iteration_shaped`, and the converged final iteration
+/// stops after its SpMV + update.
+#[test]
+fn fused_symm_single_dispatch_with_shaped_sync_accounting() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    for ordering in [OrderingKind::Mc, OrderingKind::Hbmc] {
+        let cfg = cfg_for(ordering, SpmvKind::SymmCsr, d.shift);
+        let plan = SolverPlan::build(&d.matrix, &cfg).expect("plan");
+        let shape = plan.symm_a.as_ref().expect("symmetric engine").sync_shape();
+        for nt in [1usize, 4] {
+            let fused = run(&plan, &d.b, nt, false);
+            assert!(fused.cg.converged);
+            assert_eq!(fused.dispatches, 1, "{ordering:?} nt={nt}: one dispatch");
+            let nc = plan.trisolver.num_colors();
+            let k = fused.cg.iterations;
+            assert!(k >= 1);
+            let init = 2 * (nc - 1) + 7 + shape.internal_syncs();
+            let last = 2 + shape.pq_extra_syncs() + shape.internal_syncs();
+            let expected = init + (k - 1) * syncs_per_fused_iteration_shaped(nc, shape) + last;
+            assert_eq!(
+                fused.pool_syncs as usize, expected,
+                "{ordering:?} nt={nt}: shaped sync accounting drifted"
+            );
+        }
+    }
+}
+
+/// Invalid SymmCsr combinations fail typed, and the tuner grid races the
+/// symmetric engine with the incumbent still leading the candidate list.
+#[test]
+fn symm_invalid_configs_are_typed_and_tuner_grid_races_symm() {
+    // σ is a SELL sorting window; on a symmetric plan it must be rejected
+    // at validation time, not deep in a kernel.
+    let err = SolverConfig::builder()
+        .spmv(SpmvKind::SymmCsr)
+        .sell_sigma(Some(32))
+        .build()
+        .expect_err("sigma on symmcsr must fail");
+    assert!(matches!(err, HbmcError::InvalidConfig(_)), "got {err:?}");
+
+    // An asymmetric matrix cannot feed the symmetric engine.
+    let mut coo = Coo::new(3);
+    for i in 0..3 {
+        coo.push(i, i, 4.0);
+    }
+    coo.push(2, 0, -1.0); // no mirror entry
+    let err = SymmSpmv::build(&coo.to_csr()).expect_err("asymmetric matrix must fail");
+    assert!(matches!(err, HbmcError::InvalidConfig(_)), "got {err:?}");
+
+    // Grid: SymmCsr present, everything valid, incumbent first.
+    let base = SolverConfig::default();
+    let space = ConfigSpace::for_hardware(&HardwareSignature::detect());
+    let cands = space.enumerate(&base);
+    assert_eq!(cands[0].label(), base.label(), "incumbent must lead");
+    assert!(cands.iter().any(|c| c.spmv == SpmvKind::SymmCsr), "grid must race SymmCsr");
+    for c in &cands {
+        c.validate().expect("every candidate must validate");
+    }
+}
