@@ -92,6 +92,69 @@ fn quick_main() {
     std::fs::write(&path, &json).expect("write BENCH_iter.json");
     println!("{json}");
     println!("wrote {}", path.display());
+    quick_level(&d);
+}
+
+/// Quick mode, level-vs-HBMC artifact: one substitution-kernel timing and
+/// one end-to-end solve for the level-scheduled path next to the HBMC
+/// reference, written to `BENCH_level.json`.
+fn quick_level(d: &hbmc::gen::Dataset) {
+    let pool = Pool::new(1);
+    let budget = Duration::from_millis(150);
+    let mut entries = Vec::new();
+    for (label, cfg) in [
+        (
+            "level-crs",
+            SolverConfig {
+                ordering: OrderingKind::Level,
+                spmv: SpmvKind::Crs,
+                shift: d.shift,
+                rtol: 1e-6,
+                ..Default::default()
+            },
+        ),
+        (
+            "hbmc-crs",
+            SolverConfig {
+                ordering: OrderingKind::Hbmc,
+                bs: 8,
+                w: 4,
+                spmv: SpmvKind::Crs,
+                shift: d.shift,
+                rtol: 1e-6,
+                ..Default::default()
+            },
+        ),
+    ] {
+        let plan = SolverPlan::build(&d.matrix, &cfg).expect("plan build");
+        let n = plan.n_aug();
+        let r = vec![1.0f64; n];
+        let mut s = vec![0.0f64; n];
+        let mut z = vec![0.0f64; n];
+        let (apply, _) = bench_secs(3, budget, || plan.trisolver.apply(&r, &mut s, &mut z, &pool));
+        let out = plan.execute(&pool, &d.b, &ExecOptions::default()).expect("solve");
+        assert!(out.cg.converged, "quick level bench solve must converge");
+        entries.push(format!(
+            "    {{\"label\": \"{label}\", \"stages\": {}, \"syncs_per_sweep\": {}, \
+             \"apply_seconds\": {apply:.6e}, \"iterations\": {}, \"solve_seconds\": {:.6e}}}",
+            plan.trisolver.num_colors(),
+            plan.trisolver.syncs_per_sweep(),
+            out.cg.iterations,
+            out.cg.solve_seconds,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"level-vs-hbmc\",\n  \"dataset\": \"{}\",\n  \"n\": {},\n  \
+         \"nnz\": {},\n  \"configs\": [\n{}\n  ]\n}}\n",
+        d.name,
+        d.n(),
+        d.nnz(),
+        entries.join(",\n")
+    );
+    let path = hbmc::util::bench_artifact_path("BENCH_level.json");
+    std::fs::write(&path, &json).expect("write BENCH_level.json");
+    println!("{json}");
+    println!("wrote {}", path.display());
 }
 
 fn main() {
@@ -151,6 +214,7 @@ fn main() {
     };
     let mut variants: Vec<(String, SolverConfig)> = vec![
         ("serial (natural)".into(), mk(OrderingKind::Natural, 1, 1)),
+        ("level (natural)".into(), mk(OrderingKind::Level, 1, 1)),
         ("MC".into(), mk(OrderingKind::Mc, 1, 1)),
     ];
     for bs in [8usize, 16, 32] {

@@ -32,6 +32,11 @@ pub enum OrderingKind {
     Bmc,
     /// Hierarchical block multi-color ordering ("HBMC") — the paper.
     Hbmc,
+    /// Level-scheduled (wavefront) trisolve over the natural ordering: no
+    /// reordering, so ICCG convergence matches the serial natural solve;
+    /// parallelism comes from the factor's dependency DAG
+    /// (`crate::schedule`).
+    Level,
 }
 
 impl FromStr for OrderingKind {
@@ -43,8 +48,9 @@ impl FromStr for OrderingKind {
             "mc" => Ok(OrderingKind::Mc),
             "bmc" => Ok(OrderingKind::Bmc),
             "hbmc" => Ok(OrderingKind::Hbmc),
+            "level" => Ok(OrderingKind::Level),
             other => Err(HbmcError::parse(format!(
-                "unknown ordering {other:?} (natural|mc|bmc|hbmc)"
+                "unknown ordering {other:?} (natural|mc|bmc|hbmc|level)"
             ))),
         }
     }
@@ -57,6 +63,7 @@ impl fmt::Display for OrderingKind {
             OrderingKind::Mc => "MC",
             OrderingKind::Bmc => "BMC",
             OrderingKind::Hbmc => "HBMC",
+            OrderingKind::Level => "level",
         })
     }
 }
@@ -460,9 +467,16 @@ mod tests {
         assert_eq!("full".parse::<Scale>().unwrap(), Scale::Full);
         assert_eq!("skx".parse::<NodePreset>().unwrap(), NodePreset::SkxLike);
         // Display of *every* variant of each enum parses back to itself.
-        for k in [OrderingKind::Natural, OrderingKind::Mc, OrderingKind::Bmc, OrderingKind::Hbmc] {
+        for k in [
+            OrderingKind::Natural,
+            OrderingKind::Mc,
+            OrderingKind::Bmc,
+            OrderingKind::Hbmc,
+            OrderingKind::Level,
+        ] {
             assert_eq!(k.to_string().parse::<OrderingKind>().unwrap(), k);
         }
+        assert_eq!("LEVEL".parse::<OrderingKind>().unwrap(), OrderingKind::Level);
         for v in [SpmvKind::Crs, SpmvKind::Sell, SpmvKind::SymmCsr] {
             assert_eq!(v.to_string().parse::<SpmvKind>().unwrap(), v);
         }

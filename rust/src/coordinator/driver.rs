@@ -19,6 +19,7 @@ use crate::config::SolverConfig;
 use crate::coordinator::metrics::SpmvTraffic;
 use crate::coordinator::session::SolveSession;
 use crate::error::Result;
+use crate::schedule::cost::ScheduleCost;
 use crate::solver::cg::CgResult;
 use crate::solver::plan::{SetupStats, SolverPlan};
 use crate::sparse::csr::Csr;
@@ -72,6 +73,10 @@ pub struct PlanReport {
     pub spmv_traffic: SpmvTraffic,
     /// Substitution strategy ("ic0-hbmc", ...).
     pub trisolver: &'static str,
+    /// Level-schedule shape and cost model (Some only for the level path):
+    /// wavefront count, rows-per-level histogram, coarsened stage count and
+    /// the barrier-vs-spin sweep costs behind it.
+    pub schedule: Option<ScheduleCost>,
 }
 
 impl PlanReport {
@@ -89,6 +94,7 @@ impl PlanReport {
                 plan.cfg.w,
             ),
             trisolver: plan.trisolver.name(),
+            schedule: plan.schedule.clone(),
         }
     }
 }
@@ -205,6 +211,28 @@ mod tests {
         let sol = rep.solution.as_ref().unwrap();
         let err = sol.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
         assert!(err < 1e-4, "solution error {err}");
+    }
+
+    #[test]
+    fn level_report_surfaces_the_schedule_cost_model() {
+        let d = suite::dataset("g3_circuit", crate::config::Scale::Tiny);
+        let cfg = SolverConfig {
+            ordering: OrderingKind::Level,
+            spmv: SpmvKind::Crs,
+            ..Default::default()
+        };
+        let rep = solve(&d.matrix, &d.b, &cfg).unwrap();
+        assert!(rep.converged);
+        assert_eq!(rep.plan.trisolver, "ic0-level");
+        let sched = rep.plan.schedule.as_ref().expect("level plan report has schedule");
+        assert!(sched.levels >= 1);
+        assert_eq!(sched.rows_per_level.iter().sum::<usize>(), sched.levels);
+        assert_eq!(sched.coarsened_stages, rep.plan.setup.num_colors);
+        assert_eq!(sched.predicted_syncs_per_sweep, rep.plan.syncs_per_substitution);
+        // Reordering paths carry no schedule in their reports.
+        let cfg = SolverConfig { ordering: OrderingKind::Bmc, bs: 8, w: 4, ..Default::default() };
+        let rep = solve(&d.matrix, &d.b, &cfg).unwrap();
+        assert!(rep.plan.schedule.is_none());
     }
 
     #[test]

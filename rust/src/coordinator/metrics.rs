@@ -125,6 +125,37 @@ impl SpmvSyncShape {
     }
 }
 
+/// Barrier structure of a substitution engine inside the fused loop: how
+/// the trisolver's per-sweep barriers arise. Colored paths pay one barrier
+/// per color transition; the level-scheduled path pays one per coarsened
+/// stage transition (`schedule::coarsen` merges thin wavefronts, so
+/// `coarsened ≤ levels`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrisolveSyncShape {
+    /// MC/BMC/HBMC (and the trivial 1-color serial/natural path): barriers
+    /// between consecutive colors.
+    Colored { colors: usize },
+    /// Level-scheduled trisolve: `levels` wavefronts coarsened into
+    /// `coarsened` barrier-separated stages.
+    Level { levels: usize, coarsened: usize },
+}
+
+impl TrisolveSyncShape {
+    /// Barrier-separated stages per sweep (what `TriSolver::num_colors`
+    /// reports for the matching solver).
+    pub fn stages(&self) -> usize {
+        match self {
+            TrisolveSyncShape::Colored { colors } => *colors,
+            TrisolveSyncShape::Level { coarsened, .. } => *coarsened,
+        }
+    }
+
+    /// Barriers per substitution sweep (= `stages − 1`).
+    pub fn syncs_per_sweep(&self) -> usize {
+        self.stages().saturating_sub(1)
+    }
+}
+
 /// Pool synchronizations per steady-state iteration of the **fused**
 /// single-dispatch CG loop (`solver::cg::pcg_fused`): the two substitution
 /// sweeps' `n_c − 1` color barriers each, plus the six phase barriers
@@ -143,7 +174,18 @@ pub fn syncs_per_fused_iteration(num_colors: usize, sell_spmv: bool) -> usize {
 /// shape: the symmetric engine adds its internal barriers on top of the
 /// six phase barriers and the per-sweep color barriers.
 pub fn syncs_per_fused_iteration_shaped(num_colors: usize, shape: SpmvSyncShape) -> usize {
-    2 * num_colors.saturating_sub(1) + 6 + shape.pq_extra_syncs() + shape.internal_syncs()
+    syncs_per_fused_iteration_tri(TrisolveSyncShape::Colored { colors: num_colors }, shape)
+}
+
+/// The fully-shaped fused-iteration sync model: both substitution sweeps
+/// pay the trisolver's per-sweep barriers (color transitions for the
+/// reordering paths, coarsened-stage transitions for the level path), plus
+/// the six phase barriers and the SpMV engine's own barriers. Because the
+/// level solver reports its stage count as `num_colors`, this agrees with
+/// [`syncs_per_fused_iteration_shaped`] on every path — the variant exists
+/// so call sites can account in the schedule's own vocabulary.
+pub fn syncs_per_fused_iteration_tri(tri: TrisolveSyncShape, spmv: SpmvSyncShape) -> usize {
+    2 * tri.syncs_per_sweep() + 6 + spmv.pq_extra_syncs() + spmv.internal_syncs()
 }
 
 /// Analytic bytes moved from memory per SpMV, split into matrix-structure
@@ -275,6 +317,54 @@ mod tests {
             6 + 1 + 3
         );
         assert_eq!(syncs_per_fused_iteration_shaped(1, SpmvSyncShape::SymmBuffered), 6 + 1 + 1);
+    }
+
+    #[test]
+    fn trisolve_shaped_model_covers_colored_and_level() {
+        // Colored shape reproduces the num_colors-based model exactly.
+        for colors in [1usize, 2, 4, 9] {
+            for shape in [SpmvSyncShape::Crs, SpmvSyncShape::Sell, SpmvSyncShape::SymmBuffered] {
+                assert_eq!(
+                    syncs_per_fused_iteration_tri(
+                        TrisolveSyncShape::Colored { colors },
+                        shape
+                    ),
+                    syncs_per_fused_iteration_shaped(colors, shape)
+                );
+            }
+        }
+        // Level shape: barriers come from coarsened stages, not raw levels.
+        let lv = TrisolveSyncShape::Level { levels: 40, coarsened: 5 };
+        assert_eq!(lv.stages(), 5);
+        assert_eq!(lv.syncs_per_sweep(), 4);
+        assert_eq!(syncs_per_fused_iteration_tri(lv, SpmvSyncShape::Crs), 2 * 4 + 6);
+        // Fully coarsened (one serial stage): phase barriers only, i.e.
+        // the same budget as the serial natural path.
+        let flat = TrisolveSyncShape::Level { levels: 40, coarsened: 1 };
+        assert_eq!(
+            syncs_per_fused_iteration_tri(flat, SpmvSyncShape::Crs),
+            syncs_per_fused_iteration(1, false)
+        );
+    }
+
+    #[test]
+    fn level_path_ops_are_scalar_like_serial() {
+        // The level path runs CSR substitutions over the natural ordering —
+        // identical flop attribution to the serial/MC CSR paths.
+        let level = SolverConfig {
+            ordering: OrderingKind::Level,
+            spmv: SpmvKind::Crs,
+            ..Default::default()
+        };
+        let natural = SolverConfig {
+            ordering: OrderingKind::Natural,
+            spmv: SpmvKind::Crs,
+            ..Default::default()
+        };
+        assert_eq!(per_iteration_ops(&level, &inputs()), per_iteration_ops(&natural, &inputs()));
+        let p = per_iteration_ops(&level, &inputs());
+        let i = inputs();
+        assert_eq!(p.scalar_flops, 2 * i.nnz as u64 + 2 * i.tri_nnz as u64 + 2 * i.n as u64);
     }
 
     #[test]

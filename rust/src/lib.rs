@@ -107,7 +107,10 @@
 //! ```
 //!
 //! On the command line: `hbmc tune --dataset g3_circuit` then
-//! `hbmc solve --dataset g3_circuit --auto`.
+//! `hbmc solve --dataset g3_circuit --auto`. The scoreboard races the
+//! reordering paths against the level-scheduled one (`--ordering level`):
+//! wavefront scheduling over the natural ordering, which keeps the serial
+//! solve's ICCG iteration count — see [`schedule`].
 //!
 //! ## Two-phase architecture (plan / execute)
 //!
@@ -140,6 +143,9 @@
 //!   machinery, and the [`order_matrix`](ordering::order_matrix) façade the
 //!   plan builder consumes,
 //! * [`factor`] — IC(0) and shifted-IC incomplete factorization,
+//! * [`schedule`] — level-set (wavefront) construction over the factor's
+//!   dependency DAG, the thin-level coarsening pass and its cost model —
+//!   the *scheduling* alternative to reordering, raced by the tuner,
 //! * [`solver`] — triangular kernels behind the `TriSolver` trait, the
 //!   CRS / SELL / symmetric (`SpmvKind::SymmCsr`, conflict-free colored
 //!   scatter) SpMV engines, the PCG loop, `SolverPlan` and the
@@ -161,6 +167,7 @@ pub mod factor;
 pub mod gen;
 pub mod ordering;
 pub mod runtime;
+pub mod schedule;
 pub mod solver;
 pub mod sparse;
 pub mod tune;

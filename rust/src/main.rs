@@ -89,7 +89,8 @@ hbmc — Hierarchical Block Multi-Color Ordering ICCG framework
 USAGE: hbmc <command> [flags]
 
 COMMANDS
-  solve        --dataset <name> [--scale tiny|small|full] [--ordering natural|mc|bmc|hbmc]
+  solve        --dataset <name> [--scale tiny|small|full]
+               [--ordering natural|mc|bmc|hbmc|level]
                [--bs N] [--w N] [--spmv crs|sell|symmcsr] [--threads N] [--rtol X]
                [--shift X] [--node knl|bdw|skx] [--history] [--no-intrinsics]
                [--mtx <file.mtx>]            (solve a MatrixMarket file instead of a
@@ -207,6 +208,20 @@ fn cmd_solve(args: &Args) -> Result<()> {
             .map(|o| format!("{:.1}%", 100.0 * (o - 1.0)))
             .unwrap_or("n/a".into())
     );
+    if let Some(s) = &plan.schedule {
+        println!(
+            "schedule: {} levels -> {} stages ({} serial segment(s), {} rows serialized; \
+             max level {} rows; sweep cost barrier {:.0} / coarsened {:.0} / spin {:.0})",
+            s.levels,
+            s.coarsened_stages,
+            s.serial_segments,
+            s.serialized_rows,
+            s.max_level_rows,
+            s.barrier_sweep_cost,
+            s.coarsened_sweep_cost,
+            s.spin_sweep_cost
+        );
+    }
     if args.switch("setup-only") {
         return Ok(());
     }

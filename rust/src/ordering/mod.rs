@@ -44,6 +44,11 @@ pub enum OrderedStructure {
     /// Hierarchical block multi-color: full ordering retained (the solver
     /// extracts its `HbmcMeta` and the level-2 layout from it).
     Hbmc(HbmcOrdering),
+    /// Level-scheduled trisolve: identity permutation, no color structure —
+    /// the solver layer builds the wavefront schedule itself, since the
+    /// IC(0) factor whose DAG is scheduled does not exist at ordering time
+    /// (`num_colors` is likewise a solver-side quantity here).
+    Level,
 }
 
 /// Product of the ordering phase: permutation into the (possibly padded)
@@ -87,6 +92,11 @@ pub fn order_matrix(a: &Csr, kind: OrderingKind, bs: usize, w: usize) -> Orderin
                 structure: OrderedStructure::Hbmc(ord),
             }
         }
+        OrderingKind::Level => OrderingPlan {
+            perm: Perm::identity(a.n()),
+            num_colors: 1,
+            structure: OrderedStructure::Level,
+        },
     }
 }
 

@@ -1,0 +1,267 @@
+//! Coarsening: merge runs of thin wavefronts into serial segments.
+//!
+//! Wavefronts of irregular matrices have long thin tails — levels with a
+//! handful of rows, where a barrier costs far more than the work it
+//! separates. This pass classifies each level as *thin* or *fat* under
+//! [`CoarsenParams`], merges maximal runs of equal thin-ness into
+//! [`Segment`]s, and executes thin runs serially on one thread (no
+//! barriers inside the run) while fat runs keep barrier-per-level
+//! parallel execution.
+//!
+//! A merged thin run may interleave rows of different levels, but serial
+//! ascending-index execution is always topologically valid: every forward
+//! dependency points to a strictly smaller row index (strict lower
+//! factor), so the rows of a segment are sorted ascending and walked in
+//! order (descending for the backward sweep, whose dependencies point the
+//! other way). The thin/fat thresholds are deliberately independent of
+//! the thread count, so the coarsened stage count — and with it the
+//! solver's `num_colors` and the whole sync model — is a pure function of
+//! the factor's pattern.
+
+use crate::factor::split::TriFactors;
+use crate::schedule::levels::LevelSchedule;
+
+/// How a segment executes inside the substitution sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentMode {
+    /// Parallel level-by-level, with a barrier between consecutive levels.
+    Barrier,
+    /// All rows of the segment run serially on thread 0, no internal syncs.
+    Serial,
+}
+
+/// A maximal run of levels `level_lo..level_hi` sharing one execution mode.
+#[derive(Debug, Clone, Copy)]
+pub struct Segment {
+    pub level_lo: usize,
+    pub level_hi: usize,
+    pub mode: SegmentMode,
+}
+
+/// Thin-level thresholds. A level is *thin* when it has fewer than
+/// `min_rows` rows **or** fewer than `min_nnz` factor nonzeros (both
+/// triangles): either way there is not enough work to amortize a barrier.
+/// Thread-count independent by design (see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct CoarsenParams {
+    pub min_rows: usize,
+    pub min_nnz: usize,
+}
+
+impl Default for CoarsenParams {
+    fn default() -> Self {
+        CoarsenParams { min_rows: 64, min_nnz: 512 }
+    }
+}
+
+/// The executable schedule: the (possibly re-sorted) row order, level
+/// boundaries, segments, and per-position weight prefixes for
+/// nnz-balanced splitting inside parallel levels.
+#[derive(Debug, Clone)]
+pub struct CoarsenedSchedule {
+    /// Row indices in execution order; within a parallel level ascending,
+    /// within a serial segment ascending across its whole level range.
+    pub rows: Vec<u32>,
+    /// Level boundaries into `rows` (unchanged from [`LevelSchedule`]).
+    pub level_ptr: Vec<usize>,
+    /// Maximal mode-homogeneous level runs, ascending, covering all levels.
+    pub segments: Vec<Segment>,
+    /// `fwd_prefix[p + 1] - fwd_prefix[p]` = forward work of `rows[p]`
+    /// (strict-lower nnz + 1); strictly increasing, for
+    /// [`split_point`](crate::schedule::levels::split_point).
+    pub fwd_prefix: Vec<u64>,
+    /// Same with strict-upper nnz for the backward sweep.
+    pub bwd_prefix: Vec<u64>,
+}
+
+impl CoarsenedSchedule {
+    /// Barrier-separated stages per sweep: one per level of a `Barrier`
+    /// segment, one per `Serial` segment. This is the level path's
+    /// `num_colors` — `stages() - 1` barriers per substitution sweep.
+    pub fn stages(&self) -> usize {
+        self.segments
+            .iter()
+            .map(|s| match s.mode {
+                SegmentMode::Barrier => s.level_hi - s.level_lo,
+                SegmentMode::Serial => 1,
+            })
+            .sum::<usize>()
+            .max(1)
+    }
+
+    pub fn num_levels(&self) -> usize {
+        self.level_ptr.len() - 1
+    }
+}
+
+/// Coarsen `levels` for `tri` under `params` (see module docs).
+pub fn coarsen(
+    levels: &LevelSchedule,
+    tri: &TriFactors,
+    params: &CoarsenParams,
+) -> CoarsenedSchedule {
+    let nlv = levels.num_levels();
+    let lp = tri.lower.row_ptr();
+    let up = tri.upper.row_ptr();
+    let row_nnz = |p: &[u32], i: usize| (p[i + 1] - p[i]) as u64;
+
+    // Classify each level; empty schedules (n = 0) yield no segments.
+    let thin: Vec<bool> = (0..nlv)
+        .map(|l| {
+            let rows = levels.level(l);
+            let nnz: u64 = rows
+                .iter()
+                .map(|&i| row_nnz(lp, i as usize) + row_nnz(up, i as usize))
+                .sum();
+            rows.len() < params.min_rows || (nnz as usize) < params.min_nnz
+        })
+        .collect();
+
+    // Greedy maximal runs of equal thin-ness.
+    let mut segments = Vec::new();
+    let mut lo = 0;
+    while lo < nlv {
+        let mut hi = lo + 1;
+        while hi < nlv && thin[hi] == thin[lo] {
+            hi += 1;
+        }
+        let mode = if thin[lo] { SegmentMode::Serial } else { SegmentMode::Barrier };
+        segments.push(Segment { level_lo: lo, level_hi: hi, mode });
+        lo = hi;
+    }
+
+    // Serial segments execute ascending by row index across their whole
+    // level range (valid: all deps point to smaller indices).
+    let mut rows = levels.rows.clone();
+    let level_ptr = levels.level_ptr.clone();
+    for seg in &segments {
+        if seg.mode == SegmentMode::Serial {
+            rows[level_ptr[seg.level_lo]..level_ptr[seg.level_hi]].sort_unstable();
+        }
+    }
+
+    // Weight prefixes over the final row order (+1 per row keeps them
+    // strictly increasing so split windows stay monotone).
+    let mut fwd_prefix = Vec::with_capacity(rows.len() + 1);
+    let mut bwd_prefix = Vec::with_capacity(rows.len() + 1);
+    fwd_prefix.push(0u64);
+    bwd_prefix.push(0u64);
+    for &i in &rows {
+        let i = i as usize;
+        fwd_prefix.push(fwd_prefix.last().unwrap() + row_nnz(lp, i) + 1);
+        bwd_prefix.push(bwd_prefix.last().unwrap() + row_nnz(up, i) + 1);
+    }
+
+    CoarsenedSchedule { rows, level_ptr, segments, fwd_prefix, bwd_prefix }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::ic0::ic0;
+    use crate::sparse::coo::Coo;
+    use crate::sparse::csr::Csr;
+
+    fn grid(nx: usize, ny: usize) -> Csr {
+        let idx = |x: usize, y: usize| y * nx + x;
+        let mut c = Coo::new(nx * ny);
+        for y in 0..ny {
+            for x in 0..nx {
+                c.push(idx(x, y), idx(x, y), 4.0);
+                if x + 1 < nx {
+                    c.push_sym(idx(x, y), idx(x + 1, y), -1.0);
+                }
+                if y + 1 < ny {
+                    c.push_sym(idx(x, y), idx(x, y + 1), -1.0);
+                }
+            }
+        }
+        c.to_csr()
+    }
+
+    fn factors(a: &Csr) -> TriFactors {
+        TriFactors::from_ic(&ic0(a, 0.0).unwrap())
+    }
+
+    #[test]
+    fn all_thin_levels_collapse_to_one_serial_stage() {
+        // Small grid: every wavefront is far below the default thresholds,
+        // so the whole sweep coarsens to one serial segment — zero syncs.
+        let tri = factors(&grid(7, 5));
+        let lv = LevelSchedule::build(&tri);
+        assert!(lv.num_levels() > 1);
+        let sched = coarsen(&lv, &tri, &CoarsenParams::default());
+        assert_eq!(sched.segments.len(), 1);
+        assert_eq!(sched.segments[0].mode, SegmentMode::Serial);
+        assert_eq!(sched.stages(), 1);
+        // Serial rows sorted ascending across the whole range.
+        assert!(sched.rows.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn zero_thresholds_keep_every_level() {
+        let tri = factors(&grid(7, 5));
+        let lv = LevelSchedule::build(&tri);
+        let sched = coarsen(&lv, &tri, &CoarsenParams { min_rows: 0, min_nnz: 0 });
+        assert_eq!(sched.segments.len(), 1);
+        assert_eq!(sched.segments[0].mode, SegmentMode::Barrier);
+        assert_eq!(sched.stages(), lv.num_levels());
+        assert_eq!(sched.rows, lv.rows);
+    }
+
+    #[test]
+    fn mixed_thresholds_split_into_alternating_segments() {
+        // On a 2-D grid wavefronts grow then shrink (anti-diagonals):
+        // a middling min_rows makes thin–fat–thin runs.
+        let tri = factors(&grid(24, 24));
+        let lv = LevelSchedule::build(&tri);
+        let sched = coarsen(&lv, &tri, &CoarsenParams { min_rows: 10, min_nnz: 0 });
+        assert!(sched.segments.len() >= 2, "expected thin tails around a fat middle");
+        // Segments tile the level range and alternate modes.
+        assert_eq!(sched.segments[0].level_lo, 0);
+        assert_eq!(sched.segments.last().unwrap().level_hi, lv.num_levels());
+        for w in sched.segments.windows(2) {
+            assert_eq!(w[0].level_hi, w[1].level_lo);
+            assert_ne!(w[0].mode, w[1].mode, "adjacent segments must differ (maximal runs)");
+        }
+        // Stage count: fat levels count singly, serial runs count once.
+        let by_hand: usize = sched
+            .segments
+            .iter()
+            .map(|s| match s.mode {
+                SegmentMode::Barrier => s.level_hi - s.level_lo,
+                SegmentMode::Serial => 1,
+            })
+            .sum();
+        assert_eq!(sched.stages(), by_hand);
+        assert!(sched.stages() < lv.num_levels());
+    }
+
+    #[test]
+    fn prefixes_are_strictly_increasing_and_count_nnz() {
+        let tri = factors(&grid(9, 9));
+        let lv = LevelSchedule::build(&tri);
+        let sched = coarsen(&lv, &tri, &CoarsenParams::default());
+        let n = sched.rows.len();
+        assert_eq!(sched.fwd_prefix.len(), n + 1);
+        assert_eq!(sched.bwd_prefix.len(), n + 1);
+        assert!(sched.fwd_prefix.windows(2).all(|w| w[0] < w[1]));
+        assert!(sched.bwd_prefix.windows(2).all(|w| w[0] < w[1]));
+        // Totals = nnz + n for each triangle.
+        assert_eq!(*sched.fwd_prefix.last().unwrap(), (tri.lower.nnz() + n) as u64);
+        assert_eq!(*sched.bwd_prefix.last().unwrap(), (tri.upper.nnz() + n) as u64);
+    }
+
+    #[test]
+    fn coarsening_preserves_the_row_set() {
+        let tri = factors(&grid(13, 11));
+        let lv = LevelSchedule::build(&tri);
+        let sched = coarsen(&lv, &tri, &CoarsenParams { min_rows: 6, min_nnz: 0 });
+        let mut a = sched.rows.clone();
+        let mut b = lv.rows.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        assert_eq!(sched.level_ptr, lv.level_ptr);
+    }
+}

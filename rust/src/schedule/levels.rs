@@ -1,0 +1,221 @@
+//! Level sets (wavefronts) of the IC(0) factor's strict-lower dependency
+//! DAG, computed by in-degree peeling.
+//!
+//! Row `i` of the forward substitution depends on row `j` exactly when
+//! `l_ij ≠ 0` (`j < i`); level `0` is the set of rows with an empty strict
+//! lower row, level `k + 1` the rows whose last unfinished dependency sits
+//! in level `k`. Rows of one level are mutually independent — in **either**
+//! sweep direction, since every edge of the DAG crosses levels — so the
+//! forward sweep walks levels ascending and the backward (`Lᵀ`) sweep walks
+//! the *same* levels descending, mirroring how the MC solver walks its
+//! `color_ptr` both ways.
+//!
+//! Construction is deterministic and thread-count-independent: rows within
+//! a level are kept in ascending index order, so the schedule (and with it
+//! `num_colors`, the sync model, and every report) is a pure function of
+//! the factor's pattern.
+
+use crate::factor::split::TriFactors;
+
+/// The wavefront partition: rows grouped by level, ascending within each.
+#[derive(Debug, Clone)]
+pub struct LevelSchedule {
+    /// Row indices grouped by level; rows of level `l` are
+    /// `rows[level_ptr[l]..level_ptr[l + 1]]`, ascending.
+    pub rows: Vec<u32>,
+    /// Level boundaries into `rows` (`level_ptr.len() == num_levels + 1`).
+    pub level_ptr: Vec<usize>,
+}
+
+impl LevelSchedule {
+    /// Peel the strict-lower DAG of `tri`: in-degree of row `i` is its
+    /// strict-lower nonzero count; finishing row `j` decrements every
+    /// dependent, which `tri.upper` (strict upper of `Lᵀ`) lists directly
+    /// — row `j` of `upper` holds exactly the `i > j` with `l_ij ≠ 0`.
+    pub fn build(tri: &TriFactors) -> LevelSchedule {
+        let n = tri.n();
+        let lp = tri.lower.row_ptr();
+        let up = tri.upper.row_ptr();
+        let ucols = tri.upper.cols();
+        let mut indeg: Vec<u32> = lp.windows(2).map(|w| w[1] - w[0]).collect();
+        let mut frontier: Vec<u32> =
+            (0..n).filter(|&i| indeg[i] == 0).map(|i| i as u32).collect();
+        let mut rows = Vec::with_capacity(n);
+        let mut level_ptr = vec![0usize];
+        while !frontier.is_empty() {
+            rows.extend_from_slice(&frontier);
+            level_ptr.push(rows.len());
+            let mut next = Vec::new();
+            for &j in &frontier {
+                let j = j as usize;
+                for k in up[j] as usize..up[j + 1] as usize {
+                    let i = ucols[k] as usize;
+                    indeg[i] -= 1;
+                    if indeg[i] == 0 {
+                        next.push(i as u32);
+                    }
+                }
+            }
+            // Dependents are discovered in finish order; re-sort so rows
+            // within a level are ascending (determinism + locality).
+            next.sort_unstable();
+            frontier = next;
+        }
+        assert_eq!(rows.len(), n, "triangular DAG must peel completely");
+        LevelSchedule { rows, level_ptr }
+    }
+
+    pub fn num_levels(&self) -> usize {
+        self.level_ptr.len() - 1
+    }
+
+    pub fn n(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Rows of level `l` (ascending).
+    pub fn level(&self, l: usize) -> &[u32] {
+        &self.rows[self.level_ptr[l]..self.level_ptr[l + 1]]
+    }
+}
+
+/// Deterministic nnz-balanced split of the position window `lo..hi` for
+/// thread `t` of `nt` — the `RowSplits::balanced` idiom from
+/// `solver::spmv` applied to a per-position weight prefix instead of a CSR
+/// `row_ptr`. `prefix` must be strictly increasing over `lo..=hi` (the
+/// schedule's `+1`-per-row weights guarantee it), which makes the splits
+/// monotone, disjoint and covering: `t = 0 ↦ lo`, `t = nt ↦ hi`.
+///
+/// The assignment is fixed per `(t, nt)`; bitwise invariance **across**
+/// thread counts needs no alignment tricks here because a substitution
+/// sweep has no reductions — every `y[i]` is produced by exactly one row.
+pub fn split_point(prefix: &[u64], lo: usize, hi: usize, t: usize, nt: usize) -> usize {
+    let total = prefix[hi] - prefix[lo];
+    let target = prefix[lo] + total * t as u64 / nt as u64;
+    lo + prefix[lo..=hi].partition_point(|&p| p < target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::ic0::ic0;
+    use crate::sparse::coo::Coo;
+    use crate::sparse::csr::Csr;
+
+    fn grid(nx: usize, ny: usize) -> Csr {
+        let idx = |x: usize, y: usize| y * nx + x;
+        let mut c = Coo::new(nx * ny);
+        for y in 0..ny {
+            for x in 0..nx {
+                c.push(idx(x, y), idx(x, y), 4.0);
+                if x + 1 < nx {
+                    c.push_sym(idx(x, y), idx(x + 1, y), -1.0);
+                }
+                if y + 1 < ny {
+                    c.push_sym(idx(x, y), idx(x, y + 1), -1.0);
+                }
+            }
+        }
+        c.to_csr()
+    }
+
+    fn factors(a: &Csr) -> TriFactors {
+        TriFactors::from_ic(&ic0(a, 0.0).unwrap())
+    }
+
+    #[test]
+    fn levels_partition_all_rows_and_respect_dependencies() {
+        let tri = factors(&grid(9, 7));
+        let lv = LevelSchedule::build(&tri);
+        assert_eq!(lv.n(), 63);
+        assert!(lv.num_levels() >= 2);
+        // Every row appears exactly once.
+        let mut seen = vec![false; 63];
+        for &i in &lv.rows {
+            assert!(!seen[i as usize], "row {i} scheduled twice");
+            seen[i as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        // Level of each row, for the dependency check.
+        let mut level_of = vec![usize::MAX; 63];
+        for l in 0..lv.num_levels() {
+            for &i in lv.level(l) {
+                level_of[i as usize] = l;
+            }
+        }
+        // Every strict-lower dependency sits in a strictly earlier level.
+        let (rp, cols) = (tri.lower.row_ptr(), tri.lower.cols());
+        for i in 0..63 {
+            for k in rp[i] as usize..rp[i + 1] as usize {
+                let j = cols[k] as usize;
+                assert!(
+                    level_of[j] < level_of[i],
+                    "dep {j} (level {}) not before {i} (level {})",
+                    level_of[j],
+                    level_of[i]
+                );
+            }
+        }
+        // Rows within a level are ascending (deterministic construction).
+        for l in 0..lv.num_levels() {
+            let rows = lv.level(l);
+            assert!(rows.windows(2).all(|w| w[0] < w[1]), "level {l} not sorted");
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_is_one_level() {
+        let n = 10;
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            c.push(i, i, 2.0);
+        }
+        let tri = factors(&c.to_csr());
+        let lv = LevelSchedule::build(&tri);
+        assert_eq!(lv.num_levels(), 1);
+        assert_eq!(lv.level(0).len(), n);
+    }
+
+    #[test]
+    fn tridiagonal_matrix_is_fully_sequential() {
+        let n = 12;
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            c.push(i, i, 4.0);
+        }
+        for i in 0..n - 1 {
+            c.push_sym(i, i + 1, -1.0);
+        }
+        let tri = factors(&c.to_csr());
+        let lv = LevelSchedule::build(&tri);
+        // A chain: every row waits for its predecessor — n levels of 1.
+        assert_eq!(lv.num_levels(), n);
+        for l in 0..n {
+            assert_eq!(lv.level(l), &[l as u32]);
+        }
+    }
+
+    #[test]
+    fn split_points_are_monotone_disjoint_covering() {
+        // Strictly increasing prefix with uneven weights.
+        let weights = [5u64, 1, 1, 9, 2, 2, 2, 40, 1, 1];
+        let mut prefix = vec![0u64];
+        for w in weights {
+            prefix.push(prefix.last().unwrap() + w + 1);
+        }
+        let (lo, hi) = (0usize, weights.len());
+        for nt in 1..=6 {
+            let mut prev = lo;
+            assert_eq!(split_point(&prefix, lo, hi, 0, nt), lo);
+            for t in 1..=nt {
+                let p = split_point(&prefix, lo, hi, t, nt);
+                assert!(p >= prev, "nt={nt} t={t}: {p} < {prev}");
+                prev = p;
+            }
+            assert_eq!(prev, hi, "nt={nt}: splits must cover the window");
+        }
+        // A sub-window behaves the same.
+        assert_eq!(split_point(&prefix, 3, 7, 0, 2), 3);
+        assert_eq!(split_point(&prefix, 3, 7, 2, 2), 7);
+    }
+}

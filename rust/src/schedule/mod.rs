@@ -1,0 +1,31 @@
+//! Level scheduling for the sparse triangular solver: the *scheduling*
+//! alternative to the reordering family (MC / BMC / HBMC).
+//!
+//! The paper's orderings buy parallel substitution sweeps by permuting the
+//! matrix, which perturbs the IC(0) preconditioner and inflates ICCG
+//! iteration counts (§5.3). Level scheduling (Böhnlein et al.; Li's CUDA
+//! level-sets — see PAPERS.md) keeps the **natural ordering** — and hence
+//! the serial solver's convergence, bit for bit — and instead extracts the
+//! parallelism already present in the factor's dependency DAG:
+//!
+//! * [`levels`] — wavefront construction: in-degree peeling of the strict
+//!   lower factor partitions the rows into *level sets*; rows of one level
+//!   are mutually independent, so one level is one parallel loop, exactly
+//!   like one color of the MC sweep. The same partition, walked in
+//!   descending order, schedules the backward (`Lᵀ`) sweep.
+//! * [`coarsen`] — the cost-model pass: wavefronts of irregular matrices
+//!   have long thin tails (a handful of rows per level) where a barrier
+//!   costs more than the rows it separates. Runs of thin levels are merged
+//!   into serial segments, trading worthless parallelism for barriers.
+//! * [`cost`] — the analytic model behind the coarsening decision
+//!   (barrier-per-level vs per-row ready-flag spinning), surfaced through
+//!   `PlanReport::schedule` so tuning and reports can see *why* a schedule
+//!   has the stage count it has.
+//!
+//! The executor lives in `solver::trisolve_level` (fifth `TriSolver`
+//! path, `OrderingKind::Level`); the autotuner races it against the
+//! reordering paths per (matrix, hardware).
+
+pub mod coarsen;
+pub mod cost;
+pub mod levels;

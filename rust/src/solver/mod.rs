@@ -1,6 +1,6 @@
 //! Solver kernels and the two-phase solve pipeline: triangular
-//! substitutions (serial / MC / BMC / HBMC) behind the unified
-//! [`trisolve::TriSolver`] trait, sparse matrix-vector products (CRS &
+//! substitutions (serial / MC / BMC / HBMC / level-scheduled) behind the
+//! unified [`trisolve::TriSolver`] trait, sparse matrix-vector products (CRS &
 //! SELL), BLAS-1 helpers, the preconditioned CG iteration, the immutable
 //! setup product [`plan::SolverPlan`] and the assembled [`iccg::IccgSolver`]
 //! convenience wrapper.
@@ -14,5 +14,6 @@ pub mod spmv;
 pub mod trisolve;
 pub mod trisolve_bmc;
 pub mod trisolve_hbmc;
+pub mod trisolve_level;
 pub mod trisolve_mc;
 pub mod trisolve_serial;

@@ -25,12 +25,16 @@ use crate::factor::ic0::ic0_auto;
 use crate::factor::split::{SellTriFactors, TriFactors};
 use crate::ordering::perm::Perm;
 use crate::ordering::{order_matrix, OrderedStructure};
+use crate::schedule::coarsen::{coarsen, CoarsenParams};
+use crate::schedule::cost::ScheduleCost;
+use crate::schedule::levels::LevelSchedule;
 use crate::solver::cg::{pcg, pcg_fused, CgResult};
 use crate::solver::spmv::{spmv_crs_with, spmv_sell, spmv_symm, RowSplits, SpmvEngine, SymmSpmv};
 use crate::solver::trisolve::{
     BmcTriSolver, HbmcTriSolver, McTriSolver, SerialTriSolver, TriSolver,
 };
 use crate::solver::trisolve_hbmc::{select_path, HbmcMeta};
+use crate::solver::trisolve_level::LevelTriSolver;
 use crate::sparse::csr::Csr;
 use crate::sparse::sell::Sell;
 
@@ -123,6 +127,8 @@ pub struct SolverPlan {
     /// SELL SpMV). `execute` recomputes on the fly when it runs on a pool
     /// of a different width.
     pub crs_splits: Option<RowSplits>,
+    /// Level-schedule shape and cost model (Some only for the level path).
+    pub schedule: Option<ScheduleCost>,
     pub setup: SetupStats,
     /// Analytic per-iteration op profile (SIMD-ratio metric).
     pub ops: OpProfile,
@@ -152,6 +158,7 @@ impl SolverPlan {
         // --- Solver storage ----------------------------------------------
         let t2 = Instant::now();
         let tri_nnz = tri.lower.nnz() + tri.upper.nnz();
+        let mut schedule = None;
         let trisolver: Arc<dyn TriSolver> = match ordering.structure {
             OrderedStructure::Natural => Arc::new(SerialTriSolver::new(tri)),
             OrderedStructure::Mc { color_ptr } => Arc::new(McTriSolver::new(tri, color_ptr)),
@@ -162,6 +169,12 @@ impl SolverPlan {
                 let sell = SellTriFactors::from_tri(&tri, cfg.w);
                 let path = select_path(cfg.w, cfg.use_intrinsics);
                 Arc::new(HbmcTriSolver::new(HbmcMeta::from_ordering(&ord), sell, path))
+            }
+            OrderedStructure::Level => {
+                let levels = LevelSchedule::build(&tri);
+                let sched = coarsen(&levels, &tri, &CoarsenParams::default());
+                schedule = Some(ScheduleCost::analyze(&levels, &sched, &tri));
+                Arc::new(LevelTriSolver::new(tri, sched))
             }
         };
 
@@ -194,7 +207,10 @@ impl SolverPlan {
             ordering_seconds,
             factor_seconds,
             storage_seconds,
-            num_colors: ordering.num_colors,
+            // Barrier-separated substitution stages: the ordering's color
+            // count for the reordering paths, the coarsened stage count
+            // for the level path (whose ordering-side num_colors is 1).
+            num_colors: trisolver.num_colors(),
             n_orig,
             n_aug: a_perm.n(),
             nnz: a_perm.nnz(),
@@ -226,6 +242,7 @@ impl SolverPlan {
             symm_a,
             trisolver,
             crs_splits,
+            schedule,
             setup,
             ops,
         })
@@ -450,6 +467,33 @@ mod tests {
             .unwrap();
         assert_eq!(capped.cg.iterations, 2);
         assert!(!capped.cg.converged);
+    }
+
+    #[test]
+    fn level_plan_carries_schedule_cost_and_solves() {
+        let a = laplace2d(16, 12);
+        let cfg = SolverConfig {
+            ordering: OrderingKind::Level,
+            spmv: SpmvKind::Crs,
+            rtol: 1e-9,
+            ..Default::default()
+        };
+        let plan = SolverPlan::build(&a, &cfg).unwrap();
+        assert_eq!(plan.trisolver.name(), "ic0-level");
+        assert!(plan.perm.is_identity());
+        assert_eq!(plan.n_aug(), plan.n_orig());
+        let sched = plan.schedule.as_ref().expect("level plan exposes its cost model");
+        assert_eq!(plan.setup.num_colors, sched.coarsened_stages);
+        assert_eq!(plan.trisolver.syncs_per_sweep(), sched.predicted_syncs_per_sweep);
+        let pool = Pool::new(2);
+        let b = rhs_for_ones(&a);
+        let o = plan.execute(&pool, &b, &ExecOptions::default()).unwrap();
+        assert!(o.cg.converged);
+        assert!(crate::util::max_abs_diff(&o.x, &vec![1.0; a.n()]) < 1e-6);
+        assert_eq!(o.dispatches, 1);
+        // Reordering paths carry no schedule.
+        let plan = SolverPlan::build(&a, &SolverConfig::default()).unwrap();
+        assert!(plan.schedule.is_none());
     }
 
     #[test]

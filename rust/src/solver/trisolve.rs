@@ -1,8 +1,10 @@
 //! The unified triangular-solver abstraction: one [`TriSolver`] trait with
-//! four ordering-specific implementations wrapping the free-function kernel
-//! paths (`trisolve_serial` / `trisolve_mc` / `trisolve_bmc` /
-//! `trisolve_hbmc`), so the CG loop, the plan builder and the benches all
-//! dispatch through one object instead of per-ordering match arms.
+//! five implementations — four ordering-specific ones wrapping the
+//! free-function kernel paths (`trisolve_serial` / `trisolve_mc` /
+//! `trisolve_bmc` / `trisolve_hbmc`) plus the level-scheduled wavefront
+//! path (`trisolve_level`, natural ordering + DAG schedule) — so the CG
+//! loop, the plan builder and the benches all dispatch through one object
+//! instead of per-ordering match arms.
 //!
 //! Implementations are immutable once built and `Send + Sync`: a plan
 //! holding one behind an `Arc` can serve many concurrent sessions.

@@ -1,0 +1,322 @@
+//! Multithreaded substitutions under level scheduling (the fifth path):
+//! natural ordering, parallelism from the factor's dependency DAG.
+//!
+//! The [`CoarsenedSchedule`] drives both sweeps: `Barrier` segments run
+//! level-by-level with nnz-balanced row grains split by
+//! [`split_point`](crate::schedule::levels::split_point) over the
+//! schedule's weight prefixes; `Serial` segments run on thread 0 in index
+//! order (ascending forward, descending backward — always topologically
+//! valid because every dependency points past the sweep direction).
+//! Exactly `stages() − 1` barriers per sweep, mirroring the MC solver's
+//! `n_c − 1` discipline so the fused loop's sync accounting carries over
+//! unchanged.
+//!
+//! Bitwise determinism across runs *and* thread counts is structural:
+//! substitution has no reductions — each `y[i]` is produced by exactly one
+//! row, whose inner loop walks the factor row in CSR order regardless of
+//! which thread owns it. With the identity permutation the arithmetic is
+//! therefore identical to the serial natural-ordering solve, nonzero by
+//! nonzero, which is what pins the ICCG iteration count to the serial
+//! baseline.
+
+use crate::coordinator::pool::{Pool, SyncSlice};
+use crate::factor::split::TriFactors;
+use crate::schedule::coarsen::{CoarsenedSchedule, SegmentMode};
+use crate::schedule::levels::split_point;
+use crate::solver::trisolve::TriSolver;
+
+/// Forward substitution `L y = r` under the level schedule.
+pub fn forward(
+    tri: &TriFactors,
+    sched: &CoarsenedSchedule,
+    r: &[f64],
+    y: &mut [f64],
+    pool: &Pool,
+) {
+    let n = tri.n();
+    assert_eq!(r.len(), n);
+    assert_eq!(y.len(), n);
+    let ys = SyncSlice::new(y);
+    pool.run(&|tid, nt| {
+        forward_worker(tri, sched, r, &ys, pool, tid, nt);
+    });
+}
+
+/// Forward-sweep body for worker `tid`, callable from inside an already
+/// open pool region (the single-dispatch CG loop). Performs exactly
+/// `sched.stages() − 1` barriers; the caller supplies any trailing
+/// barrier before `y` is read across threads.
+pub fn forward_worker(
+    tri: &TriFactors,
+    sched: &CoarsenedSchedule,
+    r: &[f64],
+    ys: &SyncSlice<f64>,
+    pool: &Pool,
+    tid: usize,
+    nt: usize,
+) {
+    let row_ptr = tri.lower.row_ptr();
+    let cols = tri.lower.cols();
+    let vals = tri.lower.vals();
+    let solve_row = |i: usize| {
+        let mut s = r[i];
+        for k in row_ptr[i] as usize..row_ptr[i + 1] as usize {
+            s -= vals[k] * unsafe { ys.get(cols[k] as usize) };
+        }
+        unsafe { ys.set(i, s * tri.diag_inv[i]) };
+    };
+    let nseg = sched.segments.len();
+    for (s, seg) in sched.segments.iter().enumerate() {
+        match seg.mode {
+            SegmentMode::Barrier => {
+                for l in seg.level_lo..seg.level_hi {
+                    let (lo, hi) = (sched.level_ptr[l], sched.level_ptr[l + 1]);
+                    let a = split_point(&sched.fwd_prefix, lo, hi, tid, nt);
+                    let b = split_point(&sched.fwd_prefix, lo, hi, tid + 1, nt);
+                    for p in a..b {
+                        solve_row(sched.rows[p] as usize);
+                    }
+                    if l + 1 < seg.level_hi {
+                        pool.color_barrier();
+                    }
+                }
+            }
+            SegmentMode::Serial => {
+                if tid == 0 {
+                    let (lo, hi) =
+                        (sched.level_ptr[seg.level_lo], sched.level_ptr[seg.level_hi]);
+                    for p in lo..hi {
+                        solve_row(sched.rows[p] as usize);
+                    }
+                }
+            }
+        }
+        if s + 1 < nseg {
+            pool.color_barrier();
+        }
+    }
+}
+
+/// Backward substitution `Lᵀ z = y` (same levels, walked descending).
+pub fn backward(
+    tri: &TriFactors,
+    sched: &CoarsenedSchedule,
+    y: &[f64],
+    z: &mut [f64],
+    pool: &Pool,
+) {
+    let n = tri.n();
+    assert_eq!(y.len(), n);
+    assert_eq!(z.len(), n);
+    let zs = SyncSlice::new(z);
+    pool.run(&|tid, nt| {
+        backward_worker(tri, sched, y, &zs, pool, tid, nt);
+    });
+}
+
+/// Backward-sweep body for worker `tid` (see [`forward_worker`]).
+pub fn backward_worker(
+    tri: &TriFactors,
+    sched: &CoarsenedSchedule,
+    y: &[f64],
+    zs: &SyncSlice<f64>,
+    pool: &Pool,
+    tid: usize,
+    nt: usize,
+) {
+    let row_ptr = tri.upper.row_ptr();
+    let cols = tri.upper.cols();
+    let vals = tri.upper.vals();
+    let solve_row = |i: usize| {
+        let mut s = y[i];
+        for k in row_ptr[i] as usize..row_ptr[i + 1] as usize {
+            s -= vals[k] * unsafe { zs.get(cols[k] as usize) };
+        }
+        unsafe { zs.set(i, s * tri.diag_inv[i]) };
+    };
+    for (s, seg) in sched.segments.iter().enumerate().rev() {
+        match seg.mode {
+            SegmentMode::Barrier => {
+                for l in (seg.level_lo..seg.level_hi).rev() {
+                    let (lo, hi) = (sched.level_ptr[l], sched.level_ptr[l + 1]);
+                    let a = split_point(&sched.bwd_prefix, lo, hi, tid, nt);
+                    let b = split_point(&sched.bwd_prefix, lo, hi, tid + 1, nt);
+                    for p in a..b {
+                        solve_row(sched.rows[p] as usize);
+                    }
+                    if l > seg.level_lo {
+                        pool.color_barrier();
+                    }
+                }
+            }
+            SegmentMode::Serial => {
+                if tid == 0 {
+                    let (lo, hi) =
+                        (sched.level_ptr[seg.level_lo], sched.level_ptr[seg.level_hi]);
+                    for p in (lo..hi).rev() {
+                        solve_row(sched.rows[p] as usize);
+                    }
+                }
+            }
+        }
+        if s > 0 {
+            pool.color_barrier();
+        }
+    }
+}
+
+/// Level-scheduled substitutions over the natural ordering.
+pub struct LevelTriSolver {
+    pub tri: TriFactors,
+    pub sched: CoarsenedSchedule,
+}
+
+impl LevelTriSolver {
+    pub fn new(tri: TriFactors, sched: CoarsenedSchedule) -> LevelTriSolver {
+        LevelTriSolver { tri, sched }
+    }
+}
+
+impl TriSolver for LevelTriSolver {
+    fn forward(&self, r: &[f64], y: &mut [f64], pool: &Pool) {
+        forward(&self.tri, &self.sched, r, y, pool);
+    }
+
+    fn backward(&self, y: &[f64], z: &mut [f64], pool: &Pool) {
+        backward(&self.tri, &self.sched, y, z, pool);
+    }
+
+    fn forward_worker(&self, r: &[f64], ys: &SyncSlice<f64>, pool: &Pool, tid: usize, nt: usize) {
+        forward_worker(&self.tri, &self.sched, r, ys, pool, tid, nt);
+    }
+
+    fn backward_worker(&self, y: &[f64], zs: &SyncSlice<f64>, pool: &Pool, tid: usize, nt: usize) {
+        backward_worker(&self.tri, &self.sched, y, zs, pool, tid, nt);
+    }
+
+    /// Barrier-separated stages play the role colors play elsewhere, so
+    /// the default `syncs_per_sweep` and the fused-loop sync formulas
+    /// apply unchanged.
+    fn num_colors(&self) -> usize {
+        self.sched.stages()
+    }
+
+    fn tri_elements(&self) -> usize {
+        self.tri.lower.nnz() + self.tri.upper.nnz()
+    }
+
+    fn name(&self) -> &'static str {
+        "ic0-level"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::ic0::ic0;
+    use crate::schedule::coarsen::{coarsen, CoarsenParams};
+    use crate::schedule::levels::LevelSchedule;
+    use crate::solver::trisolve_serial;
+    use crate::sparse::coo::Coo;
+    use crate::util::rng::Rng;
+
+    fn grid(nx: usize, ny: usize) -> crate::sparse::csr::Csr {
+        let idx = |x: usize, y: usize| y * nx + x;
+        let mut c = Coo::new(nx * ny);
+        for y in 0..ny {
+            for x in 0..nx {
+                c.push(idx(x, y), idx(x, y), 4.0);
+                if x + 1 < nx {
+                    c.push_sym(idx(x, y), idx(x + 1, y), -1.0);
+                }
+                if y + 1 < ny {
+                    c.push_sym(idx(x, y), idx(x, y + 1), -1.0);
+                }
+            }
+        }
+        c.to_csr()
+    }
+
+    fn build(a: &crate::sparse::csr::Csr, params: CoarsenParams) -> LevelTriSolver {
+        let tri = TriFactors::from_ic(&ic0(a, 0.0).unwrap());
+        let lv = LevelSchedule::build(&tri);
+        let sched = coarsen(&lv, &tri, &params);
+        LevelTriSolver::new(tri, sched)
+    }
+
+    /// No reductions ⇒ not just close, *bitwise* equal to the serial
+    /// sweeps, at every thread count and coarsening setting.
+    #[test]
+    fn level_substitutions_bitwise_match_serial() {
+        let a = grid(13, 11);
+        let n = a.n();
+        let tri = TriFactors::from_ic(&ic0(&a, 0.0).unwrap());
+        let mut rng = Rng::new(4);
+        let r: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let mut y_ref = vec![0.0; n];
+        trisolve_serial::forward(&tri, &r, &mut y_ref);
+        let mut z_ref = vec![0.0; n];
+        trisolve_serial::backward(&tri, &y_ref, &mut z_ref);
+
+        for params in [
+            CoarsenParams::default(),                  // fully serial here
+            CoarsenParams { min_rows: 0, min_nnz: 0 }, // barrier-per-level
+            CoarsenParams { min_rows: 6, min_nnz: 0 }, // mixed segments
+        ] {
+            let solver = build(&a, params);
+            for nt in [1usize, 2, 4] {
+                let pool = Pool::new(nt);
+                let mut y = vec![0.0; n];
+                solver.forward(&r, &mut y, &pool);
+                assert_eq!(y, y_ref, "fwd nt={nt} params={params:?}");
+                let mut z = vec![0.0; n];
+                solver.backward(&y, &mut z, &pool);
+                assert_eq!(z, z_ref, "bwd nt={nt} params={params:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sync_count_is_stages_minus_one() {
+        let a = grid(24, 24);
+        for params in [
+            CoarsenParams::default(),
+            CoarsenParams { min_rows: 0, min_nnz: 0 },
+            CoarsenParams { min_rows: 10, min_nnz: 0 },
+        ] {
+            let solver = build(&a, params);
+            let pool = Pool::new(2);
+            let n = a.n();
+            let r = vec![1.0; n];
+            let mut y = vec![0.0; n];
+            pool.reset_sync_count();
+            solver.forward(&r, &mut y, &pool);
+            assert_eq!(
+                pool.sync_count() as usize,
+                solver.sched.stages() - 1,
+                "fwd params={params:?}"
+            );
+            let mut z = vec![0.0; n];
+            pool.reset_sync_count();
+            solver.backward(&y, &mut z, &pool);
+            assert_eq!(
+                pool.sync_count() as usize,
+                solver.sched.stages() - 1,
+                "bwd params={params:?}"
+            );
+            assert_eq!(solver.syncs_per_sweep(), solver.sched.stages() - 1);
+        }
+    }
+
+    #[test]
+    fn solver_reports_level_identity() {
+        let solver = build(&grid(9, 7), CoarsenParams::default());
+        assert_eq!(solver.name(), "ic0-level");
+        assert_eq!(solver.kernel_path(), "n/a");
+        assert_eq!(solver.num_colors(), solver.sched.stages());
+        assert_eq!(
+            solver.tri_elements(),
+            solver.tri.lower.nnz() + solver.tri.upper.nnz()
+        );
+    }
+}

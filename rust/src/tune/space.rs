@@ -9,12 +9,17 @@
 //! [`SolverConfig::validate`], so the HBMC `bs % w == 0` constraint and
 //! the SELL σ window rules are honoured by construction.
 //!
-//! Enumeration **canonicalizes irrelevant axes** before deduplication:
-//! `bs` does not reach the kernels under Natural/MC ordering, `w` is
-//! meaningless for a CRS-SpMV non-HBMC plan, and σ only exists for SELL —
-//! leaving those axes free would multiply the measurement budget by
-//! configurations that share a `PlanKey`-equivalent execution without
-//! adding information.
+//! Enumeration **canonicalizes irrelevant axes** before deduplication,
+//! driven by one per-axis relevance mask per (ordering, SpMV) pair
+//! ([`axis_relevance`]): `bs` does not reach the kernels under
+//! Natural/MC/Level ordering, `w` is meaningless for a CRS-SpMV non-HBMC
+//! plan, and σ only exists for SELL — leaving those axes free would
+//! multiply the measurement budget by configurations that share a
+//! `PlanKey`-equivalent execution without adding information. The
+//! level-scheduled path deliberately masks *all three* structural axes
+//! (its schedule comes from the factor's DAG, not from bs/w), so its
+//! sub-grid is exactly |spmv| × |threads| and the scoreboard gains a fifth
+//! strategy without exploding.
 
 use std::collections::HashSet;
 
@@ -50,7 +55,15 @@ impl ConfigSpace {
             widths.push(8);
         }
         ConfigSpace {
-            orderings: vec![OrderingKind::Mc, OrderingKind::Bmc, OrderingKind::Hbmc],
+            // Level first: its sub-grid is tiny (bs/w/σ are masked), so
+            // leading the enumeration guarantees the scheduling strategy
+            // is raced even when a candidate cap truncates the tail.
+            orderings: vec![
+                OrderingKind::Level,
+                OrderingKind::Mc,
+                OrderingKind::Bmc,
+                OrderingKind::Hbmc,
+            ],
             block_sizes: vec![8, 16, 32],
             widths,
             spmvs: vec![SpmvKind::Crs, SpmvKind::Sell, SpmvKind::SymmCsr],
@@ -60,11 +73,12 @@ impl ConfigSpace {
     }
 
     /// A deliberately small space for smoke tests and `tune --quick`:
-    /// BMC vs HBMC at two block sizes, one width, both SpMV storages,
-    /// serial plus one multi-threaded width.
+    /// BMC vs HBMC at two block sizes plus the level-scheduled path, one
+    /// width, the three SpMV storages, serial plus one multi-threaded
+    /// width.
     pub fn quick(hw: &HardwareSignature) -> ConfigSpace {
         ConfigSpace {
-            orderings: vec![OrderingKind::Bmc, OrderingKind::Hbmc],
+            orderings: vec![OrderingKind::Bmc, OrderingKind::Hbmc, OrderingKind::Level],
             block_sizes: vec![8, 16],
             widths: vec![4],
             spmvs: vec![SpmvKind::Crs, SpmvKind::Sell, SpmvKind::SymmCsr],
@@ -146,31 +160,48 @@ fn thread_ladder(cores: usize) -> Vec<usize> {
     out
 }
 
+/// Which structural axes actually reach a kernel for one
+/// (ordering, SpMV) pair — the single source of truth `canonicalize`
+/// applies uniformly, instead of per-ordering special cases.
+#[derive(Debug, Clone, Copy)]
+pub struct AxisRelevance {
+    /// `bs` shapes the ordering's blocking.
+    pub bs: bool,
+    /// `w` reaches a kernel (HBMC level-2 width, or SELL slice height).
+    pub w: bool,
+    /// σ exists (SELL storage) and the path is allowed to sweep it.
+    pub sigma: bool,
+}
+
+/// Relevance mask for one (ordering, SpMV) pair. Natural/MC have no
+/// blocking (`bs` inert); for non-HBMC orderings `w` only matters as the
+/// SELL slice height; σ exists only for SELL. The level path masks all
+/// three: its parallel structure is the factor DAG's wavefronts, so the
+/// tuner races it on |spmv| × |threads| alone.
+pub fn axis_relevance(ordering: OrderingKind, spmv: SpmvKind) -> AxisRelevance {
+    let sell = spmv == SpmvKind::Sell;
+    match ordering {
+        OrderingKind::Natural | OrderingKind::Mc => {
+            AxisRelevance { bs: false, w: sell, sigma: sell }
+        }
+        OrderingKind::Bmc => AxisRelevance { bs: true, w: sell, sigma: sell },
+        OrderingKind::Hbmc => AxisRelevance { bs: true, w: true, sigma: sell },
+        OrderingKind::Level => AxisRelevance { bs: false, w: false, sigma: false },
+    }
+}
+
 /// Map axes that cannot reach the kernels to fixed values so the dedup set
 /// collapses behaviour-identical grid points (see module docs).
 fn canonicalize(cfg: &mut SolverConfig, space: &ConfigSpace) {
-    let first_bs = space.block_sizes.first().copied().unwrap_or(cfg.bs);
-    let first_w = space.widths.first().copied().unwrap_or(cfg.w);
-    if cfg.spmv != SpmvKind::Sell {
-        // σ exists only for SELL storage.
-        cfg.sell_sigma = None;
+    let rel = axis_relevance(cfg.ordering, cfg.spmv);
+    if !rel.bs {
+        cfg.bs = space.block_sizes.first().copied().unwrap_or(cfg.bs);
     }
-    match cfg.ordering {
-        OrderingKind::Natural | OrderingKind::Mc => {
-            // No blocking: bs is inert; w only matters as the SELL slice
-            // height.
-            cfg.bs = first_bs;
-            if cfg.spmv != SpmvKind::Sell {
-                cfg.w = first_w;
-            }
-        }
-        OrderingKind::Bmc => {
-            // bs is the blocking; w again only matters through SELL.
-            if cfg.spmv != SpmvKind::Sell {
-                cfg.w = first_w;
-            }
-        }
-        OrderingKind::Hbmc => {} // both bs and w shape the level-2 blocks
+    if !rel.w {
+        cfg.w = space.widths.first().copied().unwrap_or(cfg.w);
+    }
+    if !rel.sigma {
+        cfg.sell_sigma = None;
     }
 }
 
@@ -301,6 +332,67 @@ mod tests {
         let cands = space.enumerate(&base);
         assert_eq!(cands.len(), 1, "{:?}", cands.iter().map(|c| c.label()).collect::<Vec<_>>());
         assert_eq!(cands[0].bs, 32, "the incumbent itself is kept verbatim");
+    }
+
+    #[test]
+    fn level_sub_grid_is_spmv_times_threads() {
+        // All three structural axes are masked for the level path, so a
+        // 3 (bs) × 2 (w) × 2 (σ) sub-grid collapses to |spmv| × |threads|.
+        let space = ConfigSpace {
+            orderings: vec![OrderingKind::Level],
+            block_sizes: vec![8, 16, 32],
+            widths: vec![4, 8],
+            spmvs: vec![SpmvKind::Crs, SpmvKind::Sell, SpmvKind::SymmCsr],
+            sigma_slices: vec![None, Some(16)],
+            threads: vec![1, 2, 4],
+        };
+        let base = SolverConfig {
+            ordering: OrderingKind::Level,
+            bs: 8,
+            w: 4,
+            spmv: SpmvKind::Crs,
+            threads: 1,
+            ..Default::default()
+        };
+        let cands = space.enumerate(&base);
+        assert_eq!(
+            cands.len(),
+            3 * 3,
+            "{:?}",
+            cands.iter().map(|c| c.label()).collect::<Vec<_>>()
+        );
+        assert!(cands.iter().all(|c| c.ordering == OrderingKind::Level));
+        assert!(cands.iter().all(|c| c.sell_sigma.is_none()));
+        assert!(cands.iter().all(|c| c.bs == 8 && c.w == 4));
+    }
+
+    #[test]
+    fn relevance_mask_matches_kernel_reach() {
+        // Spot-check the mask against what each kernel actually consumes.
+        let r = axis_relevance(OrderingKind::Mc, SpmvKind::Crs);
+        assert!(!r.bs && !r.w && !r.sigma);
+        let r = axis_relevance(OrderingKind::Mc, SpmvKind::Sell);
+        assert!(!r.bs && r.w && r.sigma);
+        let r = axis_relevance(OrderingKind::Bmc, SpmvKind::SymmCsr);
+        assert!(r.bs && !r.w && !r.sigma);
+        let r = axis_relevance(OrderingKind::Hbmc, SpmvKind::Crs);
+        assert!(r.bs && r.w && !r.sigma);
+        for spmv in [SpmvKind::Crs, SpmvKind::Sell, SpmvKind::SymmCsr] {
+            let r = axis_relevance(OrderingKind::Level, spmv);
+            assert!(!r.bs && !r.w && !r.sigma, "level masks every structural axis");
+        }
+    }
+
+    #[test]
+    fn default_grids_lead_with_the_level_path() {
+        // The full grid puts Level first so a candidate cap can never
+        // starve the scheduling strategy; quick includes it too.
+        let full = ConfigSpace::for_hardware(&hw(SimdLevel::Avx2, 4));
+        assert_eq!(full.orderings[0], OrderingKind::Level);
+        let base = SolverConfig::default();
+        assert!(full.enumerate(&base).iter().any(|c| c.ordering == OrderingKind::Level));
+        let quick = ConfigSpace::quick(&hw(SimdLevel::Scalar, 2));
+        assert!(quick.enumerate(&base).iter().any(|c| c.ordering == OrderingKind::Level));
     }
 
     #[test]

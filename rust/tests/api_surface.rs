@@ -100,7 +100,13 @@ fn config_enums_parse_and_display() {
 #[test]
 fn config_enums_round_trip_exhaustively() {
     use hbmc::config::NodePreset;
-    for k in [OrderingKind::Natural, OrderingKind::Mc, OrderingKind::Bmc, OrderingKind::Hbmc] {
+    for k in [
+        OrderingKind::Natural,
+        OrderingKind::Mc,
+        OrderingKind::Bmc,
+        OrderingKind::Hbmc,
+        OrderingKind::Level,
+    ] {
         assert_eq!(k.to_string().parse::<OrderingKind>().unwrap(), k);
     }
     for v in [SpmvKind::Crs, SpmvKind::Sell] {

@@ -4,8 +4,8 @@
 //!
 //! * the fused single-dispatch loop reproduces the legacy per-kernel path
 //!   **exactly** — identical residual histories, iteration counts and
-//!   solution bits — for all four orderings × threads ∈ {1, 4} × SpMV ∈
-//!   {CRS, SELL};
+//!   solution bits — for all five orderings (including the level-scheduled
+//!   wavefront path) × threads ∈ {1, 4} × SpMV ∈ {CRS, SELL};
 //! * fused results are bitwise-deterministic across runs *and across
 //!   thread counts* (the chunk-grid reductions are partition-invariant);
 //! * a converged solve performs **exactly one** `Pool::run` dispatch on
@@ -20,11 +20,12 @@ use hbmc::coordinator::pool::Pool;
 use hbmc::gen::suite;
 use hbmc::solver::plan::{ExecOptions, SolveOutcome, SolverPlan};
 
-const ORDERINGS: [OrderingKind; 4] = [
+const ORDERINGS: [OrderingKind; 5] = [
     OrderingKind::Natural,
     OrderingKind::Mc,
     OrderingKind::Bmc,
     OrderingKind::Hbmc,
+    OrderingKind::Level,
 ];
 
 fn cfg_for(ordering: OrderingKind, spmv: SpmvKind, shift: f64) -> SolverConfig {
@@ -171,6 +172,41 @@ fn fused_solve_is_exactly_one_dispatch_with_modeled_syncs() {
                     assert_eq!(legacy.dispatches as usize, legacy.cg.iterations + 1);
                 }
             }
+        }
+    }
+}
+
+/// The level-scheduled path keeps the natural (identity) ordering, so on
+/// every suite matrix it must reproduce the serial natural-ordering solve
+/// **bitwise** — same iteration count, same residual history, same
+/// solution — at every thread count, in a single dispatch. This is the
+/// scheduling path's headline property: wavefront parallelism with zero
+/// convergence penalty.
+#[test]
+fn level_path_matches_natural_ordering_iterations_exactly() {
+    for name in suite::NAMES {
+        let d = suite::dataset(name, Scale::Tiny);
+        let natural_plan =
+            SolverPlan::build(&d.matrix, &cfg_for(OrderingKind::Natural, SpmvKind::Crs, d.shift))
+                .expect("natural plan");
+        let natural = run(&natural_plan, &d.b, 1, false);
+        assert!(
+            natural.cg.converged,
+            "{name}: natural baseline must converge (relres={})",
+            natural.cg.final_relres
+        );
+
+        let plan =
+            SolverPlan::build(&d.matrix, &cfg_for(OrderingKind::Level, SpmvKind::Crs, d.shift))
+                .expect("level plan");
+        for nt in [1usize, 2, 4] {
+            let level = run(&plan, &d.b, nt, false);
+            assert_eq!(
+                level.cg.iterations, natural.cg.iterations,
+                "{name} nt={nt}: level path must not change the ICCG iteration count"
+            );
+            assert_bitwise_equal(&level, &natural, &format!("{name} level nt={nt}"));
+            assert_eq!(level.dispatches, 1, "{name} nt={nt}: level path is one dispatch");
         }
     }
 }

@@ -42,15 +42,20 @@ fn tiny_base() -> SolverConfig {
 }
 
 fn random_profile(rng: &mut Rng) -> TunedProfile {
-    let orderings =
-        [OrderingKind::Natural, OrderingKind::Mc, OrderingKind::Bmc, OrderingKind::Hbmc];
+    let orderings = [
+        OrderingKind::Natural,
+        OrderingKind::Mc,
+        OrderingKind::Bmc,
+        OrderingKind::Hbmc,
+        OrderingKind::Level,
+    ];
     let simds = [SimdLevel::Scalar, SimdLevel::Avx2, SimdLevel::Avx512];
     let w = [1usize, 2, 4, 8][rng.below(4)];
     let bs = w * (1 + rng.below(8));
     TunedProfile {
         fingerprint: rng.next_u64(),
         hardware: HardwareSignature { simd: simds[rng.below(3)], cores: 1 + rng.below(64) },
-        ordering: orderings[rng.below(4)],
+        ordering: orderings[rng.below(5)],
         bs,
         w,
         spmv: if rng.below(2) == 0 { SpmvKind::Crs } else { SpmvKind::Sell },
@@ -241,6 +246,47 @@ fn service_tune_persists_and_next_service_auto_applies() {
     assert_eq!(outs.len(), 2);
     assert_eq!(svc2.stats().profile_hits, 3);
     let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn level_profile_auto_applies_end_to_end() {
+    // The level-scheduled path is a first-class tuner citizen: a profile
+    // naming it persists, auto-applies on the next default-config solve,
+    // and the served plan really runs the level trisolver. The space (and
+    // the incumbent) are pinned to Level so the winner's ordering is
+    // deterministic regardless of timing noise.
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let opts = TuneOptions {
+        space: Some(ConfigSpace {
+            orderings: vec![OrderingKind::Level],
+            block_sizes: vec![8],
+            widths: vec![4],
+            spmvs: vec![SpmvKind::Crs],
+            sigma_slices: vec![None],
+            threads: vec![1],
+        }),
+        trials: 1,
+        expected_reuse: f64::INFINITY,
+        ..Default::default()
+    };
+    let base = SolverConfig {
+        ordering: OrderingKind::Level,
+        spmv: SpmvKind::Crs,
+        rtol: 1e-7,
+        ..Default::default()
+    };
+    let svc = SolverService::with_config(base).unwrap();
+    let h = svc.register_matrix(d.matrix.clone());
+    let profile = svc.tune(h, &opts).unwrap();
+    assert_eq!(profile.ordering, OrderingKind::Level);
+    let out = svc.solve(h, &d.b).unwrap();
+    assert!(out.report.converged);
+    assert_eq!(out.report.plan.trisolver, "ic0-level");
+    assert!(
+        out.report.plan.schedule.is_some(),
+        "the auto-applied level plan must surface its schedule cost model"
+    );
+    assert!(svc.stats().profile_hits >= 1);
 }
 
 #[test]
