@@ -58,14 +58,12 @@ fn main() -> anyhow::Result<()> {
         let iters = t.join().expect("client thread")?;
         println!("client {c}: converged in {iters} iters");
     }
-    let stats = service.stats();
-    println!(
-        "batching: {} jobs ran in {} dispatched batches (mean width {:.2}, {} rhs coalesced)",
-        stats.solves,
-        stats.batches,
-        stats.mean_batch_width(),
-        stats.coalesced_rhs
-    );
+    // One call replaces ad-hoc stat prints: every ServiceStats counter
+    // plus the queue-wait / batch-width / solve-time histogram quantiles,
+    // in the same shape `hbmc stats` prints on the command line. (The
+    // machine-readable twin is `service.metrics_text()` — Prometheus text
+    // exposition, served over HTTP by `hbmc serve --metrics-addr`.)
+    println!("\n{}", service.stats_text());
 
     // --- 3. cancellation ----------------------------------------------------
     // A queued job can be cancelled before dispatch; `wait` then returns
@@ -82,16 +80,29 @@ fn main() -> anyhow::Result<()> {
     }
 
     // --- 4. deadlines -------------------------------------------------------
-    // A zero budget means the job is already expired when the dispatcher
-    // reaches it: it never runs and fails typed.
+    // A zero budget is rejected synchronously at submit — no handle, no
+    // queue traffic:
+    match service.submit(handle, &dataset.b, &SolveRequest::new().deadline(Duration::ZERO)) {
+        Err(HbmcError::DeadlineExceeded { budget }) => {
+            println!("zero-budget submit rejected synchronously (budget {budget:?})");
+        }
+        other => println!("unexpected zero-deadline outcome: {other:?}"),
+    }
+    // A positive budget enqueues, but if it is spent by the time the
+    // dispatcher claims the job, the job is *shed*: it never runs, fails
+    // typed, and ticks `ServiceStats::shed` (and `hbmc_shed_total` in the
+    // Prometheus exposition).
     let hopeless = service.submit(
         handle,
         &dataset.b,
-        &SolveRequest::new().deadline(Duration::ZERO),
+        &SolveRequest::new().deadline(Duration::from_nanos(1)),
     )?;
     match hopeless.wait() {
         Err(HbmcError::DeadlineExceeded { budget }) => {
-            println!("deadline job failed typed (budget {budget:?}) without running");
+            println!(
+                "expired job shed without running (budget {budget:?}; shed so far = {})",
+                service.stats().shed
+            );
         }
         other => println!("unexpected deadline outcome: {other:?}"),
     }

@@ -185,6 +185,7 @@ fn main() {
     }
 
     // 3. Submit everything, then wait (explicit async fan-in).
+    let queue_wait_us: (u64, u64); // (p50, p99) over the fan-in strategy
     {
         let (service, handle) = service_for(&cfg, &d);
         let warm = service.stats();
@@ -217,16 +218,67 @@ fn main() {
             "submit/wait",
             report("submit/wait", t0.elapsed().as_secs_f64(), &service, warm, &w),
         );
+        let snap = service.metrics_snapshot();
+        let qw = snap.histogram("hbmc_queue_wait_microseconds").expect("queue-wait histogram");
+        queue_wait_us = (qw.quantile(0.5), qw.quantile(0.99));
+        println!(
+            "queue wait   p50={}µs p99={}µs over {} dispatched jobs",
+            queue_wait_us.0, queue_wait_us.1, qw.count
+        );
     }
+
+    // 4. Overload flood: the same fan-in traffic against a deliberately
+    //    tiny bounded queue — backpressure must reject fast and typed,
+    //    and the rejected/shed counts join the perf trajectory so an
+    //    admission-control regression is as visible as a throughput one.
+    let (overloaded, shed) = {
+        let mut cfg_over = cfg.clone();
+        cfg_over.queue.max_queue_depth = Some(4);
+        cfg_over.queue.max_wait = Duration::from_millis(50);
+        let (service, handle) = service_for(&cfg_over, &d);
+        // One already-expired job exercises the shed path deterministically.
+        let doomed = service
+            .submit(handle, &d.b, &SolveRequest::new().deadline(Duration::from_nanos(1)))
+            .expect("submit doomed job");
+        let mut accepted = Vec::new();
+        let mut rejected = 0u64;
+        let t0 = Instant::now();
+        for i in 0..w.clients * w.requests {
+            match service.submit(handle, &rhs_for(&d, i), &SolveRequest::new()) {
+                Ok(job) => accepted.push(job),
+                Err(hbmc::api::HbmcError::Overloaded { .. }) => rejected += 1,
+                Err(e) => panic!("flood must only fail Overloaded: {e}"),
+            }
+        }
+        let submit_wall = t0.elapsed().as_secs_f64();
+        assert!(doomed.wait().is_err(), "1ns-budget job must be shed");
+        for job in accepted {
+            assert!(job.wait().expect("accepted job").report.converged);
+        }
+        let st = service.stats();
+        println!(
+            "overload     {submit_wall:.3}s submit wall  depth_limit=4 \
+             rejected={rejected} shed={} (typed, non-blocking)",
+            st.shed
+        );
+        (st.overloaded, st.shed)
+    };
+    println!("admission    overloaded={overloaded} shed={shed}");
 
     if quick {
         let json = format!(
             "{{\n  \"bench\": \"serving-quick\",\n  \"dataset\": \"{}\",\n  \"clients\": {},\n  \
-             \"requests\": {},\n  \"strategies\": [\n{}\n  ]\n}}\n",
+             \"requests\": {},\n  \"strategies\": [\n{}\n  ],\n  \
+             \"queue_wait_p50_us\": {},\n  \"queue_wait_p99_us\": {},\n  \
+             \"overloaded\": {},\n  \"shed\": {}\n}}\n",
             d.name,
             w.clients,
             w.requests,
-            json_entries.join(",\n")
+            json_entries.join(",\n"),
+            queue_wait_us.0,
+            queue_wait_us.1,
+            overloaded,
+            shed
         );
         // Stable name at the repo root (CWD here is the package dir).
         let path = hbmc::util::bench_artifact_path("BENCH_serving.json");

@@ -13,19 +13,30 @@
 //!   (running jobs always finish; cancelling them is a no-op).
 //!
 //! A per-job deadline (`SolveRequest::deadline`) is checked at dispatch
-//! time: a job still queued when its deadline passes fails with
-//! [`HbmcError::DeadlineExceeded`] instead of running.
+//! time: a job still queued when its deadline passes is *shed* — it fails
+//! with [`HbmcError::DeadlineExceeded`] instead of running. (A deadline
+//! that is already zero at submission never reaches the queue; `submit`
+//! rejects it synchronously.)
+//!
+//! A `JobCore` additionally carries the observability and admission state
+//! attached at submission: its submit timestamp (queue-wait histogram),
+//! an optional [`InflightGuard`] holding one slot of the handle's
+//! `max_inflight_per_handle` quota (released at the first terminal
+//! transition, with `Drop` as a backstop), and an optional reference to
+//! the service's `TraceRecorder` when this job was sampled for lifecycle
+//! tracing.
 //!
 //! [`SolverService`]: crate::api::SolverService
 //! [`SolverService::submit`]: crate::api::SolverService::submit
 
-use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use super::service::mlock;
 use crate::coordinator::session::SolveOutput;
 use crate::error::{HbmcError, Result};
+use crate::obs::trace::{stage, TraceRecorder};
 
 /// Lifecycle of an asynchronous solve job.
 ///
@@ -67,6 +78,64 @@ struct Slot {
     result: Option<Result<SolveOutput>>,
 }
 
+/// One slot of a handle's `max_inflight_per_handle` quota, held from
+/// submission until the job reaches a terminal state.
+///
+/// Release is idempotent (an atomic swap guards the decrement) and happens
+/// at the terminal transition *under the job's slot lock, before the
+/// condvar notification* — so by the time a waiter observes the terminal
+/// state, the slot is free and an immediate resubmit cannot spuriously see
+/// the quota still full. `Drop` is only a backstop for jobs that die
+/// without a terminal transition (e.g. a future panic path).
+pub(crate) struct InflightGuard {
+    slots: Arc<AtomicUsize>,
+    released: AtomicBool,
+}
+
+impl InflightGuard {
+    /// Claim one slot against `limit`, or return the occupancy that made
+    /// the claim fail. Lock-free CAS loop: concurrent submits race for the
+    /// last slot and exactly one wins.
+    pub(crate) fn acquire(
+        slots: &Arc<AtomicUsize>,
+        limit: usize,
+    ) -> std::result::Result<InflightGuard, usize> {
+        let mut current = slots.load(AtomicOrdering::Relaxed);
+        loop {
+            if current >= limit {
+                return Err(current);
+            }
+            match slots.compare_exchange_weak(
+                current,
+                current + 1,
+                AtomicOrdering::AcqRel,
+                AtomicOrdering::Relaxed,
+            ) {
+                Ok(_) => {
+                    return Ok(InflightGuard {
+                        slots: Arc::clone(slots),
+                        released: AtomicBool::new(false),
+                    })
+                }
+                Err(observed) => current = observed,
+            }
+        }
+    }
+
+    /// Return the slot (idempotent; see type docs).
+    fn release(&self) {
+        if !self.released.swap(true, AtomicOrdering::AcqRel) {
+            self.slots.fetch_sub(1, AtomicOrdering::AcqRel);
+        }
+    }
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
 /// State shared between a [`JobHandle`] and the dispatcher.
 pub(crate) struct JobCore {
     id: u64,
@@ -76,10 +145,21 @@ pub(crate) struct JobCore {
     deadline: Option<Instant>,
     /// The originally requested budget (for the error message).
     budget: Option<Duration>,
+    /// Submission timestamp (queue-wait histogram; trace ordering).
+    submitted_at: Instant,
+    /// Held slot of the handle's in-flight quota, if one is configured.
+    inflight: Option<InflightGuard>,
+    /// The service's trace ring when this job was sampled; `None` (the
+    /// common case) costs one pointer check per lifecycle transition.
+    trace: Option<Arc<TraceRecorder>>,
 }
 
 impl JobCore {
-    pub(crate) fn new(budget: Option<Duration>) -> Arc<JobCore> {
+    pub(crate) fn new(
+        budget: Option<Duration>,
+        inflight: Option<InflightGuard>,
+        trace: Option<Arc<TraceRecorder>>,
+    ) -> Arc<JobCore> {
         Arc::new(JobCore {
             id: NEXT_JOB_ID.fetch_add(1, AtomicOrdering::Relaxed),
             slot: Mutex::new(Slot { state: JobState::Queued, result: None }),
@@ -89,7 +169,38 @@ impl JobCore {
             // panicking in `submit`.
             deadline: budget.and_then(|d| Instant::now().checked_add(d)),
             budget,
+            submitted_at: Instant::now(),
+            inflight,
+            trace,
         })
+    }
+
+    /// How long this job has been (or was) queued since submission.
+    pub(crate) fn queue_wait(&self) -> Duration {
+        self.submitted_at.elapsed()
+    }
+
+    /// Record a lifecycle event if this job is being traced.
+    pub(crate) fn note(&self, stage: &'static str) {
+        if let Some(t) = &self.trace {
+            t.record(self.id, stage, String::new());
+        }
+    }
+
+    /// Like [`note`](JobCore::note) with a detail string; the closure runs
+    /// only when the job is actually traced.
+    pub(crate) fn note_with(&self, stage: &'static str, detail: impl FnOnce() -> String) {
+        if let Some(t) = &self.trace {
+            t.record(self.id, stage, detail());
+        }
+    }
+
+    /// Release admission state at a terminal transition. Must be called
+    /// while still holding the slot lock (see [`InflightGuard`]).
+    fn settle(&self) {
+        if let Some(g) = &self.inflight {
+            g.release();
+        }
     }
 
     pub(crate) fn state(&self) -> JobState {
@@ -116,12 +227,15 @@ impl JobCore {
                 slot.result = Some(Err(HbmcError::DeadlineExceeded {
                     budget: self.budget.unwrap_or_default(),
                 }));
+                self.settle();
+                self.note(stage::SHED);
                 drop(slot);
                 self.cv.notify_all();
                 return false;
             }
         }
         slot.state = JobState::Running;
+        self.note(stage::DISPATCHED);
         true
     }
 
@@ -132,8 +246,13 @@ impl JobCore {
         if slot.state != JobState::Running {
             return;
         }
+        match &result {
+            Ok(_) => self.note(stage::COMPLETED),
+            Err(e) => self.note_with(stage::FAILED, || e.to_string()),
+        }
         slot.state = if result.is_ok() { JobState::Succeeded } else { JobState::Failed };
         slot.result = Some(result);
+        self.settle();
         drop(slot);
         self.cv.notify_all();
     }
@@ -149,6 +268,8 @@ impl JobCore {
         }
         slot.state = JobState::Cancelled;
         slot.result = Some(Err(HbmcError::Cancelled));
+        self.settle();
+        self.note(stage::CANCELLED);
         drop(slot);
         self.cv.notify_all();
         true
@@ -205,7 +326,7 @@ mod tests {
 
     #[test]
     fn lifecycle_queued_running_finished() {
-        let core = JobCore::new(None);
+        let core = JobCore::new(None, None, None);
         let handle = JobHandle::new(Arc::clone(&core));
         assert_eq!(handle.poll(), JobState::Queued);
         assert!(!JobState::Queued.is_terminal() && !JobState::Running.is_terminal());
@@ -221,7 +342,7 @@ mod tests {
 
     #[test]
     fn cancel_wins_over_dispatch() {
-        let core = JobCore::new(None);
+        let core = JobCore::new(None, None, None);
         let handle = JobHandle::new(Arc::clone(&core));
         assert!(handle.cancel());
         assert!(!handle.cancel(), "second cancel is a no-op");
@@ -232,10 +353,70 @@ mod tests {
 
     #[test]
     fn expired_deadline_fails_at_dispatch() {
-        let core = JobCore::new(Some(Duration::ZERO));
+        let core = JobCore::new(Some(Duration::ZERO), None, None);
         let handle = JobHandle::new(Arc::clone(&core));
         assert!(!core.try_start(), "expired job must not start");
         assert_eq!(handle.poll(), JobState::DeadlineExceeded);
         assert!(matches!(handle.wait(), Err(HbmcError::DeadlineExceeded { .. })));
+    }
+
+    #[test]
+    fn inflight_guard_bounds_and_releases_idempotently() {
+        let slots = Arc::new(AtomicUsize::new(0));
+        let g1 = InflightGuard::acquire(&slots, 2).unwrap();
+        let _g2 = InflightGuard::acquire(&slots, 2).unwrap();
+        assert_eq!(InflightGuard::acquire(&slots, 2).unwrap_err(), 2, "quota full");
+        g1.release();
+        g1.release(); // idempotent: a second release must not double-free
+        assert_eq!(slots.load(AtomicOrdering::Relaxed), 1);
+        let g3 = InflightGuard::acquire(&slots, 2).unwrap();
+        drop(g3); // Drop is the backstop release path
+        assert_eq!(slots.load(AtomicOrdering::Relaxed), 1);
+        drop(g1); // already released explicitly — Drop must not decrement again
+        assert_eq!(slots.load(AtomicOrdering::Relaxed), 1);
+    }
+
+    #[test]
+    fn terminal_transitions_release_the_quota_slot() {
+        let slots = Arc::new(AtomicUsize::new(0));
+        // finish() releases.
+        let core = JobCore::new(None, Some(InflightGuard::acquire(&slots, 1).unwrap()), None);
+        assert!(InflightGuard::acquire(&slots, 1).is_err(), "slot held while queued");
+        assert!(core.try_start());
+        core.finish(Err(HbmcError::Cancelled));
+        assert_eq!(slots.load(AtomicOrdering::Relaxed), 0, "finish frees the slot");
+        // cancel_queued() releases, even with the handle still alive.
+        let core = JobCore::new(None, Some(InflightGuard::acquire(&slots, 1).unwrap()), None);
+        let handle = JobHandle::new(Arc::clone(&core));
+        assert!(core.cancel_queued());
+        assert_eq!(slots.load(AtomicOrdering::Relaxed), 0, "cancel frees the slot");
+        drop(handle);
+        // expired-deadline shedding releases.
+        let core = JobCore::new(
+            Some(Duration::ZERO),
+            Some(InflightGuard::acquire(&slots, 1).unwrap()),
+            None,
+        );
+        assert!(!core.try_start());
+        assert_eq!(slots.load(AtomicOrdering::Relaxed), 0, "shed frees the slot");
+        drop(core);
+        assert_eq!(slots.load(AtomicOrdering::Relaxed), 0, "Drop backstop is idempotent");
+    }
+
+    #[test]
+    fn traced_job_records_its_lifecycle() {
+        let trace = Arc::new(TraceRecorder::new(16));
+        let core = JobCore::new(None, None, Some(Arc::clone(&trace)));
+        assert!(core.try_start());
+        core.finish(Err(HbmcError::Internal("boom".into())));
+        let stages: Vec<&str> = trace.events().iter().map(|e| e.stage).collect();
+        assert_eq!(stages, vec!["dispatched", "failed"]);
+        assert!(trace.events()[1].detail.contains("boom"));
+        // Untraced jobs record nothing.
+        let silent = JobCore::new(None, None, None);
+        assert!(silent.try_start());
+        silent.finish(Err(HbmcError::Cancelled));
+        assert_eq!(trace.len(), 2);
+        assert!(silent.queue_wait() > Duration::ZERO);
     }
 }

@@ -24,6 +24,16 @@
 //! [`SolveRequest::no_profile`](SolveRequest::no_profile); observe via
 //! `ServiceStats::profile_hits`).
 //!
+//! The service is observable and load-shedding (see [`crate::obs`] and
+//! ARCHITECTURE.md "Observability & admission control"):
+//! [`SolverService::metrics_text`] renders every counter and histogram in
+//! Prometheus text exposition format (served over HTTP by
+//! `hbmc serve --metrics-addr`), [`SolverService::trace_json`] dumps the
+//! sampled job-lifecycle trace, and [`QueueConfig`] bounds — queue depth
+//! and per-handle in-flight quota — turn floods into fast, typed
+//! [`HbmcError::Overloaded`](crate::error::HbmcError::Overloaded)
+//! rejections instead of unbounded memory growth.
+//!
 //! The lower layers (plans, sessions, kernels) remain public for research
 //! scripts and the reproduction benches; the service is the shape the
 //! ROADMAP's serving story ("a few matrices, many right-hand sides, many
@@ -37,6 +47,7 @@ mod service;
 
 pub use crate::config::{QueueConfig, SolverConfig, SolverConfigBuilder};
 pub use crate::error::{HbmcError, Result};
+pub use crate::obs::{HistogramSnapshot, MetricsSnapshot, TraceEvent};
 pub use crate::tune::{HardwareSignature, ProfileStore, TuneOptions, TunedProfile};
 pub use job::{JobHandle, JobState};
 pub use service::{MatrixHandle, ServiceStats, SolveRequest, SolverService};

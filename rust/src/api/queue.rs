@@ -34,12 +34,17 @@
 //!   many *distinct* (matrix, config) keys with single-threaded configs
 //!   should hold per-key `SolverService::session` handles (the documented
 //!   queue-bypass path) to run keys in parallel.
-//! * **The queue is unbounded.** `submit` never blocks or sheds load; a
-//!   sustained submission rate above dispatcher throughput grows
-//!   `queue_depth` (each queued job owns its rhs clone) without limit.
-//!   Callers needing backpressure should watch `ServiceStats::queue_depth`
-//!   and shed upstream, or bound in-flight jobs with per-job deadlines
-//!   plus a cap on outstanding handles.
+//! * **Backpressure is fail-fast, never blocking.** By default the queue
+//!   is unbounded; with `QueueConfig::max_queue_depth` set, a `push` that
+//!   would exceed the bound returns [`HbmcError::Overloaded`] immediately
+//!   (`submit` surfaces it synchronously — it never blocks the caller or
+//!   silently drops the job). Depth accounting includes jobs *staged* into
+//!   an open batch window, so the bound cannot be dodged by racing the
+//!   dispatcher's absorb pass. Jobs whose deadline has already expired by
+//!   the time the dispatcher reaches them are **shed** — failed typed, via
+//!   `JobCore::try_start`, counted in `ServiceStats::shed` — rather than
+//!   silently run. Per-handle quotas (`max_inflight_per_handle`) are
+//!   enforced one level up, in `SolverService::submit`.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -52,8 +57,9 @@ use crate::coordinator::driver::SolveOptions;
 use crate::coordinator::session::{PlanKey, SolveOutput, SolveSession};
 use crate::error::{HbmcError, Result};
 
-use super::job::JobCore;
+use super::job::{JobCore, JobState};
 use super::service::{mlock, Registered, ServiceCore};
+use crate::obs::trace::stage;
 
 /// Everything that must agree for two jobs to run on one session: the plan
 /// identity plus the session-level knobs `SolveSession::for_request` takes
@@ -100,6 +106,12 @@ struct QueueState {
     /// non-zero, so a latency-sensitive job never waits out another
     /// batch's window on an otherwise idle service.
     deadline_jobs: usize,
+    /// Jobs pulled out of `jobs` into an open batch window but not yet
+    /// claimed for dispatch. Counted so `depth()` — and with it both the
+    /// `max_queue_depth` admission bound and the `queue_depth` gauge —
+    /// stays live while the dispatcher sits in `wait_timeout` holding a
+    /// half-built batch (previously those jobs vanished from the depth).
+    staged: usize,
 }
 
 /// The shared queue; one per service, drained by one dispatcher thread.
@@ -124,6 +136,7 @@ impl JobQueue {
                 jobs: VecDeque::new(),
                 shutdown: false,
                 deadline_jobs: 0,
+                staged: 0,
             }),
             cv: Condvar::new(),
             cfg,
@@ -137,13 +150,24 @@ impl JobQueue {
     /// down — a race only reachable through handles outliving the service).
     /// A shutdown-rejected job surfaces as [`HbmcError::Cancelled`]: it was
     /// never dispatched, exactly like a caller-cancelled one.
-    pub(crate) fn push(&self, job: QueuedJob) {
+    ///
+    /// With `max_queue_depth` configured, a push that would exceed the
+    /// bound fails fast with [`HbmcError::Overloaded`] — the depth check
+    /// and the insert happen under one lock acquisition, so the bound is
+    /// exact even under concurrent submitters.
+    pub(crate) fn push(&self, job: QueuedJob) -> Result<()> {
         {
             let mut st = mlock(&self.state);
             if st.shutdown {
                 drop(st);
                 job.core.cancel_queued();
-                return;
+                return Ok(());
+            }
+            if let Some(limit) = self.cfg.max_queue_depth {
+                let depth = st.jobs.len() + st.staged;
+                if depth >= limit {
+                    return Err(HbmcError::Overloaded { depth, limit });
+                }
             }
             if job.core.has_deadline() {
                 st.deadline_jobs += 1;
@@ -151,6 +175,7 @@ impl JobQueue {
             st.jobs.push_back(job);
         }
         self.cv.notify_all();
+        Ok(())
     }
 
     /// Stop accepting jobs and wake the dispatcher so it can flush and exit.
@@ -159,9 +184,19 @@ impl JobQueue {
         self.cv.notify_all();
     }
 
-    /// Jobs currently queued (not yet pulled into a batch).
+    /// Jobs currently queued *or staged into an open batch window* — the
+    /// live depth the admission bound and the `queue_depth` gauge both see.
     pub(crate) fn depth(&self) -> usize {
-        mlock(&self.state).jobs.len()
+        let st = mlock(&self.state);
+        st.jobs.len() + st.staged
+    }
+
+    /// Return one staged job's slot to the depth accounting (the job is
+    /// about to be dispatched or dropped; either way it no longer occupies
+    /// queue capacity).
+    fn unstage(&self) {
+        let mut st = mlock(&self.state);
+        st.staged = st.staged.saturating_sub(1);
     }
 
     pub(crate) fn batches(&self) -> u64 {
@@ -192,6 +227,7 @@ impl JobQueue {
                 if job.core.state().is_terminal() {
                     continue;
                 }
+                st.staged += 1;
                 break job;
             }
             if st.shutdown {
@@ -215,6 +251,7 @@ impl JobQueue {
                         if job.core.has_deadline() {
                             st.deadline_jobs = st.deadline_jobs.saturating_sub(1);
                         }
+                        st.staged += 1;
                         batch.push(job);
                     }
                 } else {
@@ -267,19 +304,20 @@ pub(crate) fn dispatcher_loop(queue: Arc<JobQueue>, core: Arc<ServiceCore>) {
 /// solve. Solver kernels are panic-free over validated plans, so this is
 /// a defense-in-depth boundary, not an expected path.
 fn run_batch(queue: &JobQueue, core: &ServiceCore, batch: Vec<QueuedJob>) {
-    // Jobs are claimed *lazily*: `try_start` runs when the dispatcher
-    // reaches each job, not at batch formation. A late member of a wide
-    // batch therefore stays cancellable — and its deadline keeps counting
-    // — for the whole time earlier members are solving.
+    // Jobs are claimed *lazily*: `claim` (→ `try_start`) runs when the
+    // dispatcher reaches each job, not at batch formation. A late member
+    // of a wide batch therefore stays cancellable — and its deadline keeps
+    // counting — for the whole time earlier members are solving.
     let mut jobs = batch.into_iter();
     let first = loop {
         match jobs.next() {
-            Some(job) if job.core.try_start() => break job,
-            Some(_) => continue, // cancelled or expired while queued
+            Some(job) if claim(queue, core, &job) => break job,
+            Some(_) => continue, // cancelled or shed while queued
             None => return,      // nothing left to run: not a batch at all
         }
     };
     queue.batches.fetch_add(1, AtomicOrdering::Relaxed);
+    first.core.note_with(stage::BATCH_OPENED, || format!("{:?}", first.key));
     // Remembered for poisoned-batch recovery below: `first` is consumed by
     // the solve loop, but its plan key must outlive it so the cache entry
     // can be evicted after a panic.
@@ -294,7 +332,7 @@ fn run_batch(queue: &JobQueue, core: &ServiceCore, batch: Vec<QueuedJob>) {
             // Fan the one batch-level failure out to every waiting handle.
             first.core.finish(Err(e.clone()));
             for job in jobs {
-                if job.core.try_start() {
+                if claim(queue, core, &job) {
                     job.core.finish(Err(e.clone()));
                 }
             }
@@ -304,7 +342,7 @@ fn run_batch(queue: &JobQueue, core: &ServiceCore, batch: Vec<QueuedJob>) {
             let internal = || HbmcError::Internal("plan build panicked during dispatch".into());
             first.core.finish(Err(internal()));
             for job in jobs {
-                if job.core.try_start() {
+                if claim(queue, core, &job) {
                     job.core.finish(Err(internal()));
                 }
             }
@@ -335,8 +373,9 @@ fn run_batch(queue: &JobQueue, core: &ServiceCore, batch: Vec<QueuedJob>) {
             }
         }
         // Claim the next still-live member only now (lazy, see above).
-        current = jobs.by_ref().find(|job| job.core.try_start());
+        current = jobs.by_ref().find(|job| claim(queue, core, job));
     }
+    core.obs.batch_width.observe(width);
     if poisoned {
         // A panic may have unwound past the pool's barrier protocol (see
         // `Pool::run`), so neither reuse the session for the remaining
@@ -347,7 +386,7 @@ fn run_batch(queue: &JobQueue, core: &ServiceCore, batch: Vec<QueuedJob>) {
         // by panic events, and liveness beats a few leaked threads on an
         // already-broken invariant.
         for job in jobs {
-            if job.core.try_start() {
+            if claim(queue, core, &job) {
                 job.core.finish(Err(HbmcError::Internal(
                     "batch aborted: an earlier job's solver panicked".into(),
                 )));
@@ -367,10 +406,30 @@ fn run_batch(queue: &JobQueue, core: &ServiceCore, batch: Vec<QueuedJob>) {
     }
 }
 
+/// Claim one batch member for dispatch: return its staged depth slot, then
+/// run `JobCore::try_start`. A successful claim records the job's queue
+/// wait; a failed claim counts as a shed when `try_start` expired the
+/// job's deadline (cancelled jobs are not sheds — the caller asked).
+fn claim(queue: &JobQueue, core: &ServiceCore, job: &QueuedJob) -> bool {
+    queue.unstage();
+    if job.core.try_start() {
+        core.obs
+            .queue_wait_us
+            .observe(job.core.queue_wait().as_micros() as u64);
+        true
+    } else {
+        if job.core.state() == JobState::DeadlineExceeded {
+            core.obs.shed.inc();
+        }
+        false
+    }
+}
+
 fn run_one(core: &ServiceCore, session: &SolveSession, job: &QueuedJob) -> Result<SolveOutput> {
     let out = session.solve_with(&job.rhs, &job.options)?;
     core.note_solve();
     core.note_dispatches(out.report.dispatches);
+    core.obs.record_solve(&out.report);
     if job.require_convergence && !out.report.converged {
         return Err(HbmcError::NotConverged {
             iterations: out.report.iterations,

@@ -20,20 +20,24 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::config::SolverConfig;
-use crate::coordinator::driver::SolveOptions;
+use crate::config::{QueueConfig, SolverConfig};
+use crate::coordinator::driver::{SolveOptions, SolveReport};
+use crate::coordinator::report::{micros, Table};
 use crate::coordinator::session::{CacheStats, PlanCache, PlanKey, SolveOutput, SolveSession};
 use crate::error::{HbmcError, Result};
+use crate::obs::metrics::{Counter, Histogram, MetricsRegistry, MetricsSnapshot};
+use crate::obs::prometheus::{self, write_counter, write_gauge};
+use crate::obs::trace::{stage, TraceRecorder};
 use crate::solver::plan::SolverPlan;
 use crate::sparse::csr::Csr;
 use crate::tune::{tune_matrix, HardwareSignature, ProfileStore, TuneOptions, TunedProfile};
 
-use super::job::{JobCore, JobHandle};
+use super::job::{InflightGuard, JobCore, JobHandle};
 use super::queue::{dispatcher_loop, BatchKey, JobQueue, QueuedJob};
 
 /// Opaque ticket for a matrix registered with a [`SolverService`]. Cheap to
@@ -61,6 +65,12 @@ static NEXT_MATRIX_ID: AtomicU64 = AtomicU64::new(1);
 pub(crate) struct Registered {
     pub(crate) matrix: Arc<Csr>,
     pub(crate) fingerprint: u64,
+    /// Jobs currently in flight (submitted, not yet terminal) against this
+    /// handle — the denominator of `max_inflight_per_handle`. Shared by
+    /// every clone of the entry (queued jobs capture a clone), so the
+    /// quota follows the handle, not the snapshot. Re-registering a matrix
+    /// mints a fresh handle and with it a fresh quota.
+    pub(crate) inflight: Arc<AtomicUsize>,
 }
 
 /// Per-request overrides layered on the service's default configuration.
@@ -190,6 +200,14 @@ pub struct ServiceStats {
     pub profile_hits: u64,
     /// [`SolverService::tune`] runs completed on this service.
     pub tunes: u64,
+    /// Submissions rejected synchronously by admission control with
+    /// [`HbmcError::Overloaded`] — the queue-depth bound and the
+    /// per-handle in-flight quota combined (the Prometheus export splits
+    /// them by `reason`).
+    pub overloaded: u64,
+    /// Jobs shed at dispatch because their deadline had already expired
+    /// (they failed typed with [`HbmcError::DeadlineExceeded`], never ran).
+    pub shed: u64,
 }
 
 impl ServiceStats {
@@ -216,6 +234,148 @@ fn rlock<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
 
 pub(crate) fn mlock<T>(l: &Mutex<T>) -> MutexGuard<'_, T> {
     l.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Observability state owned by the service core: the metric registry,
+/// the `Arc` handles the hot paths write through (no registry lookup per
+/// observation), and the bounded lifecycle-trace ring.
+///
+/// Everything here *measures*; nothing here times the fused one-dispatch
+/// solve region — solve/phase figures are taken from the `SolveReport` the
+/// coordinator already produces, so PR 4's determinism and sync counts are
+/// untouched by observability being on or off.
+pub(crate) struct ServiceObs {
+    registry: MetricsRegistry,
+    /// Queue wait per dispatched job, µs (submission → claim).
+    pub(crate) queue_wait_us: Arc<Histogram>,
+    /// Started jobs per dispatched micro-batch.
+    pub(crate) batch_width: Arc<Histogram>,
+    /// Plan setup (ordering + factorization) time per build, µs.
+    setup_us: Arc<Histogram>,
+    /// Iteration-loop wall time per solve, µs.
+    solve_us: Arc<Histogram>,
+    /// CG iterations per solve.
+    iterations: Arc<Histogram>,
+    /// `Overloaded` rejections, split by which bound tripped.
+    pub(crate) overloaded_depth: Arc<Counter>,
+    pub(crate) overloaded_inflight: Arc<Counter>,
+    /// Jobs shed at dispatch (deadline already expired).
+    pub(crate) shed: Arc<Counter>,
+    /// Cumulative per-phase time, µs, from report fields (see type docs).
+    phase_setup: Arc<Counter>,
+    phase_trisolve: Arc<Counter>,
+    phase_spmv: Arc<Counter>,
+    phase_blas1: Arc<Counter>,
+    /// Lifecycle trace ring shared with sampled jobs.
+    pub(crate) trace: Arc<TraceRecorder>,
+    /// Every `trace_sample`-th submission is traced; 0 disables.
+    trace_sample: usize,
+    /// Submission counter driving the sampler.
+    submitted: AtomicU64,
+}
+
+/// Events the trace ring holds before evicting the oldest (~8 full
+/// 8-event job lifecycles per 64 jobs at `trace_sample = 1`).
+const TRACE_CAPACITY: usize = 1024;
+
+impl ServiceObs {
+    fn new(queue: &QueueConfig) -> ServiceObs {
+        let r = MetricsRegistry::new();
+        ServiceObs {
+            overloaded_depth: r.counter_with(
+                "hbmc_overloaded_total",
+                "reason=\"queue_depth\"",
+                "Submissions rejected by admission control.",
+            ),
+            overloaded_inflight: r.counter_with(
+                "hbmc_overloaded_total",
+                "reason=\"inflight\"",
+                "Submissions rejected by admission control.",
+            ),
+            shed: r.counter(
+                "hbmc_shed_total",
+                "Jobs shed at dispatch because their deadline had expired.",
+            ),
+            phase_setup: r.counter_with(
+                "hbmc_phase_microseconds_total",
+                "phase=\"setup\"",
+                "Cumulative time per solver phase.",
+            ),
+            phase_trisolve: r.counter_with(
+                "hbmc_phase_microseconds_total",
+                "phase=\"trisolve\"",
+                "Cumulative time per solver phase.",
+            ),
+            phase_spmv: r.counter_with(
+                "hbmc_phase_microseconds_total",
+                "phase=\"spmv\"",
+                "Cumulative time per solver phase.",
+            ),
+            phase_blas1: r.counter_with(
+                "hbmc_phase_microseconds_total",
+                "phase=\"blas1\"",
+                "Cumulative time per solver phase.",
+            ),
+            queue_wait_us: r.histogram(
+                "hbmc_queue_wait_microseconds",
+                "Queue wait per dispatched job (submission to claim).",
+            ),
+            batch_width: r.histogram(
+                "hbmc_batch_width",
+                "Started jobs per dispatched micro-batch.",
+            ),
+            setup_us: r.histogram(
+                "hbmc_setup_microseconds",
+                "Plan setup (ordering + IC(0) factorization) time per build.",
+            ),
+            solve_us: r.histogram(
+                "hbmc_solve_microseconds",
+                "Iteration-loop wall time per solve.",
+            ),
+            iterations: r.histogram("hbmc_solve_iterations", "CG iterations per solve."),
+            trace: Arc::new(TraceRecorder::new(TRACE_CAPACITY)),
+            trace_sample: queue.trace_sample,
+            submitted: AtomicU64::new(0),
+            registry: r,
+        }
+    }
+
+    /// The trace ring for this submission, if the sampler picks it
+    /// (every `trace_sample`-th job; the first always qualifies).
+    pub(crate) fn trace_for_next_job(&self) -> Option<Arc<TraceRecorder>> {
+        if self.trace_sample == 0 {
+            return None;
+        }
+        let index = self.submitted.fetch_add(1, AtomicOrdering::Relaxed);
+        (index % self.trace_sample as u64 == 0).then(|| Arc::clone(&self.trace))
+    }
+
+    /// Fold one completed solve's report into the histograms and phase
+    /// counters (dispatcher thread, after the solve — never inside it).
+    pub(crate) fn record_solve(&self, report: &SolveReport) {
+        self.solve_us.observe((report.solve_seconds * 1e6) as u64);
+        self.iterations.observe(report.iterations as u64);
+        for (name, seconds) in &report.kernel_seconds {
+            let us = (seconds * 1e6) as u64;
+            match *name {
+                "trisolve" => self.phase_trisolve.add(us),
+                "spmv" => self.phase_spmv.add(us),
+                "blas1" => self.phase_blas1.add(us),
+                _ => {}
+            }
+        }
+    }
+
+    /// Fold one plan build's setup time in (build thread, after the build).
+    pub(crate) fn record_setup(&self, setup_seconds: f64) {
+        let us = (setup_seconds * 1e6) as u64;
+        self.setup_us.observe(us);
+        self.phase_setup.add(us);
+    }
+
+    pub(crate) fn snapshot(&self) -> MetricsSnapshot {
+        self.registry.snapshot()
+    }
 }
 
 /// The service state shared between request threads and the dispatcher
@@ -248,6 +408,9 @@ pub(crate) struct ServiceCore {
     dispatches: AtomicU64,
     profile_hits: AtomicU64,
     tunes: AtomicU64,
+    /// Metrics, histograms, and the lifecycle-trace ring (see
+    /// [`ServiceObs`]); written by request threads and the dispatcher.
+    pub(crate) obs: ServiceObs,
 }
 
 impl ServiceCore {
@@ -288,6 +451,7 @@ impl ServiceCore {
         let result = SolverPlan::build(&reg.matrix, cfg).map(|plan| {
             let plan = Arc::new(plan);
             self.builds.fetch_add(1, AtomicOrdering::Relaxed);
+            self.obs.record_setup(plan.setup.setup_seconds());
             wlock(&self.cache).insert(key.clone(), plan.clone());
             plan
         });
@@ -383,6 +547,7 @@ impl SolverService {
             dispatches: AtomicU64::new(0),
             profile_hits: AtomicU64::new(0),
             tunes: AtomicU64::new(0),
+            obs: ServiceObs::new(&queue_cfg),
         });
         let queue = Arc::new(JobQueue::new(queue_cfg));
         let dispatcher = {
@@ -412,7 +577,11 @@ impl SolverService {
     /// never rescan it.
     pub fn register_matrix_arc(&self, a: Arc<Csr>) -> MatrixHandle {
         let id = NEXT_MATRIX_ID.fetch_add(1, AtomicOrdering::Relaxed);
-        let entry = Registered { fingerprint: a.fingerprint(), matrix: a };
+        let entry = Registered {
+            fingerprint: a.fingerprint(),
+            matrix: a,
+            inflight: Arc::new(AtomicUsize::new(0)),
+        };
         wlock(&self.core.matrices).insert(id, entry);
         MatrixHandle(id)
     }
@@ -475,7 +644,7 @@ impl SolverService {
         if from_profile {
             self.core.profile_hits.fetch_add(1, AtomicOrdering::Relaxed);
         }
-        Ok(self.enqueue(&reg, &cfg, rhs, req))
+        self.enqueue(&reg, &cfg, rhs, req)
     }
 
     /// The configuration a request solves under: explicit override >
@@ -495,18 +664,46 @@ impl SolverService {
         (self.core.default_cfg.clone(), false)
     }
 
-    /// Infallible enqueue for inputs already validated by the caller
-    /// (`submit` per request; `solve_many_with` once for a whole batch).
+    /// Admission control + enqueue for inputs already validated by the
+    /// caller (`submit` per request; `solve_many_with` once for a whole
+    /// batch). Every rejection here is synchronous and typed — nothing is
+    /// enqueued on the error paths:
+    ///
+    /// 1. a zero deadline can never be met, so it fails
+    ///    [`HbmcError::DeadlineExceeded`] now instead of being discovered
+    ///    expired at dispatch time;
+    /// 2. with `max_inflight_per_handle` set, a full per-handle quota
+    ///    fails [`HbmcError::Overloaded`] (the claimed slot travels with
+    ///    the job and frees at its terminal transition);
+    /// 3. with `max_queue_depth` set, a full queue fails
+    ///    [`HbmcError::Overloaded`] from the push itself.
     fn enqueue(
         &self,
         reg: &Registered,
         cfg: &SolverConfig,
         rhs: &[f64],
         req: &SolveRequest,
-    ) -> JobHandle {
+    ) -> Result<JobHandle> {
+        if let Some(budget) = req.deadline {
+            if budget.is_zero() {
+                return Err(HbmcError::DeadlineExceeded { budget });
+            }
+        }
+        let inflight = match self.core.default_cfg.queue.max_inflight_per_handle {
+            Some(limit) => match InflightGuard::acquire(&reg.inflight, limit) {
+                Ok(guard) => Some(guard),
+                Err(depth) => {
+                    self.core.obs.overloaded_inflight.inc();
+                    return Err(HbmcError::Overloaded { depth, limit });
+                }
+            },
+            None => None,
+        };
+        let trace = self.core.obs.trace_for_next_job();
         let key = BatchKey::new(PlanKey::from_fingerprint(reg.fingerprint, cfg), cfg);
-        let core = JobCore::new(req.deadline);
-        self.queue.push(QueuedJob {
+        let core = JobCore::new(req.deadline, inflight, trace);
+        core.note(stage::SUBMITTED);
+        let pushed = self.queue.push(QueuedJob {
             core: Arc::clone(&core),
             key,
             rhs: rhs.to_vec(),
@@ -515,7 +712,14 @@ impl SolverService {
             require_convergence: req.require_convergence,
             reg: reg.clone(),
         });
-        JobHandle::new(core)
+        if let Err(e) = pushed {
+            // The job never entered the queue; dropping its core releases
+            // the in-flight slot (InflightGuard's Drop backstop).
+            self.core.obs.overloaded_depth.inc();
+            return Err(e);
+        }
+        core.note(stage::ENQUEUED);
+        Ok(JobHandle::new(core))
     }
 
     /// Solve `A x = b` under the service's default configuration.
@@ -584,10 +788,24 @@ impl SolverService {
         if from_profile {
             self.core.profile_hits.fetch_add(rhss.len() as u64, AtomicOrdering::Relaxed);
         }
-        let jobs: Vec<JobHandle> =
-            rhss.iter().map(|b| self.enqueue(&reg, &cfg, b.as_ref(), req)).collect();
-        let mut outs = Vec::with_capacity(jobs.len());
-        let mut jobs = jobs.into_iter();
+        let mut handles: Vec<JobHandle> = Vec::with_capacity(rhss.len());
+        for b in rhss {
+            match self.enqueue(&reg, &cfg, b.as_ref(), req) {
+                Ok(handle) => handles.push(handle),
+                Err(e) => {
+                    // Admission failed mid-batch. The batch result is
+                    // all-or-nothing, so cancel what was already enqueued
+                    // (running jobs finish, unobserved) and surface the
+                    // admission error to the caller.
+                    for handle in handles {
+                        handle.cancel();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let mut outs = Vec::with_capacity(handles.len());
+        let mut jobs = handles.into_iter();
         while let Some(job) = jobs.next() {
             match job.wait() {
                 Ok(out) => outs.push(out),
@@ -726,7 +944,154 @@ impl SolverService {
             profiles: rlock(&self.core.profiles).len(),
             profile_hits: self.core.profile_hits.load(AtomicOrdering::Relaxed),
             tunes: self.core.tunes.load(AtomicOrdering::Relaxed),
+            overloaded: self.core.obs.overloaded_depth.get()
+                + self.core.obs.overloaded_inflight.get(),
+            shed: self.core.obs.shed.get(),
         }
+    }
+
+    /// Every service metric in Prometheus text exposition format (0.0.4):
+    /// the [`ServiceStats`] gauges and counters as `hbmc_*` families, plus
+    /// the admission counters and the queue-wait / batch-width / setup /
+    /// solve / iteration histograms. This is what
+    /// [`MetricsServer`](crate::obs::MetricsServer) serves on `/metrics`
+    /// (`hbmc serve --metrics-addr`); it can also be scraped off any
+    /// in-process service directly. Families are documented in
+    /// ARCHITECTURE.md ("Observability & admission control").
+    pub fn metrics_text(&self) -> String {
+        let s = self.stats();
+        let mut out = String::new();
+        write_gauge(&mut out, "hbmc_matrices", "Matrices currently registered.", s.matrices as f64);
+        write_gauge(
+            &mut out,
+            "hbmc_queue_depth",
+            "Jobs queued or staged into an open batch window (live).",
+            s.queue_depth as f64,
+        );
+        write_gauge(&mut out, "hbmc_plan_cache_entries", "Plans currently cached.", s.cache.len as f64);
+        write_gauge(&mut out, "hbmc_plan_cache_capacity", "Plan cache capacity.", s.cache.capacity as f64);
+        write_gauge(
+            &mut out,
+            "hbmc_profiles_installed",
+            "Tuned profiles currently installed.",
+            s.profiles as f64,
+        );
+        write_counter(&mut out, "hbmc_plan_cache_hits_total", "Plan cache hits.", s.cache.hits);
+        write_counter(&mut out, "hbmc_plan_cache_misses_total", "Plan cache misses.", s.cache.misses);
+        write_counter(
+            &mut out,
+            "hbmc_plan_cache_evictions_total",
+            "Plans evicted from the cache.",
+            s.cache.evictions,
+        );
+        write_counter(&mut out, "hbmc_plan_builds_total", "Plans built by this service.", s.builds);
+        write_counter(
+            &mut out,
+            "hbmc_coalesced_builds_total",
+            "Requests that waited on another thread's in-flight plan build.",
+            s.coalesced_builds,
+        );
+        write_counter(&mut out, "hbmc_solves_total", "Solves completed through the service.", s.solves);
+        write_counter(&mut out, "hbmc_batches_total", "Micro-batches dispatched.", s.batches);
+        write_counter(
+            &mut out,
+            "hbmc_batched_rhs_total",
+            "Right-hand sides dispatched across all batches.",
+            s.batched_rhs,
+        );
+        write_counter(
+            &mut out,
+            "hbmc_coalesced_rhs_total",
+            "Right-hand sides that rode a batch of width >= 2.",
+            s.coalesced_rhs,
+        );
+        write_counter(
+            &mut out,
+            "hbmc_dispatches_total",
+            "Pool::run dispatches across all queue solves.",
+            s.dispatches,
+        );
+        write_counter(
+            &mut out,
+            "hbmc_profile_hits_total",
+            "Requests served under an auto-applied tuned profile.",
+            s.profile_hits,
+        );
+        write_counter(&mut out, "hbmc_tunes_total", "tune() runs completed.", s.tunes);
+        write_counter(
+            &mut out,
+            "hbmc_trace_events_dropped_total",
+            "Trace events evicted from the full ring buffer.",
+            self.core.obs.trace.dropped(),
+        );
+        out.push_str(&prometheus::render(&self.core.obs.snapshot()));
+        out
+    }
+
+    /// Point-in-time copy of the registry-backed metrics (admission
+    /// counters, phase counters, and the latency/width histograms with
+    /// their [`quantile`](crate::obs::HistogramSnapshot::quantile)
+    /// accessors) — the structured counterpart of
+    /// [`metrics_text`](SolverService::metrics_text) for in-process
+    /// consumers like the benches.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.core.obs.snapshot()
+    }
+
+    /// The lifecycle-trace ring as a JSON array of
+    /// `{"job","stage","t_us","detail"}` events, oldest first. Empty
+    /// (`[]`) unless `QueueConfig::trace_sample` is non-zero.
+    pub fn trace_json(&self) -> String {
+        self.core.obs.trace.to_json()
+    }
+
+    /// Human-readable statistics: the [`ServiceStats`] counters plus a
+    /// summary row per histogram (count / mean / p50 / p99), rendered with
+    /// the same table engine as the bench reports. This is what the CLI
+    /// `stats` subcommand prints.
+    pub fn stats_text(&self) -> String {
+        let s = self.stats();
+        let snap = self.metrics_snapshot();
+        let mut t = Table::new("service stats", &["metric", "value"]);
+        let mut row = |name: &str, value: String| t.push_row(vec![name.to_string(), value]);
+        row("matrices", s.matrices.to_string());
+        row("plan cache", format!("{}/{}", s.cache.len, s.cache.capacity));
+        row("cache hits / misses / evictions", {
+            format!("{} / {} / {}", s.cache.hits, s.cache.misses, s.cache.evictions)
+        });
+        row("plan builds (coalesced)", format!("{} ({})", s.builds, s.coalesced_builds));
+        row("solves", s.solves.to_string());
+        row("queue depth", s.queue_depth.to_string());
+        row("batches (mean width)", format!("{} ({:.2})", s.batches, s.mean_batch_width()));
+        row("batched / coalesced rhs", format!("{} / {}", s.batched_rhs, s.coalesced_rhs));
+        row("dispatches", s.dispatches.to_string());
+        row("profiles (hits)", format!("{} ({})", s.profiles, s.profile_hits));
+        row("tunes", s.tunes.to_string());
+        row("overloaded rejections", s.overloaded.to_string());
+        row("shed (expired at dispatch)", s.shed.to_string());
+        let mut out = t.render();
+        let mut h = Table::new("histograms", &["histogram", "count", "mean", "p50", "p99"]);
+        for (family, label, time) in [
+            ("hbmc_queue_wait_microseconds", "queue wait", true),
+            ("hbmc_batch_width", "batch width", false),
+            ("hbmc_setup_microseconds", "plan setup", true),
+            ("hbmc_solve_microseconds", "solve", true),
+            ("hbmc_solve_iterations", "iterations", false),
+        ] {
+            if let Some(hist) = snap.histogram(family) {
+                let value = |v: f64| if time { micros(v) } else { format!("{v:.0}") };
+                h.push_row(vec![
+                    label.to_string(),
+                    hist.count.to_string(),
+                    value(hist.mean()),
+                    value(hist.quantile(0.5) as f64),
+                    value(hist.quantile(0.99) as f64),
+                ]);
+            }
+        }
+        out.push('\n');
+        out.push_str(&h.render());
+        out
     }
 }
 
@@ -954,6 +1319,96 @@ mod tests {
         let out = svc.solve(h, &d.b).unwrap();
         assert!(out.report.plan.config_label.starts_with("HBMC"));
         assert_eq!(svc.stats().profile_hits, 0);
+    }
+
+    #[test]
+    fn zero_deadline_is_rejected_synchronously() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let svc = SolverService::with_config(tiny_cfg(OrderingKind::Hbmc)).unwrap();
+        let h = svc.register_matrix(d.matrix.clone());
+        let req = SolveRequest::new().deadline(Duration::ZERO);
+        let err = svc.submit(h, &d.b, &req).unwrap_err();
+        assert!(
+            matches!(err, HbmcError::DeadlineExceeded { budget } if budget.is_zero()),
+            "{err:?}"
+        );
+        let err = svc.solve_many_with(h, &[d.b.clone()], &req).unwrap_err();
+        assert!(matches!(err, HbmcError::DeadlineExceeded { .. }), "{err:?}");
+        let s = svc.stats();
+        assert_eq!(s.solves, 0, "a rejected submission must never run");
+        assert_eq!(s.batches, 0, "a rejected submission must never be enqueued");
+        assert_eq!(s.overloaded, 0, "deadline rejection is not an overload");
+    }
+
+    #[test]
+    fn metrics_text_covers_every_stats_counter() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let svc = SolverService::with_config(tiny_cfg(OrderingKind::Hbmc)).unwrap();
+        let h = svc.register_matrix(d.matrix.clone());
+        svc.solve(h, &d.b).unwrap();
+        let text = svc.metrics_text();
+        for family in [
+            "hbmc_matrices",
+            "hbmc_queue_depth",
+            "hbmc_plan_cache_entries",
+            "hbmc_plan_cache_capacity",
+            "hbmc_profiles_installed",
+            "hbmc_plan_cache_hits_total",
+            "hbmc_plan_cache_misses_total",
+            "hbmc_plan_cache_evictions_total",
+            "hbmc_plan_builds_total",
+            "hbmc_coalesced_builds_total",
+            "hbmc_solves_total",
+            "hbmc_batches_total",
+            "hbmc_batched_rhs_total",
+            "hbmc_coalesced_rhs_total",
+            "hbmc_dispatches_total",
+            "hbmc_profile_hits_total",
+            "hbmc_tunes_total",
+            "hbmc_trace_events_dropped_total",
+            "hbmc_overloaded_total",
+            "hbmc_shed_total",
+            "hbmc_phase_microseconds_total",
+            "hbmc_queue_wait_microseconds",
+            "hbmc_batch_width",
+            "hbmc_setup_microseconds",
+            "hbmc_solve_microseconds",
+            "hbmc_solve_iterations",
+        ] {
+            assert!(text.contains(&format!("# TYPE {family} ")), "missing family {family}");
+        }
+        assert!(text.contains("hbmc_solves_total 1\n"), "{text}");
+        assert!(text.contains("hbmc_matrices 1\n"));
+        assert!(text.contains("hbmc_overloaded_total{reason=\"queue_depth\"} 0\n"));
+        assert!(text.contains("hbmc_solve_microseconds_bucket{le=\"+Inf\"} 1\n"));
+        // One solve also fed the phase counters and histograms.
+        let snap = svc.metrics_snapshot();
+        assert_eq!(snap.histogram("hbmc_solve_microseconds").unwrap().count, 1);
+        assert_eq!(snap.histogram("hbmc_batch_width").unwrap().count, 1);
+        assert_eq!(snap.histogram("hbmc_queue_wait_microseconds").unwrap().count, 1);
+        assert_eq!(snap.histogram("hbmc_setup_microseconds").unwrap().count, 1);
+        assert!(snap.counter("hbmc_phase_microseconds_total").unwrap() > 0);
+    }
+
+    #[test]
+    fn stats_text_and_trace_json_render() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let mut cfg = tiny_cfg(OrderingKind::Hbmc);
+        cfg.queue.trace_sample = 1;
+        let svc = SolverService::with_config(cfg).unwrap();
+        let h = svc.register_matrix(d.matrix.clone());
+        assert_eq!(svc.trace_json(), "[]", "no jobs traced yet");
+        svc.solve(h, &d.b).unwrap();
+        let text = svc.stats_text();
+        assert!(text.contains("== service stats =="), "{text}");
+        assert!(text.contains("solves"));
+        assert!(text.contains("overloaded rejections"));
+        assert!(text.contains("== histograms =="));
+        assert!(text.contains("queue wait"));
+        let json = svc.trace_json();
+        for stage in ["submitted", "enqueued", "batch_opened", "dispatched", "completed"] {
+            assert!(json.contains(&format!("\"stage\":\"{stage}\"")), "{json}");
+        }
     }
 
     #[test]

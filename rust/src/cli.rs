@@ -105,6 +105,27 @@ mod tests {
     }
 
     #[test]
+    fn serve_admission_and_metrics_flags() {
+        // All observability / admission flags take values — none of them
+        // may appear in SWITCHES, or `--max-depth 4` would eat "4" as a
+        // positional argument.
+        let a = parse(
+            "serve --dataset ieej --max-depth 4 --max-inflight 2 \
+             --metrics-addr 127.0.0.1:9184 --trace 1 --linger-secs 30",
+        )
+        .unwrap();
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.usize_flag("max-depth", 0).unwrap(), 4);
+        assert_eq!(a.usize_flag("max-inflight", 0).unwrap(), 2);
+        assert_eq!(a.flag("metrics-addr"), Some("127.0.0.1:9184"));
+        assert_eq!(a.usize_flag("trace", 0).unwrap(), 1);
+        assert_eq!(a.usize_flag("linger-secs", 0).unwrap(), 30);
+        let a = parse("stats --from 127.0.0.1:9184").unwrap();
+        assert_eq!(a.command, "stats");
+        assert_eq!(a.flag("from"), Some("127.0.0.1:9184"));
+    }
+
+    #[test]
     fn empty_is_help() {
         let a = parse("").unwrap();
         assert_eq!(a.command, "help");

@@ -161,6 +161,23 @@ pub struct QueueConfig {
     /// batch is whatever is already queued at dispatch time); capped at
     /// one hour by [`SolverConfig::validate`].
     pub max_wait: Duration,
+    /// Admission bound on total queued jobs (including jobs staged into an
+    /// open batch window). A `submit` that would exceed it fast-rejects
+    /// with `HbmcError::Overloaded` instead of enqueueing. `None` (the
+    /// default) keeps the queue unbounded; `Some(0)` is rejected by
+    /// [`SolverConfig::validate`].
+    pub max_queue_depth: Option<usize>,
+    /// Admission bound on jobs simultaneously in flight (submitted but not
+    /// yet terminal) per `MatrixHandle`. Excess submissions on that handle
+    /// fast-reject with `HbmcError::Overloaded`; other handles are
+    /// unaffected. `None` (the default) disables the quota; `Some(0)` is
+    /// rejected by [`SolverConfig::validate`].
+    pub max_inflight_per_handle: Option<usize>,
+    /// Lifecycle-trace sampling: every `trace_sample`-th submission records
+    /// its full `submitted → … → completed` event trail into the service's
+    /// bounded `TraceRecorder` (`SolverService::trace_json`). `0` (the
+    /// default) disables tracing; `1` traces every job.
+    pub trace_sample: usize,
 }
 
 impl Default for QueueConfig {
@@ -168,8 +185,15 @@ impl Default for QueueConfig {
         // 200 µs keeps single blocking solves (which ride the queue too)
         // essentially latency-neutral — tiny next to a multi-ms solve —
         // while still wide enough to coalesce a burst of concurrent
-        // submissions into one SIMD-friendly sweep.
-        QueueConfig { max_batch: 32, max_wait: Duration::from_micros(200) }
+        // submissions into one SIMD-friendly sweep. Admission control and
+        // tracing are opt-in: unbounded queue, no quotas, no sampling.
+        QueueConfig {
+            max_batch: 32,
+            max_wait: Duration::from_micros(200),
+            max_queue_depth: None,
+            max_inflight_per_handle: None,
+            trace_sample: 0,
+        }
     }
 }
 
@@ -358,6 +382,18 @@ impl SolverConfig {
         if self.queue.max_wait > Duration::from_secs(3600) {
             return Err(HbmcError::invalid_config("queue.max_wait must be <= 1 hour"));
         }
+        // A zero admission bound would reject every submission; "no bound"
+        // is spelled `None`, so Some(0) can only be a mistake.
+        if self.queue.max_queue_depth == Some(0) {
+            return Err(HbmcError::invalid_config(
+                "queue.max_queue_depth must be >= 1 when set (use None for unbounded)",
+            ));
+        }
+        if self.queue.max_inflight_per_handle == Some(0) {
+            return Err(HbmcError::invalid_config(
+                "queue.max_inflight_per_handle must be >= 1 when set (use None for no quota)",
+            ));
+        }
         Ok(())
     }
 }
@@ -437,6 +473,27 @@ impl SolverConfigBuilder {
     /// same-key jobs before flushing it.
     pub fn max_wait(mut self, max_wait: Duration) -> Self {
         self.cfg.queue.max_wait = max_wait;
+        self
+    }
+
+    /// Admission bound on total queued jobs (`None` = unbounded); see
+    /// [`QueueConfig::max_queue_depth`].
+    pub fn max_queue_depth(mut self, depth: Option<usize>) -> Self {
+        self.cfg.queue.max_queue_depth = depth;
+        self
+    }
+
+    /// Per-handle in-flight job quota (`None` = no quota); see
+    /// [`QueueConfig::max_inflight_per_handle`].
+    pub fn max_inflight_per_handle(mut self, quota: Option<usize>) -> Self {
+        self.cfg.queue.max_inflight_per_handle = quota;
+        self
+    }
+
+    /// Trace every `n`-th submission's lifecycle (`0` disables); see
+    /// [`QueueConfig::trace_sample`].
+    pub fn trace_sample(mut self, n: usize) -> Self {
+        self.cfg.queue.trace_sample = n;
         self
     }
 
@@ -529,6 +586,30 @@ mod tests {
         // can never overflow (Duration::MAX sentinel).
         let err = SolverConfig::builder().max_wait(Duration::from_secs(7200)).build().unwrap_err();
         assert!(err.to_string().contains("max_wait"), "{err}");
+    }
+
+    #[test]
+    fn admission_knobs_validate_and_build() {
+        // Defaults: no bounds, no tracing.
+        let cfg = SolverConfig::default();
+        assert_eq!(cfg.queue.max_queue_depth, None);
+        assert_eq!(cfg.queue.max_inflight_per_handle, None);
+        assert_eq!(cfg.queue.trace_sample, 0);
+        let cfg = SolverConfig::builder()
+            .max_queue_depth(Some(64))
+            .max_inflight_per_handle(Some(4))
+            .trace_sample(10)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.queue.max_queue_depth, Some(64));
+        assert_eq!(cfg.queue.max_inflight_per_handle, Some(4));
+        assert_eq!(cfg.queue.trace_sample, 10);
+        // Some(0) would reject every submission; "no bound" is None.
+        let err = SolverConfig::builder().max_queue_depth(Some(0)).build().unwrap_err();
+        assert!(err.to_string().contains("max_queue_depth"), "{err}");
+        let err =
+            SolverConfig::builder().max_inflight_per_handle(Some(0)).build().unwrap_err();
+        assert!(err.to_string().contains("max_inflight_per_handle"), "{err}");
     }
 
     #[test]

@@ -74,6 +74,18 @@ pub fn pct(x: f64) -> String {
     format!("{:.1}%", 100.0 * x)
 }
 
+/// Format a microsecond quantity with a unit that keeps it readable
+/// (µs → ms → s), for latency columns in stats/bench tables.
+pub fn micros(us: f64) -> String {
+    if us >= 1e6 {
+        format!("{}s", secs(us / 1e6))
+    } else if us >= 1e3 {
+        format!("{:.1}ms", us / 1e3)
+    } else {
+        format!("{us:.0}µs")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,5 +118,8 @@ mod tests {
         assert_eq!(secs(12.345), "12.35");
         assert_eq!(secs(1.2345), "1.234");
         assert_eq!(pct(0.997), "99.7%");
+        assert_eq!(micros(850.0), "850µs");
+        assert_eq!(micros(12_400.0), "12.4ms");
+        assert_eq!(micros(2_500_000.0), "2.500s");
     }
 }

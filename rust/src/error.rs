@@ -24,6 +24,9 @@
 //!   deadline expired; it was never dispatched,
 //! * [`Cancelled`](HbmcError::Cancelled) — an asynchronous job was
 //!   cancelled while still queued (`JobHandle::cancel`),
+//! * [`Overloaded`](HbmcError::Overloaded) — admission control rejected a
+//!   submission synchronously: the queue was at `max_queue_depth`, or the
+//!   handle at `max_inflight_per_handle` (see `QueueConfig`),
 //! * [`Io`](HbmcError::Io) — an underlying I/O failure, with the path or
 //!   operation as context.
 //!
@@ -76,6 +79,13 @@ pub enum HbmcError {
     /// `JobHandle::cancel`, or rejected because the service was already
     /// shutting down. Either way it was never dispatched.
     Cancelled,
+    /// Admission control rejected a submission synchronously — nothing was
+    /// enqueued. `depth` is the occupancy that tripped the bound (queue
+    /// depth or the handle's in-flight jobs) and `limit` the configured
+    /// bound it hit (`QueueConfig::max_queue_depth` /
+    /// `max_inflight_per_handle`). The caller should retry after draining
+    /// some of its outstanding work.
+    Overloaded { depth: usize, limit: usize },
     /// Underlying I/O failure; `context` names the path or operation.
     Io {
         context: String,
@@ -130,6 +140,9 @@ impl fmt::Display for HbmcError {
                 write!(f, "job deadline exceeded: still queued after its {budget:?} budget")
             }
             HbmcError::Cancelled => write!(f, "job cancelled while queued"),
+            HbmcError::Overloaded { depth, limit } => {
+                write!(f, "service overloaded: {depth} jobs against a limit of {limit}")
+            }
             HbmcError::Io { context, source } => {
                 if context.is_empty() {
                     write!(f, "I/O error: {source}")
@@ -170,6 +183,9 @@ impl Clone for HbmcError {
                 HbmcError::DeadlineExceeded { budget: *budget }
             }
             HbmcError::Cancelled => HbmcError::Cancelled,
+            HbmcError::Overloaded { depth, limit } => {
+                HbmcError::Overloaded { depth: *depth, limit: *limit }
+            }
             HbmcError::Io { context, source } => HbmcError::Io {
                 context: context.clone(),
                 source: std::io::Error::new(source.kind(), source.to_string()),
@@ -226,12 +242,16 @@ mod tests {
         let dl = HbmcError::DeadlineExceeded { budget: Duration::from_millis(5) };
         assert!(dl.to_string().contains("deadline exceeded"), "{dl}");
         assert!(HbmcError::Cancelled.to_string().contains("cancelled"));
+        let ov = HbmcError::Overloaded { depth: 64, limit: 64 };
+        assert_eq!(ov.to_string(), "service overloaded: 64 jobs against a limit of 64");
     }
 
     #[test]
     fn clone_preserves_variant_and_message() {
         let orig = HbmcError::NotConverged { iterations: 7, relres: 2.5e-2 };
         assert!(matches!(orig.clone(), HbmcError::NotConverged { iterations: 7, .. }));
+        let ov = HbmcError::Overloaded { depth: 9, limit: 8 };
+        assert!(matches!(ov.clone(), HbmcError::Overloaded { depth: 9, limit: 8 }));
         let io = HbmcError::io("reading b.mtx", std::io::Error::other("disk on fire"));
         let cloned = io.clone();
         assert!(matches!(cloned, HbmcError::Io { .. }), "{cloned:?}");

@@ -75,6 +75,13 @@
 //!
 //! // The blocking calls remain as thin submit + wait wrappers:
 //! let out = service.solve(handle, &vec![2.0; n])?;
+//!
+//! // 4. Observe: every ServiceStats counter plus queue-wait / batch-width /
+//! //    solve-time histograms render as Prometheus text exposition — scrape
+//! //    it in-process, or serve it over HTTP with
+//! //    `hbmc serve --metrics-addr 127.0.0.1:9184` (endpoints /metrics and
+//! //    /healthz). `hbmc stats` pretty-prints the same snapshot.
+//! print!("{}", service.metrics_text());
 //! # let _ = out;
 //! # Ok::<(), HbmcError>(())
 //! ```
@@ -139,6 +146,10 @@
 //! * [`sparse`] — CSR / COO / SELL-C-σ storage and Matrix-Market IO,
 //! * [`gen`] — synthetic generators standing in for the paper's five test
 //!   matrices (see `DESIGN.md` §3 for the substitution rationale),
+//! * [`obs`] — observability: dependency-free counters / gauges / log₂
+//!   histograms with a Prometheus text renderer, the sampled job-lifecycle
+//!   trace ring, and the std-only HTTP listener behind
+//!   `hbmc serve --metrics-addr`,
 //! * [`ordering`] — MC / BMC / HBMC orderings, the ordering-graph / ER
 //!   machinery, and the [`order_matrix`](ordering::order_matrix) façade the
 //!   plan builder consumes,
@@ -165,6 +176,7 @@ pub mod coordinator;
 pub mod error;
 pub mod factor;
 pub mod gen;
+pub mod obs;
 pub mod ordering;
 pub mod runtime;
 pub mod schedule;

@@ -7,7 +7,11 @@
 //!   per run); `--setup-only` stops after the plan; `--batch N` submits N
 //!   jobs through the async queue instead (micro-batched dispatch)
 //! * `serve`        — async serving stress: M client threads × K submits,
-//!   prints throughput and batching statistics
+//!   prints throughput, batching and admission statistics; with
+//!   `--metrics-addr` also serves Prometheus `/metrics` + `/healthz` over
+//!   HTTP, `--trace N` samples every Nth job into the lifecycle trace ring
+//! * `stats`        — pretty-print `ServiceStats` + histogram snapshot for
+//!   a small workload, or scrape a running `--metrics-addr` endpoint
 //! * `table`        — regenerate a paper table (5.2 / 5.3 / simd / sell)
 //! * `convergence`  — Fig. 5.1 residual curves as CSV
 //! * `verify`       — ordering-equivalence + structural invariant checks
@@ -54,7 +58,14 @@ fn cfg_from(args: &Args, shift: f64) -> Result<SolverConfig> {
         .shift(args.f64_flag("shift", shift)?)
         .use_intrinsics(!args.switch("no-intrinsics"))
         .max_batch(args.usize_flag("max-batch", 32)?)
-        .max_wait(Duration::from_micros(args.usize_flag("max-wait-us", 200)? as u64));
+        .max_wait(Duration::from_micros(args.usize_flag("max-wait-us", 200)? as u64))
+        .trace_sample(args.usize_flag("trace", 0)?);
+    if let Some(v) = args.flag("max-depth") {
+        builder = builder.max_queue_depth(Some(v.parse()?));
+    }
+    if let Some(v) = args.flag("max-inflight") {
+        builder = builder.max_inflight_per_handle(Some(v.parse()?));
+    }
     if let Some(v) = args.flag("sell-sigma") {
         builder = builder.sell_sigma(Some(v.parse()?));
     }
@@ -69,6 +80,7 @@ fn run(args: Args) -> Result<()> {
         "solve" => cmd_solve(&args),
         "tune" => cmd_tune(&args),
         "serve" => cmd_serve(&args),
+        "stats" => cmd_stats(&args),
         "table" => cmd_table(&args),
         "convergence" => cmd_convergence(&args),
         "verify" => cmd_verify(&args),
@@ -109,7 +121,20 @@ COMMANDS
   serve        --dataset <name> [--scale S] [--clients M] [--requests K]
                [--max-batch B] [--max-wait-us U] [--deadline-ms D]
                (async stress: M client threads submit K jobs each; prints
-                throughput + batching stats)
+                throughput + batching + admission stats)
+               [--max-depth N] [--max-inflight N]
+                                             (admission bounds: excess submits fail
+                                              fast with HbmcError::Overloaded)
+               [--metrics-addr H:P]          (serve Prometheus /metrics + /healthz)
+               [--trace N]                   (sample every Nth job into the trace
+                                              ring; dumped as JSON after the run)
+               [--linger-secs T]             (keep the metrics endpoint up T extra
+                                              seconds after the run, for scrapes)
+  stats        [--from H:P]                  (scrape a running serve endpoint and
+                                              print the raw Prometheus text)
+               [--dataset <name>] [--scale S] [--requests K]
+               (without --from: run K async jobs through a fresh service
+                and pretty-print ServiceStats + histogram quantiles)
   table        --id 5.2|5.3|simd|sell [--node knl|bdw|skx] [--scale S] [--threads N]
   convergence  [--datasets a,b] [--scale S] [--out curves.csv]
   verify       [--scale S]          run ordering/equivalence invariants
@@ -422,26 +447,43 @@ fn cmd_tune(args: &Args) -> Result<()> {
 
 /// Async serving stress: M client threads submit K single-RHS jobs each
 /// against one registered matrix; the dispatcher coalesces compatible jobs
-/// into micro-batches. Prints throughput and the batching statistics.
+/// into micro-batches. Prints throughput, batching and admission
+/// statistics; `--metrics-addr` additionally serves Prometheus `/metrics`
+/// and `/healthz` over HTTP for the duration of the run (plus
+/// `--linger-secs` afterwards, so external scrapers can catch it).
 fn cmd_serve(args: &Args) -> Result<()> {
     let scale: Scale = args.flag_or("scale", "tiny").parse()?;
     let name = args.flag_or("dataset", "g3_circuit");
     let clients = args.usize_flag("clients", 4)?.max(1);
     let requests = args.usize_flag("requests", 8)?.max(1);
     let deadline_ms = args.usize_flag("deadline-ms", 0)?;
+    let trace_every = args.usize_flag("trace", 0)?;
+    let linger_secs = args.usize_flag("linger-secs", 0)?;
     let d = suite::try_dataset(&name, scale)?;
     let cfg = cfg_from(args, d.shift)?;
     println!(
         "serve: dataset={} n={} nnz={} scale={scale} config={} \
-         clients={clients} requests/client={requests} max_batch={} max_wait={:?}",
+         clients={clients} requests/client={requests} max_batch={} max_wait={:?} \
+         max_depth={:?} max_inflight={:?}",
         d.name,
         d.n(),
         d.nnz(),
         cfg.label(),
         cfg.queue.max_batch,
-        cfg.queue.max_wait
+        cfg.queue.max_wait,
+        cfg.queue.max_queue_depth,
+        cfg.queue.max_inflight_per_handle
     );
     let service = Arc::new(SolverService::with_config(cfg)?);
+    let _metrics = match args.flag("metrics-addr") {
+        Some(addr) => {
+            let svc = Arc::clone(&service);
+            let server = hbmc::obs::MetricsServer::spawn(addr, move || svc.metrics_text())?;
+            println!("metrics: http://{}/metrics (and /healthz)", server.local_addr());
+            Some(server)
+        }
+        None => None,
+    };
     let handle = service.register_matrix(d.matrix);
     // Warm the plan once so the stress run measures serving, not setup.
     service.solve(handle, &d.b)?;
@@ -451,8 +493,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .map(|c| {
             let service = Arc::clone(&service);
             let b = d.b.clone();
-            std::thread::spawn(move || -> (usize, usize, usize) {
-                let (mut ok, mut missed, mut completed) = (0usize, 0usize, 0usize);
+            std::thread::spawn(move || -> (usize, usize, usize, usize) {
+                let (mut ok, mut missed, mut rejected, mut completed) =
+                    (0usize, 0usize, 0usize, 0usize);
                 for k in 0..requests {
                     let f = 1.0 + ((c * requests + k) % 7) as f64;
                     let rhs: Vec<f64> = b.iter().map(|v| v * f).collect();
@@ -468,28 +511,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
                             }
                         }
                         Err(hbmc::api::HbmcError::DeadlineExceeded { .. }) => missed += 1,
+                        Err(hbmc::api::HbmcError::Overloaded { .. }) => rejected += 1,
                         Err(e) => eprintln!("client {c} request {k}: {e}"),
                     }
                 }
-                (ok, missed, completed)
+                (ok, missed, rejected, completed)
             })
         })
         .collect();
-    let (mut ok, mut missed, mut completed) = (0usize, 0usize, 0usize);
+    let (mut ok, mut missed, mut rejected, mut completed) = (0usize, 0usize, 0usize, 0usize);
     for t in workers {
-        let (o, m, s) = t.join().expect("client thread panicked");
+        let (o, m, r, s) = t.join().expect("client thread panicked");
         ok += o;
         missed += m;
+        rejected += r;
         completed += s;
     }
     let wall = t0.elapsed().as_secs_f64();
     let st = service.stats();
     let total = clients * requests;
     // Throughput counts only requests that actually ran a solve —
-    // deadline-missed (and errored) requests never reached the solver.
+    // deadline-missed, overloaded-rejected and errored requests never
+    // reached the solver.
     println!(
-        "served {ok}/{total} converged, {completed} completed ({missed} deadline-missed) \
-         in {wall:.3}s ({:.1} solves/s)",
+        "served {ok}/{total} converged, {completed} completed ({missed} deadline-missed, \
+         {rejected} overloaded) in {wall:.3}s ({:.1} solves/s)",
         completed as f64 / wall
     );
     println!(
@@ -502,6 +548,49 @@ fn cmd_serve(args: &Args) -> Result<()> {
         st.builds,
         st.cache.hits
     );
+    println!(
+        "admission: {} overloaded rejections, {} shed at dispatch, queue depth now {}",
+        st.overloaded, st.shed, st.queue_depth
+    );
+    if trace_every > 0 {
+        println!("trace (every {trace_every}th job):");
+        println!("{}", service.trace_json());
+    }
+    if linger_secs > 0 {
+        println!("lingering {linger_secs}s for metric scrapes...");
+        std::thread::sleep(Duration::from_secs(linger_secs as u64));
+    }
+    Ok(())
+}
+
+/// Pretty-print service statistics. With `--from H:P`, scrape a running
+/// `hbmc serve --metrics-addr` endpoint and print the raw Prometheus text
+/// it exports; otherwise run a small async workload through a fresh
+/// service and print its [`SolverService::stats_text`] snapshot — the
+/// human-readable view of the same counters and histograms.
+fn cmd_stats(args: &Args) -> Result<()> {
+    if let Some(addr) = args.flag("from") {
+        let body = hbmc::obs::http_get(addr, "/metrics")?;
+        print!("{body}");
+        return Ok(());
+    }
+    let scale: Scale = args.flag_or("scale", "tiny").parse()?;
+    let name = args.flag_or("dataset", "g3_circuit");
+    let requests = args.usize_flag("requests", 4)?.max(1);
+    let d = suite::try_dataset(&name, scale)?;
+    let cfg = cfg_from(args, d.shift)?;
+    let service = SolverService::with_config(cfg)?;
+    let handle = service.register_matrix(d.matrix);
+    let jobs = (0..requests)
+        .map(|k| {
+            let rhs: Vec<f64> = d.b.iter().map(|v| v * (1.0 + k as f64)).collect();
+            service.submit(handle, &rhs, &SolveRequest::new())
+        })
+        .collect::<std::result::Result<Vec<_>, hbmc::api::HbmcError>>()?;
+    for job in jobs {
+        job.wait()?;
+    }
+    println!("{}", service.stats_text());
     Ok(())
 }
 

@@ -1,0 +1,168 @@
+//! Minimal std-only HTTP listener for the `serve --metrics-addr` endpoint.
+//!
+//! One background thread, one connection at a time, two routes:
+//! `GET /metrics` (Prometheus text exposition, rendered fresh per scrape
+//! by the closure handed to [`MetricsServer::spawn`]) and `GET /healthz`
+//! (`ok`). Anything else is a 404. This is deliberately not a web server —
+//! no keep-alive, no TLS, no routing table — just enough HTTP/1.1 for
+//! `curl` and a Prometheus scraper, with zero new dependencies.
+//!
+//! Shutdown is cooperative: `Drop` sets a flag and pokes the listener with
+//! a self-connection so `accept` wakes up, then joins the thread.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::{HbmcError, Result};
+use crate::obs::prometheus::CONTENT_TYPE;
+
+/// Per-connection socket timeout: a stalled client must not wedge the
+/// single-threaded accept loop.
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Background `/metrics` + `/healthz` listener; see module docs.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:9464"`; port 0 picks a free port) and
+    /// serve `metrics()` on `GET /metrics` until the server is dropped.
+    pub fn spawn<F>(addr: &str, metrics: F) -> Result<MetricsServer>
+    where
+        F: Fn() -> String + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| HbmcError::io(format!("binding metrics listener on {addr}"), e))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| HbmcError::io("resolving metrics listener address", e))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("hbmc-metrics".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop_flag.load(Ordering::Acquire) {
+                        break;
+                    }
+                    if let Ok(stream) = stream {
+                        // Per-connection errors (timeouts, disconnects) are
+                        // the client's problem; the listener keeps serving.
+                        let _ = serve_one(stream, &metrics);
+                    }
+                }
+            })
+            .map_err(|e| HbmcError::io("spawning metrics listener thread", e))?;
+        Ok(MetricsServer { addr, stop, thread: Some(thread) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // Wake the accept loop so it observes the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_one<F: Fn() -> String>(stream: TcpStream, metrics: &F) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let mut reader = BufReader::new(stream);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    // "GET /path HTTP/1.1" — only the path matters here. Remaining headers
+    // are left unread; the response closes the connection.
+    let path = request_line.split_whitespace().nth(1).unwrap_or("");
+    let (status, content_type, body) = match path {
+        "/metrics" => ("200 OK", CONTENT_TYPE, metrics()),
+        "/healthz" => ("200 OK", "text/plain; charset=utf-8", "ok\n".to_string()),
+        _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+    };
+    let mut stream = reader.into_inner();
+    stream.write_all(
+        format!(
+            "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )?;
+    stream.flush()
+}
+
+/// Blocking one-shot HTTP GET against `addr` (e.g. `"127.0.0.1:9464"`);
+/// returns the response body on a 200, an error otherwise. Used by the
+/// `stats --from` CLI subcommand and the tests — not a general client.
+pub fn http_get(addr: &str, path: &str) -> Result<String> {
+    let context = |what: &str| format!("{what} http://{addr}{path}");
+    let mut stream = TcpStream::connect(addr).map_err(|e| HbmcError::io(context("connecting to"), e))?;
+    stream
+        .set_read_timeout(Some(IO_TIMEOUT))
+        .and_then(|()| stream.set_write_timeout(Some(IO_TIMEOUT)))
+        .map_err(|e| HbmcError::io(context("configuring socket for"), e))?;
+    stream
+        .write_all(format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").as_bytes())
+        .map_err(|e| HbmcError::io(context("sending request to"), e))?;
+    let mut response = String::new();
+    stream
+        .read_to_string(&mut response)
+        .map_err(|e| HbmcError::io(context("reading response from"), e))?;
+    let (head, body) = response
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| HbmcError::parse(format!("malformed HTTP response from {addr}{path}")))?;
+    let status_line = head.lines().next().unwrap_or("");
+    if status_line.split_whitespace().nth(1) != Some("200") {
+        return Err(HbmcError::parse(format!("GET {path} on {addr} returned \"{status_line}\"")));
+    }
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_metrics_healthz_and_404() {
+        let server =
+            MetricsServer::spawn("127.0.0.1:0", || "# TYPE up gauge\nup 1\n".to_string()).unwrap();
+        let addr = server.local_addr().to_string();
+        assert_eq!(http_get(&addr, "/healthz").unwrap(), "ok\n");
+        let metrics = http_get(&addr, "/metrics").unwrap();
+        assert!(metrics.contains("up 1"), "{metrics}");
+        let err = http_get(&addr, "/nope").unwrap_err();
+        assert!(err.to_string().contains("404"), "{err}");
+        // Repeated scrapes work (no keep-alive state to corrupt).
+        assert!(http_get(&addr, "/metrics").unwrap().contains("up 1"));
+    }
+
+    #[test]
+    fn drop_stops_the_listener() {
+        let server = MetricsServer::spawn("127.0.0.1:0", String::new).unwrap();
+        let addr = server.local_addr().to_string();
+        drop(server);
+        // The port is released: either connect fails or the read sees EOF
+        // without an HTTP response.
+        assert!(http_get(&addr, "/healthz").is_err());
+    }
+
+    #[test]
+    fn bind_failure_is_typed() {
+        let err = MetricsServer::spawn("256.0.0.1:0", String::new).unwrap_err();
+        assert!(matches!(err, HbmcError::Io { .. }), "{err:?}");
+        assert!(err.to_string().contains("metrics listener"));
+    }
+}

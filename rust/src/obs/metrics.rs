@@ -1,0 +1,411 @@
+//! Dependency-free metrics primitives: monotonic [`Counter`]s, [`Gauge`]s,
+//! and fixed-bucket log₂ [`Histogram`]s, collected in a [`MetricsRegistry`].
+//!
+//! The hot path is lock-free: every `observe`/`inc` is a handful of
+//! `Relaxed` `fetch_add`s on `AtomicU64`s — no mutex, no allocation, no
+//! branching on registry state. The registry's mutex guards only metric
+//! *registration* (service construction) and [`snapshot`]
+//! (`MetricsRegistry::snapshot`), which copies the atomics into plain
+//! values for rendering. `Relaxed` is deliberate and sufficient, matching
+//! the service's counter policy: each cell is independently monotonic and
+//! read only for reporting — nothing establishes happens-before through a
+//! metric, so stronger orderings would only add fences to solver threads.
+//!
+//! Histograms use power-of-two buckets: bucket `k` counts observations in
+//! `[2^k, 2^(k+1) − 1]` (bucket 0 additionally absorbs `0`), so the
+//! rendered cumulative upper bounds (`le`) are the exact integers
+//! `2^(k+1) − 1`. 40 buckets cover `[0, 2^40)` — for microsecond
+//! observations that is ~12.7 days, far beyond any solve; larger values
+//! saturate into the last bucket. A histogram therefore costs a fixed
+//! 42 atomics, is branch-predictable (`leading_zeros` → one `fetch_add`),
+//! and needs no configuration per metric.
+//!
+//! [`snapshot`]: MetricsRegistry::snapshot
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+
+/// Number of log₂ buckets per [`Histogram`] (see module docs).
+pub const HISTOGRAM_BUCKETS: usize = 40;
+
+/// Monotonically increasing counter (Prometheus type `counter`).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time value (Prometheus type `gauge`); stores `f64` bits in an
+/// `AtomicU64` so it stays lock-free like everything else here.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket log₂ histogram; see module docs for the bucket layout.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Bucket index for a value: `floor(log₂ v)`, with 0 and 1 sharing
+    /// bucket 0 and everything ≥ `2^(BUCKETS−1)` saturating into the last.
+    fn bucket_index(v: u64) -> usize {
+        if v <= 1 {
+            0
+        } else {
+            ((63 - v.leading_zeros()) as usize).min(HISTOGRAM_BUCKETS - 1)
+        }
+    }
+
+    /// Record one observation — three `Relaxed` `fetch_add`s, lock-free.
+    pub fn observe(&self, v: u64) {
+        self.buckets[Histogram::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Copy the atomics into a plain snapshot for rendering/quantiles.
+    /// Buckets are read independently (no global lock), so a snapshot
+    /// taken mid-observation may be off by the in-flight observation —
+    /// fine for reporting, which is all this is for.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut cumulative = 0;
+        let buckets = self
+            .buckets
+            .iter()
+            .enumerate()
+            .take(HISTOGRAM_BUCKETS - 1)
+            .map(|(k, b)| {
+                cumulative += b.load(Ordering::Relaxed);
+                // Exact integer upper bound of bucket k: 2^(k+1) − 1.
+                ((1u64 << (k + 1)) - 1, cumulative)
+            })
+            .collect();
+        HistogramSnapshot {
+            count: self.count(),
+            sum: self.sum.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+/// Plain-value copy of a [`Histogram`]: cumulative counts per finite `le`
+/// bound; the `+Inf` cumulative is `count`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    /// `(le, cumulative_count)` per finite bucket bound, ascending.
+    pub buckets: Vec<(u64, u64)>,
+}
+
+impl HistogramSnapshot {
+    /// Mean observed value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket containing the `q`-quantile (`0 ≤ q ≤ 1`);
+    /// 0 when empty. Quantiles of a log₂ histogram are bucket-resolution
+    /// estimates — at most 2× off — which is what p50/p99 latency tracking
+    /// needs. Saturates to the largest finite bound for observations that
+    /// overflowed into the `+Inf` bucket.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        for &(le, cumulative) in &self.buckets {
+            if cumulative >= target {
+                return le;
+            }
+        }
+        self.buckets.last().map(|&(le, _)| le).unwrap_or(0)
+    }
+}
+
+/// One registered time series: family name, optional label pair rendered
+/// verbatim (e.g. `reason="queue_depth"`), help text, and the live metric.
+struct Entry {
+    family: String,
+    labels: String,
+    help: String,
+    metric: Metric,
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Registry of metrics for one scrape endpoint. Registration returns an
+/// `Arc` handle the call site holds on to — the hot path touches only the
+/// handle's atomics, never the registry lock (see module docs).
+#[derive(Default)]
+pub struct MetricsRegistry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    fn register(&self, family: &str, labels: &str, help: &str, metric: Metric) {
+        self.entries
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(Entry {
+                family: family.to_string(),
+                labels: labels.to_string(),
+                help: help.to_string(),
+                metric,
+            });
+    }
+
+    /// Register an unlabeled counter and return its handle.
+    pub fn counter(&self, family: &str, help: &str) -> Arc<Counter> {
+        self.counter_with(family, "", help)
+    }
+
+    /// Register one labeled series of a counter family. `labels` is the
+    /// pre-rendered label body, e.g. `reason="queue_depth"`; series of one
+    /// family share `HELP`/`TYPE` in the exposition.
+    pub fn counter_with(&self, family: &str, labels: &str, help: &str) -> Arc<Counter> {
+        let c = Arc::new(Counter::new());
+        self.register(family, labels, help, Metric::Counter(Arc::clone(&c)));
+        c
+    }
+
+    /// Register a gauge and return its handle.
+    pub fn gauge(&self, family: &str, help: &str) -> Arc<Gauge> {
+        let g = Arc::new(Gauge::new());
+        self.register(family, "", help, Metric::Gauge(Arc::clone(&g)));
+        g
+    }
+
+    /// Register a histogram and return its handle.
+    pub fn histogram(&self, family: &str, help: &str) -> Arc<Histogram> {
+        let h = Arc::new(Histogram::new());
+        self.register(family, "", help, Metric::Histogram(Arc::clone(&h)));
+        h
+    }
+
+    /// Plain-value copy of every registered series, in registration order.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let entries = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
+        MetricsSnapshot {
+            series: entries
+                .iter()
+                .map(|e| SeriesSnapshot {
+                    family: e.family.clone(),
+                    labels: e.labels.clone(),
+                    help: e.help.clone(),
+                    value: match &e.metric {
+                        Metric::Counter(c) => SeriesValue::Counter(c.get()),
+                        Metric::Gauge(g) => SeriesValue::Gauge(g.get()),
+                        Metric::Histogram(h) => SeriesValue::Histogram(h.snapshot()),
+                    },
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of a registry (see [`MetricsRegistry::snapshot`]).
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// Every series in registration order (family order is stable).
+    pub series: Vec<SeriesSnapshot>,
+}
+
+/// One series of a [`MetricsSnapshot`].
+#[derive(Debug, Clone)]
+pub struct SeriesSnapshot {
+    pub family: String,
+    pub labels: String,
+    pub help: String,
+    pub value: SeriesValue,
+}
+
+/// The value a series held at snapshot time.
+#[derive(Debug, Clone)]
+pub enum SeriesValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(HistogramSnapshot),
+}
+
+impl MetricsSnapshot {
+    /// Sum of a counter family across its labeled series, if present.
+    pub fn counter(&self, family: &str) -> Option<u64> {
+        let mut total = None;
+        for s in &self.series {
+            if s.family == family {
+                if let SeriesValue::Counter(v) = s.value {
+                    total = Some(total.unwrap_or(0) + v);
+                }
+            }
+        }
+        total
+    }
+
+    /// The histogram registered under `family`, if present.
+    pub fn histogram(&self, family: &str) -> Option<&HistogramSnapshot> {
+        self.series.iter().find_map(|s| match (&s.value, s.family == family) {
+            (SeriesValue::Histogram(h), true) => Some(h),
+            _ => None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0.0);
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+    }
+
+    #[test]
+    fn histogram_bucket_layout_is_exact_log2() {
+        // Bucket k covers [2^k, 2^(k+1) − 1]; bucket 0 also takes 0.
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(2), 1);
+        assert_eq!(Histogram::bucket_index(3), 1);
+        assert_eq!(Histogram::bucket_index(4), 2);
+        assert_eq!(Histogram::bucket_index(7), 2);
+        assert_eq!(Histogram::bucket_index(8), 3);
+        assert_eq!(Histogram::bucket_index(u64::MAX), HISTOGRAM_BUCKETS - 1);
+
+        let h = Histogram::new();
+        for v in [0, 1, 2, 3, 1000] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 1006);
+        // le=1 covers {0,1}; le=3 additionally covers {2,3}.
+        assert_eq!(s.buckets[0], (1, 2));
+        assert_eq!(s.buckets[1], (3, 4));
+        // 1000 lands in [512, 1023]: cumulative reaches 5 at le=1023.
+        let le_1023 = s.buckets.iter().find(|&&(le, _)| le == 1023).unwrap();
+        assert_eq!(le_1023.1, 5);
+        // Bounds are ascending and cumulative counts monotone.
+        for pair in s.buckets.windows(2) {
+            assert!(pair[0].0 < pair[1].0);
+            assert!(pair[0].1 <= pair[1].1);
+        }
+        assert_eq!(s.buckets.last().unwrap().1, s.count, "finite tail == count");
+    }
+
+    #[test]
+    fn quantiles_are_bucket_bounds() {
+        let h = Histogram::new();
+        for v in 0..100 {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.0), 1, "lowest non-empty bucket bound");
+        // p50 of 0..=99 is ~49 → bucket [32,63].
+        assert_eq!(s.quantile(0.5), 63);
+        // p99 → 99 → bucket [64,127].
+        assert_eq!(s.quantile(0.99), 127);
+        assert!((s.mean() - 49.5).abs() < 1e-12);
+        let empty = Histogram::new().snapshot();
+        assert_eq!(empty.quantile(0.5), 0);
+        assert_eq!(empty.mean(), 0.0);
+    }
+
+    #[test]
+    fn registry_snapshot_preserves_order_and_labels() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter_with("hits_total", "kind=\"x\"", "hits");
+        let b = reg.counter_with("hits_total", "kind=\"y\"", "hits");
+        let g = reg.gauge("depth", "queue depth");
+        let h = reg.histogram("wait", "queue wait");
+        a.add(3);
+        b.add(4);
+        g.set(7.0);
+        h.observe(10);
+        let snap = reg.snapshot();
+        assert_eq!(snap.series.len(), 4);
+        assert_eq!(snap.series[0].labels, "kind=\"x\"");
+        assert_eq!(snap.counter("hits_total"), Some(7), "family sums labeled series");
+        assert_eq!(snap.counter("nope"), None);
+        assert_eq!(snap.histogram("wait").unwrap().count, 1);
+        assert!(matches!(snap.series[2].value, SeriesValue::Gauge(v) if v == 7.0));
+    }
+
+    #[test]
+    fn handles_are_send_sync() {
+        fn assert_send_sync<T: Send + Sync + 'static>() {}
+        assert_send_sync::<Arc<Counter>>();
+        assert_send_sync::<Arc<Gauge>>();
+        assert_send_sync::<Arc<Histogram>>();
+        assert_send_sync::<MetricsRegistry>();
+    }
+}

@@ -1,0 +1,35 @@
+//! Observability: metrics, job-lifecycle tracing, Prometheus export, and
+//! the `/metrics` HTTP endpoint.
+//!
+//! This layer is deliberately *passive* with respect to the solver: it
+//! never times anything inside the fused one-dispatch CG region (whose
+//! determinism and sync counts are part of the paper reproduction) —
+//! per-solve phase totals come from the `SolveReport`/`PlanReport` fields
+//! the coordinator already produces, and queue-side timestamps are taken
+//! outside the dispatch. The hot-path cost of an *unsampled* job is a
+//! handful of relaxed atomic adds and one `Option` check.
+//!
+//! * [`metrics`] — dependency-free counters, gauges, and fixed-bucket
+//!   log₂ histograms behind a [`MetricsRegistry`]; lock-free observe path.
+//! * [`prometheus`] — text exposition (format 0.0.4) rendering; consumed
+//!   by `SolverService::metrics_text`.
+//! * [`trace`] — bounded ring-buffer [`TraceRecorder`] of per-job
+//!   lifecycle events, sampled per `QueueConfig::trace_sample`.
+//! * [`http`] — std-only [`MetricsServer`] serving `GET /metrics` and
+//!   `GET /healthz` for `hbmc serve --metrics-addr`.
+//!
+//! Admission control (the *acting* half of this PR: bounded queue depth,
+//! per-handle in-flight quotas, expired-job shedding) lives with the
+//! queue and service in [`api`](crate::api); this module only measures.
+
+pub mod http;
+pub mod metrics;
+pub mod prometheus;
+pub mod trace;
+
+pub use http::{http_get, MetricsServer};
+pub use metrics::{
+    Counter, Gauge, Histogram, HistogramSnapshot, MetricsRegistry, MetricsSnapshot,
+    SeriesSnapshot, SeriesValue,
+};
+pub use trace::{stage, TraceEvent, TraceRecorder};

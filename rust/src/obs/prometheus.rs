@@ -1,0 +1,142 @@
+//! Prometheus text exposition (format version 0.0.4) rendering for
+//! [`MetricsSnapshot`]s, plus tiny `write_*` helpers for families whose
+//! values are computed at scrape time (e.g. the service renders its
+//! `ServiceStats` counters directly rather than mirroring them into the
+//! registry).
+//!
+//! Rules followed here, per the exposition format spec:
+//! * `# HELP` and `# TYPE` appear exactly once per family, immediately
+//!   before its first sample, even when the family has several labeled
+//!   series.
+//! * Counters end in `_total`; histograms expose cumulative
+//!   `family_bucket{le="…"}` samples (ending with `le="+Inf"` equal to
+//!   `family_count`), plus `family_sum` and `family_count`.
+//! * Sample values are rendered with `{}` — integers stay integral,
+//!   gauges print the shortest round-trip float.
+
+use crate::obs::metrics::{HistogramSnapshot, MetricsSnapshot, SeriesValue};
+
+/// Content-Type for `/metrics` responses in the text exposition format.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// Append one unlabeled counter family (HELP + TYPE + sample).
+pub fn write_counter(out: &mut String, family: &str, help: &str, value: u64) {
+    out.push_str(&format!(
+        "# HELP {family} {help}\n# TYPE {family} counter\n{family} {value}\n"
+    ));
+}
+
+/// Append one unlabeled gauge family (HELP + TYPE + sample).
+pub fn write_gauge(out: &mut String, family: &str, help: &str, value: f64) {
+    out.push_str(&format!(
+        "# HELP {family} {help}\n# TYPE {family} gauge\n{family} {value}\n"
+    ));
+}
+
+fn write_histogram(out: &mut String, family: &str, labels: &str, h: &HistogramSnapshot) {
+    let with = |le: &str| {
+        if labels.is_empty() {
+            format!("{family}_bucket{{le=\"{le}\"}}")
+        } else {
+            format!("{family}_bucket{{{labels},le=\"{le}\"}}")
+        }
+    };
+    for &(le, cumulative) in &h.buckets {
+        out.push_str(&format!("{} {}\n", with(&le.to_string()), cumulative));
+    }
+    out.push_str(&format!("{} {}\n", with("+Inf"), h.count));
+    let suffix = |name: &str| {
+        if labels.is_empty() {
+            format!("{family}_{name}")
+        } else {
+            format!("{family}_{name}{{{labels}}}")
+        }
+    };
+    out.push_str(&format!("{} {}\n", suffix("sum"), h.sum));
+    out.push_str(&format!("{} {}\n", suffix("count"), h.count));
+}
+
+/// Render a whole snapshot. Series are emitted in registration order;
+/// consecutive series of one family share a single HELP/TYPE header, so
+/// labeled families must be registered contiguously (which the service
+/// does).
+pub fn render(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    let mut last_family = "";
+    for s in &snap.series {
+        if s.family != last_family {
+            let kind = match s.value {
+                SeriesValue::Counter(_) => "counter",
+                SeriesValue::Gauge(_) => "gauge",
+                SeriesValue::Histogram(_) => "histogram",
+            };
+            out.push_str(&format!("# HELP {} {}\n# TYPE {} {}\n", s.family, s.help, s.family, kind));
+            last_family = &s.family;
+        }
+        match &s.value {
+            SeriesValue::Counter(v) => {
+                if s.labels.is_empty() {
+                    out.push_str(&format!("{} {v}\n", s.family));
+                } else {
+                    out.push_str(&format!("{}{{{}}} {v}\n", s.family, s.labels));
+                }
+            }
+            SeriesValue::Gauge(v) => {
+                if s.labels.is_empty() {
+                    out.push_str(&format!("{} {v}\n", s.family));
+                } else {
+                    out.push_str(&format!("{}{{{}}} {v}\n", s.family, s.labels));
+                }
+            }
+            SeriesValue::Histogram(h) => write_histogram(&mut out, &s.family, &s.labels, h),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::MetricsRegistry;
+
+    #[test]
+    fn labeled_family_shares_one_header() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter_with("x_total", "k=\"a\"", "x things");
+        let b = reg.counter_with("x_total", "k=\"b\"", "x things");
+        a.add(1);
+        b.add(2);
+        let text = render(&reg.snapshot());
+        assert_eq!(text.matches("# TYPE x_total counter").count(), 1);
+        assert!(text.contains("x_total{k=\"a\"} 1\n"));
+        assert!(text.contains("x_total{k=\"b\"} 2\n"));
+    }
+
+    #[test]
+    fn histogram_exposition_is_cumulative_and_closed_by_inf() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("wait", "wait time");
+        h.observe(1);
+        h.observe(5);
+        let text = render(&reg.snapshot());
+        assert!(text.contains("# TYPE wait histogram"));
+        assert!(text.contains("wait_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("wait_bucket{le=\"7\"} 2\n"));
+        assert!(text.contains("wait_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("wait_sum 6\n"));
+        assert!(text.contains("wait_count 2\n"));
+    }
+
+    #[test]
+    fn write_helpers_emit_full_families() {
+        let mut out = String::new();
+        write_counter(&mut out, "a_total", "a help", 9);
+        write_gauge(&mut out, "g", "g help", 2.5);
+        assert!(out.contains("# TYPE a_total counter\na_total 9\n"));
+        assert!(out.contains("# TYPE g gauge\ng 2.5\n"));
+        // Integral gauges print without a trailing ".0".
+        let mut out = String::new();
+        write_gauge(&mut out, "g", "g help", 3.0);
+        assert!(out.contains("\ng 3\n"));
+    }
+}

@@ -1,0 +1,181 @@
+//! Job-lifecycle tracing: a bounded ring buffer of structured events.
+//!
+//! A [`TraceRecorder`] captures the life of sampled jobs as they move
+//! through the serving path: `submitted → enqueued → batch_opened →
+//! dispatched → completed` (or `failed` / `cancelled` / `shed`).
+//! Timestamps are microseconds since the recorder's creation (a monotonic
+//! [`Instant`] epoch), so event ordering is meaningful across threads.
+//!
+//! The buffer is bounded: when full, the oldest event is dropped and a
+//! counter incremented, so tracing can stay on in production without
+//! growing memory. Sampling is decided once per job at submit time (see
+//! `QueueConfig::trace_sample`) — a sampled job carries an
+//! `Arc<TraceRecorder>` in its `JobCore` and records every stage; an
+//! unsampled job carries `None` and pays nothing beyond that null check.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+use std::time::Instant;
+
+/// Lifecycle stage names, used verbatim in events and their JSON dump.
+pub mod stage {
+    pub const SUBMITTED: &str = "submitted";
+    pub const ENQUEUED: &str = "enqueued";
+    pub const BATCH_OPENED: &str = "batch_opened";
+    pub const DISPATCHED: &str = "dispatched";
+    pub const COMPLETED: &str = "completed";
+    pub const FAILED: &str = "failed";
+    pub const CANCELLED: &str = "cancelled";
+    pub const SHED: &str = "shed";
+}
+
+/// One recorded lifecycle event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Job id (the service's monotonically increasing submission index).
+    pub job: u64,
+    /// Stage name from [`stage`].
+    pub stage: &'static str,
+    /// Microseconds since the recorder's epoch (monotonic).
+    pub t_us: u64,
+    /// Stage-specific detail: the `BatchKey` label for `batch_opened`,
+    /// an error summary for `failed`, empty otherwise.
+    pub detail: String,
+}
+
+/// Bounded ring buffer of [`TraceEvent`]s (see module docs).
+#[derive(Debug)]
+pub struct TraceRecorder {
+    epoch: Instant,
+    capacity: usize,
+    events: Mutex<std::collections::VecDeque<TraceEvent>>,
+    dropped: AtomicU64,
+}
+
+impl TraceRecorder {
+    /// A recorder holding at most `capacity` events (≥ 1).
+    pub fn new(capacity: usize) -> TraceRecorder {
+        TraceRecorder {
+            epoch: Instant::now(),
+            capacity: capacity.max(1),
+            events: Mutex::new(std::collections::VecDeque::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one event, evicting the oldest if the buffer is full.
+    pub fn record(&self, job: u64, stage: &'static str, detail: String) {
+        let t_us = self.epoch.elapsed().as_micros() as u64;
+        let mut q = self.events.lock().unwrap_or_else(PoisonError::into_inner);
+        if q.len() == self.capacity {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(TraceEvent { job, stage, t_us, detail });
+    }
+
+    /// Events currently buffered, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .iter()
+            .cloned()
+            .collect()
+    }
+
+    /// Number of events evicted because the buffer was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap_or_else(PoisonError::into_inner).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dump the buffer as a JSON array of event objects
+    /// (`{"job":…,"stage":"…","t_us":…,"detail":"…"}`), oldest first.
+    pub fn to_json(&self) -> String {
+        let events = self.events();
+        let mut out = String::from("[");
+        for (i, e) in events.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"job\":{},\"stage\":\"{}\",\"t_us\":{},\"detail\":\"{}\"}}",
+                e.job,
+                e.stage,
+                e.t_us,
+                escape_json(&e.detail)
+            ));
+        }
+        out.push(']');
+        out
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_in_order_with_monotonic_timestamps() {
+        let t = TraceRecorder::new(16);
+        t.record(1, stage::SUBMITTED, String::new());
+        t.record(1, stage::ENQUEUED, String::new());
+        t.record(1, stage::COMPLETED, String::new());
+        let evs = t.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].stage, "submitted");
+        assert_eq!(evs[2].stage, "completed");
+        assert!(evs[0].t_us <= evs[1].t_us && evs[1].t_us <= evs[2].t_us);
+        assert_eq!(t.dropped(), 0);
+        assert!(!t.is_empty());
+    }
+
+    #[test]
+    fn ring_buffer_evicts_oldest_and_counts_drops() {
+        let t = TraceRecorder::new(2);
+        t.record(1, stage::SUBMITTED, String::new());
+        t.record(2, stage::SUBMITTED, String::new());
+        t.record(3, stage::SUBMITTED, String::new());
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].job, 2, "oldest evicted first");
+        assert_eq!(t.dropped(), 1);
+    }
+
+    #[test]
+    fn json_dump_is_well_formed_and_escaped() {
+        let t = TraceRecorder::new(4);
+        t.record(7, stage::FAILED, "bad \"quote\"\nline".to_string());
+        let json = t.to_json();
+        assert!(json.starts_with('[') && json.ends_with(']'));
+        assert!(json.contains("\"job\":7"));
+        assert!(json.contains("\"stage\":\"failed\""));
+        assert!(json.contains("bad \\\"quote\\\"\\nline"));
+        assert_eq!(TraceRecorder::new(1).to_json(), "[]");
+    }
+}

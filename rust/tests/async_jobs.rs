@@ -95,7 +95,9 @@ fn concurrent_submissions_coalesce_into_wide_batches() {
 }
 
 /// A job whose budget is already spent when the dispatcher reaches it
-/// fails with the documented typed error and never runs.
+/// fails with the documented typed error and never runs. (A zero budget
+/// never even enqueues — `submit` rejects it synchronously; that contract
+/// lives in tests/overload.rs.)
 #[test]
 fn expired_deadline_is_typed_and_never_runs() {
     let d = suite::dataset("g3_circuit", Scale::Tiny);
@@ -107,7 +109,10 @@ fn expired_deadline_is_typed_and_never_runs() {
     service.solve(handle, &d.b).unwrap();
     let solves_before = service.stats().solves;
 
-    let req = SolveRequest::new().deadline(Duration::ZERO);
+    // The smallest positive budget passes the synchronous zero-deadline
+    // check at submit, but is always spent by the time the dispatcher
+    // claims the job — it must be shed, never run.
+    let req = SolveRequest::new().deadline(Duration::from_nanos(1));
     let job = service.submit(handle, &d.b, &req).unwrap();
     let err = job.wait().unwrap_err();
     assert!(matches!(err, HbmcError::DeadlineExceeded { .. }), "{err:?}");
@@ -128,6 +133,7 @@ fn expired_deadline_is_typed_and_never_runs() {
         solves_before,
         "expired jobs must never reach the solver"
     );
+    assert_eq!(service.stats().shed, 2, "both expired jobs count as shed at dispatch");
 }
 
 /// Cancel aborts queued jobs (typed error, no solve); terminal jobs
