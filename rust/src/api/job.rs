@@ -213,6 +213,12 @@ impl JobCore {
         self.deadline.is_some()
     }
 
+    /// Whether the job's deadline has already passed — the retry ladder's
+    /// gate: a recovery attempt must not start on borrowed time.
+    pub(crate) fn past_deadline(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
     /// Dispatcher entry check: flip `Queued → Running` and return `true`,
     /// unless the job was cancelled meanwhile (skip it) or its deadline
     /// has passed (fail it here, typed, without running).

@@ -52,10 +52,11 @@ use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::Instant;
 
-use crate::config::{QueueConfig, SolverConfig};
-use crate::coordinator::driver::SolveOptions;
+use crate::config::{OrderingKind, QueueConfig, SolverConfig};
+use crate::coordinator::driver::{RetryAttempt, SolveOptions};
 use crate::coordinator::session::{PlanKey, SolveOutput, SolveSession};
 use crate::error::{HbmcError, Result};
+use crate::factor::ic0::escalation_shifts;
 
 use super::job::{JobCore, JobState};
 use super::service::{mlock, Registered, ServiceCore};
@@ -292,17 +293,26 @@ pub(crate) fn dispatcher_loop(queue: Arc<JobQueue>, core: Arc<ServiceCore>) {
 }
 
 /// Run one batch: filter out jobs cancelled or expired while queued, then
-/// one plan checkout + one session for everything that remains.
+/// one plan checkout + one session for everything that remains, with the
+/// `crate::resil` recovery ladder wrapped around both:
 ///
-/// Panic containment is best-effort: any panic that *surfaces* on this
-/// thread (plan build, single-threaded solves, pool jobs whose worker
-/// panic is re-raised by `Pool::run`) fails the affected jobs typed and
-/// poisons the batch — the session is then abandoned, never reused or
-/// joined. The residual gap, documented in `pool.rs`: with `threads > 1`,
-/// a *worker* panicking mid-color-loop can desynchronize the pool's
-/// shared barrier before the re-raise, hanging the dispatcher inside the
-/// solve. Solver kernels are panic-free over validated plans, so this is
-/// a defense-in-depth boundary, not an expected path.
+/// * a factorization breakdown at batch open re-plans with an escalated
+///   shift (the `ic0_auto` doubling schedule), bounded by the job's
+///   `RetryPolicy`;
+/// * a CG breakdown mid-iteration evicts the plan and retries the job on
+///   a rebuilt session;
+/// * a `NotConverged` failure under a colored ordering retries once on a
+///   level-scheduled plan (natural-ordering convergence);
+/// * a panic that surfaces on this thread (plan build, single-threaded
+///   solve, or a worker panic re-raised by `Pool::run`) evicts the plan,
+///   **drains** the poisoned pool with a bounded timeout instead of
+///   leaking it (`Pool::drain`; leaked stragglers are counted, never
+///   joined), and — retry budget permitting — rebuilds the session and
+///   retries the job once, continuing the batch on the fresh session.
+///
+/// Every retry is recorded in the job's `SolveReport` (`retries` /
+/// `attempts`), in `hbmc_retries_total{cause=…}`, and as a `retried`
+/// trace event. Terminal outcomes feed the per-handle circuit breaker.
 fn run_batch(queue: &JobQueue, core: &ServiceCore, batch: Vec<QueuedJob>) {
     // Jobs are claimed *lazily*: `claim` (→ `try_start`) runs when the
     // dispatcher reaches each job, not at batch formation. A late member
@@ -318,37 +328,70 @@ fn run_batch(queue: &JobQueue, core: &ServiceCore, batch: Vec<QueuedJob>) {
     };
     queue.batches.fetch_add(1, AtomicOrdering::Relaxed);
     first.core.note_with(stage::BATCH_OPENED, || format!("{:?}", first.key));
-    // Remembered for poisoned-batch recovery below: `first` is consumed by
-    // the solve loop, but its plan key must outlive it so the cache entry
-    // can be evicted after a panic.
-    let plan_key = PlanKey::from_fingerprint(first.reg.fingerprint, &first.cfg);
-    let session = catch_unwind(AssertUnwindSafe(|| {
-        core.plan_for(&first.reg, &first.cfg)
-            .map(|plan| SolveSession::for_request(plan, &first.cfg))
-    }));
-    let session = match session {
-        Ok(Ok(session)) => session,
-        Ok(Err(e)) => {
-            // Fan the one batch-level failure out to every waiting handle.
-            first.core.finish(Err(e.clone()));
-            for job in jobs {
-                if claim(queue, core, &job) {
-                    job.core.finish(Err(e.clone()));
-                }
+    // Chaos hook: deterministic dispatcher latency, consumed here on the
+    // single dispatcher thread (never inside a solve).
+    if let Some(delay) = core.injector().and_then(|inj| inj.take_dispatch_delay()) {
+        std::thread::sleep(delay);
+    }
+    // Open the batch session, walking the shift-escalation rung of the
+    // ladder when the factorization breaks down. `plan_key` tracks the
+    // config the live session was actually built under, so later
+    // evictions hit the right cache entry; `inherited` attempts are
+    // stamped into every report served off a recovered session.
+    let retry_budget = first.cfg.retry.max_retries as usize;
+    let mut open_cfg = first.cfg.clone();
+    let mut plan_key = PlanKey::from_fingerprint(first.reg.fingerprint, &open_cfg);
+    let mut inherited: Vec<RetryAttempt> = Vec::new();
+    let session = loop {
+        match open_session(core, &first.reg, &open_cfg) {
+            Ok(Ok(session)) => break session,
+            Ok(Err(e)) => {
+                let escalate = match &e {
+                    HbmcError::BreakdownInFactorization { .. }
+                        if inherited.len() < retry_budget && !first.core.past_deadline() =>
+                    {
+                        // Next rung of the doubling schedule above the
+                        // *configured* shift (the auto-search already
+                        // exhausted the schedule above the failed one).
+                        escalation_shifts(open_cfg.shift).first().copied()
+                    }
+                    _ => None,
+                };
+                let Some(next) = escalate else {
+                    // Fan the batch-level failure out to every waiting
+                    // handle (and the breaker — a factorization failure is
+                    // a statement about the matrix).
+                    settle(core, &first, Err(e.clone()));
+                    for job in jobs {
+                        if claim(queue, core, &job) {
+                            settle(core, &job, Err(e.clone()));
+                        }
+                    }
+                    return;
+                };
+                let action = format!("re-plan with escalated shift {next}");
+                core.obs.record_retry("breakdown_factorization");
+                first.core.note_with(stage::RETRIED, || action.clone());
+                inherited.push(RetryAttempt { cause: "breakdown_factorization", action });
+                open_cfg.shift = next;
+                plan_key = PlanKey::from_fingerprint(first.reg.fingerprint, &open_cfg);
             }
-            return;
-        }
-        Err(_) => {
-            let internal = || HbmcError::Internal("plan build panicked during dispatch".into());
-            first.core.finish(Err(internal()));
-            for job in jobs {
-                if claim(queue, core, &job) {
-                    job.core.finish(Err(internal()));
+            Err(_) => {
+                let internal =
+                    || HbmcError::Internal("plan build panicked during dispatch".into());
+                settle(core, &first, Err(internal()));
+                for job in jobs {
+                    if claim(queue, core, &job) {
+                        settle(core, &job, Err(internal()));
+                    }
                 }
+                return;
             }
-            return;
         }
     };
+    // The session slot: recovery rungs may drain + replace the session
+    // mid-batch; `None` means it was lost to an unrecoverable panic.
+    let mut session = Some(session);
     let mut width: u64 = 0;
     let mut poisoned = false;
     let mut current = Some(first);
@@ -362,12 +405,10 @@ fn run_batch(queue: &JobQueue, core: &ServiceCore, batch: Vec<QueuedJob>) {
         } else if width > 2 {
             queue.coalesced_rhs.fetch_add(1, AtomicOrdering::Relaxed);
         }
-        match catch_unwind(AssertUnwindSafe(|| run_one(core, &session, &job))) {
-            Ok(result) => job.core.finish(result),
-            Err(_) => {
-                job.core.finish(Err(HbmcError::Internal(
-                    "solver panicked during dispatch".into(),
-                )));
+        match run_job_with_recovery(core, &mut session, &mut plan_key, &inherited, &job) {
+            JobEnd::Done(result) => settle(core, &job, result),
+            JobEnd::Poisoned(e) => {
+                settle(core, &job, Err(e));
                 poisoned = true;
                 break;
             }
@@ -377,33 +418,251 @@ fn run_batch(queue: &JobQueue, core: &ServiceCore, batch: Vec<QueuedJob>) {
     }
     core.obs.batch_width.observe(width);
     if poisoned {
-        // A panic may have unwound past the pool's barrier protocol (see
-        // `Pool::run`), so neither reuse the session for the remaining
-        // jobs nor drop it — `Pool::drop` joins workers that can be
-        // parked at a desynchronized barrier, which would hang the
-        // dispatcher (and with it every future job). Fail the rest of the
-        // batch and, for multi-threaded pools, leak the session: bounded
-        // by panic events, and liveness beats a few leaked threads on an
-        // already-broken invariant.
+        // The session was lost (drained after a panic the retry policy
+        // could not absorb) and the plan already evicted. Fail the rest of
+        // the batch typed; the next submission for this key rebuilds both.
         for job in jobs {
             if claim(queue, core, &job) {
-                job.core.finish(Err(HbmcError::Internal(
-                    "batch aborted: an earlier job's solver panicked".into(),
-                )));
+                settle(
+                    core,
+                    &job,
+                    Err(HbmcError::Internal(
+                        "batch aborted: an earlier job's solver panicked".into(),
+                    )),
+                );
             }
         }
-        // Evict the batch's plan: the panic fired inside kernels reading
-        // this plan's data, so treat the cached Arc as suspect. The next
-        // request for the same PlanKey rebuilds from the matrix (through
-        // the per-key build gate) rather than re-checking out a plan a
-        // dying worker may have been traversing — closing the residual
-        // gap documented above where only the *session* was abandoned
-        // while the plan stayed cached and servable.
-        core.evict_plan(&plan_key);
-        if session.pool().nthreads() > 1 {
-            std::mem::forget(session);
+    }
+}
+
+/// The outcome of one job under the recovery ladder.
+enum JobEnd {
+    /// The job reached a terminal result; the batch session is intact
+    /// (possibly rebuilt) and serves the remaining members.
+    Done(Result<SolveOutput>),
+    /// The job failed *and* the batch session was lost (drained after an
+    /// unrecoverable panic) — abort the rest of the batch.
+    Poisoned(HbmcError),
+}
+
+/// Plan + session for `(reg, cfg)` under a panic guard (the plan build
+/// runs factorization kernels on this thread). The outer `Err` is a build
+/// panic; the session inherits the service's fault injector.
+fn open_session(
+    core: &ServiceCore,
+    reg: &Registered,
+    cfg: &SolverConfig,
+) -> std::thread::Result<Result<SolveSession>> {
+    catch_unwind(AssertUnwindSafe(|| {
+        core.plan_for(reg, cfg)
+            .map(|plan| SolveSession::for_request_with(plan, cfg, core.injector().cloned()))
+    }))
+}
+
+/// Run one job to a terminal result, walking the per-job rungs of the
+/// recovery ladder (see `run_batch` docs). Bounded by the job's
+/// `RetryPolicy` and its deadline; each retry is recorded in the report's
+/// `retries`/`attempts`, the `hbmc_retries_total` family, and the trace.
+fn run_job_with_recovery(
+    core: &ServiceCore,
+    session: &mut Option<SolveSession>,
+    plan_key: &mut PlanKey,
+    inherited: &[RetryAttempt],
+    job: &QueuedJob,
+) -> JobEnd {
+    let budget = job.cfg.retry.max_retries as usize;
+    let mut attempts: Vec<RetryAttempt> = inherited.to_vec();
+    let mut panic_retried = false;
+    // Chaos hook: poison a CLONE of this job's rhs — the queued rhs stays
+    // clean, so the retry that follows the detected breakdown is healthy.
+    let mut rhs_override: Option<Vec<f64>> = None;
+    if let Some(idx) = core.injector().and_then(|inj| inj.take_nan_rhs()) {
+        let mut r = job.rhs.clone();
+        if !r.is_empty() {
+            let k = idx % r.len();
+            r[k] = f64::NAN;
+        }
+        rhs_override = Some(r);
+    }
+    loop {
+        let Some(live) = session.as_ref() else {
+            return JobEnd::Poisoned(HbmcError::Internal(
+                "batch session unavailable after recovery failure".into(),
+            ));
+        };
+        let rhs: &[f64] = rhs_override.as_deref().unwrap_or(&job.rhs);
+        let outcome = catch_unwind(AssertUnwindSafe(|| run_one(core, live, job, rhs)));
+        rhs_override = None; // retries always run on the clean rhs
+        let err = match outcome {
+            Ok(Ok(mut out)) => {
+                out.report.retries = attempts.len() as u32;
+                out.report.attempts = attempts;
+                return JobEnd::Done(Ok(out));
+            }
+            Ok(Err(e)) => e,
+            Err(_) => {
+                // A panic surfaced here: a worker panic re-raised by
+                // `Pool::run`, or the solver itself on this thread. The
+                // pool's barrier protocol may be desynchronized, so the
+                // session must not serve another solve — drain it (bounded
+                // join; stragglers are counted and detached, never joined)
+                // and evict the plan its workers were reading.
+                if let Some(inj) = core.injector() {
+                    inj.consume_panic();
+                }
+                core.evict_plan(plan_key);
+                let old = session.take().expect("session checked live above");
+                let leaked = old.drain();
+                core.obs.pool_rebuilds.inc();
+                if panic_retried || attempts.len() >= budget || job.core.past_deadline() {
+                    return JobEnd::Poisoned(HbmcError::Internal(
+                        "solver panicked during dispatch".into(),
+                    ));
+                }
+                match open_session(core, &job.reg, &job.cfg) {
+                    Ok(Ok(fresh)) => {
+                        *session = Some(fresh);
+                        *plan_key = PlanKey::from_fingerprint(job.reg.fingerprint, &job.cfg);
+                        let action = if leaked == 0 {
+                            "pool rebuilt; retried on fresh session".to_string()
+                        } else {
+                            format!(
+                                "pool rebuilt ({leaked} worker(s) leaked); \
+                                 retried on fresh session"
+                            )
+                        };
+                        core.obs.record_retry("panic");
+                        job.core.note_with(stage::RETRIED, || action.clone());
+                        attempts.push(RetryAttempt { cause: "panic", action });
+                        panic_retried = true;
+                        continue;
+                    }
+                    Ok(Err(e)) => return JobEnd::Poisoned(e),
+                    Err(_) => {
+                        return JobEnd::Poisoned(HbmcError::Internal(
+                            "plan build panicked during dispatch".into(),
+                        ))
+                    }
+                }
+            }
+        };
+        // Typed-error rungs. Anything unmatched — or matched with no retry
+        // budget left or an expired deadline — is final.
+        let retryable = attempts.len() < budget && !job.core.past_deadline();
+        match err {
+            HbmcError::BreakdownInIteration { iter, quantity } if retryable => {
+                // The iterate went non-finite: the factor (or a poisoned
+                // input) is suspect. Evict the plan so the rebuild below
+                // re-factorizes instead of re-checking the suspect Arc out
+                // of the cache, then retry on the rebuilt session.
+                core.evict_plan(plan_key);
+                let fresh = match open_session(core, &job.reg, &job.cfg) {
+                    Ok(Ok(s)) => s,
+                    Ok(Err(e)) => return JobEnd::Done(Err(e)),
+                    Err(_) => {
+                        return JobEnd::Done(Err(HbmcError::Internal(
+                            "plan build panicked during dispatch".into(),
+                        )))
+                    }
+                };
+                if let Some(old) = session.take() {
+                    // Healthy pool (the breakdown was detected in lockstep,
+                    // no panic) — drain joins every worker immediately.
+                    old.drain();
+                }
+                *session = Some(fresh);
+                *plan_key = PlanKey::from_fingerprint(job.reg.fingerprint, &job.cfg);
+                let action = format!(
+                    "plan evicted after non-finite {quantity} at iteration {iter}; \
+                     retried on rebuilt session"
+                );
+                core.obs.record_retry("breakdown_iteration");
+                job.core.note_with(stage::RETRIED, || action.clone());
+                attempts.push(RetryAttempt { cause: "breakdown_iteration", action });
+            }
+            HbmcError::NotConverged { iterations, relres }
+                if retryable
+                    && matches!(
+                        job.cfg.ordering,
+                        OrderingKind::Mc | OrderingKind::Bmc | OrderingKind::Hbmc
+                    ) =>
+            {
+                // A colored ordering trades convergence for parallelism
+                // (§5.2 of the paper); fall back once to the level-
+                // scheduled path, which keeps natural-ordering convergence.
+                // One-shot on a throwaway session: the batch session keeps
+                // serving the remaining members under the original config.
+                let mut level_cfg = job.cfg.clone();
+                level_cfg.ordering = OrderingKind::Level;
+                let action = format!(
+                    "fallback to level ordering after stalling at relres {relres:.3e} \
+                     ({iterations} iterations)"
+                );
+                core.obs.record_retry("not_converged");
+                job.core.note_with(stage::RETRIED, || action.clone());
+                attempts.push(RetryAttempt { cause: "not_converged", action });
+                let fallback = match open_session(core, &job.reg, &level_cfg) {
+                    Ok(Ok(s)) => s,
+                    Ok(Err(e)) => return JobEnd::Done(Err(e)),
+                    Err(_) => {
+                        return JobEnd::Done(Err(HbmcError::Internal(
+                            "plan build panicked during dispatch".into(),
+                        )))
+                    }
+                };
+                let out =
+                    catch_unwind(AssertUnwindSafe(|| run_one(core, &fallback, job, &job.rhs)));
+                // Tear the throwaway session down with the bounded drain
+                // either way; after a panic its pool must not be joined
+                // unbounded by Drop.
+                match out {
+                    Ok(Ok(mut o)) => {
+                        fallback.drain();
+                        o.report.retries = attempts.len() as u32;
+                        o.report.attempts = attempts;
+                        return JobEnd::Done(Ok(o));
+                    }
+                    Ok(Err(e)) => {
+                        fallback.drain();
+                        return JobEnd::Done(Err(e));
+                    }
+                    Err(_) => {
+                        if let Some(inj) = core.injector() {
+                            inj.consume_panic();
+                        }
+                        fallback.drain();
+                        return JobEnd::Done(Err(HbmcError::Internal(
+                            "solver panicked during dispatch".into(),
+                        )));
+                    }
+                }
+            }
+            other => return JobEnd::Done(Err(other)),
         }
     }
+}
+
+/// Fold a terminal job outcome into the handle's circuit breaker, then
+/// resolve the waiting handle. Cancellations, deadline expiries and
+/// admission rejections say nothing about the matrix, so they never trip
+/// the breaker.
+fn settle(core: &ServiceCore, job: &QueuedJob, result: Result<SolveOutput>) {
+    match &result {
+        Ok(_) => core.record_outcome(job.reg.id, true),
+        Err(e) if breaker_counts(e) => core.record_outcome(job.reg.id, false),
+        Err(_) => {}
+    }
+    job.core.finish(result);
+}
+
+/// Whether a job failure counts against the per-handle circuit breaker.
+fn breaker_counts(e: &HbmcError) -> bool {
+    !matches!(
+        e,
+        HbmcError::Cancelled
+            | HbmcError::DeadlineExceeded { .. }
+            | HbmcError::Overloaded { .. }
+    )
 }
 
 /// Claim one batch member for dispatch: return its staged depth slot, then
@@ -425,8 +684,13 @@ fn claim(queue: &JobQueue, core: &ServiceCore, job: &QueuedJob) -> bool {
     }
 }
 
-fn run_one(core: &ServiceCore, session: &SolveSession, job: &QueuedJob) -> Result<SolveOutput> {
-    let out = session.solve_with(&job.rhs, &job.options)?;
+fn run_one(
+    core: &ServiceCore,
+    session: &SolveSession,
+    job: &QueuedJob,
+    rhs: &[f64],
+) -> Result<SolveOutput> {
+    let out = session.solve_with(rhs, &job.options)?;
     core.note_solve();
     core.note_dispatches(out.report.dispatches);
     core.obs.record_solve(&out.report);

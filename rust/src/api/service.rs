@@ -30,9 +30,10 @@ use crate::coordinator::driver::{SolveOptions, SolveReport};
 use crate::coordinator::report::{micros, Table};
 use crate::coordinator::session::{CacheStats, PlanCache, PlanKey, SolveOutput, SolveSession};
 use crate::error::{HbmcError, Result};
-use crate::obs::metrics::{Counter, Histogram, MetricsRegistry, MetricsSnapshot};
+use crate::obs::metrics::{Counter, Gauge, Histogram, MetricsRegistry, MetricsSnapshot};
 use crate::obs::prometheus::{self, write_counter, write_gauge};
 use crate::obs::trace::{stage, TraceRecorder};
+use crate::resil::{BreakerState, CircuitBreaker, FaultInjector};
 use crate::solver::plan::SolverPlan;
 use crate::sparse::csr::Csr;
 use crate::tune::{tune_matrix, HardwareSignature, ProfileStore, TuneOptions, TunedProfile};
@@ -63,6 +64,10 @@ static NEXT_MATRIX_ID: AtomicU64 = AtomicU64::new(1);
 /// hashed once at registration (an O(nnz) scan) rather than per request.
 #[derive(Clone)]
 pub(crate) struct Registered {
+    /// The handle id this entry was registered under (keys the per-handle
+    /// circuit breaker from inside the dispatcher, where only the snapshot
+    /// travels with the job).
+    pub(crate) id: u64,
     pub(crate) matrix: Arc<Csr>,
     pub(crate) fingerprint: u64,
     /// Jobs currently in flight (submitted, not yet terminal) against this
@@ -236,6 +241,20 @@ pub(crate) fn mlock<T>(l: &Mutex<T>) -> MutexGuard<'_, T> {
     l.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
+/// Reject a right-hand side containing NaN/±Inf before it reaches the
+/// queue or the plan cache: one non-finite entry poisons every inner
+/// product of the CG iteration, so the solve can only end in a breakdown —
+/// fail it synchronously and name the first offending index instead.
+fn check_rhs_finite(rhs: &[f64]) -> Result<()> {
+    if let Some(i) = rhs.iter().position(|v| !v.is_finite()) {
+        return Err(HbmcError::invalid_config(format!(
+            "rhs[{i}] is {}; right-hand sides must be finite",
+            rhs[i]
+        )));
+    }
+    Ok(())
+}
+
 /// Observability state owned by the service core: the metric registry,
 /// the `Arc` handles the hot paths write through (no registry lookup per
 /// observation), and the bounded lifecycle-trace ring.
@@ -261,6 +280,16 @@ pub(crate) struct ServiceObs {
     pub(crate) overloaded_inflight: Arc<Counter>,
     /// Jobs shed at dispatch (deadline already expired).
     pub(crate) shed: Arc<Counter>,
+    /// Recovery-ladder retries, split by what failed (`crate::resil`).
+    pub(crate) retry_panic: Arc<Counter>,
+    pub(crate) retry_breakdown_factorization: Arc<Counter>,
+    pub(crate) retry_breakdown_iteration: Arc<Counter>,
+    pub(crate) retry_not_converged: Arc<Counter>,
+    /// Sessions whose pool was drained and rebuilt after a worker panic.
+    pub(crate) pool_rebuilds: Arc<Counter>,
+    /// Worst circuit-breaker state across handles (0=closed, 1=half-open,
+    /// 2=open); stays 0 with no breakers configured.
+    pub(crate) breaker_state: Arc<Gauge>,
     /// Cumulative per-phase time, µs, from report fields (see type docs).
     phase_setup: Arc<Counter>,
     phase_trisolve: Arc<Counter>,
@@ -295,6 +324,34 @@ impl ServiceObs {
             shed: r.counter(
                 "hbmc_shed_total",
                 "Jobs shed at dispatch because their deadline had expired.",
+            ),
+            retry_panic: r.counter_with(
+                "hbmc_retries_total",
+                "cause=\"panic\"",
+                "Recovery-ladder retries, by failure cause.",
+            ),
+            retry_breakdown_factorization: r.counter_with(
+                "hbmc_retries_total",
+                "cause=\"breakdown_factorization\"",
+                "Recovery-ladder retries, by failure cause.",
+            ),
+            retry_breakdown_iteration: r.counter_with(
+                "hbmc_retries_total",
+                "cause=\"breakdown_iteration\"",
+                "Recovery-ladder retries, by failure cause.",
+            ),
+            retry_not_converged: r.counter_with(
+                "hbmc_retries_total",
+                "cause=\"not_converged\"",
+                "Recovery-ladder retries, by failure cause.",
+            ),
+            pool_rebuilds: r.counter(
+                "hbmc_pool_rebuilds_total",
+                "Sessions whose pool was drained and rebuilt after a worker panic.",
+            ),
+            breaker_state: r.gauge(
+                "hbmc_breaker_state",
+                "Worst circuit-breaker state across handles (0=closed, 1=half-open, 2=open).",
             ),
             phase_setup: r.counter_with(
                 "hbmc_phase_microseconds_total",
@@ -366,6 +423,18 @@ impl ServiceObs {
         }
     }
 
+    /// Count one recovery-ladder retry under its cause label (the values
+    /// of [`RetryAttempt::cause`](crate::coordinator::driver::RetryAttempt)).
+    pub(crate) fn record_retry(&self, cause: &str) {
+        match cause {
+            "panic" => self.retry_panic.inc(),
+            "breakdown_factorization" => self.retry_breakdown_factorization.inc(),
+            "breakdown_iteration" => self.retry_breakdown_iteration.inc(),
+            "not_converged" => self.retry_not_converged.inc(),
+            _ => {}
+        }
+    }
+
     /// Fold one plan build's setup time in (build thread, after the build).
     pub(crate) fn record_setup(&self, setup_seconds: f64) {
         let us = (setup_seconds * 1e6) as u64;
@@ -408,6 +477,16 @@ pub(crate) struct ServiceCore {
     dispatches: AtomicU64,
     profile_hits: AtomicU64,
     tunes: AtomicU64,
+    /// The chaos-engineering fault injector, armed from
+    /// `SolverConfig::fault` at construction; `None` (the production
+    /// default) keeps every hook on the fault path a null check.
+    injector: Option<Arc<FaultInjector>>,
+    /// Consecutive-failure threshold for the per-handle circuit breakers;
+    /// `None` disables the breakers entirely.
+    breaker_threshold: Option<u32>,
+    /// Per-handle circuit breakers, created lazily at first submission
+    /// (only when `breaker_threshold` is set).
+    breakers: RwLock<HashMap<u64, Arc<CircuitBreaker>>>,
     /// Metrics, histograms, and the lifecycle-trace ring (see
     /// [`ServiceObs`]); written by request threads and the dispatcher.
     pub(crate) obs: ServiceObs,
@@ -448,7 +527,7 @@ impl ServiceCore {
             self.release_gate(&key, &gate);
             return Ok(plan);
         }
-        let result = SolverPlan::build(&reg.matrix, cfg).map(|plan| {
+        let result = SolverPlan::build_with(&reg.matrix, cfg, self.injector.as_deref()).map(|plan| {
             let plan = Arc::new(plan);
             self.builds.fetch_add(1, AtomicOrdering::Relaxed);
             self.obs.record_setup(plan.setup.setup_seconds());
@@ -499,6 +578,79 @@ impl ServiceCore {
     pub(crate) fn note_dispatches(&self, n: u64) {
         self.dispatches.fetch_add(n, AtomicOrdering::Relaxed);
     }
+
+    /// The service-wide fault injector, if one is armed (chaos runs only).
+    pub(crate) fn injector(&self) -> Option<&Arc<FaultInjector>> {
+        self.injector.as_ref()
+    }
+
+    /// The circuit breaker for a handle, created on first use. `None`
+    /// when breakers are disabled (`QueueConfig::breaker_threshold`).
+    pub(crate) fn breaker_for(&self, handle_id: u64) -> Option<Arc<CircuitBreaker>> {
+        let threshold = self.breaker_threshold?;
+        if let Some(b) = rlock(&self.breakers).get(&handle_id) {
+            return Some(Arc::clone(b));
+        }
+        Some(Arc::clone(
+            wlock(&self.breakers)
+                .entry(handle_id)
+                .or_insert_with(|| Arc::new(CircuitBreaker::new(threshold))),
+        ))
+    }
+
+    /// Fold one terminal job outcome into the handle's breaker and refresh
+    /// the worst-state gauge. Called by the dispatcher; callers exclude
+    /// outcomes that say nothing about the matrix (cancelled, deadline,
+    /// overloaded).
+    pub(crate) fn record_outcome(&self, handle_id: u64, ok: bool) {
+        if let Some(b) = self.breaker_for(handle_id) {
+            if ok {
+                b.record_success();
+            } else {
+                b.record_failure();
+            }
+            self.refresh_breaker_gauge();
+        }
+    }
+
+    /// Recompute the `hbmc_breaker_state` gauge as the worst state across
+    /// all breakers (0 when none exist).
+    fn refresh_breaker_gauge(&self) {
+        let worst = rlock(&self.breakers)
+            .values()
+            .map(|b| b.state().gauge_value())
+            .max()
+            .unwrap_or(0);
+        self.obs.breaker_state.set(worst as f64);
+    }
+
+    /// Service health for `/healthz`: `(healthy, body)`.
+    ///
+    /// * `unhealthy` (503) — breakers exist and every one of them is open:
+    ///   the service is rejecting all solve traffic it has seen.
+    /// * `degraded` (200) — some breaker is open/half-open, or jobs have
+    ///   been shed at dispatch; partial service.
+    /// * `ok` (200) otherwise.
+    pub(crate) fn health(&self) -> (bool, String) {
+        let states: Vec<BreakerState> =
+            rlock(&self.breakers).values().map(|b| b.state()).collect();
+        let open = states.iter().filter(|s| **s == BreakerState::Open).count();
+        let half = states.iter().filter(|s| **s == BreakerState::HalfOpen).count();
+        if !states.is_empty() && open == states.len() {
+            return (false, format!("unhealthy: all {open} circuit breaker(s) open\n"));
+        }
+        let shed = self.obs.shed.get();
+        if open > 0 || half > 0 {
+            return (
+                true,
+                format!("degraded: {open} breaker(s) open, {half} half-open\n"),
+            );
+        }
+        if shed > 0 {
+            return (true, format!("degraded: {shed} job(s) shed at dispatch\n"));
+        }
+        (true, "ok\n".to_string())
+    }
 }
 
 /// Thread-safe solve endpoint; see module docs. `Send + Sync` — share one
@@ -533,6 +685,8 @@ impl SolverService {
             return Err(HbmcError::invalid_config("plan cache capacity must be >= 1"));
         }
         let queue_cfg = default_cfg.queue;
+        let injector = default_cfg.fault.map(|spec| Arc::new(FaultInjector::new(spec)));
+        let breaker_threshold = queue_cfg.breaker_threshold;
         let core = Arc::new(ServiceCore {
             default_cfg,
             hardware: HardwareSignature::detect(),
@@ -547,6 +701,9 @@ impl SolverService {
             dispatches: AtomicU64::new(0),
             profile_hits: AtomicU64::new(0),
             tunes: AtomicU64::new(0),
+            injector,
+            breaker_threshold,
+            breakers: RwLock::new(HashMap::new()),
             obs: ServiceObs::new(&queue_cfg),
         });
         let queue = Arc::new(JobQueue::new(queue_cfg));
@@ -578,6 +735,7 @@ impl SolverService {
     pub fn register_matrix_arc(&self, a: Arc<Csr>) -> MatrixHandle {
         let id = NEXT_MATRIX_ID.fetch_add(1, AtomicOrdering::Relaxed);
         let entry = Registered {
+            id,
             fingerprint: a.fingerprint(),
             matrix: a,
             inflight: Arc::new(AtomicUsize::new(0)),
@@ -641,6 +799,7 @@ impl SolverService {
         if rhs.len() != n {
             return Err(HbmcError::DimensionMismatch { expected: n, got: rhs.len() });
         }
+        check_rhs_finite(rhs)?;
         if from_profile {
             self.core.profile_hits.fetch_add(1, AtomicOrdering::Relaxed);
         }
@@ -687,6 +846,13 @@ impl SolverService {
         if let Some(budget) = req.deadline {
             if budget.is_zero() {
                 return Err(HbmcError::DeadlineExceeded { budget });
+            }
+        }
+        // Per-handle circuit breaker: a handle whose recent solves keep
+        // failing is rejected at the door until a half-open probe succeeds.
+        if let Some(breaker) = self.core.breaker_for(reg.id) {
+            if let Err(failures) = breaker.admit() {
+                return Err(HbmcError::CircuitOpen { handle: reg.id, failures });
             }
         }
         let inflight = match self.core.default_cfg.queue.max_inflight_per_handle {
@@ -783,6 +949,7 @@ impl SolverService {
             if got != n {
                 return Err(HbmcError::DimensionMismatch { expected: n, got });
             }
+            check_rhs_finite(b.as_ref())?;
         }
         // Everything is validated; enqueue without re-checking per rhs.
         if from_profile {
@@ -1038,6 +1205,16 @@ impl SolverService {
         self.core.obs.snapshot()
     }
 
+    /// Service health as `(healthy, body)` — what
+    /// [`MetricsServer::spawn_with_health`](crate::obs::MetricsServer::spawn_with_health)
+    /// serves on `/healthz`. `healthy == false` (HTTP 503) when circuit
+    /// breakers exist and every one is open; `true` with a `degraded: …`
+    /// body when some breaker is open/half-open or jobs have been shed;
+    /// `("ok\n", true)` otherwise.
+    pub fn health(&self) -> (bool, String) {
+        self.core.health()
+    }
+
     /// The lifecycle-trace ring as a JSON array of
     /// `{"job","stage","t_us","detail"}` events, oldest first. Empty
     /// (`[]`) unless `QueueConfig::trace_sample` is non-zero.
@@ -1099,10 +1276,11 @@ impl Drop for SolverService {
     /// Graceful shutdown: stop accepting jobs, let the dispatcher flush
     /// everything already queued, then join it. Every outstanding
     /// `JobHandle` resolves — queued jobs run (or expire/cancel), none are
-    /// abandoned mid-wait — with one caveat: if a multi-threaded pool was
-    /// wedged by a mid-color-loop worker panic (the residual gap
-    /// documented in `pool.rs`), the dispatcher is stuck inside that solve
-    /// and this join inherits the hang rather than abandoning the thread.
+    /// abandoned mid-wait. A worker panic mid-solve no longer wedges this
+    /// join: the dispatcher catches it, drains the poisoned pool with a
+    /// bounded timeout (`Pool::drain`), and continues on a fresh session
+    /// (see `crate::resil` and the "Resilience" section of
+    /// ARCHITECTURE.md).
     fn drop(&mut self) {
         self.queue.shutdown();
         if let Some(dispatcher) = self.dispatcher.take() {
@@ -1368,6 +1546,9 @@ mod tests {
             "hbmc_trace_events_dropped_total",
             "hbmc_overloaded_total",
             "hbmc_shed_total",
+            "hbmc_retries_total",
+            "hbmc_pool_rebuilds_total",
+            "hbmc_breaker_state",
             "hbmc_phase_microseconds_total",
             "hbmc_queue_wait_microseconds",
             "hbmc_batch_width",
@@ -1409,6 +1590,41 @@ mod tests {
         for stage in ["submitted", "enqueued", "batch_opened", "dispatched", "completed"] {
             assert!(json.contains(&format!("\"stage\":\"{stage}\"")), "{json}");
         }
+    }
+
+    #[test]
+    fn circuit_breaker_opens_trips_health_and_recovers() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let mut cfg = tiny_cfg(OrderingKind::Hbmc);
+        cfg.queue.breaker_threshold = Some(2);
+        let svc = SolverService::with_config(cfg).unwrap();
+        let h = svc.register_matrix(d.matrix.clone());
+        assert_eq!(svc.health(), (true, "ok\n".to_string()));
+        // Two consecutive typed failures open the breaker (no retry budget,
+        // so the stalled solves are final failures).
+        let stall = SolveRequest::new().max_iters(1).require_convergence();
+        for _ in 0..2 {
+            let err = svc.solve_with(h, &d.b, &stall).unwrap_err();
+            assert!(matches!(err, HbmcError::NotConverged { .. }), "{err:?}");
+        }
+        // The next submissions are rejected synchronously and typed; each
+        // rejection advances the count-based cooldown toward half-open.
+        for _ in 0..2 {
+            let err = svc.submit(h, &d.b, &SolveRequest::new()).unwrap_err();
+            assert!(
+                matches!(err, HbmcError::CircuitOpen { failures: 2, .. }),
+                "{err:?}"
+            );
+        }
+        let (healthy, body) = svc.health();
+        assert!(!healthy && body.starts_with("unhealthy:"), "{body}");
+        assert!(svc.metrics_text().contains("hbmc_breaker_state 2\n"));
+        // Half-open now: the single probe is admitted, succeeds, and closes
+        // the breaker — service healthy again.
+        let out = svc.solve(h, &d.b).unwrap();
+        assert!(out.report.converged);
+        assert_eq!(svc.health(), (true, "ok\n".to_string()));
+        assert!(svc.metrics_text().contains("hbmc_breaker_state 0\n"));
     }
 
     #[test]

@@ -13,9 +13,11 @@ pub struct Args {
     switches: Vec<String>,
 }
 
-/// Flags that take no value.
-const SWITCHES: [&str; 7] =
-    ["history", "verbose", "no-intrinsics", "help", "setup-only", "auto", "quick"];
+/// Flags that take no value. (`--retry`, `--breaker-threshold` and
+/// `--inject` take values, so they must NOT be listed here; `--chaos` is
+/// the consent switch that arms `--inject`.)
+const SWITCHES: [&str; 8] =
+    ["history", "verbose", "no-intrinsics", "help", "setup-only", "auto", "quick", "chaos"];
 
 impl Args {
     /// Parse from an iterator of arguments (program name excluded).
@@ -123,6 +125,18 @@ mod tests {
         let a = parse("stats --from 127.0.0.1:9184").unwrap();
         assert_eq!(a.command, "stats");
         assert_eq!(a.flag("from"), Some("127.0.0.1:9184"));
+    }
+
+    #[test]
+    fn chaos_and_resilience_flags() {
+        // --retry / --breaker-threshold / --inject take values; --chaos is
+        // the consent switch.
+        let a = parse("solve --dataset ieej --chaos --inject panic:fwd:2 --retry 2").unwrap();
+        assert!(a.switch("chaos"));
+        assert_eq!(a.flag("inject"), Some("panic:fwd:2"));
+        assert_eq!(a.usize_flag("retry", 0).unwrap(), 2);
+        let a = parse("serve --dataset ieej --breaker-threshold 5").unwrap();
+        assert_eq!(a.usize_flag("breaker-threshold", 0).unwrap(), 5);
     }
 
     #[test]

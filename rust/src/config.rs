@@ -19,6 +19,7 @@ use std::str::FromStr;
 use std::time::Duration;
 
 use crate::error::{HbmcError, Result};
+use crate::resil::{FaultSpec, RetryPolicy};
 
 /// Which parallel ordering drives the triangular solver.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -178,6 +179,13 @@ pub struct QueueConfig {
     /// bounded `TraceRecorder` (`SolverService::trace_json`). `0` (the
     /// default) disables tracing; `1` traces every job.
     pub trace_sample: usize,
+    /// Consecutive-failure threshold arming a per-`MatrixHandle` circuit
+    /// breaker (`resil::CircuitBreaker`): after this many consecutive job
+    /// failures on one handle, further submissions for it fast-reject with
+    /// `HbmcError::CircuitOpen` until a cooldown and a successful probe.
+    /// `None` (the default) disables the breaker; `Some(0)` is rejected by
+    /// [`SolverConfig::validate`].
+    pub breaker_threshold: Option<u32>,
 }
 
 impl Default for QueueConfig {
@@ -193,6 +201,7 @@ impl Default for QueueConfig {
             max_queue_depth: None,
             max_inflight_per_handle: None,
             trace_sample: 0,
+            breaker_threshold: None,
         }
     }
 }
@@ -223,6 +232,14 @@ pub struct SolverConfig {
     pub use_intrinsics: bool,
     /// Job-queue dispatcher tuning (service-level; see [`QueueConfig`]).
     pub queue: QueueConfig,
+    /// Recovery policy for the dispatcher's fallback ladder (per-request;
+    /// see [`RetryPolicy`]). Not part of the plan-cache or batch key.
+    pub retry: RetryPolicy,
+    /// Deterministic fault injection for chaos testing
+    /// (`resil::FaultSpec`). Service-level like `queue`: read once at
+    /// service construction, `None` (the default) in production — the CLI
+    /// additionally refuses `--inject` without `--chaos`.
+    pub fault: Option<FaultSpec>,
 }
 
 impl Default for SolverConfig {
@@ -239,6 +256,8 @@ impl Default for SolverConfig {
             shift: 0.0,
             use_intrinsics: true,
             queue: QueueConfig::default(),
+            retry: RetryPolicy::default(),
+            fault: None,
         }
     }
 }
@@ -394,6 +413,13 @@ impl SolverConfig {
                 "queue.max_inflight_per_handle must be >= 1 when set (use None for no quota)",
             ));
         }
+        // A breaker that opens after zero failures would reject everything;
+        // "no breaker" is spelled None.
+        if self.queue.breaker_threshold == Some(0) {
+            return Err(HbmcError::invalid_config(
+                "queue.breaker_threshold must be >= 1 when set (use None to disable)",
+            ));
+        }
         Ok(())
     }
 }
@@ -494,6 +520,28 @@ impl SolverConfigBuilder {
     /// [`QueueConfig::trace_sample`].
     pub fn trace_sample(mut self, n: usize) -> Self {
         self.cfg.queue.trace_sample = n;
+        self
+    }
+
+    /// Allow up to `n` recovery attempts per job after its first failure
+    /// (`0`, the default, fails fast); see [`RetryPolicy`].
+    pub fn max_retries(mut self, n: u32) -> Self {
+        self.cfg.retry = RetryPolicy::retries(n);
+        self
+    }
+
+    /// Arm a per-handle circuit breaker opening after `threshold`
+    /// consecutive failures (`None` disables); see
+    /// [`QueueConfig::breaker_threshold`].
+    pub fn breaker_threshold(mut self, threshold: Option<u32>) -> Self {
+        self.cfg.queue.breaker_threshold = threshold;
+        self
+    }
+
+    /// Arm deterministic fault injection (`None`, the default, disables);
+    /// see [`FaultSpec`]. Chaos testing only.
+    pub fn fault(mut self, fault: Option<FaultSpec>) -> Self {
+        self.cfg.fault = fault;
         self
     }
 
@@ -610,6 +658,29 @@ mod tests {
         let err =
             SolverConfig::builder().max_inflight_per_handle(Some(0)).build().unwrap_err();
         assert!(err.to_string().contains("max_inflight_per_handle"), "{err}");
+    }
+
+    #[test]
+    fn resilience_knobs_validate_and_build() {
+        // Defaults: fail fast, no breaker, no injection.
+        let cfg = SolverConfig::default();
+        assert_eq!(cfg.retry.max_retries, 0);
+        assert_eq!(cfg.queue.breaker_threshold, None);
+        assert_eq!(cfg.fault, None);
+        let cfg = SolverConfig::builder()
+            .max_retries(2)
+            .breaker_threshold(Some(3))
+            .fault(Some("breakdown:5".parse().unwrap()))
+            .build()
+            .unwrap();
+        assert_eq!(cfg.retry, RetryPolicy::retries(2));
+        assert_eq!(cfg.queue.breaker_threshold, Some(3));
+        assert_eq!(cfg.fault, Some(FaultSpec::PivotBreakdown { row: 5 }));
+        // A breaker opening after zero failures rejects everything;
+        // "disabled" is None.
+        let err = SolverConfig::builder().breaker_threshold(Some(0)).build().unwrap_err();
+        assert!(matches!(err, HbmcError::InvalidConfig(_)), "{err:?}");
+        assert!(err.to_string().contains("breaker_threshold"), "{err}");
     }
 
     #[test]

@@ -99,6 +99,20 @@ impl PlanReport {
     }
 }
 
+/// One recovery attempt the dispatcher's retry ladder performed before
+/// this solve succeeded (or gave up) — see `crate::resil`.
+#[derive(Debug, Clone)]
+pub struct RetryAttempt {
+    /// What failed: `"panic"`, `"breakdown_factorization"`,
+    /// `"breakdown_iteration"` or `"not_converged"` (the label values of
+    /// the `hbmc_retries_total{cause=…}` metric family).
+    pub cause: &'static str,
+    /// What the ladder did about it, human-readable (e.g.
+    /// `"re-plan with escalated shift 0.02"`, `"fallback to level
+    /// ordering"`, `"pool rebuilt; retried on fresh session"`).
+    pub action: String,
+}
+
 /// Everything the benches/tables/CLI report about one solve.
 #[derive(Debug, Clone)]
 pub struct SolveReport {
@@ -123,6 +137,12 @@ pub struct SolveReport {
     pub pool_syncs: u64,
     /// 0-based index of this solve on its plan (amortization counter).
     pub solve_index: usize,
+    /// How many times the dispatcher's recovery ladder re-ran this job
+    /// before producing this report (0 = first attempt succeeded).
+    pub retries: u32,
+    /// Per-retry cause + recovery action, in order (empty when
+    /// `retries == 0`).
+    pub attempts: Vec<RetryAttempt>,
     /// The setup-phase metrics of the plan this solve ran on.
     pub plan: PlanReport,
 }
@@ -142,6 +162,10 @@ impl SolveReport {
             dispatches: 0,
             pool_syncs: 0,
             solve_index,
+            // Filled in by the dispatcher when its recovery ladder re-ran
+            // the job.
+            retries: 0,
+            attempts: Vec::new(),
             plan: PlanReport::of(plan),
         }
     }

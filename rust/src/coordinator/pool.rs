@@ -33,6 +33,19 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::resil::FaultInjector;
+
+/// Process-wide count of worker threads detached (never joined) by
+/// [`Pool::drain`] because they failed to park within the grace period —
+/// a desynchronized-barrier casualty. Monotonic; chaos tests assert it
+/// does not grow across a recovery (clean rebuilds join everything).
+static LEAKED_WORKERS: AtomicU64 = AtomicU64::new(0);
+
+/// Read [`LEAKED_WORKERS`]; see [`Pool::drain`].
+pub fn leaked_workers() -> u64 {
+    LEAKED_WORKERS.load(Ordering::SeqCst)
+}
+
 /// One per-thread reduction slot, padded to two cache lines so neighbour
 /// threads never false-share while writing partials. Double-buffered
 /// (`vals[parity]`): a thread may enter reduction `k + 1` and overwrite one
@@ -79,6 +92,9 @@ struct Shared {
     /// worker (which would leave every later `run` waiting forever on a
     /// short barrier).
     worker_panicked: AtomicBool,
+    /// Deterministic fault injection (chaos testing; see `crate::resil`).
+    /// `None` in production: the only cost is this null check per barrier.
+    injector: Option<Arc<FaultInjector>>,
 }
 
 /// Persistent worker pool; see module docs.
@@ -90,6 +106,14 @@ pub struct Pool {
 impl Pool {
     /// Create a pool with `nthreads` total workers (including the caller).
     pub fn new(nthreads: usize) -> Pool {
+        Pool::with_injector(nthreads, None)
+    }
+
+    /// [`Pool::new`] with an armed fault injector: every
+    /// [`Pool::color_barrier`] / [`Pool::phase_barrier`] crossing reports
+    /// its exact logical barrier index to the injector's panic hook, so a
+    /// `FaultSpec::WorkerPanic` fires on **all** threads in lockstep.
+    pub fn with_injector(nthreads: usize, injector: Option<Arc<FaultInjector>>) -> Pool {
         assert!(nthreads >= 1);
         let shared = Arc::new(Shared {
             nthreads,
@@ -107,6 +131,7 @@ impl Pool {
                 .collect(),
             active_jobs: AtomicUsize::new(0),
             worker_panicked: AtomicBool::new(false),
+            injector,
         });
         let handles = (1..nthreads)
             .map(|tid| {
@@ -153,27 +178,50 @@ impl Pool {
             slot.1 = Some(ptr);
             self.shared.job_cv.notify_all();
         }
-        f(0, n);
+        // The caller participates as worker 0, but its panic must not skip
+        // the completion barrier: the workers always arrive there (their
+        // panics are caught in `worker_loop`), and a caller that unwound
+        // past it would leave them waiting forever. Catch, complete the
+        // protocol, then re-raise.
+        let caller_panic =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0, n))).err();
         self.shared.barrier.wait(); // completion
         self.shared.active_jobs.store(0, Ordering::SeqCst);
-        if self.shared.worker_panicked.swap(false, Ordering::SeqCst) {
+        let worker_panicked = self.shared.worker_panicked.swap(false, Ordering::SeqCst);
+        if let Some(p) = caller_panic {
+            std::panic::resume_unwind(p);
+        }
+        if worker_panicked {
             // Re-raise on the calling thread: the job's output is not
             // trustworthy, and the caller (not a detached worker) is the
             // one positioned to contain it. Note: if the panic happened
             // between color barriers the pool's barrier generations may be
-            // desynchronized — treat the pool as poisoned and do not reuse
-            // it (the service dispatcher leaks such sessions on purpose).
+            // desynchronized — treat the pool as poisoned; the service
+            // dispatcher recovers by draining the session's pool
+            // ([`Pool::drain`]) and rebuilding it on a fresh one.
             panic!("pool worker panicked during job");
         }
     }
 
     /// Intra-job synchronization point (one per color transition).
     pub fn color_barrier(&self) {
+        // Count per-thread waits normalized to whole-pool syncs on read.
+        // The increment happens *before* the wait so `prev / nthreads` is
+        // the exact logical barrier index, identical on every thread
+        // crossing it: the `Barrier` keeps any thread from fetching for
+        // barrier `k + 1` until all `nthreads` have fetched for `k`, so the
+        // fetches for barrier `k` are exactly `[k·nt, (k+1)·nt)`.
+        let prev = self.shared.syncs.fetch_add(1, Ordering::Relaxed);
+        if let Some(inj) = &self.shared.injector {
+            // May panic (injected worker panic) — and then panics on every
+            // thread at the same index, *before* any of them waits, so the
+            // barrier generation stays synchronized and the pool remains
+            // drainable afterwards.
+            inj.barrier_hook(prev / self.shared.nthreads as u64);
+        }
         if self.shared.nthreads > 1 {
             self.shared.barrier.wait();
         }
-        // Count per-thread waits normalized to whole-pool syncs on read.
-        self.shared.syncs.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Phase boundary inside a persistent SPMD region (the single-dispatch
@@ -256,6 +304,50 @@ impl Pool {
         let hi = ((tid + 1) * per).min(len);
         lo..hi
     }
+
+    /// Tear the pool down with a bounded grace period, reporting how many
+    /// workers had to be **detached** (leaked) because they never parked.
+    ///
+    /// This is the dispatcher's recovery path after a worker panic: signal
+    /// shutdown, wake every parked worker, then give each thread ~500 ms
+    /// total to exit. Workers that finish are joined; a worker stuck on a
+    /// desynchronized barrier generation can never be joined, so its handle
+    /// is dropped (the thread is leaked) and counted — both in the return
+    /// value and in the process-wide [`leaked_workers`] counter that the
+    /// chaos tests assert stays flat across clean recoveries.
+    ///
+    /// After a *lockstep* panic (all threads panicking at the same barrier
+    /// index, which is what the fault injector guarantees) the workers are
+    /// parked on the job condvar and drain joins all of them: zero leaks.
+    pub fn drain(mut self) -> usize {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        {
+            let mut slot = self.shared.job.lock().unwrap();
+            slot.0 += 1;
+            self.shared.job_cv.notify_all();
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_millis(500);
+        let mut leaked = 0usize;
+        for h in self.handles.drain(..) {
+            loop {
+                if h.is_finished() {
+                    let _ = h.join();
+                    break;
+                }
+                if std::time::Instant::now() >= deadline {
+                    // Detaching leaks the thread (and its Arc<Shared>), but
+                    // frees the caller to rebuild instead of hanging.
+                    LEAKED_WORKERS.fetch_add(1, Ordering::SeqCst);
+                    leaked += 1;
+                    drop(h);
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        // `handles` is empty now, so the Drop impl joins nothing.
+        leaked
+    }
 }
 
 impl Drop for Pool {
@@ -295,12 +387,14 @@ fn worker_loop(sh: Arc<Shared>, tid: usize) {
             // short. Catch it, flag it, and still arrive at the completion
             // barrier; `run` re-raises on the caller. Best-effort only:
             // this restores the protocol when the panic happens outside a
-            // color loop (or after its last barrier). A worker panicking
-            // with ≥ 2 color barriers still ahead deserts those waits and
-            // the one shared `Barrier` stays desynchronized — the
-            // remaining participants hang, which a std Barrier cannot
-            // express (no poisoning). Callers that must survive that
-            // (the service dispatcher) need their own watchdog/isolation.
+            // color loop (or after its last barrier) — or on *every* thread
+            // at the same barrier index, which is what the fault injector's
+            // lockstep panics guarantee. A worker panicking alone with ≥ 2
+            // color barriers still ahead deserts those waits and the one
+            // shared `Barrier` stays desynchronized — the remaining
+            // participants hang, which a std Barrier cannot express (no
+            // poisoning). [`Pool::drain`] bounds that hang: it joins what
+            // it can and detaches (counts) the rest.
             if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(tid, sh.nthreads)))
                 .is_err()
             {
@@ -534,6 +628,82 @@ mod tests {
             seen.push(out.into_inner().unwrap());
         }
         assert!(seen.windows(2).all(|w| w[0].to_bits() == w[1].to_bits()));
+    }
+
+    #[test]
+    fn caller_panic_completes_the_protocol_and_pool_stays_usable() {
+        // Worker 0 (the caller) panics; workers 1..n finish normally. The
+        // caller must still arrive at the completion barrier before
+        // re-raising, so the pool is not desynchronized and remains both
+        // reusable and cleanly drainable.
+        let pool = Pool::new(3);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|tid, _| {
+                if tid == 0 {
+                    panic!("caller boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        let hits = AtomicUsize::new(0);
+        pool.run(&|_, _| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+        let before = leaked_workers();
+        assert_eq!(pool.drain(), 0);
+        assert_eq!(leaked_workers(), before);
+    }
+
+    #[test]
+    fn injected_lockstep_panic_fires_at_the_exact_barrier_and_drains_clean() {
+        use crate::resil::{FaultInjector, FaultPhase, FaultSpec};
+        for nt in [1usize, 4] {
+            let inj = Arc::new(FaultInjector::new(FaultSpec::WorkerPanic {
+                phase: FaultPhase::Any,
+                barrier: 1,
+            }));
+            let pool = Pool::with_injector(nt, Some(Arc::clone(&inj)));
+            let past = AtomicUsize::new(0);
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.run(&|_, _| {
+                    pool.color_barrier(); // index 0 — survives
+                    past.fetch_add(1, Ordering::SeqCst);
+                    pool.color_barrier(); // index 1 — every thread panics here
+                    panic!("must not reach barrier index 2");
+                });
+            }));
+            assert!(r.is_err(), "nt={nt}");
+            // All threads crossed barrier 0 and none crossed barrier 1.
+            assert_eq!(past.load(Ordering::SeqCst), nt, "nt={nt}");
+            // The hook only *reads* the charge; the dispatcher consumes it
+            // when it decides to retry. Consume here so the pool is clean.
+            assert!(inj.armed());
+            assert!(inj.consume_panic());
+            let hits = AtomicUsize::new(0);
+            pool.run(&|_, _| {
+                pool.color_barrier();
+                pool.color_barrier();
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(hits.load(Ordering::SeqCst), nt, "nt={nt}");
+            // Lockstep panic kept the barrier generations synchronized, so
+            // drain joins every worker: zero leaks.
+            let before = leaked_workers();
+            assert_eq!(pool.drain(), 0, "nt={nt}");
+            assert_eq!(leaked_workers(), before);
+        }
+    }
+
+    #[test]
+    fn drain_joins_all_workers_after_clean_jobs() {
+        let pool = Pool::new(4);
+        pool.run(&|_, _| {
+            pool.color_barrier();
+        });
+        let before = leaked_workers();
+        assert_eq!(pool.drain(), 0);
+        assert_eq!(leaked_workers(), before);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use crate::config::{OrderingKind, SolverConfig, SpmvKind};
 use crate::coordinator::driver::{SolveOptions, SolveReport};
 use crate::coordinator::pool::Pool;
 use crate::error::Result;
+use crate::resil::FaultInjector;
 use crate::solver::plan::{ExecOptions, SolverPlan};
 use crate::sparse::csr::Csr;
 
@@ -74,10 +75,24 @@ impl SolveSession {
     /// convergence controls from the requesting config rather than from
     /// the config the plan was originally built under.
     pub fn for_request(plan: Arc<SolverPlan>, cfg: &SolverConfig) -> SolveSession {
-        let mut s = SolveSession::with_threads(plan, cfg.threads);
-        s.rtol = cfg.rtol;
-        s.max_iters = cfg.max_iters;
-        s
+        SolveSession::for_request_with(plan, cfg, None)
+    }
+
+    /// [`SolveSession::for_request`] with a fault injector threaded into
+    /// the pool (chaos testing; see `crate::resil`). `None` is the
+    /// production path and behaves exactly like `for_request`.
+    pub fn for_request_with(
+        plan: Arc<SolverPlan>,
+        cfg: &SolverConfig,
+        injector: Option<Arc<FaultInjector>>,
+    ) -> SolveSession {
+        SolveSession {
+            plan,
+            pool: Pool::with_injector(cfg.threads, injector),
+            solves: AtomicUsize::new(0),
+            rtol: cfg.rtol,
+            max_iters: cfg.max_iters,
+        }
     }
 
     /// Build the plan and the session in one step (the one-shot path).
@@ -98,6 +113,14 @@ impl SolveSession {
     /// Number of solves completed on this session.
     pub fn solves_completed(&self) -> usize {
         self.solves.load(AtomicOrdering::Relaxed)
+    }
+
+    /// Consume the session and tear its pool down with a bounded grace
+    /// period, returning how many worker threads had to be detached
+    /// (see [`Pool::drain`]). The dispatcher's panic-recovery path calls
+    /// this instead of leaking a possibly-desynchronized session.
+    pub fn drain(self) -> usize {
+        self.pool.drain()
     }
 
     /// Solve `A x = b` with default options.

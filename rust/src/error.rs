@@ -27,6 +27,14 @@
 //! * [`Overloaded`](HbmcError::Overloaded) — admission control rejected a
 //!   submission synchronously: the queue was at `max_queue_depth`, or the
 //!   handle at `max_inflight_per_handle` (see `QueueConfig`),
+//! * [`BreakdownInIteration`](HbmcError::BreakdownInIteration) — the CG
+//!   loop caught a non-finite or non-positive reduction (`rz` or `pq`) at
+//!   one of its existing per-iteration reduction sites instead of silently
+//!   iterating on NaNs to the cap (see `solver::cg`),
+//! * [`CircuitOpen`](HbmcError::CircuitOpen) — the per-`MatrixHandle`
+//!   circuit breaker tripped on consecutive failures and is rejecting
+//!   submissions for that handle while it cools down (see
+//!   `resil::CircuitBreaker`),
 //! * [`Io`](HbmcError::Io) — an underlying I/O failure, with the path or
 //!   operation as context.
 //!
@@ -86,6 +94,18 @@ pub enum HbmcError {
     /// `max_inflight_per_handle`). The caller should retry after draining
     /// some of its outstanding work.
     Overloaded { depth: usize, limit: usize },
+    /// The CG loop caught a non-finite or non-positive reduction value at
+    /// one of its existing per-iteration reduction sites. `iter` is the
+    /// iteration at which the value was observed (0 = the initial
+    /// residual), `quantity` names the reduction (`"rz"` or `"pq"`). The
+    /// dispatcher's retry ladder treats this as a poisoned plan or RHS and
+    /// rebuilds before retrying (see `resil`).
+    BreakdownInIteration { iter: usize, quantity: &'static str },
+    /// The per-`MatrixHandle` circuit breaker is open: `failures`
+    /// consecutive jobs on handle `handle` failed, so submissions for that
+    /// handle are rejected synchronously while the breaker cools down
+    /// (see `resil::CircuitBreaker` and `QueueConfig::breaker_threshold`).
+    CircuitOpen { handle: u64, failures: u32 },
     /// Underlying I/O failure; `context` names the path or operation.
     Io {
         context: String,
@@ -143,6 +163,14 @@ impl fmt::Display for HbmcError {
             HbmcError::Overloaded { depth, limit } => {
                 write!(f, "service overloaded: {depth} jobs against a limit of {limit}")
             }
+            HbmcError::BreakdownInIteration { iter, quantity } => write!(
+                f,
+                "CG breakdown at iteration {iter}: non-finite or non-positive {quantity}"
+            ),
+            HbmcError::CircuitOpen { handle, failures } => write!(
+                f,
+                "circuit breaker open for matrix handle #{handle} after {failures} consecutive failures"
+            ),
             HbmcError::Io { context, source } => {
                 if context.is_empty() {
                     write!(f, "I/O error: {source}")
@@ -185,6 +213,12 @@ impl Clone for HbmcError {
             HbmcError::Cancelled => HbmcError::Cancelled,
             HbmcError::Overloaded { depth, limit } => {
                 HbmcError::Overloaded { depth: *depth, limit: *limit }
+            }
+            HbmcError::BreakdownInIteration { iter, quantity } => {
+                HbmcError::BreakdownInIteration { iter: *iter, quantity }
+            }
+            HbmcError::CircuitOpen { handle, failures } => {
+                HbmcError::CircuitOpen { handle: *handle, failures: *failures }
             }
             HbmcError::Io { context, source } => HbmcError::Io {
                 context: context.clone(),
@@ -244,6 +278,14 @@ mod tests {
         assert!(HbmcError::Cancelled.to_string().contains("cancelled"));
         let ov = HbmcError::Overloaded { depth: 64, limit: 64 };
         assert_eq!(ov.to_string(), "service overloaded: 64 jobs against a limit of 64");
+        let bi = HbmcError::BreakdownInIteration { iter: 3, quantity: "pq" };
+        assert_eq!(
+            bi.to_string(),
+            "CG breakdown at iteration 3: non-finite or non-positive pq"
+        );
+        let co = HbmcError::CircuitOpen { handle: 5, failures: 4 };
+        assert!(co.to_string().contains("handle #5"), "{co}");
+        assert!(co.to_string().contains("4 consecutive failures"), "{co}");
     }
 
     #[test]
@@ -257,6 +299,13 @@ mod tests {
         assert!(matches!(cloned, HbmcError::Io { .. }), "{cloned:?}");
         assert!(cloned.to_string().contains("disk on fire"));
         assert!(cloned.to_string().starts_with("reading b.mtx"));
+        let bi = HbmcError::BreakdownInIteration { iter: 11, quantity: "rz" };
+        assert!(matches!(
+            bi.clone(),
+            HbmcError::BreakdownInIteration { iter: 11, quantity: "rz" }
+        ));
+        let co = HbmcError::CircuitOpen { handle: 2, failures: 3 };
+        assert!(matches!(co.clone(), HbmcError::CircuitOpen { handle: 2, failures: 3 }));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! before factorization.
 
 use crate::error::{HbmcError, Result};
+use crate::resil::FaultInjector;
 use crate::sparse::csr::Csr;
 
 /// IC(0) factor: `L` lower-triangular including the diagonal.
@@ -74,6 +75,13 @@ impl IcFactor {
 /// Fails on non-positive pivots (caller may retry with a larger shift —
 /// see [`ic0_auto`]).
 pub fn ic0(a: &Csr, shift: f64) -> Result<IcFactor> {
+    ic0_inner(a, shift, None)
+}
+
+/// The actual factorization; `forced_break_row` is the fault-injection
+/// hook (`FaultSpec::PivotBreakdown`): reaching that row fails exactly as a
+/// genuine non-positive pivot would.
+fn ic0_inner(a: &Csr, shift: f64, forced_break_row: Option<usize>) -> Result<IcFactor> {
     let n = a.n();
     let lower_a = a.lower_strict();
     // L has the pattern of strict lower(A); values computed in place.
@@ -87,6 +95,13 @@ pub fn ic0(a: &Csr, shift: f64) -> Result<IcFactor> {
     let mut in_row = vec![false; n];
 
     for i in 0..n {
+        if forced_break_row == Some(i) {
+            return Err(HbmcError::BreakdownInFactorization {
+                row: Some(i),
+                shift,
+                detail: "injected pivot breakdown".into(),
+            });
+        }
         let (cols, avals) = lower_a.row(i);
         for (c, v) in cols.iter().zip(avals) {
             scratch[*c as usize] = *v;
@@ -154,31 +169,68 @@ pub fn ic0(a: &Csr, shift: f64) -> Result<IcFactor> {
     Ok(IcFactor { lower: l, diag, diag_inv, shift })
 }
 
-/// IC(0) with automatic shift escalation: tries `σ`, then doubles from
-/// `max(σ, 0.01)` until the factorization succeeds (up to σ = 10).
+/// The shift schedule [`ic0_auto`] escalates through after the caller's
+/// own `σ` fails: doubling from `max(σ, 0.01)`, capped at 10.0. Exposed so
+/// callers (and tests) can reason about exactly which shifts a recovery
+/// will try — the dispatcher's retry ladder restarts the schedule from the
+/// reported last-tried shift.
+pub fn escalation_shifts(shift: f64) -> Vec<f64> {
+    let mut out = Vec::new();
+    let mut s = shift.max(0.01);
+    loop {
+        s *= 2.0;
+        if s > 10.0 {
+            return out;
+        }
+        out.push(s);
+    }
+}
+
+/// IC(0) with automatic shift escalation: tries `σ`, then the
+/// [`escalation_shifts`] schedule until the factorization succeeds. The
+/// error's `shift` field reports the shift of the *last attempt actually
+/// made* (previously it could name a never-tried value).
 pub fn ic0_auto(a: &Csr, shift: f64) -> Result<IcFactor> {
-    match ic0(a, shift) {
-        Ok(f) => Ok(f),
-        Err(_) => {
-            let mut s = shift.max(0.01);
-            loop {
-                s *= 2.0;
-                if s > 10.0 {
-                    return Err(HbmcError::BreakdownInFactorization {
-                        row: None,
-                        // s itself was never tried; report the last shift
-                        // that actually ran (s/2, or the caller's on the
-                        // first round).
-                        shift: (s / 2.0).max(shift),
-                        detail: "ic0_auto: no successful shift up to 10.0".into(),
-                    });
-                }
-                if let Ok(f) = ic0(a, s) {
-                    return Ok(f);
-                }
-            }
+    ic0_auto_with(a, shift, None)
+}
+
+/// [`ic0_auto`] with an optional fault injector (chaos testing). A pending
+/// `PivotBreakdown` charge is consumed once, at entry, and forces *every*
+/// shift attempt of this call to break at its row — so the whole build
+/// fails typed and recovery happens in the dispatcher's ladder, not here.
+/// A pending `NanFactor` charge poisons one diagonal entry of an otherwise
+/// successful factor.
+pub fn ic0_auto_with(a: &Csr, shift: f64, inj: Option<&FaultInjector>) -> Result<IcFactor> {
+    let forced_row = inj.and_then(|i| i.take_pivot_breakdown());
+    let mut f = ic0_auto_forced(a, shift, forced_row)?;
+    if let Some(idx) = inj.and_then(|i| i.take_nan_factor()) {
+        let n = f.diag.len();
+        if n > 0 {
+            f.diag[idx % n] = f64::NAN;
+            f.diag_inv[idx % n] = f64::NAN;
         }
     }
+    Ok(f)
+}
+
+fn ic0_auto_forced(a: &Csr, shift: f64, forced_row: Option<usize>) -> Result<IcFactor> {
+    let mut last_tried = shift;
+    if let Ok(f) = ic0_inner(a, shift, forced_row) {
+        return Ok(f);
+    }
+    for s in escalation_shifts(shift) {
+        last_tried = s;
+        if let Ok(f) = ic0_inner(a, s, forced_row) {
+            return Ok(f);
+        }
+    }
+    Err(HbmcError::BreakdownInFactorization {
+        row: None,
+        shift: last_tried,
+        detail: format!(
+            "ic0_auto: no successful shift (last tried {last_tried}, schedule capped at 10.0)"
+        ),
+    })
 }
 
 #[cfg(test)]
@@ -271,6 +323,57 @@ mod tests {
         let f = ic0_auto(&a, 0.0).unwrap();
         assert!(f.shift > 0.0);
         assert!(f.diag.iter().all(|&d| d > 0.0));
+    }
+
+    #[test]
+    fn escalation_schedule_is_pinned_and_reported_shift_was_tried() {
+        // From σ = 0 the schedule doubles from 0.01 (0.01 itself is never
+        // tried; the caller's σ covers the first attempt).
+        assert_eq!(
+            escalation_shifts(0.0),
+            vec![0.02, 0.04, 0.08, 0.16, 0.32, 0.64, 1.28, 2.56, 5.12]
+        );
+        // From a caller shift the schedule doubles from that shift.
+        assert_eq!(escalation_shifts(0.3), vec![0.6, 1.2, 2.4, 4.8, 9.6]);
+        assert_eq!(escalation_shifts(6.0), Vec::<f64>::new());
+        // A build where every attempt is forced to fail reports the last
+        // shift actually tried — the schedule's tail, not a beyond-cap
+        // value.
+        let a = laplace1d(4);
+        let err = ic0_auto_forced(&a, 0.0, Some(2)).unwrap_err();
+        match err {
+            HbmcError::BreakdownInFactorization { row, shift, .. } => {
+                assert_eq!(row, None);
+                assert_eq!(shift, 5.12, "last tried shift");
+            }
+            other => panic!("unexpected error {other:?}"),
+        }
+        let err = ic0_auto_forced(&a, 6.0, Some(2)).unwrap_err();
+        match err {
+            // Schedule empty: the only attempt was the caller's shift.
+            HbmcError::BreakdownInFactorization { shift, .. } => assert_eq!(shift, 6.0),
+            other => panic!("unexpected error {other:?}"),
+        }
+    }
+
+    #[test]
+    fn injected_faults_force_breakdown_then_clear() {
+        use crate::resil::{FaultInjector, FaultSpec};
+        let a = laplace1d(6);
+        // A one-shot forced breakdown fails the whole auto call...
+        let inj = FaultInjector::new(FaultSpec::PivotBreakdown { row: 3 });
+        let err = ic0_auto_with(&a, 0.0, Some(&inj)).unwrap_err();
+        assert!(matches!(err, HbmcError::BreakdownInFactorization { row: None, .. }), "{err:?}");
+        // ...and the retry (charge spent) factors clean.
+        let f = ic0_auto_with(&a, 0.0, Some(&inj)).unwrap();
+        assert!(f.diag.iter().all(|d| d.is_finite()));
+        // NaN poisoning hits exactly one diagonal entry.
+        let inj = FaultInjector::new(FaultSpec::NanFactor { index: 8 });
+        let f = ic0_auto_with(&a, 0.0, Some(&inj)).unwrap();
+        assert!(f.diag[8 % 6].is_nan());
+        assert_eq!(f.diag.iter().filter(|d| d.is_nan()).count(), 1);
+        let f = ic0_auto_with(&a, 0.0, Some(&inj)).unwrap();
+        assert!(f.diag.iter().all(|d| d.is_finite()));
     }
 
     #[test]

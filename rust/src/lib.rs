@@ -76,6 +76,17 @@
 //! // The blocking calls remain as thin submit + wait wrappers:
 //! let out = service.solve(handle, &vec![2.0; n])?;
 //!
+//! // Resilience: allow the dispatcher's recovery ladder up to two retries
+//! // per job (escalated-shift re-plan on factorization breakdown, Level
+//! // fallback when a colored ordering stalls, pool rebuild after a worker
+//! // panic), and trip a per-matrix circuit breaker after 5 consecutive
+//! // failures; see the `resil` module.
+//! let resilient = SolverConfig::builder()
+//!     .max_retries(2)
+//!     .breaker_threshold(Some(5))
+//!     .build()?;
+//! # let _ = resilient;
+//!
 //! // 4. Observe: every ServiceStats counter plus queue-wait / batch-width /
 //! //    solve-time histograms render as Prometheus text exposition — scrape
 //! //    it in-process, or serve it over HTTP with
@@ -154,6 +165,10 @@
 //!   machinery, and the [`order_matrix`](ordering::order_matrix) façade the
 //!   plan builder consumes,
 //! * [`factor`] — IC(0) and shifted-IC incomplete factorization,
+//! * [`resil`] — resilience: `RetryPolicy` + per-handle circuit breaker
+//!   driving the dispatcher's recovery ladder (shift escalation, Level
+//!   fallback, pool rebuild), and the deterministic `FaultInjector` chaos
+//!   harness behind `--chaos --inject`,
 //! * [`schedule`] — level-set (wavefront) construction over the factor's
 //!   dependency DAG, the thin-level coarsening pass and its cost model —
 //!   the *scheduling* alternative to reordering, raced by the tuner,
@@ -178,6 +193,7 @@ pub mod factor;
 pub mod gen;
 pub mod obs;
 pub mod ordering;
+pub mod resil;
 pub mod runtime;
 pub mod schedule;
 pub mod solver;
@@ -198,6 +214,7 @@ pub mod prelude {
     pub use crate::error::HbmcError;
     pub use crate::factor::ic0::IcFactor;
     pub use crate::ordering::{bmc::BmcOrdering, hbmc::HbmcOrdering, perm::Perm};
+    pub use crate::resil::{FaultSpec, RetryPolicy};
     pub use crate::solver::cg::CgResult;
     pub use crate::solver::plan::{SetupStats, SolverPlan};
     pub use crate::solver::trisolve::TriSolver;

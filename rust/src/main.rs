@@ -59,7 +59,8 @@ fn cfg_from(args: &Args, shift: f64) -> Result<SolverConfig> {
         .use_intrinsics(!args.switch("no-intrinsics"))
         .max_batch(args.usize_flag("max-batch", 32)?)
         .max_wait(Duration::from_micros(args.usize_flag("max-wait-us", 200)? as u64))
-        .trace_sample(args.usize_flag("trace", 0)?);
+        .trace_sample(args.usize_flag("trace", 0)?)
+        .max_retries(args.usize_flag("retry", 0)? as u32);
     if let Some(v) = args.flag("max-depth") {
         builder = builder.max_queue_depth(Some(v.parse()?));
     }
@@ -71,6 +72,18 @@ fn cfg_from(args: &Args, shift: f64) -> Result<SolverConfig> {
     }
     if let Some(node) = args.flag("node") {
         builder = builder.preset(node.parse::<NodePreset>()?);
+    }
+    if let Some(v) = args.flag("breaker-threshold") {
+        builder = builder.breaker_threshold(Some(v.parse()?));
+    }
+    // Fault injection is double-keyed: `--inject <spec>` names the fault,
+    // but is refused unless `--chaos` is also passed — a copy-pasted spec
+    // must not arm the injector by accident.
+    if let Some(spec) = args.flag("inject") {
+        if !args.switch("chaos") {
+            bail!("--inject requires --chaos: fault injection must be armed explicitly");
+        }
+        builder = builder.fault(Some(spec.parse::<hbmc::resil::FaultSpec>()?));
     }
     Ok(builder.build()?)
 }
@@ -112,6 +125,13 @@ COMMANDS
                [--batch N]                   (submit N async jobs, micro-batched dispatch)
                [--auto] [--store <path>]     (apply the stored tuned profile for this
                                               matrix + machine, if one exists)
+               [--retry N]                   (recovery-ladder budget: re-plan after
+                                              breakdowns, rebuild the pool after
+                                              worker panics, up to N times)
+               [--chaos --inject <spec>]     (arm one deterministic fault, e.g.
+                                              panic:fwd:2, breakdown:0, nan-rhs:3,
+                                              nan-factor:0, delay:500; --inject is
+                                              refused without --chaos)
   tune         --dataset <name> [--scale S] [--store <path>] [--trials N] [--warmup N]
                [--reuse X] [--strategy auto|exhaustive|racing] [--max-candidates N]
                [--quick]
@@ -125,6 +145,11 @@ COMMANDS
                [--max-depth N] [--max-inflight N]
                                              (admission bounds: excess submits fail
                                               fast with HbmcError::Overloaded)
+               [--breaker-threshold N]       (per-matrix circuit breaker: N consecutive
+                                              solver failures open the breaker and
+                                              submits fail fast with CircuitOpen;
+                                              /healthz reports degraded/unhealthy)
+               [--retry N]                   (recovery-ladder budget per job)
                [--metrics-addr H:P]          (serve Prometheus /metrics + /healthz)
                [--trace N]                   (sample every Nth job into the trace
                                               ring; dumped as JSON after the run)
@@ -207,6 +232,27 @@ fn cmd_solve(args: &Args) -> Result<()> {
     // Phase 1 (plan build) happens inside `session`; phase 2 below.
     let service = SolverService::with_config(cfg.clone())?;
     let handle = service.register_matrix(d.matrix);
+
+    // Resilience path: with `--retry` or an armed `--chaos --inject` fault,
+    // route through the async queue so the dispatcher's recovery ladder
+    // owns the attempt. A direct session here would consume a one-shot
+    // fault during plan warm-up (pivot breakdowns fire at factorization)
+    // and an injected worker panic would escape straight to main.
+    if cfg.retry.max_retries > 0 || cfg.fault.is_some() {
+        let out = service.submit(handle, &d.b, &SolveRequest::new())?.wait()?;
+        let rep = &out.report;
+        println!(
+            "solve: iters={} converged={} relres={:.3e} retries={} time={:.3}s",
+            rep.iterations, rep.converged, rep.final_relres, rep.retries, rep.solve_seconds
+        );
+        for a in &rep.attempts {
+            println!("  recovered[{}]: {}", a.cause, a.action);
+        }
+        let err = out.x.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
+        println!("max |x - 1| = {err:.3e} (rhs was A·1)");
+        return Ok(());
+    }
+
     let session = service.session(handle, &cfg)?;
     let plan = session.plan();
     println!(
@@ -478,7 +524,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let _metrics = match args.flag("metrics-addr") {
         Some(addr) => {
             let svc = Arc::clone(&service);
-            let server = hbmc::obs::MetricsServer::spawn(addr, move || svc.metrics_text())?;
+            let probe = Arc::clone(&service);
+            let server = hbmc::obs::MetricsServer::spawn_with_health(
+                addr,
+                move || svc.metrics_text(),
+                move || probe.health(),
+            )?;
             println!("metrics: http://{}/metrics (and /healthz)", server.local_addr());
             Some(server)
         }

@@ -33,9 +33,26 @@ pub struct MetricsServer {
 impl MetricsServer {
     /// Bind `addr` (e.g. `"127.0.0.1:9464"`; port 0 picks a free port) and
     /// serve `metrics()` on `GET /metrics` until the server is dropped.
+    /// `/healthz` always answers `200 ok` — use
+    /// [`spawn_with_health`](MetricsServer::spawn_with_health) to wire a
+    /// real health probe.
     pub fn spawn<F>(addr: &str, metrics: F) -> Result<MetricsServer>
     where
         F: Fn() -> String + Send + Sync + 'static,
+    {
+        MetricsServer::spawn_with_health(addr, metrics, || (true, "ok\n".to_string()))
+    }
+
+    /// [`spawn`](MetricsServer::spawn) with a live health probe: `health()`
+    /// returns `(healthy, body)`, served on `GET /healthz` as `200` when
+    /// healthy (body `ok` or `degraded: …`) and `503 Service Unavailable`
+    /// otherwise — what `SolverService::health` produces, so a load
+    /// balancer can stop routing to a service whose circuit breakers have
+    /// all opened while scrapes of `/metrics` keep working.
+    pub fn spawn_with_health<F, H>(addr: &str, metrics: F, health: H) -> Result<MetricsServer>
+    where
+        F: Fn() -> String + Send + Sync + 'static,
+        H: Fn() -> (bool, String) + Send + Sync + 'static,
     {
         let listener = TcpListener::bind(addr)
             .map_err(|e| HbmcError::io(format!("binding metrics listener on {addr}"), e))?;
@@ -54,7 +71,7 @@ impl MetricsServer {
                     if let Ok(stream) = stream {
                         // Per-connection errors (timeouts, disconnects) are
                         // the client's problem; the listener keeps serving.
-                        let _ = serve_one(stream, &metrics);
+                        let _ = serve_one(stream, &metrics, &health);
                     }
                 }
             })
@@ -79,7 +96,11 @@ impl Drop for MetricsServer {
     }
 }
 
-fn serve_one<F: Fn() -> String>(stream: TcpStream, metrics: &F) -> std::io::Result<()> {
+fn serve_one<F: Fn() -> String, H: Fn() -> (bool, String)>(
+    stream: TcpStream,
+    metrics: &F,
+    health: &H,
+) -> std::io::Result<()> {
     stream.set_read_timeout(Some(IO_TIMEOUT))?;
     stream.set_write_timeout(Some(IO_TIMEOUT))?;
     let mut reader = BufReader::new(stream);
@@ -90,7 +111,11 @@ fn serve_one<F: Fn() -> String>(stream: TcpStream, metrics: &F) -> std::io::Resu
     let path = request_line.split_whitespace().nth(1).unwrap_or("");
     let (status, content_type, body) = match path {
         "/metrics" => ("200 OK", CONTENT_TYPE, metrics()),
-        "/healthz" => ("200 OK", "text/plain; charset=utf-8", "ok\n".to_string()),
+        "/healthz" => {
+            let (healthy, body) = health();
+            let status = if healthy { "200 OK" } else { "503 Service Unavailable" };
+            (status, "text/plain; charset=utf-8", body)
+        }
         _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
     };
     let mut stream = reader.into_inner();
@@ -147,6 +172,31 @@ mod tests {
         assert!(err.to_string().contains("404"), "{err}");
         // Repeated scrapes work (no keep-alive state to corrupt).
         assert!(http_get(&addr, "/metrics").unwrap().contains("up 1"));
+    }
+
+    #[test]
+    fn health_probe_drives_healthz_status() {
+        use std::sync::atomic::AtomicBool;
+        let healthy = Arc::new(AtomicBool::new(true));
+        let flag = Arc::clone(&healthy);
+        let server = MetricsServer::spawn_with_health("127.0.0.1:0", String::new, move || {
+            if flag.load(Ordering::Relaxed) {
+                (true, "degraded: 1 breaker(s) open, 0 half-open\n".to_string())
+            } else {
+                (false, "unhealthy: all 2 circuit breaker(s) open\n".to_string())
+            }
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        // Degraded is still 200 (routable), with the reason in the body.
+        let body = http_get(&addr, "/healthz").unwrap();
+        assert!(body.starts_with("degraded:"), "{body}");
+        // Unhealthy flips to 503, which http_get surfaces as an error.
+        healthy.store(false, Ordering::Relaxed);
+        let err = http_get(&addr, "/healthz").unwrap_err();
+        assert!(err.to_string().contains("503"), "{err}");
+        // /metrics keeps serving regardless of health.
+        assert!(http_get(&addr, "/metrics").is_ok());
     }
 
     #[test]

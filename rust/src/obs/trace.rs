@@ -27,6 +27,9 @@ pub mod stage {
     pub const FAILED: &str = "failed";
     pub const CANCELLED: &str = "cancelled";
     pub const SHED: &str = "shed";
+    /// A recovery-ladder retry: the detail string carries the action taken
+    /// (escalated shift, level fallback, pool rebuild, …).
+    pub const RETRIED: &str = "retried";
 }
 
 /// One recorded lifecycle event.

@@ -1,0 +1,198 @@
+//! Per-handle circuit breaker: closed → open on a run of consecutive
+//! failures, open → half-open after a fixed number of rejected admits,
+//! half-open → closed on one successful probe (or back to open on a failed
+//! one).
+//!
+//! The breaker is deliberately *count-based*, not clock-based: opening
+//! after `threshold` consecutive failures, cooling down for `threshold`
+//! rejected admissions, and probing with exactly one job makes every
+//! transition deterministic under test — no sleeps, no wall-clock reads —
+//! while still bounding how much work a poisoned matrix can soak up
+//! between probes. Success anywhere resets the failure run.
+//!
+//! One breaker guards one registered `MatrixHandle` (armed by
+//! `QueueConfig::breaker_threshold`); an open breaker degrades that handle
+//! only, surfacing as a synchronous `HbmcError::CircuitOpen` at `submit`
+//! while other handles keep serving.
+
+use std::sync::Mutex;
+
+/// Observable breaker state; also the `hbmc_breaker_state` gauge encoding
+/// via [`gauge_value`](BreakerState::gauge_value).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Normal operation; failures are being counted.
+    Closed,
+    /// Cooling down: one probe job is admitted, the rest rejected.
+    HalfOpen,
+    /// Rejecting all submissions for this handle.
+    Open,
+}
+
+impl BreakerState {
+    /// Gauge encoding: 0 = closed, 1 = half-open, 2 = open.
+    pub fn gauge_value(self) -> u64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::HalfOpen => 1,
+            BreakerState::Open => 2,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    state: BreakerState,
+    /// Consecutive failures while closed (reset by any success).
+    failures: u32,
+    /// Rejected admits left before an open breaker relaxes to half-open.
+    cooldown: u32,
+    /// Whether the half-open probe slot is taken.
+    probe_inflight: bool,
+}
+
+/// Deterministic count-based circuit breaker; see module docs.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    inner: Mutex<Inner>,
+}
+
+impl CircuitBreaker {
+    /// Breaker opening after `threshold` consecutive failures.
+    /// `threshold` must be positive (enforced by config validation).
+    pub fn new(threshold: u32) -> CircuitBreaker {
+        CircuitBreaker {
+            threshold: threshold.max(1),
+            inner: Mutex::new(Inner {
+                state: BreakerState::Closed,
+                failures: 0,
+                cooldown: 0,
+                probe_inflight: false,
+            }),
+        }
+    }
+
+    /// Ask to admit one job. `Err(failures)` rejects the submission (the
+    /// caller maps it to `HbmcError::CircuitOpen`); while open, each
+    /// rejection also advances the cooldown toward half-open.
+    pub fn admit(&self) -> Result<(), u32> {
+        let mut g = self.inner.lock().unwrap();
+        match g.state {
+            BreakerState::Closed => Ok(()),
+            BreakerState::Open => {
+                g.cooldown = g.cooldown.saturating_sub(1);
+                if g.cooldown == 0 {
+                    g.state = BreakerState::HalfOpen;
+                    g.probe_inflight = false;
+                }
+                Err(g.failures)
+            }
+            BreakerState::HalfOpen => {
+                if g.probe_inflight {
+                    Err(g.failures)
+                } else {
+                    g.probe_inflight = true;
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Record a successful job outcome: closes the breaker and resets the
+    /// failure run.
+    pub fn record_success(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.state = BreakerState::Closed;
+        g.failures = 0;
+        g.probe_inflight = false;
+    }
+
+    /// Record a failed job outcome: extends the failure run and opens the
+    /// breaker at the threshold (a failed half-open probe re-opens it).
+    pub fn record_failure(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.failures = g.failures.saturating_add(1);
+        match g.state {
+            BreakerState::Closed if g.failures >= self.threshold => {
+                g.state = BreakerState::Open;
+                g.cooldown = self.threshold;
+            }
+            BreakerState::HalfOpen => {
+                g.state = BreakerState::Open;
+                g.cooldown = self.threshold;
+                g.probe_inflight = false;
+            }
+            _ => {}
+        }
+    }
+
+    /// Current state (for the `hbmc_breaker_state` gauge and `/healthz`).
+    pub fn state(&self) -> BreakerState {
+        self.inner.lock().unwrap().state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opens_at_threshold_consecutive_failures() {
+        let b = CircuitBreaker::new(3);
+        for _ in 0..2 {
+            assert!(b.admit().is_ok());
+            b.record_failure();
+            assert_eq!(b.state(), BreakerState::Closed);
+        }
+        assert!(b.admit().is_ok());
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn success_resets_the_failure_run() {
+        let b = CircuitBreaker::new(2);
+        b.record_failure();
+        b.record_success();
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Closed, "run was reset");
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn open_cools_down_to_a_single_probe() {
+        let b = CircuitBreaker::new(2);
+        b.record_failure();
+        b.record_failure();
+        // threshold rejected admits while open...
+        assert_eq!(b.admit(), Err(2));
+        assert_eq!(b.admit(), Err(2));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // ...then exactly one probe is admitted.
+        assert!(b.admit().is_ok());
+        assert_eq!(b.admit(), Err(2), "second concurrent probe rejected");
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.admit().is_ok());
+    }
+
+    #[test]
+    fn failed_probe_reopens() {
+        let b = CircuitBreaker::new(1);
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(b.admit().is_err()); // cooldown 1 -> half-open
+        assert!(b.admit().is_ok()); // probe
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open, "failed probe re-opens");
+    }
+
+    #[test]
+    fn gauge_encoding_is_stable() {
+        assert_eq!(BreakerState::Closed.gauge_value(), 0);
+        assert_eq!(BreakerState::HalfOpen.gauge_value(), 1);
+        assert_eq!(BreakerState::Open.gauge_value(), 2);
+    }
+}

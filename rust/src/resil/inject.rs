@@ -1,0 +1,307 @@
+//! Deterministic fault injection: [`FaultSpec`] (pure data, parsed from
+//! `--inject <spec>` strings) and [`FaultInjector`] (the armed, one-shot
+//! runtime hook threaded through `Pool`, `factor::ic0`, and the
+//! dispatcher).
+//!
+//! Faults are pinned to explicit sites — a pool barrier index, a
+//! factorization row, a vector index — rather than drawn from a PRNG, so a
+//! chaos run is reproducible bit-for-bit: the same spec against the same
+//! job stream fires at the same instruction every time. Each injector is
+//! armed for exactly one firing; the dispatcher consumes dispatcher-side
+//! faults before use, while the worker-side panic hook only *reads* the
+//! armed state (all pool threads observe the same value at the same
+//! logical barrier and panic in lockstep) and is consumed by the
+//! dispatcher's recovery path before the retry.
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::time::Duration;
+
+use crate::error::HbmcError;
+
+/// Solver phase a [`FaultSpec::WorkerPanic`] is labelled with.
+///
+/// The label is descriptive (it names the phase the chosen barrier index
+/// falls in and is echoed in the panic message); the firing site itself is
+/// selected by the barrier index, which is exact and identical on every
+/// pool thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPhase {
+    /// Forward substitution of the IC(0) triangular solve.
+    Fwd,
+    /// Backward substitution of the IC(0) triangular solve.
+    Bwd,
+    /// The SpMV / BLAS-1 segment of the fused loop.
+    Spmv,
+    /// No particular phase claimed.
+    Any,
+}
+
+impl fmt::Display for FaultPhase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            FaultPhase::Fwd => "fwd",
+            FaultPhase::Bwd => "bwd",
+            FaultPhase::Spmv => "spmv",
+            FaultPhase::Any => "any",
+        })
+    }
+}
+
+impl FromStr for FaultPhase {
+    type Err = HbmcError;
+    fn from_str(s: &str) -> Result<FaultPhase, HbmcError> {
+        match s {
+            "fwd" => Ok(FaultPhase::Fwd),
+            "bwd" => Ok(FaultPhase::Bwd),
+            "spmv" => Ok(FaultPhase::Spmv),
+            "any" => Ok(FaultPhase::Any),
+            other => Err(HbmcError::parse(format!(
+                "unknown fault phase '{other}' (expected fwd|bwd|spmv|any)"
+            ))),
+        }
+    }
+}
+
+/// A deterministic fault, as pure data. Parsed from `--inject` spec
+/// strings; `Display` round-trips the spec.
+///
+/// Spec grammar (one fault per spec):
+///
+/// | spec                      | fault |
+/// |---------------------------|-------|
+/// | `panic:<phase>:<barrier>` | every pool thread panics in lockstep at the `<barrier>`-th in-solve pool barrier (0-based) |
+/// | `nan-rhs:<index>`         | poison `b[index % n]` of the next dispatched job's RHS copy with NaN |
+/// | `nan-factor:<index>`      | poison diagonal entry `index % n` of the next built IC(0) factor with NaN |
+/// | `breakdown:<row>`         | force a pivot breakdown at row `<row>` for every IC(0) attempt of the next plan build |
+/// | `delay:<micros>`          | sleep the dispatcher for `<micros>` µs before the next batch |
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSpec {
+    /// `panic:<phase>:<barrier>` — lockstep worker panic at a pool barrier.
+    WorkerPanic { phase: FaultPhase, barrier: u64 },
+    /// `nan-rhs:<index>` — NaN-poison one entry of a dispatched RHS copy.
+    NanRhs { index: usize },
+    /// `nan-factor:<index>` — NaN-poison one diagonal entry of a built factor.
+    NanFactor { index: usize },
+    /// `breakdown:<row>` — force a non-positive pivot at a fixed row.
+    PivotBreakdown { row: usize },
+    /// `delay:<micros>` — added dispatcher latency before one batch.
+    DispatchDelay { micros: u64 },
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultSpec::WorkerPanic { phase, barrier } => write!(f, "panic:{phase}:{barrier}"),
+            FaultSpec::NanRhs { index } => write!(f, "nan-rhs:{index}"),
+            FaultSpec::NanFactor { index } => write!(f, "nan-factor:{index}"),
+            FaultSpec::PivotBreakdown { row } => write!(f, "breakdown:{row}"),
+            FaultSpec::DispatchDelay { micros } => write!(f, "delay:{micros}"),
+        }
+    }
+}
+
+impl FromStr for FaultSpec {
+    type Err = HbmcError;
+    fn from_str(s: &str) -> Result<FaultSpec, HbmcError> {
+        fn num<T: FromStr>(part: &str, what: &str) -> Result<T, HbmcError> {
+            part.parse().map_err(|_| {
+                HbmcError::parse(format!("fault spec: '{part}' is not a valid {what}"))
+            })
+        }
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["panic", phase, barrier] => Ok(FaultSpec::WorkerPanic {
+                phase: phase.parse()?,
+                barrier: num(barrier, "barrier index")?,
+            }),
+            ["nan-rhs", index] => Ok(FaultSpec::NanRhs { index: num(index, "index")? }),
+            ["nan-factor", index] => Ok(FaultSpec::NanFactor { index: num(index, "index")? }),
+            ["breakdown", row] => Ok(FaultSpec::PivotBreakdown { row: num(row, "row")? }),
+            ["delay", micros] => Ok(FaultSpec::DispatchDelay { micros: num(micros, "duration (µs)")? }),
+            _ => Err(HbmcError::parse(format!(
+                "unknown fault spec '{s}' (expected panic:<phase>:<barrier>, nan-rhs:<i>, \
+                 nan-factor:<i>, breakdown:<row>, or delay:<micros>)"
+            ))),
+        }
+    }
+}
+
+/// A [`FaultSpec`] armed for a bounded number of firings (normally one).
+///
+/// Worker-side hooks ([`barrier_hook`](FaultInjector::barrier_hook)) only
+/// *read* the armed state so that all pool threads act identically; the
+/// single-threaded dispatcher consumes the charge via the `take_*` /
+/// [`consume_panic`](FaultInjector::consume_panic) methods. Once spent the
+/// injector is inert.
+#[derive(Debug)]
+pub struct FaultInjector {
+    spec: FaultSpec,
+    /// Firings left; decremented only by the dispatcher-side consumers.
+    remaining: AtomicU32,
+}
+
+impl FaultInjector {
+    /// Arm `spec` for a single firing.
+    pub fn new(spec: FaultSpec) -> FaultInjector {
+        FaultInjector::with_count(spec, 1)
+    }
+
+    /// Arm `spec` for `count` firings (used by chaos tests that want a
+    /// fault to outlive one recovery attempt).
+    pub fn with_count(spec: FaultSpec, count: u32) -> FaultInjector {
+        FaultInjector { spec, remaining: AtomicU32::new(count) }
+    }
+
+    /// The configured fault, regardless of remaining charge.
+    pub fn spec(&self) -> FaultSpec {
+        self.spec
+    }
+
+    /// Whether at least one firing is left.
+    pub fn armed(&self) -> bool {
+        self.remaining.load(Ordering::Relaxed) > 0
+    }
+
+    /// Atomically consume one firing; `false` when already spent.
+    fn consume(&self) -> bool {
+        self.remaining
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |r| r.checked_sub(1))
+            .is_ok()
+    }
+
+    /// Worker-side hook, called by the pool with the exact in-solve
+    /// barrier index (identical on every participating thread). Panics in
+    /// lockstep when an armed [`FaultSpec::WorkerPanic`] matches. Does NOT
+    /// consume the charge — the dispatcher's recovery path does, via
+    /// [`consume_panic`](FaultInjector::consume_panic), before retrying.
+    pub fn barrier_hook(&self, index: u64) {
+        if let FaultSpec::WorkerPanic { phase, barrier } = self.spec {
+            if index == barrier && self.armed() {
+                panic!("injected worker panic (panic:{phase}:{barrier})");
+            }
+        }
+    }
+
+    /// Dispatcher-side: disarm a pending worker-panic fault after it
+    /// fired, so the retry runs clean. `true` if a charge was consumed.
+    pub fn consume_panic(&self) -> bool {
+        matches!(self.spec, FaultSpec::WorkerPanic { .. }) && self.consume()
+    }
+
+    /// Dispatcher-side: take a pending RHS-poisoning fault.
+    pub fn take_nan_rhs(&self) -> Option<usize> {
+        match self.spec {
+            FaultSpec::NanRhs { index } if self.consume() => Some(index),
+            _ => None,
+        }
+    }
+
+    /// Factorization-side: take a pending factor-poisoning fault
+    /// (consumed by `ic0_auto_with` on a successful factorization).
+    pub fn take_nan_factor(&self) -> Option<usize> {
+        match self.spec {
+            FaultSpec::NanFactor { index } if self.consume() => Some(index),
+            _ => None,
+        }
+    }
+
+    /// Factorization-side: take a pending forced pivot breakdown. Consumed
+    /// once per plan build (at `ic0_auto_with` entry), and applied to every
+    /// shift attempt of that build so the whole build fails typed and the
+    /// dispatcher's ladder — not `ic0_auto`'s internal escalation — handles
+    /// recovery.
+    pub fn take_pivot_breakdown(&self) -> Option<usize> {
+        match self.spec {
+            FaultSpec::PivotBreakdown { row } if self.consume() => Some(row),
+            _ => None,
+        }
+    }
+
+    /// Dispatcher-side: take a pending dispatch-latency fault.
+    pub fn take_dispatch_delay(&self) -> Option<Duration> {
+        match self.spec {
+            FaultSpec::DispatchDelay { micros } if self.consume() => {
+                Some(Duration::from_micros(micros))
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_parse_and_round_trip() {
+        let cases = [
+            ("panic:fwd:2", FaultSpec::WorkerPanic { phase: FaultPhase::Fwd, barrier: 2 }),
+            ("panic:any:0", FaultSpec::WorkerPanic { phase: FaultPhase::Any, barrier: 0 }),
+            ("nan-rhs:7", FaultSpec::NanRhs { index: 7 }),
+            ("nan-factor:5", FaultSpec::NanFactor { index: 5 }),
+            ("breakdown:3", FaultSpec::PivotBreakdown { row: 3 }),
+            ("delay:500", FaultSpec::DispatchDelay { micros: 500 }),
+        ];
+        for (text, spec) in cases {
+            assert_eq!(text.parse::<FaultSpec>().unwrap(), spec, "{text}");
+            assert_eq!(spec.to_string(), text);
+        }
+    }
+
+    #[test]
+    fn malformed_specs_are_typed_parse_errors() {
+        for bad in ["", "panic", "panic:fwd", "panic:sideways:1", "nan-rhs:x", "frob:1"] {
+            assert!(
+                matches!(bad.parse::<FaultSpec>(), Err(HbmcError::Parse(_))),
+                "{bad:?} should fail to parse"
+            );
+        }
+    }
+
+    #[test]
+    fn charges_are_one_shot() {
+        let inj = FaultInjector::new(FaultSpec::PivotBreakdown { row: 3 });
+        assert!(inj.armed());
+        assert_eq!(inj.take_pivot_breakdown(), Some(3));
+        assert!(!inj.armed());
+        assert_eq!(inj.take_pivot_breakdown(), None);
+        // A mismatched taker never consumes the charge.
+        let inj = FaultInjector::new(FaultSpec::NanRhs { index: 0 });
+        assert_eq!(inj.take_pivot_breakdown(), None);
+        assert!(inj.armed());
+        assert_eq!(inj.take_nan_rhs(), Some(0));
+    }
+
+    #[test]
+    fn barrier_hook_reads_without_consuming() {
+        let inj = FaultInjector::new(FaultSpec::WorkerPanic {
+            phase: FaultPhase::Fwd,
+            barrier: 2,
+        });
+        inj.barrier_hook(0); // no match, no panic
+        inj.barrier_hook(3);
+        assert!(inj.armed(), "reads must not consume");
+        let fired = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            inj.barrier_hook(2)
+        }));
+        assert!(fired.is_err(), "matching index must panic");
+        assert!(inj.armed(), "the panic itself must not consume");
+        assert!(inj.consume_panic());
+        inj.barrier_hook(2); // spent: no panic
+        assert!(!inj.consume_panic());
+    }
+
+    #[test]
+    fn multi_count_injector_fires_repeatedly() {
+        let inj = FaultInjector::with_count(FaultSpec::WorkerPanic {
+            phase: FaultPhase::Any,
+            barrier: 0,
+        }, 2);
+        assert!(inj.consume_panic());
+        assert!(inj.armed());
+        assert!(inj.consume_panic());
+        assert!(!inj.armed());
+    }
+}

@@ -1,0 +1,83 @@
+//! Resilience layer: deterministic fault injection and recovery policy.
+//!
+//! PR 8 gave the service eyes (`obs/`); this module gives it hands. It has
+//! two halves, deliberately kept free of any dependency on `config`/`api`
+//! so those layers can depend on it without a cycle:
+//!
+//! * **Recovery policy** — [`RetryPolicy`] (stored on
+//!   `SolverConfig::retry`) bounds how many recovery attempts the
+//!   dispatcher's fallback ladder in `api/queue.rs` may make per job, and
+//!   [`CircuitBreaker`] (armed per registered matrix by
+//!   `QueueConfig::breaker_threshold`) stops a persistently failing handle
+//!   from degrading the whole service. The ladder itself lives with the
+//!   dispatcher; the mapping from typed error to recovery action is:
+//!
+//!   | failure                                   | recovery action |
+//!   |-------------------------------------------|-----------------|
+//!   | `BreakdownInFactorization`                | re-plan with the next escalated shift (doubling schedule, see `factor::ic0::escalation_shifts`) |
+//!   | `NotConverged` under a colored ordering   | re-plan on `OrderingKind::Level` (identity permutation ⇒ serial-ordering convergence) |
+//!   | `BreakdownInIteration`                    | evict the plan and retry on a clean rebuild |
+//!   | worker panic                              | evict the plan, drain + rebuild the poisoned `Pool`, retry on a fresh session |
+//!
+//! * **Fault injection** — [`FaultSpec`] / [`FaultInjector`] deterministically
+//!   inject worker panics at a chosen pool barrier, NaN poisoning of RHS or
+//!   factor values, forced pivot breakdown at row *k*, and dispatcher
+//!   latency. Injection is config-gated (`SolverConfig` carries an
+//!   `Option<FaultSpec>`; the CLI additionally requires `--chaos`): with no
+//!   injector configured the hot path carries a single null-pointer check
+//!   per pool barrier and nothing inside the kernels, so the fused loop's
+//!   dispatch/barrier counts and bitwise outputs are unchanged. Faults are
+//!   one-shot and pinned to explicit sites (barrier index, row, vector
+//!   index), so every chaos run is reproducible without a PRNG.
+//!
+//! Recovery actions are observable: the dispatcher emits
+//! `hbmc_retries_total{cause=}`, `hbmc_pool_rebuilds_total`, and the
+//! `hbmc_breaker_state` gauge (0 = closed, 1 = half-open, 2 = open), plus
+//! `retried` trace events, and `/healthz` folds breaker + shed state into
+//! its `ok`/`degraded`/`unhealthy` answer.
+
+pub mod breaker;
+pub mod inject;
+
+pub use breaker::{BreakerState, CircuitBreaker};
+pub use inject::{FaultInjector, FaultPhase, FaultSpec};
+
+/// Bounded recovery policy for the dispatcher's fallback ladder; stored on
+/// `SolverConfig::retry` and consulted per job.
+///
+/// `max_retries` is the number of *recovery* attempts after the first
+/// failed solve — `0` (the default) fails fast exactly as before this
+/// policy existed. Every retry re-checks the job's deadline first: a job
+/// whose budget is already spent fails with `DeadlineExceeded` rather than
+/// burning dispatcher time on a doomed attempt, so each attempt runs on
+/// whatever remains of the original budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Maximum recovery attempts after the first failure (0 = fail fast).
+    pub max_retries: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_retries: 0 }
+    }
+}
+
+impl RetryPolicy {
+    /// Policy allowing `n` recovery attempts.
+    pub fn retries(n: u32) -> RetryPolicy {
+        RetryPolicy { max_retries: n }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_policy_defaults_to_fail_fast() {
+        assert_eq!(RetryPolicy::default().max_retries, 0);
+        assert_eq!(RetryPolicy::retries(3).max_retries, 3);
+        assert_eq!(RetryPolicy::retries(3), RetryPolicy { max_retries: 3 });
+    }
+}

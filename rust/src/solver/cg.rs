@@ -32,6 +32,19 @@ use crate::util::timer::KernelTimes;
 use std::cell::UnsafeCell;
 use std::time::Instant;
 
+/// A non-finite or non-positive reduction value caught at one of the CG
+/// loop's *existing* per-iteration reduction sites (no extra syncs). Both
+/// execution shapes detect identically — in the fused loop every thread
+/// computes the same combined scalar and breaks in lockstep — and
+/// `SolverPlan::execute` surfaces it as `HbmcError::BreakdownInIteration`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CgBreakdown {
+    /// Iteration at which the value was observed (0 = initialization).
+    pub iter: usize,
+    /// Which reduction broke: `"rz"` (r·M⁻¹r) or `"pq"` (p·Ap).
+    pub quantity: &'static str,
+}
+
 /// Outcome of a PCG run.
 #[derive(Debug, Clone)]
 pub struct CgResult {
@@ -46,6 +59,10 @@ pub struct CgResult {
     pub times: KernelTimes,
     /// Wall-clock of the whole iteration loop.
     pub solve_seconds: f64,
+    /// `Some` when the loop stopped on a poisoned reduction (NaN/Inf
+    /// residual, non-positive curvature) rather than convergence or the
+    /// iteration cap; see [`CgBreakdown`].
+    pub breakdown: Option<CgBreakdown>,
 }
 
 /// Run preconditioned CG. `spmv(x, y)` computes `y = A x`;
@@ -76,6 +93,7 @@ pub fn pcg(
             residual_history: Vec::new(),
             times,
             solve_seconds: start.elapsed().as_secs_f64(),
+            breakdown: None,
         };
     }
 
@@ -102,6 +120,23 @@ pub fn pcg(
     let mut converged = false;
     let mut relres = norm2(&r) / bnorm;
     let mut iters = 0;
+    let mut breakdown = None;
+
+    // A non-finite initial r·z means b, x₀, or the factor is already
+    // poisoned (NaN/Inf); the loop could only iterate on NaNs. `rz = 0`
+    // stays legal here: an exact initial guess has r = 0.
+    if !rz.is_finite() {
+        breakdown = Some(CgBreakdown { iter: 0, quantity: "rz" });
+        return CgResult {
+            iterations: 0,
+            converged: false,
+            final_relres: relres,
+            residual_history: history,
+            times,
+            solve_seconds: start.elapsed().as_secs_f64(),
+            breakdown,
+        };
+    }
 
     while iters < max_iters {
         iters += 1;
@@ -109,7 +144,8 @@ pub fn pcg(
         let t = Instant::now();
         let pq = dot(&p, &q);
         if pq <= 0.0 || !pq.is_finite() {
-            // Non-SPD or breakdown; report divergence.
+            // Non-SPD or breakdown; recorded, reported as divergence.
+            breakdown = Some(CgBreakdown { iter: iters, quantity: "pq" });
             times.add("blas1", t.elapsed());
             break;
         }
@@ -127,6 +163,13 @@ pub fn pcg(
         precond(&r, &mut z, &mut times);
         let t = Instant::now();
         let rz_new = dot(&r, &z);
+        // Here r ≠ 0 (relres ≥ rtol above), so for an SPD preconditioner
+        // rz ≤ 0 is as broken as NaN.
+        if !rz_new.is_finite() || rz_new <= 0.0 {
+            breakdown = Some(CgBreakdown { iter: iters, quantity: "rz" });
+            times.add("blas1", t.elapsed());
+            break;
+        }
         let beta = rz_new / rz;
         rz = rz_new;
         xpby(&z, beta, &mut p);
@@ -140,6 +183,7 @@ pub fn pcg(
         residual_history: history,
         times,
         solve_seconds: start.elapsed().as_secs_f64(),
+        breakdown,
     }
 }
 
@@ -174,6 +218,7 @@ struct FusedState {
     iterations: usize,
     converged: bool,
     relres: f64,
+    breakdown: Option<CgBreakdown>,
 }
 
 /// Everything the region workers share, borrowed for the duration of the
@@ -269,6 +314,7 @@ pub fn pcg_fused(
         iterations: 0,
         converged: false,
         relres: 0.0,
+        breakdown: None,
     });
 
     {
@@ -303,6 +349,7 @@ pub fn pcg_fused(
         residual_history: st.history,
         times: st.times,
         solve_seconds: start.elapsed().as_secs_f64(),
+        breakdown: st.breakdown,
     }
 }
 
@@ -376,6 +423,18 @@ fn fused_worker(cx: &FusedCtx, tid: usize, nt: usize) {
     // writes `partials` again, so fence the stragglers' combines off.
     pool.phase_barrier();
     mark(tid, cx.state, &mut clock, "blas1");
+    // Poisoned input (NaN b/x₀/factor): every thread sees the same
+    // non-finite rz and returns in lockstep (`rz = 0` stays legal — an
+    // exact initial guess has r = 0). Mirrors `pcg` exactly.
+    if !rz.is_finite() {
+        if tid == 0 {
+            // SAFETY: thread-0-only solo state.
+            let st = unsafe { &mut *cx.state.as_ptr() };
+            st.relres = relres;
+            st.breakdown = Some(CgBreakdown { iter: 0, quantity: "rz" });
+        }
+        return;
+    }
 
     let mut iters = 0usize;
     let mut converged = false;
@@ -416,7 +475,15 @@ fn fused_worker(cx: &FusedCtx, tid: usize, nt: usize) {
         mark(tid, cx.state, &mut clock, "blas1");
         if pq <= 0.0 || !pq.is_finite() {
             // Non-SPD or breakdown; every thread sees the same pq and
-            // breaks identically (reported as divergence, like `pcg`).
+            // breaks identically (recorded, reported as divergence, like
+            // `pcg`).
+            if tid == 0 {
+                // SAFETY: thread-0-only solo state.
+                unsafe {
+                    (*cx.state.as_ptr()).breakdown =
+                        Some(CgBreakdown { iter: iters, quantity: "pq" });
+                }
+            }
             break;
         }
         let alpha = rz / pq;
@@ -458,6 +525,18 @@ fn fused_worker(cx: &FusedCtx, tid: usize, nt: usize) {
         blas1::dot_partials(r_view, z_view, cx.partials, chunks.clone());
         pool.phase_barrier();
         let rz_new = blas1::combine_partials(cx.partials, nchunks);
+        // r ≠ 0 here (relres ≥ rtol above): rz ≤ 0 is as broken as NaN.
+        // Same combined value on every thread ⇒ lockstep break.
+        if !rz_new.is_finite() || rz_new <= 0.0 {
+            if tid == 0 {
+                // SAFETY: thread-0-only solo state.
+                unsafe {
+                    (*cx.state.as_ptr()).breakdown =
+                        Some(CgBreakdown { iter: iters, quantity: "rz" });
+                }
+            }
+            break;
+        }
         let beta = rz_new / rz;
         rz = rz_new;
         blas1::xpby_chunks(z_view, beta, cx.ps, chunks.clone());
@@ -635,6 +714,83 @@ mod tests {
         assert!(res.converged);
         assert_eq!(res.iterations, 0);
         assert!(x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn nan_rhs_is_a_recorded_breakdown_in_both_loops() {
+        use crate::coordinator::pool::Pool;
+        use crate::solver::trisolve::IdentityPrecond;
+        let a = laplace2d(6, 6);
+        let n = a.n();
+        let mut b = vec![1.0; n];
+        b[3] = f64::NAN;
+
+        let mut x = vec![0.0; n];
+        let legacy = pcg(
+            &mut |v, y, _| a.mul_vec(v, y),
+            &mut |r, z, _| z.copy_from_slice(r),
+            &b,
+            &mut x,
+            1e-8,
+            100,
+            false,
+        );
+        assert!(!legacy.converged);
+        assert_eq!(legacy.breakdown, Some(CgBreakdown { iter: 0, quantity: "rz" }));
+        assert_eq!(legacy.iterations, 0, "must not iterate on NaNs");
+
+        for nt in [1usize, 3] {
+            let pool = Pool::new(nt);
+            let engine = SpmvEngine::crs(&a, nt);
+            let mut x = vec![0.0; n];
+            let fused =
+                pcg_fused(&engine, &IdentityPrecond, &b, &mut x, 1e-8, 100, false, &pool);
+            assert_eq!(fused.breakdown, legacy.breakdown, "nt={nt}");
+            assert_eq!(fused.iterations, 0);
+            assert!(!fused.converged);
+        }
+    }
+
+    #[test]
+    fn indefinite_matrix_records_pq_breakdown() {
+        // -A is negative definite: the very first curvature p·Ap is < 0.
+        let a = laplace2d(5, 5);
+        let n = a.n();
+        let b = vec![1.0; n];
+        let mut x = vec![0.0; n];
+        let res = pcg(
+            &mut |v, y, _| {
+                a.mul_vec(v, y);
+                y.iter_mut().for_each(|e| *e = -*e);
+            },
+            &mut |r, z, _| z.copy_from_slice(r),
+            &b,
+            &mut x,
+            1e-8,
+            100,
+            false,
+        );
+        assert!(!res.converged);
+        assert_eq!(res.breakdown, Some(CgBreakdown { iter: 1, quantity: "pq" }));
+    }
+
+    #[test]
+    fn clean_solves_report_no_breakdown() {
+        let a = laplace2d(8, 8);
+        let n = a.n();
+        let b = vec![1.0; n];
+        let mut x = vec![0.0; n];
+        let res = pcg(
+            &mut |v, y, _| a.mul_vec(v, y),
+            &mut |r, z, _| z.copy_from_slice(r),
+            &b,
+            &mut x,
+            1e-8,
+            1000,
+            false,
+        );
+        assert!(res.converged);
+        assert_eq!(res.breakdown, None);
     }
 
     #[test]

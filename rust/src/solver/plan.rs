@@ -21,10 +21,11 @@ use crate::config::{OrderingKind, SolverConfig, SpmvKind};
 use crate::coordinator::metrics::{per_iteration_ops, OpInputs, OpProfile};
 use crate::coordinator::pool::Pool;
 use crate::error::{HbmcError, Result};
-use crate::factor::ic0::ic0_auto;
+use crate::factor::ic0::ic0_auto_with;
 use crate::factor::split::{SellTriFactors, TriFactors};
 use crate::ordering::perm::Perm;
 use crate::ordering::{order_matrix, OrderedStructure};
+use crate::resil::FaultInjector;
 use crate::schedule::coarsen::{coarsen, CoarsenParams};
 use crate::schedule::cost::ScheduleCost;
 use crate::schedule::levels::LevelSchedule;
@@ -138,6 +139,17 @@ impl SolverPlan {
     /// Run the full setup phase for matrix `a` under `cfg`: ordering →
     /// IC(0) factorization → storage construction → kernel selection.
     pub fn build(a: &Csr, cfg: &SolverConfig) -> Result<SolverPlan> {
+        SolverPlan::build_with(a, cfg, None)
+    }
+
+    /// [`SolverPlan::build`] with a fault injector threaded into the
+    /// factorization (chaos testing; see `crate::resil`). `None` is the
+    /// production path and behaves exactly like `build`.
+    pub fn build_with(
+        a: &Csr,
+        cfg: &SolverConfig,
+        injector: Option<&FaultInjector>,
+    ) -> Result<SolverPlan> {
         cfg.validate()?;
         let n_orig = a.n();
         let matrix_fingerprint = a.fingerprint();
@@ -150,7 +162,7 @@ impl SolverPlan {
 
         // --- Factorization ----------------------------------------------
         let t1 = Instant::now();
-        let factor = ic0_auto(&a_perm, cfg.shift)?;
+        let factor = ic0_auto_with(&a_perm, cfg.shift, injector)?;
         let shift_used = factor.shift;
         let tri = TriFactors::from_ic(&factor);
         let factor_seconds = t1.elapsed().as_secs_f64();
@@ -362,6 +374,15 @@ impl SolverPlan {
                 pool,
             )
         };
+
+        // A recorded CG breakdown (non-finite or non-positive reduction
+        // quantity — NaN rhs, indefinite operator, poisoned factor) is a
+        // typed failure, not a "did not converge" report: the iterate is
+        // not trustworthy, and the dispatcher's recovery ladder keys on
+        // the error variant.
+        if let Some(bd) = cg.breakdown {
+            return Err(HbmcError::BreakdownInIteration { iter: bd.iter, quantity: bd.quantity });
+        }
 
         let x = self.perm.unapply_vec(&x_perm);
         Ok(SolveOutcome {

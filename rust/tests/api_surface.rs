@@ -61,6 +61,38 @@ fn service_rejects_batch_with_any_bad_rhs_before_solving() {
     assert_eq!(svc.stats().solves, 0, "no rhs of a rejected batch may run");
 }
 
+/// A non-finite right-hand side is rejected at `submit`, typed and
+/// synchronous, *naming the first offending index* — before the job ever
+/// touches the queue, the plan cache, or a solver (a NaN entering the
+/// fused CG loop would otherwise cost a full breakdown-recovery cycle).
+#[test]
+fn non_finite_rhs_rejected_at_submit_with_index() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let svc = SolverService::with_config(tiny_cfg(OrderingKind::Hbmc)).unwrap();
+    let h = svc.register_matrix(d.matrix.clone());
+    for (idx, bad_val) in [(0usize, f64::NAN), (3, f64::INFINITY), (7, f64::NEG_INFINITY)] {
+        let mut rhs = d.b.clone();
+        rhs[idx] = bad_val;
+        let err = svc.submit(h, &rhs, &SolveRequest::new()).unwrap_err();
+        assert!(matches!(err, HbmcError::InvalidConfig(_)), "{err:?}");
+        assert!(
+            err.to_string().contains(&format!("rhs[{idx}]")),
+            "must name the first bad index: {err}"
+        );
+    }
+    // A batch with one bad rhs fails the same way, before anything runs.
+    let mut bad = d.b.clone();
+    bad[5] = f64::NAN;
+    let err = svc.solve_many(h, &[d.b.clone(), bad]).unwrap_err();
+    assert!(matches!(err, HbmcError::InvalidConfig(_)), "{err:?}");
+    assert!(err.to_string().contains("rhs[5]"), "{err}");
+    let st = svc.stats();
+    assert_eq!(st.solves, 0, "a rejected rhs must never reach the solver");
+    assert_eq!(st.batches, 0, "…nor open a batch");
+    // The same handle still serves well-formed work afterwards.
+    assert!(svc.solve(h, &d.b).unwrap().report.converged);
+}
+
 /// The HBMC structural constraint is validated before any kernel sees the
 /// config: `bs` must be a multiple of `w`.
 #[test]

@@ -1,0 +1,354 @@
+//! Chaos contract of the resil/ subsystem: deterministic fault injection
+//! against the full service stack, and the dispatcher's recovery ladder
+//! absorbing what it can.
+//!
+//! * **termination** — under injected worker panics and forced pivot
+//!   breakdowns, across all five orderings, every submitted job reaches a
+//!   terminal state: a successful (possibly retried) solve or a typed
+//!   `HbmcError`; the accept/finish books balance exactly as in the
+//!   overload tests;
+//! * **containment** — a pool poisoned by a lockstep worker panic is
+//!   *drained* (bounded join) and rebuilt, never leaked: the process-wide
+//!   leaked-worker counter stays flat across a recovery, and healthy jobs
+//!   co-queued on other handles return bitwise-identical results to a
+//!   fault-free run;
+//! * **accounting** — every rung of the ladder stamps the report
+//!   (`retries`/`attempts`), ticks `hbmc_retries_total{cause=…}` /
+//!   `hbmc_pool_rebuilds_total`, and leaves a `retried` trace event;
+//! * **passivity** — with injection disabled, the armed resilience layer
+//!   (retry budget + breaker threshold) changes neither the bitwise
+//!   outputs nor the dispatch counts of the fused path.
+
+use std::time::{Duration, Instant};
+
+use hbmc::api::{HbmcError, SolveRequest, SolverService};
+use hbmc::config::{OrderingKind, Scale, SolverConfig};
+use hbmc::coordinator::driver::{solve_opts, SolveOptions};
+use hbmc::coordinator::pool::leaked_workers;
+use hbmc::gen::suite;
+use hbmc::resil::{FaultPhase, FaultSpec, RetryPolicy};
+
+fn tiny_cfg(ordering: OrderingKind) -> SolverConfig {
+    SolverConfig { ordering, bs: 8, w: 4, threads: 1, rtol: 1e-7, ..Default::default() }
+}
+
+fn chaos_cfg(ordering: OrderingKind, fault: FaultSpec, retries: u32) -> SolverConfig {
+    SolverConfig {
+        fault: Some(fault),
+        retry: RetryPolicy::retries(retries),
+        ..tiny_cfg(ordering)
+    }
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every pool thread panics in lockstep at the first in-solve barrier.
+const PANIC_AT_0: FaultSpec = FaultSpec::WorkerPanic { phase: FaultPhase::Fwd, barrier: 0 };
+
+/// A lockstep worker panic is absorbed by the panic rung: the poisoned
+/// pool is drained (zero leaks — lockstep keeps the barrier generations
+/// synchronized), the plan evicted, the job retried once on a fresh
+/// session, and the retried result is bitwise-identical to a fault-free
+/// run. The retry is visible in the report, the metrics, and the trace.
+#[test]
+fn worker_panic_recovers_on_a_rebuilt_pool_without_leaks() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let mut cfg = chaos_cfg(OrderingKind::Hbmc, PANIC_AT_0, 1);
+    cfg.threads = 4;
+    cfg.queue.trace_sample = 1;
+    let leaked_before = leaked_workers();
+    let service = SolverService::with_config(cfg.clone()).unwrap();
+    let h = service.register_matrix(d.matrix.clone());
+    let out = service.submit(h, &d.b, &SolveRequest::new()).unwrap().wait().unwrap();
+    assert!(out.report.converged);
+    assert_eq!(out.report.retries, 1);
+    assert_eq!(out.report.attempts.len(), 1);
+    assert_eq!(out.report.attempts[0].cause, "panic");
+    assert!(
+        out.report.attempts[0].action.contains("pool rebuilt"),
+        "{}",
+        out.report.attempts[0].action
+    );
+    assert_eq!(
+        leaked_workers(),
+        leaked_before,
+        "a lockstep panic must drain clean: no detached workers"
+    );
+
+    // The recovered solve ran on a rebuilt plan + pool of the same config:
+    // its output must be bitwise-identical to a never-faulted run.
+    let mut clean = cfg.clone();
+    clean.fault = None;
+    let rep = solve_opts(&d.matrix, &d.b, &clean, &SolveOptions::with_solution()).unwrap();
+    assert_eq!(bits(&out.x), bits(rep.solution.as_ref().unwrap()));
+
+    let text = service.metrics_text();
+    assert!(text.contains("hbmc_retries_total{cause=\"panic\"} 1"), "{text}");
+    assert!(text.contains("hbmc_pool_rebuilds_total 1"), "{text}");
+    let trace = service.trace_json();
+    assert!(trace.contains("\"retried\""), "trace missing the retry event: {trace}");
+}
+
+/// Job-count conservation under chaos, across every ordering: with a
+/// worker panic or a forced pivot breakdown injected, each submitted job
+/// terminates — and with one retry of budget available for the single
+/// injected fault, terminates *successfully*. The queue drains to zero
+/// and no recovery leaks a worker thread.
+#[test]
+fn faults_across_all_orderings_terminate_every_job() {
+    let d = suite::dataset("thermal2", Scale::Tiny);
+    for ordering in [
+        OrderingKind::Natural,
+        OrderingKind::Mc,
+        OrderingKind::Bmc,
+        OrderingKind::Hbmc,
+        OrderingKind::Level,
+    ] {
+        for fault in [PANIC_AT_0, FaultSpec::PivotBreakdown { row: 0 }] {
+            let mut cfg = chaos_cfg(ordering, fault, 2);
+            cfg.threads = 2;
+            let leaked_before = leaked_workers();
+            let service = SolverService::with_config(cfg).unwrap();
+            let h = service.register_matrix(d.matrix.clone());
+            const JOBS: usize = 3;
+            let submitted: Vec<_> = (0..JOBS)
+                .map(|k| {
+                    let rhs: Vec<f64> = d.b.iter().map(|v| v * (1.0 + k as f64)).collect();
+                    service.submit(h, &rhs, &SolveRequest::new()).unwrap()
+                })
+                .collect();
+            let (mut ok, mut failed) = (0usize, 0usize);
+            for job in submitted {
+                match job.wait() {
+                    Ok(out) => {
+                        assert!(out.report.converged, "{ordering:?} under {fault}");
+                        ok += 1;
+                    }
+                    Err(e) => {
+                        // Typed and printable — never a propagated panic.
+                        let _ = e.to_string();
+                        failed += 1;
+                    }
+                }
+            }
+            assert_eq!(ok + failed, JOBS, "{ordering:?} under {fault}: job lost");
+            assert_eq!(
+                ok, JOBS,
+                "{ordering:?} under {fault}: one fault within a 2-retry budget must be absorbed"
+            );
+            assert_eq!(service.stats().queue_depth, 0, "{ordering:?} under {fault}");
+            assert_eq!(leaked_workers(), leaked_before, "{ordering:?} under {fault}: leak");
+        }
+    }
+}
+
+/// Fault isolation across handles: a panic injected into one matrix's
+/// batch must not perturb healthy jobs co-queued for another matrix —
+/// their results stay bitwise-identical to a fault-free run, with zero
+/// retries on their reports.
+#[test]
+fn healthy_jobs_coqueued_with_a_faulty_one_are_unperturbed() {
+    let d1 = suite::dataset("g3_circuit", Scale::Tiny); // fault lands here
+    let d2 = suite::dataset("thermal2", Scale::Tiny); // healthy bystander
+    let mut cfg = chaos_cfg(OrderingKind::Hbmc, PANIC_AT_0, 1);
+    cfg.threads = 2;
+    let mut clean = cfg.clone();
+    clean.fault = None;
+    let rhss: Vec<Vec<f64>> =
+        (0..3).map(|k| d2.b.iter().map(|v| v * (1.0 + k as f64)).collect()).collect();
+    let ref_bits: Vec<Vec<u64>> = rhss
+        .iter()
+        .map(|rhs| {
+            let rep = solve_opts(&d2.matrix, rhs, &clean, &SolveOptions::with_solution()).unwrap();
+            bits(rep.solution.as_ref().unwrap())
+        })
+        .collect();
+
+    let service = SolverService::with_config(cfg).unwrap();
+    let h1 = service.register_matrix(d1.matrix.clone());
+    let h2 = service.register_matrix(d2.matrix.clone());
+    // FIFO dispatch: the faulty job is submitted first, so its batch opens
+    // first and the one-shot panic is consumed inside it.
+    let faulty = service.submit(h1, &d1.b, &SolveRequest::new()).unwrap();
+    let healthy: Vec<_> =
+        rhss.iter().map(|rhs| service.submit(h2, rhs, &SolveRequest::new()).unwrap()).collect();
+    let out = faulty.wait().unwrap();
+    assert_eq!(out.report.retries, 1, "the fault must land on the faulty handle");
+    for (k, job) in healthy.into_iter().enumerate() {
+        let out = job.wait().unwrap();
+        assert_eq!(out.report.retries, 0, "rhs {k}: bystander must not be retried");
+        assert_eq!(bits(&out.x), ref_bits[k], "rhs {k}: bystander result perturbed");
+    }
+}
+
+/// Passivity: the resilience layer armed but idle (retry budget, breaker
+/// threshold, no fault) changes neither the bitwise output nor the fused
+/// path's dispatch count.
+#[test]
+fn disabled_injection_is_passive() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let mut plain = tiny_cfg(OrderingKind::Hbmc);
+    plain.threads = 2;
+    let mut armed = plain.clone();
+    armed.retry = RetryPolicy::retries(3);
+    armed.queue.breaker_threshold = Some(4);
+
+    let run = |cfg: &SolverConfig| {
+        let service = SolverService::with_config(cfg.clone()).unwrap();
+        let h = service.register_matrix(d.matrix.clone());
+        let out = service.submit(h, &d.b, &SolveRequest::new()).unwrap().wait().unwrap();
+        (bits(&out.x), out.report.iterations, out.report.dispatches, out.report.retries)
+    };
+    let (bits_plain, iters_plain, disp_plain, retries_plain) = run(&plain);
+    let (bits_armed, iters_armed, disp_armed, retries_armed) = run(&armed);
+    assert_eq!(bits_plain, bits_armed, "armed-but-idle resilience perturbed the solve");
+    assert_eq!(iters_plain, iters_armed);
+    assert_eq!(disp_plain, disp_armed, "dispatch count must not change");
+    assert_eq!((retries_plain, retries_armed), (0, 0));
+}
+
+/// A forced pivot breakdown at batch open walks the shift-escalation
+/// rung: the re-plan uses the first rung of the doubling schedule above
+/// the configured shift (0.0 → 0.02) and the job succeeds with the
+/// escalation on its report.
+#[test]
+fn forced_pivot_breakdown_escalates_the_shift() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let cfg = chaos_cfg(OrderingKind::Hbmc, FaultSpec::PivotBreakdown { row: 0 }, 1);
+    let service = SolverService::with_config(cfg).unwrap();
+    let h = service.register_matrix(d.matrix.clone());
+    let out = service.submit(h, &d.b, &SolveRequest::new()).unwrap().wait().unwrap();
+    assert!(out.report.converged);
+    assert_eq!(out.report.retries, 1);
+    assert_eq!(out.report.attempts[0].cause, "breakdown_factorization");
+    assert!(
+        out.report.attempts[0].action.contains("escalated shift 0.02"),
+        "{}",
+        out.report.attempts[0].action
+    );
+    assert!(service
+        .metrics_text()
+        .contains("hbmc_retries_total{cause=\"breakdown_factorization\"} 1"));
+}
+
+/// An injected NaN in the dispatched right-hand side *copy* is caught by
+/// the fused loop's breakdown detection (typed, no new syncs), and the
+/// retry runs on the clean queued rhs: the job still converges.
+#[test]
+fn nan_rhs_fault_is_detected_and_retried_on_the_clean_rhs() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let cfg = chaos_cfg(OrderingKind::Hbmc, FaultSpec::NanRhs { index: 3 }, 1);
+    let service = SolverService::with_config(cfg).unwrap();
+    let h = service.register_matrix(d.matrix.clone());
+    let out = service.submit(h, &d.b, &SolveRequest::new()).unwrap().wait().unwrap();
+    assert!(out.report.converged);
+    assert!(out.x.iter().all(|v| v.is_finite()));
+    assert_eq!(out.report.retries, 1);
+    assert_eq!(out.report.attempts[0].cause, "breakdown_iteration");
+    assert!(
+        out.report.attempts[0].action.contains("non-finite"),
+        "{}",
+        out.report.attempts[0].action
+    );
+    assert!(service
+        .metrics_text()
+        .contains("hbmc_retries_total{cause=\"breakdown_iteration\"} 1"));
+}
+
+/// A NaN-poisoned factor diagonal surfaces as `BreakdownInIteration`; the
+/// rung evicts the poisoned plan (so the rebuild re-factorizes instead of
+/// re-checking the bad Arc out of the cache) and the retry converges.
+#[test]
+fn nan_factor_fault_evicts_the_poisoned_plan_and_retries() {
+    let d = suite::dataset("thermal2", Scale::Tiny);
+    let cfg = chaos_cfg(OrderingKind::Bmc, FaultSpec::NanFactor { index: 0 }, 1);
+    let service = SolverService::with_config(cfg).unwrap();
+    let h = service.register_matrix(d.matrix.clone());
+    let out = service.submit(h, &d.b, &SolveRequest::new()).unwrap().wait().unwrap();
+    assert!(out.report.converged);
+    assert_eq!(out.report.retries, 1);
+    assert_eq!(out.report.attempts[0].cause, "breakdown_iteration");
+}
+
+/// Without retry budget, an injected breakdown is a *typed* terminal
+/// failure — the ladder never silently swallows a fault it cannot retry.
+#[test]
+fn exhausted_budget_fails_typed() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let cfg = chaos_cfg(OrderingKind::Hbmc, FaultSpec::PivotBreakdown { row: 0 }, 0);
+    let service = SolverService::with_config(cfg).unwrap();
+    let h = service.register_matrix(d.matrix.clone());
+    let err = service.submit(h, &d.b, &SolveRequest::new()).unwrap().wait().unwrap_err();
+    assert!(matches!(err, HbmcError::BreakdownInFactorization { .. }), "{err:?}");
+    assert_eq!(service.stats().solves, 0, "a failed build must never count a solve");
+}
+
+/// Injected dispatcher latency is consumed before exactly one batch: the
+/// solve still succeeds, is not counted as a retry, and the extra latency
+/// is observable on the job's wall clock.
+#[test]
+fn dispatch_delay_fault_stalls_one_batch_without_failing_it() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let cfg = chaos_cfg(OrderingKind::Hbmc, FaultSpec::DispatchDelay { micros: 120_000 }, 0);
+    let service = SolverService::with_config(cfg).unwrap();
+    let h = service.register_matrix(d.matrix.clone());
+    let t0 = Instant::now();
+    // A generous deadline flushes the batch window immediately (the warm()
+    // idiom from the overload tests) without ever shedding the job.
+    let req = SolveRequest::new().deadline(Duration::from_secs(300));
+    let out = service.submit(h, &d.b, &req).unwrap().wait().unwrap();
+    assert!(out.report.converged);
+    assert_eq!(out.report.retries, 0, "latency is not a failure");
+    assert!(
+        t0.elapsed() >= Duration::from_millis(120),
+        "the injected delay must precede the batch: {:?}",
+        t0.elapsed()
+    );
+}
+
+/// The not-converged rung: a colored ordering stalling against a hard
+/// iteration cap falls back once to the level-scheduled plan, which keeps
+/// natural-ordering convergence (§5.2's trade-off, inverted for rescue).
+#[test]
+fn stalled_colored_solve_falls_back_to_level_ordering() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let iters_hbmc = solve_opts(&d.matrix, &d.b, &tiny_cfg(OrderingKind::Hbmc), &SolveOptions::default())
+        .unwrap()
+        .iterations;
+    let iters_level =
+        solve_opts(&d.matrix, &d.b, &tiny_cfg(OrderingKind::Level), &SolveOptions::default())
+            .unwrap()
+            .iterations;
+
+    let mut cfg = tiny_cfg(OrderingKind::Hbmc);
+    cfg.retry = RetryPolicy::retries(1);
+    let service = SolverService::with_config(cfg).unwrap();
+    let h = service.register_matrix(d.matrix.clone());
+    if iters_level < iters_hbmc {
+        // Cap at exactly the level-ordering count: the colored first
+        // attempt stalls, the level fallback fits under the same cap.
+        let req = SolveRequest::new().max_iters(iters_level).require_convergence();
+        let out = service.submit(h, &d.b, &req).unwrap().wait().unwrap();
+        assert!(out.report.converged);
+        assert!(out.report.iterations <= iters_level);
+        assert_eq!(out.report.retries, 1);
+        assert_eq!(out.report.attempts[0].cause, "not_converged");
+        assert!(
+            out.report.attempts[0].action.contains("level"),
+            "{}",
+            out.report.attempts[0].action
+        );
+    } else {
+        // Degenerate dataset (no convergence gap to exploit): the rung
+        // still fires, and the fallback's own stall is the final typed
+        // error rather than a silent success.
+        let req = SolveRequest::new().max_iters(1).require_convergence();
+        let err = service.submit(h, &d.b, &req).unwrap().wait().unwrap_err();
+        assert!(matches!(err, HbmcError::NotConverged { .. }), "{err:?}");
+    }
+    assert!(service
+        .metrics_text()
+        .contains("hbmc_retries_total{cause=\"not_converged\"} 1"));
+}

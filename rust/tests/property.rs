@@ -4,7 +4,8 @@
 
 use hbmc::config::{OrderingKind, SolverConfig, SpmvKind};
 use hbmc::coordinator::pool::Pool;
-use hbmc::factor::ic0::ic0;
+use hbmc::error::HbmcError;
+use hbmc::factor::ic0::{ic0, ic0_auto};
 use hbmc::factor::split::{SellTriFactors, TriFactors};
 use hbmc::ordering::bmc::{bmc_order, check_block_independence};
 use hbmc::ordering::graph::{er_condition_holds, orderings_equivalent, Adjacency};
@@ -206,6 +207,83 @@ fn prop_full_solve_reaches_tolerance() {
         let err = sol.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
         assert!(err < 1e-5, "seed={seed} err={err}");
     }
+}
+
+/// Kershaw's 4×4 matrix: symmetric positive definite (smallest eigenvalue
+/// 3 − 2√2 ≈ 0.17) yet plain IC(0) breaks down on it — the mixed-sign
+/// off-diagonals drive the last pivot negative. `scale` stretches the whole
+/// block (pivots scale linearly, so the breakdown survives); `diag_delta`
+/// shrinks the diagonal toward the indefinite edge (safe below ~0.17).
+fn kershaw_block(coo: &mut Coo, base: usize, scale: f64, diag_delta: f64) {
+    for &(i, j, v) in &[(0usize, 1usize, -2.0), (1, 2, -2.0), (2, 3, -2.0), (0, 3, 2.0)] {
+        coo.push_sym(base + i, base + j, scale * v);
+    }
+    for i in 0..4 {
+        coo.push(base + i, base + i, scale * (3.0 - diag_delta));
+    }
+}
+
+/// Breakdown recovery end to end: matrices whose diagonals sit close enough
+/// to the indefinite edge that plain IC(0) fails must (a) fail *typed*,
+/// naming the pivot row, (b) be recovered by `ic0_auto`'s shift escalation,
+/// and (c) still solve through the driver — whose plan build runs the same
+/// escalation — in no more iterations (+10% headroom) than a config that
+/// passes the recovered shift explicitly.
+#[test]
+fn prop_ic0_auto_recovers_near_indefinite_matrices() {
+    let mut induced = 0usize;
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(10_000 + seed);
+        let blocks = 3 + rng.below(6);
+        let n = 4 * blocks;
+        let mut coo = Coo::new(n);
+        for b in 0..blocks {
+            kershaw_block(&mut coo, 4 * b, rng.range_f64(0.5, 2.0), rng.range_f64(0.0, 0.1));
+        }
+        let a = coo.to_csr();
+
+        match ic0(&a, 0.0) {
+            Err(HbmcError::BreakdownInFactorization { row: Some(r), shift, .. }) => {
+                assert!(r < n, "seed={seed} row {r} out of range");
+                assert_eq!(shift, 0.0, "seed={seed}");
+                induced += 1;
+            }
+            Err(other) => panic!("seed={seed}: expected a rowful breakdown, got {other:?}"),
+            Ok(_) => panic!("seed={seed}: generator failed to induce an IC(0) breakdown"),
+        }
+
+        let f = ic0_auto(&a, 0.0).unwrap();
+        assert!(f.shift > 0.0, "seed={seed}: recovery must have escalated the shift");
+        assert!(f.diag.iter().all(|&d| d > 0.0 && d.is_finite()), "seed={seed}");
+
+        let mut b = vec![0.0; n];
+        a.mul_vec(&vec![1.0; n], &mut b);
+        let cfg = |shift: f64| SolverConfig {
+            ordering: OrderingKind::Natural,
+            bs: 4,
+            w: 2,
+            rtol: 1e-8,
+            shift,
+            ..Default::default()
+        };
+        let opts = hbmc::coordinator::driver::SolveOptions::with_solution;
+        let recovered =
+            hbmc::coordinator::driver::solve_opts(&a, &b, &cfg(0.0), &opts()).unwrap();
+        let informed =
+            hbmc::coordinator::driver::solve_opts(&a, &b, &cfg(f.shift), &opts()).unwrap();
+        assert!(recovered.converged, "seed={seed}: recovered factor must still drive CG home");
+        assert!(informed.converged, "seed={seed}");
+        assert!(
+            recovered.iterations <= informed.iterations + informed.iterations / 10,
+            "seed={seed}: auto-recovery may not cost extra iterations ({} vs {})",
+            recovered.iterations,
+            informed.iterations
+        );
+        let sol = recovered.solution.as_ref().unwrap();
+        let err = sol.iter().map(|x| (x - 1.0).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-5, "seed={seed} err={err}");
+    }
+    assert!(induced >= 1, "at least one case must exercise the breakdown path");
 }
 
 #[test]
