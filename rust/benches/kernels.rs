@@ -80,7 +80,9 @@ fn quick_main() {
         }
     }
     let json = format!(
-        "{{\n  \"bench\": \"kernels-quick\",\n  \"dataset\": \"{}\",\n  \"n\": {},\n  \
+        "{{\n  \"bench\": \"kernels-quick\",\n  \
+         \"provenance\": \"measured: kernels quick bench\",\n  \
+         \"dataset\": \"{}\",\n  \"n\": {},\n  \
          \"nnz\": {},\n  \"configs\": [\n{}\n  ]\n}}\n",
         d.name,
         d.n(),
@@ -144,7 +146,9 @@ fn quick_level(d: &hbmc::gen::Dataset) {
         ));
     }
     let json = format!(
-        "{{\n  \"bench\": \"level-vs-hbmc\",\n  \"dataset\": \"{}\",\n  \"n\": {},\n  \
+        "{{\n  \"bench\": \"level-vs-hbmc\",\n  \
+         \"provenance\": \"measured: kernels quick bench (level section)\",\n  \
+         \"dataset\": \"{}\",\n  \"n\": {},\n  \
          \"nnz\": {},\n  \"configs\": [\n{}\n  ]\n}}\n",
         d.name,
         d.n(),

@@ -1,0 +1,175 @@
+//! In-region kernel-phase profile across the five orderings — the flight
+//! recorder's perf-trajectory artifact. For each ordering the bench runs
+//! the fused solve with profiling OFF (best of 3) and ON (best of 3),
+//! records the overhead ratio, and drains the profiled run's per-phase
+//! shares, barrier-wait imbalance and coverage into `BENCH_phases.json`.
+//! The HBMC run's span timeline is additionally written as
+//! `TRACE_phases.json` — a ready-to-open chrome://tracing document that CI
+//! uploads next to the numbers.
+//!
+//! `cargo bench --bench phases [-- --quick]`
+//!
+//! Quick mode (`--quick` or `HBMC_BENCH_QUICK=1`) runs the Tiny dataset at
+//! up to 2 threads for CI; the full run uses Small scale at up to 4.
+
+use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
+use hbmc::coordinator::pool::Pool;
+use hbmc::gen::suite;
+use hbmc::obs::{chrome_trace_json, PhaseProfile, PHASE_NAMES};
+use hbmc::solver::plan::{ExecOptions, SolverPlan};
+
+struct OrderingRun {
+    label: String,
+    iterations: usize,
+    plain_seconds: f64,
+    profiled_seconds: f64,
+    profile: PhaseProfile,
+}
+
+impl OrderingRun {
+    /// Profiled wall over unprofiled wall — the recorder's cost. The
+    /// acceptance budget is < 1.05; quick-mode solves are tiny, so noise
+    /// dominates and the gate only consumes the cross-ordering maximum.
+    fn overhead_ratio(&self) -> f64 {
+        self.profiled_seconds / self.plain_seconds.max(1e-12)
+    }
+
+    fn json(&self) -> String {
+        let shares = self.profile.phase_shares();
+        let share_members = PHASE_NAMES
+            .iter()
+            .zip(&shares)
+            .map(|(name, s)| format!("\"{name}\": {s:.4}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        format!(
+            "    {{\"label\": \"{}\", \"iterations\": {}, \"solve_seconds\": {:.6e}, \
+             \"profiled_solve_seconds\": {:.6e}, \"profile_overhead_ratio\": {:.4}, \
+             \"coverage\": {:.4}, \"barrier_wait_imbalance\": {:.4}, \
+             \"dropped_spans\": {}, \"phase_shares\": {{{share_members}}}}}",
+            self.label,
+            self.iterations,
+            self.plain_seconds,
+            self.profiled_seconds,
+            self.overhead_ratio(),
+            self.profile.coverage(),
+            self.profile.barrier_wait_imbalance(),
+            self.profile.dropped(),
+        )
+    }
+}
+
+/// Best-of-3 fused solve; returns (best wall seconds, the best outcome).
+fn best_of_3(
+    plan: &SolverPlan,
+    pool: &Pool,
+    b: &[f64],
+    opts: &ExecOptions,
+) -> (f64, hbmc::solver::plan::SolveOutcome) {
+    let mut best = plan.execute(pool, b, opts).expect("solve");
+    for _ in 0..2 {
+        let o = plan.execute(pool, b, opts).expect("solve");
+        if o.cg.solve_seconds < best.cg.solve_seconds {
+            best = o;
+        }
+    }
+    assert!(best.cg.converged, "phase bench solve must converge");
+    (best.cg.solve_seconds, best)
+}
+
+fn run_ordering(d: &hbmc::gen::Dataset, ordering: OrderingKind, threads: usize) -> OrderingRun {
+    let cfg = SolverConfig {
+        ordering,
+        bs: 8,
+        w: 4,
+        spmv: SpmvKind::Crs,
+        threads,
+        shift: d.shift,
+        rtol: 1e-6,
+        ..Default::default()
+    };
+    let plan = SolverPlan::build(&d.matrix, &cfg).expect("plan build");
+    let pool = Pool::new(threads);
+    let plain = ExecOptions::default();
+    let profiled = ExecOptions { profile: true, ..Default::default() };
+    let _ = plan.execute(&pool, &d.b, &plain).expect("warmup");
+    let (plain_seconds, plain_out) = best_of_3(&plan, &pool, &d.b, &plain);
+    let (profiled_seconds, prof_out) = best_of_3(&plan, &pool, &d.b, &profiled);
+    assert!(plain_out.profile.is_none(), "profile off must not record");
+    let profile = prof_out.profile.expect("profiled fused solve carries a profile");
+    OrderingRun {
+        label: ordering.to_string(),
+        iterations: prof_out.cg.iterations.max(1),
+        plain_seconds,
+        profiled_seconds,
+        profile,
+    }
+}
+
+fn main() {
+    let quick =
+        std::env::args().any(|a| a == "--quick") || std::env::var("HBMC_BENCH_QUICK").is_ok();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let (scale, threads) =
+        if quick { (Scale::Tiny, cores.min(2)) } else { (Scale::Small, cores.min(4)) };
+    let d = suite::dataset("g3_circuit", scale);
+    println!(
+        "phase bench: {} n={} nnz={} threads={threads} ({})",
+        d.name,
+        d.n(),
+        d.nnz(),
+        if quick { "quick" } else { "full" }
+    );
+
+    let orderings = [
+        OrderingKind::Natural,
+        OrderingKind::Mc,
+        OrderingKind::Bmc,
+        OrderingKind::Hbmc,
+        OrderingKind::Level,
+    ];
+    let mut runs = Vec::new();
+    for ordering in orderings {
+        let run = run_ordering(&d, ordering, threads);
+        println!(
+            "{:<8} iters={:<4} plain {:.6}s profiled {:.6}s (x{:.3}) coverage {:.1}% \
+             imbalance {:.2}",
+            run.label,
+            run.iterations,
+            run.plain_seconds,
+            run.profiled_seconds,
+            run.overhead_ratio(),
+            100.0 * run.profile.coverage(),
+            run.profile.barrier_wait_imbalance(),
+        );
+        runs.push(run);
+    }
+
+    // The chrome-trace sample comes from the paper's headline ordering.
+    let hbmc_run = runs
+        .iter()
+        .find(|r| r.label == OrderingKind::Hbmc.to_string())
+        .expect("HBMC ran");
+    let trace_path = hbmc::util::bench_artifact_path("TRACE_phases.json");
+    std::fs::write(&trace_path, chrome_trace_json(&hbmc_run.profile))
+        .expect("write TRACE_phases.json");
+
+    let max_overhead = runs.iter().map(OrderingRun::overhead_ratio).fold(0.0, f64::max);
+    let min_coverage = runs.iter().map(|r| r.profile.coverage()).fold(f64::INFINITY, f64::min);
+    let entries = runs.iter().map(OrderingRun::json).collect::<Vec<_>>().join(",\n");
+    let json = format!(
+        "{{\n  \"bench\": \"phases-quick\",\n  \
+         \"provenance\": \"measured: phases quick bench\",\n  \
+         \"dataset\": \"{}\",\n  \"n\": {},\n  \"nnz\": {},\n  \"threads\": {threads},\n  \
+         \"orderings\": [\n{entries}\n  ],\n  \
+         \"max_profile_overhead_ratio\": {max_overhead:.4},\n  \
+         \"min_coverage\": {min_coverage:.4}\n}}\n",
+        d.name,
+        d.n(),
+        d.nnz(),
+    );
+    let path = hbmc::util::bench_artifact_path("BENCH_phases.json");
+    std::fs::write(&path, &json).expect("write BENCH_phases.json");
+    println!("{json}");
+    println!("wrote {} and {}", path.display(), trace_path.display());
+}

@@ -220,7 +220,7 @@ fn main() {
         );
         let snap = service.metrics_snapshot();
         let qw = snap.histogram("hbmc_queue_wait_microseconds").expect("queue-wait histogram");
-        queue_wait_us = (qw.quantile(0.5), qw.quantile(0.99));
+        queue_wait_us = (qw.quantile(0.5).unwrap_or(0), qw.quantile(0.99).unwrap_or(0));
         println!(
             "queue wait   p50={}µs p99={}µs over {} dispatched jobs",
             queue_wait_us.0, queue_wait_us.1, qw.count
@@ -267,7 +267,9 @@ fn main() {
 
     if quick {
         let json = format!(
-            "{{\n  \"bench\": \"serving-quick\",\n  \"dataset\": \"{}\",\n  \"clients\": {},\n  \
+            "{{\n  \"bench\": \"serving-quick\",\n  \
+             \"provenance\": \"measured: serving quick bench\",\n  \"dataset\": \"{}\",\n  \
+             \"clients\": {},\n  \
              \"requests\": {},\n  \"strategies\": [\n{}\n  ],\n  \
              \"queue_wait_p50_us\": {},\n  \"queue_wait_p99_us\": {},\n  \
              \"overloaded\": {},\n  \"shed\": {}\n}}\n",

@@ -119,7 +119,7 @@ fn main() {
     let spmv_speedup = (crs.spmv_seconds / crs.iterations as f64)
         / (symm.spmv_seconds / symm.iterations as f64);
     let json = format!(
-        "{{\n  \"bench\": \"symmspmv\",\n  \"provenance\": \"measured\",\n  \
+        "{{\n  \"bench\": \"symmspmv\",\n  \"provenance\": \"measured: symmspmv bench\",\n  \
          \"dataset\": \"{}\",\n  \"n\": {},\n  \"nnz\": {},\n  \"threads\": {threads},\n  \
          \"engines\": [\n{},\n{}\n  ],\n  \
          \"matrix_bytes_ratio_symm_vs_crs\": {matrix_bytes_ratio:.4},\n  \

@@ -30,6 +30,7 @@ use crate::coordinator::driver::{SolveOptions, SolveReport};
 use crate::coordinator::report::{micros, Table};
 use crate::coordinator::session::{CacheStats, PlanCache, PlanKey, SolveOutput, SolveSession};
 use crate::error::{HbmcError, Result};
+use crate::obs::flight::PHASE_NAMES;
 use crate::obs::metrics::{Counter, Gauge, Histogram, MetricsRegistry, MetricsSnapshot};
 use crate::obs::prometheus::{self, write_counter, write_gauge};
 use crate::obs::trace::{stage, TraceRecorder};
@@ -288,8 +289,20 @@ pub(crate) struct ServiceObs {
     /// Sessions whose pool was drained and rebuilt after a worker panic.
     pub(crate) pool_rebuilds: Arc<Counter>,
     /// Worst circuit-breaker state across handles (0=closed, 1=half-open,
-    /// 2=open); stays 0 with no breakers configured.
+    /// 2=open); stays 0 with no breakers configured. Deliberately *not* in
+    /// the registry: `metrics_text` renders the whole `hbmc_breaker_state`
+    /// family itself (worst-state sample plus one `{handle=…}` sample per
+    /// breaker, computed at scrape time), and a registry copy would emit a
+    /// duplicate `TYPE` block.
     pub(crate) breaker_state: Arc<Gauge>,
+    /// Per-solve kernel-phase busy time from the opt-in flight recorder,
+    /// µs. One labeled series per (ordering, phase); flattened row-major
+    /// as `ordering_idx * PHASE_NAMES.len() + phase_idx` and registered
+    /// contiguously so the exposition renders one family block.
+    kernel_phase_us: Vec<Arc<Histogram>>,
+    /// Barrier-wait imbalance (max/mean across threads) of the most
+    /// recently profiled solve; 1.0 = perfectly balanced.
+    barrier_imbalance: Arc<Gauge>,
     /// Cumulative per-phase time, µs, from report fields (see type docs).
     phase_setup: Arc<Counter>,
     phase_trisolve: Arc<Counter>,
@@ -307,9 +320,32 @@ pub(crate) struct ServiceObs {
 /// 8-event job lifecycles per 64 jobs at `trace_sample = 1`).
 const TRACE_CAPACITY: usize = 1024;
 
+/// Label values of the `ordering` dimension of
+/// `hbmc_kernel_phase_microseconds`, in registration order (must match
+/// [`ordering_metric_label`]).
+const ORDERING_LABELS: [&str; 5] = ["natural", "mc", "bmc", "hbmc", "level"];
+
+/// Index into [`ORDERING_LABELS`] for a plan's `config_label` (which
+/// always starts with the ordering's display form, e.g. `HBMC(bs=8,…)`).
+fn ordering_metric_label(config_label: &str) -> Option<usize> {
+    let ordering = config_label.split('(').next().unwrap_or("");
+    ORDERING_LABELS.iter().position(|l| ordering.eq_ignore_ascii_case(l))
+}
+
 impl ServiceObs {
     fn new(queue: &QueueConfig) -> ServiceObs {
         let r = MetricsRegistry::new();
+        let mut kernel_phase_us = Vec::with_capacity(ORDERING_LABELS.len() * PHASE_NAMES.len());
+        for ordering in ORDERING_LABELS {
+            for phase in PHASE_NAMES {
+                kernel_phase_us.push(r.histogram_with(
+                    "hbmc_kernel_phase_microseconds",
+                    &format!("phase=\"{phase}\",ordering=\"{ordering}\""),
+                    "Per-solve kernel-phase busy time from the in-region flight recorder \
+                     (profiled solves only).",
+                ));
+            }
+        }
         ServiceObs {
             overloaded_depth: r.counter_with(
                 "hbmc_overloaded_total",
@@ -349,9 +385,11 @@ impl ServiceObs {
                 "hbmc_pool_rebuilds_total",
                 "Sessions whose pool was drained and rebuilt after a worker panic.",
             ),
-            breaker_state: r.gauge(
-                "hbmc_breaker_state",
-                "Worst circuit-breaker state across handles (0=closed, 1=half-open, 2=open).",
+            breaker_state: Arc::new(Gauge::new()),
+            barrier_imbalance: r.gauge(
+                "hbmc_barrier_wait_imbalance",
+                "Barrier-wait imbalance (max/mean across threads) of the most recently \
+                 profiled solve; 1 = perfectly balanced.",
             ),
             phase_setup: r.counter_with(
                 "hbmc_phase_microseconds_total",
@@ -390,6 +428,7 @@ impl ServiceObs {
                 "Iteration-loop wall time per solve.",
             ),
             iterations: r.histogram("hbmc_solve_iterations", "CG iterations per solve."),
+            kernel_phase_us,
             trace: Arc::new(TraceRecorder::new(TRACE_CAPACITY)),
             trace_sample: queue.trace_sample,
             submitted: AtomicU64::new(0),
@@ -420,6 +459,17 @@ impl ServiceObs {
                 "blas1" => self.phase_blas1.add(us),
                 _ => {}
             }
+        }
+        // Profiled solves additionally carry the flight recorder's exact
+        // per-phase totals: one observation per (ordering, phase) series.
+        if let Some(profile) = &report.profile {
+            if let Some(o) = ordering_metric_label(&report.plan.config_label) {
+                for (p, seconds) in profile.phase_totals().iter().enumerate() {
+                    let idx = o * PHASE_NAMES.len() + p;
+                    self.kernel_phase_us[idx].observe((seconds * 1e6) as u64);
+                }
+            }
+            self.barrier_imbalance.set(profile.barrier_wait_imbalance());
         }
     }
 
@@ -622,6 +672,17 @@ impl ServiceCore {
             .max()
             .unwrap_or(0);
         self.obs.breaker_state.set(worst as f64);
+    }
+
+    /// Per-handle breaker states for the labeled `hbmc_breaker_state`
+    /// samples, sorted by handle id so scrape output is stable.
+    pub(crate) fn breaker_states(&self) -> Vec<(u64, u64)> {
+        let mut states: Vec<(u64, u64)> = rlock(&self.breakers)
+            .iter()
+            .map(|(id, b)| (*id, b.state().gauge_value()))
+            .collect();
+        states.sort_unstable_by_key(|&(id, _)| id);
+        states
     }
 
     /// Service health for `/healthz`: `(healthy, body)`.
@@ -1191,6 +1252,25 @@ impl SolverService {
             "Trace events evicted from the full ring buffer.",
             self.core.obs.trace.dropped(),
         );
+        write_counter(
+            &mut out,
+            "hbmc_leaked_workers_total",
+            "Pool workers abandoned by a drain timeout, process-wide.",
+            crate::coordinator::pool::leaked_workers(),
+        );
+        // The breaker family is rendered here rather than from the
+        // registry so the worst-state sample (backward-compatible,
+        // unlabeled) and the per-handle samples share one TYPE block.
+        write_gauge(
+            &mut out,
+            "hbmc_breaker_state",
+            "Circuit-breaker state (0=closed, 1=half-open, 2=open); the unlabeled \
+             sample is the worst state across handles.",
+            self.core.obs.breaker_state.get(),
+        );
+        for (id, state) in self.core.breaker_states() {
+            out.push_str(&format!("hbmc_breaker_state{{handle=\"{id}\"}} {state}\n"));
+        }
         out.push_str(&prometheus::render(&self.core.obs.snapshot()));
         out
     }
@@ -1261,8 +1341,8 @@ impl SolverService {
                     label.to_string(),
                     hist.count.to_string(),
                     value(hist.mean()),
-                    value(hist.quantile(0.5) as f64),
-                    value(hist.quantile(0.99) as f64),
+                    value(hist.quantile(0.5).unwrap_or(0) as f64),
+                    value(hist.quantile(0.99).unwrap_or(0) as f64),
                 ]);
             }
         }
@@ -1443,6 +1523,7 @@ mod tests {
             setup_seconds: 1e-2,
             iterations: 10,
             baseline_solve_seconds: 2e-3,
+            phase_shares: None,
             created_unix: 0,
         };
         assert!(svc.install_profile(profile.clone()).unwrap());
@@ -1490,6 +1571,7 @@ mod tests {
             setup_seconds: 1e-2,
             iterations: 10,
             baseline_solve_seconds: 2e-3,
+            phase_shares: None,
             created_unix: 0,
         };
         assert!(!svc.install_profile(foreign).unwrap(), "cross-machine profiles must not install");
@@ -1544,6 +1626,9 @@ mod tests {
             "hbmc_profile_hits_total",
             "hbmc_tunes_total",
             "hbmc_trace_events_dropped_total",
+            "hbmc_leaked_workers_total",
+            "hbmc_kernel_phase_microseconds",
+            "hbmc_barrier_wait_imbalance",
             "hbmc_overloaded_total",
             "hbmc_shed_total",
             "hbmc_retries_total",
@@ -1618,13 +1703,53 @@ mod tests {
         }
         let (healthy, body) = svc.health();
         assert!(!healthy && body.starts_with("unhealthy:"), "{body}");
-        assert!(svc.metrics_text().contains("hbmc_breaker_state 2\n"));
+        let text = svc.metrics_text();
+        assert!(text.contains("hbmc_breaker_state 2\n"), "{text}");
+        assert!(
+            text.contains(&format!("hbmc_breaker_state{{handle=\"{}\"}} 2\n", h.id())),
+            "per-handle breaker sample missing: {text}"
+        );
         // Half-open now: the single probe is admitted, succeeds, and closes
         // the breaker — service healthy again.
         let out = svc.solve(h, &d.b).unwrap();
         assert!(out.report.converged);
         assert_eq!(svc.health(), (true, "ok\n".to_string()));
         assert!(svc.metrics_text().contains("hbmc_breaker_state 0\n"));
+    }
+
+    #[test]
+    fn profiled_solve_feeds_kernel_phase_metrics() {
+        use crate::obs::metrics::SeriesValue;
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let svc = SolverService::with_config(tiny_cfg(OrderingKind::Hbmc)).unwrap();
+        let h = svc.register_matrix(d.matrix.clone());
+        // An unprofiled solve carries no profile and feeds no phase series.
+        let plain = svc.solve(h, &d.b).unwrap();
+        assert!(plain.report.profile.is_none());
+        let mut req = SolveRequest::new();
+        req.options.profile = true;
+        let out = svc.solve_with(h, &d.b, &req).unwrap();
+        let profile = out.report.profile.as_ref().expect("profiled solve returns a profile");
+        assert!(profile.coverage() > 0.0, "recorder must have captured spans");
+        // Exactly one observation landed in each of this ordering's phase
+        // series (5 phases), and only there.
+        let snap = svc.metrics_snapshot();
+        let counts: Vec<u64> = snap
+            .series
+            .iter()
+            .filter(|s| s.family == "hbmc_kernel_phase_microseconds")
+            .map(|s| match &s.value {
+                SeriesValue::Histogram(hist) => hist.count,
+                _ => 0,
+            })
+            .collect();
+        assert_eq!(counts.len(), ORDERING_LABELS.len() * PHASE_NAMES.len());
+        assert_eq!(counts.iter().sum::<u64>(), PHASE_NAMES.len() as u64);
+        let text = svc.metrics_text();
+        assert!(text.contains("# TYPE hbmc_kernel_phase_microseconds histogram"), "{text}");
+        assert!(text.contains("phase=\"spmv\",ordering=\"hbmc\""), "{text}");
+        assert!(text.contains("# TYPE hbmc_barrier_wait_imbalance gauge"), "{text}");
+        assert!(text.contains("hbmc_leaked_workers_total"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Perf-regression gate over the `BENCH_*.json` perf-trajectory artifacts.
+//!
+//! CI snapshots the committed artifacts into a baseline directory, runs the
+//! quick benches (which overwrite the repo-root copies with fresh
+//! measurements), then runs
+//!
+//! ```text
+//! bench_gate --baseline bench_baseline --current .
+//! ```
+//!
+//! which compares every numeric metric it recognizes and exits non-zero
+//! when a measured metric regressed beyond the tolerance (`--tol`, or the
+//! `HBMC_BENCH_TOL` env var; default 0.15 = 15%, generous because quick
+//! benches on shared CI runners are noisy).
+//!
+//! Metric direction is inferred from the key name: `*_seconds` / `*_us` /
+//! `*overhead_ratio` regress upward; `*_per_sec` / `*_gflops` / `*_gbps` /
+//! `speedup` / `coverage` regress downward; everything else (counts,
+//! analytic model strings, labels) is informational. `null` on either side
+//! skips the metric — committed baselines authored without a toolchain
+//! carry null timings until the documented refresh (see README) replaces
+//! them.
+//!
+//! **Auto-seed mode:** a baseline file whose top-level `provenance` does
+//! not start with `"measured"` has never held real numbers on this branch;
+//! the gate reports it as seeded-not-compared and stays green, so the
+//! first CI run after adding a bench cannot fail against a schema stub.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use hbmc::util::json::Json;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Direction {
+    /// Larger is a regression (times, waits, overhead ratios).
+    UpIsWorse,
+    /// Smaller is a regression (throughput, bandwidth, coverage).
+    DownIsWorse,
+    /// Informational only.
+    Skip,
+}
+
+fn direction(key: &str) -> Direction {
+    if key.ends_with("_seconds") || key.ends_with("_us") || key.ends_with("overhead_ratio") {
+        Direction::UpIsWorse
+    } else if key.ends_with("_per_sec")
+        || key.ends_with("_gflops")
+        || key.ends_with("_gbps")
+        || key.ends_with("speedup")
+        || key.ends_with("coverage")
+    {
+        Direction::DownIsWorse
+    } else {
+        Direction::Skip
+    }
+}
+
+struct Gate {
+    tol: f64,
+    checked: usize,
+    improved: usize,
+    regressions: Vec<String>,
+}
+
+impl Gate {
+    fn leaf(&mut self, file: &str, path: &str, key: &str, base: f64, cur: f64) {
+        let dir = direction(key);
+        if dir == Direction::Skip || !base.is_finite() || !cur.is_finite() || base <= 0.0 {
+            return;
+        }
+        self.checked += 1;
+        let ratio = cur / base;
+        let (regressed, improved) = match dir {
+            Direction::UpIsWorse => (ratio > 1.0 + self.tol, ratio < 1.0),
+            Direction::DownIsWorse => (ratio < 1.0 - self.tol, ratio > 1.0),
+            Direction::Skip => unreachable!(),
+        };
+        if regressed {
+            self.regressions.push(format!(
+                "{file}: {path} regressed {base:.6} -> {cur:.6} ({:+.1}% vs tol {:.0}%)",
+                100.0 * (ratio - 1.0),
+                100.0 * self.tol
+            ));
+        } else if improved {
+            self.improved += 1;
+        }
+    }
+
+    /// Structural walk: objects by key, arrays by index (bench emitters are
+    /// deterministic), numbers as gated leaves. `null` anywhere skips.
+    fn walk(&mut self, file: &str, path: &str, key: &str, base: &Json, cur: &Json) {
+        match (base, cur) {
+            (Json::Num(b), Json::Num(c)) => self.leaf(file, path, key, *b, *c),
+            (Json::Obj(members), _) => {
+                for (k, bv) in members {
+                    match cur.get(k) {
+                        Some(cv) => self.walk(file, &format!("{path}.{k}"), k, bv, cv),
+                        None if direction(k) != Direction::Skip && !bv.is_null() => {
+                            self.regressions
+                                .push(format!("{file}: {path}.{k} disappeared from current run"));
+                        }
+                        None => {}
+                    }
+                }
+            }
+            (Json::Arr(bs), Json::Arr(cs)) => {
+                for (i, bv) in bs.iter().enumerate() {
+                    let Some(cv) = cs.get(i) else { continue };
+                    // Prefer the entry's own label for readable messages.
+                    let name = ["label", "strategy"]
+                        .iter()
+                        .find_map(|k| bv.get(k).and_then(Json::as_str))
+                        .map(str::to_string)
+                        .unwrap_or_else(|| i.to_string());
+                    self.walk(file, &format!("{path}[{name}]"), key, bv, cv);
+                }
+            }
+            _ => {} // null vs number, type drift, strings: informational
+        }
+    }
+}
+
+fn arg_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn bench_files(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        })
+        .collect();
+    out.sort();
+    Ok(out)
+}
+
+fn run() -> Result<bool, String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let usage = "usage: bench_gate --baseline <dir> --current <dir> [--tol X]";
+    let baseline = PathBuf::from(arg_value(&args, "--baseline").ok_or(usage)?);
+    let current = PathBuf::from(arg_value(&args, "--current").ok_or("--current <dir> required")?);
+    let tol = match arg_value(&args, "--tol").or_else(|| std::env::var("HBMC_BENCH_TOL").ok()) {
+        Some(s) => s.parse::<f64>().map_err(|_| format!("bad tolerance {s:?}"))?,
+        None => 0.15,
+    };
+    let mut gate = Gate { tol, checked: 0, improved: 0, regressions: Vec::new() };
+    let mut seeded = 0usize;
+    let files = bench_files(&baseline)
+        .map_err(|e| format!("reading baseline dir {}: {e}", baseline.display()))?;
+    if files.is_empty() {
+        return Err(format!("no BENCH_*.json baselines in {}", baseline.display()));
+    }
+    for bpath in files {
+        let name = bpath.file_name().and_then(|n| n.to_str()).unwrap_or("?").to_string();
+        let btext = std::fs::read_to_string(&bpath)
+            .map_err(|e| format!("reading {}: {e}", bpath.display()))?;
+        let base = Json::parse(&btext).map_err(|e| format!("{name} (baseline): {e}"))?;
+        let measured = base
+            .get("provenance")
+            .and_then(Json::as_str)
+            .is_some_and(|p| p.starts_with("measured"));
+        if !measured {
+            println!("bench-gate: {name}: baseline not yet measured — auto-seed, not compared");
+            seeded += 1;
+            continue;
+        }
+        let cpath = current.join(&name);
+        let Ok(ctext) = std::fs::read_to_string(&cpath) else {
+            let missing = format!(
+                "{name}: measured baseline but no current run at {}",
+                cpath.display()
+            );
+            gate.regressions.push(missing);
+            continue;
+        };
+        let cur = Json::parse(&ctext).map_err(|e| format!("{name} (current): {e}"))?;
+        gate.walk(&name, "$", "", &base, &cur);
+    }
+    for r in &gate.regressions {
+        eprintln!("bench-gate: REGRESSION {r}");
+    }
+    println!(
+        "bench-gate: {} metric(s) checked, {} improved, {} regressed, {} file(s) auto-seeded \
+         (tol {:.0}%)",
+        gate.checked,
+        gate.improved,
+        gate.regressions.len(),
+        seeded,
+        100.0 * gate.tol
+    );
+    Ok(gate.regressions.is_empty())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("bench-gate: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -13,11 +13,21 @@ pub struct Args {
     switches: Vec<String>,
 }
 
-/// Flags that take no value. (`--retry`, `--breaker-threshold` and
-/// `--inject` take values, so they must NOT be listed here; `--chaos` is
-/// the consent switch that arms `--inject`.)
-const SWITCHES: [&str; 8] =
-    ["history", "verbose", "no-intrinsics", "help", "setup-only", "auto", "quick", "chaos"];
+/// Flags that take no value. (`--retry`, `--breaker-threshold`,
+/// `--inject` and `--trace-out` take values, so they must NOT be listed
+/// here; `--chaos` is the consent switch that arms `--inject`.)
+const SWITCHES: [&str; 10] = [
+    "history",
+    "verbose",
+    "no-intrinsics",
+    "help",
+    "setup-only",
+    "auto",
+    "quick",
+    "chaos",
+    "profile",
+    "explain",
+];
 
 impl Args {
     /// Parse from an iterator of arguments (program name excluded).
@@ -137,6 +147,18 @@ mod tests {
         assert_eq!(a.usize_flag("retry", 0).unwrap(), 2);
         let a = parse("serve --dataset ieej --breaker-threshold 5").unwrap();
         assert_eq!(a.usize_flag("breaker-threshold", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn profiling_flags() {
+        // --profile / --explain are switches; --trace-out takes a path and
+        // must stay OUT of SWITCHES or it would eat its value.
+        let a = parse("solve --dataset ieej --profile --trace-out trace.json").unwrap();
+        assert!(a.switch("profile"));
+        assert_eq!(a.flag("trace-out"), Some("trace.json"));
+        let a = parse("tune --dataset ieej --quick --explain").unwrap();
+        assert!(a.switch("explain"));
+        assert!(!a.switch("profile"));
     }
 
     #[test]

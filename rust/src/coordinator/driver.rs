@@ -19,6 +19,7 @@ use crate::config::SolverConfig;
 use crate::coordinator::metrics::SpmvTraffic;
 use crate::coordinator::session::SolveSession;
 use crate::error::Result;
+use crate::obs::flight::PhaseProfile;
 use crate::schedule::cost::ScheduleCost;
 use crate::solver::cg::CgResult;
 use crate::solver::plan::{SetupStats, SolverPlan};
@@ -38,6 +39,11 @@ pub struct SolveOptions {
     pub rtol: Option<f64>,
     /// Override the plan's iteration cap for this solve.
     pub max_iters: Option<usize>,
+    /// Arm the in-region flight recorder: the report comes back with
+    /// [`SolveReport::profile`] populated (per-thread phase spans +
+    /// barrier-wait attribution; fused path only). Numerically inert —
+    /// see `crate::obs::flight`.
+    pub profile: bool,
 }
 
 impl SolveOptions {
@@ -54,6 +60,11 @@ impl SolveOptions {
     /// History + solution.
     pub fn full() -> SolveOptions {
         SolveOptions { record_history: true, return_solution: true, ..Default::default() }
+    }
+
+    /// Arm the in-region flight recorder (`solve --profile`).
+    pub fn profiled() -> SolveOptions {
+        SolveOptions { profile: true, ..Default::default() }
     }
 }
 
@@ -143,6 +154,10 @@ pub struct SolveReport {
     /// Per-retry cause + recovery action, in order (empty when
     /// `retries == 0`).
     pub attempts: Vec<RetryAttempt>,
+    /// In-region flight-recorder profile (per-thread phase spans,
+    /// barrier-wait attribution) when [`SolveOptions::profile`] was set
+    /// and the solve ran the fused path; `None` otherwise.
+    pub profile: Option<PhaseProfile>,
     /// The setup-phase metrics of the plan this solve ran on.
     pub plan: PlanReport,
 }
@@ -166,6 +181,9 @@ impl SolveReport {
             // the job.
             retries: 0,
             attempts: Vec::new(),
+            // Filled in by the session (the drained profile rides on the
+            // `SolveOutcome`, which `from_parts` does not see).
+            profile: None,
             plan: PlanReport::of(plan),
         }
     }

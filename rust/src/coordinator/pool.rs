@@ -28,12 +28,22 @@
 //! the completion barrier at the end of `run` guarantees no worker touches
 //! the closure after `run` returns, so the borrow never escapes.
 
-use std::cell::UnsafeCell;
+use std::cell::{Cell, UnsafeCell};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::resil::FaultInjector;
+
+thread_local! {
+    /// Nanoseconds the *current thread* has spent parked in
+    /// [`Pool::color_barrier`] since it last called
+    /// [`Pool::take_barrier_wait_ns`]. Thread-local so the hot path needs
+    /// no `tid` plumbing and no shared writes: each thread accumulates its
+    /// own wait and the flight recorder drains it at the next phase mark.
+    /// Only written while [`Pool::set_profiling`] is on.
+    static BARRIER_WAIT_NS: Cell<u64> = const { Cell::new(0) };
+}
 
 /// Process-wide count of worker threads detached (never joined) by
 /// [`Pool::drain`] because they failed to park within the grace period —
@@ -95,6 +105,11 @@ struct Shared {
     /// Deterministic fault injection (chaos testing; see `crate::resil`).
     /// `None` in production: the only cost is this null check per barrier.
     injector: Option<Arc<FaultInjector>>,
+    /// When set (see [`Pool::set_profiling`]), every barrier crossing
+    /// stamps the monotonic clock around its wait and accumulates the
+    /// elapsed time into the crossing thread's [`BARRIER_WAIT_NS`] cell.
+    /// Off by default: the unprofiled barrier path pays one relaxed load.
+    profiling: AtomicBool,
 }
 
 /// Persistent worker pool; see module docs.
@@ -132,6 +147,7 @@ impl Pool {
             active_jobs: AtomicUsize::new(0),
             worker_panicked: AtomicBool::new(false),
             injector,
+            profiling: AtomicBool::new(false),
         });
         let handles = (1..nthreads)
             .map(|tid| {
@@ -220,8 +236,33 @@ impl Pool {
             inj.barrier_hook(prev / self.shared.nthreads as u64);
         }
         if self.shared.nthreads > 1 {
-            self.shared.barrier.wait();
+            if self.shared.profiling.load(Ordering::Relaxed) {
+                let t0 = std::time::Instant::now();
+                self.shared.barrier.wait();
+                let waited = t0.elapsed().as_nanos() as u64;
+                BARRIER_WAIT_NS.with(|c| c.set(c.get() + waited));
+            } else {
+                self.shared.barrier.wait();
+            }
         }
+    }
+
+    /// Arm (or disarm) barrier-wait timing for subsequent barrier
+    /// crossings on this pool. Cheap and raceless to flip between jobs;
+    /// flipping it *during* a job would merely start/stop accumulation
+    /// mid-flight. Off by default — the unprofiled barrier pays exactly
+    /// one relaxed load.
+    pub fn set_profiling(&self, on: bool) {
+        self.shared.profiling.store(on, Ordering::Relaxed);
+    }
+
+    /// Drain the **calling thread's** accumulated barrier-wait
+    /// nanoseconds (thread-local; resets to zero). In-region profiling
+    /// calls this at every phase mark so each recorded span can report
+    /// how much of its interval was barrier parking rather than work;
+    /// callers outside a job use it to clear stale state.
+    pub fn take_barrier_wait_ns(&self) -> u64 {
+        BARRIER_WAIT_NS.with(|c| c.replace(0))
     }
 
     /// Phase boundary inside a persistent SPMD region (the single-dispatch
@@ -693,6 +734,42 @@ mod tests {
             assert_eq!(pool.drain(), 0, "nt={nt}");
             assert_eq!(leaked_workers(), before);
         }
+    }
+
+    #[test]
+    fn barrier_wait_accumulates_only_while_profiling() {
+        let pool = Pool::new(4);
+        // Clear any stale thread-local state, then run unprofiled: the
+        // accumulator must stay at zero.
+        pool.take_barrier_wait_ns();
+        pool.run(&|_, _| {
+            pool.take_barrier_wait_ns();
+            for _ in 0..3 {
+                pool.color_barrier();
+            }
+            assert_eq!(pool.take_barrier_wait_ns(), 0);
+        });
+        // Profiled: a deliberately skewed arrival makes the fast threads
+        // park measurably, and take() drains + resets per thread.
+        pool.set_profiling(true);
+        let waits = Mutex::new(Vec::new());
+        pool.run(&|tid, _| {
+            pool.take_barrier_wait_ns();
+            if tid == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            pool.color_barrier();
+            let w = pool.take_barrier_wait_ns();
+            assert_eq!(pool.take_barrier_wait_ns(), 0, "take must reset");
+            waits.lock().unwrap().push((tid, w));
+        });
+        pool.set_profiling(false);
+        let waits = waits.into_inner().unwrap();
+        assert_eq!(waits.len(), 4);
+        // At least one non-straggler thread must have parked for a
+        // nontrivial fraction of the straggler's sleep.
+        let max_wait = waits.iter().map(|&(_, w)| w).max().unwrap();
+        assert!(max_wait >= 5_000_000, "max wait {max_wait}ns too small");
     }
 
     #[test]

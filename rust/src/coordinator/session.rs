@@ -138,6 +138,7 @@ impl SolveSession {
                 record_history: opts.record_history,
                 rtol: Some(opts.rtol.unwrap_or(self.rtol)),
                 max_iters: Some(opts.max_iters.unwrap_or(self.max_iters)),
+                profile: opts.profile,
                 ..Default::default()
             },
         )?;
@@ -145,6 +146,7 @@ impl SolveSession {
         let mut report = SolveReport::from_parts(&self.plan, out.cg, solve_index);
         report.dispatches = out.dispatches;
         report.pool_syncs = out.pool_syncs;
+        report.profile = out.profile;
         if opts.return_solution {
             report.solution = Some(out.x.clone());
         }

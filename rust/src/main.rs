@@ -122,6 +122,10 @@ COMMANDS
                                               generated dataset; with --spmv symmcsr the
                                               stored lower triangle is read directly)
                [--repeat N] [--setup-only]   (plan built once, N solves on one session)
+               [--profile]                   (in-region flight recorder: per-phase busy
+                                              table, barrier-wait imbalance, coverage)
+               [--trace-out <file.json>]     (write the last solve's spans as a
+                                              chrome://tracing JSON; implies --profile)
                [--batch N]                   (submit N async jobs, micro-batched dispatch)
                [--auto] [--store <path>]     (apply the stored tuned profile for this
                                               matrix + machine, if one exists)
@@ -134,10 +138,11 @@ COMMANDS
                                               refused without --chaos)
   tune         --dataset <name> [--scale S] [--store <path>] [--trials N] [--warmup N]
                [--reuse X] [--strategy auto|exhaustive|racing] [--max-candidates N]
-               [--quick]
+               [--quick] [--explain]
                (search ordering/bs/w/spmv/threads for this matrix on this
                 machine, persist the winner; --quick = CI-sized space and
-                a BENCH_tune.json perf artifact)
+                a BENCH_tune.json perf artifact; --explain prints the
+                winner's kernel-phase attribution)
   serve        --dataset <name> [--scale S] [--clients M] [--requests K]
                [--max-batch B] [--max-wait-us U] [--deadline-ms D]
                (async stress: M client threads submit K jobs each; prints
@@ -332,8 +337,13 @@ fn cmd_solve(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    // Phase 2: N solves against the same plan.
-    let opts = SolveOptions { record_history: args.switch("history"), ..Default::default() };
+    // Phase 2: N solves against the same plan. `--trace-out` implies
+    // profiling — a chrome trace needs the recorded spans.
+    let opts = SolveOptions {
+        record_history: args.switch("history"),
+        profile: args.switch("profile") || args.flag("trace-out").is_some(),
+        ..Default::default()
+    };
     let mut total_solve = 0.0;
     let mut last: Option<hbmc::coordinator::session::SolveOutput> = None;
     for k in 0..repeat {
@@ -349,6 +359,32 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let out = last.expect("repeat >= 1");
     for (k, s) in &out.report.kernel_seconds {
         println!("  {k:<10} {s:.3}s");
+    }
+    // `--profile`: the flight recorder's view of the last solve — per-phase
+    // busy totals summed across threads, plus the recorder's own health
+    // numbers (coverage of thread-time accounted for, barrier imbalance).
+    if let Some(profile) = &out.report.profile {
+        let totals = profile.phase_totals();
+        let busy: f64 = totals.iter().sum();
+        println!(
+            "profile: {} thread(s), coverage {:.1}% of thread-time, \
+             barrier-wait imbalance {:.2}",
+            profile.threads(),
+            100.0 * profile.coverage(),
+            profile.barrier_wait_imbalance()
+        );
+        for (name, seconds) in hbmc::obs::PHASE_NAMES.iter().zip(&totals) {
+            let share = if busy > 0.0 { 100.0 * seconds / busy } else { 0.0 };
+            println!("  {name:<13} {seconds:>10.6}s  {share:>5.1}%");
+        }
+        if profile.dropped() > 0 {
+            println!("  ({} span(s) dropped; aggregates stay exact)", profile.dropped());
+        }
+        if let Some(path) = args.flag("trace-out") {
+            std::fs::write(path, hbmc::obs::chrome_trace_json(profile))
+                .with_context(|| format!("writing {path}"))?;
+            println!("wrote chrome trace to {path} (open in chrome://tracing or Perfetto)");
+        }
     }
     if args.switch("history") {
         for (i, r) in out.report.residual_history.iter().enumerate() {
@@ -444,6 +480,19 @@ fn cmd_tune(args: &Args) -> Result<()> {
         p.baseline_solve_seconds,
         p.speedup()
     );
+    // `--explain`: where the winner spends its time, from the one profiled
+    // attribution solve the measurement harness ran on each finalist.
+    if args.switch("explain") {
+        match &p.phase_shares {
+            Some(shares) => {
+                println!("explain: winner phase attribution (one profiled solve):");
+                for (name, share) in hbmc::obs::PHASE_NAMES.iter().zip(shares) {
+                    println!("  {name:<13} {:>5.1}%", 100.0 * share);
+                }
+            }
+            None => println!("explain: no phase attribution recorded for the winner"),
+        }
+    }
 
     // Persist + end-to-end check: a fresh service attached to the store
     // must auto-apply the profile on a default-config solve.
@@ -469,7 +518,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
     if quick {
         let path = hbmc::util::bench_artifact_path("BENCH_tune.json");
         let json = format!(
-            "{{\n  \"bench\": \"tune-quick\",\n  \"dataset\": \"{}\",\n  \"hardware\": \"{hw}\",\n  \
+            "{{\n  \"bench\": \"tune-quick\",\n  \
+             \"provenance\": \"measured: tune quick bench\",\n  \
+             \"dataset\": \"{}\",\n  \"hardware\": \"{hw}\",\n  \
              \"candidates\": {},\n  \"default_config\": \"{}\",\n  \
              \"default_solve_seconds\": {:.6e},\n  \"tuned_config\": \"{}\",\n  \
              \"tuned_solve_seconds\": {:.6e},\n  \"speedup\": {:.4},\n  \

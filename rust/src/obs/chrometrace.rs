@@ -1,0 +1,122 @@
+//! Chrome-trace (`chrome://tracing` / Perfetto) export of a drained
+//! [`PhaseProfile`](crate::obs::flight::PhaseProfile).
+//!
+//! Emits the Trace Event Format's JSON-object form: a `traceEvents` array
+//! of complete (`"ph":"X"`) events, one process (`pid` 1), one trace row
+//! per solver thread (`tid` = lane index). Each recorded span renders as
+//! its *busy* part under the phase name, followed — when the span parked
+//! in pool barriers — by a separate `barrier-wait` slice covering the
+//! tail of the interval, so imbalance is visible as staggered wait blocks
+//! rather than inflated kernel bars. Timestamps are microseconds since
+//! the recorder epoch; events per thread are monotone and non-overlapping
+//! by construction (spans are recorded in order and split, never nested),
+//! which `tests/profiling.rs` asserts structurally.
+
+use crate::obs::flight::{PhaseProfile, PHASE_NAMES};
+
+/// Render a profile as a chrome://tracing JSON document. Load the string
+/// (saved to a file) in Perfetto or `chrome://tracing` to see the solve
+/// as a per-thread timeline.
+pub fn chrome_trace_json(profile: &PhaseProfile) -> String {
+    let nspans: usize = profile.lanes.iter().map(|l| l.spans.len()).sum();
+    let mut out = String::with_capacity(256 + nspans * 96);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    let mut first = true;
+    let mut push_event = |out: &mut String, name: &str, tid: usize, ts_ns: u64, dur_ns: u64| {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{:.3},\"dur\":{:.3}}}",
+            name,
+            tid,
+            ts_ns as f64 / 1e3,
+            dur_ns as f64 / 1e3,
+        ));
+    };
+    for (tid, lane) in profile.lanes.iter().enumerate() {
+        for span in &lane.spans {
+            let total = span.end_ns.saturating_sub(span.start_ns);
+            let wait = span.wait_ns.min(total);
+            let busy = total - wait;
+            if busy > 0 {
+                push_event(&mut out, span.phase.name(), tid, span.start_ns, busy);
+            }
+            if wait > 0 {
+                push_event(
+                    &mut out,
+                    PHASE_NAMES[PHASE_NAMES.len() - 1],
+                    tid,
+                    span.start_ns + busy,
+                    wait,
+                );
+            }
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::flight::{FlightRecorder, Phase};
+    use crate::util::json::Json;
+
+    fn sample() -> PhaseProfile {
+        let rec = FlightRecorder::new(2, 8);
+        rec.record(0, Phase::Spmv, 0, 10_000, 0);
+        rec.record(0, Phase::Blas1, 10_000, 30_000, 5_000);
+        rec.record(1, Phase::TrisolveFwd, 0, 25_000, 12_000);
+        rec.into_profile(3e-5)
+    }
+
+    #[test]
+    fn output_parses_and_splits_waits() {
+        let s = chrome_trace_json(&sample());
+        let j = Json::parse(&s).expect("valid JSON");
+        let events = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+        // spmv (no wait) + blas1 busy + blas1's wait + trisolve-fwd busy +
+        // its wait = 5 events.
+        assert_eq!(events.len(), 5);
+        for ev in events {
+            assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+            assert_eq!(ev.get("pid").and_then(Json::as_f64), Some(1.0));
+            let name = ev.get("name").and_then(Json::as_str).unwrap();
+            assert!(PHASE_NAMES.contains(&name), "unknown event name {name}");
+            assert!(ev.get("ts").and_then(Json::as_f64).is_some());
+            assert!(ev.get("dur").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+        // The wait slice immediately follows its span's busy slice.
+        let blas_busy = &events[1];
+        let blas_wait = &events[2];
+        assert_eq!(blas_wait.get("name").and_then(Json::as_str), Some("barrier-wait"));
+        let busy_end = blas_busy.get("ts").and_then(Json::as_f64).unwrap()
+            + blas_busy.get("dur").and_then(Json::as_f64).unwrap();
+        assert!((blas_wait.get("ts").and_then(Json::as_f64).unwrap() - busy_end).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_thread_events_are_monotone_and_non_overlapping() {
+        let s = chrome_trace_json(&sample());
+        let j = Json::parse(&s).unwrap();
+        let events = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let mut last_end = [0.0f64; 2];
+        for ev in events {
+            let tid = ev.get("tid").and_then(Json::as_f64).unwrap() as usize;
+            let ts = ev.get("ts").and_then(Json::as_f64).unwrap();
+            let dur = ev.get("dur").and_then(Json::as_f64).unwrap();
+            assert!(ts + 1e-9 >= last_end[tid], "overlap on tid {tid}");
+            last_end[tid] = ts + dur;
+        }
+    }
+
+    #[test]
+    fn empty_profile_renders_an_empty_event_list() {
+        let rec = FlightRecorder::new(1, 1);
+        let s = chrome_trace_json(&rec.into_profile(0.0));
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("traceEvents").and_then(Json::as_arr).unwrap().len(), 0);
+    }
+}

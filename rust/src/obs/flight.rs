@@ -1,0 +1,357 @@
+//! Barrier-free per-thread flight recorder for the fused CG region.
+//!
+//! The paper's argument is about where time goes *inside* the solver loop
+//! — substitution sweeps vs SpMV vs synchronization — so the profiler has
+//! to live inside the single-dispatch region without perturbing it. The
+//! design rules, in order of importance:
+//!
+//! 1. **Zero new barriers.** Spans are stamped at *existing* phase
+//!    boundaries (the marks the fused worker already performs); nothing
+//!    here synchronizes with anything.
+//! 2. **Zero in-region allocation.** Every lane's span vector is
+//!    preallocated to a fixed capacity before the dispatch; once full,
+//!    further spans fold into the per-phase aggregates (which are exact
+//!    regardless) and a `dropped` counter — the timeline truncates, the
+//!    totals never do.
+//! 3. **No sharing.** Each worker owns one cache-line-padded [`Lane`]
+//!    indexed by `tid`; no other thread touches it until the dispatch's
+//!    completion barrier has passed and [`FlightRecorder::into_profile`]
+//!    drains everything on the caller.
+//!
+//! The clock is one shared [`Instant`] epoch read via
+//! [`FlightRecorder::now_ns`] — monotonic, no cross-thread clock skew
+//! beyond `Instant`'s own guarantees, and cheap enough (~20 ns) that a
+//! handful of reads per CG iteration stays far under the 5% overhead
+//! budget. Barrier parking time is measured separately by the pool
+//! (thread-locally; see `Pool::take_barrier_wait_ns`) and subtracted from
+//! each span, so a span's *busy* time and its *wait* time render as
+//! distinct timeline slices.
+
+use std::cell::UnsafeCell;
+use std::time::Instant;
+
+/// Number of busy phases tracked (excludes the derived barrier-wait lane).
+pub const NUM_PHASES: usize = 4;
+
+/// Canonical event names, in [`Phase`] index order, with the derived
+/// "barrier-wait" pseudo-phase last. The chrome-trace exporter, the
+/// Prometheus `phase` label and the CLI table all use exactly these.
+pub const PHASE_NAMES: [&str; NUM_PHASES + 1] =
+    ["spmv", "trisolve-fwd", "trisolve-bwd", "blas1", "barrier-wait"];
+
+/// One busy phase of the fused CG worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Spmv = 0,
+    TrisolveFwd = 1,
+    TrisolveBwd = 2,
+    Blas1 = 3,
+}
+
+impl Phase {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    #[inline]
+    pub fn name(self) -> &'static str {
+        PHASE_NAMES[self as usize]
+    }
+}
+
+/// One recorded interval on one thread: `[start_ns, end_ns)` since the
+/// recorder's epoch, of which the final `wait_ns` were spent parked in
+/// pool barriers (the busy part is `end - start - wait`).
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseSpan {
+    pub phase: Phase,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub wait_ns: u64,
+}
+
+/// Exact running totals per lane — updated on every record, even after
+/// the span ring is full.
+#[derive(Clone, Copy, Debug, Default)]
+struct LaneAgg {
+    /// Busy nanoseconds per phase (span length minus barrier wait).
+    phase_ns: [u64; NUM_PHASES],
+    /// Barrier-parked nanoseconds, all phases.
+    wait_ns: u64,
+    /// Spans that exceeded capacity (timeline truncated; totals exact).
+    dropped: u64,
+}
+
+/// One thread's recording lane, padded to two cache lines so adjacent
+/// lanes never false-share.
+#[repr(align(128))]
+struct Lane {
+    spans: UnsafeCell<Vec<PhaseSpan>>,
+    agg: UnsafeCell<LaneAgg>,
+}
+
+// SAFETY: lane `tid` is written only by pool worker `tid` during the
+// dispatch (the fused worker calls `record(tid, ..)` with its own tid
+// exclusively); the caller reads only after the dispatch's completion
+// barrier, which orders every worker write before the read.
+unsafe impl Sync for Lane {}
+
+/// Preallocated per-thread recorder; see module docs. Built once per
+/// profiled solve, handed by reference into the fused region, consumed by
+/// [`FlightRecorder::into_profile`] after the dispatch returns.
+pub struct FlightRecorder {
+    epoch: Instant,
+    capacity: usize,
+    lanes: Vec<Lane>,
+}
+
+impl FlightRecorder {
+    /// Allocate `nthreads` lanes of `capacity` spans each. Capacity is the
+    /// caller's problem (the plan sizes it from `max_iters`, capped so a
+    /// pathological iteration bound cannot ask for unbounded memory).
+    pub fn new(nthreads: usize, capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            epoch: Instant::now(),
+            capacity,
+            lanes: (0..nthreads)
+                .map(|_| Lane {
+                    spans: UnsafeCell::new(Vec::with_capacity(capacity)),
+                    agg: UnsafeCell::new(LaneAgg::default()),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn nthreads(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Nanoseconds since the recorder's epoch (monotonic).
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record one span on thread `tid`'s lane. Called only by worker `tid`
+    /// from inside the dispatched region (see the `Sync` safety note).
+    /// Aggregates always update; the span list stops growing at capacity
+    /// (allocation-free by construction) and counts the overflow.
+    #[inline]
+    pub fn record(&self, tid: usize, phase: Phase, start_ns: u64, end_ns: u64, wait_ns: u64) {
+        debug_assert!(tid < self.lanes.len());
+        let lane = &self.lanes[tid];
+        // SAFETY: exclusive owner-thread access during the job; published
+        // to the draining caller by the pool's completion barrier.
+        unsafe {
+            let agg = &mut *lane.agg.get();
+            let busy = end_ns.saturating_sub(start_ns).saturating_sub(wait_ns);
+            agg.phase_ns[phase.idx()] += busy;
+            agg.wait_ns += wait_ns;
+            let spans = &mut *lane.spans.get();
+            if spans.len() < self.capacity {
+                spans.push(PhaseSpan { phase, start_ns, end_ns, wait_ns });
+            } else {
+                agg.dropped += 1;
+            }
+        }
+    }
+
+    /// Drain everything into an owned, shareable [`PhaseProfile`]. Called
+    /// on the dispatching thread after `Pool::run` returned (so every
+    /// worker write happened-before this read). `wall_seconds` is the
+    /// region's wall time as measured by the caller.
+    pub fn into_profile(self, wall_seconds: f64) -> PhaseProfile {
+        let lanes = self
+            .lanes
+            .into_iter()
+            .map(|lane| {
+                let spans = lane.spans.into_inner();
+                let agg = lane.agg.into_inner();
+                LaneProfile {
+                    phase_seconds: std::array::from_fn(|i| agg.phase_ns[i] as f64 * 1e-9),
+                    barrier_wait_seconds: agg.wait_ns as f64 * 1e-9,
+                    spans,
+                    dropped: agg.dropped,
+                }
+            })
+            .collect();
+        PhaseProfile { wall_seconds, lanes }
+    }
+}
+
+/// One thread's drained profile.
+#[derive(Clone, Debug)]
+pub struct LaneProfile {
+    /// Busy seconds per [`Phase`] (index = `Phase::idx()`).
+    pub phase_seconds: [f64; NUM_PHASES],
+    /// Seconds parked in pool barriers, all phases.
+    pub barrier_wait_seconds: f64,
+    /// The recorded timeline (possibly truncated; see `dropped`).
+    pub spans: Vec<PhaseSpan>,
+    /// Spans beyond capacity — aggregates above still include them.
+    pub dropped: u64,
+}
+
+impl LaneProfile {
+    /// Busy + barrier-wait seconds: everything this lane accounted for.
+    pub fn accounted_seconds(&self) -> f64 {
+        self.phase_seconds.iter().sum::<f64>() + self.barrier_wait_seconds
+    }
+}
+
+/// The drained result of one profiled solve: per-thread lanes plus the
+/// region's wall time. This is what rides on `SolveReport::profile`, what
+/// the chrome-trace exporter renders, and what the metrics layer folds
+/// into the `hbmc_kernel_phase_microseconds` family.
+#[derive(Clone, Debug)]
+pub struct PhaseProfile {
+    /// Wall-clock seconds of the profiled region (one `Pool::run`).
+    pub wall_seconds: f64,
+    pub lanes: Vec<LaneProfile>,
+}
+
+impl PhaseProfile {
+    pub fn threads(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Seconds summed across threads, indexed like [`PHASE_NAMES`]: four
+    /// busy phases, then total barrier wait.
+    pub fn phase_totals(&self) -> [f64; NUM_PHASES + 1] {
+        let mut out = [0.0; NUM_PHASES + 1];
+        for lane in &self.lanes {
+            for (i, s) in lane.phase_seconds.iter().enumerate() {
+                out[i] += s;
+            }
+            out[NUM_PHASES] += lane.barrier_wait_seconds;
+        }
+        out
+    }
+
+    /// [`PhaseProfile::phase_totals`] normalized to fractions of their
+    /// sum (all zeros when nothing was recorded). The tuner persists this
+    /// as the "why the winner won" breakdown.
+    pub fn phase_shares(&self) -> [f64; NUM_PHASES + 1] {
+        let totals = self.phase_totals();
+        let sum: f64 = totals.iter().sum();
+        if sum <= 0.0 {
+            return [0.0; NUM_PHASES + 1];
+        }
+        std::array::from_fn(|i| totals[i] / sum)
+    }
+
+    /// Max/mean of per-thread barrier-wait seconds — 1.0 means perfectly
+    /// balanced arrival, large values mean one straggler phase dominates.
+    /// Defined as 1.0 when no wait was recorded (single thread, or a
+    /// perfectly synchronous run).
+    pub fn barrier_wait_imbalance(&self) -> f64 {
+        if self.lanes.is_empty() {
+            return 1.0;
+        }
+        let waits: Vec<f64> = self.lanes.iter().map(|l| l.barrier_wait_seconds).collect();
+        let mean = waits.iter().sum::<f64>() / waits.len() as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        waits.iter().copied().fold(0.0, f64::max) / mean
+    }
+
+    /// Fraction of `threads × wall_seconds` accounted for by recorded
+    /// busy + wait time. The acceptance bar is ≥ 0.9: the marks bracket
+    /// the whole worker body, so only the pre-loop setup instants and
+    /// clock-read overhead go unaccounted.
+    pub fn coverage(&self) -> f64 {
+        let denom = self.threads() as f64 * self.wall_seconds;
+        if denom <= 0.0 {
+            return 0.0;
+        }
+        self.lanes.iter().map(|l| l.accounted_seconds()).sum::<f64>() / denom
+    }
+
+    /// Total spans dropped across lanes (0 ⇒ the timeline is complete).
+    pub fn dropped(&self) -> u64 {
+        self.lanes.iter().map(|l| l.dropped).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates_exact_aggregates() {
+        let rec = FlightRecorder::new(2, 8);
+        rec.record(0, Phase::Spmv, 0, 1_000, 0);
+        rec.record(0, Phase::Blas1, 1_000, 3_000, 500);
+        rec.record(1, Phase::TrisolveFwd, 0, 2_000, 1_000);
+        rec.record(1, Phase::TrisolveBwd, 2_000, 2_500, 0);
+        let p = rec.into_profile(3e-6);
+        assert_eq!(p.threads(), 2);
+        let t = p.phase_totals();
+        assert!((t[Phase::Spmv.idx()] - 1e-6).abs() < 1e-15);
+        assert!((t[Phase::Blas1.idx()] - 1.5e-6).abs() < 1e-15);
+        assert!((t[Phase::TrisolveFwd.idx()] - 1e-6).abs() < 1e-15);
+        assert!((t[Phase::TrisolveBwd.idx()] - 0.5e-6).abs() < 1e-15);
+        assert!((t[NUM_PHASES] - 1.5e-6).abs() < 1e-15);
+        assert_eq!(p.lanes[0].spans.len(), 2);
+        assert_eq!(p.lanes[1].spans.len(), 2);
+        assert_eq!(p.dropped(), 0);
+        let shares = p.phase_shares();
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overflow_drops_spans_but_keeps_totals_exact() {
+        let rec = FlightRecorder::new(1, 2);
+        for k in 0..5u64 {
+            rec.record(0, Phase::Spmv, k * 100, k * 100 + 100, 0);
+        }
+        let p = rec.into_profile(1.0);
+        assert_eq!(p.lanes[0].spans.len(), 2);
+        assert_eq!(p.dropped(), 3);
+        // All five spans are in the aggregate regardless.
+        assert!((p.phase_totals()[Phase::Spmv.idx()] - 500e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn imbalance_is_max_over_mean_and_one_when_flat() {
+        let rec = FlightRecorder::new(2, 4);
+        rec.record(0, Phase::Blas1, 0, 100, 0);
+        rec.record(1, Phase::Blas1, 0, 100, 0);
+        assert_eq!(rec.into_profile(1e-7).barrier_wait_imbalance(), 1.0);
+
+        let rec = FlightRecorder::new(2, 4);
+        rec.record(0, Phase::Blas1, 0, 100, 30);
+        rec.record(1, Phase::Blas1, 0, 100, 10);
+        // mean = 20ns, max = 30ns → 1.5.
+        let imb = rec.into_profile(1e-7).barrier_wait_imbalance();
+        assert!((imb - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coverage_accounts_busy_plus_wait_against_wall() {
+        let rec = FlightRecorder::new(1, 4);
+        rec.record(0, Phase::Spmv, 0, 900_000_000, 100_000_000);
+        let p = rec.into_profile(1.0);
+        assert!((p.coverage() - 0.9).abs() < 1e-9);
+        assert!((p.lanes[0].accounted_seconds() - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phase_names_match_enum_order() {
+        assert_eq!(Phase::Spmv.name(), "spmv");
+        assert_eq!(Phase::TrisolveFwd.name(), "trisolve-fwd");
+        assert_eq!(Phase::TrisolveBwd.name(), "trisolve-bwd");
+        assert_eq!(Phase::Blas1.name(), "blas1");
+        assert_eq!(PHASE_NAMES[NUM_PHASES], "barrier-wait");
+    }
+
+    #[test]
+    fn now_ns_is_monotone() {
+        let rec = FlightRecorder::new(1, 1);
+        let a = rec.now_ns();
+        let b = rec.now_ns();
+        assert!(b >= a);
+    }
+}

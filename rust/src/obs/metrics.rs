@@ -159,21 +159,26 @@ impl HistogramSnapshot {
     }
 
     /// Upper bound of the bucket containing the `q`-quantile (`0 ≤ q ≤ 1`);
-    /// 0 when empty. Quantiles of a log₂ histogram are bucket-resolution
-    /// estimates — at most 2× off — which is what p50/p99 latency tracking
-    /// needs. Saturates to the largest finite bound for observations that
-    /// overflowed into the `+Inf` bucket.
-    pub fn quantile(&self, q: f64) -> u64 {
+    /// `None` when the histogram is empty (there is no meaningful bound to
+    /// report — callers render it as absence or 0 explicitly). Quantiles
+    /// of a log₂ histogram are bucket-resolution estimates — at most 2×
+    /// off — which is what p50/p99 latency tracking needs. Observations
+    /// that overflowed into the `+Inf` bucket saturate the answer to the
+    /// largest finite bound (`2^(BUCKETS−1) − 1`), including the edge case
+    /// where *every* observation overflowed.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
         if self.count == 0 {
-            return 0;
+            return None;
         }
         let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
         for &(le, cumulative) in &self.buckets {
             if cumulative >= target {
-                return le;
+                return Some(le);
             }
         }
-        self.buckets.last().map(|&(le, _)| le).unwrap_or(0)
+        // `target` exceeds every finite cumulative count: the quantile sits
+        // in the +Inf overflow bucket. Saturate to the last finite bound.
+        self.buckets.last().map(|&(le, _)| le)
     }
 }
 
@@ -240,8 +245,18 @@ impl MetricsRegistry {
 
     /// Register a histogram and return its handle.
     pub fn histogram(&self, family: &str, help: &str) -> Arc<Histogram> {
+        self.histogram_with(family, "", help)
+    }
+
+    /// Register one labeled series of a histogram family (e.g.
+    /// `phase="spmv",ordering="hbmc"`). Like [`counter_with`], series of
+    /// one family must be registered contiguously so the exposition
+    /// renders a single `HELP`/`TYPE` block for the family.
+    ///
+    /// [`counter_with`]: MetricsRegistry::counter_with
+    pub fn histogram_with(&self, family: &str, labels: &str, help: &str) -> Arc<Histogram> {
         let h = Arc::new(Histogram::new());
-        self.register(family, "", help, Metric::Histogram(Arc::clone(&h)));
+        self.register(family, labels, help, Metric::Histogram(Arc::clone(&h)));
         h
     }
 
@@ -369,15 +384,43 @@ mod tests {
             h.observe(v);
         }
         let s = h.snapshot();
-        assert_eq!(s.quantile(0.0), 1, "lowest non-empty bucket bound");
+        assert_eq!(s.quantile(0.0), Some(1), "lowest non-empty bucket bound");
         // p50 of 0..=99 is ~49 → bucket [32,63].
-        assert_eq!(s.quantile(0.5), 63);
+        assert_eq!(s.quantile(0.5), Some(63));
         // p99 → 99 → bucket [64,127].
-        assert_eq!(s.quantile(0.99), 127);
+        assert_eq!(s.quantile(0.99), Some(127));
         assert!((s.mean() - 49.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_of_empty_histogram_is_none() {
         let empty = Histogram::new().snapshot();
-        assert_eq!(empty.quantile(0.5), 0);
+        assert_eq!(empty.quantile(0.0), None);
+        assert_eq!(empty.quantile(0.5), None);
+        assert_eq!(empty.quantile(1.0), None);
         assert_eq!(empty.mean(), 0.0);
+    }
+
+    #[test]
+    fn quantile_saturates_when_all_observations_overflow() {
+        // Every observation lands in the +Inf bucket (≥ 2^(BUCKETS−1)):
+        // no finite cumulative count ever reaches the target, and the
+        // defined answer is the largest finite bound.
+        let h = Histogram::new();
+        h.observe(u64::MAX);
+        h.observe(1u64 << 62);
+        let s = h.snapshot();
+        let last_finite = (1u64 << (HISTOGRAM_BUCKETS - 1)) - 1;
+        assert_eq!(s.quantile(0.5), Some(last_finite));
+        assert_eq!(s.quantile(1.0), Some(last_finite));
+        // Mixed: the median is still finite, the tail saturates.
+        let h = Histogram::new();
+        h.observe(10);
+        h.observe(10);
+        h.observe(u64::MAX);
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.5), Some(15), "median in a finite bucket");
+        assert_eq!(s.quantile(1.0), Some(last_finite), "p100 saturates");
     }
 
     #[test]

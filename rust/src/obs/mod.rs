@@ -1,13 +1,16 @@
-//! Observability: metrics, job-lifecycle tracing, Prometheus export, and
-//! the `/metrics` HTTP endpoint.
+//! Observability: metrics, job-lifecycle tracing, in-region kernel
+//! profiling, Prometheus export, and the `/metrics` HTTP endpoint.
 //!
-//! This layer is deliberately *passive* with respect to the solver: it
-//! never times anything inside the fused one-dispatch CG region (whose
-//! determinism and sync counts are part of the paper reproduction) —
-//! per-solve phase totals come from the `SolveReport`/`PlanReport` fields
-//! the coordinator already produces, and queue-side timestamps are taken
-//! outside the dispatch. The hot-path cost of an *unsampled* job is a
-//! handful of relaxed atomic adds and one `Option` check.
+//! Service-side instrumentation stays *passive*: queue-side timestamps
+//! are taken outside the dispatch and the hot-path cost of an *unsampled*
+//! job is a handful of relaxed atomic adds and one `Option` check. The
+//! fused one-dispatch CG region (whose determinism and sync counts are
+//! part of the paper reproduction) is measured only by the **opt-in**
+//! [`flight`] recorder, which follows the same discipline from the
+//! inside: per-thread preallocated lanes, clock reads at existing phase
+//! boundaries, zero added barriers, and bitwise-identical solves with
+//! profiling on or off (`tests/profiling.rs`). Unprofiled solves still
+//! pay nothing inside the region beyond a null check per mark.
 //!
 //! * [`metrics`] — dependency-free counters, gauges, and fixed-bucket
 //!   log₂ histograms behind a [`MetricsRegistry`]; lock-free observe path.
@@ -15,6 +18,10 @@
 //!   by `SolverService::metrics_text`.
 //! * [`trace`] — bounded ring-buffer [`TraceRecorder`] of per-job
 //!   lifecycle events, sampled per `QueueConfig::trace_sample`.
+//! * [`flight`] — the barrier-free per-thread [`FlightRecorder`] for the
+//!   fused CG region; drained into a [`PhaseProfile`] after the dispatch.
+//! * [`chrometrace`] — `chrome://tracing` / Perfetto JSON export of a
+//!   drained [`PhaseProfile`].
 //! * [`http`] — std-only [`MetricsServer`] serving `GET /metrics` and
 //!   `GET /healthz` for `hbmc serve --metrics-addr`.
 //!
@@ -22,11 +29,15 @@
 //! per-handle in-flight quotas, expired-job shedding) lives with the
 //! queue and service in [`api`](crate::api); this module only measures.
 
+pub mod chrometrace;
+pub mod flight;
 pub mod http;
 pub mod metrics;
 pub mod prometheus;
 pub mod trace;
 
+pub use chrometrace::chrome_trace_json;
+pub use flight::{FlightRecorder, LaneProfile, Phase, PhaseProfile, PhaseSpan, PHASE_NAMES};
 pub use http::{http_get, MetricsServer};
 pub use metrics::{
     Counter, Gauge, Histogram, HistogramSnapshot, MetricsRegistry, MetricsSnapshot,

@@ -25,6 +25,7 @@
 //! `10⁻⁷`), measured against `||b||`.
 
 use crate::coordinator::pool::{Pool, SyncSlice};
+use crate::obs::flight::{FlightRecorder, Phase};
 use crate::solver::blas1::{self, dot, fused_cg_update, norm2, xpby};
 use crate::solver::spmv::SpmvEngine;
 use crate::solver::trisolve::TriSolver;
@@ -256,6 +257,9 @@ struct FusedCtx<'a> {
     record_history: bool,
     pool: &'a Pool,
     state: &'a SoloCell<FusedState>,
+    /// Flight recorder for `ExecOptions::profile`; `None` on unprofiled
+    /// solves (every profiling touch point then compiles to a null check).
+    prof: Option<&'a FlightRecorder>,
 }
 
 /// Close a timing bucket on thread 0 and restart every thread's phase
@@ -271,9 +275,37 @@ fn mark(tid: usize, state: &SoloCell<FusedState>, clock: &mut Instant, bucket: &
     *clock = Instant::now();
 }
 
+/// Stamp one flight-recorder span for the current thread and advance its
+/// span clock. Unlike [`mark`] (whose coarse `KernelTimes` bucket is
+/// thread-0-only), **every** thread records its own lane, so per-thread
+/// skew is visible. The barrier-wait nanoseconds the pool accumulated
+/// thread-locally since the previous mark are drained here, attributed to
+/// this span and subtracted from its busy time. No-op when unprofiled.
+#[inline]
+fn prof_mark(
+    prof: Option<&FlightRecorder>,
+    pool: &Pool,
+    tid: usize,
+    pclock: &mut u64,
+    phase: Phase,
+) {
+    if let Some(rec) = prof {
+        let end = rec.now_ns();
+        let wait = pool.take_barrier_wait_ns();
+        rec.record(tid, phase, *pclock, end, wait);
+        *pclock = end;
+    }
+}
+
 /// Run preconditioned CG as **one** pool dispatch (see module docs). `x`
 /// holds the initial guess and receives the solution. Numerics are
 /// bitwise-identical to [`pcg`] driven by the same kernels.
+///
+/// `prof` is the per-thread flight recorder for profiled solves (see
+/// `crate::obs::flight`); pass `None` to record nothing. Profiling adds
+/// only clock reads at existing phase boundaries — no barriers, no
+/// allocation, no numeric effect — so the two settings produce bitwise-
+/// identical solves (`tests/profiling.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn pcg_fused(
     spmv: &SpmvEngine,
@@ -284,6 +316,7 @@ pub fn pcg_fused(
     max_iters: usize,
     record_history: bool,
     pool: &Pool,
+    prof: Option<&FlightRecorder>,
 ) -> CgResult {
     let n = b.len();
     assert_eq!(x.len(), n);
@@ -337,6 +370,7 @@ pub fn pcg_fused(
             record_history,
             pool,
             state: &state,
+            prof,
         };
         pool.run(&|tid, nt| fused_worker(&cx, tid, nt));
     }
@@ -377,12 +411,23 @@ fn fused_worker(cx: &FusedCtx, tid: usize, nt: usize) {
     // wise phases). SpMV uses its own nnz-balanced partition.
     let chunks = Pool::chunk(nchunks, tid, nt);
     let mut clock = Instant::now();
+    // Flight-recorder span clock (ns since the recorder epoch at this
+    // thread's last mark). Drain the pool's thread-local wait accumulator
+    // first so nothing a previous job left behind pollutes the first span.
+    let mut pclock = match cx.prof {
+        Some(rec) => {
+            pool.take_barrier_wait_ns();
+            rec.now_ns()
+        }
+        None => 0,
+    };
 
     // --- bnorm = ‖b‖ -----------------------------------------------------
     blas1::dot_partials(cx.b, cx.b, cx.partials, chunks.clone());
     pool.phase_barrier();
     let bnorm = blas1::combine_partials(cx.partials, nchunks).sqrt();
     mark(tid, cx.state, &mut clock, "blas1");
+    prof_mark(cx.prof, pool, tid, &mut pclock, Phase::Blas1);
     if bnorm == 0.0 {
         blas1::fill_chunks(0.0, cx.xs, chunks.clone());
         if tid == 0 {
@@ -402,16 +447,20 @@ fn fused_worker(cx: &FusedCtx, tid: usize, nt: usize) {
     cx.spmv.worker(unsafe { view(cx.xs, n) }, cx.qs, cx.spmv_scratch, pool, tid, nt);
     pool.phase_barrier();
     mark(tid, cx.state, &mut clock, "spmv");
+    prof_mark(cx.prof, pool, tid, &mut pclock, Phase::Spmv);
     blas1::residual_chunks(cx.b, unsafe { view(cx.qs, n) }, cx.rs, chunks.clone());
     pool.phase_barrier();
     mark(tid, cx.state, &mut clock, "blas1");
+    prof_mark(cx.prof, pool, tid, &mut pclock, Phase::Blas1);
 
     // --- z₀ = M⁻¹ r₀, p₀ = z₀, rz = r·z, relres₀ = ‖r‖/‖b‖ ---------------
     cx.tri.forward_worker(unsafe { view(cx.rs, n) }, cx.ss, pool, tid, nt);
     pool.phase_barrier();
+    prof_mark(cx.prof, pool, tid, &mut pclock, Phase::TrisolveFwd);
     cx.tri.backward_worker(unsafe { view(cx.ss, n) }, cx.zs, pool, tid, nt);
     pool.phase_barrier();
     mark(tid, cx.state, &mut clock, "trisolve");
+    prof_mark(cx.prof, pool, tid, &mut pclock, Phase::TrisolveBwd);
     let (r_view, z_view) = unsafe { (view(cx.rs, n), view(cx.zs, n)) };
     blas1::copy_chunks(z_view, cx.ps, chunks.clone());
     blas1::dot_partials(r_view, z_view, cx.partials, chunks.clone());
@@ -423,6 +472,7 @@ fn fused_worker(cx: &FusedCtx, tid: usize, nt: usize) {
     // writes `partials` again, so fence the stragglers' combines off.
     pool.phase_barrier();
     mark(tid, cx.state, &mut clock, "blas1");
+    prof_mark(cx.prof, pool, tid, &mut pclock, Phase::Blas1);
     // Poisoned input (NaN b/x₀/factor): every thread sees the same
     // non-finite rz and returns in lockstep (`rz = 0` stays legal — an
     // exact initial guess has r = 0). Mirrors `pcg` exactly.
@@ -456,12 +506,14 @@ fn fused_worker(cx: &FusedCtx, tid: usize, nt: usize) {
                 blas1::dot_partials(p_view, unsafe { view(cx.qs, n) }, cx.partials, own);
                 pool.phase_barrier();
                 mark(tid, cx.state, &mut clock, "spmv");
+                prof_mark(cx.prof, pool, tid, &mut pclock, Phase::Spmv);
             }
             None => {
                 // SELL (σ-sorting may scatter rows) and the symmetric
                 // engine (scatters by construction): publish q first.
                 pool.phase_barrier();
                 mark(tid, cx.state, &mut clock, "spmv");
+                prof_mark(cx.prof, pool, tid, &mut pclock, Phase::Spmv);
                 blas1::dot_partials(
                     p_view,
                     unsafe { view(cx.qs, n) },
@@ -473,6 +525,7 @@ fn fused_worker(cx: &FusedCtx, tid: usize, nt: usize) {
         }
         let pq = blas1::combine_partials(cx.partials, nchunks);
         mark(tid, cx.state, &mut clock, "blas1");
+        prof_mark(cx.prof, pool, tid, &mut pclock, Phase::Blas1);
         if pq <= 0.0 || !pq.is_finite() {
             // Non-SPD or breakdown; every thread sees the same pq and
             // breaks identically (recorded, reported as divergence, like
@@ -508,6 +561,7 @@ fn fused_worker(cx: &FusedCtx, tid: usize, nt: usize) {
             unsafe { (*cx.state.as_ptr()).history.push(relres) };
         }
         mark(tid, cx.state, &mut clock, "blas1");
+        prof_mark(cx.prof, pool, tid, &mut pclock, Phase::Blas1);
         if relres < cx.rtol {
             converged = true;
             break;
@@ -516,9 +570,11 @@ fn fused_worker(cx: &FusedCtx, tid: usize, nt: usize) {
         // --- z = M⁻¹ r ---------------------------------------------------
         cx.tri.forward_worker(unsafe { view(cx.rs, n) }, cx.ss, pool, tid, nt);
         pool.phase_barrier();
+        prof_mark(cx.prof, pool, tid, &mut pclock, Phase::TrisolveFwd);
         cx.tri.backward_worker(unsafe { view(cx.ss, n) }, cx.zs, pool, tid, nt);
         pool.phase_barrier();
         mark(tid, cx.state, &mut clock, "trisolve");
+        prof_mark(cx.prof, pool, tid, &mut pclock, Phase::TrisolveBwd);
 
         // --- β = (r·z)new / (r·z)old; p = z + β p ------------------------
         let (r_view, z_view) = unsafe { (view(cx.rs, n), view(cx.zs, n)) };
@@ -543,6 +599,7 @@ fn fused_worker(cx: &FusedCtx, tid: usize, nt: usize) {
         // p must be fully published before the next iteration's SpMV.
         pool.phase_barrier();
         mark(tid, cx.state, &mut clock, "blas1");
+        prof_mark(cx.prof, pool, tid, &mut pclock, Phase::Blas1);
     }
 
     if tid == 0 {
@@ -689,7 +746,7 @@ mod tests {
             let pool = Pool::new(nt);
             let engine = SpmvEngine::crs(&a, nt);
             let mut x = vec![0.0; n];
-            let fused = pcg_fused(&engine, &tri, &b, &mut x, 1e-9, 2000, true, &pool);
+            let fused = pcg_fused(&engine, &tri, &b, &mut x, 1e-9, 2000, true, &pool, None);
             assert_eq!(fused.iterations, legacy.iterations, "nt={nt}");
             assert_eq!(fused.converged, legacy.converged);
             assert_eq!(fused.final_relres.to_bits(), legacy.final_relres.to_bits());
@@ -709,8 +766,17 @@ mod tests {
         let pool = Pool::new(2);
         let engine = SpmvEngine::crs(&a, 2);
         let mut x = vec![7.0; 25];
-        let res =
-            pcg_fused(&engine, &IdentityPrecond, &vec![0.0; 25], &mut x, 1e-8, 100, false, &pool);
+        let res = pcg_fused(
+            &engine,
+            &IdentityPrecond,
+            &vec![0.0; 25],
+            &mut x,
+            1e-8,
+            100,
+            false,
+            &pool,
+            None,
+        );
         assert!(res.converged);
         assert_eq!(res.iterations, 0);
         assert!(x.iter().all(|&v| v == 0.0));
@@ -744,7 +810,7 @@ mod tests {
             let engine = SpmvEngine::crs(&a, nt);
             let mut x = vec![0.0; n];
             let fused =
-                pcg_fused(&engine, &IdentityPrecond, &b, &mut x, 1e-8, 100, false, &pool);
+                pcg_fused(&engine, &IdentityPrecond, &b, &mut x, 1e-8, 100, false, &pool, None);
             assert_eq!(fused.breakdown, legacy.breakdown, "nt={nt}");
             assert_eq!(fused.iterations, 0);
             assert!(!fused.converged);

@@ -22,6 +22,7 @@ use crate::coordinator::metrics::{per_iteration_ops, OpInputs, OpProfile};
 use crate::coordinator::pool::Pool;
 use crate::error::{HbmcError, Result};
 use crate::factor::ic0::ic0_auto_with;
+use crate::obs::flight::{FlightRecorder, PhaseProfile};
 use crate::factor::split::{SellTriFactors, TriFactors};
 use crate::ordering::perm::Perm;
 use crate::ordering::{order_matrix, OrderedStructure};
@@ -91,6 +92,13 @@ pub struct ExecOptions {
     /// paths are bitwise-identical (`tests/fused_parity.rs`); this exists
     /// as the reference/fallback and for A/B benchmarking.
     pub legacy_loop: bool,
+    /// Arm the in-region flight recorder (fused path only): per-thread
+    /// phase spans + barrier-wait attribution come back on
+    /// [`SolveOutcome::profile`]. Numerically inert — profiled solves are
+    /// bitwise identical to unprofiled ones (`tests/profiling.rs`) — and
+    /// adds only clock reads at existing phase boundaries (< 5% wall
+    /// overhead on the quick bench).
+    pub profile: bool,
 }
 
 /// Solution + iteration data, mapped back to the original ordering.
@@ -106,6 +114,9 @@ pub struct SolveOutcome {
     /// Pool barrier synchronizations this solve performed (color barriers
     /// + fused-loop phase barriers).
     pub pool_syncs: u64,
+    /// Drained flight-recorder profile when [`ExecOptions::profile`] was
+    /// set (fused path only; the legacy path reports `None`).
+    pub profile: Option<PhaseProfile>,
 }
 
 /// The immutable product of the setup phase; see module docs.
@@ -313,6 +324,7 @@ impl SolverPlan {
         let dispatches_before = pool.dispatch_count();
         let rtol = opts.rtol.unwrap_or(self.cfg.rtol);
         let max_iters = opts.max_iters.unwrap_or(self.cfg.max_iters);
+        let mut profile = None;
 
         let cg = if opts.legacy_loop {
             let mut scratch = vec![0.0f64; n];
@@ -363,7 +375,14 @@ impl SolverPlan {
                     _ => SpmvEngine::crs(a_perm, pool.nthreads()),
                 }
             };
-            pcg_fused(
+            // Flight recorder: ~6 spans per thread per iteration; 8 leaves
+            // headroom, the cap bounds a pathological `max_iters` at a few
+            // MB per thread (overflow folds into exact aggregates).
+            let recorder = opts.profile.then(|| {
+                pool.set_profiling(true);
+                FlightRecorder::new(pool.nthreads(), (8 * (max_iters + 2) + 16).min(1 << 18))
+            });
+            let cg = pcg_fused(
                 &engine,
                 trisolver.as_ref(),
                 &b_perm,
@@ -372,7 +391,13 @@ impl SolverPlan {
                 max_iters,
                 opts.record_history,
                 pool,
-            )
+                recorder.as_ref(),
+            );
+            if let Some(rec) = recorder {
+                pool.set_profiling(false);
+                profile = Some(rec.into_profile(cg.solve_seconds));
+            }
+            cg
         };
 
         // A recorded CG breakdown (non-finite or non-positive reduction
@@ -391,6 +416,7 @@ impl SolverPlan {
             syncs_per_substitution: self.trisolver.syncs_per_sweep(),
             dispatches: pool.dispatch_count() - dispatches_before,
             pool_syncs: pool.sync_count(),
+            profile,
         })
     }
 }

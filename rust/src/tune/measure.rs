@@ -17,6 +17,7 @@
 use std::sync::Arc;
 
 use crate::config::SolverConfig;
+use crate::coordinator::driver::SolveOptions;
 use crate::coordinator::metrics::amortized_seconds_per_solve;
 use crate::coordinator::session::SolveSession;
 use crate::error::Result;
@@ -35,11 +36,17 @@ pub struct MeasureOptions {
     /// candidate can never be abandoned for merely matching the
     /// incumbent. The incumbent itself is measured without a threshold.
     pub abandon_factor: f64,
+    /// Attribute the candidate's time across kernel phases with **one
+    /// extra untimed profiled solve** after the timed trials. The timed
+    /// median is never taken with the recorder on (one-measurement rule),
+    /// so enabling this never perturbs the reported time — it only costs
+    /// one more solve, which is why screening rounds leave it off.
+    pub profile_phases: bool,
 }
 
 impl Default for MeasureOptions {
     fn default() -> Self {
-        MeasureOptions { warmup: 1, trials: 3, abandon_factor: 3.0 }
+        MeasureOptions { warmup: 1, trials: 3, abandon_factor: 3.0, profile_phases: false }
     }
 }
 
@@ -61,6 +68,11 @@ pub struct Measurement {
     pub trials_run: usize,
     /// True when the measurement was cut off against the incumbent.
     pub abandoned: bool,
+    /// Wall-time share per kernel phase
+    /// ([`PHASE_NAMES`](crate::obs::flight::PHASE_NAMES) order) from the
+    /// extra profiled solve; `None` unless
+    /// [`MeasureOptions::profile_phases`] was set and the solve completed.
+    pub phase_shares: Option<[f64; 5]>,
 }
 
 impl Measurement {
@@ -139,6 +151,7 @@ pub fn measure_plan(
                 final_relres,
                 trials_run: 0,
                 abandoned: true,
+                phase_shares: None,
             });
         }
     }
@@ -154,6 +167,16 @@ pub fn measure_plan(
         }
     }
     let trials_run = times.len();
+    // One extra *untimed* profiled solve after the trials: the reported
+    // median above is never taken with the recorder on, so the phase
+    // attribution can never perturb the number the tuner ranks on. A
+    // failure here degrades to "no attribution", never to a lost
+    // measurement.
+    let phase_shares = (opts.profile_phases && !abandoned)
+        .then(|| session.solve_with(b, &SolveOptions::profiled()).ok())
+        .flatten()
+        .and_then(|out| out.report.profile)
+        .map(|p| p.phase_shares());
     Ok(Measurement {
         cfg,
         setup_seconds,
@@ -163,6 +186,7 @@ pub fn measure_plan(
         final_relres,
         trials_run,
         abandoned,
+        phase_shares,
     })
 }
 
@@ -199,7 +223,7 @@ mod tests {
             &d.matrix,
             &d.b,
             &cfg,
-            &MeasureOptions { warmup: 1, trials: 3, abandon_factor: 3.0 },
+            &MeasureOptions { warmup: 1, trials: 3, ..Default::default() },
             None,
         )
         .unwrap();
@@ -210,8 +234,22 @@ mod tests {
         assert!(m.final_relres < 1e-6, "converged relres must be recorded: {}", m.final_relres);
         assert_eq!(m.trials_run, 3);
         assert!(!m.abandoned);
+        assert!(m.phase_shares.is_none(), "attribution is opt-in");
         assert!(m.score(f64::INFINITY) == m.solve_seconds);
         assert!(m.score(1.0) > m.solve_seconds, "one-shot score must include setup");
+    }
+
+    #[test]
+    fn profile_phases_attributes_the_solve() {
+        let d = suite::dataset("g3_circuit", Scale::Tiny);
+        let cfg = tiny_cfg(OrderingKind::Hbmc);
+        let opts = MeasureOptions { trials: 1, profile_phases: true, ..Default::default() };
+        let m = measure(&d.matrix, &d.b, &cfg, &opts, None).unwrap();
+        let shares = m.phase_shares.expect("profiled measurement carries shares");
+        assert!(shares.iter().all(|s| s.is_finite() && *s >= 0.0), "{shares:?}");
+        // The recorder covers the whole fused region, so the busy + wait
+        // shares account for most of the solve wall time.
+        assert!(shares.iter().sum::<f64>() > 0.5, "{shares:?}");
     }
 
     #[test]

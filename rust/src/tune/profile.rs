@@ -156,6 +156,13 @@ pub struct TunedProfile {
     /// Median seconds per solve under the *default* config the search
     /// started from — the denominator of [`speedup`](TunedProfile::speedup).
     pub baseline_solve_seconds: f64,
+    /// Wall-time share per kernel phase under the winning config
+    /// ([`PHASE_NAMES`](crate::obs::flight::PHASE_NAMES) order: spmv,
+    /// trisolve-fwd, trisolve-bwd, blas1, barrier-wait), from the tuner's
+    /// profiled attribution solve. `None` for profiles from store files
+    /// written before this field existed (optional on parse — no schema
+    /// bump).
+    pub phase_shares: Option<[f64; 5]>,
     /// Unix seconds when the profile was produced (0 if clock unavailable).
     pub created_unix: u64,
 }
@@ -202,12 +209,20 @@ impl TunedProfile {
             Some(s) => s.to_string(),
             None => "null".to_string(),
         };
+        let shares = match &self.phase_shares {
+            Some(s) => {
+                let body: Vec<String> = s.iter().map(|v| v.to_string()).collect();
+                format!("[{}]", body.join(", "))
+            }
+            None => "null".to_string(),
+        };
         format!(
             "{{\"fingerprint\": {}, \"simd\": {}, \"cores\": {}, \
              \"ordering\": {}, \"bs\": {}, \"w\": {}, \"spmv\": {}, \
              \"sell_sigma\": {sigma}, \"threads\": {}, \"use_intrinsics\": {}, \
              \"solve_seconds\": {}, \"setup_seconds\": {}, \"iterations\": {}, \
-             \"baseline_solve_seconds\": {}, \"created_unix\": {}}}",
+             \"baseline_solve_seconds\": {}, \"phase_shares\": {shares}, \
+             \"created_unix\": {}}}",
             json_string(&format!("{:#018x}", self.fingerprint)),
             json_string(&self.simd_str()),
             self.hardware.cores,
@@ -265,6 +280,29 @@ impl TunedProfile {
                 HbmcError::parse("profile: sell_sigma must be null or a non-negative integer")
             })?)
         };
+        // Optional (added after schema 1 stores existed): absent or null
+        // both mean "no attribution recorded" — never a parse error.
+        let phase_shares = match j.get("phase_shares") {
+            Some(v) if !v.is_null() => {
+                let arr = v.as_arr().ok_or_else(|| {
+                    HbmcError::parse("profile: phase_shares must be null or an array")
+                })?;
+                if arr.len() != 5 {
+                    return Err(HbmcError::parse(format!(
+                        "profile: phase_shares must have 5 entries, got {}",
+                        arr.len()
+                    )));
+                }
+                let mut shares = [0.0f64; 5];
+                for (i, e) in arr.iter().enumerate() {
+                    shares[i] = e.as_f64().ok_or_else(|| {
+                        HbmcError::parse("profile: phase_shares entries must be numbers")
+                    })?;
+                }
+                Some(shares)
+            }
+            _ => None,
+        };
         let created = num(j, "created_unix")?;
         Ok(TunedProfile {
             fingerprint,
@@ -285,6 +323,7 @@ impl TunedProfile {
             setup_seconds: num(j, "setup_seconds")?,
             iterations: uint(j, "iterations")?,
             baseline_solve_seconds: num(j, "baseline_solve_seconds")?,
+            phase_shares,
             created_unix: if created >= 0.0 { created as u64 } else { 0 },
         })
     }
@@ -442,6 +481,7 @@ mod tests {
             setup_seconds: 4.0e-2,
             iterations: 137,
             baseline_solve_seconds: 2.5e-3,
+            phase_shares: Some([0.35, 0.3, 0.25, 0.05, 0.05]),
             created_unix: 1_753_000_000,
         }
     }
@@ -451,6 +491,34 @@ mod tests {
         let p = sample(0xdead_beef_cafe_f00d);
         let j = Json::parse(&p.to_json()).unwrap();
         assert_eq!(TunedProfile::from_json(&j).unwrap(), p);
+    }
+
+    #[test]
+    fn phase_shares_are_optional_on_parse() {
+        // Null round-trips to None...
+        let mut p = sample(11);
+        p.phase_shares = None;
+        let j = Json::parse(&p.to_json()).unwrap();
+        assert_eq!(TunedProfile::from_json(&j).unwrap().phase_shares, None);
+        // ...and a pre-existing store object without the field parses too
+        // (the field was added without a schema bump).
+        let legacy = "{\"fingerprint\": \"0x000000000000002a\", \"simd\": \"avx2\", \
+                      \"cores\": 4, \"ordering\": \"hbmc\", \"bs\": 16, \"w\": 4, \
+                      \"spmv\": \"sell\", \"sell_sigma\": null, \"threads\": 2, \
+                      \"use_intrinsics\": true, \"solve_seconds\": 1e-3, \
+                      \"setup_seconds\": 1e-2, \"iterations\": 100, \
+                      \"baseline_solve_seconds\": 2e-3, \"created_unix\": 0}";
+        let j = Json::parse(legacy).unwrap();
+        let parsed = TunedProfile::from_json(&j).unwrap();
+        assert_eq!(parsed.fingerprint, 0x2a);
+        assert_eq!(parsed.phase_shares, None);
+        // A malformed array is still a typed parse error.
+        let bad = legacy.replace(
+            "\"baseline_solve_seconds\": 2e-3",
+            "\"baseline_solve_seconds\": 2e-3, \"phase_shares\": [1, 2]",
+        );
+        let j = Json::parse(&bad).unwrap();
+        assert!(matches!(TunedProfile::from_json(&j), Err(HbmcError::Parse(_))));
     }
 
     #[test]

@@ -222,8 +222,15 @@ pub fn tune_matrix(
 
     // The incumbent is measured with the full budget and no threshold; its
     // failure is the caller's failure (their default config doesn't run).
-    let final_opts =
-        MeasureOptions { warmup: opts.warmup, trials: opts.trials.max(1), ..screen_opts(opts) };
+    // Finalists (and the incumbent) additionally attribute their time
+    // across kernel phases — the `tune --explain` evidence. Screening
+    // rounds skip it (one extra solve per candidate adds up).
+    let final_opts = MeasureOptions {
+        warmup: opts.warmup,
+        trials: opts.trials.max(1),
+        profile_phases: true,
+        ..screen_opts(opts)
+    };
     let baseline_plan = Arc::new(SolverPlan::build(a, &candidates[0])?);
     let baseline = measure_plan(&baseline_plan, b, &final_opts, None)?;
     let mut st = SearchState {
@@ -304,6 +311,7 @@ pub fn tune_matrix(
         setup_seconds: winner.setup_seconds,
         iterations: winner.iterations,
         baseline_solve_seconds: baseline.solve_seconds,
+        phase_shares: winner.phase_shares,
         created_unix,
     };
     Ok(TuneOutcome {
@@ -320,7 +328,12 @@ pub fn tune_matrix(
 
 /// Round-1 screening budget: no warmup, one trial, caller's abandonment.
 fn screen_opts(opts: &TuneOptions) -> MeasureOptions {
-    MeasureOptions { warmup: 0, trials: 1, abandon_factor: opts.abandon_factor }
+    MeasureOptions {
+        warmup: 0,
+        trials: 1,
+        abandon_factor: opts.abandon_factor,
+        profile_phases: false,
+    }
 }
 
 /// Build one challenger's plan and take its first measurement; the plan is
@@ -391,6 +404,10 @@ mod tests {
         // acceptance bound holds exactly.
         assert!(out.profile.solve_seconds <= out.profile.baseline_solve_seconds);
         assert!(out.candidates >= out.finalists.len());
+        // Finalists run under the full budget, which includes the phase
+        // attribution pass — the winner's breakdown rides on the profile.
+        let shares = out.profile.phase_shares.expect("winner carries phase shares");
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9, "{shares:?}");
     }
 
     #[test]

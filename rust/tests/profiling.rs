@@ -1,0 +1,211 @@
+//! Acceptance suite for the in-region flight recorder (ISSUE 10).
+//!
+//! Contract under test:
+//!
+//! * arming [`ExecOptions::profile`] is **numerically inert**: profiled
+//!   solves are bitwise identical to unprofiled ones — same residual
+//!   history bits, same solution bits — across all five orderings ×
+//!   threads ∈ {1, 4} × SpMV ∈ {CRS, SELL};
+//! * profiling adds **zero pool barriers** and keeps the fused solve at
+//!   exactly one dispatch (the recorder stamps existing phase boundaries);
+//! * the drained [`PhaseProfile`] is sane: non-empty phase totals, shares
+//!   that sum to one, substantial coverage of thread-time, a complete
+//!   (undropped) timeline at default capacity;
+//! * the chrome-trace export of a *real* solve is structurally valid:
+//!   parseable JSON whose events carry canonical phase names and form a
+//!   monotone, non-overlapping timeline per thread;
+//! * the profile rides the whole API stack (`SolveOptions::profiled()` →
+//!   `SolveReport::profile`), and the service's lifecycle `trace_json()`
+//!   is well-formed JSON, not just greppable text.
+
+use hbmc::api::SolverService;
+use hbmc::config::{OrderingKind, Scale, SolverConfig, SpmvKind};
+use hbmc::coordinator::driver::SolveOptions;
+use hbmc::coordinator::pool::Pool;
+use hbmc::gen::suite;
+use hbmc::obs::{chrome_trace_json, PhaseProfile, PHASE_NAMES};
+use hbmc::solver::plan::{ExecOptions, SolveOutcome, SolverPlan};
+use hbmc::util::json::Json;
+
+const ORDERINGS: [OrderingKind; 5] = [
+    OrderingKind::Natural,
+    OrderingKind::Mc,
+    OrderingKind::Bmc,
+    OrderingKind::Hbmc,
+    OrderingKind::Level,
+];
+
+fn cfg_for(ordering: OrderingKind, spmv: SpmvKind, shift: f64) -> SolverConfig {
+    SolverConfig {
+        ordering,
+        bs: 8,
+        w: 4,
+        spmv,
+        shift,
+        rtol: 1e-6,
+        threads: 1,
+        ..Default::default()
+    }
+}
+
+fn run(plan: &SolverPlan, b: &[f64], nt: usize, profile: bool) -> SolveOutcome {
+    let pool = Pool::new(nt);
+    plan.execute(&pool, b, &ExecOptions { record_history: true, profile, ..Default::default() })
+        .expect("solve")
+}
+
+fn assert_bitwise_equal(a: &SolveOutcome, b: &SolveOutcome, what: &str) {
+    assert_eq!(a.cg.iterations, b.cg.iterations, "{what}: iteration count");
+    assert_eq!(a.cg.converged, b.cg.converged, "{what}: converged flag");
+    assert_eq!(a.cg.final_relres.to_bits(), b.cg.final_relres.to_bits(), "{what}: final relres");
+    assert_eq!(a.cg.residual_history.len(), b.cg.residual_history.len(), "{what}: history len");
+    for (i, (ra, rb)) in a.cg.residual_history.iter().zip(&b.cg.residual_history).enumerate() {
+        assert_eq!(ra.to_bits(), rb.to_bits(), "{what}: history[{i}]");
+    }
+    assert_eq!(a.x.len(), b.x.len());
+    for (i, (xa, xb)) in a.x.iter().zip(&b.x).enumerate() {
+        assert_eq!(xa.to_bits(), xb.to_bits(), "{what}: x[{i}]");
+    }
+}
+
+/// Headline parity: profile=on reproduces profile=off bit for bit, in the
+/// same single dispatch with the same barrier count, everywhere.
+#[test]
+fn profiled_solve_is_bitwise_identical_with_zero_new_barriers() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    for ordering in ORDERINGS {
+        for spmv in [SpmvKind::Crs, SpmvKind::Sell] {
+            let cfg = cfg_for(ordering, spmv, d.shift);
+            let plan = SolverPlan::build(&d.matrix, &cfg).expect("plan");
+            for nt in [1usize, 4] {
+                let what = format!("{ordering:?}/{spmv:?} nt={nt}");
+                let plain = run(&plan, &d.b, nt, false);
+                assert!(plain.cg.converged, "{what}: baseline must converge");
+                assert!(plain.profile.is_none(), "{what}: off must record nothing");
+                let profiled = run(&plan, &d.b, nt, true);
+                assert_bitwise_equal(&profiled, &plain, &what);
+                assert_eq!(profiled.dispatches, 1, "{what}: still one dispatch");
+                assert_eq!(
+                    profiled.pool_syncs, plain.pool_syncs,
+                    "{what}: profiling must add zero pool barriers"
+                );
+                let p = profiled.profile.as_ref().expect("profile recorded");
+                assert_eq!(p.threads(), nt, "{what}: one lane per worker");
+            }
+        }
+    }
+}
+
+/// The drained profile of a real solve holds water: totals present for
+/// the busy phases, shares normalized, coverage substantial, no dropped
+/// spans at the plan's default capacity, imbalance ≥ 1 by construction.
+#[test]
+fn drained_profile_is_sane() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let cfg = cfg_for(OrderingKind::Hbmc, SpmvKind::Sell, d.shift);
+    let plan = SolverPlan::build(&d.matrix, &cfg).expect("plan");
+    for nt in [1usize, 2] {
+        let out = run(&plan, &d.b, nt, true);
+        let p = out.profile.expect("profile recorded");
+        let totals = p.phase_totals();
+        for (name, t) in PHASE_NAMES.iter().take(4).zip(&totals) {
+            assert!(*t > 0.0, "nt={nt}: phase {name} recorded no busy time");
+        }
+        let shares = p.phase_shares();
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9, "nt={nt}: {shares:?}");
+        assert!(
+            p.coverage() > 0.5,
+            "nt={nt}: recorded spans cover only {:.1}% of thread-time",
+            100.0 * p.coverage()
+        );
+        assert_eq!(p.dropped(), 0, "nt={nt}: default capacity must hold a Tiny solve");
+        assert!(p.barrier_wait_imbalance() >= 1.0, "nt={nt}: max/mean is at least 1");
+        for lane in &p.lanes {
+            assert!(!lane.spans.is_empty(), "nt={nt}: every lane recorded spans");
+        }
+    }
+}
+
+fn assert_trace_structurally_valid(trace: &str, nthreads: usize) {
+    let j = Json::parse(trace).expect("chrome trace must be valid JSON");
+    let events = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(!events.is_empty(), "a real solve must produce events");
+    let mut last_end = vec![0.0f64; nthreads];
+    for ev in events {
+        let name = ev.get("name").and_then(Json::as_str).expect("name");
+        assert!(PHASE_NAMES.contains(&name), "unknown event name {name}");
+        assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+        let tid = ev.get("tid").and_then(Json::as_usize).expect("tid");
+        assert!(tid < nthreads, "tid {tid} out of range");
+        let ts = ev.get("ts").and_then(Json::as_f64).expect("ts");
+        let dur = ev.get("dur").and_then(Json::as_f64).expect("dur");
+        assert!(dur > 0.0, "zero-length events are elided");
+        // Per-thread timeline is monotone and non-overlapping (1 ns slack
+        // for the µs rounding in the exporter).
+        assert!(ts + 1e-3 >= last_end[tid], "overlap on tid {tid}: {ts} < {}", last_end[tid]);
+        last_end[tid] = ts + dur;
+    }
+}
+
+/// The chrome-trace export of an actual multi-threaded solve — not a
+/// hand-built recorder — is structurally valid.
+#[test]
+fn chrome_trace_of_a_real_solve_is_structurally_valid() {
+    let d = suite::dataset("thermal2", Scale::Tiny);
+    let cfg = cfg_for(OrderingKind::Hbmc, SpmvKind::Sell, d.shift);
+    let plan = SolverPlan::build(&d.matrix, &cfg).expect("plan");
+    let nt = 2;
+    let out = run(&plan, &d.b, nt, true);
+    let p: &PhaseProfile = out.profile.as_ref().expect("profile recorded");
+    assert_trace_structurally_valid(&chrome_trace_json(p), nt);
+}
+
+/// The profile rides the full API stack: `SolveOptions::profiled()` on a
+/// session solve lands on `SolveReport::profile`, and a plain solve does
+/// not pay for (or carry) one.
+#[test]
+fn session_surfaces_the_profile_on_request_only() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let cfg = cfg_for(OrderingKind::Hbmc, SpmvKind::Sell, d.shift);
+    let service = SolverService::with_config(cfg.clone()).expect("service");
+    let handle = service.register_matrix(d.matrix.clone());
+    let session = service.session(handle, &cfg).expect("session");
+
+    let plain = session.solve(&d.b).expect("solve");
+    assert!(plain.report.profile.is_none(), "profiling is strictly opt-in");
+
+    let out = session.solve_with(&d.b, &SolveOptions::profiled()).expect("profiled solve");
+    let p = out.report.profile.as_ref().expect("report carries the profile");
+    assert!(p.coverage() > 0.0);
+    assert_trace_structurally_valid(&chrome_trace_json(p), p.threads());
+}
+
+/// The lifecycle trace ring exports well-formed JSON: an array of
+/// `{"job","stage","t_us","detail"}` objects with the stages in causal
+/// order per job — validated structurally, not by substring grep.
+#[test]
+fn lifecycle_trace_json_is_structurally_valid() {
+    let d = suite::dataset("g3_circuit", Scale::Tiny);
+    let mut cfg = cfg_for(OrderingKind::Hbmc, SpmvKind::Sell, d.shift);
+    cfg.queue.trace_sample = 1;
+    let service = SolverService::with_config(cfg).expect("service");
+    let handle = service.register_matrix(d.matrix.clone());
+    assert_eq!(service.trace_json(), "[]");
+    service.solve(handle, &d.b).expect("solve");
+
+    let j = Json::parse(&service.trace_json()).expect("trace ring must be valid JSON");
+    let events = j.as_arr().expect("top-level JSON array");
+    let mut last_t = 0u64;
+    let mut stages = Vec::new();
+    for ev in events {
+        let stage = ev.get("stage").and_then(Json::as_str).expect("stage");
+        assert!(ev.get("job").and_then(Json::as_u64).is_some(), "job id");
+        let t = ev.get("t_us").and_then(Json::as_u64).expect("t_us");
+        assert!(t >= last_t, "events are oldest-first");
+        last_t = t;
+        stages.push(stage.to_string());
+    }
+    for stage in ["submitted", "enqueued", "batch_opened", "dispatched", "completed"] {
+        assert!(stages.iter().any(|s| s == stage), "missing stage {stage}: {stages:?}");
+    }
+}

@@ -66,6 +66,11 @@ fn random_profile(rng: &mut Rng) -> TunedProfile {
         setup_seconds: rng.range_f64(1e-6, 100.0),
         iterations: rng.below(10_000),
         baseline_solve_seconds: rng.range_f64(1e-6, 10.0),
+        phase_shares: if rng.below(2) == 0 {
+            None
+        } else {
+            Some(std::array::from_fn(|_| rng.range_f64(0.0, 1.0)))
+        },
         created_unix: rng.next_u64() >> 20, // keep within f64-exact range
     }
 }
